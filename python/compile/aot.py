@@ -1,0 +1,135 @@
+"""AOT lowering: JAX/Pallas models -> HLO text artifacts for the Rust runtime.
+
+HLO **text** is the interchange format, not serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/load_hlo/).
+
+Runs ONCE at build time (`make artifacts`); emits one ``<name>.hlo.txt``
+per model variant plus ``manifest.json`` describing inputs/outputs so the
+Rust runtime can wire buffers without re-parsing Python.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Example shapes baked into the artifacts (small enough for interpret-mode
+# Pallas on CPU; block sizes 8 divide everything).
+SQ, SKV, D, DV = 32, 32, 16, 16
+LM, LK, LN = 32, 32, 16
+RM, RD, RK, RN = 32, 16, 32, 16
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+MODELS = {
+    "matmul_relu_naive": (model.matmul_relu_naive, [("A", (LM, LK)), ("BT", (LN, LK))]),
+    "matmul_relu_fused": (model.matmul_relu_fused, [("A", (LM, LK)), ("BT", (LN, LK))]),
+    "attention_naive": (
+        model.attention_naive,
+        [("Q", (SQ, D)), ("KT", (SKV, D)), ("VT", (DV, SKV))],
+    ),
+    "attention_fused": (
+        model.attention_fused,
+        [("Q", (SQ, D)), ("KT", (SKV, D)), ("VT", (DV, SKV))],
+    ),
+    "layernorm_matmul_naive": (
+        model.layernorm_matmul_naive,
+        [("X", (LM, LK)), ("YT", (LN, LK))],
+    ),
+    "layernorm_matmul_fused": (
+        model.layernorm_matmul_fused,
+        [("X", (LM, LK)), ("YT", (LN, LK))],
+    ),
+    "rmsnorm_ffn_swiglu_naive": (
+        model.rmsnorm_ffn_swiglu_naive,
+        [("X", (RM, RD)), ("WT", (RK, RD)), ("VT", (RK, RD)), ("UT", (RN, RK))],
+    ),
+    "rmsnorm_ffn_swiglu_fused": (
+        model.rmsnorm_ffn_swiglu_fused,
+        [("X", (RM, RD)), ("WT", (RK, RD)), ("VT", (RK, RD)), ("UT", (RN, RK))],
+    ),
+    "decoder_block_naive": (
+        model.decoder_block_naive,
+        [
+            ("Q", (SQ, D)),
+            ("KT", (SKV, D)),
+            ("VT", (DV, SKV)),
+            ("R", (SQ, DV)),
+            ("WT", (RK, DV)),
+            ("VT2", (RK, DV)),
+            ("UT", (RN, RK)),
+        ],
+    ),
+    "decoder_block_fused": (
+        model.decoder_block_fused,
+        [
+            ("Q", (SQ, D)),
+            ("KT", (SKV, D)),
+            ("VT", (DV, SKV)),
+            ("R", (SQ, DV)),
+            ("WT", (RK, DV)),
+            ("VT2", (RK, DV)),
+            ("UT", (RN, RK)),
+        ],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single model")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, inputs) in MODELS.items():
+        if args.only and name != args.only:
+            continue
+        specs = [_spec(*shape) for _, shape in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = [list(s.shape) for s in lowered.out_info]
+        manifest[name] = {
+            "file": fname,
+            "inputs": [{"name": n, "shape": list(s)} for n, s in inputs],
+            "outputs": out_shapes,
+        }
+        print(f"lowered {name}: {len(text)} chars")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    existing = {}
+    if os.path.exists(mpath) and args.only:
+        with open(mpath) as f:
+            existing = json.load(f)
+    existing.update(manifest)
+    with open(mpath, "w") as f:
+        json.dump(existing, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(existing)} models)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: Flash Attention — the Example-1 fused kernel.
+
+This is the single-pass kernel the fusion algorithm derives in §5
+(Steps 1–17), with the Appendix's row-wise significand–exponent
+stabilization (online softmax) applied after fusion: the grid parallelizes
+the `forall m` row-block loop; inside the kernel a serial `fori_loop`
+streams KV blocks (the fused `for n` loop), carrying the running row-max
+`m`, denominator `l`, and output accumulator — never materializing the
+(s_q × s_kv) score matrix in global memory.
+
+TPU hardware mapping (DESIGN.md §Hardware-Adaptation): the Q/O row-blocks
+and each streamed KV block are the VMEM-resident tiles (BlockSpec /
+pl.dslice); the two `jnp.dot`-shaped contractions per step are the MXU work.
+`interpret=True` because the image's PJRT is CPU-only.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, kt_ref, vt_ref, o_ref, *, block_kv: int):
+    q = q_ref[...]  # (bm, d)
+    bm, d = q.shape
+    s_kv = kt_ref.shape[0]
+    d_v = vt_ref.shape[0]
+    scale = d ** -0.5
+    n_blocks = s_kv // block_kv
+
+    def body(i, carry):
+        m_run, l_run, acc = carry
+        k = pl.load(kt_ref, (pl.dslice(i * block_kv, block_kv), slice(None)))
+        v = pl.load(vt_ref, (slice(None), pl.dslice(i * block_kv, block_kv)))
+        s = jnp.dot(q, k.T) * scale  # (bm, bkv)
+        m_new = jnp.maximum(m_run, s.max(axis=1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_run * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v.T)  # (bm, d_v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bm,), -jnp.inf, dtype=q.dtype)
+    l0 = jnp.zeros((bm,), dtype=q.dtype)
+    acc0 = jnp.zeros((bm, d_v), dtype=q.dtype)
+    m_fin, l_fin, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[...] = acc / l_fin[:, None]
+
+
+def flash_attention(q, kt, vt, *, block_q: int = 8, block_kv: int = 8):
+    """Fused attention: ``softmax(q @ kt.T / sqrt(d)) @ vt.T``.
+
+    q: (s_q, d), kt: (s_kv, d), vt: (d_v, s_kv); returns (s_q, d_v).
+    """
+    s_q, d = q.shape
+    s_kv = kt.shape[0]
+    d_v = vt.shape[0]
+    assert s_q % block_q == 0, f"s_q={s_q} % block_q={block_q}"
+    assert s_kv % block_kv == 0, f"s_kv={s_kv} % block_kv={block_kv}"
+    grid = (s_q // block_q,)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_kv=block_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((s_kv, d), lambda i: (0, 0)),
+            pl.BlockSpec((d_v, s_kv), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d_v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_q, d_v), q.dtype),
+        interpret=True,
+    )(q, kt, vt)

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: Flash-LayerNorm+Matmul — the Example-2 fused kernel.
+
+Implements the §5 Example-2 result (Steps 1–22): one pass over the K
+blocks of `X` and `Yᵀ` per output tile, carrying the running row-sum,
+row-sum-of-squares, raw dot accumulator, and the Rule-5 column-sum
+correction — then the epilogue applies the swapped shift/scale:
+
+    Z[i,j] = (acc[i,j] − μ_i · ysum_j) · rstd_i
+
+which is exactly `(X − μ·1ᵀ)·Yᵀ` row-scaled by `1/σ` (Rules 4+5 algebra).
+Never materializes `LayerNorm(X)` in global memory.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, yt_ref, z_ref, *, block_k: int):
+    x_cols = x_ref.shape[1]
+    n_blocks = x_cols // block_k
+    bm = x_ref.shape[0]
+    bn = yt_ref.shape[0]
+    kk = jnp.float32(x_cols)
+
+    def body(k, carry):
+        s1, s2, acc, ysum = carry
+        xk = pl.load(x_ref, (slice(None), pl.dslice(k * block_k, block_k)))
+        yk = pl.load(yt_ref, (slice(None), pl.dslice(k * block_k, block_k)))
+        s1 = s1 + xk.sum(axis=1)
+        s2 = s2 + (xk * xk).sum(axis=1)
+        acc = acc + jnp.dot(xk, yk.T)
+        ysum = ysum + yk.sum(axis=1)
+        return s1, s2, acc, ysum
+
+    z = (
+        jnp.zeros((bm,), jnp.float32),
+        jnp.zeros((bm,), jnp.float32),
+        jnp.zeros((bm, bn), jnp.float32),
+        jnp.zeros((bn,), jnp.float32),
+    )
+    s1, s2, acc, ysum = jax.lax.fori_loop(0, n_blocks, body, z)
+    mu = s1 / kk
+    rstd = jax.lax.rsqrt(s2 / kk - mu * mu)
+    z_ref[...] = (acc - mu[:, None] * ysum[None, :]) * rstd[:, None]
+
+
+def layernorm_matmul(x, yt, *, block_m: int = 8, block_n: int = 8, block_k: int = 8):
+    """Fused ``LayerNorm(x) @ yt.T``. x: (m, k), yt: (n, k) -> (m, n)."""
+    m, k = x.shape
+    n = yt.shape[0]
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, yt)

@@ -1,0 +1,59 @@
+"""Pure-jnp reference oracles for the fused Pallas kernels.
+
+Storage conventions match the Rust block programs (and the paper's
+diagrams): matmul right operands are the transposed-stored matrices, so
+``dot(a, b) = a @ b.T`` throughout —
+
+* attention: ``O = softmax(Q @ KT.T / sqrt(d)) @ VT.T`` with ``KT = K``
+  (shape ``(s_kv, d)``) and ``VT = V.T`` (shape ``(d_v, s_kv)``);
+* layernorm+matmul: ``Z = LayerNorm(X) @ YT.T``;
+* rmsnorm+ffn-swiglu:
+  ``O = (swish(RMS(X) @ WT.T) * (RMS(X) @ VT.T)) @ UT.T``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_rows(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+def layernorm_rows(x):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = (x * x).mean(axis=-1, keepdims=True) - mu * mu
+    return (x - mu) * jax.lax.rsqrt(var)
+
+
+def rmsnorm_rows(x):
+    ms = (x * x).mean(axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms)
+
+
+def swish(x):
+    return x / (1.0 + jnp.exp(-x))
+
+
+def matmul_relu(a, bt):
+    return jnp.maximum(a @ bt.T, 0.0)
+
+
+def attention(q, kt, vt):
+    d = q.shape[-1]
+    scores = (q @ kt.T) * (d ** -0.5)
+    return softmax_rows(scores) @ vt.T
+
+
+def layernorm_matmul(x, yt):
+    return layernorm_rows(x) @ yt.T
+
+
+def rmsnorm_ffn_swiglu(x, wt, vt, ut):
+    r = rmsnorm_rows(x)
+    return (swish(r @ wt.T) * (r @ vt.T)) @ ut.T
+
+
+def decoder_block(q, kt, vt, r, wt, vt2, ut):
+    """Attention + residual + RMSNorm/FFN-SwiGLU (see array::programs)."""
+    h = attention(q, kt, vt) + r
+    return rmsnorm_ffn_swiglu(h, wt, vt2, ut), h

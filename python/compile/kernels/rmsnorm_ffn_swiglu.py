@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: Flash-RMSNorm+FFN-SwiGLU — the Example-3 mega-kernel.
+
+Implements the §5 Example-3 result (Steps 1–26): per row-block of `X`, a
+single kernel computes the RMS statistic, then streams the FFN's hidden
+dimension (the fused `for k` loop of Step 25's extension) — for each hidden
+chunk it forms `swish(x̂·Wᵀ) ⊙ (x̂·Vᵀ)` in local memory and accumulates its
+contribution to the output through `Uᵀ` — three matmuls, a Hadamard
+product, a reduction and the elementwise ops in one launch, with no
+intermediate ever hitting global memory.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, wt_ref, vt_ref, ut_ref, o_ref, *, block_h: int):
+    x = x_ref[...]  # (bm, d)
+    d = x.shape[1]
+    k_ff = wt_ref.shape[0]
+    n_out = ut_ref.shape[0]
+    n_blocks = k_ff // block_h
+
+    # RMS statistic and normalized rows (the fused D-loop of Step 26)
+    ms = (x * x).sum(axis=1) / jnp.float32(d)
+    xn = x * jax.lax.rsqrt(ms)[:, None]
+
+    def body(k, acc):
+        w = pl.load(wt_ref, (pl.dslice(k * block_h, block_h), slice(None)))
+        v = pl.load(vt_ref, (pl.dslice(k * block_h, block_h), slice(None)))
+        u = pl.load(ut_ref, (slice(None), pl.dslice(k * block_h, block_h)))
+        a = jnp.dot(xn, w.T)  # (bm, bh)
+        b = jnp.dot(xn, v.T)  # (bm, bh)
+        h = (a / (1.0 + jnp.exp(-a))) * b  # swish ⊙ gate
+        return acc + jnp.dot(h, u.T)  # (bm, n_out)
+
+    acc0 = jnp.zeros((x.shape[0], n_out), x.dtype)
+    o_ref[...] = jax.lax.fori_loop(0, n_blocks, body, acc0)
+
+
+def rmsnorm_ffn_swiglu(x, wt, vt, ut, *, block_m: int = 8, block_h: int = 8):
+    """Fused ``(swish(RMS(x)@wt.T) * (RMS(x)@vt.T)) @ ut.T``.
+
+    x: (m, d), wt/vt: (k_ff, d), ut: (n_out, k_ff) -> (m, n_out).
+    """
+    m, d = x.shape
+    k_ff = wt.shape[0]
+    n_out = ut.shape[0]
+    assert wt.shape == vt.shape and ut.shape[1] == k_ff
+    assert m % block_m == 0 and k_ff % block_h == 0
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_h=block_h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((k_ff, d), lambda i: (0, 0)),
+            pl.BlockSpec((k_ff, d), lambda i: (0, 0)),
+            pl.BlockSpec((n_out, k_ff), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n_out), x.dtype),
+        interpret=True,
+    )(x, wt, vt, ut)

@@ -1,0 +1,61 @@
+"""L2: JAX models composed from the L1 kernels.
+
+Two variants of every computation:
+* ``*_naive`` — straight jnp composition (what an unoptimized array program
+  executes; the baseline the fusion framework starts from);
+* ``*_fused`` — the same computation routed through the fused Pallas
+  kernels the paper's fusion algorithm derives.
+
+Both lower to HLO text once at build time (`aot.py`); the Rust runtime
+loads and executes the artifacts — Python never runs on the request path.
+"""
+
+from .kernels import ref
+from .kernels.flash_attention import flash_attention
+from .kernels.layernorm_matmul import layernorm_matmul
+from .kernels.matmul_relu import matmul_relu
+from .kernels.rmsnorm_ffn_swiglu import rmsnorm_ffn_swiglu
+
+
+def matmul_relu_naive(a, bt):
+    return (ref.matmul_relu(a, bt),)
+
+
+def matmul_relu_fused(a, bt):
+    return (matmul_relu(a, bt),)
+
+
+def attention_naive(q, kt, vt):
+    return (ref.attention(q, kt, vt),)
+
+
+def attention_fused(q, kt, vt):
+    return (flash_attention(q, kt, vt),)
+
+
+def layernorm_matmul_naive(x, yt):
+    return (ref.layernorm_matmul(x, yt),)
+
+
+def layernorm_matmul_fused(x, yt):
+    return (layernorm_matmul(x, yt),)
+
+
+def rmsnorm_ffn_swiglu_naive(x, wt, vt, ut):
+    return (ref.rmsnorm_ffn_swiglu(x, wt, vt, ut),)
+
+
+def rmsnorm_ffn_swiglu_fused(x, wt, vt, ut):
+    return (rmsnorm_ffn_swiglu(x, wt, vt, ut),)
+
+
+def decoder_block_naive(q, kt, vt, r, wt, vt2, ut):
+    o, h = ref.decoder_block(q, kt, vt, r, wt, vt2, ut)
+    return (o, h)
+
+
+def decoder_block_fused(q, kt, vt, r, wt, vt2, ut):
+    """Decoder block built from the two fused mega-kernels."""
+    h = flash_attention(q, kt, vt) + r
+    o = rmsnorm_ffn_swiglu(h, wt, vt2, ut)
+    return (o, h)

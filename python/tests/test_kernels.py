@@ -1,0 +1,160 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Each fused Pallas kernel is checked against its pure-jnp reference on fixed
+cases and on hypothesis-generated shape/seed sweeps (shapes constrained to
+multiples of the block sizes, like the selection layer guarantees).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.layernorm_matmul import layernorm_matmul
+from compile.kernels.matmul_relu import matmul_relu
+from compile.kernels.rmsnorm_ffn_swiglu import rmsnorm_ffn_swiglu
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+def rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def assert_close(a, b, atol=2e-5, rtol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------- attention
+
+def test_flash_attention_basic():
+    q, kt, vt = rand(0, 32, 16), rand(1, 32, 16), rand(2, 16, 32)
+    assert_close(flash_attention(q, kt, vt), ref.attention(q, kt, vt))
+
+
+def test_flash_attention_rectangular():
+    q, kt, vt = rand(3, 16, 8), rand(4, 40, 8), rand(5, 24, 40)
+    assert_close(flash_attention(q, kt, vt), ref.attention(q, kt, vt))
+
+
+def test_flash_attention_large_magnitude_inputs():
+    # the online-softmax stabilization must survive large logits where the
+    # unsafe formula overflows
+    q, kt, vt = rand(6, 16, 8, scale=30.0), rand(7, 16, 8, scale=30.0), rand(8, 8, 16)
+    out = flash_attention(q, kt, vt)
+    assert np.isfinite(np.asarray(out)).all()
+    assert_close(out, ref.attention(q, kt, vt), atol=1e-4, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(
+    mq=st.integers(1, 4),
+    mkv=st.integers(1, 4),
+    d=st.sampled_from([4, 8, 16]),
+    dv=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_attention_sweep(mq, mkv, d, dv, seed):
+    q = rand(seed, 8 * mq, d)
+    kt = rand(seed + 1, 8 * mkv, d)
+    vt = rand(seed + 2, dv, 8 * mkv)
+    assert_close(flash_attention(q, kt, vt), ref.attention(q, kt, vt), atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(bq=st.sampled_from([4, 8, 16]), bkv=st.sampled_from([4, 8, 16]))
+def test_flash_attention_block_shape_invariance(bq, bkv):
+    # fusion results must not depend on the chosen block shapes (§1)
+    q, kt, vt = rand(9, 16, 8), rand(10, 16, 8), rand(11, 8, 16)
+    assert_close(
+        flash_attention(q, kt, vt, block_q=bq, block_kv=bkv),
+        ref.attention(q, kt, vt),
+        atol=1e-4,
+        rtol=1e-4,
+    )
+
+
+# ----------------------------------------------------------- layernorm+matmul
+
+def test_layernorm_matmul_basic():
+    x, yt = rand(20, 32, 32), rand(21, 16, 32)
+    assert_close(layernorm_matmul(x, yt), ref.layernorm_matmul(x, yt), atol=1e-4, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 4),
+    n=st.integers(1, 4),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_layernorm_matmul_sweep(m, n, k, seed):
+    x = rand(seed, 8 * m, 8 * k)
+    yt = rand(seed + 1, 8 * n, 8 * k)
+    assert_close(
+        layernorm_matmul(x, yt), ref.layernorm_matmul(x, yt), atol=2e-4, rtol=2e-3
+    )
+
+
+def test_layernorm_matmul_shifted_inputs():
+    # non-zero-mean inputs exercise the Rule-5 colsum correction
+    x = rand(22, 16, 24) + 5.0
+    yt = rand(23, 8, 24)
+    assert_close(layernorm_matmul(x, yt), ref.layernorm_matmul(x, yt), atol=2e-4, rtol=2e-3)
+
+
+# -------------------------------------------------------- rmsnorm+ffn-swiglu
+
+def test_rmsnorm_ffn_swiglu_basic():
+    x, wt, vt, ut = rand(30, 32, 16), rand(31, 32, 16), rand(32, 32, 16), rand(33, 16, 32)
+    assert_close(
+        rmsnorm_ffn_swiglu(x, wt, vt, ut),
+        ref.rmsnorm_ffn_swiglu(x, wt, vt, ut),
+        atol=1e-4,
+        rtol=1e-3,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 3),
+    d=st.sampled_from([8, 16]),
+    kff=st.integers(1, 4),
+    nout=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_rmsnorm_ffn_swiglu_sweep(m, d, kff, nout, seed):
+    x = rand(seed, 8 * m, d)
+    wt = rand(seed + 1, 8 * kff, d)
+    vt = rand(seed + 2, 8 * kff, d)
+    ut = rand(seed + 3, nout, 8 * kff)
+    assert_close(
+        rmsnorm_ffn_swiglu(x, wt, vt, ut),
+        ref.rmsnorm_ffn_swiglu(x, wt, vt, ut),
+        atol=2e-4,
+        rtol=2e-3,
+    )
+
+
+# ----------------------------------------------------------------- matmul+relu
+
+def test_matmul_relu_basic():
+    a, bt = rand(40, 32, 32), rand(41, 16, 32)
+    assert_close(matmul_relu(a, bt), ref.matmul_relu(a, bt))
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 4), n=st.integers(1, 4), k=st.sampled_from([4, 8, 32]))
+def test_matmul_relu_sweep(m, n, k):
+    a, bt = rand(m, 8 * m, k), rand(n + 50, 8 * n, k)
+    assert_close(matmul_relu(a, bt), ref.matmul_relu(a, bt), atol=1e-4, rtol=1e-4)
+
+
+def test_matmul_relu_clamps_negatives():
+    a = -jnp.ones((8, 4), jnp.float32)
+    bt = jnp.ones((8, 4), jnp.float32)
+    out = matmul_relu(a, bt)
+    assert (np.asarray(out) == 0.0).all()

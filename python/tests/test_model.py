@@ -1,0 +1,38 @@
+"""L2 model checks: fused and naive variants agree; AOT shapes line up."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.aot import MODELS
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def test_decoder_block_fused_matches_naive():
+    q, kt, vt = rand(0, 32, 16), rand(1, 32, 16), rand(2, 16, 32)
+    r = rand(3, 32, 16)
+    wt, vt2, ut = rand(4, 32, 16), rand(5, 32, 16), rand(6, 16, 32)
+    o_n, h_n = model.decoder_block_naive(q, kt, vt, r, wt, vt2, ut)
+    o_f, h_f = model.decoder_block_fused(q, kt, vt, r, wt, vt2, ut)
+    np.testing.assert_allclose(np.asarray(h_f), np.asarray(h_n), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_n), atol=1e-4, rtol=1e-3)
+
+
+def test_all_models_trace_with_manifest_shapes():
+    # every registered model must jit-trace at its manifest shapes
+    for name, (fn, inputs) in MODELS.items():
+        specs = [jax.ShapeDtypeStruct(tuple(s), jnp.float32) for _, s in inputs]
+        jax.eval_shape(fn, *specs)
+
+
+def test_naive_fused_pairs_share_signatures():
+    names = set(MODELS)
+    for name in names:
+        if name.endswith("_naive"):
+            other = name.replace("_naive", "_fused")
+            assert other in names
+            assert [s for _, s in MODELS[name][1]] == [s for _, s in MODELS[other][1]]

@@ -1,0 +1,40 @@
+//! Bench: simulator wall-clock, naive vs final fused program, for every
+//! demo workload. (The simulator's time tracks instruction count, so this
+//! is a proxy for the work the abstract machine performs; the *traffic*
+//! table is the paper's own metric.)
+
+use blockbuster::coordinator::workloads;
+use blockbuster::exec::{run_lowered, Workload};
+use blockbuster::fusion::fuse;
+use blockbuster::loopir::lower::lower;
+use blockbuster::lower::lower_array;
+use blockbuster::util::bench::{fmt_stat, quick, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Simulator execution time (median ± σ)",
+        &["workload", "naive", "fused", "speedup"],
+    );
+    for name in workloads::NAMES {
+        let (p, cfg, params, inputs) = workloads::by_name(name, 42).unwrap();
+        let g = lower_array(&p);
+        let fused = fuse(g.clone()).snapshots.pop().unwrap();
+        let wl = Workload {
+            sizes: cfg.sizes.clone(),
+            params,
+            inputs,
+            local_capacity: None,
+        };
+        let ir_naive = lower(&g);
+        let ir_fused = lower(&fused);
+        let sn = quick(|| run_lowered(&ir_naive, &wl));
+        let sf = quick(|| run_lowered(&ir_fused, &wl));
+        t.row(vec![
+            name.to_string(),
+            fmt_stat(&sn),
+            fmt_stat(&sf),
+            format!("{:.2}x", sn.median_ns / sf.median_ns),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,55 @@
+//! Bench: fusion-algorithm scalability — wall-clock and step count vs
+//! program size (the paper motivates the two-algorithm structure as
+//! "especially suitable for large AI programs", e.g. an entire decoder
+//! block; here we stack alternating LayerNorm+Matmul layers).
+
+use blockbuster::array::ArrayProgram;
+use blockbuster::fusion::fuse;
+use blockbuster::lower::lower_array;
+use blockbuster::util::bench::{bench, fmt_stat, Table};
+use std::time::Duration;
+
+/// An n-layer MLP-with-norms chain: X -> [layernorm -> matmul] × n, the
+/// contraction dim alternating between K and P.
+fn stacked(n_layers: usize) -> ArrayProgram {
+    let mut p = ArrayProgram::new();
+    let mut cur = p.input("X", "M", "K");
+    for i in 0..n_layers {
+        let (from, to) = if i % 2 == 0 { ("K", "P") } else { ("P", "K") };
+        let w = p.input_t(&format!("W{i}"), to, from);
+        let ln = p.layernorm(cur);
+        cur = p.matmul(ln, w);
+    }
+    p.output("Y", cur);
+    p
+}
+
+fn main() {
+    let mut t = Table::new(
+        "Fusion algorithm scaling (stacked layernorm+matmul layers)",
+        &[
+            "layers",
+            "array ops",
+            "block nodes",
+            "steps",
+            "fuse time",
+            "ns/step",
+        ],
+    );
+    for layers in [1usize, 2, 4, 8, 12, 16] {
+        let p = stacked(layers);
+        let g = lower_array(&p);
+        let nodes = g.node_count_recursive();
+        let res = fuse(g.clone());
+        let stats = bench(3, Duration::from_millis(1200), || fuse(g.clone()));
+        t.row(vec![
+            layers.to_string(),
+            p.op_count().to_string(),
+            nodes.to_string(),
+            res.trace.len().to_string(),
+            fmt_stat(&stats),
+            format!("{:.0}", stats.median_ns / res.trace.len() as f64),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,63 @@
+//! Bench: regenerate the paper's §5 fusion traces (Examples 1–3).
+//!
+//! Emits one table row per example: paper step count vs ours, per-rule
+//! application counts, snapshot count, final buffered-edge census, and the
+//! fusion algorithm's wall-clock.
+
+use blockbuster::array::programs;
+use blockbuster::fusion::fuse;
+use blockbuster::lower::lower_array;
+use blockbuster::util::bench::{fmt_stat, quick, Table};
+
+fn main() {
+    let cases: Vec<(&str, usize, blockbuster::array::ArrayProgram)> = vec![
+        ("Example 1: Flash Attention", 17, programs::attention()),
+        ("Example 2: LayerNorm+Matmul", 22, programs::layernorm_matmul()),
+        ("Example 3: RMSNorm+FFN-SwiGLU", 26, programs::rmsnorm_ffn_swiglu()),
+        ("§1: Matmul+ReLU", 0, programs::matmul_relu()),
+        ("e2e: decoder block", 0, programs::decoder_block()),
+    ];
+
+    let mut t = Table::new(
+        "Paper §5 fusion traces (steps: paper vs reproduced)",
+        &[
+            "example",
+            "paper",
+            "ours",
+            "rules",
+            "snaps",
+            "interior-edges",
+            "fuse time",
+        ],
+    );
+    for (name, paper_steps, p) in &cases {
+        let g = lower_array(p);
+        let res = fuse(g.clone());
+        let stats = quick(|| fuse(g.clone()));
+        t.row(vec![
+            name.to_string(),
+            if *paper_steps > 0 {
+                paper_steps.to_string()
+            } else {
+                "—".into()
+            },
+            res.trace.len().to_string(),
+            res.trace.summary(),
+            res.snapshots.len().to_string(),
+            format!(
+                "{} -> {}",
+                g.interior_buffered_count_recursive(),
+                res.snapshots
+                    .last()
+                    .unwrap()
+                    .interior_buffered_count_recursive()
+            ),
+            fmt_stat(&stats),
+        ]);
+    }
+    t.print();
+
+    println!("\nFull Example-1 trace (compare with the paper's Steps 1-17):");
+    let res = fuse(lower_array(&programs::attention()));
+    print!("{}", res.trace);
+}

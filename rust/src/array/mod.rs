@@ -1,0 +1,291 @@
+//! The array-program layer: the input representation of the compiler.
+//!
+//! An array program is a DAG of operators over large matrices (the paper's
+//! §1 "array program"/"tensor program"). Values are logical matrices tagged
+//! with the two blocking dimensions the selection layer will later size
+//! (`(M, K)` = row blocks × column blocks). Right-hand matmul operands are
+//! declared in transposed block storage (`KT`, `YT`, `WT`, …) to match the
+//! `dot(a, b) = a @ b.T` block-operator convention of Table 1.
+
+pub mod programs;
+
+use crate::ir::dim::Dim;
+use crate::ir::expr::Expr;
+use std::fmt;
+
+pub type ANodeId = usize;
+
+/// Logical blocking of a matrix value: row-block dim × column-block dim.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct ABlocking {
+    pub rows: Dim,
+    pub cols: Dim,
+}
+
+impl ABlocking {
+    pub fn new(rows: &str, cols: &str) -> Self {
+        ABlocking {
+            rows: Dim::new(rows),
+            cols: Dim::new(cols),
+        }
+    }
+}
+
+/// Array operators. The vocabulary covers everything the paper's three
+/// examples (and the decoder-block workload) need; anything else enters the
+/// block program as a miscellaneous operator via [`AOp::Custom`].
+#[derive(Clone, Debug)]
+pub enum AOp {
+    /// Program input (stored row-major in global memory). If `transposed`,
+    /// the *blocks* hold the transposed matrix (a matmul right operand).
+    Input { name: String, transposed: bool },
+    /// `C = A @ B` where the second operand is stored transposed.
+    /// Blocking: A `(m,k)`, Bᵀ `(n,k)` → C `(m,n)`.
+    MatMul,
+    /// Elementwise scalar function applied to every element.
+    Ew { expr: Expr, label: String },
+    /// Elementwise (Hadamard) product of same-shape matrices.
+    Hadamard,
+    /// Elementwise sum of same-shape matrices.
+    Add,
+    /// Row-wise softmax.
+    Softmax,
+    /// Row-wise LayerNorm (no affine parameters, as in the paper).
+    LayerNorm,
+    /// Row-wise RMSNorm.
+    RmsNorm,
+    /// An opaque custom operator (lowers to a Misc block operator and is
+    /// never selected into fusion candidates).
+    Custom { tag: String },
+}
+
+impl AOp {
+    pub fn name(&self) -> String {
+        match self {
+            AOp::Input { name, .. } => format!("input {name}"),
+            AOp::MatMul => "matmul".into(),
+            AOp::Ew { label, .. } => label.clone(),
+            AOp::Hadamard => "hadamard".into(),
+            AOp::Add => "add".into(),
+            AOp::Softmax => "softmax".into(),
+            AOp::LayerNorm => "layernorm".into(),
+            AOp::RmsNorm => "rmsnorm".into(),
+            AOp::Custom { tag } => format!("custom {tag}"),
+        }
+    }
+
+    /// Is this a standard operator (eligible for fusion candidates)?
+    pub fn is_standard(&self) -> bool {
+        !matches!(self, AOp::Custom { .. })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ANode {
+    pub op: AOp,
+    pub inputs: Vec<ANodeId>,
+    pub blocking: ABlocking,
+    pub label: String,
+}
+
+/// An array program: a DAG of array operators with named outputs.
+#[derive(Clone, Debug, Default)]
+pub struct ArrayProgram {
+    pub nodes: Vec<ANode>,
+    pub outputs: Vec<(String, ANodeId)>,
+}
+
+impl ArrayProgram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&mut self, op: AOp, inputs: Vec<ANodeId>, blocking: ABlocking) -> ANodeId {
+        let label = format!("a{}:{}", self.nodes.len(), op.name());
+        self.nodes.push(ANode {
+            op,
+            inputs,
+            blocking,
+            label,
+        });
+        self.nodes.len() - 1
+    }
+
+    /// Declare a program input blocked as `(rows, cols)`.
+    pub fn input(&mut self, name: &str, rows: &str, cols: &str) -> ANodeId {
+        self.push(
+            AOp::Input {
+                name: name.into(),
+                transposed: false,
+            },
+            vec![],
+            ABlocking::new(rows, cols),
+        )
+    }
+
+    /// Declare a matmul right-operand input stored transposed: `name` holds
+    /// Bᵀ blocked `(n, k)`.
+    pub fn input_t(&mut self, name: &str, n: &str, k: &str) -> ANodeId {
+        self.push(
+            AOp::Input {
+                name: name.into(),
+                transposed: true,
+            },
+            vec![],
+            ABlocking::new(n, k),
+        )
+    }
+
+    /// `C = A @ B`, with `bt` the transposed-stored right operand.
+    pub fn matmul(&mut self, a: ANodeId, bt: ANodeId) -> ANodeId {
+        let ab = self.nodes[a].blocking.clone();
+        let bb = self.nodes[bt].blocking.clone();
+        assert_eq!(
+            ab.cols, bb.cols,
+            "matmul: contraction dims differ ({} vs {})",
+            ab.cols, bb.cols
+        );
+        let blocking = ABlocking {
+            rows: ab.rows,
+            cols: bb.rows,
+        };
+        self.push(AOp::MatMul, vec![a, bt], blocking)
+    }
+
+    pub fn ew(&mut self, label: &str, expr: Expr, a: ANodeId) -> ANodeId {
+        let blocking = self.nodes[a].blocking.clone();
+        self.push(
+            AOp::Ew {
+                expr,
+                label: label.into(),
+            },
+            vec![a],
+            blocking,
+        )
+    }
+
+    pub fn relu(&mut self, a: ANodeId) -> ANodeId {
+        self.ew("relu", Expr::relu(Expr::var(0)), a)
+    }
+
+    pub fn swish(&mut self, a: ANodeId) -> ANodeId {
+        self.ew("swish", Expr::swish(Expr::var(0)), a)
+    }
+
+    /// Divide by `sqrt(d)` where `d` is the named parameter (Attention).
+    pub fn div_sqrt(&mut self, a: ANodeId, param: &str) -> ANodeId {
+        self.ew(
+            "div_sqrt",
+            Expr::var(0).mul(Expr::param(param).pow(Expr::cst(-0.5))),
+            a,
+        )
+    }
+
+    pub fn hadamard(&mut self, a: ANodeId, b: ANodeId) -> ANodeId {
+        assert_eq!(self.nodes[a].blocking, self.nodes[b].blocking);
+        let blocking = self.nodes[a].blocking.clone();
+        self.push(AOp::Hadamard, vec![a, b], blocking)
+    }
+
+    pub fn add(&mut self, a: ANodeId, b: ANodeId) -> ANodeId {
+        assert_eq!(self.nodes[a].blocking, self.nodes[b].blocking);
+        let blocking = self.nodes[a].blocking.clone();
+        self.push(AOp::Add, vec![a, b], blocking)
+    }
+
+    pub fn softmax(&mut self, a: ANodeId) -> ANodeId {
+        let blocking = self.nodes[a].blocking.clone();
+        self.push(AOp::Softmax, vec![a], blocking)
+    }
+
+    /// `param` names the row length (the paper's `KK`).
+    pub fn layernorm(&mut self, a: ANodeId) -> ANodeId {
+        let blocking = self.nodes[a].blocking.clone();
+        self.push(AOp::LayerNorm, vec![a], blocking)
+    }
+
+    pub fn rmsnorm(&mut self, a: ANodeId) -> ANodeId {
+        let blocking = self.nodes[a].blocking.clone();
+        self.push(AOp::RmsNorm, vec![a], blocking)
+    }
+
+    pub fn custom(&mut self, tag: &str, inputs: Vec<ANodeId>) -> ANodeId {
+        let blocking = self.nodes[inputs[0]].blocking.clone();
+        self.push(AOp::Custom { tag: tag.into() }, inputs, blocking)
+    }
+
+    pub fn output(&mut self, name: &str, a: ANodeId) {
+        self.outputs.push((name.into(), a));
+    }
+
+    /// Number of operator nodes (excluding inputs).
+    pub fn op_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| !matches!(n.op, AOp::Input { .. }))
+            .count()
+    }
+
+    /// The parameter name for a row-length constant of a node, derived from
+    /// its column dim (`KK` for dim K, `DD` for dim D, …).
+    pub fn row_len_param(&self, id: ANodeId) -> String {
+        let d = &self.nodes[id].blocking.cols;
+        format!("{}{}", d.name(), d.name())
+    }
+}
+
+impl fmt::Display for ArrayProgram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, n) in self.nodes.iter().enumerate() {
+            writeln!(
+                f,
+                "a{i}: {} ({},{}) <- {:?}",
+                n.op.name(),
+                n.blocking.rows,
+                n.blocking.cols,
+                n.inputs
+            )?;
+        }
+        for (name, id) in &self.outputs {
+            writeln!(f, "output {name} = a{id}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_attention_shape() {
+        let p = programs::attention();
+        assert_eq!(p.op_count(), 4); // matmul, div, softmax, matmul
+        assert_eq!(p.outputs.len(), 1);
+    }
+
+    #[test]
+    fn matmul_blocking_checked() {
+        let mut p = ArrayProgram::new();
+        let a = p.input("A", "M", "K");
+        let bt = p.input_t("BT", "N", "K");
+        let c = p.matmul(a, bt);
+        assert_eq!(p.nodes[c].blocking, ABlocking::new("M", "N"));
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction dims differ")]
+    fn matmul_dim_mismatch_panics() {
+        let mut p = ArrayProgram::new();
+        let a = p.input("A", "M", "K");
+        let bt = p.input_t("BT", "N", "J");
+        p.matmul(a, bt);
+    }
+
+    #[test]
+    fn row_len_param_name() {
+        let mut p = ArrayProgram::new();
+        let a = p.input("X", "M", "K");
+        assert_eq!(p.row_len_param(a), "KK");
+    }
+}

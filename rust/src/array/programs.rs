@@ -1,0 +1,121 @@
+//! The paper's example array programs plus the end-to-end workloads.
+
+use super::ArrayProgram;
+use crate::ir::expr::Expr;
+
+/// §1's motivating example: `C = relu(A @ B)`.
+pub fn matmul_relu() -> ArrayProgram {
+    let mut p = ArrayProgram::new();
+    let a = p.input("A", "M", "K");
+    let bt = p.input_t("BT", "N", "K");
+    let mm = p.matmul(a, bt);
+    let r = p.relu(mm);
+    p.output("C", r);
+    p
+}
+
+/// Example 1: (unsafe) Attention — `O = softmax(Q·Kᵀ/√d)·V`.
+///
+/// Inputs are `Q (M,D)`, `KT (N,D)` (= K, already transposed-stored), and
+/// `VT (L,N)` (= Vᵀ blocked over L column blocks), exactly as in the paper's
+/// initial block program. `DD` is the model-width parameter for the √d.
+pub fn attention() -> ArrayProgram {
+    let mut p = ArrayProgram::new();
+    let q = p.input("Q", "M", "D");
+    let kt = p.input_t("KT", "N", "D");
+    let vt = p.input_t("VT", "L", "N");
+    let scores = p.matmul(q, kt); // (M,N)
+    let scaled = p.div_sqrt(scores, "DD");
+    let probs = p.softmax(scaled);
+    let o = p.matmul(probs, vt); // (M,L)
+    p.output("O", o);
+    p
+}
+
+/// Example 2: LayerNorm + Matmul — `Z = LayerNorm(X)·Y`.
+pub fn layernorm_matmul() -> ArrayProgram {
+    let mut p = ArrayProgram::new();
+    let x = p.input("X", "M", "K");
+    let yt = p.input_t("YT", "N", "K");
+    let ln = p.layernorm(x);
+    let z = p.matmul(ln, yt);
+    p.output("Z", z);
+    p
+}
+
+/// Example 3: RMSNorm + FFN-SwiGLU —
+/// `O = (swish(RMS(X)·W) ⊙ (RMS(X)·V)) · U`.
+pub fn rmsnorm_ffn_swiglu() -> ArrayProgram {
+    let mut p = ArrayProgram::new();
+    let x = p.input("X", "M", "D");
+    let wt = p.input_t("WT", "K", "D");
+    let vt = p.input_t("VT", "K", "D");
+    let ut = p.input_t("UT", "N", "K");
+    let rms = p.rmsnorm(x);
+    let w_proj = p.matmul(rms, wt); // (M,K)
+    let v_proj = p.matmul(rms, vt); // (M,K)
+    let sw = p.swish(w_proj);
+    let had = p.hadamard(sw, v_proj);
+    let o = p.matmul(had, ut); // (M,N)
+    p.output("O", o);
+    p
+}
+
+/// End-to-end workload: a decoder block —
+/// attention (over pre-projected Q/K/V), residual add, then
+/// RMSNorm + FFN-SwiGLU with a second residual add.
+///
+/// `R (M,L)` is the residual stream entering the block (blocked like the
+/// attention output).
+pub fn decoder_block() -> ArrayProgram {
+    let mut p = ArrayProgram::new();
+    let q = p.input("Q", "M", "D");
+    let kt = p.input_t("KT", "N", "D");
+    let vt = p.input_t("VT", "L", "N");
+    let r = p.input("R", "M", "L");
+    let wt = p.input_t("WT", "K", "L");
+    let vt2 = p.input_t("VT2", "K", "L");
+    let ut = p.input_t("UT", "L2", "K");
+
+    // attention
+    let scores = p.matmul(q, kt);
+    let scaled = p.div_sqrt(scores, "DD");
+    let probs = p.softmax(scaled);
+    let attn = p.matmul(probs, vt); // (M,L)
+    let h = p.add(attn, r); // residual
+
+    // feed-forward
+    let rms = p.rmsnorm(h);
+    let w_proj = p.matmul(rms, wt); // (M,K)
+    let v_proj = p.matmul(rms, vt2); // (M,K)
+    let sw = p.swish(w_proj);
+    let had = p.hadamard(sw, v_proj);
+    let ffn = p.matmul(had, ut); // (M,L2)
+    p.output("O", ffn);
+    p.output("H", h);
+    p
+}
+
+/// A two-layer MLP with ReLU — used by selection/autotune tests.
+pub fn mlp() -> ArrayProgram {
+    let mut p = ArrayProgram::new();
+    let x = p.input("X", "M", "K");
+    let w1t = p.input_t("W1T", "N", "K");
+    let w2t = p.input_t("W2T", "P", "N");
+    let h = p.matmul(x, w1t);
+    let a = p.relu(h);
+    let o = p.matmul(a, w2t);
+    p.output("Y", o);
+    p
+}
+
+/// A program containing a custom operator (selection must split around it).
+pub fn with_custom_op() -> ArrayProgram {
+    let mut p = ArrayProgram::new();
+    let x = p.input("X", "M", "K");
+    let e = p.ew("exp", Expr::var(0).exp(), x);
+    let c = p.custom("mystery", vec![e]);
+    let r = p.relu(c);
+    p.output("Y", r);
+    p
+}

@@ -1,0 +1,244 @@
+//! Block-shape autotuner.
+//!
+//! §2.1: "The number of blocks along each dimension is a parameter, which
+//! can later be optimized using an auto-tuning procedure", and the example
+//! epilogues rely on it: Flash Attention is recovered by the autotuner
+//! "setting D = L = 1", and the RMSNorm+FFN-SwiGLU mega-kernel's redundant
+//! work "disappears" at N = K = 1 if local memory allows, with the autotuner
+//! balancing replication against block size otherwise.
+//!
+//! The tuner enumerates block-count assignments (divisors of the full dim
+//! sizes), scores each with the static cost model, and filters assignments
+//! whose estimated peak local-memory footprint exceeds the machine's local
+//! capacity. A convenient property exploited here (§1): fusion decisions do
+//! not depend on block shapes, so the program is fused once and re-costed
+//! many times.
+
+use crate::cost::{analyze, Cost, CostModel, ShapeEnv};
+use crate::ir::dim::{Dim, DimSizes};
+use crate::ir::graph::Graph;
+use crate::loopir::lower::lower;
+use crate::loopir::LoopIr;
+use std::collections::HashMap;
+
+/// One scored configuration.
+#[derive(Clone, Debug)]
+pub struct TunePoint {
+    pub sizes: DimSizes,
+    pub cost: Cost,
+    pub scalar: f64,
+    pub feasible: bool,
+}
+
+/// Autotuning result: all evaluated points, best first among feasible.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub points: Vec<TunePoint>,
+}
+
+impl TuneResult {
+    pub fn best(&self) -> Option<&TunePoint> {
+        self.points.iter().find(|p| p.feasible)
+    }
+}
+
+/// All divisors of `n`, ascending.
+pub fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// Enumerate block-count assignments for `dims`, where each dim's count
+/// must divide every full extent it blocks.
+fn dim_domains(
+    ir: &LoopIr,
+    full: &HashMap<String, (usize, usize)>,
+) -> Vec<(Dim, Vec<usize>)> {
+    // collect, per dim, the set of full extents it must divide
+    let mut extents: HashMap<Dim, Vec<usize>> = HashMap::new();
+    for b in &ir.bufs {
+        if !b.is_input {
+            continue;
+        }
+        let (r, c) = full[&b.name];
+        for (d, ext) in b.dims.iter().zip([r, c]) {
+            extents.entry(d.clone()).or_default().push(ext);
+        }
+    }
+    // every dim appearing anywhere in the program must get a size; dims not
+    // constrained by inputs inherit the constraint of same-named use later
+    let mut all_dims: Vec<Dim> = Vec::new();
+    fn dims_of(stmts: &[crate::loopir::Stmt], out: &mut Vec<Dim>) {
+        for s in stmts {
+            if let crate::loopir::Stmt::Loop { dim, body, .. } = s {
+                if !out.contains(dim) {
+                    out.push(dim.clone());
+                }
+                dims_of(body, out);
+            }
+        }
+    }
+    dims_of(&ir.body, &mut all_dims);
+    for b in &ir.bufs {
+        for d in &b.dims {
+            if !all_dims.contains(d) {
+                all_dims.push(d.clone());
+            }
+        }
+    }
+
+    all_dims
+        .into_iter()
+        .map(|d| {
+            let dom = match extents.get(&d) {
+                Some(exts) => {
+                    let mut common: Vec<usize> = divisors(exts[0]);
+                    common.retain(|x| exts.iter().all(|e| e % x == 0));
+                    common
+                }
+                None => vec![1],
+            };
+            (d, dom)
+        })
+        .collect()
+}
+
+/// Exhaustively tune block counts for a (typically fused) block program.
+pub fn autotune(
+    g: &Graph,
+    full: &HashMap<String, (usize, usize)>,
+    local_capacity: u64,
+    model: &CostModel,
+) -> TuneResult {
+    let ir = lower(g);
+    let domains = dim_domains(&ir, full);
+    let mut points = Vec::new();
+    let mut idx = vec![0usize; domains.len()];
+    loop {
+        let mut sizes = DimSizes::new();
+        for (k, (d, dom)) in domains.iter().enumerate() {
+            sizes.set(d.clone(), dom[idx[k]]);
+        }
+        let env = ShapeEnv::from_full_shapes(&ir, &sizes, full);
+        let cost = analyze(&ir, &sizes, &env);
+        let feasible = cost.peak_local_bytes <= local_capacity;
+        points.push(TunePoint {
+            scalar: model.scalar(&cost),
+            sizes,
+            cost,
+            feasible,
+        });
+        // next index vector
+        let mut k = 0;
+        loop {
+            if k == domains.len() {
+                let mut sorted = points;
+                sorted.sort_by(|a, b| {
+                    b.feasible
+                        .cmp(&a.feasible)
+                        .then(a.scalar.partial_cmp(&b.scalar).unwrap())
+                });
+                return TuneResult { points: sorted };
+            }
+            idx[k] += 1;
+            if idx[k] < domains[k].1.len() {
+                break;
+            }
+            idx[k] = 0;
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::programs;
+    use crate::fusion::fuse;
+    use crate::lower::lower_array;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+    }
+
+    /// The FA epilogue: with ample local memory, the autotuner sets
+    /// D = L = 1 (whole rows of Q and whole columns of V in local memory),
+    /// which "reproduces the original Flash Attention kernel".
+    #[test]
+    fn attention_tuner_picks_d_l_one() {
+        let g = lower_array(&programs::attention());
+        let fused = fuse(g).snapshots.pop().unwrap();
+        let mut full = HashMap::new();
+        full.insert("Q".to_string(), (64, 32));
+        full.insert("KT".to_string(), (64, 32));
+        full.insert("VT".to_string(), (32, 64));
+        let res = autotune(&fused, &full, 1 << 20, &CostModel::default());
+        let best = res.best().expect("some feasible point");
+        assert_eq!(best.sizes.get(&Dim::new("D")), 1, "best: {best:?}");
+        assert_eq!(best.sizes.get(&Dim::new("L")), 1, "best: {best:?}");
+    }
+
+    /// With a tiny local memory, single-block configurations become
+    /// infeasible and the tuner must pick more blocks.
+    #[test]
+    fn capacity_forces_more_blocks() {
+        let g = lower_array(&programs::attention());
+        let fused = fuse(g).snapshots.pop().unwrap();
+        let mut full = HashMap::new();
+        full.insert("Q".to_string(), (64, 32));
+        full.insert("KT".to_string(), (64, 32));
+        full.insert("VT".to_string(), (32, 64));
+        let roomy = autotune(&fused, &full, 1 << 20, &CostModel::default());
+        let tight = autotune(&fused, &full, 6 << 10, &CostModel::default());
+        let rb = roomy.best().unwrap();
+        let tb = tight.best().expect("some feasible point under 6KiB");
+        assert!(tb.cost.peak_local_bytes <= 6 << 10);
+        let blocks = |p: &TunePoint| {
+            p.sizes.0.values().product::<usize>()
+        };
+        assert!(
+            blocks(tb) > blocks(rb),
+            "tight {:?} vs roomy {:?}",
+            tb.sizes,
+            rb.sizes
+        );
+        // feasibility is honored in ranking: every feasible point precedes
+        // every infeasible one
+        let first_infeasible = tight.points.iter().position(|p| !p.feasible);
+        if let Some(fi) = first_infeasible {
+            assert!(tight.points[..fi].iter().all(|p| p.feasible));
+        }
+    }
+
+    /// The RMS+FFN epilogue: at N = K = 1 "all the redundant work
+    /// disappears" — flops at (N=1, K=1) must equal the unreplicated
+    /// snapshot's flops, and larger N/K must replicate (more flops).
+    #[test]
+    fn rms_ffn_replication_vanishes_at_n1_k1() {
+        let g = lower_array(&programs::rmsnorm_ffn_swiglu());
+        let res = fuse(g);
+        let unreplicated = &res.snapshots[0];
+        let mega = res.snapshots.last().unwrap();
+        let mut full = HashMap::new();
+        full.insert("X".to_string(), (16, 32));
+        full.insert("WT".to_string(), (32, 32));
+        full.insert("VT".to_string(), (32, 32));
+        full.insert("UT".to_string(), (16, 32));
+
+        let cost_at = |g: &Graph, m: usize, d: usize, k: usize, n: usize| {
+            let sizes = DimSizes::of(&[("M", m), ("D", d), ("K", k), ("N", n)]);
+            let ir = lower(g);
+            let env = ShapeEnv::from_full_shapes(&ir, &sizes, &full);
+            analyze(&ir, &sizes, &env)
+        };
+        let mega11 = cost_at(mega, 4, 2, 1, 1);
+        let flat11 = cost_at(unreplicated, 4, 2, 1, 1);
+        assert_eq!(mega11.flops, flat11.flops, "no replication at N=K=1");
+        let mega22 = cost_at(mega, 4, 2, 2, 2);
+        assert!(
+            mega22.flops > mega11.flops,
+            "replication must grow with N,K"
+        );
+    }
+}

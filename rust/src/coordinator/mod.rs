@@ -1,0 +1,217 @@
+//! The end-to-end compiler driver (L3).
+//!
+//! Pipeline: array program → Table-2 lowering → candidate selection (which
+//! invokes the fusion algorithm per candidate and scores every snapshot) →
+//! optional block-shape autotuning → an executable [`SelectionPlan`] whose
+//! segments run back-to-back on the two-tier-memory executor, with
+//! intermediates flowing between segments through (simulated) global
+//! memory. The paper's contribution is the compiler, so this layer is a
+//! thin deterministic driver; reports quantify what fusion bought.
+
+pub mod workloads;
+
+use crate::cost::CostModel;
+use crate::exec::{from_blocks, to_blocks};
+use crate::ir::dim::DimSizes;
+use crate::ir::graph::Graph;
+use crate::loopir::interp::{exec, BufVal, ExecConfig, MemSim};
+use crate::loopir::lower::lower;
+use crate::lower::lower_array;
+use crate::select::{select, SelectCtx, SelectionPlan, ValueRef};
+use crate::tensor::Mat;
+use std::collections::{BTreeMap, HashMap};
+
+/// Compiler configuration.
+#[derive(Clone, Debug)]
+pub struct CompileConfig {
+    pub sizes: DimSizes,
+    pub full_shapes: HashMap<String, (usize, usize)>,
+    pub model: CostModel,
+}
+
+/// A compiled program: the initial block program plus the selected plan.
+pub struct Compiled {
+    pub block: Graph,
+    pub plan: SelectionPlan,
+    pub cfg: CompileConfig,
+}
+
+/// Run the full compilation pipeline.
+pub fn compile(p: &crate::array::ArrayProgram, cfg: CompileConfig) -> Compiled {
+    let block = lower_array(p);
+    let ctx = SelectCtx {
+        sizes: cfg.sizes.clone(),
+        full_shapes: cfg.full_shapes.clone(),
+        model: cfg.model,
+    };
+    let plan = select(&block, &ctx);
+    Compiled { block, plan, cfg }
+}
+
+/// Result of executing a plan.
+pub struct PlanRun {
+    pub outputs: HashMap<String, Mat>,
+    /// Aggregated two-tier traffic across all segments.
+    pub mem: MemSim,
+    pub per_segment: Vec<MemSim>,
+}
+
+/// Execute a selected plan segment by segment, passing intermediates
+/// through (simulated) global memory.
+pub fn execute_plan(
+    plan: &SelectionPlan,
+    sizes: &DimSizes,
+    params: &BTreeMap<String, f32>,
+    inputs: &HashMap<String, Mat>,
+) -> PlanRun {
+    let mut inter: HashMap<(usize, String), BufVal> = HashMap::new();
+    let mut outputs = HashMap::new();
+    let mut total = MemSim::default();
+    let mut per_segment = Vec::new();
+
+    for (si, seg) in plan.segments.iter().enumerate() {
+        let ir = lower(&seg.graph);
+        let mut cfg = ExecConfig::new(sizes.clone());
+        cfg.params = params.clone();
+        for decl in &ir.bufs {
+            if !decl.is_input {
+                continue;
+            }
+            let (_, vref) = seg
+                .inputs
+                .iter()
+                .find(|(l, _)| *l == decl.name)
+                .unwrap_or_else(|| panic!("segment {si}: no wiring for input {}", decl.name));
+            let bv = match vref {
+                ValueRef::ProgramInput(name) => {
+                    let m = inputs
+                        .get(name)
+                        .unwrap_or_else(|| panic!("missing program input {name}"));
+                    assert_eq!(decl.dims.len(), 2, "program input {name} must be 2-d");
+                    to_blocks(m, sizes.get(&decl.dims[0]), sizes.get(&decl.dims[1]))
+                }
+                ValueRef::SegmentOutput { segment, label } => inter
+                    .get(&(*segment, label.clone()))
+                    .unwrap_or_else(|| panic!("segment {si}: missing intermediate {label}"))
+                    .clone(),
+            };
+            cfg.inputs.insert(decl.name.clone(), bv);
+        }
+        let res = exec(&ir, &cfg);
+        for (label, prog_out) in &seg.outputs {
+            let bv = res.outputs.get(label).unwrap_or_else(|| {
+                panic!("segment {si}: executor produced no output {label}")
+            });
+            if let Some(name) = prog_out {
+                outputs.insert(name.clone(), from_blocks(bv));
+            }
+            inter.insert((si, label.clone()), bv.clone());
+        }
+        total.loaded_bytes += res.mem.loaded_bytes;
+        total.stored_bytes += res.mem.stored_bytes;
+        total.n_loads += res.mem.n_loads;
+        total.n_stores += res.mem.n_stores;
+        total.kernel_launches += res.mem.kernel_launches;
+        total.flops += res.mem.flops;
+        total.peak_local_bytes = total.peak_local_bytes.max(res.mem.peak_local_bytes);
+        per_segment.push(res.mem);
+    }
+
+    PlanRun {
+        outputs,
+        mem: total,
+        per_segment,
+    }
+}
+
+/// Human-readable report of a compiled plan.
+pub fn plan_report(c: &Compiled) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "plan: {} segment(s), total model cost {:.0}",
+        c.plan.segments.len(),
+        c.plan.total_cost
+    );
+    for (i, seg) in c.plan.segments.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "  segment {i}: {} op(s), snapshot {}, cost {:.0}, maps at top {}",
+            seg.node_ids.len(),
+            seg.snapshot_index,
+            seg.cost_scalar,
+            crate::rules::map_ids(&seg.graph).len()
+        );
+        for (label, vr) in &seg.inputs {
+            let _ = writeln!(s, "    in  {label} <- {vr:?}");
+        }
+        for (label, po) in &seg.outputs {
+            let _ = writeln!(s, "    out {label} -> {po:?}");
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::programs;
+    use crate::exec::reference;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn compile_and_execute_attention_plan() {
+        let (p, cfg, params, inputs) = workloads::attention_demo(42);
+        let compiled = compile(&p, cfg.clone());
+        let run = execute_plan(&compiled.plan, &cfg.sizes, &params, &inputs);
+        let want = reference::attention_ref(
+            &inputs["Q"],
+            &inputs["KT"],
+            &inputs["VT"],
+            params["DD"],
+        );
+        assert!(run.outputs["O"].max_abs_diff(&want) < 5e-4);
+        // the plan must beat the naive (fully unfused) execution
+        let naive = crate::exec::run(
+            &compiled.block,
+            &crate::exec::Workload {
+                sizes: cfg.sizes.clone(),
+                params: params.clone(),
+                inputs: inputs.clone(),
+                local_capacity: None,
+            },
+        );
+        assert!(run.mem.total_traffic() < naive.mem.total_traffic());
+        assert!(run.mem.kernel_launches < naive.mem.kernel_launches);
+    }
+
+    #[test]
+    fn plan_report_mentions_segments() {
+        let (p, cfg, _, _) = workloads::attention_demo(1);
+        let compiled = compile(&p, cfg);
+        let rep = plan_report(&compiled);
+        assert!(rep.contains("segment 0"));
+    }
+
+    #[test]
+    fn decoder_block_plan_runs_end_to_end() {
+        let (p, cfg, params, inputs) = workloads::decoder_demo(7);
+        let compiled = compile(&p, cfg.clone());
+        let run = execute_plan(&compiled.plan, &cfg.sizes, &params, &inputs);
+        let (want_o, want_h) = reference::decoder_block_ref(
+            &inputs["Q"],
+            &inputs["KT"],
+            &inputs["VT"],
+            &inputs["R"],
+            &inputs["WT"],
+            &inputs["VT2"],
+            &inputs["UT"],
+            params["DD"],
+        );
+        assert!(run.outputs["H"].max_abs_diff(&want_h) < 5e-4);
+        assert!(run.outputs["O"].max_abs_diff(&want_o) < 5e-3);
+        let _ = programs::decoder_block(); // symmetry with workloads
+        let _ = Rng::new(0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Canonical demo workloads for the CLI, examples, and benches: each returns
+//! (array program, compile config, params, synthetic inputs).
+
+use super::CompileConfig;
+use crate::array::{programs, ArrayProgram};
+use crate::cost::CostModel;
+use crate::ir::dim::DimSizes;
+use crate::tensor::{Mat, Rng};
+use std::collections::{BTreeMap, HashMap};
+
+pub type Demo = (
+    ArrayProgram,
+    CompileConfig,
+    BTreeMap<String, f32>,
+    HashMap<String, Mat>,
+);
+
+fn mats(seed: u64, specs: &[(&str, usize, usize)]) -> HashMap<String, Mat> {
+    let mut rng = Rng::new(seed);
+    specs
+        .iter()
+        .map(|(n, r, c)| (n.to_string(), rng.mat(*r, *c)))
+        .collect()
+}
+
+fn shapes(specs: &[(&str, usize, usize)]) -> HashMap<String, (usize, usize)> {
+    specs
+        .iter()
+        .map(|(n, r, c)| (n.to_string(), (*r, *c)))
+        .collect()
+}
+
+/// §1 quickstart: matmul + ReLU.
+pub fn matmul_relu_demo(seed: u64) -> Demo {
+    let specs = [("A", 32, 32), ("BT", 16, 32)];
+    let cfg = CompileConfig {
+        sizes: DimSizes::of(&[("M", 4), ("K", 4), ("N", 2)]),
+        full_shapes: shapes(&specs),
+        model: CostModel::default(),
+    };
+    (
+        programs::matmul_relu(),
+        cfg,
+        BTreeMap::new(),
+        mats(seed, &specs),
+    )
+}
+
+/// Example 1 at the artifact shapes (see python/compile/aot.py).
+pub fn attention_demo(seed: u64) -> Demo {
+    let specs = [("Q", 32, 16), ("KT", 32, 16), ("VT", 16, 32)];
+    let cfg = CompileConfig {
+        sizes: DimSizes::of(&[("M", 4), ("N", 4), ("D", 2), ("L", 2)]),
+        full_shapes: shapes(&specs),
+        model: CostModel::default(),
+    };
+    let mut params = BTreeMap::new();
+    params.insert("DD".to_string(), 16.0);
+    (programs::attention(), cfg, params, mats(seed, &specs))
+}
+
+/// Example 2 at the artifact shapes.
+pub fn layernorm_matmul_demo(seed: u64) -> Demo {
+    let specs = [("X", 32, 32), ("YT", 16, 32)];
+    let cfg = CompileConfig {
+        sizes: DimSizes::of(&[("M", 4), ("K", 4), ("N", 2)]),
+        full_shapes: shapes(&specs),
+        model: CostModel::default(),
+    };
+    let mut params = BTreeMap::new();
+    params.insert("KK".to_string(), 32.0);
+    (
+        programs::layernorm_matmul(),
+        cfg,
+        params,
+        mats(seed, &specs),
+    )
+}
+
+/// Example 3 at the artifact shapes.
+pub fn rmsnorm_ffn_swiglu_demo(seed: u64) -> Demo {
+    let specs = [
+        ("X", 32, 16),
+        ("WT", 32, 16),
+        ("VT", 32, 16),
+        ("UT", 16, 32),
+    ];
+    let cfg = CompileConfig {
+        sizes: DimSizes::of(&[("M", 4), ("D", 2), ("K", 4), ("N", 2)]),
+        full_shapes: shapes(&specs),
+        model: CostModel::default(),
+    };
+    let mut params = BTreeMap::new();
+    params.insert("DD".to_string(), 16.0);
+    (
+        programs::rmsnorm_ffn_swiglu(),
+        cfg,
+        params,
+        mats(seed, &specs),
+    )
+}
+
+/// End-to-end decoder block at the artifact shapes.
+pub fn decoder_demo(seed: u64) -> Demo {
+    let specs = [
+        ("Q", 32, 16),
+        ("KT", 32, 16),
+        ("VT", 16, 32),
+        ("R", 32, 16),
+        ("WT", 32, 16),
+        ("VT2", 32, 16),
+        ("UT", 16, 32),
+    ];
+    let cfg = CompileConfig {
+        sizes: DimSizes::of(&[
+            ("M", 4),
+            ("N", 4),
+            ("D", 2),
+            ("L", 2),
+            ("K", 4),
+            ("L2", 2),
+        ]),
+        full_shapes: shapes(&specs),
+        model: CostModel::default(),
+    };
+    let mut params = BTreeMap::new();
+    params.insert("DD".to_string(), 16.0);
+    params.insert("LL".to_string(), 16.0);
+    (programs::decoder_block(), cfg, params, mats(seed, &specs))
+}
+
+/// Lookup by CLI name.
+pub fn by_name(name: &str, seed: u64) -> Option<Demo> {
+    Some(match name {
+        "quickstart" | "matmul_relu" => matmul_relu_demo(seed),
+        "attention" | "flash_attention" => attention_demo(seed),
+        "layernorm_matmul" => layernorm_matmul_demo(seed),
+        "rmsnorm_ffn_swiglu" | "ffn" => rmsnorm_ffn_swiglu_demo(seed),
+        "decoder" | "decoder_block" => decoder_demo(seed),
+        _ => return None,
+    })
+}
+
+pub const NAMES: &[&str] = &[
+    "quickstart",
+    "attention",
+    "layernorm_matmul",
+    "rmsnorm_ffn_swiglu",
+    "decoder",
+];

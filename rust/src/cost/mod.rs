@@ -1,0 +1,369 @@
+//! Static cost model over Loop IR.
+//!
+//! Derives, without executing, the quantities fusion optimizes on the
+//! paper's abstract machine: global-memory traffic (bytes moved across the
+//! global<->local boundary, weighted by loop trip counts), kernel-launch
+//! count, compute work (flops — including work replicated by Rule 6), and a
+//! peak local-memory estimate. The selection layer and the autotuner score
+//! candidates with a weighted combination.
+//!
+//! The analyzer agrees exactly with the interpreter's `MemSim` on traffic
+//! and launches (asserted by tests) — it is the "fast screen" of the two.
+
+use crate::ir::dim::DimSizes;
+use crate::ir::func::FuncOp;
+use crate::ir::graph::Graph;
+use crate::loopir::{BufId, COp, LoopIr, Stmt, VarId};
+use std::collections::HashMap;
+
+/// Item shape of a value (block grids share one item shape per buffer).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum VShape {
+    Scalar,
+    Vector(usize),
+    Block(usize, usize),
+}
+
+impl VShape {
+    pub fn bytes(&self) -> u64 {
+        (match self {
+            VShape::Scalar => 1,
+            VShape::Vector(n) => *n,
+            VShape::Block(r, c) => r * c,
+        }) as u64
+            * 4
+    }
+
+    pub fn elems(&self) -> u64 {
+        self.bytes() / 4
+    }
+}
+
+/// Input item shapes, keyed by program-input buffer name.
+#[derive(Clone, Debug, Default)]
+pub struct ShapeEnv {
+    pub inputs: HashMap<String, VShape>,
+}
+
+impl ShapeEnv {
+    /// Derive block shapes from full matrix shapes and block counts.
+    pub fn from_full_shapes(
+        ir: &LoopIr,
+        sizes: &DimSizes,
+        full: &HashMap<String, (usize, usize)>,
+    ) -> ShapeEnv {
+        let mut inputs = HashMap::new();
+        for b in &ir.bufs {
+            if !b.is_input {
+                continue;
+            }
+            let (rows, cols) = *full
+                .get(&b.name)
+                .unwrap_or_else(|| panic!("no full shape for input {}", b.name));
+            assert_eq!(b.dims.len(), 2, "input {} must be 2-d blocked", b.name);
+            let rb = sizes.get(&b.dims[0]);
+            let cb = sizes.get(&b.dims[1]);
+            assert!(
+                rows % rb == 0 && cols % cb == 0,
+                "{}: {rows}x{cols} not divisible into {rb}x{cb} blocks",
+                b.name
+            );
+            inputs.insert(b.name.clone(), VShape::Block(rows / rb, cols / cb));
+        }
+        ShapeEnv { inputs }
+    }
+}
+
+/// The analysis result.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    pub loaded_bytes: u64,
+    pub stored_bytes: u64,
+    pub flops: u64,
+    pub launches: u64,
+    pub peak_local_bytes: u64,
+}
+
+impl Cost {
+    pub fn traffic(&self) -> u64 {
+        self.loaded_bytes + self.stored_bytes
+    }
+}
+
+/// Weights combining the cost components into one scalar.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Equivalent bytes charged per kernel launch (fixed overhead).
+    pub launch_overhead_bytes: f64,
+    /// Bytes-equivalent per flop (how compute-bound the machine is);
+    /// small = bandwidth-bound machine, traffic dominates.
+    pub bytes_per_flop: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // A bandwidth-bound accelerator: 4 KiB per launch, ~100 flops per
+        // byte of bandwidth.
+        CostModel {
+            launch_overhead_bytes: 4096.0,
+            bytes_per_flop: 0.01,
+        }
+    }
+}
+
+impl CostModel {
+    pub fn scalar(&self, c: &Cost) -> f64 {
+        c.traffic() as f64
+            + self.launch_overhead_bytes * c.launches as f64
+            + self.bytes_per_flop * c.flops as f64
+    }
+}
+
+struct Analyzer<'a> {
+    sizes: &'a DimSizes,
+    buf_decls: &'a [crate::loopir::BufDecl],
+    buf_shapes: Vec<Option<VShape>>,
+    var_shapes: HashMap<VarId, VShape>,
+    cost: Cost,
+}
+
+/// Statically analyze a lowered program.
+pub fn analyze(ir: &LoopIr, sizes: &DimSizes, env: &ShapeEnv) -> Cost {
+    let mut a = Analyzer {
+        sizes,
+        buf_decls: &ir.bufs,
+        buf_shapes: vec![None; ir.bufs.len()],
+        var_shapes: HashMap::new(),
+        cost: Cost::default(),
+    };
+    for (i, b) in ir.bufs.iter().enumerate() {
+        if b.is_input {
+            let s = env
+                .inputs
+                .get(&b.name)
+                .unwrap_or_else(|| panic!("ShapeEnv missing input {}", b.name));
+            a.buf_shapes[i] = Some(*s);
+        }
+    }
+    a.cost.launches = ir.kernel_launches() as u64;
+    let local = a.walk(&ir.body, 1, 1);
+    a.cost.peak_local_bytes = local;
+    a.cost
+}
+
+impl<'a> Analyzer<'a> {
+    /// Walk statements with the given trip multiplier; returns the local-
+    /// memory bytes live at this level (vars assigned here + deepest child).
+    /// `own_trips` is the trip count of the innermost enclosing loop (1 at
+    /// top level) — needed to discount the first, initializing iteration of
+    /// each accumulator, which performs no addition.
+    fn walk(&mut self, stmts: &[Stmt], mult: u64, own_trips: u64) -> u64 {
+        let mut here: u64 = 0;
+        // Sibling loops' locals all stay resident in the simulator (vars are
+        // only reset by an enclosing iteration), so peak sums siblings.
+        let mut children: u64 = 0;
+        for s in stmts {
+            match s {
+                Stmt::Loop {
+                    dim,
+                    skip_first,
+                    body,
+                    ..
+                } => {
+                    let n = self.sizes.get(dim) as u64;
+                    let trips = if *skip_first { n.saturating_sub(1) } else { n };
+                    let inner = self.walk(body, mult * trips, trips);
+                    children += inner;
+                }
+                Stmt::Load { var, buf, .. } => {
+                    let sh = self.buf_shape(*buf);
+                    self.var_shapes.insert(*var, sh);
+                    self.cost.loaded_bytes += sh.bytes() * mult;
+                    here += sh.bytes();
+                }
+                Stmt::Store { var, buf, .. } => {
+                    let sh = self.var_shape(*var);
+                    if self.buf_shapes[*buf].is_none() {
+                        self.buf_shapes[*buf] = Some(sh);
+                    }
+                    self.cost.stored_bytes += sh.bytes() * mult;
+                }
+                Stmt::Compute { var, op, args } => {
+                    let shapes: Vec<VShape> =
+                        args.iter().map(|a| self.var_shape(*a)).collect();
+                    let (sh, fl) = compute_shape(op, &shapes);
+                    self.var_shapes.insert(*var, sh);
+                    self.cost.flops += fl * mult;
+                    here += sh.bytes();
+                }
+                Stmt::MiscCall { args, out, .. } => {
+                    // opaque kernel: reads every input element, writes every
+                    // output element, once per enclosing trip
+                    for (buf, idx) in args {
+                        let sh = self.buf_shape(*buf);
+                        let n = self.unbound_count(*buf, idx);
+                        self.cost.loaded_bytes += sh.bytes() * n * mult;
+                    }
+                    let (obuf, oidx) = out;
+                    // output shape unknown for an opaque op: assume the
+                    // first input's item shape
+                    let osh = self.buf_shapes[*obuf].unwrap_or_else(|| {
+                        let s = self.buf_shape(args[0].0);
+                        self.buf_shapes[*obuf] = Some(s);
+                        s
+                    });
+                    let n = self.unbound_count(*obuf, oidx);
+                    self.cost.stored_bytes += osh.bytes() * n * mult;
+                }
+                Stmt::Accum { var, src, .. } => {
+                    let sh = self.var_shape(*src);
+                    if !self.var_shapes.contains_key(var) {
+                        self.var_shapes.insert(*var, sh);
+                        here += sh.bytes();
+                    }
+                    // the first iteration of the carrying loop initializes
+                    // the accumulator (no addition performed)
+                    self.cost.flops += sh.elems() * (mult - mult / own_trips.max(1));
+                }
+            }
+        }
+        here + children
+    }
+
+    /// Number of elements an opaque call touches: the product of the sizes
+    /// of the unbound index slots.
+    fn unbound_count(&self, b: BufId, idx: &[Option<crate::loopir::Index>]) -> u64 {
+        idx.iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| self.sizes.get(&self.buf_decls[b].dims[i]) as u64)
+            .product::<u64>()
+            .max(1)
+    }
+
+    fn buf_shape(&self, b: BufId) -> VShape {
+        self.buf_shapes[b].unwrap_or_else(|| panic!("buffer {b} loaded before any store"))
+    }
+
+    fn var_shape(&self, v: VarId) -> VShape {
+        *self
+            .var_shapes
+            .get(&v)
+            .unwrap_or_else(|| panic!("var t{v} used before assignment in analysis"))
+    }
+}
+
+fn compute_shape(op: &COp, args: &[VShape]) -> (VShape, u64) {
+    match op {
+        COp::Func(f) => shape_of_func(f, args),
+        COp::Misc(_) => (args[0], 0),
+    }
+}
+
+/// Item-shape and flop rule for a functional operator (shared with the
+/// graph-level shape inference in `select`).
+pub fn shape_of_func(f: &FuncOp, args: &[VShape]) -> (VShape, u64) {
+    match f {
+        FuncOp::Add | FuncOp::Mul => (args[0], args[0].elems()),
+        FuncOp::RowShift | FuncOp::RowScale => (args[0], args[0].elems()),
+        FuncOp::RowSum => match args[0] {
+            VShape::Block(r, c) => (VShape::Vector(r), (r * c) as u64),
+            other => panic!("row_sum of {other:?}"),
+        },
+        FuncOp::Dot => match (args[0], args[1]) {
+            (VShape::Block(r, k), VShape::Block(n, k2)) => {
+                assert_eq!(k, k2, "dot contraction mismatch");
+                (VShape::Block(r, n), 2 * (r * k * n) as u64)
+            }
+            other => panic!("dot of {other:?}"),
+        },
+        FuncOp::Outer => match (args[0], args[1]) {
+            (VShape::Vector(r), VShape::Vector(n)) => (VShape::Block(r, n), (r * n) as u64),
+            other => panic!("outer of {other:?}"),
+        },
+        FuncOp::Ew(_) => (args[0], args[0].elems()),
+    }
+}
+
+/// Convenience: lower a block program and analyze it in one call.
+pub fn cost_of(
+    g: &Graph,
+    sizes: &DimSizes,
+    full: &HashMap<String, (usize, usize)>,
+) -> Cost {
+    let ir = crate::loopir::lower::lower(g);
+    let env = ShapeEnv::from_full_shapes(&ir, sizes, full);
+    analyze(&ir, sizes, &env)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::programs;
+    use crate::exec::{run, Workload};
+    use crate::fusion::fuse;
+    use crate::lower::lower_array;
+    use crate::tensor::Rng;
+
+    fn attention_setup() -> (
+        crate::ir::graph::Graph,
+        DimSizes,
+        HashMap<String, (usize, usize)>,
+        Workload,
+    ) {
+        let g = lower_array(&programs::attention());
+        let sizes = DimSizes::of(&[("M", 2), ("N", 3), ("D", 2), ("L", 2)]);
+        let mut full = HashMap::new();
+        full.insert("Q".to_string(), (8, 16));
+        full.insert("KT".to_string(), (12, 16));
+        full.insert("VT".to_string(), (10, 12));
+        let mut rng = Rng::new(1);
+        let wl = Workload::new(sizes.clone())
+            .input("Q", rng.mat(8, 16))
+            .input("KT", rng.mat(12, 16))
+            .input("VT", rng.mat(10, 12))
+            .param("DD", 16.0);
+        (g, sizes, full, wl)
+    }
+
+    /// The static analyzer must agree with the interpreter's MemSim.
+    #[test]
+    fn static_matches_measured_unfused() {
+        let (g, sizes, full, wl) = attention_setup();
+        let st = cost_of(&g, &sizes, &full);
+        let dy = run(&g, &wl).mem;
+        assert_eq!(st.loaded_bytes, dy.loaded_bytes);
+        assert_eq!(st.stored_bytes, dy.stored_bytes);
+        assert_eq!(st.launches, dy.kernel_launches);
+        assert_eq!(st.flops, dy.flops);
+    }
+
+    #[test]
+    fn static_matches_measured_fused() {
+        let (g, sizes, full, wl) = attention_setup();
+        let fused = fuse(g).snapshots.pop().unwrap();
+        let st = cost_of(&fused, &sizes, &full);
+        let dy = run(&fused, &wl).mem;
+        assert_eq!(st.loaded_bytes, dy.loaded_bytes);
+        assert_eq!(st.stored_bytes, dy.stored_bytes);
+        assert_eq!(st.launches, dy.kernel_launches);
+        assert_eq!(st.flops, dy.flops);
+    }
+
+    #[test]
+    fn fusion_reduces_scalar_cost() {
+        let (g, sizes, full, _) = attention_setup();
+        let model = CostModel::default();
+        let before = model.scalar(&cost_of(&g, &sizes, &full));
+        let fused = fuse(g).snapshots.pop().unwrap();
+        let after = model.scalar(&cost_of(&fused, &sizes, &full));
+        assert!(after < before, "fused {after} !< unfused {before}");
+    }
+
+    #[test]
+    fn vshape_bytes() {
+        assert_eq!(VShape::Scalar.bytes(), 4);
+        assert_eq!(VShape::Vector(8).bytes(), 32);
+        assert_eq!(VShape::Block(4, 8).bytes(), 128);
+    }
+}

@@ -1,0 +1,150 @@
+//! High-level execution of block programs on full matrices.
+//!
+//! Bridges the gap between logical matrices and the blocked representation:
+//! splits each program input into its `[rows, cols]` grid of blocks, runs
+//! the Loop-IR interpreter under the two-tier memory simulator, and
+//! reassembles block-matrix outputs. Also hosts the tensor-level reference
+//! implementations used to cross-check every example program.
+
+pub mod reference;
+
+use crate::ir::dim::DimSizes;
+use crate::ir::graph::Graph;
+use crate::loopir::interp::{exec, BufVal, ExecConfig, MemSim};
+use crate::loopir::lower::lower;
+use crate::loopir::LoopIr;
+use crate::tensor::{Mat, Val};
+use std::collections::{BTreeMap, HashMap};
+
+/// Split a matrix into an `rb × cb` grid of blocks (sizes must divide).
+pub fn to_blocks(m: &Mat, rb: usize, cb: usize) -> BufVal {
+    assert!(
+        m.rows % rb == 0 && m.cols % cb == 0,
+        "matrix {}x{} not divisible into {rb}x{cb} blocks",
+        m.rows,
+        m.cols
+    );
+    let (bh, bw) = (m.rows / rb, m.cols / cb);
+    let mut bv = BufVal::new(vec![rb, cb]);
+    for i in 0..rb {
+        for j in 0..cb {
+            bv.set(&[i, j], Val::Block(m.slice(i * bh, j * bw, bh, bw)));
+        }
+    }
+    bv
+}
+
+/// Reassemble a `[rb, cb]` grid of blocks into one matrix.
+pub fn from_blocks(bv: &BufVal) -> Mat {
+    assert_eq!(bv.dims.len(), 2, "from_blocks needs a 2-d block grid");
+    let (rb, cb) = (bv.dims[0], bv.dims[1]);
+    let b00 = bv.get(&[0, 0]).as_block();
+    let (bh, bw) = (b00.rows, b00.cols);
+    let mut out = Mat::zeros(rb * bh, cb * bw);
+    for i in 0..rb {
+        for j in 0..cb {
+            out.place(i * bh, j * bw, bv.get(&[i, j]).as_block());
+        }
+    }
+    out
+}
+
+/// A ready-to-run workload: dim sizes (block counts), scalar params, full
+/// input matrices, optional local-memory capacity.
+pub struct Workload {
+    pub sizes: DimSizes,
+    pub params: BTreeMap<String, f32>,
+    pub inputs: HashMap<String, Mat>,
+    pub local_capacity: Option<u64>,
+}
+
+impl Workload {
+    pub fn new(sizes: DimSizes) -> Workload {
+        Workload {
+            sizes,
+            params: BTreeMap::new(),
+            inputs: HashMap::new(),
+            local_capacity: None,
+        }
+    }
+
+    pub fn input(mut self, name: &str, m: Mat) -> Self {
+        self.inputs.insert(name.into(), m);
+        self
+    }
+
+    pub fn param(mut self, name: &str, v: f32) -> Self {
+        self.params.insert(name.into(), v);
+        self
+    }
+}
+
+/// Result of running a block program on a workload.
+pub struct RunResult {
+    pub outputs: HashMap<String, Mat>,
+    pub mem: MemSim,
+}
+
+/// Lower and run a block program on full-matrix inputs.
+pub fn run(g: &Graph, w: &Workload) -> RunResult {
+    run_lowered(&lower(g), w)
+}
+
+/// Run an already-lowered program (lets benches amortize lowering).
+pub fn run_lowered(ir: &LoopIr, w: &Workload) -> RunResult {
+    let mut cfg = ExecConfig::new(w.sizes.clone());
+    cfg.params = w.params.clone();
+    cfg.local_capacity = w.local_capacity;
+    for decl in &ir.bufs {
+        if !decl.is_input {
+            continue;
+        }
+        let m = w
+            .inputs
+            .get(&decl.name)
+            .unwrap_or_else(|| panic!("workload missing input {}", decl.name));
+        assert_eq!(
+            decl.dims.len(),
+            2,
+            "program input {} must be 2-d blocked",
+            decl.name
+        );
+        let rb = w.sizes.get(&decl.dims[0]);
+        let cb = w.sizes.get(&decl.dims[1]);
+        cfg.inputs.insert(decl.name.clone(), to_blocks(m, rb, cb));
+    }
+    let res = exec(ir, &cfg);
+    let outputs = res
+        .outputs
+        .iter()
+        .map(|(name, bv)| (name.clone(), from_blocks(bv)))
+        .collect();
+    RunResult {
+        outputs,
+        mem: res.mem,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn block_roundtrip() {
+        let mut rng = Rng::new(5);
+        let m = rng.mat(6, 8);
+        let bv = to_blocks(&m, 3, 2);
+        assert_eq!(bv.dims, vec![3, 2]);
+        let back = from_blocks(&bv);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn indivisible_blocks_panic() {
+        let mut rng = Rng::new(5);
+        let m = rng.mat(5, 8);
+        to_blocks(&m, 3, 2);
+    }
+}

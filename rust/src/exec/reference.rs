@@ -1,0 +1,152 @@
+//! Tensor-level reference implementations of the example programs.
+//!
+//! These compute the same functions as the block programs, directly on full
+//! matrices with `tensor::Mat` operations — the Rust-side oracles for
+//! numeric cross-checks (Python's `ref.py` plays the same role for the
+//! Pallas kernels, and the PJRT runtime cross-checks both against JAX).
+//!
+//! Storage conventions follow the block programs: matmul right operands are
+//! the transposed-stored matrices (`KT`, `VT`, `YT`, …), so e.g.
+//! `attention_ref` computes `softmax(Q·KTᵀ/√d)·VTᵀ`.
+
+use crate::tensor::Mat;
+
+/// Row-wise softmax (unsafe — no max subtraction, like the paper's §5 body).
+pub fn softmax_rows(x: &Mat) -> Mat {
+    let e = x.map(f32::exp);
+    let denom: Vec<f32> = e.row_sum().iter().map(|s| 1.0 / s).collect();
+    e.row_scale(&denom)
+}
+
+/// Row-wise LayerNorm without affine parameters.
+pub fn layernorm_rows(x: &Mat) -> Mat {
+    let k = x.cols as f32;
+    let mean: Vec<f32> = x.row_sum().iter().map(|s| s / k).collect();
+    let shifted = x.row_shift(&mean.iter().map(|m| -m).collect::<Vec<_>>());
+    let sumsq = x.map(|v| v * v).row_sum();
+    let rstd: Vec<f32> = sumsq
+        .iter()
+        .zip(&mean)
+        .map(|(s2, mu)| (s2 / k - mu * mu).powf(-0.5))
+        .collect();
+    shifted.row_scale(&rstd)
+}
+
+/// Row-wise RMSNorm.
+pub fn rmsnorm_rows(x: &Mat) -> Mat {
+    let d = x.cols as f32;
+    let rrms: Vec<f32> = x
+        .map(|v| v * v)
+        .row_sum()
+        .iter()
+        .map(|s| 1.0 / (s / d).sqrt())
+        .collect();
+    x.row_scale(&rrms)
+}
+
+pub fn swish(x: &Mat) -> Mat {
+    x.map(|v| v / (1.0 + (-v).exp()))
+}
+
+pub fn relu(x: &Mat) -> Mat {
+    x.map(|v| v.max(0.0))
+}
+
+/// §1 example: `C = relu(A · BTᵀ)`.
+pub fn matmul_relu_ref(a: &Mat, bt: &Mat) -> Mat {
+    relu(&a.dot_bt(bt))
+}
+
+/// Example 1: `O = softmax(Q·KTᵀ/√d) · VTᵀ` with `d = dd`.
+pub fn attention_ref(q: &Mat, kt: &Mat, vt: &Mat, dd: f32) -> Mat {
+    let scores = q.dot_bt(kt).map(|v| v * dd.powf(-0.5));
+    softmax_rows(&scores).dot_bt(vt)
+}
+
+/// Example 2: `Z = LayerNorm(X) · YTᵀ`.
+pub fn layernorm_matmul_ref(x: &Mat, yt: &Mat) -> Mat {
+    layernorm_rows(x).dot_bt(yt)
+}
+
+/// Example 3: `O = (swish(RMS(X)·WTᵀ) ⊙ (RMS(X)·VTᵀ)) · UTᵀ`.
+pub fn rmsnorm_ffn_swiglu_ref(x: &Mat, wt: &Mat, vt: &Mat, ut: &Mat) -> Mat {
+    let r = rmsnorm_rows(x);
+    let w = swish(&r.dot_bt(wt));
+    let v = r.dot_bt(vt);
+    w.hadamard(&v).dot_bt(ut)
+}
+
+/// Decoder block (see `array::programs::decoder_block`): returns `(O, H)`.
+pub fn decoder_block_ref(
+    q: &Mat,
+    kt: &Mat,
+    vt: &Mat,
+    r: &Mat,
+    wt: &Mat,
+    vt2: &Mat,
+    ut: &Mat,
+    dd: f32,
+) -> (Mat, Mat) {
+    let attn = attention_ref(q, kt, vt, dd);
+    let h = attn.add(r);
+    let o = rmsnorm_ffn_swiglu_ref(&h, wt, vt2, ut);
+    (o, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let x = rng.mat(4, 6);
+        let s = softmax_rows(&x);
+        for r in s.row_sum() {
+            assert!((r - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layernorm_rows_zero_mean_unit_var() {
+        let mut rng = Rng::new(2);
+        let x = rng.mat(3, 64);
+        let y = layernorm_rows(&x);
+        for i in 0..3 {
+            let row = y.row(i);
+            let mean: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|v| v * v).sum::<f32>() / 64.0 - mean * mean;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_rows_unit_rms() {
+        let mut rng = Rng::new(3);
+        let x = rng.mat(3, 32);
+        let y = rmsnorm_rows(&x);
+        for i in 0..3 {
+            let ms: f32 = y.row(i).iter().map(|v| v * v).sum::<f32>() / 32.0;
+            assert!((ms - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn attention_is_convex_combination() {
+        // each output row is a convex combination of VTᵀ's rows, so it must
+        // lie within their min/max envelope
+        let mut rng = Rng::new(4);
+        let (q, kt, vt) = (rng.mat(4, 8), rng.mat(6, 8), rng.mat(5, 6));
+        let o = attention_ref(&q, &kt, &vt, 8.0);
+        let v = vt.transpose();
+        for j in 0..o.cols {
+            let lo = (0..v.rows).map(|i| v.at(i, j)).fold(f32::MAX, f32::min);
+            let hi = (0..v.rows).map(|i| v.at(i, j)).fold(f32::MIN, f32::max);
+            for i in 0..o.rows {
+                assert!(o.at(i, j) >= lo - 1e-4 && o.at(i, j) <= hi + 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! The rule-based fusion algorithm (paper §4).
+//!
+//! * [`fuse_no_extend`] — apply rules in the priority order
+//!   `8 → 4 → 5 → 9 → 3 → 1 → 2` at one graph level until quiescent.
+//! * [`bfs_fuse_no_extend`] — run it over the whole hierarchy breadth-first
+//!   (top-level graph first, then inner graphs, re-enqueuing children).
+//! * [`bfs_extend`] — find and apply the first Rule-6 map extension anywhere
+//!   in the hierarchy (breadth-first).
+//! * [`fuse`] — alternate the two, snapshotting after every quiescent state;
+//!   the returned snapshots go to the selection layer, which may roll back
+//!   work replication introduced by extensions.
+
+pub mod trace;
+
+pub use trace::{FusionTrace, TraceEvent};
+
+use crate::ir::graph::{Graph, NodeId};
+use crate::rules::{self, RuleId};
+use std::collections::VecDeque;
+
+/// The paper's priority order: companion rules first, then the fusion rules.
+pub const PRIORITY: [RuleId; 7] = [
+    RuleId::R8,
+    RuleId::R4,
+    RuleId::R5,
+    RuleId::R9,
+    RuleId::R3,
+    RuleId::R1,
+    RuleId::R2,
+];
+
+/// Resolve a hierarchical path of map node ids to the inner graph it names.
+pub fn graph_at<'a>(g: &'a Graph, path: &[NodeId]) -> &'a Graph {
+    match path.split_first() {
+        None => g,
+        Some((id, rest)) => graph_at(&g.node(*id).as_map().expect("path through non-map").inner, rest),
+    }
+}
+
+pub fn graph_at_mut<'a>(g: &'a mut Graph, path: &[NodeId]) -> &'a mut Graph {
+    match path.split_first() {
+        None => g,
+        Some((id, rest)) => graph_at_mut(
+            &mut g
+                .node_mut(*id)
+                .as_map_mut()
+                .expect("path through non-map")
+                .inner,
+            rest,
+        ),
+    }
+}
+
+/// Apply the priority rules at one graph level until none matches.
+pub fn fuse_no_extend(g: &mut Graph, path: &[NodeId], trace: &mut FusionTrace) {
+    'outer: loop {
+        for r in PRIORITY {
+            if let Some(detail) = rules::try_rule(g, r) {
+                trace.record(r, path, detail);
+                continue 'outer;
+            }
+        }
+        break;
+    }
+}
+
+/// Breadth-first `fuse_no_extend` over the whole hierarchy.
+pub fn bfs_fuse_no_extend(g: &mut Graph, trace: &mut FusionTrace) {
+    fuse_no_extend(g, &[], trace);
+    let mut queue: VecDeque<Vec<NodeId>> = rules::map_ids(g)
+        .into_iter()
+        .map(|id| vec![id])
+        .collect();
+    while let Some(path) = queue.pop_front() {
+        {
+            let sub = graph_at_mut(g, &path);
+            // the path may have been created before a parent rewrite; guard
+            fuse_no_extend(sub, &path, trace);
+        }
+        let sub = graph_at(g, &path);
+        for id in rules::map_ids(sub) {
+            let mut p = path.clone();
+            p.push(id);
+            queue.push_back(p);
+        }
+    }
+}
+
+/// Find and apply the first Rule-6 extension anywhere (breadth-first).
+/// Returns true if a map was extended.
+pub fn bfs_extend(g: &mut Graph, trace: &mut FusionTrace) -> bool {
+    if let Some(detail) = rules::rule6::try_rule6(g) {
+        trace.record(RuleId::R6, &[], detail);
+        return true;
+    }
+    let mut queue: VecDeque<Vec<NodeId>> = rules::map_ids(g)
+        .into_iter()
+        .map(|id| vec![id])
+        .collect();
+    while let Some(path) = queue.pop_front() {
+        {
+            let sub = graph_at_mut(g, &path);
+            if let Some(detail) = rules::rule6::try_rule6(sub) {
+                trace.record(RuleId::R6, &path, detail);
+                return true;
+            }
+        }
+        let sub = graph_at(g, &path);
+        for id in rules::map_ids(sub) {
+            let mut p = path.clone();
+            p.push(id);
+            queue.push_back(p);
+        }
+    }
+    false
+}
+
+/// The result of running the full fusion algorithm on one candidate.
+pub struct FusionResult {
+    /// Snapshots after each quiescent `bfs_fuse_no_extend`, in order; the
+    /// last is the most aggressively fused (most work replication).
+    pub snapshots: Vec<Graph>,
+    pub trace: FusionTrace,
+}
+
+/// The paper's `fuse(G)`: alternate quiescent fusion and map extension,
+/// snapshotting between rounds, until no extension applies.
+pub fn fuse(mut g: Graph) -> FusionResult {
+    let mut trace = FusionTrace::new();
+    bfs_fuse_no_extend(&mut g, &mut trace);
+    let mut snapshots = vec![g.clone()];
+    while bfs_extend(&mut g, &mut trace) {
+        bfs_fuse_no_extend(&mut g, &mut trace);
+        snapshots.push(g.clone());
+    }
+    FusionResult { snapshots, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+    use crate::ir::func::{FuncOp, ReduceOp};
+    use crate::ir::graph::{map_over, ArgMode};
+    use crate::ir::types::Ty;
+    use crate::ir::validate::assert_valid;
+
+    /// matmul + relu (the paper's §1 motivating example, in block form):
+    /// fuse() must produce a single kernel with no interior buffered edges.
+    #[test]
+    fn fuses_matmul_relu_end_to_end() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["M"]));
+        let b = g.input("BT", Ty::blocks(&["N"]));
+        // C[m,n] = relu(dot(A[m], B[n])) with single-block contraction:
+        let mm = map_over(
+            &mut g,
+            "M",
+            &[(a, ArgMode::Mapped), (b, ArgMode::Bcast)],
+            |mb, ins| {
+                let inner = map_over(
+                    &mut mb.g,
+                    "N",
+                    &[(ins[1], ArgMode::Mapped), (ins[0], ArgMode::Bcast)],
+                    |mb2, i2| {
+                        let d = mb2.g.func(FuncOp::Dot, &[i2[1], i2[0]]);
+                        mb2.collect(d);
+                    },
+                );
+                mb.collect(inner[0]);
+            },
+        );
+        let relu = map_over(&mut g, "M", &[(mm[0], ArgMode::Mapped)], |mb, ins| {
+            let inner = map_over(&mut mb.g, "N", &[(ins[0], ArgMode::Mapped)], |mb2, i2| {
+                let r = mb2.g.ew1(Expr::relu(Expr::var(0)), i2[0]);
+                mb2.collect(r);
+            });
+            mb.collect(inner[0]);
+        });
+        g.output("C", relu[0]);
+        assert_eq!(g.interior_buffered_count_recursive(), 1);
+
+        let res = fuse(g);
+        let fused = res.snapshots.last().unwrap();
+        assert_valid(fused);
+        assert_eq!(fused.interior_buffered_count_recursive(), 0);
+        // one M-map at top level, one N-map inside
+        assert_eq!(crate::rules::map_ids(fused).len(), 1);
+        assert!(res.trace.count(RuleId::R1) >= 2); // top M-fusion + inner N-fusion
+    }
+
+    #[test]
+    fn snapshot_before_extension_is_kept() {
+        // A program needing Rule 6 yields >= 2 snapshots: pre- and
+        // post-extension.
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let vt = g.input("VT", Ty::blocks(&["L", "N"]));
+        let u = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            mb.collect(r);
+        });
+        let x = map_over(
+            &mut g,
+            "L",
+            &[(u[0], ArgMode::Bcast), (vt, ArgMode::Mapped)],
+            |mb, ins| {
+                let inner = map_over(
+                    &mut mb.g,
+                    "N",
+                    &[(ins[0], ArgMode::Mapped), (ins[1], ArgMode::Mapped)],
+                    |mb2, i2| {
+                        let d = mb2.g.func(FuncOp::Dot, &[i2[0], i2[1]]);
+                        mb2.collect(d);
+                    },
+                );
+                let red = mb.g.reduce(ReduceOp::Add, inner[0]);
+                mb.collect(red);
+            },
+        );
+        g.output("O", x[0]);
+
+        let res = fuse(g);
+        assert_eq!(res.snapshots.len(), 2);
+        assert_eq!(res.trace.count(RuleId::R6), 1);
+        // pre-extension snapshot still has the buffered edge; final doesn't
+        assert_eq!(
+            res.snapshots[0].interior_buffered_count_recursive(),
+            1
+        );
+        assert_eq!(
+            res.snapshots[1].interior_buffered_count_recursive(),
+            0
+        );
+        for s in &res.snapshots {
+            assert_valid(s);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Fusion trace: a structured log of every rule application.
+//!
+//! The paper's §5 walks through each example step by step ("Step 7: Swap
+//! Scale and Dot", …); the trace reproduces those walkthroughs and the
+//! per-rule application counts that `rust/tests/paper_traces.rs` asserts.
+
+use crate::ir::graph::NodeId;
+use crate::rules::RuleId;
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// 1-based step number (matches the paper's "Step N" numbering style).
+    pub step: usize,
+    pub rule: RuleId,
+    /// Hierarchical path of map node ids from the root graph to the graph
+    /// the rule fired in (empty = top level).
+    pub path: Vec<NodeId>,
+    pub detail: String,
+}
+
+impl fmt::Display for TraceEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let depth = self.path.len();
+        write!(
+            f,
+            "step {:>3}  [depth {depth}]  {}  — {}",
+            self.step,
+            self.rule.name(),
+            self.detail
+        )
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct FusionTrace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl FusionTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, rule: RuleId, path: &[NodeId], detail: String) {
+        self.events.push(TraceEvent {
+            step: self.events.len() + 1,
+            rule,
+            path: path.to_vec(),
+            detail,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Number of applications of a given rule.
+    pub fn count(&self, rule: RuleId) -> usize {
+        self.events.iter().filter(|e| e.rule == rule).count()
+    }
+
+    /// Application counts for every rule that fired.
+    pub fn counts(&self) -> BTreeMap<RuleId, usize> {
+        let mut m = BTreeMap::new();
+        for e in &self.events {
+            *m.entry(e.rule).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Compact per-rule summary, e.g. `R1×9 R3×5 R4×1 R6×1 R9×1`.
+    pub fn summary(&self) -> String {
+        self.counts()
+            .iter()
+            .map(|(r, n)| format!("R{}×{n}", r.short()))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+impl fmt::Display for FusionTrace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for e in &self.events {
+            writeln!(f, "{e}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_counts() {
+        let mut t = FusionTrace::new();
+        t.record(RuleId::R1, &[], "a".into());
+        t.record(RuleId::R1, &[3], "b".into());
+        t.record(RuleId::R4, &[3], "c".into());
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.count(RuleId::R1), 2);
+        assert_eq!(t.count(RuleId::R2), 0);
+        assert_eq!(t.summary(), "R1×2 R4×1");
+        assert_eq!(t.events[1].step, 2);
+    }
+}

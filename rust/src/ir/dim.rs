@@ -1,0 +1,109 @@
+//! Iteration dimensions of a block program.
+//!
+//! A [`Dim`] names one blocking dimension of the program (the paper's `M`,
+//! `N`, `K`, `D`, `L`, …). The *number of blocks* along each dimension is a
+//! parameter chosen after fusion by the autotuner (§2.1: "The number of
+//! blocks along each dimension is a parameter, which can later be optimized
+//! using an auto-tuning procedure"), so the IR only carries names; concrete
+//! trip counts live in a [`DimSizes`] environment supplied at
+//! execution/costing time.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A named iteration dimension (e.g. `M`, `N`, `K`).
+#[derive(Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Dim(pub String);
+
+impl Dim {
+    pub fn new(name: impl Into<String>) -> Self {
+        Dim(name.into())
+    }
+    pub fn name(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Dim({})", self.0)
+    }
+}
+
+impl From<&str> for Dim {
+    fn from(s: &str) -> Self {
+        Dim(s.to_string())
+    }
+}
+
+impl From<String> for Dim {
+    fn from(s: String) -> Self {
+        Dim(s)
+    }
+}
+
+/// Concrete trip counts (number of blocks) per dimension.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DimSizes(pub BTreeMap<Dim, usize>);
+
+impl DimSizes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn of(pairs: &[(&str, usize)]) -> Self {
+        let mut m = BTreeMap::new();
+        for (d, n) in pairs {
+            m.insert(Dim::new(*d), *n);
+        }
+        DimSizes(m)
+    }
+
+    pub fn get(&self, d: &Dim) -> usize {
+        *self
+            .0
+            .get(d)
+            .unwrap_or_else(|| panic!("DimSizes: missing size for dimension {d}"))
+    }
+
+    pub fn try_get(&self, d: &Dim) -> Option<usize> {
+        self.0.get(d).copied()
+    }
+
+    pub fn set(&mut self, d: impl Into<Dim>, n: usize) {
+        self.0.insert(d.into(), n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dim_display_and_eq() {
+        let m = Dim::new("M");
+        assert_eq!(m.to_string(), "M");
+        assert_eq!(m, Dim::from("M"));
+        assert_ne!(m, Dim::from("N"));
+    }
+
+    #[test]
+    fn dim_sizes_lookup() {
+        let s = DimSizes::of(&[("M", 4), ("N", 8)]);
+        assert_eq!(s.get(&Dim::new("M")), 4);
+        assert_eq!(s.get(&Dim::new("N")), 8);
+        assert_eq!(s.try_get(&Dim::new("K")), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing size")]
+    fn dim_sizes_missing_panics() {
+        DimSizes::new().get(&Dim::new("Q"));
+    }
+}

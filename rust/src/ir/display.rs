@@ -1,0 +1,218 @@
+//! Human-readable rendering of block programs.
+//!
+//! Two renderers: an indented hierarchical text dump (for debugging and the
+//! fusion trace), and a Graphviz `dot` exporter that colors buffered edges
+//! red like the paper's figures. The paper-style *code listings* live in
+//! `loopir::print` (they require lowering).
+
+use super::graph::{port, ArgMode, Graph, NodeKind, OutMode};
+use std::fmt::Write;
+
+/// Indented text dump of the whole hierarchy.
+pub fn dump(g: &Graph) -> String {
+    let mut s = String::new();
+    dump_level(g, 0, &mut s);
+    s
+}
+
+fn dump_level(g: &Graph, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent);
+    for id in g.topo_order() {
+        let n = g.node(id);
+        match &n.kind {
+            NodeKind::Input { ty } => {
+                let _ = writeln!(out, "{pad}n{id} input {} : {ty}", n.label);
+            }
+            NodeKind::Output => {
+                let src = g
+                    .producer(port(id, 0))
+                    .map(|p| format!("n{}.{}", p.node, p.port))
+                    .unwrap_or_else(|| "?".into());
+                let _ = writeln!(out, "{pad}n{id} output {} <- {src}", n.label);
+            }
+            NodeKind::Func(f) => {
+                let args = fmt_args(g, id, f.arity());
+                let _ = writeln!(out, "{pad}n{id} {f}({args})");
+            }
+            NodeKind::Reduce(op) => {
+                let args = fmt_args(g, id, 1);
+                let _ = writeln!(out, "{pad}n{id} reduce[{op}]({args})");
+            }
+            NodeKind::Head => {
+                let args = fmt_args(g, id, 1);
+                let _ = writeln!(out, "{pad}n{id} head({args})");
+            }
+            NodeKind::Concat { dim } => {
+                let args = fmt_args(g, id, 2);
+                let _ = writeln!(out, "{pad}n{id} concat[{dim}]({args})");
+            }
+            NodeKind::Misc { tag, .. } => {
+                let _ = writeln!(out, "{pad}n{id} misc[{tag}]");
+            }
+            NodeKind::Map(m) => {
+                let ins: Vec<String> = m
+                    .inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, mi)| {
+                        let src = g
+                            .producer(port(id, i))
+                            .map(|p| format!("n{}.{}", p.node, p.port))
+                            .unwrap_or_else(|| "?".into());
+                        let mode = match mi.mode {
+                            ArgMode::Mapped => "mapped",
+                            ArgMode::Bcast => "bcast",
+                        };
+                        format!("{src}:{mode}")
+                    })
+                    .collect();
+                let outs: Vec<String> = m
+                    .outputs
+                    .iter()
+                    .map(|mo| match &mo.mode {
+                        OutMode::Collect => "collect".to_string(),
+                        OutMode::Reduce(op) => format!("reduce[{op}]"),
+                    })
+                    .collect();
+                let range = if m.skip_first { " range=1.." } else { "" };
+                let _ = writeln!(
+                    out,
+                    "{pad}n{id} map {}{range} in=[{}] out=[{}]:",
+                    m.dim,
+                    ins.join(", "),
+                    outs.join(", ")
+                );
+                dump_level(&m.inner, indent + 1, out);
+            }
+        }
+    }
+}
+
+fn fmt_args(g: &Graph, id: usize, arity: usize) -> String {
+    (0..arity)
+        .map(|i| {
+            g.producer(port(id, i))
+                .map(|p| format!("n{}.{}", p.node, p.port))
+                .unwrap_or_else(|| "?".into())
+        })
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Graphviz export; buffered edges red (like the paper's diagrams), maps as
+/// dashed clusters.
+pub fn to_dot(g: &Graph, name: &str) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "digraph \"{name}\" {{");
+    let _ = writeln!(s, "  rankdir=LR; node [fontsize=10, shape=box];");
+    let mut next_cluster = 0usize;
+    dot_level(g, "r", &mut s, &mut next_cluster);
+    let _ = writeln!(s, "}}");
+    s
+}
+
+fn dot_node_name(prefix: &str, id: usize) -> String {
+    format!("\"{prefix}_n{id}\"")
+}
+
+fn dot_level(g: &Graph, prefix: &str, out: &mut String, next_cluster: &mut usize) {
+    for id in g.node_ids() {
+        let n = g.node(id);
+        let nm = dot_node_name(prefix, id);
+        match &n.kind {
+            NodeKind::Input { ty } => {
+                let _ = writeln!(
+                    out,
+                    "  {nm} [label=\"{} : {ty}\", shape=ellipse];",
+                    n.label
+                );
+            }
+            NodeKind::Output => {
+                let _ = writeln!(out, "  {nm} [label=\"{}\", shape=ellipse];", n.label);
+            }
+            NodeKind::Func(f) => {
+                let _ = writeln!(out, "  {nm} [label=\"{f}\"];");
+            }
+            NodeKind::Reduce(op) => {
+                let _ = writeln!(out, "  {nm} [label=\"({op})\", shape=circle];");
+            }
+            NodeKind::Head => {
+                let _ = writeln!(out, "  {nm} [label=\"head\"];");
+            }
+            NodeKind::Concat { dim } => {
+                let _ = writeln!(out, "  {nm} [label=\"concat {dim}\"];");
+            }
+            NodeKind::Misc { tag, .. } => {
+                let _ = writeln!(out, "  {nm} [label=\"misc:{tag}\", shape=octagon];");
+            }
+            NodeKind::Map(m) => {
+                let cid = *next_cluster;
+                *next_cluster += 1;
+                let _ = writeln!(out, "  subgraph cluster_{cid} {{");
+                let _ = writeln!(
+                    out,
+                    "    label=\"map {}\"; style=dashed; fontsize=10;",
+                    m.dim
+                );
+                let inner_prefix = format!("{prefix}_m{id}");
+                dot_level(&m.inner, &inner_prefix, out, next_cluster);
+                // anchor node so outer edges have a target
+                let _ = writeln!(
+                    out,
+                    "    {nm} [label=\"map {}\", shape=point];",
+                    m.dim
+                );
+                let _ = writeln!(out, "  }}");
+            }
+        }
+    }
+    for e in g.edges() {
+        let ty = g.out_ty(e.src);
+        let buffered = ty.is_list()
+            || g.node(e.src.node).is_io()
+            || g.node(e.dst.node).is_io();
+        let color = if buffered { "red" } else { "black" };
+        let _ = writeln!(
+            out,
+            "  {} -> {} [color={color}, label=\"{ty}\", fontsize=8];",
+            dot_node_name(prefix, e.src.node),
+            dot_node_name(prefix, e.dst.node)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+    use crate::ir::graph::{map_over, ArgMode, Graph};
+    use crate::ir::types::Ty;
+
+    fn sample() -> Graph {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o[0]);
+        g
+    }
+
+    #[test]
+    fn dump_contains_structure() {
+        let s = dump(&sample());
+        assert!(s.contains("input A"));
+        assert!(s.contains("map N"));
+        assert!(s.contains("ew(exp(x0))"));
+        assert!(s.contains("output B"));
+    }
+
+    #[test]
+    fn dot_marks_buffered_red() {
+        let d = to_dot(&sample(), "t");
+        assert!(d.contains("digraph"));
+        assert!(d.contains("color=red"));
+        assert!(d.contains("cluster_0"));
+    }
+}

@@ -1,0 +1,487 @@
+//! Symbolic scalar expressions for elementwise operators.
+//!
+//! §2.1: "An elementwise operation is any scalar function, which is applied
+//! independently to each element of a block or vector." Keeping the scalar
+//! function as a small AST (instead of an opaque closure) is what lets
+//! Rule 9 *compose* consecutive elementwise operators into one, lets the
+//! printer render the paper's listings (`t4 = exp(t3*(DD**-0.5))`), and lets
+//! the interpreter evaluate fused programs.
+//!
+//! Expressions reference their operator's inputs positionally via
+//! [`Expr::Var`] and named compile-time constants (the paper's `DD`, `KK`)
+//! via [`Expr::Param`].
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum UnOp {
+    Neg,
+    Exp,
+    Log,
+    Sqrt,
+    Recip,
+    Abs,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Max,
+    Min,
+}
+
+/// A scalar expression over positional inputs `Var(0..arity)`.
+#[derive(Clone, PartialEq, Debug)]
+pub enum Expr {
+    /// The i-th input of the elementwise operator.
+    Var(usize),
+    /// A literal constant.
+    Const(f64),
+    /// A named program parameter (e.g. `DD` = model width, `KK` = row length).
+    Param(String),
+    Un(UnOp, Box<Expr>),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn var(i: usize) -> Expr {
+        Expr::Var(i)
+    }
+    pub fn cst(v: f64) -> Expr {
+        Expr::Const(v)
+    }
+    pub fn param(name: &str) -> Expr {
+        Expr::Param(name.to_string())
+    }
+
+    pub fn neg(self) -> Expr {
+        Expr::Un(UnOp::Neg, Box::new(self))
+    }
+    pub fn exp(self) -> Expr {
+        Expr::Un(UnOp::Exp, Box::new(self))
+    }
+    pub fn log(self) -> Expr {
+        Expr::Un(UnOp::Log, Box::new(self))
+    }
+    pub fn sqrt(self) -> Expr {
+        Expr::Un(UnOp::Sqrt, Box::new(self))
+    }
+    pub fn recip(self) -> Expr {
+        Expr::Un(UnOp::Recip, Box::new(self))
+    }
+    pub fn abs(self) -> Expr {
+        Expr::Un(UnOp::Abs, Box::new(self))
+    }
+
+    pub fn add(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Add, Box::new(self), Box::new(o))
+    }
+    pub fn sub(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Sub, Box::new(self), Box::new(o))
+    }
+    pub fn mul(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Mul, Box::new(self), Box::new(o))
+    }
+    pub fn div(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Div, Box::new(self), Box::new(o))
+    }
+    pub fn pow(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Pow, Box::new(self), Box::new(o))
+    }
+    pub fn max(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Max, Box::new(self), Box::new(o))
+    }
+    pub fn min(self, o: Expr) -> Expr {
+        Expr::Bin(BinOp::Min, Box::new(self), Box::new(o))
+    }
+
+    /// `x / (1 + exp(-x))` — Swish/SiLU, used by FFN-SwiGLU.
+    pub fn swish(x: Expr) -> Expr {
+        x.clone().div(Expr::cst(1.0).add(x.neg().exp()))
+    }
+
+    /// `max(x, 0)` — ReLU, used by the §1 motivating example.
+    pub fn relu(x: Expr) -> Expr {
+        x.max(Expr::cst(0.0))
+    }
+
+    /// Highest input index referenced, plus one (0 if no inputs referenced).
+    pub fn arity(&self) -> usize {
+        match self {
+            Expr::Var(i) => i + 1,
+            Expr::Const(_) | Expr::Param(_) => 0,
+            Expr::Un(_, a) => a.arity(),
+            Expr::Bin(_, a, b) => a.arity().max(b.arity()),
+        }
+    }
+
+    /// Substitute each `Var(i)` with `subs[i]` (used by Rule 9 composition).
+    pub fn substitute(&self, subs: &[Expr]) -> Expr {
+        match self {
+            Expr::Var(i) => subs
+                .get(*i)
+                .cloned()
+                .unwrap_or_else(|| panic!("Expr::substitute: no substitution for Var({i})")),
+            Expr::Const(c) => Expr::Const(*c),
+            Expr::Param(p) => Expr::Param(p.clone()),
+            Expr::Un(op, a) => Expr::Un(*op, Box::new(a.substitute(subs))),
+            Expr::Bin(op, a, b) => Expr::Bin(
+                *op,
+                Box::new(a.substitute(subs)),
+                Box::new(b.substitute(subs)),
+            ),
+        }
+    }
+
+    /// Shift every `Var(i)` by `offset` (used when merging input lists).
+    pub fn shift_vars(&self, offset: usize) -> Expr {
+        match self {
+            Expr::Var(i) => Expr::Var(i + offset),
+            Expr::Const(c) => Expr::Const(*c),
+            Expr::Param(p) => Expr::Param(p.clone()),
+            Expr::Un(op, a) => Expr::Un(*op, Box::new(a.shift_vars(offset))),
+            Expr::Bin(op, a, b) => Expr::Bin(
+                *op,
+                Box::new(a.shift_vars(offset)),
+                Box::new(b.shift_vars(offset)),
+            ),
+        }
+    }
+
+    /// Remap variable indices through `map` (used to dedupe merged inputs).
+    pub fn remap_vars(&self, map: &[usize]) -> Expr {
+        match self {
+            Expr::Var(i) => Expr::Var(map[*i]),
+            Expr::Const(c) => Expr::Const(*c),
+            Expr::Param(p) => Expr::Param(p.clone()),
+            Expr::Un(op, a) => Expr::Un(*op, Box::new(a.remap_vars(map))),
+            Expr::Bin(op, a, b) => {
+                Expr::Bin(*op, Box::new(a.remap_vars(map)), Box::new(b.remap_vars(map)))
+            }
+        }
+    }
+
+    /// Evaluate with concrete input values and parameter environment.
+    pub fn eval(&self, args: &[f32], params: &BTreeMap<String, f32>) -> f32 {
+        match self {
+            Expr::Var(i) => args[*i],
+            Expr::Const(c) => *c as f32,
+            Expr::Param(p) => *params
+                .get(p)
+                .unwrap_or_else(|| panic!("Expr::eval: missing parameter {p}")),
+            Expr::Un(op, a) => {
+                let x = a.eval(args, params);
+                match op {
+                    UnOp::Neg => -x,
+                    UnOp::Exp => x.exp(),
+                    UnOp::Log => x.ln(),
+                    UnOp::Sqrt => x.sqrt(),
+                    UnOp::Recip => 1.0 / x,
+                    UnOp::Abs => x.abs(),
+                }
+            }
+            Expr::Bin(op, a, b) => {
+                let x = a.eval(args, params);
+                let y = b.eval(args, params);
+                match op {
+                    BinOp::Add => x + y,
+                    BinOp::Sub => x - y,
+                    BinOp::Mul => x * y,
+                    BinOp::Div => x / y,
+                    BinOp::Pow => x.powf(y),
+                    BinOp::Max => x.max(y),
+                    BinOp::Min => x.min(y),
+                }
+            }
+        }
+    }
+
+    /// All parameter names referenced by the expression.
+    pub fn params(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Param(p) => {
+                if !out.contains(p) {
+                    out.push(p.clone());
+                }
+            }
+            Expr::Un(_, a) => a.params(out),
+            Expr::Bin(_, a, b) => {
+                a.params(out);
+                b.params(out);
+            }
+            _ => {}
+        }
+    }
+
+    /// Render with the given argument names, paper style:
+    /// `exp(t3*(DD**-0.5))`, `t10/(1+exp(-t10))`.
+    pub fn render(&self, args: &[String]) -> String {
+        self.render_prec(args, 0)
+    }
+
+    fn render_prec(&self, args: &[String], parent: u8) -> String {
+        // precedence: 1 add/sub/min/max, 2 mul/div, 3 pow, 4 unary/atom
+        let (s, prec) = match self {
+            Expr::Var(i) => (
+                args.get(*i)
+                    .cloned()
+                    .unwrap_or_else(|| format!("arg{i}")),
+                4,
+            ),
+            Expr::Const(c) => {
+                let s = if *c == c.trunc() && c.abs() < 1e9 {
+                    format!("{}", *c as i64)
+                } else {
+                    format!("{c}")
+                };
+                (s, if *c < 0.0 { 3 } else { 4 })
+            }
+            Expr::Param(p) => (p.clone(), 4),
+            Expr::Un(op, a) => match op {
+                UnOp::Neg => (format!("-{}", a.render_prec(args, 3)), 2),
+                UnOp::Exp => (format!("exp({})", a.render_prec(args, 0)), 4),
+                UnOp::Log => (format!("log({})", a.render_prec(args, 0)), 4),
+                UnOp::Sqrt => (format!("sqrt({})", a.render_prec(args, 0)), 4),
+                UnOp::Recip => (format!("1/{}", a.render_prec(args, 3)), 2),
+                UnOp::Abs => (format!("abs({})", a.render_prec(args, 0)), 4),
+            },
+            Expr::Bin(op, a, b) => match op {
+                BinOp::Add => (
+                    format!("{}+{}", a.render_prec(args, 1), b.render_prec(args, 1)),
+                    1,
+                ),
+                BinOp::Sub => (
+                    format!("{}-{}", a.render_prec(args, 1), b.render_prec(args, 2)),
+                    1,
+                ),
+                BinOp::Mul => (
+                    format!("{}*{}", a.render_prec(args, 2), b.render_prec(args, 2)),
+                    2,
+                ),
+                BinOp::Div => (
+                    format!("{}/{}", a.render_prec(args, 2), b.render_prec(args, 3)),
+                    2,
+                ),
+                BinOp::Pow => (
+                    format!("{}**{}", a.render_prec(args, 4), b.render_prec(args, 4)),
+                    3,
+                ),
+                BinOp::Max => (
+                    format!(
+                        "max({},{})",
+                        a.render_prec(args, 0),
+                        b.render_prec(args, 0)
+                    ),
+                    4,
+                ),
+                BinOp::Min => (
+                    format!(
+                        "min({},{})",
+                        a.render_prec(args, 0),
+                        b.render_prec(args, 0)
+                    ),
+                    4,
+                ),
+            },
+        };
+        if prec < parent {
+            format!("({s})")
+        } else {
+            s
+        }
+    }
+}
+
+/// A flattened, parameter-resolved form of an [`Expr`] for the hot
+/// evaluation path: postfix ops over a small stack, no recursion, no
+/// per-element allocation, no parameter lookups.
+#[derive(Clone, Debug)]
+pub struct CompiledExpr {
+    tape: Vec<TapeOp>,
+    pub max_stack: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum TapeOp {
+    PushVar(usize),
+    PushConst(f32),
+    Un(UnOp),
+    Bin(BinOp),
+}
+
+impl Expr {
+    /// Flatten to a postfix tape, resolving named parameters now.
+    pub fn compile(&self, params: &BTreeMap<String, f32>) -> CompiledExpr {
+        fn rec(e: &Expr, params: &BTreeMap<String, f32>, tape: &mut Vec<TapeOp>) {
+            match e {
+                Expr::Var(i) => tape.push(TapeOp::PushVar(*i)),
+                Expr::Const(c) => tape.push(TapeOp::PushConst(*c as f32)),
+                Expr::Param(p) => tape.push(TapeOp::PushConst(
+                    *params
+                        .get(p)
+                        .unwrap_or_else(|| panic!("compile: missing parameter {p}")),
+                )),
+                Expr::Un(op, a) => {
+                    rec(a, params, tape);
+                    tape.push(TapeOp::Un(*op));
+                }
+                Expr::Bin(op, a, b) => {
+                    rec(a, params, tape);
+                    rec(b, params, tape);
+                    tape.push(TapeOp::Bin(*op));
+                }
+            }
+        }
+        let mut tape = Vec::new();
+        rec(self, params, &mut tape);
+        let mut depth = 0usize;
+        let mut max = 0usize;
+        for op in &tape {
+            match op {
+                TapeOp::PushVar(_) | TapeOp::PushConst(_) => depth += 1,
+                TapeOp::Un(_) => {}
+                TapeOp::Bin(_) => depth -= 1,
+            }
+            max = max.max(depth);
+        }
+        CompiledExpr { tape, max_stack: max }
+    }
+}
+
+impl CompiledExpr {
+    /// Evaluate on the given argument values; `stack` is caller-provided
+    /// scratch (cleared here) to keep the per-element path allocation-free.
+    #[inline]
+    pub fn eval_with(&self, args: &[f32], stack: &mut Vec<f32>) -> f32 {
+        stack.clear();
+        for op in &self.tape {
+            match op {
+                TapeOp::PushVar(i) => stack.push(args[*i]),
+                TapeOp::PushConst(c) => stack.push(*c),
+                TapeOp::Un(u) => {
+                    let x = stack.last_mut().unwrap();
+                    *x = match u {
+                        UnOp::Neg => -*x,
+                        UnOp::Exp => x.exp(),
+                        UnOp::Log => x.ln(),
+                        UnOp::Sqrt => x.sqrt(),
+                        UnOp::Recip => 1.0 / *x,
+                        UnOp::Abs => x.abs(),
+                    };
+                }
+                TapeOp::Bin(b) => {
+                    let y = stack.pop().unwrap();
+                    let x = stack.last_mut().unwrap();
+                    *x = match b {
+                        BinOp::Add => *x + y,
+                        BinOp::Sub => *x - y,
+                        BinOp::Mul => *x * y,
+                        BinOp::Div => *x / y,
+                        BinOp::Pow => x.powf(y),
+                        BinOp::Max => x.max(y),
+                        BinOp::Min => x.min(y),
+                    };
+                }
+            }
+        }
+        stack[0]
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let names: Vec<String> = (0..self.arity()).map(|i| format!("x{i}")).collect();
+        f.write_str(&self.render(&names))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_params() -> BTreeMap<String, f32> {
+        BTreeMap::new()
+    }
+
+    #[test]
+    fn eval_basic() {
+        // (x - s)/d with s=1, d=2
+        let e = Expr::var(0).sub(Expr::cst(1.0)).div(Expr::cst(2.0));
+        assert_eq!(e.eval(&[5.0], &no_params()), 2.0);
+    }
+
+    #[test]
+    fn eval_param() {
+        let e = Expr::var(0).mul(Expr::param("DD").pow(Expr::cst(-0.5)));
+        let mut p = BTreeMap::new();
+        p.insert("DD".to_string(), 4.0);
+        assert_eq!(e.eval(&[6.0], &p), 3.0);
+    }
+
+    #[test]
+    fn swish_matches_formula() {
+        let e = Expr::swish(Expr::var(0));
+        let x = 1.3_f32;
+        let want = x / (1.0 + (-x).exp());
+        assert!((e.eval(&[x], &no_params()) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let e = Expr::relu(Expr::var(0));
+        assert_eq!(e.eval(&[-3.0], &no_params()), 0.0);
+        assert_eq!(e.eval(&[3.0], &no_params()), 3.0);
+    }
+
+    #[test]
+    fn substitute_composes() {
+        // g(y) = exp(y); f(x) = x*2 ; g∘f = exp(x*2)
+        let g = Expr::var(0).exp();
+        let f = Expr::var(0).mul(Expr::cst(2.0));
+        let gf = g.substitute(&[f]);
+        assert!((gf.eval(&[1.0], &no_params()) - 2.0_f32.exp()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn arity_counts_max_var() {
+        let e = Expr::var(2).add(Expr::var(0));
+        assert_eq!(e.arity(), 3);
+    }
+
+    #[test]
+    fn render_paper_style() {
+        let e = Expr::var(0).mul(Expr::param("DD").pow(Expr::cst(-0.5))).exp();
+        assert_eq!(e.render(&["t3".into()]), "exp(t3*DD**(-0.5))");
+        let sw = Expr::swish(Expr::var(0));
+        assert_eq!(sw.render(&["t10".into()]), "t10/(1+exp(-t10))");
+        let r = Expr::var(0).recip();
+        assert_eq!(r.render(&["t5".into()]), "1/t5");
+    }
+
+    #[test]
+    fn render_layernorm_std() {
+        // (s2/KK - mu**2)**(-0.5)
+        let e = Expr::var(0)
+            .div(Expr::param("KK"))
+            .sub(Expr::var(1).pow(Expr::cst(2.0)))
+            .pow(Expr::cst(-0.5));
+        assert_eq!(
+            e.render(&["t13".into(), "t5".into()]),
+            "(t13/KK-t5**2)**(-0.5)"
+        );
+    }
+
+    #[test]
+    fn shift_and_remap() {
+        let e = Expr::var(0).add(Expr::var(1));
+        let s = e.shift_vars(2);
+        assert_eq!(s.arity(), 4);
+        let r = s.remap_vars(&[9, 9, 0, 0]);
+        assert_eq!(r.arity(), 1);
+    }
+}

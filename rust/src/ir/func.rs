@@ -1,0 +1,188 @@
+//! Functional operators — the paper's Table 1.
+//!
+//! Functional operators are stateless functions whose inputs and outputs are
+//! blocks, vectors, or scalars in local memory. Each carries a set of shape
+//! constraints (checked at execution time by `tensor`/`exec`) and an item
+//! typing rule (checked structurally by `ir::validate`).
+//!
+//! One deliberate deviation from the paper's Table 1, documented in
+//! DESIGN.md: the table's numpy line for `row_sum` (`sum(a, axis=0)`)
+//! contradicts the constraint its own examples need. Examples 2 and 3 feed
+//! `row_sum` outputs into `row_scale`/`row_shift` (which require a vector of
+//! length `a.shape[0]` — one entry per *row*), so `row_sum` here sums each
+//! row: `r = sum(a, axis=1)`, `r.size == a.shape[0]`.
+
+use super::expr::Expr;
+use super::types::Item;
+use std::fmt;
+
+/// Reduction operation for reduction operators and reduced map outputs.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum ReduceOp {
+    /// Elementwise addition (the circled-plus of the paper).
+    Add,
+    /// Elementwise maximum (used by the numerical-safety pass).
+    Max,
+}
+
+impl fmt::Display for ReduceOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReduceOp::Add => f.write_str("+"),
+            ReduceOp::Max => f.write_str("max"),
+        }
+    }
+}
+
+/// A functional (block-level) operator.
+#[derive(Clone, PartialEq, Debug)]
+pub enum FuncOp {
+    /// `r = a + b` — blocks or vectors of identical shape.
+    Add,
+    /// `r = a * b` — elementwise (Hadamard) product, identical shapes.
+    Mul,
+    /// `r = a + c[:,newaxis]` — add a value to each row of a block.
+    RowShift,
+    /// `r = a * c[:,newaxis]` — scale each row of a block.
+    RowScale,
+    /// `r[i] = sum_j a[i,j]` — sum the values in each row of a block.
+    RowSum,
+    /// `r = a @ b.T` — multiply a block with the transpose of another block.
+    Dot,
+    /// `r = outer(a, b)` — outer product of two vectors.
+    Outer,
+    /// An n-ary elementwise scalar function applied pointwise; all inputs
+    /// share one item type, which is also the output type.
+    Ew(Expr),
+}
+
+impl FuncOp {
+    pub fn ew(expr: Expr) -> FuncOp {
+        FuncOp::Ew(expr)
+    }
+
+    /// Number of input ports.
+    pub fn arity(&self) -> usize {
+        match self {
+            FuncOp::Add | FuncOp::Mul | FuncOp::RowShift | FuncOp::RowScale => 2,
+            FuncOp::RowSum => 1,
+            FuncOp::Dot | FuncOp::Outer => 2,
+            FuncOp::Ew(e) => e.arity(),
+        }
+    }
+
+    /// Output item type given input item types; `None` if the inputs violate
+    /// the operator's typing rule.
+    pub fn out_item(&self, ins: &[Item]) -> Option<Item> {
+        use Item::*;
+        match self {
+            FuncOp::Add | FuncOp::Mul => match ins {
+                [a, b] if a == b && *a != Scalar => Some(*a),
+                [Scalar, Scalar] => Some(Scalar),
+                _ => None,
+            },
+            FuncOp::RowShift | FuncOp::RowScale => match ins {
+                [Block, Vector] => Some(Block),
+                _ => None,
+            },
+            FuncOp::RowSum => match ins {
+                [Block] => Some(Vector),
+                _ => None,
+            },
+            FuncOp::Dot => match ins {
+                [Block, Block] => Some(Block),
+                _ => None,
+            },
+            FuncOp::Outer => match ins {
+                [Vector, Vector] => Some(Block),
+                _ => None,
+            },
+            FuncOp::Ew(e) => {
+                if ins.len() != e.arity().max(1).min(ins.len().max(1)) && ins.len() != e.arity() {
+                    return None;
+                }
+                let first = *ins.first()?;
+                if ins.iter().all(|i| *i == first) {
+                    Some(first)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Is this an elementwise operator (Rule 9 candidate)?
+    pub fn is_ew(&self) -> bool {
+        matches!(self, FuncOp::Ew(_))
+    }
+
+    /// Short operator name for diagrams and listings.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FuncOp::Add => "add",
+            FuncOp::Mul => "mul",
+            FuncOp::RowShift => "row_shift",
+            FuncOp::RowScale => "row_scale",
+            FuncOp::RowSum => "row_sum",
+            FuncOp::Dot => "dot",
+            FuncOp::Outer => "outer",
+            FuncOp::Ew(_) => "ew",
+        }
+    }
+}
+
+impl fmt::Display for FuncOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FuncOp::Ew(e) => write!(f, "ew({e})"),
+            other => f.write_str(other.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use Item::*;
+
+    #[test]
+    fn arities() {
+        assert_eq!(FuncOp::Add.arity(), 2);
+        assert_eq!(FuncOp::RowSum.arity(), 1);
+        assert_eq!(FuncOp::ew(Expr::var(0).exp()).arity(), 1);
+        assert_eq!(
+            FuncOp::ew(Expr::var(0).add(Expr::var(1))).arity(),
+            2
+        );
+    }
+
+    #[test]
+    fn typing_rules() {
+        assert_eq!(FuncOp::Add.out_item(&[Block, Block]), Some(Block));
+        assert_eq!(FuncOp::Add.out_item(&[Block, Vector]), None);
+        assert_eq!(FuncOp::RowScale.out_item(&[Block, Vector]), Some(Block));
+        assert_eq!(FuncOp::RowScale.out_item(&[Vector, Block]), None);
+        assert_eq!(FuncOp::RowSum.out_item(&[Block]), Some(Vector));
+        assert_eq!(FuncOp::Dot.out_item(&[Block, Block]), Some(Block));
+        assert_eq!(FuncOp::Outer.out_item(&[Vector, Vector]), Some(Block));
+        let e = FuncOp::ew(Expr::var(0).exp());
+        assert_eq!(e.out_item(&[Vector]), Some(Vector));
+        assert_eq!(e.out_item(&[Scalar]), Some(Scalar));
+    }
+
+    #[test]
+    fn ew_mixed_items_rejected() {
+        let e = FuncOp::ew(Expr::var(0).add(Expr::var(1)));
+        assert_eq!(e.out_item(&[Block, Vector]), None);
+        assert_eq!(e.out_item(&[Vector, Vector]), Some(Vector));
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(FuncOp::Dot.to_string(), "dot");
+        assert_eq!(
+            FuncOp::ew(Expr::var(0).exp()).to_string(),
+            "ew(exp(x0))"
+        );
+    }
+}

@@ -1,0 +1,905 @@
+//! The block program graph — the paper's §2 representation.
+//!
+//! A block program is a *hierarchical* DAG: map operator nodes contain inner
+//! block-program graphs. Nodes are stored in an arena with tombstones so
+//! `NodeId`s stay stable under rule rewrites; edges connect output *ports*
+//! to input *ports* (one producer per input port, arbitrary fan-out per
+//! output port).
+//!
+//! Buffering is *derived*, not stored: an edge is buffered iff its value
+//! type is a list, or it is incident to a program input/output node (§2.1).
+
+use super::dim::Dim;
+use super::func::{FuncOp, ReduceOp};
+use super::types::{Item, Ty};
+use std::collections::{HashMap, HashSet, VecDeque};
+
+pub type NodeId = usize;
+
+/// One endpoint of an edge: output port `(node, port)` or input port
+/// `(node, port)` depending on context.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct Port {
+    pub node: NodeId,
+    pub port: usize,
+}
+
+pub fn port(node: NodeId, port_ix: usize) -> Port {
+    Port {
+        node,
+        port: port_ix,
+    }
+}
+
+/// A directed edge from a producer output port to a consumer input port.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Edge {
+    pub src: Port,
+    pub dst: Port,
+}
+
+/// How a map consumes one of its inputs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ArgMode {
+    /// The input is a list indexed by the map's dimension; each iteration
+    /// sees one element (the first occurrence of the dim is stripped).
+    Mapped,
+    /// The input is passed to every iteration unchanged.
+    Bcast,
+}
+
+/// How a map produces one of its outputs.
+#[derive(Clone, PartialEq, Debug)]
+pub enum OutMode {
+    /// Iteration results are collected into a list over the map dimension.
+    Collect,
+    /// Iteration results are reduced on the fly (the result of Rule 3);
+    /// lowers to a serial loop with an accumulator.
+    Reduce(ReduceOp),
+}
+
+/// One input port of a map node.
+#[derive(Clone, Debug)]
+pub struct MapIn {
+    /// The inner graph's `Input` node this port binds to.
+    pub inner_input: NodeId,
+    pub mode: ArgMode,
+}
+
+/// One output port of a map node.
+#[derive(Clone, Debug)]
+pub struct MapOut {
+    /// The inner graph's `Output` node this port binds to.
+    pub inner_output: NodeId,
+    pub mode: OutMode,
+}
+
+/// A map operator: an embarrassingly parallel loop over `dim` whose body is
+/// `inner`. (§2.1 "Map operators".)
+#[derive(Clone, Debug)]
+pub struct MapNode {
+    pub dim: Dim,
+    pub inner: Graph,
+    pub inputs: Vec<MapIn>,
+    pub outputs: Vec<MapOut>,
+    /// Rule 7: iterate `1..X` instead of `0..X` (the first iteration was
+    /// peeled off).
+    pub skip_first: bool,
+}
+
+impl MapNode {
+    /// True if any output is reduced (lowers to a serial loop).
+    pub fn has_reduction(&self) -> bool {
+        self.outputs
+            .iter()
+            .any(|o| matches!(o.mode, OutMode::Reduce(_)))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum NodeKind {
+    /// A program (or inner-graph) input. Top-level inputs reside in global
+    /// memory; inner inputs are the map's per-iteration bindings.
+    Input { ty: Ty },
+    /// A program (or inner-graph) output; one input port.
+    Output,
+    /// A functional operator (Table 1); `arity` input ports, one output.
+    Func(FuncOp),
+    /// A map operator with an inner graph.
+    Map(Box<MapNode>),
+    /// A reduction operator: consumes a single-level list `[d]item`,
+    /// produces the item-typed reduction over `d`.
+    Reduce(ReduceOp),
+    /// Rule 7 support: first element of a list (`[d]item -> item`).
+    Head,
+    /// Rule 7 support: prepend an item to a list over `dim`.
+    Concat { dim: Dim },
+    /// Anything the block-program vocabulary cannot express (§2.1
+    /// "Miscellaneous operators"); opaque to every rule.
+    Misc {
+        tag: String,
+        in_tys: Vec<Ty>,
+        out_tys: Vec<Ty>,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    /// Human-readable label; meaningful for inputs/outputs (`Q`, `KT`, `O`),
+    /// best-effort elsewhere.
+    pub label: String,
+}
+
+impl Node {
+    pub fn in_arity(&self) -> usize {
+        match &self.kind {
+            NodeKind::Input { .. } => 0,
+            NodeKind::Output => 1,
+            NodeKind::Func(f) => f.arity(),
+            NodeKind::Map(m) => m.inputs.len(),
+            NodeKind::Reduce(_) | NodeKind::Head => 1,
+            NodeKind::Concat { .. } => 2,
+            NodeKind::Misc { in_tys, .. } => in_tys.len(),
+        }
+    }
+
+    pub fn out_arity(&self) -> usize {
+        match &self.kind {
+            NodeKind::Input { .. } => 1,
+            NodeKind::Output => 0,
+            NodeKind::Func(_) | NodeKind::Reduce(_) | NodeKind::Head | NodeKind::Concat { .. } => 1,
+            NodeKind::Map(m) => m.outputs.len(),
+            NodeKind::Misc { out_tys, .. } => out_tys.len(),
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&MapNode> {
+        match &self.kind {
+            NodeKind::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_map_mut(&mut self) -> Option<&mut MapNode> {
+        match &mut self.kind {
+            NodeKind::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn is_io(&self) -> bool {
+        matches!(self.kind, NodeKind::Input { .. } | NodeKind::Output)
+    }
+}
+
+/// A block program graph (one level of the hierarchy).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    nodes: Vec<Option<Node>>,
+    edges: Vec<Edge>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph::default()
+    }
+
+    // ---- construction ----------------------------------------------------
+
+    pub fn add_node(&mut self, kind: NodeKind, label: impl Into<String>) -> NodeId {
+        self.nodes.push(Some(Node {
+            kind,
+            label: label.into(),
+        }));
+        self.nodes.len() - 1
+    }
+
+    /// Add a program input of the given type; returns its output port.
+    pub fn input(&mut self, label: impl Into<String>, ty: Ty) -> Port {
+        let id = self.add_node(NodeKind::Input { ty }, label);
+        port(id, 0)
+    }
+
+    /// Add a program output consuming `src`.
+    pub fn output(&mut self, label: impl Into<String>, src: Port) -> NodeId {
+        let id = self.add_node(NodeKind::Output, label);
+        self.connect(src, port(id, 0));
+        id
+    }
+
+    /// Add a functional operator; returns its output port.
+    pub fn func(&mut self, op: FuncOp, args: &[Port]) -> Port {
+        assert_eq!(
+            op.arity(),
+            args.len(),
+            "func {op}: arity {} but {} args given",
+            op.arity(),
+            args.len()
+        );
+        let label = op.name().to_string();
+        let id = self.add_node(NodeKind::Func(op), label);
+        for (i, a) in args.iter().enumerate() {
+            self.connect(*a, port(id, i));
+        }
+        port(id, 0)
+    }
+
+    /// Unary elementwise convenience.
+    pub fn ew1(&mut self, expr: super::expr::Expr, a: Port) -> Port {
+        self.func(FuncOp::Ew(expr), &[a])
+    }
+
+    /// Binary elementwise convenience.
+    pub fn ew2(&mut self, expr: super::expr::Expr, a: Port, b: Port) -> Port {
+        self.func(FuncOp::Ew(expr), &[a, b])
+    }
+
+    /// Add a reduction operator over the outermost list level of `src`.
+    pub fn reduce(&mut self, op: ReduceOp, src: Port) -> Port {
+        let id = self.add_node(NodeKind::Reduce(op), format!("reduce{op}"));
+        self.connect(src, port(id, 0));
+        port(id, 0)
+    }
+
+    /// Connect producer output port `src` to consumer input port `dst`,
+    /// replacing any existing producer of `dst`.
+    pub fn connect(&mut self, src: Port, dst: Port) {
+        self.edges.retain(|e| e.dst != dst);
+        self.edges.push(Edge { src, dst });
+    }
+
+    /// Remove the edge into `dst`, if any.
+    pub fn disconnect(&mut self, dst: Port) {
+        self.edges.retain(|e| e.dst != dst);
+    }
+
+    /// Remove a node and all incident edges.
+    pub fn remove_node(&mut self, id: NodeId) {
+        self.edges.retain(|e| e.src.node != id && e.dst.node != id);
+        self.nodes[id] = None;
+    }
+
+    // ---- access -----------------------------------------------------------
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        self.nodes[id]
+            .as_ref()
+            .unwrap_or_else(|| panic!("node {id} was removed"))
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        self.nodes[id]
+            .as_mut()
+            .unwrap_or_else(|| panic!("node {id} was removed"))
+    }
+
+    pub fn try_node(&self, id: NodeId) -> Option<&Node> {
+        self.nodes.get(id).and_then(|n| n.as_ref())
+    }
+
+    pub fn contains(&self, id: NodeId) -> bool {
+        self.nodes.get(id).is_some_and(|n| n.is_some())
+    }
+
+    /// Iterate live node ids in id order.
+    pub fn node_ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| n.as_ref().map(|_| i))
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// The producer output port feeding input port `dst`, if connected.
+    pub fn producer(&self, dst: Port) -> Option<Port> {
+        self.edges.iter().find(|e| e.dst == dst).map(|e| e.src)
+    }
+
+    /// All consumer input ports fed by output port `src`.
+    pub fn consumers(&self, src: Port) -> Vec<Port> {
+        let mut v: Vec<Port> = self
+            .edges
+            .iter()
+            .filter(|e| e.src == src)
+            .map(|e| e.dst)
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// All consumer input ports fed by any output port of `node`.
+    pub fn node_consumers(&self, node: NodeId) -> Vec<Port> {
+        let mut v: Vec<Port> = self
+            .edges
+            .iter()
+            .filter(|e| e.src.node == node)
+            .map(|e| e.dst)
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Rewire every consumer of `from` to consume `to` instead.
+    pub fn rewire_consumers(&mut self, from: Port, to: Port) {
+        for e in &mut self.edges {
+            if e.src == from {
+                e.src = to;
+            }
+        }
+    }
+
+    pub fn input_ids(&self) -> Vec<NodeId> {
+        self.node_ids()
+            .filter(|&i| matches!(self.node(i).kind, NodeKind::Input { .. }))
+            .collect()
+    }
+
+    pub fn output_ids(&self) -> Vec<NodeId> {
+        self.node_ids()
+            .filter(|&i| matches!(self.node(i).kind, NodeKind::Output))
+            .collect()
+    }
+
+    /// Find an input node by label (top-level program inputs are named).
+    pub fn input_by_label(&self, label: &str) -> Option<Port> {
+        self.input_ids()
+            .into_iter()
+            .find(|&i| self.node(i).label == label)
+            .map(|i| port(i, 0))
+    }
+
+    // ---- typing -----------------------------------------------------------
+
+    /// The type of the value on output port `p` (recursive inference).
+    pub fn out_ty(&self, p: Port) -> Ty {
+        let n = self.node(p.node);
+        match &n.kind {
+            NodeKind::Input { ty } => ty.clone(),
+            NodeKind::Output => panic!("out_ty of an Output node"),
+            NodeKind::Func(f) => {
+                let ins: Vec<Item> = (0..f.arity())
+                    .map(|i| {
+                        let src = self
+                            .producer(port(p.node, i))
+                            .unwrap_or_else(|| panic!("func {} input {i} unconnected", n.label));
+                        let t = self.out_ty(src);
+                        assert!(
+                            !t.is_list(),
+                            "func {} input {i} has list type {t}",
+                            n.label
+                        );
+                        t.item
+                    })
+                    .collect();
+                let item = f.out_item(&ins).unwrap_or_else(|| {
+                    panic!("func {} type error with inputs {ins:?}", n.label)
+                });
+                Ty::item(item)
+            }
+            NodeKind::Map(m) => {
+                let out = &m.outputs[p.port];
+                let inner_out = m.inner.node(out.inner_output);
+                assert!(matches!(inner_out.kind, NodeKind::Output));
+                let src = m
+                    .inner
+                    .producer(port(out.inner_output, 0))
+                    .expect("map inner output unconnected");
+                let t = m.inner.out_ty(src);
+                match &out.mode {
+                    OutMode::Collect => t.collect(&m.dim),
+                    OutMode::Reduce(_) => t,
+                }
+            }
+            NodeKind::Reduce(_) => {
+                let src = self.producer(port(p.node, 0)).expect("reduce unconnected");
+                self.out_ty(src).reduce()
+            }
+            NodeKind::Head => {
+                let src = self.producer(port(p.node, 0)).expect("head unconnected");
+                self.out_ty(src).reduce()
+            }
+            NodeKind::Concat { dim } => {
+                let src = self
+                    .producer(port(p.node, 0))
+                    .expect("concat item unconnected");
+                self.out_ty(src).collect(dim)
+            }
+            NodeKind::Misc { out_tys, .. } => out_tys[p.port].clone(),
+        }
+    }
+
+    /// The declared type of input node `id`.
+    pub fn input_ty(&self, id: NodeId) -> &Ty {
+        match &self.node(id).kind {
+            NodeKind::Input { ty } => ty,
+            _ => panic!("node {id} is not an Input"),
+        }
+    }
+
+    pub fn set_input_ty(&mut self, id: NodeId, new_ty: Ty) {
+        match &mut self.node_mut(id).kind {
+            NodeKind::Input { ty } => *ty = new_ty,
+            _ => panic!("node {id} is not an Input"),
+        }
+    }
+
+    // ---- graph algorithms ---------------------------------------------------
+
+    /// Node-level adjacency: successors of `id`.
+    pub fn successors(&self, id: NodeId) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self
+            .edges
+            .iter()
+            .filter(|e| e.src.node == id)
+            .map(|e| e.dst.node)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn predecessors(&self, id: NodeId) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self
+            .edges
+            .iter()
+            .filter(|e| e.dst.node == id)
+            .map(|e| e.src.node)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Is `to` reachable from `from` (following edges forward)? `from == to`
+    /// counts as reachable only via a real path (cycle).
+    pub fn reaches(&self, from: NodeId, to: NodeId) -> bool {
+        self.reaches_excluding(from, to, &[])
+    }
+
+    /// Reachability ignoring the given direct edges (for Rule 1's "no
+    /// indirect path" condition).
+    pub fn reaches_excluding(&self, from: NodeId, to: NodeId, skip: &[Edge]) -> bool {
+        let mut seen = HashSet::new();
+        let mut stack = vec![from];
+        let mut first = true;
+        while let Some(n) = stack.pop() {
+            if !first && n == to {
+                return true;
+            }
+            first = false;
+            for e in &self.edges {
+                if e.src.node == n && !skip.iter().any(|s| s.src == e.src && s.dst == e.dst) {
+                    if e.dst.node == to {
+                        return true;
+                    }
+                    if seen.insert(e.dst.node) {
+                        stack.push(e.dst.node);
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Kahn topological order over live nodes. Panics on a cycle.
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let ids: Vec<NodeId> = self.node_ids().collect();
+        let mut indeg: HashMap<NodeId, usize> = ids.iter().map(|&i| (i, 0)).collect();
+        let mut seen_pairs = HashSet::new();
+        for e in &self.edges {
+            if seen_pairs.insert((e.src.node, e.dst.node)) {
+                *indeg.get_mut(&e.dst.node).unwrap() += 1;
+            }
+        }
+        let mut q: VecDeque<NodeId> = ids.iter().copied().filter(|i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(ids.len());
+        let mut done_pairs = HashSet::new();
+        while let Some(n) = q.pop_front() {
+            order.push(n);
+            for s in self.successors(n) {
+                if done_pairs.insert((n, s)) {
+                    let d = indeg.get_mut(&s).unwrap();
+                    *d -= 1;
+                    if *d == 0 {
+                        q.push_back(s);
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            order.len(),
+            ids.len(),
+            "topo_order: graph has a cycle ({} of {} nodes ordered)",
+            order.len(),
+            ids.len()
+        );
+        order
+    }
+
+    pub fn is_acyclic(&self) -> bool {
+        let ids: Vec<NodeId> = self.node_ids().collect();
+        let mut indeg: HashMap<NodeId, usize> = ids.iter().map(|&i| (i, 0)).collect();
+        let mut seen_pairs = HashSet::new();
+        for e in &self.edges {
+            if seen_pairs.insert((e.src.node, e.dst.node)) {
+                *indeg.get_mut(&e.dst.node).unwrap() += 1;
+            }
+        }
+        let mut q: VecDeque<NodeId> = ids.iter().copied().filter(|i| indeg[i] == 0).collect();
+        let mut count = 0;
+        let mut done_pairs = HashSet::new();
+        while let Some(n) = q.pop_front() {
+            count += 1;
+            for s in self.successors(n) {
+                if done_pairs.insert((n, s)) {
+                    let d = indeg.get_mut(&s).unwrap();
+                    *d -= 1;
+                    if *d == 0 {
+                        q.push_back(s);
+                    }
+                }
+            }
+        }
+        count == ids.len()
+    }
+
+    /// Copy all nodes and edges of `other` into `self`; returns the id
+    /// remapping (old id -> new id). Tombstone slots are preserved so edge
+    /// ports remap by offset.
+    pub fn absorb(&mut self, other: Graph) -> HashMap<NodeId, NodeId> {
+        let offset = self.nodes.len();
+        let mut remap = HashMap::new();
+        for (i, n) in other.nodes.into_iter().enumerate() {
+            if n.is_some() {
+                remap.insert(i, offset + i);
+            }
+            self.nodes.push(n);
+        }
+        for e in other.edges {
+            self.edges.push(Edge {
+                src: port(remap[&e.src.node], e.src.port),
+                dst: port(remap[&e.dst.node], e.dst.port),
+            });
+        }
+        remap
+    }
+
+    /// All buffered edges at this level: list-typed values or edges incident
+    /// to this graph's Input/Output nodes (§2.1). Returns (edge, type).
+    pub fn buffered_edges(&self) -> Vec<(Edge, Ty)> {
+        self.edges
+            .iter()
+            .filter_map(|e| {
+                let ty = self.out_ty(e.src);
+                let io = self.node(e.src.node).is_io() || self.node(e.dst.node).is_io();
+                if ty.is_list() || io {
+                    Some((*e, ty))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Buffered edges that are *interior*: not incident to Input/Output
+    /// nodes at this level. Fully fused programs have none, at any level
+    /// (the paper's termination criterion: "The only remaining buffered
+    /// edges are those that are incident with input or output nodes").
+    pub fn interior_buffered_edges(&self) -> Vec<(Edge, Ty)> {
+        self.edges
+            .iter()
+            .filter_map(|e| {
+                if self.node(e.src.node).is_io() || self.node(e.dst.node).is_io() {
+                    return None;
+                }
+                let ty = self.out_ty(e.src);
+                if ty.is_list() {
+                    Some((*e, ty))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Count interior buffered edges recursively through the hierarchy.
+    pub fn interior_buffered_count_recursive(&self) -> usize {
+        let mut n = self.interior_buffered_edges().len();
+        for id in self.node_ids() {
+            if let Some(m) = self.node(id).as_map() {
+                n += m.inner.interior_buffered_count_recursive();
+            }
+        }
+        n
+    }
+
+    /// Total node count recursively through the hierarchy.
+    pub fn node_count_recursive(&self) -> usize {
+        let mut n = self.node_count();
+        for id in self.node_ids() {
+            if let Some(m) = self.node(id).as_map() {
+                n += m.inner.node_count_recursive();
+            }
+        }
+        n
+    }
+
+    /// Maximum map-nesting depth.
+    pub fn depth(&self) -> usize {
+        let mut d = 0;
+        for id in self.node_ids() {
+            if let Some(m) = self.node(id).as_map() {
+                d = d.max(1 + m.inner.depth());
+            }
+        }
+        d
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Map construction helper
+// ---------------------------------------------------------------------------
+
+/// Body-under-construction of a map operator; passed to the closure of
+/// [`map_over`]. `g` is the inner graph; use [`MapBody::collect`] /
+/// [`MapBody::reduce`] to register outputs.
+pub struct MapBody {
+    pub g: Graph,
+    outputs: Vec<(Port, OutMode)>,
+}
+
+impl MapBody {
+    /// Register `src` as a collected output of the map.
+    pub fn collect(&mut self, src: Port) {
+        self.outputs.push((src, OutMode::Collect));
+    }
+
+    /// Register `src` as an on-the-fly reduced output of the map.
+    pub fn reduce_out(&mut self, src: Port, op: ReduceOp) {
+        self.outputs.push((src, OutMode::Reduce(op)));
+    }
+}
+
+/// Build a map node over `dim` in `parent`. `args` are (outer port, mode)
+/// pairs; the closure receives the map body and the inner ports bound to
+/// each arg, and must register at least one output. Returns the map's
+/// output ports in registration order.
+pub fn map_over(
+    parent: &mut Graph,
+    dim: impl Into<Dim>,
+    args: &[(Port, ArgMode)],
+    build: impl FnOnce(&mut MapBody, &[Port]),
+) -> Vec<Port> {
+    let dim = dim.into();
+    let mut body = MapBody {
+        g: Graph::new(),
+        outputs: vec![],
+    };
+    let mut inner_ports = Vec::with_capacity(args.len());
+    let mut map_ins = Vec::with_capacity(args.len());
+    for (i, (outer, mode)) in args.iter().enumerate() {
+        let outer_ty = parent.out_ty(*outer);
+        let inner_ty = match mode {
+            ArgMode::Mapped => outer_ty.strip(&dim),
+            ArgMode::Bcast => outer_ty,
+        };
+        let label = format!("in{i}");
+        let ip = body.g.input(label, inner_ty);
+        inner_ports.push(ip);
+        map_ins.push(MapIn {
+            inner_input: ip.node,
+            mode: *mode,
+        });
+    }
+    build(&mut body, &inner_ports);
+    assert!(
+        !body.outputs.is_empty(),
+        "map_over: body registered no outputs"
+    );
+    let mut map_outs = Vec::with_capacity(body.outputs.len());
+    for (j, (src, mode)) in body.outputs.iter().enumerate() {
+        let out_id = body.g.add_node(NodeKind::Output, format!("out{j}"));
+        body.g.connect(*src, port(out_id, 0));
+        map_outs.push(MapOut {
+            inner_output: out_id,
+            mode: mode.clone(),
+        });
+    }
+    let n_out = map_outs.len();
+    let map_id = parent.add_node(
+        NodeKind::Map(Box::new(MapNode {
+            dim: dim.clone(),
+            inner: body.g,
+            inputs: map_ins,
+            outputs: map_outs,
+            skip_first: false,
+        })),
+        format!("map{dim}"),
+    );
+    for (i, (outer, _)) in args.iter().enumerate() {
+        parent.connect(*outer, port(map_id, i));
+    }
+    (0..n_out).map(|j| port(map_id, j)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+
+    /// The §2.1 running example: apply (x-s)/d to each block of a list.
+    fn ew_map_program() -> Graph {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let outs = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let e = Expr::var(0)
+                .sub(Expr::cst(1.0))
+                .div(Expr::cst(2.0));
+            let r = mb.g.ew1(e, ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", outs[0]);
+        g
+    }
+
+    #[test]
+    fn build_and_type_simple_map() {
+        let g = ew_map_program();
+        assert_eq!(g.node_count(), 3); // input, map, output
+        let map_id = g
+            .node_ids()
+            .find(|&i| g.node(i).as_map().is_some())
+            .unwrap();
+        assert_eq!(g.out_ty(port(map_id, 0)), Ty::blocks(&["N"]));
+        assert!(g.is_acyclic());
+    }
+
+    #[test]
+    fn nested_maps_type() {
+        // A[M,N] -> elementwise -> B[M,N] via nested maps.
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["M", "N"]));
+        let outs = map_over(&mut g, "M", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let inner = map_over(
+                &mut mb.g,
+                "N",
+                &[(ins[0], ArgMode::Mapped)],
+                |mb2, ins2| {
+                    let r = mb2.g.ew1(Expr::var(0).exp(), ins2[0]);
+                    mb2.collect(r);
+                },
+            );
+            mb.collect(inner[0]);
+        });
+        g.output("B", outs[0]);
+        let map_id = g
+            .node_ids()
+            .find(|&i| g.node(i).as_map().is_some())
+            .unwrap();
+        assert_eq!(g.out_ty(port(map_id, 0)), Ty::blocks(&["M", "N"]));
+        assert_eq!(g.depth(), 2);
+        assert_eq!(g.node_count_recursive(), 3 + 3 + 3);
+    }
+
+    #[test]
+    fn reduce_node_types() {
+        // sum over N of row_sum per block: Map(N){row_sum} -> Reduce(N).
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let outs = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.collect(r);
+        });
+        let red = g.reduce(ReduceOp::Add, outs[0]);
+        assert_eq!(g.out_ty(red), Ty::vector());
+        g.output("c", red);
+        assert!(g.is_acyclic());
+    }
+
+    #[test]
+    fn reduced_map_output_is_item() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let outs = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.reduce_out(r, ReduceOp::Add);
+        });
+        assert_eq!(g.out_ty(outs[0]), Ty::vector());
+        g.output("c", outs[0]);
+    }
+
+    #[test]
+    fn buffered_edge_census() {
+        let g = ew_map_program();
+        // input->map and map->output are buffered (I/O + list); none interior.
+        assert_eq!(g.buffered_edges().len(), 2);
+        assert!(g.interior_buffered_edges().is_empty());
+    }
+
+    #[test]
+    fn interior_buffered_detected() {
+        // Two chained maps materialize an interior list.
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o1 = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            mb.collect(r);
+        });
+        let o2 = map_over(&mut g, "N", &[(o1[0], ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).neg(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o2[0]);
+        assert_eq!(g.interior_buffered_edges().len(), 1);
+        assert_eq!(g.interior_buffered_count_recursive(), 1);
+    }
+
+    #[test]
+    fn reachability_and_topo() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::block());
+        let x = g.ew1(Expr::var(0).exp(), a);
+        let y = g.ew1(Expr::var(0).neg(), x);
+        g.output("B", y);
+        assert!(g.reaches(a.node, y.node));
+        assert!(!g.reaches(y.node, a.node));
+        let order = g.topo_order();
+        let pos = |id: NodeId| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(a.node) < pos(x.node));
+        assert!(pos(x.node) < pos(y.node));
+    }
+
+    #[test]
+    fn reaches_excluding_direct_edge() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::block());
+        let u = g.ew1(Expr::var(0).exp(), a);
+        let v = g.ew1(Expr::var(0).neg(), u);
+        g.output("B", v);
+        let direct = Edge {
+            src: u,
+            dst: port(v.node, 0),
+        };
+        // Only path u->v is the direct edge; excluding it, unreachable.
+        assert!(!g.reaches_excluding(u.node, v.node, &[direct]));
+    }
+
+    #[test]
+    fn rewire_and_remove() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::block());
+        let b = g.input("B", Ty::block());
+        let x = g.ew1(Expr::var(0).exp(), a);
+        g.output("O", x);
+        g.rewire_consumers(a, b);
+        assert_eq!(g.producer(port(x.node, 0)), Some(b));
+        g.remove_node(a.node);
+        assert!(!g.contains(a.node));
+        assert!(g.is_acyclic());
+    }
+
+    #[test]
+    fn absorb_remaps_ids() {
+        let mut g1 = Graph::new();
+        let a = g1.input("A", Ty::block());
+        g1.output("OA", a);
+        let mut g2 = Graph::new();
+        let b = g2.input("B", Ty::block());
+        let e = g2.ew1(Expr::var(0).neg(), b);
+        g2.output("OB", e);
+        let n2 = g2.node_count();
+        let remap = g1.absorb(g2);
+        assert_eq!(remap.len(), n2);
+        assert_eq!(g1.node_count(), 2 + n2);
+        assert!(g1.is_acyclic());
+    }
+}

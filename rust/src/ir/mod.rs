@@ -1,0 +1,23 @@
+//! The block program intermediate representation (paper §2).
+//!
+//! * [`dim`] — named iteration dimensions and concrete size environments.
+//! * [`types`] — item/list value types; buffering is derived from types.
+//! * [`expr`] — symbolic scalar expressions for elementwise operators.
+//! * [`func`] — the Table-1 functional operator vocabulary.
+//! * [`graph`] — the hierarchical DAG itself plus builders and algorithms.
+//! * [`validate`] — structural and type invariants.
+//! * [`display`] — text and Graphviz renderers.
+
+pub mod dim;
+pub mod display;
+pub mod expr;
+pub mod func;
+pub mod graph;
+pub mod types;
+pub mod validate;
+
+pub use dim::{Dim, DimSizes};
+pub use expr::Expr;
+pub use func::{FuncOp, ReduceOp};
+pub use graph::{map_over, port, ArgMode, Graph, MapNode, Node, NodeId, NodeKind, OutMode, Port};
+pub use types::{Item, Ty};

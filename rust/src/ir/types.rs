@@ -1,0 +1,198 @@
+//! Value types of block-program edges.
+//!
+//! §2.1 of the paper distinguishes values that fit in a processor's local
+//! memory — an individual *block*, *vector* or *scalar* — from values that
+//! must live in global memory: a *list of blocks*, *list of vectors*, or
+//! *list of lists*. We encode both in one type: [`Ty`] is an [`Item`] wrapped
+//! in zero or more levels of list nesting, each level tagged with the
+//! iteration [`Dim`] that indexes it (outermost first).
+//!
+//! An edge whose type has a non-empty `dims` is a **buffered** edge (red in
+//! the paper's diagrams): its value is materialized in a global-memory
+//! buffer. An edge with empty `dims` is **unbuffered**: the value is produced
+//! and consumed in local memory on the same processor. Edges incident to
+//! program inputs/outputs are buffered regardless (program I/O resides in
+//! global memory).
+
+use super::dim::Dim;
+use std::fmt;
+
+/// What a single local-memory value is: a scalar, a (column) vector, or a
+/// 2-D block.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Item {
+    Scalar,
+    Vector,
+    Block,
+}
+
+impl fmt::Display for Item {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Item::Scalar => f.write_str("scalar"),
+            Item::Vector => f.write_str("vector"),
+            Item::Block => f.write_str("block"),
+        }
+    }
+}
+
+/// The type of a block-program value: an item nested in `dims.len()` levels
+/// of lists. `dims` is ordered outermost-first, matching the index order of
+/// the paper's listings (`I1[m,n]` has `dims = [M, N]`).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Ty {
+    pub item: Item,
+    pub dims: Vec<Dim>,
+}
+
+impl Ty {
+    pub fn new(item: Item, dims: Vec<Dim>) -> Self {
+        Ty { item, dims }
+    }
+
+    /// A bare local-memory item (unbuffered when it flows between operators).
+    pub fn item(item: Item) -> Self {
+        Ty { item, dims: vec![] }
+    }
+
+    pub fn scalar() -> Self {
+        Ty::item(Item::Scalar)
+    }
+    pub fn vector() -> Self {
+        Ty::item(Item::Vector)
+    }
+    pub fn block() -> Self {
+        Ty::item(Item::Block)
+    }
+
+    /// A list-of-…-of-`item` over the given dims (outermost first).
+    pub fn list(item: Item, dims: &[&str]) -> Self {
+        Ty {
+            item,
+            dims: dims.iter().map(|d| Dim::new(*d)).collect(),
+        }
+    }
+
+    /// Blocks split along the given dims, e.g. `Ty::blocks(&["M","N"])` for a
+    /// matrix blocked along both dimensions.
+    pub fn blocks(dims: &[&str]) -> Self {
+        Ty::list(Item::Block, dims)
+    }
+
+    /// True iff the value is a list (needs a global-memory buffer).
+    pub fn is_list(&self) -> bool {
+        !self.dims.is_empty()
+    }
+
+    /// Does the list nesting mention `d` anywhere?
+    pub fn has_dim(&self, d: &Dim) -> bool {
+        self.dims.contains(d)
+    }
+
+    /// Type of one element after a map over `d` strips the first occurrence
+    /// of `d` from the nesting. Panics if `d` is absent.
+    pub fn strip(&self, d: &Dim) -> Ty {
+        let pos = self
+            .dims
+            .iter()
+            .position(|x| x == d)
+            .unwrap_or_else(|| panic!("Ty::strip: dim {d} not in {self}"));
+        let mut dims = self.dims.clone();
+        dims.remove(pos);
+        Ty {
+            item: self.item,
+            dims,
+        }
+    }
+
+    /// Type of the collected output of a map over `d`: prepend `d`.
+    pub fn collect(&self, d: &Dim) -> Ty {
+        let mut dims = Vec::with_capacity(self.dims.len() + 1);
+        dims.push(d.clone());
+        dims.extend(self.dims.iter().cloned());
+        Ty {
+            item: self.item,
+            dims,
+        }
+    }
+
+    /// Type after reducing the outermost list level. Panics on a non-list.
+    pub fn reduce(&self) -> Ty {
+        assert!(
+            self.is_list(),
+            "Ty::reduce: cannot reduce non-list type {self}"
+        );
+        Ty {
+            item: self.item,
+            dims: self.dims[1..].to_vec(),
+        }
+    }
+}
+
+impl fmt::Display for Ty {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.dims.is_empty() {
+            write!(f, "{}", self.item)
+        } else {
+            write!(f, "[")?;
+            for (i, d) in self.dims.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                write!(f, "{d}")?;
+            }
+            write!(f, "]{}", self.item)
+        }
+    }
+}
+
+impl fmt::Debug for Ty {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_and_collect_roundtrip() {
+        let t = Ty::blocks(&["M", "N"]);
+        let m = Dim::new("M");
+        let s = t.strip(&m);
+        assert_eq!(s, Ty::blocks(&["N"]));
+        assert_eq!(s.collect(&m), t);
+    }
+
+    #[test]
+    fn strip_first_occurrence_mid_list() {
+        // I2[k,n] consumed by a map over N strips the inner dim.
+        let t = Ty::blocks(&["K", "N"]);
+        assert_eq!(t.strip(&Dim::new("N")), Ty::blocks(&["K"]));
+    }
+
+    #[test]
+    fn reduce_strips_outer() {
+        let t = Ty::list(Item::Vector, &["K"]);
+        assert_eq!(t.reduce(), Ty::vector());
+    }
+
+    #[test]
+    fn buffered_is_list() {
+        assert!(Ty::blocks(&["M"]).is_list());
+        assert!(!Ty::block().is_list());
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Ty::blocks(&["M", "N"]).to_string(), "[M,N]block");
+        assert_eq!(Ty::scalar().to_string(), "scalar");
+    }
+
+    #[test]
+    #[should_panic(expected = "not in")]
+    fn strip_missing_dim_panics() {
+        Ty::blocks(&["M"]).strip(&Dim::new("Z"));
+    }
+}

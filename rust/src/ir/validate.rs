@@ -1,0 +1,305 @@
+//! Structural validation of block programs.
+//!
+//! Every rule application must preserve these invariants (the property tests
+//! in `rust/tests/` re-check them after every rewrite):
+//!
+//! 1. the graph (at every level) is acyclic;
+//! 2. every non-input port is connected, with arities respected;
+//! 3. types check: functional operators consume items with the right item
+//!    kinds, maps strip/collect their dimension consistently, reductions
+//!    consume single-level lists;
+//! 4. map port bindings reference real inner Input/Output nodes of the right
+//!    shape, and inner Input types match the outer value element types.
+
+use super::graph::{port, Graph, NodeKind};
+use super::types::Ty;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct ValidationError {
+    /// Hierarchical path of map node ids from the root, then a message.
+    pub path: Vec<usize>,
+    pub msg: String,
+}
+
+impl fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "at {:?}: {}", self.path, self.msg)
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+/// Validate the whole hierarchy; returns all problems found.
+pub fn validate(g: &Graph) -> Vec<ValidationError> {
+    let mut errs = Vec::new();
+    validate_level(g, &mut vec![], &mut errs);
+    errs
+}
+
+/// Convenience: panic with a readable report if invalid.
+pub fn assert_valid(g: &Graph) {
+    let errs = validate(g);
+    assert!(
+        errs.is_empty(),
+        "block program invalid:\n{}",
+        errs.iter()
+            .map(|e| format!("  - {e}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+fn err(errs: &mut Vec<ValidationError>, path: &[usize], msg: String) {
+    errs.push(ValidationError {
+        path: path.to_vec(),
+        msg,
+    });
+}
+
+fn validate_level(g: &Graph, path: &mut Vec<usize>, errs: &mut Vec<ValidationError>) {
+    if !g.is_acyclic() {
+        err(errs, path, "graph has a cycle".into());
+        return; // typing would recurse forever
+    }
+
+    for id in g.node_ids() {
+        let n = g.node(id);
+        // arity / connectivity
+        for i in 0..n.in_arity() {
+            if g.producer(port(id, i)).is_none() {
+                err(
+                    errs,
+                    path,
+                    format!("node {id} ({}) input port {i} unconnected", n.label),
+                );
+            }
+        }
+        for e in g.edges() {
+            if e.dst.node == id && e.dst.port >= n.in_arity() {
+                err(
+                    errs,
+                    path,
+                    format!(
+                        "node {id} ({}) has edge into nonexistent input port {}",
+                        n.label, e.dst.port
+                    ),
+                );
+            }
+            if e.src.node == id && e.src.port >= n.out_arity() {
+                err(
+                    errs,
+                    path,
+                    format!(
+                        "node {id} ({}) has edge from nonexistent output port {}",
+                        n.label, e.src.port
+                    ),
+                );
+            }
+        }
+    }
+
+    // If connectivity is broken, typing may panic; bail early.
+    if !errs.is_empty() {
+        return;
+    }
+
+    for id in g.node_ids() {
+        let n = g.node(id);
+        match &n.kind {
+            NodeKind::Func(f) => {
+                let mut items = Vec::new();
+                let mut ok = true;
+                for i in 0..f.arity() {
+                    let src = g.producer(port(id, i)).unwrap();
+                    let t = g.out_ty(src);
+                    if t.is_list() {
+                        err(
+                            errs,
+                            path,
+                            format!(
+                                "func {id} ({}) input {i} is a list ({t}); functional \
+                                 operators consume local items only",
+                                n.label
+                            ),
+                        );
+                        ok = false;
+                    }
+                    items.push(t.item);
+                }
+                if ok && f.out_item(&items).is_none() {
+                    err(
+                        errs,
+                        path,
+                        format!(
+                            "func {id} ({}) item-type error: inputs {items:?}",
+                            n.label
+                        ),
+                    );
+                }
+            }
+            NodeKind::Reduce(_) | NodeKind::Head => {
+                let src = g.producer(port(id, 0)).unwrap();
+                let t = g.out_ty(src);
+                if !t.is_list() {
+                    err(
+                        errs,
+                        path,
+                        format!("reduce/head {id} input is not a list ({t})"),
+                    );
+                }
+            }
+            NodeKind::Map(m) => {
+                // port bindings
+                for (i, mi) in m.inputs.iter().enumerate() {
+                    let Some(inner) = m.inner.try_node(mi.inner_input) else {
+                        err(
+                            errs,
+                            path,
+                            format!("map {id} input {i} binds to removed inner node"),
+                        );
+                        continue;
+                    };
+                    let NodeKind::Input { ty: inner_ty } = &inner.kind else {
+                        err(
+                            errs,
+                            path,
+                            format!("map {id} input {i} binds to non-Input inner node"),
+                        );
+                        continue;
+                    };
+                    let Some(src) = g.producer(port(id, i)) else {
+                        continue;
+                    };
+                    let outer_ty = g.out_ty(src);
+                    let want: Ty = match mi.mode {
+                        super::graph::ArgMode::Mapped => {
+                            if !outer_ty.has_dim(&m.dim) {
+                                err(
+                                    errs,
+                                    path,
+                                    format!(
+                                        "map {id} ({}) mapped input {i} type {outer_ty} \
+                                         lacks dim {}",
+                                        n.label, m.dim
+                                    ),
+                                );
+                                continue;
+                            }
+                            outer_ty.strip(&m.dim)
+                        }
+                        super::graph::ArgMode::Bcast => outer_ty,
+                    };
+                    if *inner_ty != want {
+                        err(
+                            errs,
+                            path,
+                            format!(
+                                "map {id} ({}) input {i}: inner Input declares {inner_ty}, \
+                                 binding implies {want}",
+                                n.label
+                            ),
+                        );
+                    }
+                }
+                for (j, mo) in m.outputs.iter().enumerate() {
+                    match m.inner.try_node(mo.inner_output) {
+                        Some(inner) if matches!(inner.kind, NodeKind::Output) => {}
+                        _ => err(
+                            errs,
+                            path,
+                            format!("map {id} output {j} binds to missing/non-Output inner node"),
+                        ),
+                    }
+                }
+                // unbound inner inputs / outputs are dangling state
+                for iid in m.inner.input_ids() {
+                    if !m.inputs.iter().any(|mi| mi.inner_input == iid) {
+                        err(
+                            errs,
+                            path,
+                            format!("map {id}: inner Input {iid} not bound to any map port"),
+                        );
+                    }
+                }
+                for oid in m.inner.output_ids() {
+                    if !m.outputs.iter().any(|mo| mo.inner_output == oid) {
+                        err(
+                            errs,
+                            path,
+                            format!("map {id}: inner Output {oid} not bound to any map port"),
+                        );
+                    }
+                }
+                path.push(id);
+                validate_level(&m.inner, path, errs);
+                path.pop();
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+    use crate::ir::graph::{map_over, ArgMode, Graph};
+    use crate::ir::types::Ty;
+
+    #[test]
+    fn valid_program_passes() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o[0]);
+        assert!(validate(&g).is_empty());
+    }
+
+    #[test]
+    fn unconnected_port_reported() {
+        let mut g = Graph::new();
+        let _a = g.input("A", Ty::block());
+        let id = g.add_node(
+            crate::ir::graph::NodeKind::Func(crate::ir::func::FuncOp::RowSum),
+            "row_sum",
+        );
+        let _ = id;
+        let errs = validate(&g);
+        assert!(errs.iter().any(|e| e.msg.contains("unconnected")));
+    }
+
+    #[test]
+    fn func_on_list_reported() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        // row_sum directly on a list: invalid.
+        let r = g.func(crate::ir::func::FuncOp::RowSum, &[a]);
+        g.output("B", r);
+        let errs = validate(&g);
+        assert!(errs.iter().any(|e| e.msg.contains("is a list")));
+    }
+
+    #[test]
+    fn bad_mapped_dim_reported() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o[0]);
+        // Corrupt: rebind the map input to a value without dim N.
+        let b = g.input("B2", Ty::blocks(&["K"]));
+        let map_id = g
+            .node_ids()
+            .find(|&i| g.node(i).as_map().is_some())
+            .unwrap();
+        g.connect(b, crate::ir::graph::port(map_id, 0));
+        let errs = validate(&g);
+        assert!(!errs.is_empty());
+    }
+}

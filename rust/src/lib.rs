@@ -1,0 +1,51 @@
+//! # Blockbuster — block-level AI operator fusion
+//!
+//! A production-grade reproduction of *"Blockbuster, Part 1: Block-level AI
+//! Operator Fusion"* (Dekel, 2025). The library implements the paper's three
+//! pillars plus every substrate they depend on:
+//!
+//! * [`ir`] — the **block program** representation: a hierarchical DAG whose
+//!   nodes are functional / map / reduction / miscellaneous operators and
+//!   whose edges are buffered (global memory) or unbuffered (local memory).
+//! * [`rules`] — the nine logic-preserving **substitution rules** of §3.
+//! * [`fusion`] — the rule-based **fusion algorithm** of §4
+//!   (`fuse_no_extend`, breadth-first application, map extension, snapshots).
+//! * [`array`] + [`lower`] — the array-program layer and the Table-2 lookup
+//!   that converts array operators into block-program subgraphs.
+//! * [`select`] — a fusion-candidate selection algorithm implementing the
+//!   contract the paper defers to its companion paper.
+//! * [`loopir`] — the loop-nest IR used to print the paper's code listings,
+//!   to statically analyse memory traffic, and to execute block programs.
+//! * [`exec`] — a two-tier-memory execution substrate (interpreter + memory
+//!   simulator) that runs block programs on concrete data.
+//! * [`cost`] + [`autotune`] — the traffic/compute cost model and the block
+//!   shape autotuner the paper's epilogues rely on.
+//! * [`stabilize`] — the Appendix's numerical-safety pass
+//!   (significand–exponent pairs / online softmax).
+//! * [`runtime`] — PJRT client wrapper: loads AOT artifacts produced by the
+//!   Python build path (`python/compile/aot.py`) and executes them.
+//! * [`coordinator`] — the end-to-end compiler driver and CLI plumbing.
+//!
+//! Python (JAX + Pallas) exists only on the *build path*: it authors the
+//! reference models and fused Pallas kernels and AOT-lowers them to HLO text
+//! artifacts; the Rust binary is self-contained afterwards.
+
+pub mod array;
+pub mod autotune;
+pub mod coordinator;
+pub mod cost;
+pub mod exec;
+pub mod fusion;
+pub mod ir;
+pub mod lower;
+pub mod loopir;
+pub mod prop;
+pub mod rules;
+pub mod runtime;
+pub mod select;
+pub mod stabilize;
+pub mod tensor;
+pub mod util;
+
+pub use ir::graph::{Graph, Node, NodeId, NodeKind, Port};
+pub use ir::types::{Item, Ty};

@@ -1,0 +1,621 @@
+//! Loop IR interpreter with a two-tier-memory simulator.
+//!
+//! Executes a lowered block program on concrete data, modeling the paper's
+//! abstract machine: buffers live in *global memory*; vars live in *local
+//! memory*; every `load`/`store` is a global<->local block transfer and is
+//! charged to [`MemSim`]. The interpreter is the ground truth used to verify
+//! that every substitution rule is logic-preserving, and `MemSim`'s counters
+//! are the quantity fusion optimizes (global-memory traffic + kernel
+//! launches).
+
+use super::{COp, Index, LoopIr, Stmt};
+use crate::ir::dim::{Dim, DimSizes};
+use crate::ir::func::{FuncOp, ReduceOp};
+use crate::tensor::{Mat, Val};
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+/// Two-tier memory traffic counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MemSim {
+    /// Bytes copied global -> local.
+    pub loaded_bytes: u64,
+    /// Bytes copied local -> global.
+    pub stored_bytes: u64,
+    pub n_loads: u64,
+    pub n_stores: u64,
+    /// Peak bytes of live local values (approximation: sum of live vars in
+    /// the executing scope chain).
+    pub peak_local_bytes: u64,
+    /// Top-level loop nests executed (kernel launches).
+    pub kernel_launches: u64,
+    /// Scalar fused multiply-add count of block operations (compute work,
+    /// used to quantify Rule-6 work replication).
+    pub flops: u64,
+}
+
+impl MemSim {
+    pub fn total_traffic(&self) -> u64 {
+        self.loaded_bytes + self.stored_bytes
+    }
+}
+
+/// A multi-dimensional global buffer of local items.
+#[derive(Clone, Debug)]
+pub struct BufVal {
+    pub dims: Vec<usize>,
+    /// Elements are reference-counted so the simulator's loads/stores move
+    /// pointers, not payloads (§Perf round 2); *simulated* traffic is still
+    /// charged in full by `MemSim`.
+    pub data: Vec<Option<Rc<Val>>>,
+}
+
+impl BufVal {
+    pub fn new(dims: Vec<usize>) -> BufVal {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        BufVal {
+            dims,
+            data: vec![None; n],
+        }
+    }
+
+    pub fn scalar_item(v: Val) -> BufVal {
+        BufVal {
+            dims: vec![],
+            data: vec![Some(Rc::new(v))],
+        }
+    }
+
+    fn flat(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.dims.len(), "BufVal index rank mismatch");
+        let mut f = 0;
+        for (i, &x) in idx.iter().enumerate() {
+            assert!(x < self.dims[i], "BufVal index {x} out of dim {}", self.dims[i]);
+            f = f * self.dims[i] + x;
+        }
+        f
+    }
+
+    pub fn get(&self, idx: &[usize]) -> &Val {
+        self.data[self.flat(idx)]
+            .as_deref()
+            .unwrap_or_else(|| panic!("BufVal: element {idx:?} never stored"))
+    }
+
+    fn get_rc(&self, idx: &[usize]) -> Rc<Val> {
+        self.data[self.flat(idx)]
+            .clone()
+            .unwrap_or_else(|| panic!("BufVal: element {idx:?} never stored"))
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: Val) {
+        let f = self.flat(idx);
+        self.data[f] = Some(Rc::new(v));
+    }
+
+    fn set_rc(&mut self, idx: &[usize], v: Rc<Val>) {
+        let f = self.flat(idx);
+        self.data[f] = Some(v);
+    }
+}
+
+/// Execution configuration: dim sizes, scalar parameters, input buffers,
+/// optional local-memory capacity (bytes) to enforce, and misc-op callbacks.
+pub struct ExecConfig {
+    pub sizes: DimSizes,
+    pub params: BTreeMap<String, f32>,
+    pub inputs: HashMap<String, BufVal>,
+    /// If set, executing with live local state above this capacity panics —
+    /// used by the autotuner tests to verify capacity feasibility.
+    pub local_capacity: Option<u64>,
+    pub misc_ops: HashMap<String, fn(&[Val]) -> Val>,
+    /// Whole-array opaque operators: take the row-major element lists of
+    /// each input buffer, return the output's elements in row-major order.
+    pub misc_list_ops: HashMap<String, fn(&[Vec<Val>]) -> Vec<Val>>,
+}
+
+impl ExecConfig {
+    pub fn new(sizes: DimSizes) -> ExecConfig {
+        ExecConfig {
+            sizes,
+            params: BTreeMap::new(),
+            inputs: HashMap::new(),
+            local_capacity: None,
+            misc_ops: HashMap::new(),
+            misc_list_ops: HashMap::new(),
+        }
+    }
+}
+
+/// Result of executing a program.
+pub struct ExecResult {
+    pub outputs: HashMap<String, BufVal>,
+    pub mem: MemSim,
+}
+
+struct Interp<'a> {
+
+    cfg: &'a ExecConfig,
+    bufs: Vec<BufVal>,
+    vars: Vec<Option<Rc<Val>>>,
+    iters: HashMap<Dim, usize>,
+    mem: MemSim,
+    live_local: u64,
+}
+
+/// Execute `ir` under `cfg`.
+pub fn exec(ir: &LoopIr, cfg: &ExecConfig) -> ExecResult {
+    let mut bufs = Vec::with_capacity(ir.bufs.len());
+    for decl in &ir.bufs {
+        let dims: Vec<usize> = decl.dims.iter().map(|d| cfg.sizes.get(d)).collect();
+        if decl.is_input {
+            let bv = cfg
+                .inputs
+                .get(&decl.name)
+                .unwrap_or_else(|| panic!("missing input buffer {}", decl.name))
+                .clone();
+            assert_eq!(
+                bv.dims, dims,
+                "input {} has dims {:?}, program expects {:?}",
+                decl.name, bv.dims, dims
+            );
+            bufs.push(bv);
+        } else {
+            bufs.push(BufVal::new(dims));
+        }
+    }
+    let mut it = Interp {
+
+        cfg,
+        bufs,
+        vars: vec![None; ir.n_vars],
+        iters: HashMap::new(),
+        mem: MemSim::default(),
+        live_local: 0,
+    };
+    for s in &ir.body {
+        if matches!(s, Stmt::Loop { .. }) {
+            it.mem.kernel_launches += 1;
+        }
+        it.stmt(s);
+    }
+    let mut outputs = HashMap::new();
+    for (i, decl) in ir.bufs.iter().enumerate() {
+        if decl.is_output {
+            outputs.insert(decl.name.clone(), it.bufs[i].clone());
+        }
+    }
+    ExecResult {
+        outputs,
+        mem: it.mem,
+    }
+}
+
+impl<'a> Interp<'a> {
+    /// Resolve an index expression into the caller-provided fixed buffer
+    /// (§Perf round 3: no per-load allocation).
+    #[inline]
+    fn idx_into<'b>(&self, idx: &[Index], out: &'b mut [usize; 8]) -> &'b [usize] {
+        for (k, i) in idx.iter().enumerate() {
+            out[k] = match i {
+                Index::Iter(d) => *self
+                    .iters
+                    .get(d)
+                    .unwrap_or_else(|| panic!("no enclosing loop over {d}")),
+                Index::Zero => 0,
+            };
+        }
+        &out[..idx.len()]
+    }
+
+    fn set_var(&mut self, var: usize, v: Rc<Val>) {
+        if let Some(old) = &self.vars[var] {
+            self.live_local = self.live_local.saturating_sub(old.bytes() as u64);
+        }
+        self.live_local += v.bytes() as u64;
+        self.vars[var] = Some(v);
+        if self.live_local > self.mem.peak_local_bytes {
+            self.mem.peak_local_bytes = self.live_local;
+        }
+        if let Some(cap) = self.cfg.local_capacity {
+            assert!(
+                self.live_local <= cap,
+                "local memory capacity exceeded: {} > {cap}",
+                self.live_local
+            );
+        }
+    }
+
+    fn clear_var(&mut self, var: usize) {
+        if let Some(old) = self.vars[var].take() {
+            self.live_local = self.live_local.saturating_sub(old.bytes() as u64);
+        }
+    }
+
+    fn var(&self, v: usize) -> &Val {
+        self.vars[v]
+            .as_deref()
+            .unwrap_or_else(|| panic!("var t{v} read before assignment"))
+    }
+
+    fn var_rc(&self, v: usize) -> Rc<Val> {
+        self.vars[v]
+            .clone()
+            .unwrap_or_else(|| panic!("var t{v} read before assignment"))
+    }
+
+    fn stmt(&mut self, s: &Stmt) {
+        match s {
+            Stmt::Loop {
+                dim,
+                skip_first,
+                body,
+                clears,
+                ..
+            } => {
+                let n = self.cfg.sizes.get(dim);
+                let start = if *skip_first { 1 } else { 0 };
+                for x in start..n {
+                    for &c in clears {
+                        self.clear_var(c);
+                    }
+                    self.iters.insert(dim.clone(), x);
+                    for st in body {
+                        self.stmt(st);
+                    }
+                }
+                self.iters.remove(dim);
+            }
+            Stmt::Load { var, buf, idx } => {
+                let mut scratch = [0usize; 8];
+                let i = self.idx_into(idx, &mut scratch);
+                let v = self.bufs[*buf].get_rc(i);
+                self.mem.n_loads += 1;
+                self.mem.loaded_bytes += v.bytes() as u64;
+                self.set_var(*var, v);
+            }
+            Stmt::Store { var, buf, idx } => {
+                let mut scratch = [0usize; 8];
+                let i = self.idx_into(idx, &mut scratch);
+                let v = self.var_rc(*var);
+                self.mem.n_stores += 1;
+                self.mem.stored_bytes += v.bytes() as u64;
+                self.bufs[*buf].set_rc(i, v);
+            }
+            Stmt::Compute { var, op, args } => {
+                let vals: Vec<&Val> = args.iter().map(|a| self.var(*a)).collect();
+                let (v, fl) = self.compute(op, &vals);
+                self.mem.flops += fl;
+                self.set_var(*var, Rc::new(v));
+            }
+            Stmt::MiscCall { tag, args, out } => {
+                let f = *self
+                    .cfg
+                    .misc_list_ops
+                    .get(tag)
+                    .unwrap_or_else(|| panic!("no whole-array misc-op registered for {tag}"));
+                let mut arg_vals: Vec<Vec<Val>> = Vec::with_capacity(args.len());
+                for (buf, idx) in args {
+                    let elems = self.gather(*buf, idx);
+                    for v in &elems {
+                        self.mem.n_loads += 1;
+                        self.mem.loaded_bytes += v.bytes() as u64;
+                    }
+                    arg_vals.push(elems);
+                }
+                let results = f(&arg_vals);
+                let (obuf, oidx) = out;
+                let slots = self.scatter_slots(*obuf, oidx);
+                assert_eq!(
+                    results.len(),
+                    slots.len(),
+                    "misc op {tag} returned {} values for {} slots",
+                    results.len(),
+                    slots.len()
+                );
+                for (slot, v) in slots.into_iter().zip(results) {
+                    self.mem.n_stores += 1;
+                    self.mem.stored_bytes += v.bytes() as u64;
+                    self.bufs[*obuf].set(&slot, v);
+                }
+            }
+            Stmt::Accum { var, op, src } => {
+                let s = self.var_rc(*src);
+                let v = match (&self.vars[*var], op) {
+                    (None, _) => s,
+                    (Some(acc), ReduceOp::Add) => {
+                        self.mem.flops += (s.bytes() / 4) as u64;
+                        Rc::new(acc.zip(&s, |a, b| a + b))
+                    }
+                    (Some(acc), ReduceOp::Max) => Rc::new(acc.zip(&s, f32::max)),
+                };
+                self.set_var(*var, v);
+            }
+        }
+    }
+
+    /// Row-major enumeration of the elements selected by a partial index.
+    fn gather(&self, buf: usize, idx: &[Option<Index>]) -> Vec<Val> {
+        let slots = self.scatter_slots(buf, idx);
+        slots
+            .into_iter()
+            .map(|s| self.bufs[buf].get(&s).clone())
+            .collect()
+    }
+
+    fn scatter_slots(&self, buf: usize, idx: &[Option<Index>]) -> Vec<Vec<usize>> {
+        let dims = &self.bufs[buf].dims;
+        let mut slots = vec![Vec::new()];
+        for (i, s) in idx.iter().enumerate() {
+            let choices: Vec<usize> = match s {
+                Some(Index::Iter(d)) => vec![self.iters[d]],
+                Some(Index::Zero) => vec![0],
+                None => (0..dims[i]).collect(),
+            };
+            let mut next = Vec::with_capacity(slots.len() * choices.len());
+            for base in &slots {
+                for c in &choices {
+                    let mut b = base.clone();
+                    b.push(*c);
+                    next.push(b);
+                }
+            }
+            slots = next;
+        }
+        slots
+    }
+
+    fn compute(&self, op: &COp, args: &[&Val]) -> (Val, u64) {
+        match op {
+            COp::Func(f) => self.func(f, args),
+            COp::Misc(tag) => {
+                let f = self
+                    .cfg
+                    .misc_ops
+                    .get(tag)
+                    .unwrap_or_else(|| panic!("no misc-op callback registered for {tag}"));
+                let owned: Vec<Val> = args.iter().map(|v| (*v).clone()).collect();
+                (f(&owned), 0)
+            }
+        }
+    }
+
+    fn func(&self, f: &FuncOp, args: &[&Val]) -> (Val, u64) {
+        match f {
+            FuncOp::Add => {
+                let v = args[0].zip(args[1], |a, b| a + b);
+                let fl = (v.bytes() / 4) as u64;
+                (v, fl)
+            }
+            FuncOp::Mul => {
+                let v = args[0].zip(args[1], |a, b| a * b);
+                let fl = (v.bytes() / 4) as u64;
+                (v, fl)
+            }
+            FuncOp::RowShift => {
+                let m = args[0].as_block();
+                let c = args[1].as_vector();
+                (Val::Block(m.row_shift(c)), (m.rows * m.cols) as u64)
+            }
+            FuncOp::RowScale => {
+                let m = args[0].as_block();
+                let c = args[1].as_vector();
+                (Val::Block(m.row_scale(c)), (m.rows * m.cols) as u64)
+            }
+            FuncOp::RowSum => {
+                let m = args[0].as_block();
+                (Val::Vector(m.row_sum()), (m.rows * m.cols) as u64)
+            }
+            FuncOp::Dot => {
+                let a = args[0].as_block();
+                let b = args[1].as_block();
+                let v = a.dot_bt(b);
+                let fl = 2 * (a.rows * a.cols * b.rows) as u64;
+                (Val::Block(v), fl)
+            }
+            FuncOp::Outer => {
+                let a = args[0].as_vector();
+                let b = args[1].as_vector();
+                (
+                    Val::Block(Mat::outer(a, b)),
+                    (a.len() * b.len()) as u64,
+                )
+            }
+            FuncOp::Ew(e) => {
+                let n = e.arity();
+                assert_eq!(args.len(), n, "ew arity mismatch");
+                // §Perf: compile the expr once per block operation (tape +
+                // resolved params), evaluate allocation-free per element.
+                let ce = e.compile(&self.cfg.params);
+                let mut stack: Vec<f32> = Vec::with_capacity(ce.max_stack);
+                let mut xs = [0.0f32; 8];
+                assert!(n <= 8, "elementwise arity > 8 unsupported");
+                let v = match args[0] {
+                    Val::Scalar(_) => {
+                        for (k, a) in args.iter().enumerate() {
+                            xs[k] = a.as_scalar();
+                        }
+                        Val::Scalar(ce.eval_with(&xs[..n], &mut stack))
+                    }
+                    Val::Vector(v0) => {
+                        let mut out = Vec::with_capacity(v0.len());
+                        for i in 0..v0.len() {
+                            for (k, a) in args.iter().enumerate() {
+                                xs[k] = a.as_vector()[i];
+                            }
+                            out.push(ce.eval_with(&xs[..n], &mut stack));
+                        }
+                        Val::Vector(out)
+                    }
+                    Val::Block(m0) => {
+                        let mut out = Mat::zeros(m0.rows, m0.cols);
+                        let len = m0.rows * m0.cols;
+                        if n == 1 {
+                            let a0 = &args[0].as_block().data;
+                            for i in 0..len {
+                                xs[0] = a0[i];
+                                out.data[i] = ce.eval_with(&xs[..1], &mut stack);
+                            }
+                        } else {
+                            for i in 0..len {
+                                for (k, a) in args.iter().enumerate() {
+                                    xs[k] = a.as_block().data[i];
+                                }
+                                out.data[i] = ce.eval_with(&xs[..n], &mut stack);
+                            }
+                        }
+                        Val::Block(out)
+                    }
+                };
+                let fl = (v.bytes() / 4) as u64;
+                (v, fl)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+    use crate::ir::func::FuncOp;
+    use crate::ir::graph::{map_over, ArgMode, Graph};
+    use crate::ir::types::Ty;
+    use crate::loopir::lower::lower;
+    use crate::tensor::Rng;
+
+    fn block_list(rng: &mut Rng, n: usize, r: usize, c: usize) -> BufVal {
+        let mut bv = BufVal::new(vec![n]);
+        for i in 0..n {
+            bv.set(&[i], Val::Block(rng.mat(r, c)));
+        }
+        bv
+    }
+
+    #[test]
+    fn exec_elementwise_map() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).mul(Expr::cst(2.0)), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o[0]);
+        let ir = lower(&g);
+
+        let mut rng = Rng::new(1);
+        let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 3)]));
+        let input = block_list(&mut rng, 3, 2, 2);
+        cfg.inputs.insert("A".into(), input.clone());
+        let res = exec(&ir, &cfg);
+        let out = &res.outputs["B"];
+        for i in 0..3 {
+            let want = input.get(&[i]).map(|x| x * 2.0);
+            assert!(out.get(&[i]).max_abs_diff(&want) < 1e-6);
+        }
+        // 3 loads + 3 stores of 2x2 f32 blocks
+        assert_eq!(res.mem.n_loads, 3);
+        assert_eq!(res.mem.n_stores, 3);
+        assert_eq!(res.mem.loaded_bytes, 3 * 16);
+        assert_eq!(res.mem.kernel_launches, 1);
+    }
+
+    #[test]
+    fn exec_fused_reduce_resets_per_outer_iteration() {
+        // forall m { for n { t += row_sum(load(A[m,n])) } store } — the
+        // accumulator must reset for each m.
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["M", "N"]));
+        let o = map_over(&mut g, "M", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let inner = map_over(&mut mb.g, "N", &[(ins[0], ArgMode::Mapped)], |mb2, ins2| {
+                let r = mb2.g.func(FuncOp::RowSum, &[ins2[0]]);
+                mb2.reduce_out(r, crate::ir::func::ReduceOp::Add);
+            });
+            mb.collect(inner[0]);
+        });
+        g.output("S", o[0]);
+        let ir = lower(&g);
+
+        let mut cfg = ExecConfig::new(DimSizes::of(&[("M", 2), ("N", 2)]));
+        let mut bv = BufVal::new(vec![2, 2]);
+        for m in 0..2 {
+            for n in 0..2 {
+                bv.set(
+                    &[m, n],
+                    Val::Block(Mat::from_vec(1, 1, vec![(m * 10 + n) as f32])),
+                );
+            }
+        }
+        cfg.inputs.insert("A".into(), bv);
+        let res = exec(&ir, &cfg);
+        let s = &res.outputs["S"];
+        assert_eq!(s.get(&[0]).as_vector(), &[1.0]); // 0 + 1
+        assert_eq!(s.get(&[1]).as_vector(), &[21.0]); // 10 + 11, NOT 22
+    }
+
+    #[test]
+    fn traffic_counts_fused_vs_unfused() {
+        // Unfused exp->neg materializes I1: traffic strictly larger than fused.
+        let build = |fused: bool| {
+            let mut g = Graph::new();
+            let a = g.input("A", Ty::blocks(&["N"]));
+            let o = if fused {
+                map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+                    let r = mb.g.ew1(Expr::var(0).exp().neg(), ins[0]);
+                    mb.collect(r);
+                })
+            } else {
+                let o1 = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+                    let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+                    mb.collect(r);
+                });
+                map_over(&mut g, "N", &[(o1[0], ArgMode::Mapped)], |mb, ins| {
+                    let r = mb.g.ew1(Expr::var(0).neg(), ins[0]);
+                    mb.collect(r);
+                })
+            };
+            g.output("B", o[0]);
+            lower(&g)
+        };
+        let mut rng = Rng::new(2);
+        let input = block_list(&mut rng, 4, 2, 2);
+        let run = |ir: &LoopIr| {
+            let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 4)]));
+            cfg.inputs.insert("A".into(), input.clone());
+            exec(ir, &cfg)
+        };
+        let unfused = run(&build(false));
+        let fused = run(&build(true));
+        // Same numerics…
+        for i in 0..4 {
+            assert!(
+                unfused.outputs["B"]
+                    .get(&[i])
+                    .max_abs_diff(fused.outputs["B"].get(&[i]))
+                    < 1e-6
+            );
+        }
+        // …half the traffic and half the launches.
+        assert_eq!(unfused.mem.total_traffic(), 2 * fused.mem.total_traffic());
+        assert_eq!(unfused.mem.kernel_launches, 2);
+        assert_eq!(fused.mem.kernel_launches, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity exceeded")]
+    fn local_capacity_enforced() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o[0]);
+        let ir = lower(&g);
+        let mut rng = Rng::new(3);
+        let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 2)]));
+        cfg.inputs.insert("A".into(), block_list(&mut rng, 2, 8, 8));
+        cfg.local_capacity = Some(100); // one 8x8 block = 256 bytes > 100
+        let _ = exec(&ir, &cfg);
+    }
+}

@@ -1,0 +1,852 @@
+//! Lowering of block programs to Loop IR.
+//!
+//! Structure-directed: each map node becomes a loop (`forall`, or a serial
+//! `for` when any output is reduced — the paper's Rule-3 lowering choice);
+//! each buffered value becomes a global-memory buffer indexed by the
+//! enclosing iteration dims; each unbuffered value becomes a local var.
+//! Loads are emitted lazily at the first consumer in a scope and memoized,
+//! so a map input merged by Rule 2 is loaded once per iteration exactly like
+//! the paper's listings.
+
+use super::{analyze_clears, BufDecl, BufId, COp, Index, LoopIr, LoopKind, Stmt, VarId};
+use crate::ir::dim::Dim;
+use crate::ir::func::ReduceOp;
+use crate::ir::graph::{port, ArgMode, Graph, NodeId, NodeKind, OutMode, Port};
+use crate::ir::types::Ty;
+use std::collections::HashMap;
+
+/// Where a graph-level value lives during lowering.
+#[derive(Clone, Debug)]
+enum Binding {
+    /// A local var holding an item.
+    Var(VarId),
+    /// A global buffer; `idx[i]` is `Some` once the i-th buffer dim is bound
+    /// to an index expression. Fully bound => a single item, loadable.
+    Buf { buf: BufId, idx: Vec<Option<Index>> },
+}
+
+impl Binding {
+    fn unbound_dims<'a>(&self, bufs: &'a [BufDecl]) -> Vec<&'a Dim> {
+        match self {
+            Binding::Var(_) => vec![],
+            Binding::Buf { buf, idx } => idx
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.is_none())
+                .map(|(i, _)| &bufs[*buf].dims[i])
+                .collect(),
+        }
+    }
+
+    /// Bind the first unbound slot whose dim equals `d`.
+    fn bind_dim(&self, bufs: &[BufDecl], d: &Dim, to: Index) -> Binding {
+        match self {
+            Binding::Var(_) => panic!("bind_dim on a Var binding"),
+            Binding::Buf { buf, idx } => {
+                let decl = &bufs[*buf];
+                let slot = idx
+                    .iter()
+                    .enumerate()
+                    .position(|(i, s)| s.is_none() && decl.dims[i] == *d)
+                    .unwrap_or_else(|| {
+                        panic!("bind_dim: no unbound slot for {d} in buf {}", decl.name)
+                    });
+                let mut idx = idx.clone();
+                idx[slot] = Some(to);
+                Binding::Buf { buf: *buf, idx }
+            }
+        }
+    }
+
+    fn fully_bound(&self) -> Option<(BufId, Vec<Index>)> {
+        match self {
+            Binding::Var(_) => None,
+            Binding::Buf { buf, idx } => {
+                let mut out = Vec::with_capacity(idx.len());
+                for s in idx {
+                    out.push(s.clone()?);
+                }
+                Some((*buf, out))
+            }
+        }
+    }
+}
+
+/// Destination for an inner-graph output / graph output value.
+#[derive(Clone, Debug)]
+enum OutBinding {
+    /// Store elements into this partially-indexed buffer.
+    Buf { buf: BufId, idx: Vec<Option<Index>> },
+    /// Accumulate items into this var with this op.
+    Accum(VarId, ReduceOp),
+}
+
+struct LowerState {
+    bufs: Vec<BufDecl>,
+    n_vars: usize,
+    params: Vec<String>,
+    /// Enclosing loop dims, outermost first.
+    stack: Vec<Dim>,
+    next_tmp_buf: usize,
+}
+
+impl LowerState {
+    fn fresh_var(&mut self) -> VarId {
+        self.n_vars += 1;
+        self.n_vars - 1
+    }
+
+    fn fresh_buf(&mut self, dims: Vec<Dim>, item: crate::ir::types::Item) -> BufId {
+        self.next_tmp_buf += 1;
+        self.bufs.push(BufDecl {
+            name: format!("I{}", self.next_tmp_buf),
+            dims,
+            item,
+            is_input: false,
+            is_output: false,
+        });
+        self.bufs.len() - 1
+    }
+
+    fn note_params(&mut self, expr: &crate::ir::expr::Expr) {
+        let mut ps = Vec::new();
+        expr.params(&mut ps);
+        for p in ps {
+            if !self.params.contains(&p) {
+                self.params.push(p);
+            }
+        }
+    }
+}
+
+/// Per-body emission scope: statements plus a load memo so one buffer
+/// element is loaded at most once per scope.
+struct Scope {
+    stmts: Vec<Stmt>,
+    load_memo: HashMap<(BufId, Vec<Index>), VarId>,
+}
+
+impl Scope {
+    fn new() -> Scope {
+        Scope {
+            stmts: vec![],
+            load_memo: HashMap::new(),
+        }
+    }
+}
+
+/// Lower a top-level block program to Loop IR.
+pub fn lower(g: &Graph) -> LoopIr {
+    let mut st = LowerState {
+        bufs: vec![],
+        n_vars: 0,
+        params: vec![],
+        stack: vec![],
+        next_tmp_buf: 0,
+    };
+
+    // Program inputs/outputs become named buffers.
+    let mut in_bindings: HashMap<NodeId, Binding> = HashMap::new();
+    for id in g.input_ids() {
+        let ty = g.input_ty(id).clone();
+        st.bufs.push(BufDecl {
+            name: g.node(id).label.clone(),
+            dims: ty.dims.clone(),
+            item: ty.item,
+            is_input: true,
+            is_output: false,
+        });
+        let buf = st.bufs.len() - 1;
+        in_bindings.insert(
+            id,
+            Binding::Buf {
+                buf,
+                idx: vec![None; ty.dims.len()],
+            },
+        );
+    }
+    let mut out_bindings: HashMap<NodeId, OutBinding> = HashMap::new();
+    for id in g.output_ids() {
+        let src = g
+            .producer(port(id, 0))
+            .unwrap_or_else(|| panic!("program output {} unconnected", g.node(id).label));
+        let ty = g.out_ty(src);
+        st.bufs.push(BufDecl {
+            name: g.node(id).label.clone(),
+            dims: ty.dims.clone(),
+            item: ty.item,
+            is_input: false,
+            is_output: true,
+        });
+        let buf = st.bufs.len() - 1;
+        out_bindings.insert(
+            id,
+            OutBinding::Buf {
+                buf,
+                idx: vec![None; ty.dims.len()],
+            },
+        );
+    }
+
+    let mut scope = Scope::new();
+    lower_graph(g, &in_bindings, &out_bindings, &mut st, &mut scope);
+
+    let mut ir = LoopIr {
+        bufs: st.bufs,
+        body: scope.stmts,
+        n_vars: st.n_vars,
+        params: st.params,
+    };
+    analyze_clears(&mut ir);
+    ir
+}
+
+fn lower_graph(
+    g: &Graph,
+    in_bindings: &HashMap<NodeId, Binding>,
+    out_bindings: &HashMap<NodeId, OutBinding>,
+    st: &mut LowerState,
+    scope: &mut Scope,
+) {
+    let mut bindings: HashMap<Port, Binding> = HashMap::new();
+    for (id, b) in in_bindings {
+        bindings.insert(port(*id, 0), b.clone());
+    }
+
+    // Pre-scan: route values that feed Output nodes (and Concat list slots)
+    // directly into their destination buffers, so producers materialize in
+    // place instead of into temporaries.
+    let mut out_dest: HashMap<Port, Vec<OutBinding>> = HashMap::new();
+    for id in g.output_ids() {
+        if let (Some(src), Some(ob)) = (g.producer(port(id, 0)), out_bindings.get(&id)) {
+            // Only list-typed values benefit from routing; item values are
+            // stored at the Output node itself.
+            if g.out_ty(src).is_list() {
+                out_dest.entry(src).or_default().push(ob.clone());
+            }
+        }
+    }
+    // Concat nodes: allocate their buffer up front and route the list input.
+    let mut concat_buf: HashMap<NodeId, BufId> = HashMap::new();
+    for id in g.node_ids() {
+        if let NodeKind::Concat { .. } = &g.node(id).kind {
+            let ty = g.out_ty(port(id, 0));
+            // Reuse an Output destination if the concat feeds one directly.
+            let dest = out_dest.get(&port(id, 0)).and_then(|v| {
+                v.iter().find_map(|ob| match ob {
+                    OutBinding::Buf { buf, idx } if idx.iter().all(|s| s.is_none()) => Some(*buf),
+                    _ => None,
+                })
+            });
+            let buf = dest.unwrap_or_else(|| {
+                let mut dims = st.stack.clone();
+                dims.extend(ty.dims.iter().cloned());
+                st.fresh_buf(dims, ty.item)
+            });
+            concat_buf.insert(id, buf);
+            if let Some(list_src) = g.producer(port(id, 1)) {
+                let mut idx: Vec<Option<Index>> = st
+                    .stack
+                    .iter()
+                    .map(|d| Some(Index::Iter(d.clone())))
+                    .collect();
+                idx.extend(std::iter::repeat(None).take(ty.dims.len()));
+                out_dest
+                    .entry(list_src)
+                    .or_default()
+                    .push(OutBinding::Buf { buf, idx });
+            }
+        }
+    }
+
+    for id in g.topo_order() {
+        let node = g.node(id);
+        match &node.kind {
+            NodeKind::Input { .. } => {}
+            NodeKind::Output => {
+                let src = g.producer(port(id, 0)).expect("output unconnected");
+                let Some(ob) = out_bindings.get(&id) else {
+                    panic!("no out binding for output node {id} ({})", node.label)
+                };
+                let b = bindings
+                    .get(&src)
+                    .unwrap_or_else(|| panic!("output source {src:?} has no binding"))
+                    .clone();
+                emit_out(&b, ob, st, scope, g, src);
+            }
+            NodeKind::Func(f) => {
+                let mut args = Vec::with_capacity(f.arity());
+                for i in 0..f.arity() {
+                    let src = g.producer(port(id, i)).expect("func input unconnected");
+                    let b = bindings[&src].clone();
+                    args.push(resolve_item(&b, st, scope));
+                }
+                if let crate::ir::func::FuncOp::Ew(e) = f {
+                    st.note_params(e);
+                }
+                let var = st.fresh_var();
+                scope.stmts.push(Stmt::Compute {
+                    var,
+                    op: COp::Func(f.clone()),
+                    args,
+                });
+                bindings.insert(port(id, 0), Binding::Var(var));
+            }
+            NodeKind::Reduce(op) => {
+                let src = g.producer(port(id, 0)).expect("reduce input unconnected");
+                let b = bindings[&src].clone();
+                let unbound = b.unbound_dims(&st.bufs);
+                assert_eq!(
+                    unbound.len(),
+                    1,
+                    "reduce input must be a single-level list; got {unbound:?}"
+                );
+                let d = unbound[0].clone();
+                let bound = b.bind_dim(&st.bufs, &d, Index::Iter(d.clone()));
+                let acc = st.fresh_var();
+                let mut inner = Scope::new();
+                st.stack.push(d.clone());
+                let tmp = resolve_item(&bound, st, &mut inner);
+                st.stack.pop();
+                inner.stmts.push(Stmt::Accum {
+                    var: acc,
+                    op: *op,
+                    src: tmp,
+                });
+                scope.stmts.push(Stmt::Loop {
+                    kind: LoopKind::For,
+                    dim: d,
+                    skip_first: false,
+                    body: inner.stmts,
+                    clears: vec![],
+                });
+                bindings.insert(port(id, 0), Binding::Var(acc));
+            }
+            NodeKind::Head => {
+                let src = g.producer(port(id, 0)).expect("head input unconnected");
+                let b = bindings[&src].clone();
+                let unbound = b.unbound_dims(&st.bufs);
+                assert!(!unbound.is_empty(), "head input must be a list");
+                // bind the outermost pending dim to 0
+                let d = unbound[0].clone();
+                let bound = b.bind_dim(&st.bufs, &d, Index::Zero);
+                if unbound.len() == 1 {
+                    let var = resolve_item(&bound, st, scope);
+                    bindings.insert(port(id, 0), Binding::Var(var));
+                } else {
+                    bindings.insert(port(id, 0), bound);
+                }
+            }
+            NodeKind::Concat { .. } => {
+                let buf = concat_buf[&id];
+                // Store the head item at index 0.
+                let item_src = g.producer(port(id, 0)).expect("concat item unconnected");
+                let item_b = bindings[&item_src].clone();
+                let v = resolve_item(&item_b, st, scope);
+                let mut idx: Vec<Index> = st.stack.iter().map(|d| Index::Iter(d.clone())).collect();
+                idx.push(Index::Zero);
+                // Elements beyond the first were routed into `buf` by the
+                // producer via out_dest (skip-first map stores slots 1..X).
+                scope.stmts.push(Stmt::Store { var: v, buf, idx });
+                let decl_dims = st.bufs[buf].dims.len();
+                let mut bidx: Vec<Option<Index>> = st
+                    .stack
+                    .iter()
+                    .map(|d| Some(Index::Iter(d.clone())))
+                    .collect();
+                bidx.extend(std::iter::repeat(None).take(decl_dims - st.stack.len()));
+                bindings.insert(port(id, 0), Binding::Buf { buf, idx: bidx });
+            }
+            NodeKind::Misc { tag, out_tys, .. } => {
+                assert_eq!(out_tys.len(), 1, "misc lowering supports 1 output");
+                let n_in = node.in_arity();
+                let all_items = (0..n_in).all(|i| {
+                    let src = g.producer(port(id, i)).expect("misc input unconnected");
+                    matches!(bindings[&src], Binding::Var(_))
+                        || bindings[&src].fully_bound().is_some()
+                }) && !out_tys[0].is_list();
+                if all_items {
+                    // item-level opaque op: a plain local computation
+                    let mut args = Vec::new();
+                    for i in 0..n_in {
+                        let src = g.producer(port(id, i)).expect("misc input unconnected");
+                        args.push(resolve_item(&bindings[&src], st, scope));
+                    }
+                    let var = st.fresh_var();
+                    scope.stmts.push(Stmt::Compute {
+                        var,
+                        op: COp::Misc(tag.clone()),
+                        args,
+                    });
+                    bindings.insert(port(id, 0), Binding::Var(var));
+                } else {
+                    // whole-array opaque kernel
+                    let mut args = Vec::new();
+                    for i in 0..n_in {
+                        let src = g.producer(port(id, i)).expect("misc input unconnected");
+                        match bindings[&src].clone() {
+                            Binding::Buf { buf, idx } => args.push((buf, idx)),
+                            Binding::Var(v) => {
+                                // materialize a local item so the call sees
+                                // a (degenerate) buffer
+                                let buf = st.fresh_buf(st.stack.clone(), out_tys[0].item);
+                                let full: Vec<Index> = st
+                                    .stack
+                                    .iter()
+                                    .map(|d| Index::Iter(d.clone()))
+                                    .collect();
+                                scope.stmts.push(Stmt::Store {
+                                    var: v,
+                                    buf,
+                                    idx: full.clone(),
+                                });
+                                args.push((buf, full.into_iter().map(Some).collect()));
+                            }
+                        }
+                    }
+                    let out_ty = &out_tys[0];
+                    let mut dims = st.stack.clone();
+                    dims.extend(out_ty.dims.iter().cloned());
+                    let out_buf = st.fresh_buf(dims, out_ty.item);
+                    let mut out_idx: Vec<Option<Index>> = st
+                        .stack
+                        .iter()
+                        .map(|d| Some(Index::Iter(d.clone())))
+                        .collect();
+                    out_idx.extend(std::iter::repeat(None).take(out_ty.dims.len()));
+                    scope.stmts.push(Stmt::MiscCall {
+                        tag: tag.clone(),
+                        args,
+                        out: (out_buf, out_idx.clone()),
+                    });
+                    bindings.insert(
+                        port(id, 0),
+                        Binding::Buf {
+                            buf: out_buf,
+                            idx: out_idx,
+                        },
+                    );
+                }
+            }
+            NodeKind::Map(m) => {
+                lower_map(g, id, m, &mut bindings, &out_dest, st, scope);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lower_map(
+    g: &Graph,
+    id: NodeId,
+    m: &crate::ir::graph::MapNode,
+    bindings: &mut HashMap<Port, Binding>,
+    out_dest: &HashMap<Port, Vec<OutBinding>>,
+    st: &mut LowerState,
+    scope: &mut Scope,
+) {
+    assert!(
+        !st.stack.contains(&m.dim),
+        "nested loops over the same dim {} are not supported",
+        m.dim
+    );
+    let kind = if m.has_reduction() {
+        LoopKind::For
+    } else {
+        LoopKind::ForAll
+    };
+
+    // Bindings for the inner graph's Input nodes.
+    let mut inner_in: HashMap<NodeId, Binding> = HashMap::new();
+    for (i, mi) in m.inputs.iter().enumerate() {
+        let src = g
+            .producer(port(id, i))
+            .unwrap_or_else(|| panic!("map {id} input {i} unconnected"));
+        let b = bindings
+            .get(&src)
+            .unwrap_or_else(|| panic!("map {id} input {i}: source {src:?} unbound"))
+            .clone();
+        let inner_b = match mi.mode {
+            ArgMode::Mapped => b.bind_dim(&st.bufs, &m.dim, Index::Iter(m.dim.clone())),
+            ArgMode::Bcast => b,
+        };
+        inner_in.insert(mi.inner_input, inner_b);
+    }
+
+    // Destinations for the inner graph's Output nodes.
+    let mut inner_out: HashMap<NodeId, OutBinding> = HashMap::new();
+    let mut post: Vec<(usize, Binding)> = Vec::new(); // (out port, post-loop binding)
+    let mut extra_copies: Vec<(usize, OutBinding)> = Vec::new();
+    for (j, mo) in m.outputs.iter().enumerate() {
+        match &mo.mode {
+            OutMode::Collect => {
+                let outer_ty: Ty = g.out_ty(port(id, j));
+                let dests = out_dest.get(&port(id, j));
+                let primary: Option<(BufId, Vec<Option<Index>>)> =
+                    dests.and_then(|v| {
+                        v.iter().find_map(|ob| match ob {
+                            OutBinding::Buf { buf, idx } => Some((*buf, idx.clone())),
+                            _ => None,
+                        })
+                    });
+                let had_primary = primary.is_some();
+                let (buf, base_idx) = match primary {
+                    Some(x) => x,
+                    None => {
+                        let mut dims = st.stack.clone();
+                        dims.extend(outer_ty.dims.iter().cloned());
+                        let buf = st.fresh_buf(dims, outer_ty.item);
+                        let mut idx: Vec<Option<Index>> = st
+                            .stack
+                            .iter()
+                            .map(|d| Some(Index::Iter(d.clone())))
+                            .collect();
+                        idx.extend(std::iter::repeat(None).take(outer_ty.dims.len()));
+                        (buf, idx)
+                    }
+                };
+                // Bind this map's dim slot for the inner graph.
+                let inner_ob = {
+                    let b = Binding::Buf {
+                        buf,
+                        idx: base_idx.clone(),
+                    }
+                    .bind_dim(&st.bufs, &m.dim, Index::Iter(m.dim.clone()));
+                    match b {
+                        Binding::Buf { buf, idx } => OutBinding::Buf { buf, idx },
+                        _ => unreachable!(),
+                    }
+                };
+                inner_out.insert(mo.inner_output, inner_ob);
+                post.push((
+                    j,
+                    Binding::Buf {
+                        buf,
+                        idx: base_idx.clone(),
+                    },
+                ));
+                if let Some(v) = dests {
+                    for ob in v.iter().skip(if had_primary { 1 } else { 0 }) {
+                        extra_copies.push((j, ob.clone()));
+                    }
+                }
+            }
+            OutMode::Reduce(op) => {
+                let acc = st.fresh_var();
+                inner_out.insert(mo.inner_output, OutBinding::Accum(acc, *op));
+                post.push((j, Binding::Var(acc)));
+            }
+        }
+    }
+
+    // Lower the inner graph inside the loop.
+    let mut inner_scope = Scope::new();
+    st.stack.push(m.dim.clone());
+    lower_graph(&m.inner, &inner_in, &inner_out, st, &mut inner_scope);
+    st.stack.pop();
+    scope.stmts.push(Stmt::Loop {
+        kind,
+        dim: m.dim.clone(),
+        skip_first: m.skip_first,
+        body: inner_scope.stmts,
+        clears: vec![],
+    });
+
+    for (j, b) in post {
+        bindings.insert(port(id, j), b);
+    }
+    // Rare: a collect output feeding multiple Output nodes — copy.
+    for (j, ob) in extra_copies {
+        let b = bindings[&port(id, j)].clone();
+        emit_copy_list(&b, &ob, st, scope);
+    }
+}
+
+/// Emit the value behind `b` as a local var (loading from global memory if
+/// necessary, with per-scope memoization).
+fn resolve_item(b: &Binding, st: &mut LowerState, scope: &mut Scope) -> VarId {
+    match b {
+        Binding::Var(v) => *v,
+        Binding::Buf { .. } => {
+            let (buf, idx) = b.fully_bound().unwrap_or_else(|| {
+                panic!(
+                    "resolve_item: binding not fully bound: {:?} (unbound {:?})",
+                    b,
+                    b.unbound_dims(&st.bufs)
+                )
+            });
+            if let Some(v) = scope.load_memo.get(&(buf, idx.clone())) {
+                return *v;
+            }
+            let var = st.fresh_var();
+            scope.stmts.push(Stmt::Load {
+                var,
+                buf,
+                idx: idx.clone(),
+            });
+            scope.load_memo.insert((buf, idx), var);
+            var
+        }
+    }
+}
+
+/// Emit the graph-output handling for a produced value.
+fn emit_out(
+    b: &Binding,
+    ob: &OutBinding,
+    st: &mut LowerState,
+    scope: &mut Scope,
+    g: &Graph,
+    src: Port,
+) {
+    match (b, ob) {
+        (Binding::Var(v), OutBinding::Buf { buf, idx }) => {
+            let full: Vec<Index> = idx
+                .iter()
+                .map(|s| s.clone().expect("item store into unbound buffer slot"))
+                .collect();
+            scope.stmts.push(Stmt::Store {
+                var: *v,
+                buf: *buf,
+                idx: full,
+            });
+        }
+        (Binding::Var(v), OutBinding::Accum(acc, op)) => {
+            scope.stmts.push(Stmt::Accum {
+                var: *acc,
+                op: *op,
+                src: *v,
+            });
+        }
+        (Binding::Buf { buf, .. }, OutBinding::Buf { buf: dest, .. }) if buf == dest => {
+            // Already materialized in place via out_dest routing.
+        }
+        (Binding::Buf { .. }, OutBinding::Buf { .. }) => {
+            // Producer materialized elsewhere (e.g. pass-through of an
+            // input): copy element-by-element.
+            let _ = g;
+            let _ = src;
+            emit_copy_list(b, ob, st, scope);
+        }
+        (Binding::Buf { .. }, OutBinding::Accum(..)) => {
+            panic!("list value cannot feed an accumulating output")
+        }
+    }
+}
+
+/// Copy a (possibly partially bound) list value into a destination buffer,
+/// looping over the unbound dims.
+fn emit_copy_list(b: &Binding, ob: &OutBinding, st: &mut LowerState, scope: &mut Scope) {
+    let OutBinding::Buf {
+        buf: dest,
+        idx: dest_idx,
+    } = ob
+    else {
+        panic!("emit_copy_list: non-buffer destination");
+    };
+    let unbound: Vec<Dim> = b
+        .unbound_dims(&st.bufs)
+        .into_iter()
+        .cloned()
+        .collect();
+    fn rec(
+        b: &Binding,
+        dest: BufId,
+        dest_idx: &[Option<Index>],
+        rest: &[Dim],
+        st: &mut LowerState,
+        scope: &mut Scope,
+    ) {
+        match rest.split_first() {
+            None => {
+                let v = resolve_item(b, st, scope);
+                let full: Vec<Index> = dest_idx
+                    .iter()
+                    .map(|s| s.clone().expect("copy: unbound dest slot"))
+                    .collect();
+                scope.stmts.push(Stmt::Store {
+                    var: v,
+                    buf: dest,
+                    idx: full,
+                });
+            }
+            Some((d, more)) => {
+                let bb = b.bind_dim(&st.bufs, d, Index::Iter(d.clone()));
+                // bind the matching dest slot
+                let mut di = dest_idx.to_vec();
+                let decl = &st.bufs[dest];
+                if let Some(slot) = di
+                    .iter()
+                    .enumerate()
+                    .position(|(i, s)| s.is_none() && decl.dims[i] == *d)
+                {
+                    di[slot] = Some(Index::Iter(d.clone()));
+                }
+                let mut inner = Scope::new();
+                st.stack.push(d.clone());
+                rec(&bb, dest, &di, more, st, &mut inner);
+                st.stack.pop();
+                scope.stmts.push(Stmt::Loop {
+                    kind: LoopKind::ForAll,
+                    dim: d.clone(),
+                    skip_first: false,
+                    body: inner.stmts,
+                    clears: vec![],
+                });
+            }
+        }
+    }
+    rec(b, *dest, dest_idx, &unbound, st, scope);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+    use crate::ir::func::FuncOp;
+    use crate::ir::graph::{map_over, ArgMode, Graph};
+    use crate::ir::types::Ty;
+
+    /// §2.1 example: `forall n: a = load(A[n]); b = (a-s)/d; store(b, B[n])`.
+    #[test]
+    fn lower_simple_map() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let e = Expr::var(0).sub(Expr::cst(1.0)).div(Expr::cst(2.0));
+            let r = mb.g.ew1(e, ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o[0]);
+        let ir = lower(&g);
+        assert_eq!(ir.bufs.len(), 2); // A and B, no temporaries
+        assert_eq!(ir.kernel_launches(), 1);
+        assert_eq!(ir.transfer_sites(), (1, 1));
+        match &ir.body[0] {
+            Stmt::Loop { kind, dim, body, .. } => {
+                assert_eq!(*kind, LoopKind::ForAll);
+                assert_eq!(dim.name(), "N");
+                assert_eq!(body.len(), 3); // load, compute, store
+            }
+            other => panic!("expected loop, got {other:?}"),
+        }
+    }
+
+    /// Chained maps materialize an interior temporary buffer I1.
+    #[test]
+    fn lower_chained_maps_materializes() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o1 = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            mb.collect(r);
+        });
+        let o2 = map_over(&mut g, "N", &[(o1[0], ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).neg(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o2[0]);
+        let ir = lower(&g);
+        assert_eq!(ir.bufs.len(), 3); // A, B, I1
+        assert!(ir.bufs.iter().any(|b| b.name == "I1"));
+        assert_eq!(ir.kernel_launches(), 2);
+    }
+
+    /// Map + reduction node: serial loop with accumulator.
+    #[test]
+    fn lower_reduce_node() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.collect(r);
+        });
+        let red = g.reduce(ReduceOp::Add, o[0]);
+        g.output("c", red);
+        let ir = lower(&g);
+        // forall n {load, rowsum, store I1}; for n {load, accum}; store c
+        assert_eq!(ir.kernel_launches(), 2);
+        let has_for = ir
+            .body
+            .iter()
+            .any(|s| matches!(s, Stmt::Loop { kind: LoopKind::For, .. }));
+        assert!(has_for);
+        assert!(matches!(ir.body.last(), Some(Stmt::Store { .. })));
+    }
+
+    /// Reduced map output: single serial loop, no temporary buffer.
+    #[test]
+    fn lower_fused_map_reduce() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.reduce_out(r, ReduceOp::Add);
+        });
+        g.output("c", o[0]);
+        let ir = lower(&g);
+        assert_eq!(ir.bufs.len(), 2); // A, c only
+        assert_eq!(ir.kernel_launches(), 1);
+        match &ir.body[0] {
+            Stmt::Loop { kind, .. } => assert_eq!(*kind, LoopKind::For),
+            other => panic!("expected loop, got {other:?}"),
+        }
+    }
+
+    /// Shared map input is loaded once per iteration (Rule-2 merge effect).
+    #[test]
+    fn shared_input_single_load() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let x = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            let y = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            let z = mb.g.func(FuncOp::RowScale, &[y, x]);
+            mb.collect(z);
+        });
+        g.output("B", o[0]);
+        let ir = lower(&g);
+        assert_eq!(ir.transfer_sites().0, 1, "A loaded once per iteration");
+    }
+
+    /// Output buffer is written in place (no extra temp + copy).
+    #[test]
+    fn collect_routes_to_output_buffer() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["M", "N"]));
+        let o = map_over(&mut g, "M", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let inner = map_over(&mut mb.g, "N", &[(ins[0], ArgMode::Mapped)], |mb2, ins2| {
+                let r = mb2.g.ew1(Expr::var(0).exp(), ins2[0]);
+                mb2.collect(r);
+            });
+            mb.collect(inner[0]);
+        });
+        g.output("B", o[0]);
+        let ir = lower(&g);
+        assert_eq!(ir.bufs.len(), 2, "no temporaries: {:?}", ir.bufs);
+        // store goes directly into B with idx [m, n]
+        fn find_store(stmts: &[Stmt]) -> Option<(BufId, Vec<Index>)> {
+            for s in stmts {
+                match s {
+                    Stmt::Store { buf, idx, .. } => return Some((*buf, idx.clone())),
+                    Stmt::Loop { body, .. } => {
+                        if let Some(x) = find_store(body) {
+                            return Some(x);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            None
+        }
+        let (buf, idx) = find_store(&ir.body).unwrap();
+        assert_eq!(ir.bufs[buf].name, "B");
+        assert_eq!(
+            idx,
+            vec![
+                Index::Iter(Dim::new("M")),
+                Index::Iter(Dim::new("N"))
+            ]
+        );
+    }
+}

@@ -1,0 +1,307 @@
+//! Loop IR — the executable/printable form of a block program.
+//!
+//! A block program lowers to a nest of `forall` (parallelizable) and `for`
+//! (serial, accumulator-carrying) loops over explicit `load`/`store`
+//! instructions — exactly the representation the paper uses for all of its
+//! code listings. One lowering serves three purposes:
+//!
+//! * [`print`] renders the paper-style listings;
+//! * [`interp`] executes programs on concrete data while simulating the
+//!   two-tier memory (counting every global<->local transfer);
+//! * `cost` (top-level module) statically derives traffic/flops/launches.
+//!
+//! Buffers (`Buf`) are global-memory arrays of local items, indexed by the
+//! enclosing iteration dims; vars (`VarId`) are local-memory temporaries.
+
+pub mod interp;
+pub mod lower;
+pub mod print;
+
+use crate::ir::dim::Dim;
+use crate::ir::func::{FuncOp, ReduceOp};
+use crate::ir::types::Item;
+use std::collections::HashSet;
+
+pub type VarId = usize;
+pub type BufId = usize;
+
+/// One index expression of a buffer access.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub enum Index {
+    /// The value of the nearest enclosing loop over this dim.
+    Iter(Dim),
+    /// Constant 0 (Rule 7's peeled iteration).
+    Zero,
+}
+
+/// A global-memory buffer declaration.
+#[derive(Clone, Debug)]
+pub struct BufDecl {
+    pub name: String,
+    pub dims: Vec<Dim>,
+    pub item: Item,
+    pub is_input: bool,
+    pub is_output: bool,
+}
+
+/// Loop flavor. `ForAll` is embarrassingly parallel; `For` is serial
+/// (carries accumulators — the paper's Rule 3 lowering choice).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum LoopKind {
+    ForAll,
+    For,
+}
+
+/// A computation op on local values.
+#[derive(Clone, PartialEq, Debug)]
+pub enum COp {
+    Func(FuncOp),
+    /// Opaque miscellaneous operator; the interpreter needs a registered
+    /// callback to execute it.
+    Misc(String),
+}
+
+#[derive(Clone, Debug)]
+pub enum Stmt {
+    Loop {
+        kind: LoopKind,
+        dim: Dim,
+        /// Rule 7: iterate `1..X` instead of `0..X`.
+        skip_first: bool,
+        body: Vec<Stmt>,
+        /// Vars to reset at the start of every iteration (computed by
+        /// [`analyze_clears`]): everything assigned in the body except
+        /// accumulators carried by this loop itself.
+        clears: Vec<VarId>,
+    },
+    Load {
+        var: VarId,
+        buf: BufId,
+        idx: Vec<Index>,
+    },
+    Store {
+        var: VarId,
+        buf: BufId,
+        idx: Vec<Index>,
+    },
+    Compute {
+        var: VarId,
+        op: COp,
+        args: Vec<VarId>,
+    },
+    /// `var ⊕= src` with implicit neutral-element initialization.
+    Accum {
+        var: VarId,
+        op: ReduceOp,
+        src: VarId,
+    },
+    /// Whole-array miscellaneous operator call (opaque kernel): reads every
+    /// element of each (partially indexed) input buffer, writes every
+    /// element of the output buffer. `idx` slots that are `None` range over
+    /// the buffer dim; bound slots are fixed by enclosing loops.
+    MiscCall {
+        tag: String,
+        args: Vec<(BufId, Vec<Option<Index>>)>,
+        out: (BufId, Vec<Option<Index>>),
+    },
+}
+
+/// A lowered block program.
+#[derive(Clone, Debug, Default)]
+pub struct LoopIr {
+    pub bufs: Vec<BufDecl>,
+    pub body: Vec<Stmt>,
+    pub n_vars: usize,
+    /// Named scalar parameters referenced by elementwise exprs (`DD`, `KK`).
+    pub params: Vec<String>,
+}
+
+impl LoopIr {
+    pub fn buf_by_name(&self, name: &str) -> Option<BufId> {
+        self.bufs.iter().position(|b| b.name == name)
+    }
+
+    /// Number of top-level loop nests — the kernel-launch count of the
+    /// program (each top-level operator is one kernel; opaque miscellaneous
+    /// calls count as one kernel each).
+    pub fn kernel_launches(&self) -> usize {
+        self.body
+            .iter()
+            .filter(|s| matches!(s, Stmt::Loop { .. } | Stmt::MiscCall { .. }))
+            .count()
+    }
+
+    /// Count of load/store instruction *sites* (static, not trip-weighted).
+    pub fn transfer_sites(&self) -> (usize, usize) {
+        fn walk(stmts: &[Stmt], loads: &mut usize, stores: &mut usize) {
+            for s in stmts {
+                match s {
+                    Stmt::Load { .. } => *loads += 1,
+                    Stmt::Store { .. } => *stores += 1,
+                    Stmt::Loop { body, .. } => walk(body, loads, stores),
+                    _ => {}
+                }
+            }
+        }
+        let (mut l, mut st) = (0, 0);
+        walk(&self.body, &mut l, &mut st);
+        (l, st)
+    }
+}
+
+/// Compute per-loop clear sets: at the start of each iteration of a loop,
+/// every var assigned anywhere in its body is reset, *except* accumulators
+/// that are direct children of the loop (those carry across iterations and
+/// are reset by the parent's clear instead). This encodes the paper's
+/// scoping convention for `forall`/`for` listings.
+pub fn analyze_clears(ir: &mut LoopIr) {
+    fn assigned(stmts: &[Stmt], out: &mut HashSet<VarId>) {
+        for s in stmts {
+            match s {
+                Stmt::Load { var, .. }
+                | Stmt::Compute { var, .. }
+                | Stmt::Accum { var, .. } => {
+                    out.insert(*var);
+                }
+                Stmt::Loop { body, .. } => assigned(body, out),
+                Stmt::Store { .. } | Stmt::MiscCall { .. } => {}
+            }
+        }
+    }
+    fn walk(stmts: &mut [Stmt]) {
+        for s in stmts {
+            if let Stmt::Loop { body, clears, .. } = s {
+                let mut set = HashSet::new();
+                assigned(body, &mut set);
+                for child in body.iter() {
+                    if let Stmt::Accum { var, .. } = child {
+                        set.remove(var);
+                    }
+                }
+                let mut v: Vec<VarId> = set.into_iter().collect();
+                v.sort_unstable();
+                *clears = v;
+                walk(body);
+            }
+        }
+    }
+    walk(&mut ir.body);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(var: VarId) -> Stmt {
+        Stmt::Load {
+            var,
+            buf: 0,
+            idx: vec![Index::Iter(Dim::new("N"))],
+        }
+    }
+
+    #[test]
+    fn clears_protect_direct_accumulators() {
+        let mut ir = LoopIr {
+            bufs: vec![BufDecl {
+                name: "A".into(),
+                dims: vec![Dim::new("N")],
+                item: Item::Block,
+                is_input: true,
+                is_output: false,
+            }],
+            body: vec![Stmt::Loop {
+                kind: LoopKind::For,
+                dim: Dim::new("N"),
+                skip_first: false,
+                clears: vec![],
+                body: vec![
+                    load(0),
+                    Stmt::Accum {
+                        var: 1,
+                        op: ReduceOp::Add,
+                        src: 0,
+                    },
+                ],
+            }],
+            n_vars: 2,
+            params: vec![],
+        };
+        analyze_clears(&mut ir);
+        match &ir.body[0] {
+            Stmt::Loop { clears, .. } => {
+                assert_eq!(clears, &vec![0]); // t0 reset; accumulator t1 kept
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn nested_accumulator_cleared_by_parent() {
+        // forall m { for n { t0=load; t1+=t0 } } : m-loop clears both.
+        let inner = Stmt::Loop {
+            kind: LoopKind::For,
+            dim: Dim::new("N"),
+            skip_first: false,
+            clears: vec![],
+            body: vec![
+                load(0),
+                Stmt::Accum {
+                    var: 1,
+                    op: ReduceOp::Add,
+                    src: 0,
+                },
+            ],
+        };
+        let mut ir = LoopIr {
+            bufs: vec![BufDecl {
+                name: "A".into(),
+                dims: vec![Dim::new("M"), Dim::new("N")],
+                item: Item::Block,
+                is_input: true,
+                is_output: false,
+            }],
+            body: vec![Stmt::Loop {
+                kind: LoopKind::ForAll,
+                dim: Dim::new("M"),
+                skip_first: false,
+                clears: vec![],
+                body: vec![inner],
+            }],
+            n_vars: 2,
+            params: vec![],
+        };
+        analyze_clears(&mut ir);
+        match &ir.body[0] {
+            Stmt::Loop { clears, .. } => assert_eq!(clears, &vec![0, 1]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn launch_and_site_counts() {
+        let ir = LoopIr {
+            bufs: vec![],
+            body: vec![
+                Stmt::Loop {
+                    kind: LoopKind::ForAll,
+                    dim: Dim::new("M"),
+                    skip_first: false,
+                    clears: vec![],
+                    body: vec![],
+                },
+                Stmt::Loop {
+                    kind: LoopKind::ForAll,
+                    dim: Dim::new("M"),
+                    skip_first: false,
+                    clears: vec![],
+                    body: vec![],
+                },
+            ],
+            n_vars: 0,
+            params: vec![],
+        };
+        assert_eq!(ir.kernel_launches(), 2);
+        assert_eq!(ir.transfer_sites(), (0, 0));
+    }
+}

@@ -1,0 +1,280 @@
+//! Paper-style code listings from Loop IR.
+//!
+//! Renders the exact notation of the paper's examples:
+//!
+//! ```text
+//! forall m in range(M):
+//!   for n in range(N):
+//!     for d in range(D):
+//!       t1 = load(Q[m,d])
+//!       t2 = load(KT[n,d])
+//!       t3 += dot(t1,t2)
+//!     t4 = exp(t3*(DD**-0.5))
+//! ```
+//!
+//! Vars are renumbered `t1, t2, …` in order of first definition; a `Compute`
+//! consumed exactly once by the immediately following `Accum` is inlined as
+//! `t += dot(a,b)`, matching the paper's accumulate notation.
+
+use super::{COp, Index, LoopIr, LoopKind, Stmt, VarId};
+use crate::ir::func::{FuncOp, ReduceOp};
+use std::collections::HashMap;
+use std::fmt::Write;
+
+pub fn render(ir: &LoopIr) -> String {
+    let mut names: HashMap<VarId, String> = HashMap::new();
+    let mut next = 1usize;
+    let mut out = String::new();
+    render_body(ir, &ir.body, 0, &mut names, &mut next, &mut out);
+    out
+}
+
+fn var_name(names: &mut HashMap<VarId, String>, next: &mut usize, v: VarId) -> String {
+    if let Some(n) = names.get(&v) {
+        return n.clone();
+    }
+    let n = format!("t{next}");
+    *next += 1;
+    names.insert(v, n.clone());
+    n
+}
+
+fn idx_str(idx: &[Index]) -> String {
+    idx.iter()
+        .map(|i| match i {
+            Index::Iter(d) => d.name().to_lowercase(),
+            Index::Zero => "0".to_string(),
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn buf_ref(ir: &LoopIr, buf: usize, idx: &[Index]) -> String {
+    let name = &ir.bufs[buf].name;
+    if idx.is_empty() {
+        name.clone()
+    } else {
+        format!("{name}[{}]", idx_str(idx))
+    }
+}
+
+fn compute_rhs(
+    op: &COp,
+    args: &[VarId],
+    names: &mut HashMap<VarId, String>,
+    next: &mut usize,
+) -> String {
+    let arg_names: Vec<String> = args.iter().map(|a| var_name(names, next, *a)).collect();
+    match op {
+        COp::Func(FuncOp::Ew(e)) => e.render(&arg_names),
+        COp::Func(f) => format!("{}({})", f.name(), arg_names.join(",")),
+        COp::Misc(tag) => format!("{tag}({})", arg_names.join(",")),
+    }
+}
+
+fn render_body(
+    ir: &LoopIr,
+    stmts: &[Stmt],
+    indent: usize,
+    names: &mut HashMap<VarId, String>,
+    next: &mut usize,
+    out: &mut String,
+) {
+    let pad = "  ".repeat(indent);
+    let mut i = 0;
+    while i < stmts.len() {
+        match &stmts[i] {
+            Stmt::Loop {
+                kind,
+                dim,
+                skip_first,
+                body,
+                ..
+            } => {
+                let kw = match kind {
+                    LoopKind::ForAll => "forall",
+                    LoopKind::For => "for",
+                };
+                let range = if *skip_first {
+                    format!("range(1,{})", dim.name())
+                } else {
+                    format!("range({})", dim.name())
+                };
+                let _ = writeln!(
+                    out,
+                    "{pad}{kw} {} in {range}:",
+                    dim.name().to_lowercase()
+                );
+                render_body(ir, body, indent + 1, names, next, out);
+            }
+            Stmt::Load { var, buf, idx } => {
+                let v = var_name(names, next, *var);
+                let _ = writeln!(out, "{pad}{v} = load({})", buf_ref(ir, *buf, idx));
+            }
+            Stmt::Store { var, buf, idx } => {
+                let v = var_name(names, next, *var);
+                let _ = writeln!(out, "{pad}store({v}, {})", buf_ref(ir, *buf, idx));
+            }
+            Stmt::Compute { var, op, args } => {
+                // Inline `t = f(...); acc += t` as `acc += f(...)` when the
+                // computed var is used only by that Accum (paper notation).
+                if let Some(Stmt::Accum {
+                    var: acc,
+                    op: rop,
+                    src,
+                }) = stmts.get(i + 1)
+                {
+                    if src == var && uses_of(ir, *var) == 1 {
+                        let rhs = compute_rhs(op, args, names, next);
+                        let a = var_name(names, next, *acc);
+                        match rop {
+                            ReduceOp::Add => {
+                                let _ = writeln!(out, "{pad}{a} += {rhs}");
+                            }
+                            ReduceOp::Max => {
+                                let _ = writeln!(out, "{pad}{a} = max({a}, {rhs})");
+                            }
+                        }
+                        i += 2;
+                        continue;
+                    }
+                }
+                let rhs = compute_rhs(op, args, names, next);
+                let v = var_name(names, next, *var);
+                let _ = writeln!(out, "{pad}{v} = {rhs}");
+            }
+            Stmt::Accum { var, op, src } => {
+                let s = var_name(names, next, *src);
+                let v = var_name(names, next, *var);
+                match op {
+                    ReduceOp::Add => {
+                        let _ = writeln!(out, "{pad}{v} += {s}");
+                    }
+                    ReduceOp::Max => {
+                        let _ = writeln!(out, "{pad}{v} = max({v}, {s})");
+                    }
+                }
+            }
+            Stmt::MiscCall { tag, args, out: o } => {
+                let fmt_partial = |buf: usize, idx: &[Option<Index>]| {
+                    let name = &ir.bufs[buf].name;
+                    if idx.is_empty() {
+                        name.clone()
+                    } else {
+                        let parts: Vec<String> = idx
+                            .iter()
+                            .map(|s| match s {
+                                Some(Index::Iter(d)) => d.name().to_lowercase(),
+                                Some(Index::Zero) => "0".into(),
+                                None => ":".into(),
+                            })
+                            .collect();
+                        format!("{name}[{}]", parts.join(","))
+                    }
+                };
+                let a: Vec<String> =
+                    args.iter().map(|(b, i)| fmt_partial(*b, i)).collect();
+                let _ = writeln!(
+                    out,
+                    "{pad}{} = {tag}({})",
+                    fmt_partial(o.0, &o.1),
+                    a.join(", ")
+                );
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Count reads of `var` across the whole program (for inlining decisions).
+fn uses_of(ir: &LoopIr, var: VarId) -> usize {
+    fn walk(stmts: &[Stmt], var: VarId, n: &mut usize) {
+        for s in stmts {
+            match s {
+                Stmt::Loop { body, .. } => walk(body, var, n),
+                Stmt::Store { var: v, .. } if *v == var => *n += 1,
+                Stmt::Compute { args, .. } => {
+                    *n += args.iter().filter(|a| **a == var).count()
+                }
+                Stmt::Accum { src, .. } if *src == var => *n += 1,
+                _ => {}
+            }
+        }
+    }
+    let mut n = 0;
+    walk(&ir.body, var, &mut n);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::expr::Expr;
+    use crate::ir::func::{FuncOp, ReduceOp};
+    use crate::ir::graph::{map_over, ArgMode, Graph};
+    use crate::ir::types::Ty;
+    use crate::loopir::lower::lower;
+
+    #[test]
+    fn renders_simple_map_listing() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let e = Expr::var(0).sub(Expr::cst(1.0)).div(Expr::cst(2.0));
+            let r = mb.g.ew1(e, ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o[0]);
+        let s = super::render(&lower(&g));
+        let want = "\
+forall n in range(N):
+  t1 = load(A[n])
+  t2 = (t1-1)/2
+  store(t2, B[n])
+";
+        assert_eq!(s, want);
+    }
+
+    #[test]
+    fn renders_accumulate_inline() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.reduce_out(r, ReduceOp::Add);
+        });
+        g.output("c", o[0]);
+        let s = super::render(&lower(&g));
+        let want = "\
+for n in range(N):
+  t1 = load(A[n])
+  t2 += row_sum(t1)
+store(t2, c)
+";
+        assert_eq!(s, want);
+    }
+
+    #[test]
+    fn renders_nested_with_temp_buffer() {
+        // Unfused map -> reduce: the temp I1 appears.
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.collect(r);
+        });
+        let red = g.reduce(ReduceOp::Add, o[0]);
+        g.output("c", red);
+        let s = super::render(&lower(&g));
+        let want = "\
+forall n in range(N):
+  t1 = load(A[n])
+  t2 = row_sum(t1)
+  store(t2, I1[n])
+for n in range(N):
+  t3 = load(I1[n])
+  t4 += t3
+store(t4, c)
+";
+        assert_eq!(s, want);
+    }
+}

@@ -1,0 +1,371 @@
+//! Array-program → block-program conversion (the paper's Table 2).
+//!
+//! Each array operator is replaced by a predefined block-program subgraph.
+//! Every subgraph is **fully unfused** — it materializes all intermediates
+//! in global memory "even when a straightforward fusion opportunity is
+//! evident" (§2.2); discovering those opportunities is the fusion
+//! algorithm's job, and starting unfused is what makes the paper's traces
+//! reproducible step for step.
+//!
+//! Conventions (verified against the §5 walkthroughs):
+//! * every operator's subgraph is wrapped in a map over the *row-block* dim
+//!   of its output ("matrix multiplication operators become a single block
+//!   operator [at top level]… softmax becomes four");
+//! * matmul inside the row map is `Map(n){ Map(k){dot} → Reduce(k) }`;
+//! * softmax = exp-map, rowsum-map, (reduce+reciprocal)-map, scale-map;
+//! * layernorm = rowsum, (reduce → −s/KK), shift, square, rowsum,
+//!   (reduce → (s₂/KK − μ²)^(−1/2)), scale — seven operators;
+//! * rmsnorm = square, rowsum, (reduce → 1/sqrt(s/DD)), scale — four.
+
+use crate::array::{AOp, ANodeId, ArrayProgram};
+use crate::ir::expr::Expr;
+use crate::ir::func::{FuncOp, ReduceOp};
+use crate::ir::graph::{map_over, ArgMode, Graph, NodeKind, Port};
+use crate::ir::types::Ty;
+use crate::rules::matmul::build_matmul;
+use std::collections::HashMap;
+
+/// Convert an array program into its initial (fully unfused) block program.
+pub fn lower_array(p: &ArrayProgram) -> Graph {
+    let mut g = Graph::new();
+    let mut val: HashMap<ANodeId, Port> = HashMap::new();
+
+    for (id, n) in p.nodes.iter().enumerate() {
+        let m = n.blocking.rows.name().to_string();
+        let out: Port = match &n.op {
+            AOp::Input { name, .. } => g.input(
+                name.clone(),
+                Ty::blocks(&[n.blocking.rows.name(), n.blocking.cols.name()]),
+            ),
+            AOp::MatMul => {
+                let a = val[&n.inputs[0]];
+                let bt = val[&n.inputs[1]];
+                let a_blk = p.nodes[n.inputs[0]].blocking.clone();
+                let b_blk = p.nodes[n.inputs[1]].blocking.clone();
+                let (n_dim, k_dim) = (b_blk.rows.name().to_string(), a_blk.cols.name().to_string());
+                let outs = map_over(
+                    &mut g,
+                    m.as_str(),
+                    &[(a, ArgMode::Mapped), (bt, ArgMode::Bcast)],
+                    |mb, ins| {
+                        let o = build_matmul(&mut mb.g, ins[0], ins[1], &n_dim, &k_dim);
+                        mb.collect(o);
+                    },
+                );
+                outs[0]
+            }
+            AOp::Ew { expr, .. } => {
+                let a = val[&n.inputs[0]];
+                let c = n.blocking.cols.name().to_string();
+                let e = expr.clone();
+                let outs = map_over(&mut g, m.as_str(), &[(a, ArgMode::Mapped)], |mb, ins| {
+                    let inner = map_over(
+                        &mut mb.g,
+                        c.as_str(),
+                        &[(ins[0], ArgMode::Mapped)],
+                        |mb2, i2| {
+                            let r = mb2.g.ew1(e.clone(), i2[0]);
+                            mb2.collect(r);
+                        },
+                    );
+                    mb.collect(inner[0]);
+                });
+                outs[0]
+            }
+            AOp::Hadamard | AOp::Add => {
+                let a = val[&n.inputs[0]];
+                let b = val[&n.inputs[1]];
+                let c = n.blocking.cols.name().to_string();
+                let f = if matches!(n.op, AOp::Hadamard) {
+                    FuncOp::Mul
+                } else {
+                    FuncOp::Add
+                };
+                let outs = map_over(
+                    &mut g,
+                    m.as_str(),
+                    &[(a, ArgMode::Mapped), (b, ArgMode::Mapped)],
+                    |mb, ins| {
+                        let ff = f.clone();
+                        let inner = map_over(
+                            &mut mb.g,
+                            c.as_str(),
+                            &[(ins[0], ArgMode::Mapped), (ins[1], ArgMode::Mapped)],
+                            move |mb2, i2| {
+                                let r = mb2.g.func(ff, &[i2[0], i2[1]]);
+                                mb2.collect(r);
+                            },
+                        );
+                        mb.collect(inner[0]);
+                    },
+                );
+                outs[0]
+            }
+            AOp::Softmax => lower_softmax(&mut g, val[&n.inputs[0]], &m, n.blocking.cols.name()),
+            AOp::LayerNorm => {
+                let kk = p.row_len_param(id);
+                lower_layernorm(&mut g, val[&n.inputs[0]], &m, n.blocking.cols.name(), &kk)
+            }
+            AOp::RmsNorm => {
+                let dd = p.row_len_param(id);
+                lower_rmsnorm(&mut g, val[&n.inputs[0]], &m, n.blocking.cols.name(), &dd)
+            }
+            AOp::Custom { tag } => {
+                let ins: Vec<Port> = n.inputs.iter().map(|i| val[i]).collect();
+                let in_tys: Vec<Ty> = ins.iter().map(|p| g.out_ty(*p)).collect();
+                let out_ty = Ty::blocks(&[n.blocking.rows.name(), n.blocking.cols.name()]);
+                let id = g.add_node(
+                    NodeKind::Misc {
+                        tag: tag.clone(),
+                        in_tys,
+                        out_tys: vec![out_ty],
+                    },
+                    format!("misc:{tag}"),
+                );
+                for (i, s) in ins.iter().enumerate() {
+                    g.connect(*s, crate::ir::graph::port(id, i));
+                }
+                crate::ir::graph::port(id, 0)
+            }
+        };
+        val.insert(id, out);
+    }
+
+    for (name, id) in &p.outputs {
+        g.output(name.clone(), val[id]);
+    }
+    g
+}
+
+/// Softmax: four top-level operators (exp, rowsum, reduce+recip, scale).
+fn lower_softmax(g: &mut Graph, a: Port, m: &str, n_dim: &str) -> Port {
+    // S1: elementwise exp
+    let e = map_over(g, m, &[(a, ArgMode::Mapped)], |mb, ins| {
+        let inner = map_over(&mut mb.g, n_dim, &[(ins[0], ArgMode::Mapped)], |mb2, i2| {
+            let r = mb2.g.ew1(Expr::var(0).exp(), i2[0]);
+            mb2.collect(r);
+        });
+        mb.collect(inner[0]);
+    });
+    // S2: per-block row sums
+    let s = map_over(g, m, &[(e[0], ArgMode::Mapped)], |mb, ins| {
+        let inner = map_over(&mut mb.g, n_dim, &[(ins[0], ArgMode::Mapped)], |mb2, i2| {
+            let r = mb2.g.func(FuncOp::RowSum, &[i2[0]]);
+            mb2.collect(r);
+        });
+        mb.collect(inner[0]);
+    });
+    // S3: total + reciprocal
+    let r = map_over(g, m, &[(s[0], ArgMode::Mapped)], |mb, ins| {
+        let red = mb.g.reduce(ReduceOp::Add, ins[0]);
+        let rec = mb.g.ew1(Expr::var(0).recip(), red);
+        mb.collect(rec);
+    });
+    // S4: row-scale by the reciprocal denominator
+    let o = map_over(
+        g,
+        m,
+        &[(e[0], ArgMode::Mapped), (r[0], ArgMode::Mapped)],
+        |mb, ins| {
+            let inner = map_over(
+                &mut mb.g,
+                n_dim,
+                &[(ins[0], ArgMode::Mapped), (ins[1], ArgMode::Bcast)],
+                |mb2, i2| {
+                    let sc = mb2.g.func(FuncOp::RowScale, &[i2[0], i2[1]]);
+                    mb2.collect(sc);
+                },
+            );
+            mb.collect(inner[0]);
+        },
+    );
+    o[0]
+}
+
+/// LayerNorm: seven top-level operators, per the Example-2 initial program.
+fn lower_layernorm(g: &mut Graph, x: Port, m: &str, k_dim: &str, kk: &str) -> Port {
+    // L1: per-block row sums of X
+    let l1 = map_over(g, m, &[(x, ArgMode::Mapped)], |mb, ins| {
+        let inner = map_over(&mut mb.g, k_dim, &[(ins[0], ArgMode::Mapped)], |mb2, i2| {
+            let r = mb2.g.func(FuncOp::RowSum, &[i2[0]]);
+            mb2.collect(r);
+        });
+        mb.collect(inner[0]);
+    });
+    // L2: negative mean  −s/KK
+    let l2 = map_over(g, m, &[(l1[0], ArgMode::Mapped)], |mb, ins| {
+        let red = mb.g.reduce(ReduceOp::Add, ins[0]);
+        let nm = mb
+            .g
+            .ew1(Expr::var(0).neg().div(Expr::param(kk)), red);
+        mb.collect(nm);
+    });
+    // L3: shift rows by the negative mean
+    let l3 = map_over(
+        g,
+        m,
+        &[(x, ArgMode::Mapped), (l2[0], ArgMode::Mapped)],
+        |mb, ins| {
+            let inner = map_over(
+                &mut mb.g,
+                k_dim,
+                &[(ins[0], ArgMode::Mapped), (ins[1], ArgMode::Bcast)],
+                |mb2, i2| {
+                    let r = mb2.g.func(FuncOp::RowShift, &[i2[0], i2[1]]);
+                    mb2.collect(r);
+                },
+            );
+            mb.collect(inner[0]);
+        },
+    );
+    // L4: squares
+    let l4 = map_over(g, m, &[(x, ArgMode::Mapped)], |mb, ins| {
+        let inner = map_over(&mut mb.g, k_dim, &[(ins[0], ArgMode::Mapped)], |mb2, i2| {
+            let r = mb2.g.ew1(Expr::var(0).pow(Expr::cst(2.0)), i2[0]);
+            mb2.collect(r);
+        });
+        mb.collect(inner[0]);
+    });
+    // L5: row sums of squares
+    let l5 = map_over(g, m, &[(l4[0], ArgMode::Mapped)], |mb, ins| {
+        let inner = map_over(&mut mb.g, k_dim, &[(ins[0], ArgMode::Mapped)], |mb2, i2| {
+            let r = mb2.g.func(FuncOp::RowSum, &[i2[0]]);
+            mb2.collect(r);
+        });
+        mb.collect(inner[0]);
+    });
+    // L6: reciprocal std  (s₂/KK − μ²)^(−1/2)   (μ² = (−s/KK)²)
+    let l6 = map_over(
+        g,
+        m,
+        &[(l5[0], ArgMode::Mapped), (l2[0], ArgMode::Mapped)],
+        |mb, ins| {
+            let red = mb.g.reduce(ReduceOp::Add, ins[0]);
+            let std = mb.g.ew2(
+                Expr::var(0)
+                    .div(Expr::param(kk))
+                    .sub(Expr::var(1).pow(Expr::cst(2.0)))
+                    .pow(Expr::cst(-0.5)),
+                red,
+                ins[1],
+            );
+            mb.collect(std);
+        },
+    );
+    // L7: scale shifted rows by 1/σ
+    let l7 = map_over(
+        g,
+        m,
+        &[(l3[0], ArgMode::Mapped), (l6[0], ArgMode::Mapped)],
+        |mb, ins| {
+            let inner = map_over(
+                &mut mb.g,
+                k_dim,
+                &[(ins[0], ArgMode::Mapped), (ins[1], ArgMode::Bcast)],
+                |mb2, i2| {
+                    let r = mb2.g.func(FuncOp::RowScale, &[i2[0], i2[1]]);
+                    mb2.collect(r);
+                },
+            );
+            mb.collect(inner[0]);
+        },
+    );
+    l7[0]
+}
+
+/// RMSNorm: four top-level operators (square, rowsum, reduce+1/sqrt, scale).
+fn lower_rmsnorm(g: &mut Graph, x: Port, m: &str, d_dim: &str, dd: &str) -> Port {
+    let r1 = map_over(g, m, &[(x, ArgMode::Mapped)], |mb, ins| {
+        let inner = map_over(&mut mb.g, d_dim, &[(ins[0], ArgMode::Mapped)], |mb2, i2| {
+            let r = mb2.g.ew1(Expr::var(0).pow(Expr::cst(2.0)), i2[0]);
+            mb2.collect(r);
+        });
+        mb.collect(inner[0]);
+    });
+    let r2 = map_over(g, m, &[(r1[0], ArgMode::Mapped)], |mb, ins| {
+        let inner = map_over(&mut mb.g, d_dim, &[(ins[0], ArgMode::Mapped)], |mb2, i2| {
+            let r = mb2.g.func(FuncOp::RowSum, &[i2[0]]);
+            mb2.collect(r);
+        });
+        mb.collect(inner[0]);
+    });
+    let r3 = map_over(g, m, &[(r2[0], ArgMode::Mapped)], |mb, ins| {
+        let red = mb.g.reduce(ReduceOp::Add, ins[0]);
+        let rr = mb.g.ew1(
+            Expr::var(0).div(Expr::param(dd)).sqrt().recip(),
+            red,
+        );
+        mb.collect(rr);
+    });
+    let r4 = map_over(
+        g,
+        m,
+        &[(x, ArgMode::Mapped), (r3[0], ArgMode::Mapped)],
+        |mb, ins| {
+            let inner = map_over(
+                &mut mb.g,
+                d_dim,
+                &[(ins[0], ArgMode::Mapped), (ins[1], ArgMode::Bcast)],
+                |mb2, i2| {
+                    let r = mb2.g.func(FuncOp::RowScale, &[i2[0], i2[1]]);
+                    mb2.collect(r);
+                },
+            );
+            mb.collect(inner[0]);
+        },
+    );
+    r4[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::programs;
+    use crate::ir::validate::assert_valid;
+    use crate::rules::map_ids;
+
+    #[test]
+    fn attention_initial_structure() {
+        let g = lower_array(&programs::attention());
+        assert_valid(&g);
+        // "Each of the matrix multiplication operators becomes a single
+        //  block operator while the softmax becomes four block operators in
+        //  the top-level graph." + div = 7 top-level M-maps.
+        assert_eq!(map_ids(&g).len(), 7);
+        for id in map_ids(&g) {
+            assert_eq!(g.node(id).as_map().unwrap().dim.name(), "M");
+        }
+    }
+
+    #[test]
+    fn layernorm_matmul_initial_structure() {
+        let g = lower_array(&programs::layernorm_matmul());
+        assert_valid(&g);
+        assert_eq!(map_ids(&g).len(), 8); // 7 layernorm + 1 matmul
+    }
+
+    #[test]
+    fn rmsnorm_ffn_initial_structure() {
+        let g = lower_array(&programs::rmsnorm_ffn_swiglu());
+        assert_valid(&g);
+        assert_eq!(map_ids(&g).len(), 9); // 4 rms + 3 matmuls + swish + hadamard
+    }
+
+    #[test]
+    fn custom_op_becomes_misc() {
+        let g = lower_array(&programs::with_custom_op());
+        assert_valid(&g);
+        let miscs = g
+            .node_ids()
+            .filter(|&i| matches!(g.node(i).kind, NodeKind::Misc { .. }))
+            .count();
+        assert_eq!(miscs, 1);
+    }
+
+    #[test]
+    fn everything_unfused_initially() {
+        // Table-2 subgraphs materialize every intermediate.
+        let g = lower_array(&programs::attention());
+        assert!(g.interior_buffered_count_recursive() >= 6);
+    }
+}

@@ -1,0 +1,204 @@
+//! `blockbuster` CLI — the compiler driver.
+//!
+//! ```text
+//! blockbuster trace <program> [--listing] [--dot]   fusion trace (+ fused code)
+//! blockbuster compile <program>                     selection plan report
+//! blockbuster run <program> [--seed N]              execute plan vs naive
+//! blockbuster tune <program> [--capacity BYTES]     autotune block counts
+//! blockbuster xla <model> [--artifacts DIR]         run an AOT artifact (PJRT)
+//! blockbuster list                                  available programs/models
+//! ```
+
+use blockbuster::autotune::autotune;
+use blockbuster::coordinator::{compile, execute_plan, plan_report, workloads};
+use blockbuster::cost::CostModel;
+use blockbuster::exec::{run, Workload};
+use blockbuster::fusion::fuse;
+use blockbuster::ir::display::{dump, to_dot};
+use blockbuster::loopir::lower::lower;
+use blockbuster::loopir::print::render;
+use blockbuster::lower::lower_array;
+use blockbuster::tensor::{Mat, Rng};
+use blockbuster::util::bench::fmt_bytes;
+use blockbuster::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: blockbuster <trace|compile|run|tune|xla|list> [args]\n\
+         programs: {}",
+        workloads::NAMES.join(", ")
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["seed", "capacity", "artifacts"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "trace" => cmd_trace(&args),
+        "compile" => cmd_compile(&args),
+        "run" => cmd_run(&args),
+        "tune" => cmd_tune(&args),
+        "xla" => cmd_xla(&args),
+        "list" => {
+            println!("programs: {}", workloads::NAMES.join(", "));
+            Ok(())
+        }
+        _ => usage(),
+    }
+}
+
+fn demo_or_die(args: &Args) -> workloads::Demo {
+    let name = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or_else(|| usage());
+    let seed = args.opt_usize("seed", 42) as u64;
+    workloads::by_name(name, seed).unwrap_or_else(|| {
+        eprintln!(
+            "unknown program {name}; have {}",
+            workloads::NAMES.join(", ")
+        );
+        std::process::exit(2);
+    })
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let (p, _cfg, _, _) = demo_or_die(args);
+    let g = lower_array(&p);
+    println!("array program:\n{p}");
+    println!(
+        "initial block program: {} top-level ops, {} interior buffered edges\n",
+        blockbuster::rules::map_ids(&g).len(),
+        g.interior_buffered_count_recursive()
+    );
+    let res = fuse(g);
+    println!(
+        "fusion trace ({} steps, {}):",
+        res.trace.len(),
+        res.trace.summary()
+    );
+    print!("{}", res.trace);
+    let fused = res.snapshots.last().unwrap();
+    println!(
+        "\nfinal: {} snapshot(s); interior buffered edges = {}",
+        res.snapshots.len(),
+        fused.interior_buffered_count_recursive()
+    );
+    if args.flag("listing") {
+        println!(
+            "\nfused kernel (paper-style listing):\n{}",
+            render(&lower(fused))
+        );
+    }
+    if args.flag("dot") {
+        println!("{}", to_dot(fused, "fused"));
+    }
+    if args.flag("dump") {
+        println!("{}", dump(fused));
+    }
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> anyhow::Result<()> {
+    let (p, cfg, _, _) = demo_or_die(args);
+    let compiled = compile(&p, cfg);
+    print!("{}", plan_report(&compiled));
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let (p, cfg, params, inputs) = demo_or_die(args);
+    let compiled = compile(&p, cfg.clone());
+    print!("{}", plan_report(&compiled));
+
+    let naive = run(
+        &compiled.block,
+        &Workload {
+            sizes: cfg.sizes.clone(),
+            params: params.clone(),
+            inputs: inputs.clone(),
+            local_capacity: None,
+        },
+    );
+    let plan = execute_plan(&compiled.plan, &cfg.sizes, &params, &inputs);
+    println!(
+        "\nnaive : traffic {}  launches {}  flops {}",
+        fmt_bytes(naive.mem.total_traffic()),
+        naive.mem.kernel_launches,
+        naive.mem.flops
+    );
+    println!(
+        "fused : traffic {}  launches {}  flops {}",
+        fmt_bytes(plan.mem.total_traffic()),
+        plan.mem.kernel_launches,
+        plan.mem.flops
+    );
+    println!(
+        "reduction: {:.2}x traffic, {:.1}x launches",
+        naive.mem.total_traffic() as f64 / plan.mem.total_traffic() as f64,
+        naive.mem.kernel_launches as f64 / plan.mem.kernel_launches as f64
+    );
+    let mut names: Vec<&String> = plan.outputs.keys().collect();
+    names.sort();
+    for name in names {
+        let d = plan.outputs[name].max_abs_diff(&naive.outputs[name]);
+        println!("output {name}: max |fused - naive| = {d:.2e}");
+        assert!(d < 1e-2, "numeric mismatch on {name}");
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let (p, cfg, _, _) = demo_or_die(args);
+    let capacity = args.opt_usize("capacity", 1 << 20) as u64;
+    let g = lower_array(&p);
+    let fused = fuse(g).snapshots.pop().unwrap();
+    let res = autotune(&fused, &cfg.full_shapes, capacity, &CostModel::default());
+    println!(
+        "{} configurations; best under {} first:",
+        res.points.len(),
+        fmt_bytes(capacity)
+    );
+    for p in res.points.iter().take(8) {
+        println!(
+            "  {:?} -> traffic {} flops {} peak-local {} {}",
+            p.sizes.0,
+            fmt_bytes(p.cost.traffic()),
+            p.cost.flops,
+            fmt_bytes(p.cost.peak_local_bytes),
+            if p.feasible { "" } else { "(infeasible)" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_xla(args: &Args) -> anyhow::Result<()> {
+    let model = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("attention_fused");
+    let dir = args.opt("artifacts").unwrap_or("artifacts");
+    let mut rt = blockbuster::runtime::Runtime::new(dir)?;
+    println!("platform: {}", rt.platform());
+    let info = rt.manifest.model(model)?.clone();
+    let mut rng = Rng::new(args.opt_usize("seed", 42) as u64);
+    let mats: Vec<Mat> = info
+        .inputs
+        .iter()
+        .map(|(_, s)| rng.mat(s[0], s[1]))
+        .collect();
+    let refs: Vec<&Mat> = mats.iter().collect();
+    let t0 = std::time::Instant::now();
+    let out = rt.execute(model, &refs)?;
+    println!(
+        "{model}: {} output(s) in {:?}; out[0] is {}x{}",
+        out.len(),
+        t0.elapsed(),
+        out[0].rows,
+        out[0].cols
+    );
+    Ok(())
+}

@@ -1,0 +1,232 @@
+//! Property-testing framework (proptest is unavailable offline).
+//!
+//! A seeded-PRNG `forall` runner plus a random array-program generator.
+//! Failures report the case seed so any run reproduces deterministically:
+//! `forall` re-derives each case's seed from the base seed, so
+//! `case(seed)` replays one failing input exactly.
+
+use crate::array::{ABlocking, ArrayProgram};
+use crate::ir::dim::DimSizes;
+use crate::ir::expr::Expr;
+use crate::tensor::{Mat, Rng};
+use std::collections::{BTreeMap, HashMap};
+
+/// Run `cases` generated checks; panic with the failing seed on error.
+pub fn forall(cases: usize, base_seed: u64, check: impl Fn(u64) -> Result<(), String>) {
+    let mut failures = Vec::new();
+    for i in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(i as u64);
+        if let Err(e) = check(seed) {
+            failures.push((seed, e));
+            if failures.len() >= 3 {
+                break;
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "property failed on {} case(s); first: seed={} — {}",
+        failures.len(),
+        failures[0].0,
+        failures[0].1
+    );
+}
+
+/// The dim pool for random programs: (name, full extent, block count).
+pub const DIM_POOL: &[(&str, usize, usize)] = &[
+    ("M", 8, 2),
+    ("K", 8, 2),
+    ("N", 4, 1),
+    ("P", 4, 2),
+];
+
+/// A randomly generated workload: program + sizes + full shapes + params +
+/// concrete inputs.
+pub struct RandomWorkload {
+    pub program: ArrayProgram,
+    pub sizes: DimSizes,
+    pub full_shapes: HashMap<String, (usize, usize)>,
+    pub params: BTreeMap<String, f32>,
+    pub inputs: HashMap<String, Mat>,
+}
+
+/// Generate a random (standard-ops-only) array program of `max_ops`
+/// operators over the dim pool, with every leaf value exported.
+pub fn random_workload(seed: u64, max_ops: usize) -> RandomWorkload {
+    let mut rng = Rng::new(seed);
+    let mut p = ArrayProgram::new();
+    let mut full_shapes = HashMap::new();
+    let mut inputs = HashMap::new();
+    let extent: HashMap<&str, usize> = DIM_POOL.iter().map(|(n, e, _)| (*n, *e)).collect();
+
+    let fresh_input = |p: &mut ArrayProgram,
+                           rng: &mut Rng,
+                           rows: &str,
+                           cols: &str,
+                           transposed: bool,
+                           full_shapes: &mut HashMap<String, (usize, usize)>,
+                           inputs: &mut HashMap<String, Mat>| {
+        let name = format!("IN{}", inputs.len());
+        let (r, c) = (extent[rows], extent[cols]);
+        full_shapes.insert(name.clone(), (r, c));
+        inputs.insert(name.clone(), rng.mat(r, c));
+        if transposed {
+            p.input_t(&name, rows, cols)
+        } else {
+            p.input(&name, rows, cols)
+        }
+    };
+
+    // start with one value (rows dim must differ from cols dim — nested
+    // same-dim loops are not expressible)
+    let dims_of = |rng: &mut Rng| {
+        let r = rng.below(DIM_POOL.len());
+        let mut c = rng.below(DIM_POOL.len());
+        while c == r {
+            c = rng.below(DIM_POOL.len());
+        }
+        (DIM_POOL[r].0, DIM_POOL[c].0)
+    };
+    let (r0, c0) = dims_of(&mut rng);
+    let v0 = fresh_input(&mut p, &mut rng, r0, c0, false, &mut full_shapes, &mut inputs);
+    let mut values = vec![v0];
+    let mut consumed = vec![false];
+
+    let n_ops = 1 + rng.below(max_ops);
+    for _ in 0..n_ops {
+        let pick = rng.below(values.len());
+        let v = values[pick];
+        let blocking: ABlocking = p.nodes[v].blocking.clone();
+        let new = match rng.below(8) {
+            0 => p.relu(v),
+            1 => p.ew(
+                "scaled",
+                Expr::var(0).mul(Expr::cst(0.5)).add(Expr::cst(0.1)),
+                v,
+            ),
+            2 => p.softmax(v),
+            3 => p.layernorm(v),
+            4 => p.rmsnorm(v),
+            5 | 6 => {
+                // binary elementwise with a value of the same blocking (or a
+                // fresh input if none exists)
+                let other = values
+                    .iter()
+                    .copied()
+                    .filter(|&o| o != v && p.nodes[o].blocking == blocking)
+                    .last()
+                    .unwrap_or_else(|| {
+                        fresh_input(
+                            &mut p,
+                            &mut rng,
+                            blocking.rows.name(),
+                            blocking.cols.name(),
+                            false,
+                            &mut full_shapes,
+                            &mut inputs,
+                        )
+                    });
+                if consumed.len() < values.len() {
+                    consumed.resize(values.len(), false);
+                }
+                if rng.below(2) == 0 {
+                    p.add(v, other)
+                } else {
+                    p.hadamard(v, other)
+                }
+            }
+            _ => {
+                // matmul with a fresh transposed weight; the output dim must
+                // differ from the left operand's row dim
+                let n = loop {
+                    let (n, ..) = DIM_POOL[rng.below(DIM_POOL.len())];
+                    if n != blocking.rows.name() && n != blocking.cols.name() {
+                        break n;
+                    }
+                };
+                let bt = fresh_input(
+                    &mut p,
+                    &mut rng,
+                    n,
+                    blocking.cols.name(),
+                    true,
+                    &mut full_shapes,
+                    &mut inputs,
+                );
+                values.push(bt);
+                consumed.push(true); // weights are not leaves
+                p.matmul(v, bt)
+            }
+        };
+        consumed[pick] = true;
+        values.push(new);
+        consumed.push(false);
+    }
+
+    // every unconsumed non-input value becomes an output (plus always the last)
+    let mut any = false;
+    for (i, &v) in values.iter().enumerate() {
+        let is_input = matches!(p.nodes[v].op, crate::array::AOp::Input { .. });
+        if !consumed[i] && !is_input {
+            p.output(&format!("OUT{i}"), v);
+            any = true;
+        }
+    }
+    if !any {
+        let last = *values.last().unwrap();
+        p.output("OUT", last);
+    }
+
+    let mut sizes = DimSizes::new();
+    let mut params = BTreeMap::new();
+    for (name, ext, blocks) in DIM_POOL {
+        sizes.set(*name, *blocks);
+        params.insert(format!("{name}{name}"), *ext as f32);
+    }
+    RandomWorkload {
+        program: p,
+        sizes,
+        full_shapes,
+        params,
+        inputs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::validate::validate;
+    use crate::lower::lower_array;
+
+    #[test]
+    fn generator_produces_valid_programs() {
+        forall(25, 7, |seed| {
+            let w = random_workload(seed, 5);
+            if w.program.outputs.is_empty() {
+                return Err("no outputs".into());
+            }
+            let g = lower_array(&w.program);
+            let errs = validate(&g);
+            if !errs.is_empty() {
+                return Err(format!("invalid lowering: {errs:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn forall_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(5, 1, |s| {
+                if s % 2 == 1 {
+                    Err("odd".into())
+                } else {
+                    Ok(())
+                }
+            })
+        });
+        assert!(r.is_err());
+    }
+}

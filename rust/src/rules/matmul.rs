@@ -1,0 +1,233 @@
+//! Composite recognizer for the Table-2 block matmul subgraph.
+//!
+//! In the block program representation, a matrix multiplication
+//! `I1 (1×K blocks) · I2 (K×A blocks)` at some graph level is the map node
+//!
+//! ```text
+//! Map(a) {                         // one iteration per output block-column
+//!   L : Input [k]   (bcast at a)   // the row of K blocks of I1
+//!   R : Input [k]   (mapped at a)  // column a of I2ᵀ's blocks
+//!   Map(k){ dot(l, r) } -> [k]     // per-k partial products
+//!   Reduce(k)                      // summed into one block
+//! } -> Collect [a]
+//! ```
+//!
+//! (fully unfused, "even when a straightforward fusion opportunity is
+//! evident" — Rule 3 and Rule 1 fuse the inside later). Rules 4, 5, and 8
+//! need to recognize this shape to swap normalizations across it.
+
+use crate::ir::dim::Dim;
+use crate::ir::func::FuncOp;
+use crate::ir::graph::{port, ArgMode, Graph, NodeId, NodeKind, OutMode};
+
+/// A recognized matmul map node at the current graph level.
+#[derive(Clone, Debug)]
+pub struct MatmulMatch {
+    /// The outer map node (over the output dim `a`).
+    pub pmap: NodeId,
+    pub a_dim: Dim,
+    pub k_dim: Dim,
+    /// pmap's input port carrying the left operand (broadcast, ty `[k]`).
+    pub left_port: usize,
+    /// pmap's input port carrying the right operand (mapped over `a`).
+    pub right_port: usize,
+}
+
+/// Try to recognize node `id` of `g` as a block matmul.
+pub fn match_matmul(g: &Graph, id: NodeId) -> Option<MatmulMatch> {
+    let m = g.node(id).as_map()?;
+    if m.skip_first || m.inputs.len() != 2 || m.outputs.len() != 1 {
+        return None;
+    }
+    if !matches!(m.outputs[0].mode, OutMode::Collect) {
+        return None;
+    }
+    let inner = &m.inner;
+
+    // Inner structure: exactly one k-map and one reduce besides I/O.
+    let mut kmap = None;
+    let mut red = None;
+    for nid in inner.node_ids() {
+        match &inner.node(nid).kind {
+            NodeKind::Input { .. } | NodeKind::Output => {}
+            NodeKind::Map(_) => {
+                if kmap.replace(nid).is_some() {
+                    return None;
+                }
+            }
+            NodeKind::Reduce(crate::ir::func::ReduceOp::Add) => {
+                if red.replace(nid).is_some() {
+                    return None;
+                }
+            }
+            _ => return None,
+        }
+    }
+    let (kmap, red) = (kmap?, red?);
+    let km = inner.node(kmap).as_map()?;
+    if km.skip_first || km.inputs.len() != 2 || km.outputs.len() != 1 {
+        return None;
+    }
+    if !matches!(km.outputs[0].mode, OutMode::Collect) {
+        return None;
+    }
+    let k_dim = km.dim.clone();
+
+    // kmap's inner: a single Dot over the two mapped inputs.
+    let ki = &km.inner;
+    let mut dot = None;
+    for nid in ki.node_ids() {
+        match &ki.node(nid).kind {
+            NodeKind::Input { .. } | NodeKind::Output => {}
+            NodeKind::Func(FuncOp::Dot) => {
+                if dot.replace(nid).is_some() {
+                    return None;
+                }
+            }
+            _ => return None,
+        }
+    }
+    let dot = dot?;
+    if km.inputs.iter().any(|mi| mi.mode != ArgMode::Mapped) {
+        return None;
+    }
+    // dot args must come straight from kmap's two inner inputs
+    let dot_l = ki.producer(port(dot, 0))?;
+    let dot_r = ki.producer(port(dot, 1))?;
+    let kin0 = km.inputs[0].inner_input;
+    let kin1 = km.inputs[1].inner_input;
+    let (l_kport, r_kport) = if dot_l.node == kin0 && dot_r.node == kin1 {
+        (0usize, 1usize)
+    } else if dot_l.node == kin1 && dot_r.node == kin0 {
+        (1, 0)
+    } else {
+        return None;
+    };
+
+    // kmap's collect must feed the reduce, and the reduce must feed pmap's
+    // inner output.
+    let kmap_consumers = inner.consumers(port(kmap, 0));
+    if kmap_consumers != vec![port(red, 0)] {
+        return None;
+    }
+    let red_consumers = inner.consumers(port(red, 0));
+    if red_consumers.len() != 1 {
+        return None;
+    }
+    let out_node = m.outputs[0].inner_output;
+    if red_consumers[0] != port(out_node, 0) {
+        return None;
+    }
+
+    // Map the kmap's dot operands back to pmap's ports: the left operand is
+    // pmap-broadcast, the right is pmap-mapped.
+    let trace_to_pmap_port = |k_port: usize| -> Option<usize> {
+        let src = inner.producer(port(kmap, k_port))?;
+        // must be one of pmap's inner inputs
+        m.inputs
+            .iter()
+            .position(|mi| mi.inner_input == src.node)
+    };
+    let p_for_dot_left = trace_to_pmap_port(l_kport)?;
+    let p_for_dot_right = trace_to_pmap_port(r_kport)?;
+    let (left_port, right_port) = (p_for_dot_left, p_for_dot_right);
+    if m.inputs[left_port].mode != ArgMode::Bcast
+        || m.inputs[right_port].mode != ArgMode::Mapped
+    {
+        return None;
+    }
+    // left operand must be a single-level list [k] at the outer level
+    let left_src = g.producer(port(id, left_port))?;
+    let lt = g.out_ty(left_src);
+    if lt.dims.len() != 1 || lt.dims[0] != k_dim {
+        return None;
+    }
+
+    Some(MatmulMatch {
+        pmap: id,
+        a_dim: m.dim.clone(),
+        k_dim,
+        left_port,
+        right_port,
+    })
+}
+
+/// All matmuls at this level, in node-id order.
+pub fn all_matmuls(g: &Graph) -> Vec<MatmulMatch> {
+    super::map_ids(g)
+        .into_iter()
+        .filter_map(|id| match_matmul(g, id))
+        .collect()
+}
+
+/// Build the Table-2 matmul subgraph at the current level:
+/// `left` is a `[k]` list of blocks, `right` an `[a,k]`-or-`[k,a]` list of
+/// lists; returns the collect-`[a]` output port.
+pub fn build_matmul(
+    g: &mut Graph,
+    left: crate::ir::graph::Port,
+    right: crate::ir::graph::Port,
+    a_dim: &str,
+    k_dim: &str,
+) -> crate::ir::graph::Port {
+    use crate::ir::graph::map_over;
+    let outs = map_over(
+        g,
+        a_dim,
+        &[(left, ArgMode::Bcast), (right, ArgMode::Mapped)],
+        |mb, ins| {
+            let k = map_over(
+                &mut mb.g,
+                k_dim,
+                &[(ins[0], ArgMode::Mapped), (ins[1], ArgMode::Mapped)],
+                |mb2, i2| {
+                    let d = mb2.g.func(FuncOp::Dot, &[i2[0], i2[1]]);
+                    mb2.collect(d);
+                },
+            );
+            let r = mb.g.reduce(crate::ir::func::ReduceOp::Add, k[0]);
+            mb.collect(r);
+        },
+    );
+    outs[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::graph::Graph;
+    use crate::ir::types::Ty;
+    use crate::ir::validate::assert_valid;
+
+    #[test]
+    fn recognizes_built_matmul() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["K"]));
+        let b = g.input("BT", Ty::blocks(&["N", "K"]));
+        let o = build_matmul(&mut g, a, b, "N", "K");
+        g.output("C", o);
+        assert_valid(&g);
+        let mm = match_matmul(&g, o.node).expect("should match");
+        assert_eq!(mm.a_dim.name(), "N");
+        assert_eq!(mm.k_dim.name(), "K");
+        assert_eq!(g.out_ty(o), Ty::blocks(&["N"]));
+        assert_eq!(all_matmuls(&g).len(), 1);
+    }
+
+    #[test]
+    fn rejects_plain_map() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = crate::ir::graph::map_over(
+            &mut g,
+            "N",
+            &[(a, ArgMode::Mapped)],
+            |mb, ins| {
+                let r = mb.g.ew1(crate::ir::expr::Expr::var(0).exp(), ins[0]);
+                mb.collect(r);
+            },
+        );
+        g.output("B", o[0]);
+        assert!(match_matmul(&g, o[0].node).is_none());
+    }
+}

@@ -1,0 +1,203 @@
+//! Shared map-fusion machinery for Rules 1 and 2.
+//!
+//! `fuse_maps(g, u, v)` replaces two same-dimension map nodes with a single
+//! map whose inner graph is the concatenation of the two inner graphs:
+//!
+//! * every outer edge `u.out -> v.in` of shape (Collect output, Mapped
+//!   input) becomes a direct unbuffered edge in the fused inner graph — this
+//!   is the buffered-edge removal that is the whole point of fusion;
+//! * inputs with the same outer source and mode are merged into one port
+//!   (Rule 2's shared-parent merge; also applied during Rule 1, which is how
+//!   the paper's fused listings load a shared block once);
+//! * `u` outputs whose only consumer was `v` disappear; all other ports
+//!   carry over.
+//!
+//! The caller (the rule's matcher) is responsible for the legality
+//! conditions (same dim, no indirect paths, collect->mapped edges only).
+
+use crate::ir::graph::{port, ArgMode, Graph, MapIn, MapNode, NodeId, NodeKind, OutMode, Port};
+
+/// Fuse map `v_id` into map `u_id`. Returns the fused node id.
+pub fn fuse_maps(g: &mut Graph, u_id: NodeId, v_id: NodeId) -> NodeId {
+    let u = g.node(u_id).as_map().expect("u not a map").clone();
+    let v = g.node(v_id).as_map().expect("v not a map").clone();
+    assert_eq!(u.dim, v.dim, "fuse_maps: dim mismatch");
+    assert!(
+        !u.skip_first && !v.skip_first,
+        "fuse_maps: peeled maps not fusible"
+    );
+
+    let mut inner = u.inner.clone();
+    let remap = inner.absorb(v.inner.clone());
+
+    // --- inputs ------------------------------------------------------------
+    // (source port, mode, inner input node) for the fused map.
+    let mut fused_inputs: Vec<(Port, ArgMode, NodeId)> = Vec::new();
+    for (i, mi) in u.inputs.iter().enumerate() {
+        let src = g
+            .producer(port(u_id, i))
+            .unwrap_or_else(|| panic!("u input {i} unconnected"));
+        fused_inputs.push((src, mi.mode, mi.inner_input));
+    }
+    for (j, mj) in v.inputs.iter().enumerate() {
+        let src = g
+            .producer(port(v_id, j))
+            .unwrap_or_else(|| panic!("v input {j} unconnected"));
+        let v_inner_in = remap[&mj.inner_input];
+        if src.node == u_id {
+            // Internal edge: u's collect output feeds v's mapped input.
+            let uo = &u.outputs[src.port];
+            assert!(
+                matches!(uo.mode, OutMode::Collect) && mj.mode == ArgMode::Mapped,
+                "fuse_maps: only collect->mapped edges can be internalized"
+            );
+            let u_inner_src = inner
+                .producer(port(uo.inner_output, 0))
+                .expect("u inner output unconnected");
+            inner.rewire_consumers(port(v_inner_in, 0), u_inner_src);
+            inner.remove_node(v_inner_in);
+        } else if let Some((_, _, existing)) = fused_inputs
+            .iter()
+            .find(|(s, m, _)| *s == src && *m == mj.mode)
+        {
+            // Shared parent: merge ports, one load per iteration.
+            let existing = *existing;
+            inner.rewire_consumers(port(v_inner_in, 0), port(existing, 0));
+            inner.remove_node(v_inner_in);
+        } else {
+            fused_inputs.push((src, mj.mode, v_inner_in));
+        }
+    }
+
+    // --- outputs -----------------------------------------------------------
+    // u outputs survive unless their only outer consumers were v.
+    let mut fused_outputs: Vec<(NodeId, OutMode, Vec<Port>)> = Vec::new(); // (inner out, mode, outer consumers)
+    for (i, uo) in u.outputs.iter().enumerate() {
+        let consumers: Vec<Port> = g
+            .consumers(port(u_id, i))
+            .into_iter()
+            .filter(|c| c.node != v_id)
+            .collect();
+        if consumers.is_empty() {
+            // Dead once v is fused in: drop the port and its inner Output.
+            inner.remove_node(uo.inner_output);
+        } else {
+            fused_outputs.push((uo.inner_output, uo.mode.clone(), consumers));
+        }
+    }
+    for (j, vo) in v.outputs.iter().enumerate() {
+        let consumers = g.consumers(port(v_id, j));
+        fused_outputs.push((remap[&vo.inner_output], vo.mode.clone(), consumers));
+    }
+
+    // --- build the fused node ------------------------------------------------
+    let inputs: Vec<MapIn> = fused_inputs
+        .iter()
+        .map(|(_, mode, inner_input)| MapIn {
+            inner_input: *inner_input,
+            mode: *mode,
+        })
+        .collect();
+    let outputs: Vec<crate::ir::graph::MapOut> = fused_outputs
+        .iter()
+        .map(|(inner_output, mode, _)| crate::ir::graph::MapOut {
+            inner_output: *inner_output,
+            mode: mode.clone(),
+        })
+        .collect();
+    let label = format!("map{}", u.dim);
+    let fused_id = g.add_node(
+        NodeKind::Map(Box::new(MapNode {
+            dim: u.dim.clone(),
+            inner,
+            inputs,
+            outputs,
+            skip_first: false,
+        })),
+        label,
+    );
+    for (k, (src, _, _)) in fused_inputs.iter().enumerate() {
+        g.connect(*src, port(fused_id, k));
+    }
+    for (k, (_, _, consumers)) in fused_outputs.iter().enumerate() {
+        for c in consumers {
+            g.connect(port(fused_id, k), *c);
+        }
+    }
+    g.remove_node(u_id);
+    g.remove_node(v_id);
+    fused_id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+    use crate::ir::graph::{map_over, ArgMode, Graph};
+    use crate::ir::types::Ty;
+    use crate::ir::validate::assert_valid;
+
+    #[test]
+    fn fuse_consecutive_removes_interior_buffer() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o1 = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            mb.collect(r);
+        });
+        let o2 = map_over(&mut g, "N", &[(o1[0], ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).neg(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o2[0]);
+        assert_eq!(g.interior_buffered_edges().len(), 1);
+        let fused = fuse_maps(&mut g, o1[0].node, o2[0].node);
+        assert_valid(&g);
+        assert_eq!(g.interior_buffered_edges().len(), 0);
+        assert_eq!(g.node_count(), 3);
+        let m = g.node(fused).as_map().unwrap();
+        assert_eq!(m.inputs.len(), 1);
+        assert_eq!(m.outputs.len(), 1);
+    }
+
+    #[test]
+    fn fuse_siblings_merges_shared_parent() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o1 = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            mb.collect(r);
+        });
+        let o2 = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).neg(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B1", o1[0]);
+        g.output("B2", o2[0]);
+        let fused = fuse_maps(&mut g, o1[0].node, o2[0].node);
+        assert_valid(&g);
+        let m = g.node(fused).as_map().unwrap();
+        assert_eq!(m.inputs.len(), 1, "shared parent A merged into one port");
+        assert_eq!(m.outputs.len(), 2);
+    }
+
+    #[test]
+    fn fused_output_kept_when_other_consumers_exist() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o1 = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            mb.collect(r);
+        });
+        let o2 = map_over(&mut g, "N", &[(o1[0], ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).neg(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("EXP", o1[0]); // I1 is also a program output
+        g.output("B", o2[0]);
+        let fused = fuse_maps(&mut g, o1[0].node, o2[0].node);
+        assert_valid(&g);
+        let m = g.node(fused).as_map().unwrap();
+        assert_eq!(m.outputs.len(), 2, "exp output still materialized");
+    }
+}

@@ -1,0 +1,99 @@
+//! The paper's §3 substitution rules.
+//!
+//! Each rule is a logic-preserving rewrite: a `try_ruleN(g)` function
+//! searches graph `g` (one level of the hierarchy — rules never look across
+//! levels except *into* map nodes that are part of their own pattern),
+//! applies the first match found in deterministic node-id order, and returns
+//! a human-readable detail string, or `None` if no match exists.
+//!
+//! Fusion rules (1, 2, 3) remove buffered edges directly; companion rules
+//! (4, 5, 6, 7, 8) expose hidden opportunities — some by replicating work —
+//! and Rule 9 fuses elementwise chains.
+
+pub mod matmul;
+pub mod rule1;
+pub mod rule2;
+pub mod rule3;
+pub mod rule4;
+pub mod rule5;
+pub mod rule6;
+pub mod rule7;
+pub mod rule8;
+pub mod rule9;
+
+mod merge;
+
+pub use merge::fuse_maps;
+
+use crate::ir::graph::{Graph, NodeId};
+use std::fmt;
+
+/// Identifies one of the paper's nine substitution rules.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub enum RuleId {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+    R6,
+    R7,
+    R8,
+    R9,
+}
+
+impl RuleId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleId::R1 => "Rule 1: Fuse Consecutive Maps",
+            RuleId::R2 => "Rule 2: Fuse Sibling Maps",
+            RuleId::R3 => "Rule 3: Fuse Map with Reduction",
+            RuleId::R4 => "Rule 4: Swap Scale/Dot",
+            RuleId::R5 => "Rule 5: Swap Shift/Dot",
+            RuleId::R6 => "Rule 6: Extend Map to the Entire Graph",
+            RuleId::R7 => "Rule 7: Peel Off First Iteration",
+            RuleId::R8 => "Rule 8: Duplicate Mapped Scale",
+            RuleId::R9 => "Rule 9: Fuse Consecutive Elementwise",
+        }
+    }
+
+    pub fn short(&self) -> u8 {
+        match self {
+            RuleId::R1 => 1,
+            RuleId::R2 => 2,
+            RuleId::R3 => 3,
+            RuleId::R4 => 4,
+            RuleId::R5 => 5,
+            RuleId::R6 => 6,
+            RuleId::R7 => 7,
+            RuleId::R8 => 8,
+            RuleId::R9 => 9,
+        }
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Live map node ids of `g`, in id order (the deterministic match order).
+pub fn map_ids(g: &Graph) -> Vec<NodeId> {
+    g.node_ids().filter(|&i| g.node(i).as_map().is_some()).collect()
+}
+
+/// Apply one rule by id; used by the fusion driver.
+pub fn try_rule(g: &mut Graph, r: RuleId) -> Option<String> {
+    match r {
+        RuleId::R1 => rule1::try_rule1(g),
+        RuleId::R2 => rule2::try_rule2(g),
+        RuleId::R3 => rule3::try_rule3(g),
+        RuleId::R4 => rule4::try_rule4(g),
+        RuleId::R5 => rule5::try_rule5(g),
+        RuleId::R6 => rule6::try_rule6(g),
+        RuleId::R7 => rule7::try_rule7(g),
+        RuleId::R8 => rule8::try_rule8(g),
+        RuleId::R9 => rule9::try_rule9(g),
+    }
+}

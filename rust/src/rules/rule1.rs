@@ -1,0 +1,166 @@
+//! Rule 1: Fuse Consecutive Maps.
+//!
+//! Pattern: two maps `U -> V` over the same dimension, connected only by
+//! direct edges, each of shape (Collect output of U) -> (Mapped input of V).
+//! An indirect path `U -> W -> V` would make fusion create a cycle, so it
+//! blocks the match. An edge that is not collect->mapped (e.g. a reduced
+//! output consumed as broadcast, or a whole list consumed as broadcast)
+//! also blocks: `V`'s iterations would need values `U` only finishes
+//! producing after *all* of its iterations.
+
+use super::merge::fuse_maps;
+use crate::ir::graph::{ArgMode, Edge, Graph, NodeId, OutMode};
+
+/// Find the lowest-id fusible consecutive pair (u, v).
+pub fn find(g: &Graph) -> Option<(NodeId, NodeId)> {
+    let maps = super::map_ids(g);
+    for &u in &maps {
+        let um = g.node(u).as_map().unwrap();
+        if um.skip_first {
+            continue;
+        }
+        for &v in &maps {
+            if v == u {
+                continue;
+            }
+            let vm = g.node(v).as_map().unwrap();
+            if vm.dim != um.dim || vm.skip_first {
+                continue;
+            }
+            let direct: Vec<Edge> = g
+                .edges()
+                .iter()
+                .copied()
+                .filter(|e| e.src.node == u && e.dst.node == v)
+                .collect();
+            if direct.is_empty() {
+                continue;
+            }
+            let all_ok = direct.iter().all(|e| {
+                let collect = matches!(um.outputs[e.src.port].mode, OutMode::Collect);
+                let mapped = vm.inputs[e.dst.port].mode == ArgMode::Mapped;
+                collect && mapped
+            });
+            if !all_ok {
+                continue;
+            }
+            if g.reaches_excluding(u, v, &direct) {
+                continue; // indirect path: fusing would create a loop
+            }
+            return Some((u, v));
+        }
+    }
+    None
+}
+
+pub fn try_rule1(g: &mut Graph) -> Option<String> {
+    let (u, v) = find(g)?;
+    let dim = g.node(u).as_map().unwrap().dim.clone();
+    let fused = fuse_maps(g, u, v);
+    Some(format!("fused consecutive {dim}-maps n{u}+n{v} -> n{fused}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+    use crate::ir::func::ReduceOp;
+    use crate::ir::graph::{map_over, ArgMode, Graph};
+    use crate::ir::types::Ty;
+    use crate::ir::validate::assert_valid;
+
+    fn chain(g: &mut Graph) -> (crate::ir::graph::Port, crate::ir::graph::Port) {
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o1 = map_over(g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            mb.collect(r);
+        });
+        let o2 = map_over(g, "N", &[(o1[0], ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).neg(), ins[0]);
+            mb.collect(r);
+        });
+        (o1[0], o2[0])
+    }
+
+    #[test]
+    fn fuses_simple_chain() {
+        let mut g = Graph::new();
+        let (_, o2) = chain(&mut g);
+        g.output("B", o2);
+        assert!(find(&g).is_some());
+        let msg = try_rule1(&mut g).unwrap();
+        assert!(msg.contains("N-maps"));
+        assert_valid(&g);
+        assert_eq!(g.interior_buffered_count_recursive(), 0);
+        assert!(find(&g).is_none());
+    }
+
+    #[test]
+    fn dim_mismatch_blocks() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N", "K"]));
+        let o1 = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let inner = map_over(&mut mb.g, "K", &[(ins[0], ArgMode::Mapped)], |mb2, i2| {
+                let r = mb2.g.ew1(Expr::var(0).exp(), i2[0]);
+                mb2.collect(r);
+            });
+            mb.collect(inner[0]);
+        });
+        // consume over K at top level: map over K (strips K, dims [N, K] -> first K)
+        let o2 = map_over(&mut g, "K", &[(o1[0], ArgMode::Mapped)], |mb, ins| {
+            let inner = map_over(&mut mb.g, "N", &[(ins[0], ArgMode::Mapped)], |mb2, i2| {
+                let r = mb2.g.ew1(Expr::var(0).neg(), i2[0]);
+                mb2.collect(r);
+            });
+            mb.collect(inner[0]);
+        });
+        g.output("B", o2[0]);
+        assert!(find(&g).is_none());
+    }
+
+    #[test]
+    fn indirect_path_blocks() {
+        // U -> W -> V and U -> V: fusing U,V would create a cycle.
+        // W = reduce of U's output; V consumes U mapped and W broadcast.
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let u = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(crate::ir::func::FuncOp::RowSum, &[ins[0]]);
+            mb.collect(r);
+        });
+        let w = g.reduce(ReduceOp::Add, u[0]); // W on the indirect path
+        let v = map_over(
+            &mut g,
+            "N",
+            &[(u[0], ArgMode::Mapped), (w, ArgMode::Bcast)],
+            |mb, ins| {
+                let r = mb.g.ew2(Expr::var(0).add(Expr::var(1)), ins[0], ins[1]);
+                mb.collect(r);
+            },
+        );
+        g.output("B", v[0]);
+        assert!(find(&g).is_none(), "indirect path must block rule 1");
+    }
+
+    #[test]
+    fn reduced_output_edge_blocks() {
+        // U's reduced (item) output consumed by V broadcast: not fusible.
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let u = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(crate::ir::func::FuncOp::RowSum, &[ins[0]]);
+            mb.reduce_out(r, ReduceOp::Add);
+        });
+        let v = map_over(
+            &mut g,
+            "N",
+            &[(a, ArgMode::Mapped), (u[0], ArgMode::Bcast)],
+            |mb, ins| {
+                let r = mb.g.func(crate::ir::func::FuncOp::RowScale, &[ins[0], ins[1]]);
+                mb.collect(r);
+            },
+        );
+        g.output("B", v[0]);
+        assert!(find(&g).is_none());
+    }
+}

@@ -1,0 +1,131 @@
+//! Rule 2: Fuse Sibling Maps.
+//!
+//! Pattern: two maps over the same dimension that share a common parent
+//! (some output port feeds an input port of each, with the same access
+//! mode) and are not reachable from each other. Fusing merges the shared
+//! inputs, so each shared block is copied from global to local memory once
+//! instead of twice.
+
+use super::merge::fuse_maps;
+use crate::ir::graph::{port, Graph, NodeId};
+
+pub fn find(g: &Graph) -> Option<(NodeId, NodeId)> {
+    let maps = super::map_ids(g);
+    for (a, &u) in maps.iter().enumerate() {
+        let um = g.node(u).as_map().unwrap();
+        if um.skip_first {
+            continue;
+        }
+        for &v in &maps[a + 1..] {
+            let vm = g.node(v).as_map().unwrap();
+            if vm.dim != um.dim || vm.skip_first {
+                continue;
+            }
+            // any direct edge => Rule 1 territory
+            if g.edges().iter().any(|e| {
+                (e.src.node == u && e.dst.node == v) || (e.src.node == v && e.dst.node == u)
+            }) {
+                continue;
+            }
+            // shared parent with identical mode
+            let shared = (0..um.inputs.len()).any(|i| {
+                let Some(s) = g.producer(port(u, i)) else {
+                    return false;
+                };
+                (0..vm.inputs.len()).any(|j| {
+                    g.producer(port(v, j)) == Some(s) && vm.inputs[j].mode == um.inputs[i].mode
+                })
+            });
+            if !shared {
+                continue;
+            }
+            if g.reaches(u, v) || g.reaches(v, u) {
+                continue;
+            }
+            return Some((u, v));
+        }
+    }
+    None
+}
+
+pub fn try_rule2(g: &mut Graph) -> Option<String> {
+    let (u, v) = find(g)?;
+    let dim = g.node(u).as_map().unwrap().dim.clone();
+    let fused = fuse_maps(g, u, v);
+    Some(format!("fused sibling {dim}-maps n{u}+n{v} -> n{fused}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+    use crate::ir::func::FuncOp;
+    use crate::ir::graph::{map_over, ArgMode, Graph};
+    use crate::ir::types::Ty;
+    use crate::ir::validate::assert_valid;
+
+    #[test]
+    fn fuses_siblings_sharing_parent() {
+        let mut g = Graph::new();
+        let x = g.input("X", Ty::blocks(&["K"]));
+        let o1 = map_over(&mut g, "K", &[(x, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.collect(r);
+        });
+        let o2 = map_over(&mut g, "K", &[(x, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).pow(Expr::cst(2.0)), ins[0]);
+            mb.collect(r);
+        });
+        g.output("S", o1[0]);
+        g.output("Q", o2[0]);
+        assert!(find(&g).is_some());
+        try_rule2(&mut g).unwrap();
+        assert_valid(&g);
+        let maps = super::super::map_ids(&g);
+        assert_eq!(maps.len(), 1);
+        let m = g.node(maps[0]).as_map().unwrap();
+        assert_eq!(m.inputs.len(), 1, "X loaded once");
+        assert_eq!(m.outputs.len(), 2);
+    }
+
+    #[test]
+    fn no_shared_parent_blocks() {
+        let mut g = Graph::new();
+        let x = g.input("X", Ty::blocks(&["K"]));
+        let y = g.input("Y", Ty::blocks(&["K"]));
+        let o1 = map_over(&mut g, "K", &[(x, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.collect(r);
+        });
+        let o2 = map_over(&mut g, "K", &[(y, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.collect(r);
+        });
+        g.output("S", o1[0]);
+        g.output("Q", o2[0]);
+        assert!(find(&g).is_none());
+    }
+
+    #[test]
+    fn reachable_siblings_block() {
+        // u -> reduce -> v, both consume X: still blocked (path would loop).
+        let mut g = Graph::new();
+        let x = g.input("X", Ty::blocks(&["K"]));
+        let o1 = map_over(&mut g, "K", &[(x, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.collect(r);
+        });
+        let red = g.reduce(crate::ir::func::ReduceOp::Add, o1[0]);
+        let o2 = map_over(
+            &mut g,
+            "K",
+            &[(x, ArgMode::Mapped), (red, ArgMode::Bcast)],
+            |mb, ins| {
+                let r = mb.g.func(FuncOp::RowScale, &[ins[0], ins[1]]);
+                mb.collect(r);
+            },
+        );
+        g.output("Z", o2[0]);
+        assert!(find(&g).is_none());
+    }
+}

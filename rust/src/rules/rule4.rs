@@ -1,0 +1,188 @@
+//! Rule 4: Linearity of Matmul — Swap Scale/Dot.
+//!
+//! Pattern: a mapped `row_scale` over the contraction dim `k` whose sole
+//! consumer is the left operand of a block matmul. Mathematically
+//! `diag(c)·I1·I2 = diag(c)·(I1·I2)`, so scaling can move after the
+//! multiplication, where it maps over the *output* dim `a` instead of `k` —
+//! unblocking the matmul (it no longer waits for `c`) and aligning map
+//! dimensions for Rules 1/2.
+
+use super::matmul::{all_matmuls, MatmulMatch};
+use crate::ir::dim::Dim;
+use crate::ir::func::FuncOp;
+use crate::ir::graph::{map_over, port, ArgMode, Graph, NodeId, NodeKind, OutMode, Port};
+
+/// A map over `dim` whose inner graph is a single `row_scale`/`row_shift`:
+/// returns (data source port, vector source port).
+pub fn match_norm_map(g: &Graph, id: NodeId, op: &FuncOp) -> Option<(Port, Port, Dim)> {
+    let m = g.node(id).as_map()?;
+    if m.skip_first || m.inputs.len() != 2 || m.outputs.len() != 1 {
+        return None;
+    }
+    if !matches!(m.outputs[0].mode, OutMode::Collect) {
+        return None;
+    }
+    let inner = &m.inner;
+    let mut func = None;
+    for nid in inner.node_ids() {
+        match &inner.node(nid).kind {
+            NodeKind::Input { .. } | NodeKind::Output => {}
+            NodeKind::Func(f) if f == op => {
+                if func.replace(nid).is_some() {
+                    return None;
+                }
+            }
+            _ => return None,
+        }
+    }
+    let func = func?;
+    let x_src = inner.producer(port(func, 0))?;
+    let c_src = inner.producer(port(func, 1))?;
+    // arg0 from the mapped input, arg1 from the broadcast input
+    let x_pos = m.inputs.iter().position(|mi| mi.inner_input == x_src.node)?;
+    let c_pos = m.inputs.iter().position(|mi| mi.inner_input == c_src.node)?;
+    if m.inputs[x_pos].mode != ArgMode::Mapped || m.inputs[c_pos].mode != ArgMode::Bcast {
+        return None;
+    }
+    // func must feed the single output
+    let out_node = m.outputs[0].inner_output;
+    if inner.consumers(port(func, 0)) != vec![port(out_node, 0)] {
+        return None;
+    }
+    let x_outer = g.producer(port(id, x_pos))?;
+    let c_outer = g.producer(port(id, c_pos))?;
+    Some((x_outer, c_outer, m.dim.clone()))
+}
+
+/// Find (scale map, matmul) where the scale's collect output feeds exactly
+/// the matmul's left port and nothing else.
+pub fn find(g: &Graph) -> Option<(NodeId, Port, Port, MatmulMatch)> {
+    let matmuls = all_matmuls(g);
+    if matmuls.is_empty() {
+        return None;
+    }
+    for s in super::map_ids(g) {
+        let Some((x_src, c_src, s_dim)) = match_norm_map(g, s, &FuncOp::RowScale) else {
+            continue;
+        };
+        let consumers = g.consumers(port(s, 0));
+        if consumers.len() != 1 {
+            continue; // "no other outgoing edges" (Rule 8 handles fan-out)
+        }
+        for mm in &matmuls {
+            if consumers[0] == port(mm.pmap, mm.left_port) && mm.k_dim == s_dim {
+                return Some((s, x_src, c_src, mm.clone()));
+            }
+        }
+    }
+    None
+}
+
+pub fn try_rule4(g: &mut Graph) -> Option<String> {
+    let (s, x_src, c_src, mm) = find(g)?;
+    apply_swap(g, s, x_src, c_src, &mm, FuncOp::RowScale);
+    Some(format!(
+        "swapped {}-scale n{s} after matmul n{} (now a {}-map)",
+        mm.k_dim, mm.pmap, mm.a_dim
+    ))
+}
+
+/// Shared with Rule 4's apply: feed the matmul the un-normalized operand and
+/// re-apply the normalization over the output dim.
+pub(super) fn apply_swap(
+    g: &mut Graph,
+    s: NodeId,
+    x_src: Port,
+    c_src: Port,
+    mm: &MatmulMatch,
+    op: FuncOp,
+) {
+    // 1. matmul consumes the raw operand
+    g.connect(x_src, port(mm.pmap, mm.left_port));
+    // 2. drop the scale map
+    g.remove_node(s);
+    // 3. re-scale the matmul's output, mapped over the output dim
+    let old_consumers = g.consumers(port(mm.pmap, 0));
+    let ns = map_over(
+        g,
+        mm.a_dim.clone(),
+        &[
+            (port(mm.pmap, 0), ArgMode::Mapped),
+            (c_src, ArgMode::Bcast),
+        ],
+        |mb, ins| {
+            let r = mb.g.func(op, &[ins[0], ins[1]]);
+            mb.collect(r);
+        },
+    );
+    for c in old_consumers {
+        g.connect(ns[0], c);
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::ir::func::ReduceOp;
+    use crate::ir::types::Ty;
+    use crate::ir::validate::assert_valid;
+    use crate::rules::matmul::build_matmul;
+
+    /// scale(I1 by c) then matmul with I2 — the paper's Rule-4 pattern.
+    pub fn scale_matmul_program() -> (Graph, crate::ir::graph::Port) {
+        let mut g = Graph::new();
+        let i1 = g.input("I1", Ty::blocks(&["K"]));
+        let i2 = g.input("I2T", Ty::blocks(&["N", "K"]));
+        // c: a vector computed in local memory (reduce of row sums)
+        let pre = map_over(&mut g, "K", &[(i1, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.reduce_out(r, ReduceOp::Add);
+        });
+        let c = g.ew1(crate::ir::expr::Expr::var(0).recip(), pre[0]);
+        let scaled = map_over(
+            &mut g,
+            "K",
+            &[(i1, ArgMode::Mapped), (c, ArgMode::Bcast)],
+            |mb, ins| {
+                let r = mb.g.func(FuncOp::RowScale, &[ins[0], ins[1]]);
+                mb.collect(r);
+            },
+        );
+        let o = build_matmul(&mut g, scaled[0], i2, "N", "K");
+        g.output("I3", o);
+        (g, o)
+    }
+
+    #[test]
+    fn matches_and_swaps() {
+        let (mut g, _) = scale_matmul_program();
+        assert!(find(&g).is_some());
+        let msg = try_rule4(&mut g).unwrap();
+        assert!(msg.contains("swapped"));
+        assert_valid(&g);
+        assert!(find(&g).is_none(), "pattern gone after apply");
+        // the new scale map is over N now
+        let n_scale = super::super::map_ids(&g)
+            .into_iter()
+            .filter(|&id| match_norm_map(&g, id, &FuncOp::RowScale).is_some())
+            .count();
+        assert_eq!(n_scale, 1);
+        let id = super::super::map_ids(&g)
+            .into_iter()
+            .find(|&id| match_norm_map(&g, id, &FuncOp::RowScale).is_some())
+            .unwrap();
+        assert_eq!(g.node(id).as_map().unwrap().dim.name(), "N");
+    }
+
+    #[test]
+    fn fanout_blocks_rule4() {
+        let (mut g, _) = scale_matmul_program();
+        // add a second consumer of the scaled list
+        let sid = super::super::map_ids(&g)
+            .into_iter()
+            .find(|&id| match_norm_map(&g, id, &FuncOp::RowScale).is_some())
+            .unwrap();
+        g.output("scaled_too", port(sid, 0));
+        assert!(find(&g).is_none());
+    }
+}

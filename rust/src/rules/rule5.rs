@@ -1,0 +1,145 @@
+//! Rule 5: Linearity of Matmul — Swap Shift/Dot.
+//!
+//! Pattern: a mapped `row_shift` over the contraction dim feeding a matmul's
+//! left operand. By distributivity,
+//!
+//! ```text
+//! (I1 + c·1ᵀ)·I2 = I1·I2 + c·(1ᵀ·I2)
+//! ```
+//!
+//! so the substitution computes the raw matmul, a column-sum of `I2`
+//! (`row_sum` of the stored transposed blocks), an outer product with `c`,
+//! and an add — all mapped over the output dim `a`, aligning dimensions for
+//! later fusion. The paper's LayerNorm+Matmul example rides on this rule.
+
+use super::matmul::{all_matmuls, MatmulMatch};
+use crate::ir::func::{FuncOp, ReduceOp};
+use crate::ir::graph::{map_over, port, ArgMode, Graph, NodeId, Port};
+
+pub fn find(g: &Graph) -> Option<(NodeId, Port, Port, MatmulMatch)> {
+    let matmuls = all_matmuls(g);
+    if matmuls.is_empty() {
+        return None;
+    }
+    for s in super::map_ids(g) {
+        let Some((x_src, c_src, s_dim)) = super::rule4::match_norm_map(g, s, &FuncOp::RowShift)
+        else {
+            continue;
+        };
+        let consumers = g.consumers(port(s, 0));
+        if consumers.len() != 1 {
+            continue;
+        }
+        for mm in &matmuls {
+            if consumers[0] == port(mm.pmap, mm.left_port) && mm.k_dim == s_dim {
+                return Some((s, x_src, c_src, mm.clone()));
+            }
+        }
+    }
+    None
+}
+
+pub fn try_rule5(g: &mut Graph) -> Option<String> {
+    let (s, x_src, c_src, mm) = find(g)?;
+    let right_src = g.producer(port(mm.pmap, mm.right_port)).unwrap();
+
+    // 1. matmul consumes the raw operand; drop the shift map.
+    g.connect(x_src, port(mm.pmap, mm.left_port));
+    g.remove_node(s);
+    let old_consumers = g.consumers(port(mm.pmap, 0));
+
+    // 2. column sums of I2 (= row sums of the stored I2ᵀ blocks), unfused:
+    //    Map(a){ Map(k){row_sum} -> Reduce(k) } — later rules fuse inside.
+    let a = mm.a_dim.clone();
+    let k = mm.k_dim.clone();
+    let colsum = map_over(g, a.clone(), &[(right_src, ArgMode::Mapped)], |mb, ins| {
+        let kk = map_over(&mut mb.g, k.clone(), &[(ins[0], ArgMode::Mapped)], |mb2, i2| {
+            let r = mb2.g.func(FuncOp::RowSum, &[i2[0]]);
+            mb2.collect(r);
+        });
+        let red = mb.g.reduce(ReduceOp::Add, kk[0]);
+        mb.collect(red);
+    });
+
+    // 3. outer(c, colsum) per output block (its own a-map, as in the paper's
+    //    step-9 listing).
+    let omap = map_over(
+        g,
+        a.clone(),
+        &[(c_src, ArgMode::Bcast), (colsum[0], ArgMode::Mapped)],
+        |mb, ins| {
+            let o = mb.g.func(FuncOp::Outer, &[ins[0], ins[1]]);
+            mb.collect(o);
+        },
+    );
+
+    // 4. add the correction to the raw matmul result.
+    let amap = map_over(
+        g,
+        a.clone(),
+        &[
+            (omap[0], ArgMode::Mapped),
+            (port(mm.pmap, 0), ArgMode::Mapped),
+        ],
+        |mb, ins| {
+            let r = mb.g.func(FuncOp::Add, &[ins[0], ins[1]]);
+            mb.collect(r);
+        },
+    );
+    for cns in old_consumers {
+        g.connect(amap[0], cns);
+    }
+    Some(format!(
+        "swapped {k}-shift n{s} across matmul n{} (colsum + outer + add over {a})",
+        mm.pmap
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::Ty;
+    use crate::ir::validate::assert_valid;
+    use crate::rules::matmul::build_matmul;
+
+    fn shift_matmul_program() -> Graph {
+        let mut g = Graph::new();
+        let i1 = g.input("I1", Ty::blocks(&["K"]));
+        let i2 = g.input("I2T", Ty::blocks(&["N", "K"]));
+        let pre = map_over(&mut g, "K", &[(i1, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.reduce_out(r, ReduceOp::Add);
+        });
+        let c = g.ew1(crate::ir::expr::Expr::var(0).neg(), pre[0]);
+        let shifted = map_over(
+            &mut g,
+            "K",
+            &[(i1, ArgMode::Mapped), (c, ArgMode::Bcast)],
+            |mb, ins| {
+                let r = mb.g.func(FuncOp::RowShift, &[ins[0], ins[1]]);
+                mb.collect(r);
+            },
+        );
+        let o = build_matmul(&mut g, shifted[0], i2, "N", "K");
+        g.output("I3", o);
+        g
+    }
+
+    #[test]
+    fn matches_and_substitutes() {
+        let mut g = shift_matmul_program();
+        assert!(find(&g).is_some());
+        let before_maps = super::super::map_ids(&g).len();
+        try_rule5(&mut g).unwrap();
+        assert_valid(&g);
+        assert!(find(&g).is_none());
+        // shift map gone; colsum + outer + add added
+        assert_eq!(super::super::map_ids(&g).len(), before_maps - 1 + 3);
+        // all new maps are over the output dim N
+        let n_maps = super::super::map_ids(&g)
+            .into_iter()
+            .filter(|&id| g.node(id).as_map().unwrap().dim.name() == "N")
+            .count();
+        assert_eq!(n_maps, 4); // matmul + colsum + outer + add
+    }
+}

@@ -1,0 +1,202 @@
+//! Rule 7: Peel Off First Iteration.
+//!
+//! The redundancy-free alternative to Rule 6: instead of replicating the
+//! whole graph per iteration of the terminal map, peel the first iteration
+//! (`x = 0`) out of the map and run it at the current graph level; the map
+//! then iterates `1..X`. Collected outputs are reassembled with a `Concat`
+//! node; reduced outputs combine the peeled value with the rest via the
+//! reduction op.
+//!
+//! None of the paper's three examples uses this rule (their traces all go
+//! through Rule 6), so the fusion driver exposes it only through the
+//! ablation benches and the public API.
+
+use crate::ir::expr::Expr;
+use crate::ir::func::{FuncOp, ReduceOp};
+use crate::ir::graph::{port, ArgMode, Graph, NodeId, NodeKind, OutMode, Port};
+use std::collections::HashMap;
+
+/// Find a peelable map: terminal, not already peeled, collect outputs with
+/// item elements, mapped inputs fed by single-level lists.
+pub fn find(g: &Graph) -> Option<NodeId> {
+    let output_ids: Vec<NodeId> = g.output_ids();
+    for x in super::map_ids(g) {
+        let xm = g.node(x).as_map().unwrap();
+        if xm.skip_first {
+            continue;
+        }
+        if !g
+            .node_consumers(x)
+            .iter()
+            .all(|c| output_ids.contains(&c.node))
+        {
+            continue;
+        }
+        let collect_ok = xm.outputs.iter().enumerate().all(|(j, o)| {
+            !matches!(o.mode, OutMode::Collect) || g.out_ty(port(x, j)).dims.len() == 1
+        });
+        if !collect_ok {
+            continue;
+        }
+        // mapped inputs must be indexed by `x.dim` at the *outermost* level
+        // so the peeled copy can take their head element
+        let mapped_ok = xm.inputs.iter().enumerate().all(|(i, mi)| {
+            mi.mode != ArgMode::Mapped
+                || g.producer(port(x, i))
+                    .map(|s| g.out_ty(s).dims.first() == Some(&xm.dim))
+                    .unwrap_or(false)
+        });
+        if !mapped_ok {
+            continue;
+        }
+        return Some(x);
+    }
+    None
+}
+
+pub fn try_rule7(g: &mut Graph) -> Option<String> {
+    let x = find(g)?;
+    let xm = g.node(x).as_map().unwrap().clone();
+    let dim = xm.dim.clone();
+
+    // --- peeled copy of the inner graph at this level (x = 0) -------------
+    let remap = {
+        let inner = xm.inner.clone();
+        g.absorb(inner)
+    };
+    // bind cloned inner Inputs
+    for (i, mi) in xm.inputs.iter().enumerate() {
+        let s = g.producer(port(x, i)).expect("map input unconnected");
+        let cloned_in = remap[&mi.inner_input];
+        let replacement: Port = match mi.mode {
+            ArgMode::Mapped => {
+                let h = g.add_node(NodeKind::Head, "head");
+                g.connect(s, port(h, 0));
+                port(h, 0)
+            }
+            ArgMode::Bcast => s,
+        };
+        g.rewire_consumers(port(cloned_in, 0), replacement);
+        g.remove_node(cloned_in);
+    }
+    // peel out cloned Output nodes, keeping their producer ports
+    let mut head_vals: Vec<Port> = Vec::with_capacity(xm.outputs.len());
+    for mo in &xm.outputs {
+        let cloned_out = remap[&mo.inner_output];
+        let p = g
+            .producer(port(cloned_out, 0))
+            .expect("inner output unconnected");
+        g.remove_node(cloned_out);
+        head_vals.push(p);
+    }
+
+    // --- the rest: the same map over 1..X ----------------------------------
+    let mut rest = xm.clone();
+    rest.skip_first = true;
+    let sources: Vec<Port> = (0..xm.inputs.len())
+        .map(|i| g.producer(port(x, i)).unwrap())
+        .collect();
+    let out_consumers: Vec<Vec<Port>> = (0..xm.outputs.len())
+        .map(|j| g.consumers(port(x, j)))
+        .collect();
+    let rest_id = g.add_node(NodeKind::Map(Box::new(rest)), format!("map{dim}[1:]"));
+    for (i, s) in sources.iter().enumerate() {
+        g.connect(*s, port(rest_id, i));
+    }
+
+    // --- recombine outputs ---------------------------------------------------
+    let mut combined: HashMap<usize, Port> = HashMap::new();
+    for (j, mo) in xm.outputs.iter().enumerate() {
+        let out = match &mo.mode {
+            OutMode::Collect => {
+                let c = g.add_node(
+                    NodeKind::Concat { dim: dim.clone() },
+                    format!("concat{dim}"),
+                );
+                g.connect(head_vals[j], port(c, 0));
+                g.connect(port(rest_id, j), port(c, 1));
+                port(c, 0)
+            }
+            OutMode::Reduce(ReduceOp::Add) => {
+                g.func(FuncOp::Add, &[head_vals[j], port(rest_id, j)])
+            }
+            OutMode::Reduce(ReduceOp::Max) => g.ew2(
+                Expr::var(0).max(Expr::var(1)),
+                head_vals[j],
+                port(rest_id, j),
+            ),
+        };
+        combined.insert(j, out);
+    }
+    for (j, consumers) in out_consumers.iter().enumerate() {
+        for c in consumers {
+            g.connect(combined[&j], *c);
+        }
+    }
+    g.remove_node(x);
+    Some(format!(
+        "peeled first {dim}-iteration of n{x} (rest -> n{rest_id})"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::dim::DimSizes;
+    use crate::ir::graph::map_over;
+    use crate::ir::types::Ty;
+    use crate::ir::validate::assert_valid;
+    use crate::loopir::interp::{exec, BufVal, ExecConfig};
+    use crate::loopir::lower::lower;
+    use crate::tensor::{Rng, Val};
+
+    fn program() -> Graph {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let e = mb.g.ew1(Expr::var(0).exp(), ins[0]);
+            let s = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.collect(e);
+            mb.reduce_out(s, ReduceOp::Add);
+        });
+        g.output("B", o[0]);
+        g.output("S", o[1]);
+        g
+    }
+
+    #[test]
+    fn peel_preserves_semantics() {
+        let g0 = program();
+        let mut g1 = g0.clone();
+        assert!(find(&g1).is_some());
+        try_rule7(&mut g1).unwrap();
+        assert_valid(&g1);
+
+        let mut rng = Rng::new(11);
+        let mut input = BufVal::new(vec![4]);
+        for i in 0..4 {
+            input.set(&[i], Val::Block(rng.mat(2, 3)));
+        }
+        let run = |g: &Graph| {
+            let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 4)]));
+            cfg.inputs.insert("A".into(), input.clone());
+            exec(&lower(g), &cfg)
+        };
+        let r0 = run(&g0);
+        let r1 = run(&g1);
+        for i in 0..4 {
+            assert!(
+                r0.outputs["B"]
+                    .get(&[i])
+                    .max_abs_diff(r1.outputs["B"].get(&[i]))
+                    < 1e-6
+            );
+        }
+        assert!(
+            r0.outputs["S"]
+                .get(&[])
+                .max_abs_diff(r1.outputs["S"].get(&[]))
+                < 1e-5
+        );
+    }
+}

@@ -1,0 +1,121 @@
+//! Rule 8: Duplicate Mapped Scale.
+//!
+//! A mapped `row_scale` feeding the left operands of *two or more* matmuls
+//! blocks Rule 4 (which requires a single consumer). Duplicating the scale
+//! map gives each matmul a private copy, unlocking Rule 4 for each — the
+//! first move of the paper's RMSNorm+FFN-SwiGLU trace (the RMS normalization
+//! feeds both the W and V projections).
+
+use super::matmul::all_matmuls;
+use crate::ir::func::FuncOp;
+use crate::ir::graph::{port, Graph, NodeId, NodeKind, Port};
+
+/// Find a scale map whose collect output feeds ≥2 matmul left ports.
+/// Returns (scale map, one matmul-left consumer port to peel off).
+pub fn find(g: &Graph) -> Option<(NodeId, Port)> {
+    let matmuls = all_matmuls(g);
+    if matmuls.len() < 2 {
+        return None;
+    }
+    for s in super::map_ids(g) {
+        if super::rule4::match_norm_map(g, s, &FuncOp::RowScale).is_none() {
+            continue;
+        }
+        let consumers = g.consumers(port(s, 0));
+        let mm_left: Vec<Port> = consumers
+            .iter()
+            .copied()
+            .filter(|c| {
+                matmuls
+                    .iter()
+                    .any(|mm| *c == port(mm.pmap, mm.left_port))
+            })
+            .collect();
+        if mm_left.len() >= 2 {
+            return Some((s, mm_left[0]));
+        }
+    }
+    None
+}
+
+pub fn try_rule8(g: &mut Graph) -> Option<String> {
+    let (s, peel) = find(g)?;
+    // Deep-clone the scale map node.
+    let node = g.node(s).clone();
+    let NodeKind::Map(m) = &node.kind else {
+        unreachable!()
+    };
+    let sources: Vec<Port> = (0..m.inputs.len())
+        .map(|i| g.producer(port(s, i)).expect("scale input unconnected"))
+        .collect();
+    let clone_id = g.add_node(node.kind.clone(), format!("{}'", node.label));
+    for (i, src) in sources.iter().enumerate() {
+        g.connect(*src, port(clone_id, i));
+    }
+    // Peel one matmul consumer off to the clone.
+    g.connect(port(clone_id, 0), peel);
+    Some(format!(
+        "duplicated scale map n{s} -> n{clone_id} for matmul input at n{}",
+        peel.node
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::func::ReduceOp;
+    use crate::ir::graph::{map_over, ArgMode};
+    use crate::ir::types::Ty;
+    use crate::ir::validate::assert_valid;
+    use crate::rules::matmul::build_matmul;
+
+    fn two_matmul_program() -> Graph {
+        let mut g = Graph::new();
+        let x = g.input("X", Ty::blocks(&["D"]));
+        let wt = g.input("WT", Ty::blocks(&["K", "D"]));
+        let vt = g.input("VT", Ty::blocks(&["K", "D"]));
+        let pre = map_over(&mut g, "D", &[(x, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.func(FuncOp::RowSum, &[ins[0]]);
+            mb.reduce_out(r, ReduceOp::Add);
+        });
+        let c = g.ew1(crate::ir::expr::Expr::var(0).recip().sqrt(), pre[0]);
+        let scaled = map_over(
+            &mut g,
+            "D",
+            &[(x, ArgMode::Mapped), (c, ArgMode::Bcast)],
+            |mb, ins| {
+                let r = mb.g.func(FuncOp::RowScale, &[ins[0], ins[1]]);
+                mb.collect(r);
+            },
+        );
+        let o1 = build_matmul(&mut g, scaled[0], wt, "K", "D");
+        let o2 = build_matmul(&mut g, scaled[0], vt, "K", "D");
+        g.output("W_OUT", o1);
+        g.output("V_OUT", o2);
+        g
+    }
+
+    #[test]
+    fn duplicates_shared_scale() {
+        let mut g = two_matmul_program();
+        // Rule 4 is blocked by fan-out…
+        assert!(super::super::rule4::find(&g).is_none());
+        // …until rule 8 duplicates.
+        assert!(find(&g).is_some());
+        try_rule8(&mut g).unwrap();
+        assert_valid(&g);
+        assert!(find(&g).is_none(), "each matmul now has its own scale");
+        assert!(super::super::rule4::find(&g).is_some());
+        // Rule 4 applies twice, then never again.
+        assert!(super::super::rule4::try_rule4(&mut g).is_some());
+        assert!(super::super::rule4::try_rule4(&mut g).is_some());
+        assert!(super::super::rule4::try_rule4(&mut g).is_none());
+        assert_valid(&g);
+    }
+
+    #[test]
+    fn single_matmul_no_match() {
+        let (g, _) = super::super::rule4::tests::scale_matmul_program();
+        assert!(find(&g).is_none());
+    }
+}

@@ -1,0 +1,160 @@
+//! Rule 9: Fuse Consecutive Elementwise.
+//!
+//! Two elementwise operators connected by an unbuffered edge, where the
+//! intermediate has no other consumers, compose into a single elementwise
+//! operator (the scalar expressions compose symbolically). This removes a
+//! kernel invocation rather than a materialized intermediate; in Flash
+//! Attention it turns `t7 = t6*(DD**-0.5); t9 = exp(t7)` into
+//! `exp(t6*(DD**-0.5))`.
+
+use crate::ir::expr::Expr;
+use crate::ir::func::FuncOp;
+use crate::ir::graph::{port, Graph, NodeId, NodeKind, Port};
+
+/// Find (producer EW node, consumer EW node).
+pub fn find(g: &Graph) -> Option<(NodeId, NodeId)> {
+    for u in g.node_ids() {
+        let NodeKind::Func(FuncOp::Ew(_)) = &g.node(u).kind else {
+            continue;
+        };
+        let consumers = g.consumers(port(u, 0));
+        if consumers.is_empty() {
+            continue;
+        }
+        // all uses must be by one EW node
+        let v = consumers[0].node;
+        if !consumers.iter().all(|c| c.node == v) {
+            continue;
+        }
+        if let NodeKind::Func(FuncOp::Ew(_)) = &g.node(v).kind {
+            return Some((u, v));
+        }
+    }
+    None
+}
+
+pub fn try_rule9(g: &mut Graph) -> Option<String> {
+    let (u, v) = find(g)?;
+    let (NodeKind::Func(FuncOp::Ew(ue)), NodeKind::Func(FuncOp::Ew(ve))) =
+        (&g.node(u).kind, &g.node(v).kind)
+    else {
+        unreachable!()
+    };
+    let (ue, ve) = (ue.clone(), ve.clone());
+
+    // Collect argument sources, deduplicating by port.
+    let u_srcs: Vec<Port> = (0..ue.arity().max(1))
+        .filter(|i| *i < g.node(u).in_arity())
+        .map(|i| g.producer(port(u, i)).expect("ew input unconnected"))
+        .collect();
+    let v_srcs: Vec<Port> = (0..g.node(v).in_arity())
+        .map(|i| g.producer(port(v, i)).expect("ew input unconnected"))
+        .collect();
+
+    let mut new_args: Vec<Port> = Vec::new();
+    let pos_of = |p: Port, new_args: &mut Vec<Port>| -> usize {
+        if let Some(i) = new_args.iter().position(|x| *x == p) {
+            i
+        } else {
+            new_args.push(p);
+            new_args.len() - 1
+        }
+    };
+
+    // u's expr rewritten onto the merged argument list
+    let u_map: Vec<usize> = u_srcs
+        .iter()
+        .map(|s| pos_of(*s, &mut new_args))
+        .collect();
+    let u_expr = if u_map.is_empty() {
+        ue.clone()
+    } else {
+        ue.remap_vars(&u_map)
+    };
+
+    // v's expr: slots fed by u become u_expr, others map to merged args
+    let subs: Vec<Expr> = v_srcs
+        .iter()
+        .map(|s| {
+            if s.node == u {
+                u_expr.clone()
+            } else {
+                Expr::Var(pos_of(*s, &mut new_args))
+            }
+        })
+        .collect();
+    let fused = ve.substitute(&subs);
+
+    let consumers = g.consumers(port(v, 0));
+    let new = g.func(FuncOp::Ew(fused), &new_args);
+    for c in consumers {
+        g.connect(new, c);
+    }
+    g.remove_node(u);
+    g.remove_node(v);
+    Some(format!("fused elementwise n{u}∘n{v} -> n{}", new.node))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::types::Ty;
+    use crate::ir::validate::assert_valid;
+    use crate::loopir::{lower::lower, print::render};
+
+    #[test]
+    fn composes_scale_then_exp() {
+        // the FA step-13 fusion: x*(DD**-0.5) then exp
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::block());
+        let s = g.ew1(
+            Expr::var(0).mul(Expr::param("DD").pow(Expr::cst(-0.5))),
+            a,
+        );
+        let e = g.ew1(Expr::var(0).exp(), s);
+        g.output("B", e);
+        try_rule9(&mut g).unwrap();
+        assert_valid(&g);
+        assert!(find(&g).is_none());
+        let code = render(&lower(&g));
+        assert!(code.contains("exp(t1*DD**(-0.5))"), "{code}");
+    }
+
+    #[test]
+    fn shared_arg_dedup() {
+        // u = x+1 consumed twice by v = u*u → (x+1)*(x+1) over ONE arg
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::block());
+        let u = g.ew1(Expr::var(0).add(Expr::cst(1.0)), a);
+        let v = g.ew2(Expr::var(0).mul(Expr::var(1)), u, u);
+        g.output("B", v);
+        try_rule9(&mut g).unwrap();
+        assert_valid(&g);
+        let id = g
+            .node_ids()
+            .find(|&i| matches!(g.node(i).kind, NodeKind::Func(FuncOp::Ew(_))))
+            .unwrap();
+        assert_eq!(g.node(id).in_arity(), 1);
+    }
+
+    #[test]
+    fn other_consumer_blocks() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::block());
+        let u = g.ew1(Expr::var(0).add(Expr::cst(1.0)), a);
+        let v = g.ew1(Expr::var(0).exp(), u);
+        g.output("B", v);
+        g.output("U_TOO", u);
+        assert!(find(&g).is_none());
+    }
+
+    #[test]
+    fn non_ew_blocks() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::block());
+        let u = g.ew1(Expr::var(0).exp(), a);
+        let v = g.func(FuncOp::RowSum, &[u]);
+        g.output("B", v);
+        assert!(find(&g).is_none());
+    }
+}

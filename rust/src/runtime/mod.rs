@@ -1,0 +1,210 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the XLA CPU client.
+//!
+//! The interchange format is HLO **text** (`HloModuleProto::from_text_file`);
+//! see DESIGN.md and the aot docstring for why serialized protos are
+//! rejected by this XLA version. One compiled executable per model variant,
+//! cached after first use; Python is never on this path.
+
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The artifact registry.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: HashMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let mut models = HashMap::new();
+        for (name, m) in j.as_obj().ok_or_else(|| anyhow!("manifest not an object"))? {
+            let file = m
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("{name}: missing file"))?
+                .to_string();
+            let inputs = m
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(|inp| {
+                    let n = inp.get("name").and_then(|x| x.as_str()).unwrap_or("?");
+                    let shape: Vec<usize> = inp
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|a| a.iter().filter_map(|x| x.as_num()).map(|x| x as usize).collect())
+                        .unwrap_or_default();
+                    (n.to_string(), shape)
+                })
+                .collect();
+            let outputs = m
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .map(|s| {
+                            s.as_arr()
+                                .map(|d| {
+                                    d.iter()
+                                        .filter_map(|x| x.as_num())
+                                        .map(|x| x as usize)
+                                        .collect()
+                                })
+                                .unwrap_or_default()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    file,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) a model's executable.
+    pub fn prepare(&mut self, model: &str) -> Result<()> {
+        if self.exes.contains_key(model) {
+            return Ok(());
+        }
+        let info = self.manifest.model(model)?.clone();
+        let path = self.manifest.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.insert(model.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a model on full matrices, in manifest input order.
+    pub fn execute(&mut self, model: &str, inputs: &[&Mat]) -> Result<Vec<Mat>> {
+        self.prepare(model)?;
+        let info = self.manifest.model(model)?.clone();
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "{model}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                info.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (m, (name, shape)) in inputs.iter().zip(&info.inputs) {
+            if shape.len() == 2 && (m.rows != shape[0] || m.cols != shape[1]) {
+                bail!(
+                    "{model}: input {name} is {}x{}, artifact expects {}x{}",
+                    m.rows,
+                    m.cols,
+                    shape[0],
+                    shape[1]
+                );
+            }
+            let lit = xla::Literal::vec1(&m.data)
+                .reshape(&[m.rows as i64, m.cols as i64])?;
+            literals.push(lit);
+        }
+        let exe = self.exes.get(model).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot lowers with return_tuple=True
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let data = p.to_vec::<f32>()?;
+            let shape = info
+                .outputs
+                .get(i)
+                .cloned()
+                .unwrap_or_else(|| vec![data.len(), 1]);
+            let (r, c) = match shape.as_slice() {
+                [r, c] => (*r, *c),
+                [n] => (*n, 1),
+                _ => (data.len(), 1),
+            };
+            out.push(Mat::from_vec(r, c, data));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("bb_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"m": {"file": "m.hlo.txt",
+                 "inputs": [{"name": "A", "shape": [4, 4]}],
+                 "outputs": [[4, 4]]}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let info = m.model("m").unwrap();
+        assert_eq!(info.inputs[0].0, "A");
+        assert_eq!(info.inputs[0].1, vec![4, 4]);
+        assert_eq!(info.outputs[0], vec![4, 4]);
+        assert!(m.model("nope").is_err());
+    }
+}

@@ -1,0 +1,431 @@
+//! Fusion-candidate selection.
+//!
+//! The paper defers its provably-optimal selection algorithm to an
+//! unpublished companion paper, but fully specifies the *contract* (§1, §4):
+//! the selector picks candidate subgraphs made of standard operators, sends
+//! each to the fusion algorithm, receives multiple fused snapshots per
+//! candidate, evaluates them, and chooses the optimal set of kernels that
+//! implements the whole block program — also guarding against excessive
+//! fusion so the fusion algorithm never has to.
+//!
+//! This module implements that contract with an interval dynamic program:
+//! top-level operators are linearized in topological order; every contiguous
+//! interval free of miscellaneous operators is a candidate (contiguous topo
+//! intervals are convex, so extraction is always legal); each candidate is
+//! fused, every snapshot is scored with the static cost model, and a
+//! shortest-path DP picks the minimum-cost partition into kernels.
+
+use crate::cost::{analyze, CostModel, ShapeEnv, VShape};
+use crate::fusion::fuse;
+use crate::ir::graph::{port, Graph, NodeId, NodeKind, Port};
+use crate::ir::types::Ty;
+use crate::loopir::lower::lower;
+use std::collections::HashMap;
+
+/// Where a segment input comes from at execution time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ValueRef {
+    /// A program input buffer (by name).
+    ProgramInput(String),
+    /// Output `label` of an earlier segment.
+    SegmentOutput { segment: usize, label: String },
+}
+
+/// One chosen kernel: a fused standalone block program plus its I/O wiring.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    /// Original top-level node ids covered by this kernel.
+    pub node_ids: Vec<NodeId>,
+    /// The fused block program (best snapshot).
+    pub graph: Graph,
+    /// Which fusion snapshot was chosen (0 = least replication).
+    pub snapshot_index: usize,
+    /// For each graph input label: where its value comes from.
+    pub inputs: Vec<(String, ValueRef)>,
+    /// For each graph output label: the program output it implements, if any.
+    pub outputs: Vec<(String, Option<String>)>,
+    pub cost_scalar: f64,
+}
+
+/// The selected implementation of a block program.
+#[derive(Clone, Debug)]
+pub struct SelectionPlan {
+    pub segments: Vec<Segment>,
+    pub total_cost: f64,
+}
+
+/// Context needed to score candidates.
+pub struct SelectCtx {
+    pub sizes: crate::ir::dim::DimSizes,
+    /// Full shapes of program inputs (rows, cols).
+    pub full_shapes: HashMap<String, (usize, usize)>,
+    pub model: CostModel,
+}
+
+impl SelectCtx {
+    /// Item shapes of every top-level value of `g` (graph-level inference).
+    fn port_shapes(&self, g: &Graph) -> HashMap<Port, VShape> {
+        infer_port_shapes(g, &self.input_shapes(g))
+    }
+
+    fn input_shapes(&self, g: &Graph) -> HashMap<String, VShape> {
+        let mut m = HashMap::new();
+        for id in g.input_ids() {
+            let name = &g.node(id).label;
+            let ty = g.input_ty(id);
+            let (rows, cols) = *self
+                .full_shapes
+                .get(name)
+                .unwrap_or_else(|| panic!("no full shape for program input {name}"));
+            assert_eq!(ty.dims.len(), 2);
+            let rb = self.sizes.get(&ty.dims[0]);
+            let cb = self.sizes.get(&ty.dims[1]);
+            m.insert(name.clone(), VShape::Block(rows / rb, cols / cb));
+        }
+        m
+    }
+}
+
+/// Infer the item shape of every output port at the top level of `g`
+/// (recursing through maps; item shapes are invariant under list nesting).
+pub fn infer_port_shapes(
+    g: &Graph,
+    input_shapes: &HashMap<String, VShape>,
+) -> HashMap<Port, VShape> {
+    fn go(
+        g: &Graph,
+        in_shapes: &HashMap<NodeId, VShape>,
+        out: &mut HashMap<Port, VShape>,
+    ) {
+        for id in g.topo_order() {
+            let n = g.node(id);
+            match &n.kind {
+                NodeKind::Input { .. } => {
+                    out.insert(port(id, 0), in_shapes[&id]);
+                }
+                NodeKind::Output => {}
+                NodeKind::Func(f) => {
+                    let args: Vec<VShape> = (0..f.arity())
+                        .map(|i| out[&g.producer(port(id, i)).unwrap()])
+                        .collect();
+                    let (sh, _) =
+                        crate::cost::shape_of_func(f, &args);
+                    out.insert(port(id, 0), sh);
+                }
+                NodeKind::Reduce(_) | NodeKind::Head => {
+                    let s = out[&g.producer(port(id, 0)).unwrap()];
+                    out.insert(port(id, 0), s);
+                }
+                NodeKind::Concat { .. } => {
+                    let s = out[&g.producer(port(id, 0)).unwrap()];
+                    out.insert(port(id, 0), s);
+                }
+                NodeKind::Misc { .. } => {
+                    let s = out[&g.producer(port(id, 0)).unwrap()];
+                    out.insert(port(id, 0), s);
+                }
+                NodeKind::Map(m) => {
+                    let mut inner_in = HashMap::new();
+                    for (i, mi) in m.inputs.iter().enumerate() {
+                        let s = out[&g.producer(port(id, i)).unwrap()];
+                        inner_in.insert(mi.inner_input, s);
+                    }
+                    let mut inner_out = HashMap::new();
+                    go(&m.inner, &inner_in, &mut inner_out);
+                    for (j, mo) in m.outputs.iter().enumerate() {
+                        let src = m.inner.producer(port(mo.inner_output, 0)).unwrap();
+                        out.insert(port(id, j), inner_out[&src]);
+                    }
+                }
+            }
+        }
+    }
+    let mut in_shapes = HashMap::new();
+    for id in g.input_ids() {
+        in_shapes.insert(id, input_shapes[&g.node(id).label]);
+    }
+    let mut out = HashMap::new();
+    go(g, &in_shapes, &mut out);
+    out
+}
+
+/// Extract the contiguous-interval candidate as a standalone block program.
+/// Returns (graph, input wiring, output wiring).
+#[allow(clippy::type_complexity)]
+fn extract_candidate(
+    g: &Graph,
+    interval: &[NodeId],
+) -> (Graph, Vec<(String, Port)>, Vec<(String, Port)>) {
+    let inside: std::collections::HashSet<NodeId> = interval.iter().copied().collect();
+    let mut cg = Graph::new();
+    let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+    for &id in interval {
+        let n = g.node(id);
+        let nid = cg.add_node(n.kind.clone(), n.label.clone());
+        remap.insert(id, nid);
+    }
+    // inputs: every distinct outside source feeding the interval
+    let mut in_wiring: Vec<(String, Port)> = Vec::new();
+    let mut in_ports: HashMap<Port, Port> = HashMap::new(); // outer src -> candidate input port
+    for &id in interval {
+        for i in 0..g.node(id).in_arity() {
+            let s = g.producer(port(id, i)).expect("unconnected input");
+            let dst = port(remap[&id], i);
+            if inside.contains(&s.node) {
+                cg.connect(port(remap[&s.node], s.port), dst);
+            } else {
+                let cin = *in_ports.entry(s).or_insert_with(|| {
+                    let label = format!("CIN{}", in_wiring.len());
+                    let ty: Ty = g.out_ty(s);
+                    let p = cg.input(label.clone(), ty);
+                    in_wiring.push((label, s));
+                    p
+                });
+                cg.connect(cin, dst);
+            }
+        }
+    }
+    // outputs: every interval value consumed outside (or by program outputs)
+    let mut out_wiring: Vec<(String, Port)> = Vec::new();
+    for &id in interval {
+        for j in 0..g.node(id).out_arity() {
+            let consumers = g.consumers(port(id, j));
+            let escapes = consumers.iter().any(|c| !inside.contains(&c.node));
+            if escapes {
+                let label = format!("COUT{}", out_wiring.len());
+                cg.output(label.clone(), port(remap[&id], j));
+                out_wiring.push((label, port(id, j)));
+            }
+        }
+    }
+    (cg, in_wiring, out_wiring)
+}
+
+/// Score a standalone candidate: fuse it, cost every snapshot, return the
+/// best (cost, snapshot index, fused graph).
+fn best_fusion(
+    cg: &Graph,
+    shapes: &HashMap<String, VShape>,
+    ctx: &SelectCtx,
+) -> (f64, usize, Graph) {
+    let res = fuse(cg.clone());
+    let mut best: Option<(f64, usize, Graph)> = None;
+    for (i, snap) in res.snapshots.iter().enumerate() {
+        let ir = lower(snap);
+        let env = ShapeEnv {
+            inputs: shapes.clone(),
+        };
+        let c = analyze(&ir, &ctx.sizes, &env);
+        let s = ctx.model.scalar(&c);
+        if best.as_ref().map(|(b, _, _)| s < *b).unwrap_or(true) {
+            best = Some((s, i, snap.clone()));
+        }
+    }
+    best.expect("fuse returned no snapshots")
+}
+
+/// Run selection over the top level of a block program.
+pub fn select(g: &Graph, ctx: &SelectCtx) -> SelectionPlan {
+    let port_shapes = ctx.port_shapes(g);
+    let ops: Vec<NodeId> = g
+        .topo_order()
+        .into_iter()
+        .filter(|&i| !g.node(i).is_io())
+        .collect();
+    let n = ops.len();
+    assert!(n > 0, "select: empty program");
+
+    let splittable = |id: NodeId| matches!(g.node(id).kind, NodeKind::Misc { .. });
+
+    // Score every legal interval [i, j).
+    let mut interval: HashMap<(usize, usize), (f64, usize, Graph)> = HashMap::new();
+    for i in 0..n {
+        for j in i + 1..=n {
+            let nodes = &ops[i..j];
+            if nodes.iter().any(|&id| splittable(id)) && nodes.len() > 1 {
+                continue; // misc ops live in singleton segments only
+            }
+            if nodes.len() == 1 && splittable(nodes[0]) {
+                // a misc op runs as its own (unfusable) kernel
+                let (cg, inw, _outw) = extract_candidate(g, nodes);
+                let shapes: HashMap<String, VShape> = inw
+                    .iter()
+                    .map(|(l, s)| (l.clone(), port_shapes[s]))
+                    .collect();
+                let ir = lower(&cg);
+                let env = ShapeEnv { inputs: shapes };
+                let c = analyze(&ir, &ctx.sizes, &env);
+                interval.insert((i, j), (ctx.model.scalar(&c), 0, cg));
+                continue;
+            }
+            let (cg, inw, _outw) = extract_candidate(g, nodes);
+            let shapes: HashMap<String, VShape> = inw
+                .iter()
+                .map(|(l, s)| (l.clone(), port_shapes[s]))
+                .collect();
+            let (cost, snap_ix, fused) = best_fusion(&cg, &shapes, ctx);
+            interval.insert((i, j), (cost, snap_ix, fused));
+        }
+    }
+
+    // Shortest-path DP over the linearization.
+    let mut dp: Vec<f64> = vec![f64::INFINITY; n + 1];
+    let mut back: Vec<usize> = vec![0; n + 1];
+    dp[0] = 0.0;
+    for j in 1..=n {
+        for i in 0..j {
+            if let Some((c, _, _)) = interval.get(&(i, j)) {
+                if dp[i] + c < dp[j] {
+                    dp[j] = dp[i] + c;
+                    back[j] = i;
+                }
+            }
+        }
+        assert!(dp[j].is_finite(), "no legal segmentation ending at {j}");
+    }
+
+    // Reconstruct segments in order.
+    let mut cuts = vec![n];
+    let mut j = n;
+    while j > 0 {
+        j = back[j];
+        cuts.push(j);
+    }
+    cuts.reverse();
+
+    // program-output lookup: source port -> output name
+    let mut prog_out: HashMap<Port, String> = HashMap::new();
+    for oid in g.output_ids() {
+        let s = g.producer(port(oid, 0)).unwrap();
+        prog_out.insert(s, g.node(oid).label.clone());
+    }
+
+    let mut segments: Vec<Segment> = Vec::new();
+    let mut produced: HashMap<Port, (usize, String)> = HashMap::new(); // source port -> (segment, label)
+    for w in cuts.windows(2) {
+        let (i, j) = (w[0], w[1]);
+        let nodes = ops[i..j].to_vec();
+        let (cg, inw, outw) = extract_candidate(g, &nodes);
+        let (cost, snap_ix, fused) = interval[&(i, j)].clone();
+        let seg_ix = segments.len();
+        let inputs: Vec<(String, ValueRef)> = inw
+            .iter()
+            .map(|(label, src)| {
+                let vr = if let Some((seg, out_label)) = produced.get(src) {
+                    ValueRef::SegmentOutput {
+                        segment: *seg,
+                        label: out_label.clone(),
+                    }
+                } else {
+                    let name = g.node(src.node).label.clone();
+                    ValueRef::ProgramInput(name)
+                };
+                (label.clone(), vr)
+            })
+            .collect();
+        let outputs: Vec<(String, Option<String>)> = outw
+            .iter()
+            .map(|(label, src)| {
+                produced.insert(*src, (seg_ix, label.clone()));
+                (label.clone(), prog_out.get(src).cloned())
+            })
+            .collect();
+        let _ = cg;
+        segments.push(Segment {
+            node_ids: nodes,
+            graph: fused,
+            snapshot_index: snap_ix,
+            inputs,
+            outputs,
+            cost_scalar: cost,
+        });
+    }
+
+    SelectionPlan {
+        segments,
+        total_cost: dp[n],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::programs;
+    use crate::ir::dim::DimSizes;
+    use crate::lower::lower_array;
+
+    fn ctx_attention() -> SelectCtx {
+        let mut full = HashMap::new();
+        full.insert("Q".to_string(), (8, 16));
+        full.insert("KT".to_string(), (12, 16));
+        full.insert("VT".to_string(), (10, 12));
+        SelectCtx {
+            sizes: DimSizes::of(&[("M", 2), ("N", 3), ("D", 2), ("L", 2)]),
+            full_shapes: full,
+            model: CostModel::default(),
+        }
+    }
+
+    #[test]
+    fn attention_selects_single_fused_kernel() {
+        let g = lower_array(&programs::attention());
+        let plan = select(&g, &ctx_attention());
+        // fully fusing attention is strictly cheaper than any split
+        assert_eq!(plan.segments.len(), 1, "plan: {plan:?}");
+        // the selector may legitimately prefer the pre-extension snapshot
+        // (no work replication) over the mega-kernel — but either way the
+        // chosen kernel is far more fused than the 7-operator original
+        assert!(crate::rules::map_ids(&plan.segments[0].graph).len() <= 2);
+        // the single segment implements the program output O
+        assert!(plan.segments[0]
+            .outputs
+            .iter()
+            .any(|(_, o)| o.as_deref() == Some("O")));
+    }
+
+    #[test]
+    fn custom_op_forces_split() {
+        let g = lower_array(&programs::with_custom_op());
+        let mut full = HashMap::new();
+        full.insert("X".to_string(), (8, 8));
+        let ctx = SelectCtx {
+            sizes: DimSizes::of(&[("M", 2), ("K", 2)]),
+            full_shapes: full,
+            model: CostModel::default(),
+        };
+        let plan = select(&g, &ctx);
+        assert!(
+            plan.segments.len() >= 3,
+            "custom op must sit in its own segment: {:?}",
+            plan.segments.len()
+        );
+    }
+
+    #[test]
+    fn plan_wiring_is_consistent() {
+        let g = lower_array(&programs::with_custom_op());
+        let mut full = HashMap::new();
+        full.insert("X".to_string(), (8, 8));
+        let ctx = SelectCtx {
+            sizes: DimSizes::of(&[("M", 2), ("K", 2)]),
+            full_shapes: full,
+            model: CostModel::default(),
+        };
+        let plan = select(&g, &ctx);
+        for (si, seg) in plan.segments.iter().enumerate() {
+            for (_, vr) in &seg.inputs {
+                if let ValueRef::SegmentOutput { segment, .. } = vr {
+                    assert!(*segment < si, "segment {si} depends on later segment");
+                }
+            }
+        }
+        // exactly one segment output implements the program output Y
+        let count = plan
+            .segments
+            .iter()
+            .flat_map(|s| &s.outputs)
+            .filter(|(_, o)| o.as_deref() == Some("Y"))
+            .count();
+        assert_eq!(count, 1);
+    }
+}

@@ -1,0 +1,256 @@
+//! Numerical safety — the paper's Appendix.
+//!
+//! Exponentiated values are represented as significand–exponent pairs
+//! `x = s·eᵗ`: a software floating point on top of hardware floats. The
+//! Appendix defines three sharing granularities — per-element, **row-wise**
+//! (what Flash Attention calls *online softmax*), and block-shared — all
+//! equally safe, trading precision against cost. This module implements the
+//! pair arithmetic at each granularity plus a stabilized executor for the
+//! fused attention kernel, applied *after* fusion exactly as the paper
+//! prescribes ("a separate compiler pass, which comes after all the fusion
+//! passes").
+
+use crate::tensor::Mat;
+
+/// A block of significands sharing one exponent: `S · e^t`.
+#[derive(Clone, Debug)]
+pub struct BlockExp {
+    pub sig: Mat,
+    pub exp: f32,
+}
+
+impl BlockExp {
+    /// Represent a plain block: `(X, 0)`.
+    pub fn from_block(x: Mat) -> BlockExp {
+        BlockExp { sig: x, exp: 0.0 }
+    }
+
+    /// Represent `e^X` safely: `(e^(X−z), z)` with `z = max(X)`.
+    pub fn exp_of(x: &Mat) -> BlockExp {
+        let z = x.data.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        BlockExp {
+            sig: x.map(|v| (v - z).exp()),
+            exp: z,
+        }
+    }
+
+    /// `(S₁,t₁) + (S₂,t₂) = (S₁e^{t₁−z} + S₂e^{t₂−z}, z)`, `z = max(t₁,t₂)`.
+    pub fn add(&self, other: &BlockExp) -> BlockExp {
+        let z = self.exp.max(other.exp);
+        let a = self.sig.map(|v| v * (self.exp - z).exp());
+        let b = other.sig.map(|v| v * (other.exp - z).exp());
+        BlockExp {
+            sig: a.add(&b),
+            exp: z,
+        }
+    }
+
+    /// `(S₁,t₁) · (S₂,t₂) = (S₁·S₂, t₁+t₂)` (matmul of significands).
+    pub fn dot_bt(&self, other: &BlockExp) -> BlockExp {
+        BlockExp {
+            sig: self.sig.dot_bt(&other.sig),
+            exp: self.exp + other.exp,
+        }
+    }
+
+    /// Collapse to a plain block (may overflow if the value really is huge).
+    pub fn to_block(&self) -> Mat {
+        let e = self.exp.exp();
+        self.sig.map(|v| v * e)
+    }
+}
+
+/// Row-wise significand–exponent pairs: one exponent per row — the
+/// granularity Flash Attention uses (*online softmax*).
+#[derive(Clone, Debug)]
+pub struct RowExp {
+    pub sig: Mat,
+    pub exp: Vec<f32>,
+}
+
+impl RowExp {
+    pub fn zeros(rows: usize, cols: usize) -> RowExp {
+        RowExp {
+            sig: Mat::zeros(rows, cols),
+            exp: vec![f32::NEG_INFINITY; rows],
+        }
+    }
+
+    /// Represent `e^X` with per-row max subtraction.
+    pub fn exp_of(x: &Mat) -> RowExp {
+        let z = x.row_max();
+        let sig = Mat::from_fn(x.rows, x.cols, |i, j| (x.at(i, j) - z[i]).exp());
+        RowExp { sig, exp: z }
+    }
+
+    /// Row-wise pair addition (the online-softmax accumulator update).
+    pub fn add(&self, other: &RowExp) -> RowExp {
+        assert_eq!(self.sig.rows, other.sig.rows);
+        let mut exp = Vec::with_capacity(self.exp.len());
+        let mut sig = Mat::zeros(self.sig.rows, self.sig.cols);
+        for i in 0..self.sig.rows {
+            let z = self.exp[i].max(other.exp[i]);
+            let (a, b) = ((self.exp[i] - z).exp(), (other.exp[i] - z).exp());
+            for j in 0..self.sig.cols {
+                *sig.at_mut(i, j) = self.sig.at(i, j) * a + other.sig.at(i, j) * b;
+            }
+            exp.push(z);
+        }
+        RowExp { sig, exp }
+    }
+
+    /// Row sums as pairs `(vector of sums, per-row exponents)`.
+    pub fn row_sum(&self) -> (Vec<f32>, Vec<f32>) {
+        (self.sig.row_sum(), self.exp.clone())
+    }
+}
+
+/// Numerically safe fused attention: the Example-1 kernel with the
+/// Appendix's row-wise stabilization, streaming KV blocks like the derived
+/// single-pass program (and the Pallas kernel). `kt (s_kv, d)`,
+/// `vt (d_v, s_kv)`.
+pub fn safe_attention(q: &Mat, kt: &Mat, vt: &Mat, block_kv: usize) -> Mat {
+    let scale = (q.cols as f32).powf(-0.5);
+    let s_kv = kt.rows;
+    assert_eq!(s_kv % block_kv, 0);
+    let n_blocks = s_kv / block_kv;
+
+    let mut m_run = vec![f32::NEG_INFINITY; q.rows];
+    let mut l_run = vec![0.0f32; q.rows];
+    let mut acc = Mat::zeros(q.rows, vt.rows);
+    for b in 0..n_blocks {
+        let k = kt.slice(b * block_kv, 0, block_kv, kt.cols);
+        let v = vt.slice(0, b * block_kv, vt.rows, block_kv);
+        let s = q.dot_bt(&k).map(|x| x * scale); // (rows, bkv)
+        for i in 0..q.rows {
+            let row_max = s.row(i).iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let m_new = m_run[i].max(row_max);
+            let alpha = (m_run[i] - m_new).exp();
+            let p: Vec<f32> = s.row(i).iter().map(|x| (x - m_new).exp()).collect();
+            l_run[i] = l_run[i] * alpha + p.iter().sum::<f32>();
+            for j in 0..acc.cols {
+                let pv: f32 = p
+                    .iter()
+                    .enumerate()
+                    .map(|(t, pt)| pt * v.at(j, t))
+                    .sum();
+                *acc.at_mut(i, j) = acc.at(i, j) * alpha + pv;
+            }
+            m_run[i] = m_new;
+        }
+    }
+    let inv: Vec<f32> = l_run.iter().map(|l| 1.0 / l).collect();
+    acc.row_scale(&inv)
+}
+
+/// The *unsafe* body-of-paper softmax numerator/denominator (for contrast in
+/// tests): overflows for large logits.
+pub fn unsafe_softmax(x: &Mat) -> Mat {
+    let e = x.map(f32::exp);
+    let d: Vec<f32> = e.row_sum().iter().map(|s| 1.0 / s).collect();
+    e.row_scale(&d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::reference;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn block_pair_identities() {
+        let mut rng = Rng::new(1);
+        let x = rng.mat(3, 4);
+        let y = rng.mat(3, 4);
+        // (X,0) + (Y,0) == X+Y
+        let s = BlockExp::from_block(x.clone()).add(&BlockExp::from_block(y.clone()));
+        assert!(s.to_block().max_abs_diff(&x.add(&y)) < 1e-6);
+        // exp_of is exact for moderate values
+        let e = BlockExp::exp_of(&x);
+        assert!(e.to_block().max_abs_diff(&x.map(f32::exp)) < 1e-5);
+    }
+
+    #[test]
+    fn block_pair_mul_adds_exponents() {
+        let mut rng = Rng::new(2);
+        let a = rng.mat(3, 5);
+        let b = rng.mat(4, 5);
+        let pa = BlockExp {
+            sig: a.clone(),
+            exp: 3.0,
+        };
+        let pb = BlockExp {
+            sig: b.clone(),
+            exp: -1.0,
+        };
+        let prod = pa.dot_bt(&pb);
+        assert_eq!(prod.exp, 2.0);
+        assert!(prod.sig.max_abs_diff(&a.dot_bt(&b)) < 1e-5);
+    }
+
+    #[test]
+    fn row_pair_addition_is_safe_for_huge_exponents() {
+        // e^500 overflows f32; pairs don't.
+        let x = Mat::from_vec(1, 2, vec![500.0, 499.0]);
+        let y = Mat::from_vec(1, 2, vec![498.0, 500.0]);
+        let p = RowExp::exp_of(&x).add(&RowExp::exp_of(&y));
+        assert!(p.sig.data.iter().all(|v| v.is_finite()));
+        // ratio of the two entries: (1 + e^-2) / (e^-1 + 1)
+        let want = (1.0f32 + (-2.0f32).exp()) / ((-1.0f32).exp() + 1.0);
+        let got = p.sig.at(0, 0) / p.sig.at(0, 1);
+        assert!((got - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn safe_attention_matches_reference_small() {
+        let mut rng = Rng::new(3);
+        let (q, kt, vt) = (rng.mat(6, 8), rng.mat(8, 8), rng.mat(5, 8));
+        let safe = safe_attention(&q, &kt, &vt, 4);
+        let want = reference::attention_ref(&q, &kt, &vt, 8.0);
+        assert!(safe.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn safe_attention_survives_large_logits() {
+        // logits ~ 60*sqrt(8)*8 >> 88 (f32 exp overflow threshold)
+        let mut rng = Rng::new(4);
+        let q = rng.mat(4, 8).map(|v| v * 60.0);
+        let kt = rng.mat(8, 8).map(|v| v * 60.0);
+        let vt = rng.mat(3, 8);
+        // the unsafe formula overflows...
+        let scores = q.dot_bt(&kt).map(|v| v * 8.0f32.powf(-0.5));
+        let unsafe_out = unsafe_softmax(&scores).dot_bt(&vt);
+        assert!(
+            unsafe_out.data.iter().any(|v| !v.is_finite()),
+            "expected the unsafe path to overflow"
+        );
+        // ...the stabilized kernel does not
+        let safe = safe_attention(&q, &kt, &vt, 4);
+        assert!(safe.data.iter().all(|v| v.is_finite()));
+        // rows remain convex combinations of V's columns
+        let v = vt.transpose();
+        for j in 0..safe.cols {
+            let lo = (0..v.rows).map(|i| v.at(i, j)).fold(f32::MAX, f32::min);
+            let hi = (0..v.rows).map(|i| v.at(i, j)).fold(f32::MIN, f32::max);
+            for i in 0..safe.rows {
+                assert!(safe.at(i, j) >= lo - 1e-4 && safe.at(i, j) <= hi + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn block_vs_row_granularity_precision() {
+        // block-shared exponents are safe but coarser than row-wise: both
+        // finite, row-wise closer to the exact softmax
+        let mut rng = Rng::new(5);
+        let x = Mat::from_fn(4, 6, |i, _| 20.0 * i as f32 + rng.f32());
+        let row = RowExp::exp_of(&x);
+        let block = BlockExp::exp_of(&x);
+        assert!(row.sig.data.iter().all(|v| v.is_finite()));
+        assert!(block.sig.data.iter().all(|v| v.is_finite()));
+        // block-shared underflows the small rows entirely
+        let small_row_max_block = block.sig.row(0).iter().fold(0.0f32, |a, b| a.max(*b));
+        let small_row_max_row = row.sig.row(0).iter().fold(0.0f32, |a, b| a.max(*b));
+        assert!(small_row_max_row > small_row_max_block);
+    }
+}

@@ -1,0 +1,413 @@
+//! Minimal dense f32 tensor substrate.
+//!
+//! The offline build environment ships no linear-algebra crates, so the
+//! executor's numeric substrate is built here from scratch: a row-major
+//! matrix type, the Table-1 block operations, and the [`Val`] sum type the
+//! interpreter passes around (scalar / vector / block — the three local-
+//! memory item kinds of §2.1).
+
+use std::fmt;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec: size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// `self @ other.T` — the paper's `dot` block operator.
+    /// Constraint (Table 1): `self.cols == other.cols`.
+    pub fn dot_bt(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.cols,
+            "dot: inner dims differ ({}x{} vs {}x{})",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a = self.row(i);
+            for j in 0..other.rows {
+                let b = other.row(j);
+                let mut acc = 0.0f32;
+                for k in 0..self.cols {
+                    acc += a[k] * b[k];
+                }
+                out.data[i * other.rows + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Plain `self @ other` (used by reference paths and tests).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul: inner dims differ");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * other.cols + j] += a * other.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    /// Elementwise add (Table 1 `add`).
+    pub fn add(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a + b)
+    }
+
+    /// Hadamard product (Table 1 `mul`).
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+        assert_eq!(
+            (self.rows, self.cols),
+            (other.rows, other.cols),
+            "zip: shape mismatch"
+        );
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| f(*a, *b))
+                .collect(),
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| f(*x)).collect(),
+        }
+    }
+
+    /// `self + c[:,newaxis]` (Table 1 `row_shift`); `c.len() == rows`.
+    pub fn row_shift(&self, c: &[f32]) -> Mat {
+        assert_eq!(c.len(), self.rows, "row_shift: vector len != rows");
+        Mat::from_fn(self.rows, self.cols, |i, j| self.at(i, j) + c[i])
+    }
+
+    /// `self * c[:,newaxis]` (Table 1 `row_scale`); `c.len() == rows`.
+    pub fn row_scale(&self, c: &[f32]) -> Mat {
+        assert_eq!(c.len(), self.rows, "row_scale: vector len != rows");
+        Mat::from_fn(self.rows, self.cols, |i, j| self.at(i, j) * c[i])
+    }
+
+    /// Sum of each row (see DESIGN.md on the Table-1 `row_sum` erratum).
+    pub fn row_sum(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
+    }
+
+    /// Max of each row (numerical-safety pass).
+    pub fn row_max(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b)))
+            .collect()
+    }
+
+    /// Outer product of two vectors (Table 1 `outer`).
+    pub fn outer(a: &[f32], b: &[f32]) -> Mat {
+        Mat::from_fn(a.len(), b.len(), |i, j| a[i] * b[j])
+    }
+
+    /// Extract the sub-block `[r0..r0+h, c0..c0+w]`.
+    pub fn slice(&self, r0: usize, c0: usize, h: usize, w: usize) -> Mat {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "slice oob");
+        Mat::from_fn(h, w, |i, j| self.at(r0 + i, c0 + j))
+    }
+
+    /// Write `block` at offset `[r0, c0]`.
+    pub fn place(&mut self, r0: usize, c0: usize, block: &Mat) {
+        assert!(
+            r0 + block.rows <= self.rows && c0 + block.cols <= self.cols,
+            "place oob"
+        );
+        for i in 0..block.rows {
+            for j in 0..block.cols {
+                *self.at_mut(r0 + i, c0 + j) = block.at(i, j);
+            }
+        }
+    }
+
+    /// Maximum absolute difference (numeric comparisons in tests).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:9.4} ", self.at(i, j))?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// A local-memory value: the three §2.1 item kinds.
+#[derive(Clone, PartialEq, Debug)]
+pub enum Val {
+    Scalar(f32),
+    Vector(Vec<f32>),
+    Block(Mat),
+}
+
+impl Val {
+    pub fn bytes(&self) -> usize {
+        match self {
+            Val::Scalar(_) => 4,
+            Val::Vector(v) => v.len() * 4,
+            Val::Block(m) => m.bytes(),
+        }
+    }
+
+    pub fn as_block(&self) -> &Mat {
+        match self {
+            Val::Block(m) => m,
+            other => panic!("expected block, got {other:?}"),
+        }
+    }
+
+    pub fn as_vector(&self) -> &[f32] {
+        match self {
+            Val::Vector(v) => v,
+            other => panic!("expected vector, got {other:?}"),
+        }
+    }
+
+    pub fn as_scalar(&self) -> f32 {
+        match self {
+            Val::Scalar(s) => *s,
+            other => panic!("expected scalar, got {other:?}"),
+        }
+    }
+
+    /// Elementwise combine of same-shaped values.
+    pub fn zip(&self, other: &Val, f: impl Fn(f32, f32) -> f32) -> Val {
+        match (self, other) {
+            (Val::Scalar(a), Val::Scalar(b)) => Val::Scalar(f(*a, *b)),
+            (Val::Vector(a), Val::Vector(b)) => {
+                assert_eq!(a.len(), b.len(), "Val::zip: vector length mismatch");
+                Val::Vector(a.iter().zip(b).map(|(x, y)| f(*x, *y)).collect())
+            }
+            (Val::Block(a), Val::Block(b)) => Val::Block(a.zip(b, f)),
+            (a, b) => panic!("Val::zip: item kind mismatch: {a:?} vs {b:?}"),
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Val {
+        match self {
+            Val::Scalar(a) => Val::Scalar(f(*a)),
+            Val::Vector(a) => Val::Vector(a.iter().map(|x| f(*x)).collect()),
+            Val::Block(a) => Val::Block(a.map(f)),
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Val) -> f32 {
+        match (self, other) {
+            (Val::Scalar(a), Val::Scalar(b)) => (a - b).abs(),
+            (Val::Vector(a), Val::Vector(b)) => {
+                assert_eq!(a.len(), b.len());
+                a.iter()
+                    .zip(b)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0, f32::max)
+            }
+            (Val::Block(a), Val::Block(b)) => a.max_abs_diff(b),
+            (a, b) => panic!("max_abs_diff: item kind mismatch: {a:?} vs {b:?}"),
+        }
+    }
+}
+
+/// Simple deterministic PRNG (SplitMix64) for synthetic data — the offline
+/// environment has no `rand` crate.
+#[derive(Clone, Debug)]
+pub struct Rng(pub u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [-1, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32 * 2.0 - 1.0
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.f32() + 1.0) / 2.0 * (hi - lo)
+    }
+
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    pub fn mat(&mut self, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| self.f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_bt_matches_matmul_transpose() {
+        let mut rng = Rng::new(7);
+        let a = rng.mat(3, 5);
+        let b = rng.mat(4, 5);
+        let d = a.dot_bt(&b);
+        let m = a.matmul(&b.transpose());
+        assert!(d.max_abs_diff(&m) < 1e-5);
+        assert_eq!((d.rows, d.cols), (3, 4));
+    }
+
+    #[test]
+    fn row_ops() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.row_sum(), vec![6., 15.]);
+        assert_eq!(a.row_max(), vec![3., 6.]);
+        let s = a.row_shift(&[10., 20.]);
+        assert_eq!(s.at(0, 0), 11.);
+        assert_eq!(s.at(1, 2), 26.);
+        let c = a.row_scale(&[2., 3.]);
+        assert_eq!(c.at(0, 2), 6.);
+        assert_eq!(c.at(1, 0), 12.);
+    }
+
+    #[test]
+    fn outer_product() {
+        let o = Mat::outer(&[1., 2.], &[3., 4., 5.]);
+        assert_eq!((o.rows, o.cols), (2, 3));
+        assert_eq!(o.at(1, 2), 10.);
+    }
+
+    #[test]
+    fn slice_place_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = rng.mat(6, 8);
+        let s = a.slice(2, 4, 3, 2);
+        let mut b = Mat::zeros(6, 8);
+        b.place(2, 4, &s);
+        assert_eq!(b.at(3, 5), a.at(3, 5));
+        assert_eq!(b.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn val_zip_and_map() {
+        let a = Val::Vector(vec![1., 2.]);
+        let b = Val::Vector(vec![3., 4.]);
+        assert_eq!(a.zip(&b, |x, y| x + y), Val::Vector(vec![4., 6.]));
+        assert_eq!(a.map(|x| x * 2.), Val::Vector(vec![2., 4.]));
+    }
+
+    #[test]
+    fn rng_deterministic_and_in_range() {
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        for _ in 0..10 {
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+        for _ in 0..100 {
+            let x = r1.f32();
+            assert!((-1.0..1.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn hadamard_and_add() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        assert_eq!(a.hadamard(&b).data, vec![5., 12., 21., 32.]);
+        assert_eq!(a.add(&b).data, vec![6., 8., 10., 12.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(9);
+        let a = rng.mat(4, 7);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+}

@@ -1,0 +1,168 @@
+//! Statistical micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + N timed iterations; reports mean / median / p95 / stddev and
+//! prints aligned table rows so every `cargo bench` target regenerates one
+//! of the paper's tables or series.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Time `f` with automatic warmup. `min_iters`/`max_time` bound the run.
+pub fn bench<T>(min_iters: usize, max_time: Duration, mut f: impl FnMut() -> T) -> Stats {
+    // warmup: a few runs or 10% of budget
+    let warm_start = Instant::now();
+    let mut warmups = 0;
+    while warmups < 3 && warm_start.elapsed() < max_time / 10 {
+        std::hint::black_box(f());
+        warmups += 1;
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || (start.elapsed() < max_time && samples.len() < 10_000) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if start.elapsed() >= max_time && samples.len() >= min_iters {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    Stats {
+        iters: n,
+        mean_ns: mean,
+        median_ns: samples[n / 2],
+        p95_ns: samples[(n as f64 * 0.95) as usize % n.max(1)],
+        stddev_ns: var.sqrt(),
+        min_ns: samples[0],
+    }
+}
+
+/// Default bench: at least 10 iterations within ~1.5s.
+pub fn quick<T>(f: impl FnMut() -> T) -> Stats {
+    bench(10, Duration::from_millis(1500), f)
+}
+
+/// Table printing helpers shared by the bench binaries.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let joined: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("  {}", joined.join("  "));
+        };
+        line(&self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        println!("  {}", "-".repeat(total));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+/// Human formatting used across benches.
+pub fn fmt_stat(s: &Stats) -> String {
+    format!("{} ±{}", fmt_ns(s.median_ns), fmt_ns(s.stddev_ns))
+}
+
+pub fn fmt_bytes(b: u64) -> String {
+    if b < 1024 {
+        format!("{b}B")
+    } else if b < 1024 * 1024 {
+        format!("{:.1}KiB", b as f64 / 1024.0)
+    } else {
+        format!("{:.2}MiB", b as f64 / (1024.0 * 1024.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench(5, Duration::from_millis(50), || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.iters >= 5);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // just must not panic
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert!(fmt_ns(1500.0).contains("µs"));
+    }
+}

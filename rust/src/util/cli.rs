@@ -1,0 +1,80 @@
+//! Tiny CLI argument helper (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, and positional arguments, which is all
+//! the `blockbuster` binary needs.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: Vec<String>,
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse an iterator of arguments (excluding argv[0]).
+    /// `takes_value` lists option names that consume the next argument.
+    pub fn parse(argv: impl Iterator<Item = String>, takes_value: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if takes_value.contains(&name) {
+                    match it.next() {
+                        Some(v) => {
+                            out.options.insert(name.to_string(), v);
+                        }
+                        None => {
+                            out.flags.push(name.to_string());
+                        }
+                    }
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name} expects a number")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], takes: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), takes)
+    }
+
+    #[test]
+    fn positional_flags_options() {
+        let a = parse(
+            &["trace", "attention", "--verbose", "--seed", "7", "--m=4"],
+            &["seed"],
+        );
+        assert_eq!(a.positional, vec!["trace", "attention"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("seed"), Some("7"));
+        assert_eq!(a.opt("m"), Some("4"));
+        assert_eq!(a.opt_usize("seed", 0), 7);
+        assert_eq!(a.opt_usize("missing", 3), 3);
+    }
+}

@@ -1,0 +1,7 @@
+//! Small self-built substrates the offline environment lacks crates for:
+//! a minimal JSON parser/writer ([`json`]), a statistical micro-benchmark
+//! harness ([`bench`]), and a tiny CLI argument helper ([`cli`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;

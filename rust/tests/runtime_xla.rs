@@ -1,0 +1,128 @@
+//! PJRT runtime cross-checks: the Rust block-program executor, the naive
+//! JAX artifacts, and the fused Pallas-kernel artifacts must all agree.
+//!
+//! Requires `make artifacts` (skips with a notice if they're absent, so
+//! `cargo test` works on a fresh checkout).
+
+use blockbuster::coordinator::workloads;
+use blockbuster::exec::{reference, run, Workload};
+use blockbuster::lower::lower_array;
+use blockbuster::runtime::Runtime;
+use blockbuster::tensor::Mat;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime init"))
+}
+
+fn close(a: &Mat, b: &Mat, tol: f32, what: &str) {
+    let d = a.max_abs_diff(b);
+    assert!(d < tol, "{what}: max abs diff {d}");
+}
+
+#[test]
+fn attention_three_way_agreement() {
+    let Some(mut rt) = runtime() else { return };
+    let (p, cfg, params, inputs) = workloads::attention_demo(11);
+    // 1. Rust two-tier executor on the fused block program
+    let g = lower_array(&p);
+    let fused = blockbuster::fusion::fuse(g).snapshots.pop().unwrap();
+    let ours = run(
+        &fused,
+        &Workload {
+            sizes: cfg.sizes.clone(),
+            params: params.clone(),
+            inputs: inputs.clone(),
+            local_capacity: None,
+        },
+    );
+    // 2. XLA on the naive JAX model; 3. XLA on the fused Pallas kernel
+    let args = [&inputs["Q"], &inputs["KT"], &inputs["VT"]];
+    let naive = rt.execute("attention_naive", &args).unwrap();
+    let pallas = rt.execute("attention_fused", &args).unwrap();
+    // 4. Rust tensor-level reference
+    let want = reference::attention_ref(&inputs["Q"], &inputs["KT"], &inputs["VT"], 16.0);
+
+    close(&naive[0], &want, 1e-4, "xla naive vs rust reference");
+    close(&pallas[0], &want, 1e-4, "pallas fused vs rust reference");
+    close(&ours.outputs["O"], &want, 5e-4, "block executor vs reference");
+    close(&pallas[0], &naive[0], 1e-4, "pallas vs xla naive");
+}
+
+#[test]
+fn layernorm_matmul_three_way_agreement() {
+    let Some(mut rt) = runtime() else { return };
+    let (_, _, _, inputs) = workloads::layernorm_matmul_demo(12);
+    let args = [&inputs["X"], &inputs["YT"]];
+    let naive = rt.execute("layernorm_matmul_naive", &args).unwrap();
+    let pallas = rt.execute("layernorm_matmul_fused", &args).unwrap();
+    let want = reference::layernorm_matmul_ref(&inputs["X"], &inputs["YT"]);
+    close(&naive[0], &want, 5e-4, "xla naive vs reference");
+    close(&pallas[0], &want, 5e-4, "pallas fused vs reference");
+}
+
+#[test]
+fn rmsnorm_ffn_swiglu_three_way_agreement() {
+    let Some(mut rt) = runtime() else { return };
+    let (_, _, _, inputs) = workloads::rmsnorm_ffn_swiglu_demo(13);
+    let args = [&inputs["X"], &inputs["WT"], &inputs["VT"], &inputs["UT"]];
+    let naive = rt.execute("rmsnorm_ffn_swiglu_naive", &args).unwrap();
+    let pallas = rt.execute("rmsnorm_ffn_swiglu_fused", &args).unwrap();
+    let want =
+        reference::rmsnorm_ffn_swiglu_ref(&inputs["X"], &inputs["WT"], &inputs["VT"], &inputs["UT"]);
+    close(&naive[0], &want, 1e-3, "xla naive vs reference");
+    close(&pallas[0], &want, 1e-3, "pallas fused vs reference");
+}
+
+#[test]
+fn decoder_block_artifacts_agree() {
+    let Some(mut rt) = runtime() else { return };
+    let (_, _, params, inputs) = workloads::decoder_demo(14);
+    let args = [
+        &inputs["Q"],
+        &inputs["KT"],
+        &inputs["VT"],
+        &inputs["R"],
+        &inputs["WT"],
+        &inputs["VT2"],
+        &inputs["UT"],
+    ];
+    let naive = rt.execute("decoder_block_naive", &args).unwrap();
+    let fused = rt.execute("decoder_block_fused", &args).unwrap();
+    assert_eq!(naive.len(), 2);
+    close(&fused[1], &naive[1], 1e-4, "decoder H fused vs naive");
+    close(&fused[0], &naive[0], 1e-3, "decoder O fused vs naive");
+    let (want_o, _) = reference::decoder_block_ref(
+        &inputs["Q"],
+        &inputs["KT"],
+        &inputs["VT"],
+        &inputs["R"],
+        &inputs["WT"],
+        &inputs["VT2"],
+        &inputs["UT"],
+        params["DD"],
+    );
+    close(&naive[0], &want_o, 1e-3, "decoder O xla vs rust reference");
+}
+
+#[test]
+fn manifest_covers_all_expected_models() {
+    let Some(rt) = runtime() else { return };
+    for m in [
+        "matmul_relu_naive",
+        "matmul_relu_fused",
+        "attention_naive",
+        "attention_fused",
+        "layernorm_matmul_naive",
+        "layernorm_matmul_fused",
+        "rmsnorm_ffn_swiglu_naive",
+        "rmsnorm_ffn_swiglu_fused",
+        "decoder_block_naive",
+        "decoder_block_fused",
+    ] {
+        assert!(rt.manifest.models.contains_key(m), "missing artifact {m}");
+    }
+}
