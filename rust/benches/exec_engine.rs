@@ -1,0 +1,97 @@
+//! Bench: the compiled-execution tentpole — naive tree-walking interpreter
+//! vs the flat-tape engine (`ExecBackend::Compiled`) on every example
+//! program's final fused kernel, at shapes scaled up from the demo sizes.
+//!
+//! Both backends are timed on the same pre-blocked `ExecConfig`; the tape
+//! is compiled once outside the timed loop (the amortization autotune
+//! trials get: one program, many executions). Emits `BENCH_exec.json`
+//! next to the textual table so the interp→engine speedup trajectory is
+//! tracked from this PR onward. Set `BB_BENCH_SMOKE=1` for a seconds-long
+//! CI smoke run at demo sizes.
+
+use blockbuster::coordinator::workloads;
+use blockbuster::exec::to_blocks;
+use blockbuster::fusion::fuse;
+use blockbuster::loopir::compile::compile;
+use blockbuster::loopir::interp::{exec, ExecConfig};
+use blockbuster::loopir::lower::lower;
+use blockbuster::lower::lower_array;
+use blockbuster::tensor::Rng;
+use blockbuster::util::bench::{bench, fmt_stat, write_json_report, Table};
+use blockbuster::util::json::Json;
+use std::time::Duration;
+
+fn main() {
+    let smoke = std::env::var("BB_BENCH_SMOKE").is_ok();
+    // Scale both the block-count grid and the full shapes: block sizes stay
+    // at the demo 8×8, the grid gets `scale`× more iterations per dim.
+    let scale = if smoke { 1 } else { 4 };
+    let (min_iters, budget) = if smoke {
+        (2, Duration::from_millis(150))
+    } else {
+        (5, Duration::from_millis(1200))
+    };
+
+    let mut t = Table::new(
+        &format!("Executor wall-clock, interpreter vs compiled tape (grid scale {scale}x)"),
+        &["workload", "interp", "compiled", "speedup"],
+    );
+    let mut rows = Vec::new();
+
+    for name in workloads::NAMES {
+        let (p, demo_cfg, params, _) = workloads::by_name(name, 42).unwrap();
+        let mut sizes = demo_cfg.sizes.clone();
+        for v in sizes.0.values_mut() {
+            *v *= scale;
+        }
+
+        let g = lower_array(&p);
+        let fused = fuse(g).snapshots.pop().unwrap();
+        let ir = lower(&fused);
+
+        // pre-block the scaled inputs once; both backends execute the same
+        // config, so setup cost is outside every timed region
+        let mut cfg = ExecConfig::new(sizes);
+        cfg.params = params;
+        let mut rng = Rng::new(7);
+        let mut input_names: Vec<&String> = demo_cfg.full_shapes.keys().collect();
+        input_names.sort(); // deterministic generation order
+        for n in input_names {
+            let (r, c) = demo_cfg.full_shapes[n];
+            let m = rng.mat(r * scale, c * scale);
+            let decl = &ir.bufs[ir.buf_by_name(n).expect("input buffer")];
+            let rb = cfg.sizes.get(&decl.dims[0]);
+            let cb = cfg.sizes.get(&decl.dims[1]);
+            cfg.inputs.insert(n.clone(), to_blocks(&m, rb, cb));
+        }
+
+        let prog = compile(&ir, &cfg);
+        let si = bench(min_iters, budget, || exec(&ir, &cfg));
+        let sc = bench(min_iters, budget, || {
+            blockbuster::exec::engine::exec_compiled(&prog, &cfg)
+        });
+        let speedup = si.median_ns / sc.median_ns;
+        t.row(vec![
+            name.to_string(),
+            fmt_stat(&si),
+            fmt_stat(&sc),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("program", Json::Str(name.to_string())),
+            ("interp_ms", Json::Num(si.median_ns / 1e6)),
+            ("compiled_ms", Json::Num(sc.median_ns / 1e6)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    t.print();
+    let report = Json::obj(vec![
+        ("bench", Json::Str("exec_backend_speedup".into())),
+        ("grid_scale", Json::Num(scale as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("programs", Json::Arr(rows)),
+    ]);
+    write_json_report("BENCH_exec.json", &report).expect("writing BENCH_exec.json");
+    println!("\nwrote BENCH_exec.json");
+}

@@ -15,11 +15,15 @@
 //! many times.
 
 use crate::cost::{analyze, Cost, CostModel, ShapeEnv};
+use crate::exec::{run_lowered_with, ExecBackend, Workload};
 use crate::ir::dim::{Dim, DimSizes};
 use crate::ir::graph::Graph;
+use crate::loopir::interp::MemSim;
 use crate::loopir::lower::lower;
 use crate::loopir::LoopIr;
-use std::collections::HashMap;
+use crate::tensor::Mat;
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
 
 /// One scored configuration.
 #[derive(Clone, Debug)]
@@ -109,8 +113,18 @@ pub fn autotune(
     local_capacity: u64,
     model: &CostModel,
 ) -> TuneResult {
-    let ir = lower(g);
-    let domains = dim_domains(&ir, full);
+    autotune_ir(&lower(g), full, local_capacity, model)
+}
+
+/// Same, over an already-lowered program (lets callers that also execute
+/// the IR — `autotune_measured` — lower once).
+pub fn autotune_ir(
+    ir: &LoopIr,
+    full: &HashMap<String, (usize, usize)>,
+    local_capacity: u64,
+    model: &CostModel,
+) -> TuneResult {
+    let domains = dim_domains(ir, full);
     let mut points = Vec::new();
     let mut idx = vec![0usize; domains.len()];
     loop {
@@ -118,8 +132,8 @@ pub fn autotune(
         for (k, (d, dom)) in domains.iter().enumerate() {
             sizes.set(d.clone(), dom[idx[k]]);
         }
-        let env = ShapeEnv::from_full_shapes(&ir, &sizes, full);
-        let cost = analyze(&ir, &sizes, &env);
+        let env = ShapeEnv::from_full_shapes(ir, &sizes, full);
+        let cost = analyze(ir, &sizes, &env);
         let feasible = cost.peak_local_bytes <= local_capacity;
         points.push(TunePoint {
             scalar: model.scalar(&cost),
@@ -147,6 +161,61 @@ pub fn autotune(
             k += 1;
         }
     }
+}
+
+/// A statically-ranked candidate validated by real execution.
+#[derive(Clone, Debug)]
+pub struct MeasuredPoint {
+    pub sizes: DimSizes,
+    pub wall_ns: u128,
+    pub mem: MemSim,
+    pub static_scalar: f64,
+}
+
+/// Execute the top-`trials` statically-ranked feasible configurations on
+/// real data and re-rank them by measured wall-clock (best first).
+///
+/// Autotune trials are the hottest caller of the executor, so this is
+/// where the [`ExecBackend`] switch matters most: with
+/// [`ExecBackend::Compiled`] each candidate is flattened once to an
+/// instruction tape and run with multi-threaded grid loops, instead of
+/// tree-walking the `Stmt` nest per trial.
+#[allow(clippy::too_many_arguments)]
+pub fn autotune_measured(
+    g: &Graph,
+    full: &HashMap<String, (usize, usize)>,
+    local_capacity: u64,
+    model: &CostModel,
+    params: &BTreeMap<String, f32>,
+    inputs: &HashMap<String, Mat>,
+    backend: ExecBackend,
+    trials: usize,
+) -> Vec<MeasuredPoint> {
+    let ir = lower(g);
+    let static_rank = autotune_ir(&ir, full, local_capacity, model);
+    // one workload shared across trials (inputs can be large); only the
+    // block-count assignment changes per candidate. No capacity assertion:
+    // static feasibility is an approximation, not a hard runtime bound.
+    let mut w = Workload {
+        sizes: DimSizes::new(),
+        params: params.clone(),
+        inputs: inputs.clone(),
+        local_capacity: None,
+    };
+    let mut out = Vec::new();
+    for p in static_rank.points.iter().filter(|p| p.feasible).take(trials) {
+        w.sizes = p.sizes.clone();
+        let t0 = Instant::now();
+        let run = run_lowered_with(&ir, &w, backend);
+        out.push(MeasuredPoint {
+            sizes: p.sizes.clone(),
+            wall_ns: t0.elapsed().as_nanos(),
+            mem: run.mem,
+            static_scalar: p.scalar,
+        });
+    }
+    out.sort_by_key(|m| m.wall_ns);
+    out
 }
 
 #[cfg(test)]
@@ -209,6 +278,53 @@ mod tests {
         if let Some(fi) = first_infeasible {
             assert!(tight.points[..fi].iter().all(|p| p.feasible));
         }
+    }
+
+    /// Measured trials: same candidates, identical simulated counters on
+    /// both backends (the tape engine is bit-compatible), non-empty result.
+    #[test]
+    fn measured_trials_agree_across_backends() {
+        let g = lower_array(&programs::attention());
+        let fused = fuse(g).snapshots.pop().unwrap();
+        let mut full = HashMap::new();
+        full.insert("Q".to_string(), (32, 16));
+        full.insert("KT".to_string(), (32, 16));
+        full.insert("VT".to_string(), (16, 32));
+        let mut rng = crate::tensor::Rng::new(5);
+        let mut inputs = HashMap::new();
+        for (n, (r, c)) in &full {
+            inputs.insert(n.clone(), rng.mat(*r, *c));
+        }
+        let mut params = BTreeMap::new();
+        params.insert("DD".to_string(), 16.0);
+        let model = CostModel::default();
+        let run = |backend| {
+            autotune_measured(
+                &fused, &full, 1 << 20, &model, &params, &inputs, backend, 3,
+            )
+        };
+        let mi = run(ExecBackend::Interp);
+        let mc = run(ExecBackend::Compiled);
+        assert_eq!(mi.len(), 3);
+        assert_eq!(mc.len(), 3);
+        let digest = |ms: &[MeasuredPoint]| {
+            let mut v: Vec<String> = ms
+                .iter()
+                .map(|m| {
+                    format!(
+                        "{:?} l={} s={} f={} k={}",
+                        m.sizes.0,
+                        m.mem.loaded_bytes,
+                        m.mem.stored_bytes,
+                        m.mem.flops,
+                        m.mem.kernel_launches
+                    )
+                })
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(digest(&mi), digest(&mc));
     }
 
     /// The RMS+FFN epilogue: at N = K = 1 "all the redundant work

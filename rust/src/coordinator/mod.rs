@@ -11,10 +11,10 @@
 pub mod workloads;
 
 use crate::cost::CostModel;
-use crate::exec::{from_blocks, to_blocks};
+use crate::exec::{exec_ir, from_blocks, to_blocks, ExecBackend};
 use crate::ir::dim::DimSizes;
 use crate::ir::graph::Graph;
-use crate::loopir::interp::{exec, BufVal, ExecConfig, MemSim};
+use crate::loopir::interp::{BufVal, ExecConfig, MemSim};
 use crate::loopir::lower::lower;
 use crate::lower::lower_array;
 use crate::select::{select, SelectCtx, SelectionPlan, ValueRef};
@@ -56,13 +56,24 @@ pub struct PlanRun {
     pub per_segment: Vec<MemSim>,
 }
 
-/// Execute a selected plan segment by segment, passing intermediates
-/// through (simulated) global memory.
+/// Execute a selected plan segment by segment on the interpreter backend.
 pub fn execute_plan(
     plan: &SelectionPlan,
     sizes: &DimSizes,
     params: &BTreeMap<String, f32>,
     inputs: &HashMap<String, Mat>,
+) -> PlanRun {
+    execute_plan_with(plan, sizes, params, inputs, ExecBackend::Interp)
+}
+
+/// Execute a selected plan segment by segment, passing intermediates
+/// through (simulated) global memory, on the chosen [`ExecBackend`].
+pub fn execute_plan_with(
+    plan: &SelectionPlan,
+    sizes: &DimSizes,
+    params: &BTreeMap<String, f32>,
+    inputs: &HashMap<String, Mat>,
+    backend: ExecBackend,
 ) -> PlanRun {
     let mut inter: HashMap<(usize, String), BufVal> = HashMap::new();
     let mut outputs = HashMap::new();
@@ -97,7 +108,7 @@ pub fn execute_plan(
             };
             cfg.inputs.insert(decl.name.clone(), bv);
         }
-        let res = exec(&ir, &cfg);
+        let res = exec_ir(&ir, &cfg, backend);
         for (label, prog_out) in &seg.outputs {
             let bv = res.outputs.get(label).unwrap_or_else(|| {
                 panic!("segment {si}: executor produced no output {label}")
@@ -184,6 +195,34 @@ mod tests {
         );
         assert!(run.mem.total_traffic() < naive.mem.total_traffic());
         assert!(run.mem.kernel_launches < naive.mem.kernel_launches);
+    }
+
+    /// Both executor backends must agree bit-for-bit segment by segment.
+    #[test]
+    fn plan_backends_agree_bitwise() {
+        let (p, cfg, params, inputs) = workloads::attention_demo(42);
+        let compiled = compile(&p, cfg.clone());
+        let a = execute_plan_with(
+            &compiled.plan,
+            &cfg.sizes,
+            &params,
+            &inputs,
+            ExecBackend::Interp,
+        );
+        let b = execute_plan_with(
+            &compiled.plan,
+            &cfg.sizes,
+            &params,
+            &inputs,
+            ExecBackend::Compiled,
+        );
+        for (name, m) in &a.outputs {
+            assert_eq!(m, &b.outputs[name], "output {name} differs across backends");
+        }
+        assert_eq!(a.mem.loaded_bytes, b.mem.loaded_bytes);
+        assert_eq!(a.mem.stored_bytes, b.mem.stored_bytes);
+        assert_eq!(a.mem.kernel_launches, b.mem.kernel_launches);
+        assert_eq!(a.mem.flops, b.mem.flops);
     }
 
     #[test]

@@ -1,0 +1,477 @@
+//! Tape-executing engine for compiled block programs.
+//!
+//! Executes the flat instruction tape produced by [`crate::loopir::compile`]:
+//! loop control is two ip-jumps per iteration over an integer register
+//! file, buffer accesses are precomputed stride sums, and every block
+//! operator is pre-resolved — no `HashMap` lookups, no per-op allocation
+//! churn, no expression recompilation in the hot loop.
+//!
+//! Top-level `forall` grid loops that passed the compile-time parallel
+//! analysis run their iterations across `std::thread::scope` workers
+//! (no external crates). Each worker owns a private register file, var
+//! file, and [`MemSim`]; it reads shared buffers directly (the analysis
+//! guarantees no buffer is both read and written inside a parallel body)
+//! and defers its stores, which the main thread applies in chunk order
+//! after the join. Counters are merged by summation, so simulated traffic,
+//! flop, and launch counts are **bit-identical** to the sequential
+//! interpreter; `peak_local_bytes` is merged by `max` (it is a scope
+//! approximation in the interpreter already).
+
+use crate::loopir::compile::{accum_val, CompiledProgram, Instr, SlotSel};
+use crate::loopir::interp::{BufVal, ExecConfig, ExecResult, MemSim};
+use crate::loopir::BufId;
+use crate::tensor::Val;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::thread;
+
+// Global memory is the interpreter's own `BufVal` (Arc payloads): engine
+// setup/teardown moves pointers, never block data, and buffers can be
+// shared with worker threads directly.
+
+/// Where stores go: directly into the buffers (serial execution) or into
+/// a per-worker deferred list applied after the parallel join.
+enum Sink<'a> {
+    Direct(&'a mut Vec<BufVal>),
+    Deferred {
+        shared: &'a [BufVal],
+        pending: Vec<(BufId, usize, Arc<Val>)>,
+    },
+}
+
+impl Sink<'_> {
+    #[inline]
+    fn load(&self, buf: BufId, flat: usize) -> Arc<Val> {
+        let bv = match self {
+            Sink::Direct(b) => &b[buf],
+            Sink::Deferred { shared, .. } => &shared[buf],
+        };
+        bv.data[flat]
+            .clone()
+            .unwrap_or_else(|| panic!("engine: buffer {buf} element {flat} never stored"))
+    }
+
+    #[inline]
+    fn store(&mut self, buf: BufId, flat: usize, v: Arc<Val>) {
+        match self {
+            Sink::Direct(b) => b[buf].data[flat] = Some(v),
+            Sink::Deferred { pending, .. } => pending.push((buf, flat, v)),
+        }
+    }
+}
+
+/// Execution state: register file, var file, counters. One per thread.
+struct Machine {
+    regs: Vec<usize>,
+    vars: Vec<Option<Arc<Val>>>,
+    stack: Vec<f32>,
+    mem: MemSim,
+    live: u64,
+    cap: Option<u64>,
+}
+
+impl Machine {
+    fn new(n_regs: usize, n_vars: usize, cap: Option<u64>) -> Machine {
+        Machine {
+            regs: vec![0; n_regs],
+            vars: vec![None; n_vars],
+            stack: Vec::with_capacity(16),
+            mem: MemSim::default(),
+            live: 0,
+            cap,
+        }
+    }
+
+    // set_var/clear_var mirror Interp::set_var/clear_var exactly (the
+    // threads=1 peak-parity test pins them); change both together.
+    fn set_var(&mut self, var: usize, v: Arc<Val>) {
+        if let Some(old) = &self.vars[var] {
+            self.live = self.live.saturating_sub(old.bytes() as u64);
+        }
+        self.live += v.bytes() as u64;
+        self.vars[var] = Some(v);
+        if self.live > self.mem.peak_local_bytes {
+            self.mem.peak_local_bytes = self.live;
+        }
+        if let Some(cap) = self.cap {
+            assert!(
+                self.live <= cap,
+                "local memory capacity exceeded: {} > {cap}",
+                self.live
+            );
+        }
+    }
+
+    fn clear_var(&mut self, var: usize) {
+        if let Some(old) = self.vars[var].take() {
+            self.live = self.live.saturating_sub(old.bytes() as u64);
+        }
+    }
+
+    /// Execute the instruction range `[range.0, range.1)`.
+    fn run_range(&mut self, prog: &CompiledProgram, range: (usize, usize), sink: &mut Sink) {
+        let mut ip = range.0;
+        while ip < range.1 {
+            match &prog.instrs[ip] {
+                Instr::LoopBegin(li) => {
+                    let m = &prog.loops[*li];
+                    if m.start >= m.trip {
+                        ip = m.end_ip + 1;
+                        continue;
+                    }
+                    self.regs[m.reg] = m.start;
+                    for &c in &m.clears {
+                        self.clear_var(c);
+                    }
+                    ip += 1;
+                }
+                Instr::LoopEnd(li) => {
+                    let m = &prog.loops[*li];
+                    let next = self.regs[m.reg] + 1;
+                    if next < m.trip {
+                        self.regs[m.reg] = next;
+                        for &c in &m.clears {
+                            self.clear_var(c);
+                        }
+                        ip = m.body_ip;
+                    } else {
+                        ip += 1;
+                    }
+                }
+                Instr::Load { var, buf, acc } => {
+                    let flat = prog.accesses[*acc].flat(&self.regs);
+                    let v = sink.load(*buf, flat);
+                    self.mem.n_loads += 1;
+                    self.mem.loaded_bytes += v.bytes() as u64;
+                    self.set_var(*var, v);
+                    ip += 1;
+                }
+                Instr::Store { var, buf, acc } => {
+                    let flat = prog.accesses[*acc].flat(&self.regs);
+                    let v = self.vars[*var]
+                        .clone()
+                        .unwrap_or_else(|| panic!("var t{var} read before assignment"));
+                    self.mem.n_stores += 1;
+                    self.mem.stored_bytes += v.bytes() as u64;
+                    sink.store(*buf, flat, v);
+                    ip += 1;
+                }
+                Instr::Compute { var, site } => {
+                    let cs = &prog.computes[*site];
+                    let vars = &self.vars;
+                    let args: Vec<&Val> = cs
+                        .args
+                        .iter()
+                        .map(|a| {
+                            vars[*a]
+                                .as_deref()
+                                .unwrap_or_else(|| panic!("var t{a} read before assignment"))
+                        })
+                        .collect();
+                    let (v, fl) = cs.kind.apply(&args, &mut self.stack);
+                    drop(args);
+                    self.mem.flops += fl;
+                    self.set_var(*var, Arc::new(v));
+                    ip += 1;
+                }
+                Instr::Accum { var, op, src } => {
+                    let s = self.vars[*src]
+                        .clone()
+                        .unwrap_or_else(|| panic!("var t{src} read before assignment"));
+                    let (v, fl) = accum_val(self.vars[*var].as_deref(), *op, s);
+                    self.mem.flops += fl;
+                    self.set_var(*var, v);
+                    ip += 1;
+                }
+                Instr::Misc(mi) => {
+                    let site = &prog.miscs[*mi];
+                    let mut arg_vals: Vec<Vec<Val>> = Vec::with_capacity(site.args.len());
+                    for (buf, sels) in &site.args {
+                        let flats = enumerate_slots(sels, &self.regs, &prog.bufs[*buf].strides);
+                        let mut elems = Vec::with_capacity(flats.len());
+                        for f in flats {
+                            let v = sink.load(*buf, f);
+                            self.mem.n_loads += 1;
+                            self.mem.loaded_bytes += v.bytes() as u64;
+                            elems.push((*v).clone());
+                        }
+                        arg_vals.push(elems);
+                    }
+                    let results = (site.f)(&arg_vals);
+                    let (obuf, osels) = &site.out;
+                    let flats = enumerate_slots(osels, &self.regs, &prog.bufs[*obuf].strides);
+                    assert_eq!(
+                        results.len(),
+                        flats.len(),
+                        "misc op {} returned {} values for {} slots",
+                        site.tag,
+                        results.len(),
+                        flats.len()
+                    );
+                    for (f, v) in flats.into_iter().zip(results) {
+                        self.mem.n_stores += 1;
+                        self.mem.stored_bytes += v.bytes() as u64;
+                        sink.store(*obuf, f, Arc::new(v));
+                    }
+                    ip += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Row-major enumeration of the flat indices selected by a partial index
+/// (same order as the interpreter's `scatter_slots`).
+fn enumerate_slots(sels: &[SlotSel], regs: &[usize], strides: &[usize]) -> Vec<usize> {
+    let mut out = vec![0usize];
+    for (i, s) in sels.iter().enumerate() {
+        match s {
+            SlotSel::Reg(r) => {
+                let add = regs[*r] * strides[i];
+                for f in &mut out {
+                    *f += add;
+                }
+            }
+            SlotSel::Fixed(c) => {
+                let add = c * strides[i];
+                for f in &mut out {
+                    *f += add;
+                }
+            }
+            SlotSel::All(n) => {
+                let mut next = Vec::with_capacity(out.len() * n);
+                for base in &out {
+                    for c in 0..*n {
+                        next.push(base + c * strides[i]);
+                    }
+                }
+                out = next;
+            }
+        }
+    }
+    out
+}
+
+/// Execute a compiled program under `cfg`. Semantics (outputs and the
+/// traffic/flop/launch counters) are bit-identical to
+/// [`crate::loopir::interp::exec`] on the same program and config.
+pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
+    // Materialize global memory. Inputs share their Arc payloads with the
+    // caller's BufVals — setup is pointer moves, not block copies.
+    let mut bufs: Vec<BufVal> = prog
+        .bufs
+        .iter()
+        .map(|meta| {
+            if meta.is_input {
+                let bv = cfg
+                    .inputs
+                    .get(&meta.name)
+                    .unwrap_or_else(|| panic!("missing input buffer {}", meta.name));
+                assert_eq!(
+                    bv.dims, meta.dims,
+                    "input {} has dims {:?}, program expects {:?}",
+                    meta.name, bv.dims, meta.dims
+                );
+                bv.clone()
+            } else {
+                BufVal::new(meta.dims.clone())
+            }
+        })
+        .collect();
+
+    let workers = cfg
+        .threads
+        .unwrap_or_else(|| {
+            thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .clamp(1, 64);
+
+    let mut mach = Machine::new(prog.n_regs, prog.n_vars, cfg.local_capacity);
+
+    for top in &prog.tops {
+        if top.kernel {
+            mach.mem.kernel_launches += 1;
+        }
+        let par = if workers > 1 { top.par_loop } else { None };
+        let li = match par {
+            Some(li) => li,
+            None => {
+                let mut sink = Sink::Direct(&mut bufs);
+                mach.run_range(prog, top.ips, &mut sink);
+                continue;
+            }
+        };
+        let meta = &prog.loops[li];
+        let iters = meta.trip.saturating_sub(meta.start);
+        if iters < 2 {
+            let mut sink = Sink::Direct(&mut bufs);
+            mach.run_range(prog, top.ips, &mut sink);
+            continue;
+        }
+        // contiguous, non-empty chunks of the grid range (ceil division)
+        let nw = workers.min(iters);
+        let chunk = iters / nw + usize::from(iters % nw != 0);
+        let ranges: Vec<(usize, usize)> = (0..nw)
+            .map(|w| {
+                let lo = meta.start + w * chunk;
+                let hi = (lo + chunk).min(meta.trip);
+                (lo, hi)
+            })
+            .filter(|(lo, hi)| lo < hi)
+            .collect();
+        let base_live = mach.live;
+        let cap = cfg.local_capacity;
+        let results: Vec<(Machine, Vec<(BufId, usize, Arc<Val>)>)> = thread::scope(|s| {
+            let shared: &Vec<BufVal> = &bufs;
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(lo, hi)| {
+                    s.spawn(move || {
+                        let mut wm = Machine::new(prog.n_regs, prog.n_vars, cap);
+                        // capacity baseline: the enclosing scope's live
+                        // locals still occupy local memory
+                        wm.live = base_live;
+                        let mut sink = Sink::Deferred {
+                            shared,
+                            pending: Vec::new(),
+                        };
+                        let m = &prog.loops[li];
+                        for x in lo..hi {
+                            for &c in &m.clears {
+                                wm.clear_var(c);
+                            }
+                            wm.regs[m.reg] = x;
+                            wm.run_range(prog, (m.body_ip, m.end_ip), &mut sink);
+                        }
+                        let pending = match sink {
+                            Sink::Deferred { pending, .. } => pending,
+                            Sink::Direct(_) => unreachable!(),
+                        };
+                        (wm, pending)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    // re-raise with the original payload so capacity and
+                    // read-before-assignment diagnostics survive threading
+                    Err(p) => std::panic::resume_unwind(p),
+                })
+                .collect()
+        });
+        let last = results.len() - 1;
+        for (wi, (wm, pending)) in results.into_iter().enumerate() {
+            for (b, f, v) in pending {
+                bufs[b].data[f] = Some(v);
+            }
+            mach.mem.loaded_bytes += wm.mem.loaded_bytes;
+            mach.mem.stored_bytes += wm.mem.stored_bytes;
+            mach.mem.n_loads += wm.mem.n_loads;
+            mach.mem.n_stores += wm.mem.n_stores;
+            mach.mem.flops += wm.mem.flops;
+            mach.mem.kernel_launches += wm.mem.kernel_launches;
+            mach.mem.peak_local_bytes = mach.mem.peak_local_bytes.max(wm.mem.peak_local_bytes);
+            if wi == last {
+                // sequential semantics: after the loop, its assigned vars
+                // hold the final iteration's values
+                for &v in &prog.loops[li].clears {
+                    match &wm.vars[v] {
+                        Some(a) => mach.set_var(v, a.clone()),
+                        None => mach.clear_var(v),
+                    }
+                }
+            }
+        }
+    }
+
+    let mut outputs = HashMap::new();
+    for (i, meta) in prog.bufs.iter().enumerate() {
+        if meta.is_output {
+            outputs.insert(meta.name.clone(), bufs[i].clone());
+        }
+    }
+    ExecResult {
+        outputs,
+        mem: mach.mem,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::dim::DimSizes;
+    use crate::ir::expr::Expr;
+    use crate::ir::graph::{map_over, ArgMode, Graph};
+    use crate::ir::types::Ty;
+    use crate::loopir::compile::compile;
+    use crate::loopir::interp::exec;
+    use crate::loopir::lower::lower;
+    use crate::tensor::Rng;
+
+    fn block_list(rng: &mut Rng, n: usize, r: usize, c: usize) -> BufVal {
+        let mut bv = BufVal::new(vec![n]);
+        for i in 0..n {
+            bv.set(&[i], Val::Block(rng.mat(r, c)));
+        }
+        bv
+    }
+
+    fn map_graph() -> crate::ir::graph::Graph {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp().neg(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o[0]);
+        g
+    }
+
+    /// Same program, same config: engine output and counters must equal
+    /// the interpreter's exactly — sequentially and with forced threads.
+    #[test]
+    fn engine_matches_interpreter_bitwise() {
+        let ir = lower(&map_graph());
+        let mut rng = Rng::new(9);
+        let input = block_list(&mut rng, 8, 4, 4);
+        for threads in [Some(1), Some(4)] {
+            let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 8)]));
+            cfg.inputs.insert("A".into(), input.clone());
+            cfg.threads = threads;
+            let want = exec(&ir, &cfg);
+            let prog = compile(&ir, &cfg);
+            assert_eq!(prog.parallel_grid_loops(), 1);
+            let got = exec_compiled(&prog, &cfg);
+            for i in 0..8 {
+                assert_eq!(
+                    want.outputs["B"].get(&[i]),
+                    got.outputs["B"].get(&[i]),
+                    "threads={threads:?} element {i}"
+                );
+            }
+            assert_eq!(want.mem.loaded_bytes, got.mem.loaded_bytes);
+            assert_eq!(want.mem.stored_bytes, got.mem.stored_bytes);
+            assert_eq!(want.mem.n_loads, got.mem.n_loads);
+            assert_eq!(want.mem.n_stores, got.mem.n_stores);
+            assert_eq!(want.mem.flops, got.mem.flops);
+            assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity exceeded")]
+    fn engine_enforces_local_capacity() {
+        let ir = lower(&map_graph());
+        let mut rng = Rng::new(3);
+        let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 2)]));
+        cfg.inputs.insert("A".into(), block_list(&mut rng, 2, 8, 8));
+        cfg.local_capacity = Some(100); // one 8x8 block = 256 bytes > 100
+        cfg.threads = Some(1);
+        let prog = compile(&ir, &cfg);
+        let _ = exec_compiled(&prog, &cfg);
+    }
+}

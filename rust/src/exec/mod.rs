@@ -1,20 +1,74 @@
 //! High-level execution of block programs on full matrices.
 //!
 //! Bridges the gap between logical matrices and the blocked representation:
-//! splits each program input into its `[rows, cols]` grid of blocks, runs
-//! the Loop-IR interpreter under the two-tier memory simulator, and
+//! splits each program input into its `[rows, cols]` grid of blocks,
+//! executes the lowered Loop IR under the two-tier memory simulator, and
 //! reassembles block-matrix outputs. Also hosts the tensor-level reference
 //! implementations used to cross-check every example program.
+//!
+//! Two interchangeable backends execute the Loop IR ([`ExecBackend`]):
+//!
+//! * [`ExecBackend::Interp`] — the tree-walking interpreter
+//!   (`loopir::interp`), the semantic ground truth;
+//! * [`ExecBackend::Compiled`] — `loopir::compile` flattens the program to
+//!   an instruction tape that [`engine`] executes, fanning independent
+//!   grid-loop iterations across threads. Outputs and traffic counters are
+//!   bit-identical to the interpreter; wall-clock is several times faster,
+//!   which is what makes autotune trials and large benches tractable.
 
+pub mod engine;
 pub mod reference;
 
 use crate::ir::dim::DimSizes;
 use crate::ir::graph::Graph;
-use crate::loopir::interp::{exec, BufVal, ExecConfig, MemSim};
+use crate::loopir::interp::{exec, BufVal, ExecConfig, ExecResult, MemSim};
 use crate::loopir::lower::lower;
 use crate::loopir::LoopIr;
 use crate::tensor::{Mat, Val};
 use std::collections::{BTreeMap, HashMap};
+
+/// Which executor runs a lowered block program.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum ExecBackend {
+    /// Tree-walking interpreter — the semantic ground truth.
+    #[default]
+    Interp,
+    /// Flat-tape engine with multi-threaded grid loops.
+    Compiled,
+}
+
+impl ExecBackend {
+    pub fn from_name(s: &str) -> Option<ExecBackend> {
+        match s {
+            "interp" | "interpreter" => Some(ExecBackend::Interp),
+            "compiled" | "engine" | "tape" => Some(ExecBackend::Compiled),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecBackend::Interp => "interp",
+            ExecBackend::Compiled => "compiled",
+        }
+    }
+}
+
+/// Execute a lowered program under `cfg` on the chosen backend.
+///
+/// `Compiled` flattens the tape on each call; callers that execute one
+/// program many times under the *same* config (benches, measurement
+/// loops) can amortize by calling `loopir::compile::compile` once and
+/// `engine::exec_compiled` per run.
+pub fn exec_ir(ir: &LoopIr, cfg: &ExecConfig, backend: ExecBackend) -> ExecResult {
+    match backend {
+        ExecBackend::Interp => exec(ir, cfg),
+        ExecBackend::Compiled => {
+            let prog = crate::loopir::compile::compile(ir, cfg);
+            engine::exec_compiled(&prog, cfg)
+        }
+    }
+}
 
 /// Split a matrix into an `rb × cb` grid of blocks (sizes must divide).
 pub fn to_blocks(m: &Mat, rb: usize, cb: usize) -> BufVal {
@@ -85,13 +139,23 @@ pub struct RunResult {
     pub mem: MemSim,
 }
 
-/// Lower and run a block program on full-matrix inputs.
+/// Lower and run a block program on full-matrix inputs (interpreter).
 pub fn run(g: &Graph, w: &Workload) -> RunResult {
     run_lowered(&lower(g), w)
 }
 
+/// Lower and run on the chosen backend.
+pub fn run_with(g: &Graph, w: &Workload, backend: ExecBackend) -> RunResult {
+    run_lowered_with(&lower(g), w, backend)
+}
+
 /// Run an already-lowered program (lets benches amortize lowering).
 pub fn run_lowered(ir: &LoopIr, w: &Workload) -> RunResult {
+    run_lowered_with(ir, w, ExecBackend::Interp)
+}
+
+/// Run an already-lowered program on the chosen backend.
+pub fn run_lowered_with(ir: &LoopIr, w: &Workload, backend: ExecBackend) -> RunResult {
     let mut cfg = ExecConfig::new(w.sizes.clone());
     cfg.params = w.params.clone();
     cfg.local_capacity = w.local_capacity;
@@ -113,7 +177,7 @@ pub fn run_lowered(ir: &LoopIr, w: &Workload) -> RunResult {
         let cb = w.sizes.get(&decl.dims[1]);
         cfg.inputs.insert(decl.name.clone(), to_blocks(m, rb, cb));
     }
-    let res = exec(ir, &cfg);
+    let res = exec_ir(ir, &cfg, backend);
     let outputs = res
         .outputs
         .iter()

@@ -304,6 +304,9 @@ impl Expr {
 pub struct CompiledExpr {
     tape: Vec<TapeOp>,
     pub max_stack: usize,
+    /// Input arity of the source expression (kept so callers that only
+    /// hold the compiled tape — the tape-based engine — can size args).
+    pub arity: usize,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -349,7 +352,11 @@ impl Expr {
             }
             max = max.max(depth);
         }
-        CompiledExpr { tape, max_stack: max }
+        CompiledExpr {
+            tape,
+            max_stack: max,
+            arity: self.arity(),
+        }
     }
 }
 

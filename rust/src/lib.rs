@@ -16,8 +16,16 @@
 //!   contract the paper defers to its companion paper.
 //! * [`loopir`] — the loop-nest IR used to print the paper's code listings,
 //!   to statically analyse memory traffic, and to execute block programs.
-//! * [`exec`] — a two-tier-memory execution substrate (interpreter + memory
-//!   simulator) that runs block programs on concrete data.
+//!   `loopir::compile` flattens the loop nest into a linear instruction
+//!   tape: trip counts and buffer strides pre-resolved, elementwise
+//!   expressions pre-compiled, top-level grid loops analyzed for parallel
+//!   safety.
+//! * [`exec`] — a two-tier-memory execution substrate that runs block
+//!   programs on concrete data behind an `ExecBackend` switch:
+//!   `Interp` tree-walks the loop nest (the semantic ground truth),
+//!   `Compiled` executes the flat tape with multi-threaded grid loops —
+//!   bit-identical outputs and traffic counters, several times faster
+//!   (autotune trials and benches are the hot callers).
 //! * [`cost`] + [`autotune`] — the traffic/compute cost model and the block
 //!   shape autotuner the paper's epilogues rely on.
 //! * [`stabilize`] — the Appendix's numerical-safety pass

@@ -1,0 +1,814 @@
+//! Loop-IR → flat instruction tape (the compiled execution path).
+//!
+//! The tree-walking interpreter ([`super::interp`]) resolves every loop
+//! index through a `HashMap<Dim, usize>` and recompiles every elementwise
+//! expression each time it executes — fine as a semantic ground truth,
+//! far too slow to demonstrate fusion wins at realistic sizes. This pass
+//! removes all of that ahead of time:
+//!
+//! * loop dims are resolved to integer **trip counts** and one integer
+//!   register per loop site (no name lookups in the hot loop);
+//! * buffer accesses become precomputed **stride terms**
+//!   (`flat = Σ reg·stride`), so a load is an array index, not a
+//!   `Vec<usize>` build plus a rank-checked walk;
+//! * elementwise expressions and miscellaneous-op callbacks are resolved
+//!   **once** into [`ComputeKind`] (a [`CompiledExpr`] tape / fn pointer);
+//! * top-level `forall` grid loops are statically analyzed for
+//!   parallel safety ([`TopRange::par_loop`]) so the engine
+//!   ([`crate::exec::engine`]) can fan their iterations out across
+//!   `std::thread::scope` workers while staying bit-identical to the
+//!   sequential interpreter.
+//!
+//! Compilation needs the concrete [`ExecConfig`] (sizes, params, misc-op
+//! registries); the product is a [`CompiledProgram`] that can be executed
+//! many times — autotune trials and benches amortize it.
+
+use super::interp::ExecConfig;
+use super::{BufId, COp, Index, LoopIr, LoopKind, Stmt, VarId};
+use crate::ir::dim::Dim;
+use crate::ir::expr::CompiledExpr;
+use crate::ir::func::{FuncOp, ReduceOp};
+use crate::tensor::{Mat, Val};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// Fold `src` into an accumulator (`None` = neutral-element init),
+/// returning the new value and its flop charge. Like
+/// [`ComputeKind::apply`], this is the single shared implementation of
+/// `Accum` numerics and accounting for both backends — keeping them
+/// bit-identical by construction.
+pub fn accum_val(acc: Option<&Val>, op: ReduceOp, src: Arc<Val>) -> (Arc<Val>, u64) {
+    match (acc, op) {
+        (None, _) => (src, 0),
+        (Some(a), ReduceOp::Add) => {
+            let fl = (src.bytes() / 4) as u64;
+            (Arc::new(a.zip(&src, |x, y| x + y)), fl)
+        }
+        (Some(a), ReduceOp::Max) => (Arc::new(a.zip(&src, f32::max)), 0),
+    }
+}
+
+/// Index of a loop register in the machine's register file.
+pub type Reg = usize;
+
+/// A precomputed buffer access: `flat = Σ regs[r] · stride`.
+/// (`Index::Zero` slots contribute nothing and are dropped at compile time.)
+#[derive(Clone, Debug, Default)]
+pub struct Access {
+    pub terms: Vec<(Reg, usize)>,
+}
+
+impl Access {
+    #[inline]
+    pub fn flat(&self, regs: &[usize]) -> usize {
+        let mut f = 0;
+        for &(r, s) in &self.terms {
+            f += regs[r] * s;
+        }
+        f
+    }
+}
+
+/// Everything the machine needs to drive one loop site.
+#[derive(Clone, Debug)]
+pub struct LoopMeta {
+    pub reg: Reg,
+    /// First iteration (1 for Rule 7's `skip_first`).
+    pub start: usize,
+    /// Trip count (the dim's block count).
+    pub trip: usize,
+    /// Instruction index of the first body instruction.
+    pub body_ip: usize,
+    /// Instruction index of this loop's `LoopEnd`.
+    pub end_ip: usize,
+    /// Vars reset at the top of every iteration (from [`Stmt::Loop`]).
+    pub clears: Vec<VarId>,
+}
+
+/// One slot of a (possibly partial) miscellaneous-call buffer index.
+#[derive(Clone, Debug)]
+pub enum SlotSel {
+    /// Bound by an enclosing loop register.
+    Reg(Reg),
+    /// A fixed coordinate (`Index::Zero`).
+    Fixed(usize),
+    /// Ranges over the whole dim; payload is the extent.
+    All(usize),
+}
+
+/// A whole-array miscellaneous operator call, callback pre-resolved.
+#[derive(Clone)]
+pub struct MiscSite {
+    pub tag: String,
+    pub f: fn(&[Vec<Val>]) -> Vec<Val>,
+    pub args: Vec<(BufId, Vec<SlotSel>)>,
+    pub out: (BufId, Vec<SlotSel>),
+}
+
+// manual impl: Debug is not derivable over higher-ranked fn pointers on
+// older toolchains
+impl std::fmt::Debug for MiscSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MiscSite")
+            .field("tag", &self.tag)
+            .field("args", &self.args)
+            .field("out", &self.out)
+            .finish()
+    }
+}
+
+/// A compute site: argument vars plus the pre-resolved operator kind.
+#[derive(Clone, Debug)]
+pub struct ComputeSite {
+    pub args: Vec<VarId>,
+    pub kind: ComputeKind,
+}
+
+/// A block operator with all name/param resolution done ahead of time.
+/// Shared by both backends: the interpreter builds one per execution (its
+/// naive baseline behavior), the compiled engine builds one per site.
+#[derive(Clone)]
+pub enum ComputeKind {
+    Add,
+    Mul,
+    RowShift,
+    RowScale,
+    RowSum,
+    Dot,
+    Outer,
+    Ew(CompiledExpr),
+    Misc(fn(&[Val]) -> Val),
+}
+
+impl std::fmt::Debug for ComputeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ComputeKind::Add => f.write_str("Add"),
+            ComputeKind::Mul => f.write_str("Mul"),
+            ComputeKind::RowShift => f.write_str("RowShift"),
+            ComputeKind::RowScale => f.write_str("RowScale"),
+            ComputeKind::RowSum => f.write_str("RowSum"),
+            ComputeKind::Dot => f.write_str("Dot"),
+            ComputeKind::Outer => f.write_str("Outer"),
+            ComputeKind::Ew(ce) => f.debug_tuple("Ew").field(ce).finish(),
+            ComputeKind::Misc(_) => f.write_str("Misc(<fn>)"),
+        }
+    }
+}
+
+impl ComputeKind {
+    /// Resolve an op against the config's params and misc registry.
+    pub fn from_op(op: &COp, cfg: &ExecConfig) -> ComputeKind {
+        match op {
+            COp::Func(FuncOp::Add) => ComputeKind::Add,
+            COp::Func(FuncOp::Mul) => ComputeKind::Mul,
+            COp::Func(FuncOp::RowShift) => ComputeKind::RowShift,
+            COp::Func(FuncOp::RowScale) => ComputeKind::RowScale,
+            COp::Func(FuncOp::RowSum) => ComputeKind::RowSum,
+            COp::Func(FuncOp::Dot) => ComputeKind::Dot,
+            COp::Func(FuncOp::Outer) => ComputeKind::Outer,
+            COp::Func(FuncOp::Ew(e)) => ComputeKind::Ew(e.compile(&cfg.params)),
+            COp::Misc(tag) => ComputeKind::Misc(
+                *cfg.misc_ops
+                    .get(tag)
+                    .unwrap_or_else(|| panic!("no misc-op callback registered for {tag}")),
+            ),
+        }
+    }
+
+    /// Apply to local values; returns the result and its flop charge.
+    /// This is the single source of truth for block-op numerics *and*
+    /// flop accounting — both backends route through it, which is what
+    /// makes their outputs and `MemSim.flops` bit-identical.
+    pub fn apply(&self, args: &[&Val], stack: &mut Vec<f32>) -> (Val, u64) {
+        match self {
+            ComputeKind::Add => {
+                let v = args[0].zip(args[1], |a, b| a + b);
+                let fl = (v.bytes() / 4) as u64;
+                (v, fl)
+            }
+            ComputeKind::Mul => {
+                let v = args[0].zip(args[1], |a, b| a * b);
+                let fl = (v.bytes() / 4) as u64;
+                (v, fl)
+            }
+            ComputeKind::RowShift => {
+                let m = args[0].as_block();
+                let c = args[1].as_vector();
+                (Val::Block(m.row_shift(c)), (m.rows * m.cols) as u64)
+            }
+            ComputeKind::RowScale => {
+                let m = args[0].as_block();
+                let c = args[1].as_vector();
+                (Val::Block(m.row_scale(c)), (m.rows * m.cols) as u64)
+            }
+            ComputeKind::RowSum => {
+                let m = args[0].as_block();
+                (Val::Vector(m.row_sum()), (m.rows * m.cols) as u64)
+            }
+            ComputeKind::Dot => {
+                let a = args[0].as_block();
+                let b = args[1].as_block();
+                let v = a.dot_bt(b);
+                let fl = 2 * (a.rows * a.cols * b.rows) as u64;
+                (Val::Block(v), fl)
+            }
+            ComputeKind::Outer => {
+                let a = args[0].as_vector();
+                let b = args[1].as_vector();
+                (Val::Block(Mat::outer(a, b)), (a.len() * b.len()) as u64)
+            }
+            ComputeKind::Ew(ce) => {
+                let n = ce.arity;
+                assert_eq!(args.len(), n, "ew arity mismatch");
+                assert!(n <= 8, "elementwise arity > 8 unsupported");
+                let mut xs = [0.0f32; 8];
+                let v = match args[0] {
+                    Val::Scalar(_) => {
+                        for (k, a) in args.iter().enumerate() {
+                            xs[k] = a.as_scalar();
+                        }
+                        Val::Scalar(ce.eval_with(&xs[..n], stack))
+                    }
+                    Val::Vector(v0) => {
+                        let mut out = Vec::with_capacity(v0.len());
+                        for i in 0..v0.len() {
+                            for (k, a) in args.iter().enumerate() {
+                                xs[k] = a.as_vector()[i];
+                            }
+                            out.push(ce.eval_with(&xs[..n], stack));
+                        }
+                        Val::Vector(out)
+                    }
+                    Val::Block(m0) => {
+                        let mut out = Mat::zeros(m0.rows, m0.cols);
+                        let len = m0.rows * m0.cols;
+                        if n == 1 {
+                            let a0 = &args[0].as_block().data;
+                            for i in 0..len {
+                                xs[0] = a0[i];
+                                out.data[i] = ce.eval_with(&xs[..1], stack);
+                            }
+                        } else {
+                            for i in 0..len {
+                                for (k, a) in args.iter().enumerate() {
+                                    xs[k] = a.as_block().data[i];
+                                }
+                                out.data[i] = ce.eval_with(&xs[..n], stack);
+                            }
+                        }
+                        Val::Block(out)
+                    }
+                };
+                let fl = (v.bytes() / 4) as u64;
+                (v, fl)
+            }
+            ComputeKind::Misc(f) => {
+                let owned: Vec<Val> = args.iter().map(|v| (*v).clone()).collect();
+                (f(&owned), 0)
+            }
+        }
+    }
+}
+
+/// One flat-tape instruction. Control flow is two ip-jumps per loop
+/// iteration; everything else indexes side tables by small integers.
+#[derive(Clone, Debug)]
+pub enum Instr {
+    LoopBegin(usize),
+    LoopEnd(usize),
+    Load { var: VarId, buf: BufId, acc: usize },
+    Store { var: VarId, buf: BufId, acc: usize },
+    Compute { var: VarId, site: usize },
+    Accum { var: VarId, op: ReduceOp, src: VarId },
+    Misc(usize),
+}
+
+/// A buffer with dims resolved to concrete extents and row-major strides.
+#[derive(Clone, Debug)]
+pub struct BufMeta {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub strides: Vec<usize>,
+    pub is_input: bool,
+    pub is_output: bool,
+}
+
+/// One top-level statement of the program: its instruction range, whether
+/// it counts as a kernel launch, and — for `forall` grid loops that passed
+/// the parallel-safety analysis — the loop id the engine may fan out.
+#[derive(Clone, Debug)]
+pub struct TopRange {
+    pub ips: (usize, usize),
+    pub kernel: bool,
+    pub par_loop: Option<usize>,
+}
+
+/// A fully lowered, ready-to-execute program.
+#[derive(Clone, Debug)]
+pub struct CompiledProgram {
+    pub instrs: Vec<Instr>,
+    pub loops: Vec<LoopMeta>,
+    pub accesses: Vec<Access>,
+    pub computes: Vec<ComputeSite>,
+    pub miscs: Vec<MiscSite>,
+    pub bufs: Vec<BufMeta>,
+    pub tops: Vec<TopRange>,
+    pub n_vars: usize,
+    pub n_regs: usize,
+}
+
+impl CompiledProgram {
+    /// Grid loops the engine is allowed to run multi-threaded.
+    pub fn parallel_grid_loops(&self) -> usize {
+        self.tops.iter().filter(|t| t.par_loop.is_some()).count()
+    }
+}
+
+/// Flatten `ir` against the concrete `cfg` (sizes, params, misc registry).
+pub fn compile(ir: &LoopIr, cfg: &ExecConfig) -> CompiledProgram {
+    let bufs: Vec<BufMeta> = ir
+        .bufs
+        .iter()
+        .map(|d| {
+            let dims: Vec<usize> = d.dims.iter().map(|dm| cfg.sizes.get(dm)).collect();
+            let mut strides = vec![1usize; dims.len()];
+            for i in (0..dims.len().saturating_sub(1)).rev() {
+                strides[i] = strides[i + 1] * dims[i + 1];
+            }
+            BufMeta {
+                name: d.name.clone(),
+                dims,
+                strides,
+                is_input: d.is_input,
+                is_output: d.is_output,
+            }
+        })
+        .collect();
+
+    let mut c = Compiler {
+        cfg,
+        bufs,
+        instrs: Vec::new(),
+        loops: Vec::new(),
+        accesses: Vec::new(),
+        computes: Vec::new(),
+        miscs: Vec::new(),
+        scope: Vec::new(),
+    };
+
+    let mut tops = Vec::new();
+    for s in &ir.body {
+        let start = c.instrs.len();
+        c.stmt(s);
+        let end = c.instrs.len();
+        let kernel = matches!(s, Stmt::Loop { .. });
+        let par_loop = match s {
+            Stmt::Loop {
+                kind: LoopKind::ForAll,
+                dim,
+                body,
+                ..
+            } if loop_is_parallel(dim, body) => {
+                // the first instruction of this range is the LoopBegin
+                match &c.instrs[start] {
+                    Instr::LoopBegin(li) => Some(*li),
+                    _ => None,
+                }
+            }
+            _ => None,
+        };
+        tops.push(TopRange {
+            ips: (start, end),
+            kernel,
+            par_loop,
+        });
+    }
+
+    let n_regs = c.loops.len();
+    CompiledProgram {
+        instrs: c.instrs,
+        loops: c.loops,
+        accesses: c.accesses,
+        computes: c.computes,
+        miscs: c.miscs,
+        bufs: c.bufs,
+        tops,
+        n_vars: ir.n_vars,
+        n_regs,
+    }
+}
+
+struct Compiler<'a> {
+    cfg: &'a ExecConfig,
+    bufs: Vec<BufMeta>,
+    instrs: Vec<Instr>,
+    loops: Vec<LoopMeta>,
+    accesses: Vec<Access>,
+    computes: Vec<ComputeSite>,
+    miscs: Vec<MiscSite>,
+    /// Enclosing loops, innermost last: (dim, register).
+    scope: Vec<(Dim, Reg)>,
+}
+
+impl<'a> Compiler<'a> {
+    fn lookup(&self, d: &Dim) -> Reg {
+        self.scope
+            .iter()
+            .rev()
+            .find(|(sd, _)| sd == d)
+            .map(|(_, r)| *r)
+            .unwrap_or_else(|| panic!("compile: no enclosing loop over {d}"))
+    }
+
+    fn access(&mut self, buf: BufId, idx: &[Index]) -> usize {
+        assert_eq!(
+            idx.len(),
+            self.bufs[buf].dims.len(),
+            "access rank mismatch on buffer {}",
+            self.bufs[buf].name
+        );
+        let mut terms = Vec::new();
+        for (i, ix) in idx.iter().enumerate() {
+            match ix {
+                Index::Iter(d) => {
+                    let reg = self.lookup(d);
+                    terms.push((reg, self.bufs[buf].strides[i]));
+                }
+                Index::Zero => {}
+            }
+        }
+        self.accesses.push(Access { terms });
+        self.accesses.len() - 1
+    }
+
+    fn slot_sels(&self, buf: BufId, idx: &[Option<Index>]) -> Vec<SlotSel> {
+        idx.iter()
+            .enumerate()
+            .map(|(i, s)| match s {
+                Some(Index::Iter(d)) => SlotSel::Reg(self.lookup(d)),
+                Some(Index::Zero) => SlotSel::Fixed(0),
+                None => SlotSel::All(self.bufs[buf].dims[i]),
+            })
+            .collect()
+    }
+
+    fn stmt(&mut self, s: &Stmt) {
+        match s {
+            Stmt::Loop {
+                dim,
+                skip_first,
+                body,
+                clears,
+                ..
+            } => {
+                let loop_id = self.loops.len();
+                self.loops.push(LoopMeta {
+                    reg: loop_id,
+                    start: usize::from(*skip_first),
+                    trip: self.cfg.sizes.get(dim),
+                    body_ip: 0,
+                    end_ip: 0,
+                    clears: clears.clone(),
+                });
+                let begin_ip = self.instrs.len();
+                self.instrs.push(Instr::LoopBegin(loop_id));
+                self.scope.push((dim.clone(), loop_id));
+                for st in body {
+                    self.stmt(st);
+                }
+                self.scope.pop();
+                let end_ip = self.instrs.len();
+                self.instrs.push(Instr::LoopEnd(loop_id));
+                self.loops[loop_id].body_ip = begin_ip + 1;
+                self.loops[loop_id].end_ip = end_ip;
+            }
+            Stmt::Load { var, buf, idx } => {
+                let acc = self.access(*buf, idx);
+                self.instrs.push(Instr::Load {
+                    var: *var,
+                    buf: *buf,
+                    acc,
+                });
+            }
+            Stmt::Store { var, buf, idx } => {
+                let acc = self.access(*buf, idx);
+                self.instrs.push(Instr::Store {
+                    var: *var,
+                    buf: *buf,
+                    acc,
+                });
+            }
+            Stmt::Compute { var, op, args } => {
+                let kind = ComputeKind::from_op(op, self.cfg);
+                self.computes.push(ComputeSite {
+                    args: args.clone(),
+                    kind,
+                });
+                self.instrs.push(Instr::Compute {
+                    var: *var,
+                    site: self.computes.len() - 1,
+                });
+            }
+            Stmt::Accum { var, op, src } => {
+                self.instrs.push(Instr::Accum {
+                    var: *var,
+                    op: *op,
+                    src: *src,
+                });
+            }
+            Stmt::MiscCall { tag, args, out } => {
+                let f = *self
+                    .cfg
+                    .misc_list_ops
+                    .get(tag)
+                    .unwrap_or_else(|| panic!("no whole-array misc-op registered for {tag}"));
+                let site = MiscSite {
+                    tag: tag.clone(),
+                    f,
+                    args: args
+                        .iter()
+                        .map(|(b, idx)| (*b, self.slot_sels(*b, idx)))
+                        .collect(),
+                    out: (out.0, self.slot_sels(out.0, &out.1)),
+                };
+                self.miscs.push(site);
+                self.instrs.push(Instr::Misc(self.miscs.len() - 1));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel-safety analysis for top-level grid loops
+// ---------------------------------------------------------------------------
+
+/// A top-level `forall dim` loop can run its iterations concurrently iff
+/// sequential execution could not observe any cross-iteration state:
+///
+/// * no direct-child accumulator (those carry across iterations; every
+///   other var assigned in the body is in the loop's clear set, so each
+///   iteration starts from scratch);
+/// * no reads of vars defined *before* the loop (iterations are
+///   self-contained over local memory);
+/// * every store site indexes its buffer by `dim` (iterations write
+///   disjoint slots) and no buffer is both read and written inside the
+///   body (no iteration can observe another's stores);
+/// * no inner loop shadows `dim` (which would defeat the previous check).
+fn loop_is_parallel(dim: &Dim, body: &[Stmt]) -> bool {
+    if body.iter().any(|s| matches!(s, Stmt::Accum { .. })) {
+        return false;
+    }
+    let mut assigned = HashSet::new();
+    let mut free = HashSet::new();
+    scan_reads(body, &mut assigned, &mut free);
+    if !free.is_empty() {
+        return false;
+    }
+    let mut loaded = HashSet::new();
+    let mut stored = HashSet::new();
+    if !stores_partitioned(body, dim, &mut loaded, &mut stored) {
+        return false;
+    }
+    loaded.is_disjoint(&stored)
+}
+
+/// Sequential scan collecting vars read before any assignment (`free`).
+fn scan_reads(stmts: &[Stmt], assigned: &mut HashSet<VarId>, free: &mut HashSet<VarId>) {
+    for s in stmts {
+        match s {
+            Stmt::Load { var, .. } => {
+                assigned.insert(*var);
+            }
+            Stmt::Store { var, .. } => {
+                if !assigned.contains(var) {
+                    free.insert(*var);
+                }
+            }
+            Stmt::Compute { var, args, .. } => {
+                for a in args {
+                    if !assigned.contains(a) {
+                        free.insert(*a);
+                    }
+                }
+                assigned.insert(*var);
+            }
+            Stmt::Accum { var, src, .. } => {
+                if !assigned.contains(src) {
+                    free.insert(*src);
+                }
+                // reading `var` itself is fine: unassigned means
+                // neutral-element initialization
+                assigned.insert(*var);
+            }
+            Stmt::Loop { body, .. } => scan_reads(body, assigned, free),
+            Stmt::MiscCall { .. } => {}
+        }
+    }
+}
+
+/// Check every store is partitioned by `dim`; collect read/written bufs.
+fn stores_partitioned(
+    stmts: &[Stmt],
+    dim: &Dim,
+    loaded: &mut HashSet<BufId>,
+    stored: &mut HashSet<BufId>,
+) -> bool {
+    for s in stmts {
+        match s {
+            Stmt::Load { buf, .. } => {
+                loaded.insert(*buf);
+            }
+            Stmt::Store { buf, idx, .. } => {
+                stored.insert(*buf);
+                if !idx
+                    .iter()
+                    .any(|i| matches!(i, Index::Iter(d) if d == dim))
+                {
+                    return false;
+                }
+            }
+            Stmt::MiscCall { args, out, .. } => {
+                for (b, _) in args {
+                    loaded.insert(*b);
+                }
+                stored.insert(out.0);
+                if !out
+                    .1
+                    .iter()
+                    .any(|i| matches!(i, Some(Index::Iter(d)) if d == dim))
+                {
+                    return false;
+                }
+            }
+            Stmt::Loop { dim: d2, body, .. } => {
+                if d2 == dim {
+                    return false;
+                }
+                if !stores_partitioned(body, dim, loaded, stored) {
+                    return false;
+                }
+            }
+            Stmt::Accum { .. } | Stmt::Compute { .. } => {}
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::dim::DimSizes;
+    use crate::ir::types::Item;
+    use crate::loopir::BufDecl;
+
+    fn grid_ir(kind: LoopKind) -> LoopIr {
+        // forall/for m { t0 = load A[m]; t1 = t0+t0; store t1 -> B[m] }
+        let m = Dim::new("M");
+        let mut ir = LoopIr {
+            bufs: vec![
+                BufDecl {
+                    name: "A".into(),
+                    dims: vec![m.clone()],
+                    item: Item::Block,
+                    is_input: true,
+                    is_output: false,
+                },
+                BufDecl {
+                    name: "B".into(),
+                    dims: vec![m.clone()],
+                    item: Item::Block,
+                    is_input: false,
+                    is_output: true,
+                },
+            ],
+            body: vec![Stmt::Loop {
+                kind,
+                dim: m.clone(),
+                skip_first: false,
+                clears: vec![],
+                body: vec![
+                    Stmt::Load {
+                        var: 0,
+                        buf: 0,
+                        idx: vec![Index::Iter(m.clone())],
+                    },
+                    Stmt::Compute {
+                        var: 1,
+                        op: COp::Func(FuncOp::Add),
+                        args: vec![0, 0],
+                    },
+                    Stmt::Store {
+                        var: 1,
+                        buf: 1,
+                        idx: vec![Index::Iter(m)],
+                    },
+                ],
+            }],
+            n_vars: 2,
+            params: vec![],
+        };
+        super::super::analyze_clears(&mut ir);
+        ir
+    }
+
+    #[test]
+    fn tape_shape_and_parallel_flag() {
+        let ir = grid_ir(LoopKind::ForAll);
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 3)]));
+        let p = compile(&ir, &cfg);
+        assert_eq!(p.loops.len(), 1);
+        assert_eq!(p.loops[0].trip, 3);
+        assert_eq!(p.n_regs, 1);
+        assert_eq!(p.tops.len(), 1);
+        assert!(p.tops[0].kernel);
+        assert_eq!(p.tops[0].par_loop, Some(0), "grid loop must be parallel");
+        // LoopBegin, Load, Compute, Store, LoopEnd
+        assert_eq!(p.instrs.len(), 5);
+        assert_eq!(p.parallel_grid_loops(), 1);
+    }
+
+    #[test]
+    fn serial_loop_not_parallel() {
+        let ir = grid_ir(LoopKind::For);
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 3)]));
+        let p = compile(&ir, &cfg);
+        assert_eq!(p.tops[0].par_loop, None);
+    }
+
+    #[test]
+    fn store_without_grid_index_rejected() {
+        // forall m { t0 = load A[m]; store t0 -> B[0] } — all iterations
+        // write the same slot: must stay sequential.
+        let mut ir = grid_ir(LoopKind::ForAll);
+        if let Stmt::Loop { body, .. } = &mut ir.body[0] {
+            body[2] = Stmt::Store {
+                var: 1,
+                buf: 1,
+                idx: vec![Index::Zero],
+            };
+        }
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 3)]));
+        let p = compile(&ir, &cfg);
+        assert_eq!(p.tops[0].par_loop, None);
+    }
+
+    #[test]
+    fn free_var_read_rejected() {
+        // forall m { t1 = t9 + t9; store t1 -> B[m] } — t9 comes from
+        // outside the loop: iterations are not self-contained.
+        let mut ir = grid_ir(LoopKind::ForAll);
+        if let Stmt::Loop { body, .. } = &mut ir.body[0] {
+            body[1] = Stmt::Compute {
+                var: 1,
+                op: COp::Func(FuncOp::Add),
+                args: vec![9, 9],
+            };
+        }
+        ir.n_vars = 10;
+        super::super::analyze_clears(&mut ir);
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 3)]));
+        let p = compile(&ir, &cfg);
+        assert_eq!(p.tops[0].par_loop, None);
+    }
+
+    #[test]
+    fn access_strides_row_major() {
+        // B[m, n] with M=3, N=4: stride of m is 4, of n is 1.
+        let (m, n) = (Dim::new("M"), Dim::new("N"));
+        let mut ir = LoopIr {
+            bufs: vec![BufDecl {
+                name: "B".into(),
+                dims: vec![m.clone(), n.clone()],
+                item: Item::Block,
+                is_input: false,
+                is_output: true,
+            }],
+            body: vec![Stmt::Loop {
+                kind: LoopKind::ForAll,
+                dim: m.clone(),
+                skip_first: false,
+                clears: vec![],
+                body: vec![Stmt::Loop {
+                    kind: LoopKind::ForAll,
+                    dim: n.clone(),
+                    skip_first: false,
+                    clears: vec![],
+                    body: vec![Stmt::Store {
+                        var: 0,
+                        buf: 0,
+                        idx: vec![Index::Iter(m), Index::Iter(n)],
+                    }],
+                }],
+            }],
+            n_vars: 1,
+            params: vec![],
+        };
+        super::super::analyze_clears(&mut ir);
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 3), ("N", 4)]));
+        let p = compile(&ir, &cfg);
+        assert_eq!(p.accesses.len(), 1);
+        assert_eq!(p.accesses[0].terms, vec![(0, 4), (1, 1)]);
+        assert_eq!(p.accesses[0].flat(&[2, 3]), 11);
+    }
+}

@@ -8,12 +8,12 @@
 //! are the quantity fusion optimizes (global-memory traffic + kernel
 //! launches).
 
-use super::{COp, Index, LoopIr, Stmt};
+use super::compile::{accum_val, ComputeKind};
+use super::{Index, LoopIr, Stmt};
 use crate::ir::dim::{Dim, DimSizes};
-use crate::ir::func::{FuncOp, ReduceOp};
-use crate::tensor::{Mat, Val};
+use crate::tensor::Val;
 use std::collections::{BTreeMap, HashMap};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Two-tier memory traffic counters.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -44,10 +44,11 @@ impl MemSim {
 #[derive(Clone, Debug)]
 pub struct BufVal {
     pub dims: Vec<usize>,
-    /// Elements are reference-counted so the simulator's loads/stores move
-    /// pointers, not payloads (§Perf round 2); *simulated* traffic is still
-    /// charged in full by `MemSim`.
-    pub data: Vec<Option<Rc<Val>>>,
+    /// Elements are reference-counted (`Arc`, so the compiled engine can
+    /// share them across worker threads) and the simulator's loads/stores
+    /// move pointers, not payloads (§Perf round 2); *simulated* traffic is
+    /// still charged in full by `MemSim`.
+    pub data: Vec<Option<Arc<Val>>>,
 }
 
 impl BufVal {
@@ -62,7 +63,7 @@ impl BufVal {
     pub fn scalar_item(v: Val) -> BufVal {
         BufVal {
             dims: vec![],
-            data: vec![Some(Rc::new(v))],
+            data: vec![Some(Arc::new(v))],
         }
     }
 
@@ -82,7 +83,7 @@ impl BufVal {
             .unwrap_or_else(|| panic!("BufVal: element {idx:?} never stored"))
     }
 
-    fn get_rc(&self, idx: &[usize]) -> Rc<Val> {
+    fn get_arc(&self, idx: &[usize]) -> Arc<Val> {
         self.data[self.flat(idx)]
             .clone()
             .unwrap_or_else(|| panic!("BufVal: element {idx:?} never stored"))
@@ -90,10 +91,10 @@ impl BufVal {
 
     pub fn set(&mut self, idx: &[usize], v: Val) {
         let f = self.flat(idx);
-        self.data[f] = Some(Rc::new(v));
+        self.data[f] = Some(Arc::new(v));
     }
 
-    fn set_rc(&mut self, idx: &[usize], v: Rc<Val>) {
+    fn set_arc(&mut self, idx: &[usize], v: Arc<Val>) {
         let f = self.flat(idx);
         self.data[f] = Some(v);
     }
@@ -101,6 +102,7 @@ impl BufVal {
 
 /// Execution configuration: dim sizes, scalar parameters, input buffers,
 /// optional local-memory capacity (bytes) to enforce, and misc-op callbacks.
+#[derive(Clone)]
 pub struct ExecConfig {
     pub sizes: DimSizes,
     pub params: BTreeMap<String, f32>,
@@ -112,6 +114,10 @@ pub struct ExecConfig {
     /// Whole-array opaque operators: take the row-major element lists of
     /// each input buffer, return the output's elements in row-major order.
     pub misc_list_ops: HashMap<String, fn(&[Vec<Val>]) -> Vec<Val>>,
+    /// Worker-thread cap for the compiled engine's parallel grid loops
+    /// (`None` = one worker per available core). The tree-walking
+    /// interpreter ignores this — it is always sequential.
+    pub threads: Option<usize>,
 }
 
 impl ExecConfig {
@@ -123,6 +129,7 @@ impl ExecConfig {
             local_capacity: None,
             misc_ops: HashMap::new(),
             misc_list_ops: HashMap::new(),
+            threads: None,
         }
     }
 }
@@ -134,10 +141,9 @@ pub struct ExecResult {
 }
 
 struct Interp<'a> {
-
     cfg: &'a ExecConfig,
     bufs: Vec<BufVal>,
-    vars: Vec<Option<Rc<Val>>>,
+    vars: Vec<Option<Arc<Val>>>,
     iters: HashMap<Dim, usize>,
     mem: MemSim,
     live_local: u64,
@@ -165,7 +171,6 @@ pub fn exec(ir: &LoopIr, cfg: &ExecConfig) -> ExecResult {
         }
     }
     let mut it = Interp {
-
         cfg,
         bufs,
         vars: vec![None; ir.n_vars],
@@ -208,7 +213,7 @@ impl<'a> Interp<'a> {
         &out[..idx.len()]
     }
 
-    fn set_var(&mut self, var: usize, v: Rc<Val>) {
+    fn set_var(&mut self, var: usize, v: Arc<Val>) {
         if let Some(old) = &self.vars[var] {
             self.live_local = self.live_local.saturating_sub(old.bytes() as u64);
         }
@@ -238,7 +243,7 @@ impl<'a> Interp<'a> {
             .unwrap_or_else(|| panic!("var t{v} read before assignment"))
     }
 
-    fn var_rc(&self, v: usize) -> Rc<Val> {
+    fn var_arc(&self, v: usize) -> Arc<Val> {
         self.vars[v]
             .clone()
             .unwrap_or_else(|| panic!("var t{v} read before assignment"))
@@ -269,7 +274,7 @@ impl<'a> Interp<'a> {
             Stmt::Load { var, buf, idx } => {
                 let mut scratch = [0usize; 8];
                 let i = self.idx_into(idx, &mut scratch);
-                let v = self.bufs[*buf].get_rc(i);
+                let v = self.bufs[*buf].get_arc(i);
                 self.mem.n_loads += 1;
                 self.mem.loaded_bytes += v.bytes() as u64;
                 self.set_var(*var, v);
@@ -277,16 +282,23 @@ impl<'a> Interp<'a> {
             Stmt::Store { var, buf, idx } => {
                 let mut scratch = [0usize; 8];
                 let i = self.idx_into(idx, &mut scratch);
-                let v = self.var_rc(*var);
+                let v = self.var_arc(*var);
                 self.mem.n_stores += 1;
                 self.mem.stored_bytes += v.bytes() as u64;
-                self.bufs[*buf].set_rc(i, v);
+                self.bufs[*buf].set_arc(i, v);
             }
             Stmt::Compute { var, op, args } => {
                 let vals: Vec<&Val> = args.iter().map(|a| self.var(*a)).collect();
-                let (v, fl) = self.compute(op, &vals);
+                // Naive-baseline behavior, deliberately kept: the operator
+                // is re-resolved (and any elementwise expression recompiled)
+                // on every execution of the site. The compiled engine hoists
+                // this into `loopir::compile`; both share `ComputeKind::
+                // apply`, so numerics and flop charges stay bit-identical.
+                let kind = ComputeKind::from_op(op, self.cfg);
+                let mut stack: Vec<f32> = Vec::with_capacity(8);
+                let (v, fl) = kind.apply(&vals, &mut stack);
                 self.mem.flops += fl;
-                self.set_var(*var, Rc::new(v));
+                self.set_var(*var, Arc::new(v));
             }
             Stmt::MiscCall { tag, args, out } => {
                 let f = *self
@@ -320,15 +332,9 @@ impl<'a> Interp<'a> {
                 }
             }
             Stmt::Accum { var, op, src } => {
-                let s = self.var_rc(*src);
-                let v = match (&self.vars[*var], op) {
-                    (None, _) => s,
-                    (Some(acc), ReduceOp::Add) => {
-                        self.mem.flops += (s.bytes() / 4) as u64;
-                        Rc::new(acc.zip(&s, |a, b| a + b))
-                    }
-                    (Some(acc), ReduceOp::Max) => Rc::new(acc.zip(&s, f32::max)),
-                };
+                let s = self.var_arc(*src);
+                let (v, fl) = accum_val(self.vars[*var].as_deref(), *op, s);
+                self.mem.flops += fl;
                 self.set_var(*var, v);
             }
         }
@@ -364,114 +370,6 @@ impl<'a> Interp<'a> {
         }
         slots
     }
-
-    fn compute(&self, op: &COp, args: &[&Val]) -> (Val, u64) {
-        match op {
-            COp::Func(f) => self.func(f, args),
-            COp::Misc(tag) => {
-                let f = self
-                    .cfg
-                    .misc_ops
-                    .get(tag)
-                    .unwrap_or_else(|| panic!("no misc-op callback registered for {tag}"));
-                let owned: Vec<Val> = args.iter().map(|v| (*v).clone()).collect();
-                (f(&owned), 0)
-            }
-        }
-    }
-
-    fn func(&self, f: &FuncOp, args: &[&Val]) -> (Val, u64) {
-        match f {
-            FuncOp::Add => {
-                let v = args[0].zip(args[1], |a, b| a + b);
-                let fl = (v.bytes() / 4) as u64;
-                (v, fl)
-            }
-            FuncOp::Mul => {
-                let v = args[0].zip(args[1], |a, b| a * b);
-                let fl = (v.bytes() / 4) as u64;
-                (v, fl)
-            }
-            FuncOp::RowShift => {
-                let m = args[0].as_block();
-                let c = args[1].as_vector();
-                (Val::Block(m.row_shift(c)), (m.rows * m.cols) as u64)
-            }
-            FuncOp::RowScale => {
-                let m = args[0].as_block();
-                let c = args[1].as_vector();
-                (Val::Block(m.row_scale(c)), (m.rows * m.cols) as u64)
-            }
-            FuncOp::RowSum => {
-                let m = args[0].as_block();
-                (Val::Vector(m.row_sum()), (m.rows * m.cols) as u64)
-            }
-            FuncOp::Dot => {
-                let a = args[0].as_block();
-                let b = args[1].as_block();
-                let v = a.dot_bt(b);
-                let fl = 2 * (a.rows * a.cols * b.rows) as u64;
-                (Val::Block(v), fl)
-            }
-            FuncOp::Outer => {
-                let a = args[0].as_vector();
-                let b = args[1].as_vector();
-                (
-                    Val::Block(Mat::outer(a, b)),
-                    (a.len() * b.len()) as u64,
-                )
-            }
-            FuncOp::Ew(e) => {
-                let n = e.arity();
-                assert_eq!(args.len(), n, "ew arity mismatch");
-                // §Perf: compile the expr once per block operation (tape +
-                // resolved params), evaluate allocation-free per element.
-                let ce = e.compile(&self.cfg.params);
-                let mut stack: Vec<f32> = Vec::with_capacity(ce.max_stack);
-                let mut xs = [0.0f32; 8];
-                assert!(n <= 8, "elementwise arity > 8 unsupported");
-                let v = match args[0] {
-                    Val::Scalar(_) => {
-                        for (k, a) in args.iter().enumerate() {
-                            xs[k] = a.as_scalar();
-                        }
-                        Val::Scalar(ce.eval_with(&xs[..n], &mut stack))
-                    }
-                    Val::Vector(v0) => {
-                        let mut out = Vec::with_capacity(v0.len());
-                        for i in 0..v0.len() {
-                            for (k, a) in args.iter().enumerate() {
-                                xs[k] = a.as_vector()[i];
-                            }
-                            out.push(ce.eval_with(&xs[..n], &mut stack));
-                        }
-                        Val::Vector(out)
-                    }
-                    Val::Block(m0) => {
-                        let mut out = Mat::zeros(m0.rows, m0.cols);
-                        let len = m0.rows * m0.cols;
-                        if n == 1 {
-                            let a0 = &args[0].as_block().data;
-                            for i in 0..len {
-                                xs[0] = a0[i];
-                                out.data[i] = ce.eval_with(&xs[..1], &mut stack);
-                            }
-                        } else {
-                            for i in 0..len {
-                                for (k, a) in args.iter().enumerate() {
-                                    xs[k] = a.as_block().data[i];
-                                }
-                                out.data[i] = ce.eval_with(&xs[..n], &mut stack);
-                            }
-                        }
-                        Val::Block(out)
-                    }
-                };
-                let fl = (v.bytes() / 4) as u64;
-                (v, fl)
-            }
-        }
-    }
 }
 
 #[cfg(test)]
@@ -482,7 +380,7 @@ mod tests {
     use crate::ir::graph::{map_over, ArgMode, Graph};
     use crate::ir::types::Ty;
     use crate::loopir::lower::lower;
-    use crate::tensor::Rng;
+    use crate::tensor::{Mat, Rng};
 
     fn block_list(rng: &mut Rng, n: usize, r: usize, c: usize) -> BufVal {
         let mut bv = BufVal::new(vec![n]);

@@ -8,11 +8,17 @@
 //! * [`print`] renders the paper-style listings;
 //! * [`interp`] executes programs on concrete data while simulating the
 //!   two-tier memory (counting every global<->local transfer);
+//! * [`compile`] flattens the `Stmt` tree into a linear instruction tape
+//!   (trip counts and buffer strides pre-resolved, elementwise exprs
+//!   pre-compiled, grid loops analyzed for parallel safety) which
+//!   `exec::engine` executes — the compile-then-execute pipeline used by
+//!   the `ExecBackend::Compiled` switch;
 //! * `cost` (top-level module) statically derives traffic/flops/launches.
 //!
 //! Buffers (`Buf`) are global-memory arrays of local items, indexed by the
 //! enclosing iteration dims; vars (`VarId`) are local-memory temporaries.
 
+pub mod compile;
 pub mod interp;
 pub mod lower;
 pub mod print;

@@ -3,16 +3,17 @@
 //! ```text
 //! blockbuster trace <program> [--listing] [--dot]   fusion trace (+ fused code)
 //! blockbuster compile <program>                     selection plan report
-//! blockbuster run <program> [--seed N]              execute plan vs naive
+//! blockbuster run <program> [--seed N] [--backend interp|compiled]
+//!                                                   execute plan vs naive
 //! blockbuster tune <program> [--capacity BYTES]     autotune block counts
 //! blockbuster xla <model> [--artifacts DIR]         run an AOT artifact (PJRT)
 //! blockbuster list                                  available programs/models
 //! ```
 
 use blockbuster::autotune::autotune;
-use blockbuster::coordinator::{compile, execute_plan, plan_report, workloads};
+use blockbuster::coordinator::{compile, execute_plan_with, plan_report, workloads};
 use blockbuster::cost::CostModel;
-use blockbuster::exec::{run, Workload};
+use blockbuster::exec::{run_with, ExecBackend, Workload};
 use blockbuster::fusion::fuse;
 use blockbuster::ir::display::{dump, to_dot};
 use blockbuster::loopir::lower::lower;
@@ -32,7 +33,10 @@ fn usage() -> ! {
 }
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["seed", "capacity", "artifacts"]);
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["seed", "capacity", "artifacts", "backend"],
+    );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     match cmd {
         "trace" => cmd_trace(&args),
@@ -109,11 +113,19 @@ fn cmd_compile(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let backend = match args.opt("backend") {
+        None => ExecBackend::default(),
+        Some(s) => ExecBackend::from_name(s).unwrap_or_else(|| {
+            eprintln!("unknown backend {s}; have: interp, compiled");
+            std::process::exit(2);
+        }),
+    };
     let (p, cfg, params, inputs) = demo_or_die(args);
     let compiled = compile(&p, cfg.clone());
     print!("{}", plan_report(&compiled));
+    println!("executor backend: {}", backend.name());
 
-    let naive = run(
+    let naive = run_with(
         &compiled.block,
         &Workload {
             sizes: cfg.sizes.clone(),
@@ -121,8 +133,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             inputs: inputs.clone(),
             local_capacity: None,
         },
+        backend,
     );
-    let plan = execute_plan(&compiled.plan, &cfg.sizes, &params, &inputs);
+    let plan = execute_plan_with(&compiled.plan, &cfg.sizes, &params, &inputs, backend);
     println!(
         "\nnaive : traffic {}  launches {}  flops {}",
         fmt_bytes(naive.mem.total_traffic()),

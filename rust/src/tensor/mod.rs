@@ -58,39 +58,87 @@ impl Mat {
 
     /// `self @ other.T` — the paper's `dot` block operator.
     /// Constraint (Table 1): `self.cols == other.cols`.
+    ///
+    /// Register-tiled: a 4×4 micro-kernel keeps 16 accumulators live and
+    /// streams both operands row-contiguously (both already iterate along
+    /// `k`, so no transpose is needed). Per output element the reduction
+    /// order is ascending `k`, exactly as in the scalar fallback, so all
+    /// tile paths are bit-identical to each other.
     pub fn dot_bt(&self, other: &Mat) -> Mat {
         assert_eq!(
             self.cols, other.cols,
             "dot: inner dims differ ({}x{} vs {}x{})",
             self.rows, self.cols, other.rows, other.cols
         );
-        let mut out = Mat::zeros(self.rows, other.rows);
-        for i in 0..self.rows {
-            let a = self.row(i);
-            for j in 0..other.rows {
-                let b = other.row(j);
-                let mut acc = 0.0f32;
-                for k in 0..self.cols {
-                    acc += a[k] * b[k];
+        const MR: usize = 4;
+        const NR: usize = 4;
+        let (m, n, k) = (self.rows, other.rows, self.cols);
+        let mut out = Mat::zeros(m, n);
+        let mut i = 0;
+        while i < m {
+            let ih = MR.min(m - i);
+            let mut j = 0;
+            while j < n {
+                let jh = NR.min(n - j);
+                if ih == MR && jh == NR {
+                    let a = [self.row(i), self.row(i + 1), self.row(i + 2), self.row(i + 3)];
+                    let b = [
+                        other.row(j),
+                        other.row(j + 1),
+                        other.row(j + 2),
+                        other.row(j + 3),
+                    ];
+                    let mut acc = [[0.0f32; NR]; MR];
+                    for kk in 0..k {
+                        let av = [a[0][kk], a[1][kk], a[2][kk], a[3][kk]];
+                        let bv = [b[0][kk], b[1][kk], b[2][kk], b[3][kk]];
+                        for (accr, &x) in acc.iter_mut().zip(&av) {
+                            for (c, &y) in accr.iter_mut().zip(&bv) {
+                                *c += x * y;
+                            }
+                        }
+                    }
+                    for (ii, accr) in acc.iter().enumerate() {
+                        out.data[(i + ii) * n + j..(i + ii) * n + j + NR].copy_from_slice(accr);
+                    }
+                } else {
+                    for ii in i..i + ih {
+                        let a = self.row(ii);
+                        for jj in j..j + jh {
+                            let b = other.row(jj);
+                            let mut acc = 0.0f32;
+                            for kk in 0..k {
+                                acc += a[kk] * b[kk];
+                            }
+                            out.data[ii * n + jj] = acc;
+                        }
+                    }
                 }
-                out.data[i * other.rows + j] = acc;
+                j += jh;
             }
+            i += ih;
         }
         out
     }
 
     /// Plain `self @ other` (used by reference paths and tests).
+    ///
+    /// Cache-blocked `i-k-j` loop: the inner axpy walks both the output row
+    /// and the `other` row contiguously, which vectorizes. There is
+    /// deliberately no `a == 0.0` skip — it silently turned `0·NaN`/`0·inf`
+    /// contributions into nothing, so references could disagree with the
+    /// blocked executor on non-finite inputs.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul: inner dims differ");
-        let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self.at(i, k);
-                if a == 0.0 {
-                    continue;
-                }
-                for j in 0..other.cols {
-                    out.data[i * other.cols + j] += a * other.at(k, j);
+        let (m, kdim, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for k in 0..kdim {
+                let a = self.data[i * kdim + k];
+                let brow = &other.data[k * n..(k + 1) * n];
+                for (o, b) in orow.iter_mut().zip(brow) {
+                    *o += a * *b;
                 }
             }
         }
@@ -101,14 +149,33 @@ impl Mat {
         Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
     }
 
-    /// Elementwise add (Table 1 `add`).
+    /// Elementwise add (Table 1 `add`). Slice-level loop so the compiler
+    /// can vectorize without closure indirection.
     pub fn add(&self, other: &Mat) -> Mat {
-        self.zip(other, |a, b| a + b)
+        assert_eq!(
+            (self.rows, self.cols),
+            (other.rows, other.cols),
+            "add: shape mismatch"
+        );
+        let mut out = self.clone();
+        for (o, b) in out.data.iter_mut().zip(&other.data) {
+            *o += *b;
+        }
+        out
     }
 
-    /// Hadamard product (Table 1 `mul`).
+    /// Hadamard product (Table 1 `mul`), same flat vectorizable loop.
     pub fn hadamard(&self, other: &Mat) -> Mat {
-        self.zip(other, |a, b| a * b)
+        assert_eq!(
+            (self.rows, self.cols),
+            (other.rows, other.cols),
+            "mul: shape mismatch"
+        );
+        let mut out = self.clone();
+        for (o, b) in out.data.iter_mut().zip(&other.data) {
+            *o *= *b;
+        }
+        out
     }
 
     pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
@@ -140,24 +207,71 @@ impl Mat {
     /// `self + c[:,newaxis]` (Table 1 `row_shift`); `c.len() == rows`.
     pub fn row_shift(&self, c: &[f32]) -> Mat {
         assert_eq!(c.len(), self.rows, "row_shift: vector len != rows");
-        Mat::from_fn(self.rows, self.cols, |i, j| self.at(i, j) + c[i])
+        let mut out = self.clone();
+        for (i, &ci) in c.iter().enumerate() {
+            for v in &mut out.data[i * self.cols..(i + 1) * self.cols] {
+                *v += ci;
+            }
+        }
+        out
     }
 
     /// `self * c[:,newaxis]` (Table 1 `row_scale`); `c.len() == rows`.
     pub fn row_scale(&self, c: &[f32]) -> Mat {
         assert_eq!(c.len(), self.rows, "row_scale: vector len != rows");
-        Mat::from_fn(self.rows, self.cols, |i, j| self.at(i, j) * c[i])
+        let mut out = self.clone();
+        for (i, &ci) in c.iter().enumerate() {
+            for v in &mut out.data[i * self.cols..(i + 1) * self.cols] {
+                *v *= ci;
+            }
+        }
+        out
     }
 
     /// Sum of each row (see DESIGN.md on the Table-1 `row_sum` erratum).
+    /// Four interleaved partial sums break the serial dependence chain so
+    /// the reduction pipelines; the tail is folded in sequentially.
     pub fn row_sum(&self) -> Vec<f32> {
-        (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
+        (0..self.rows)
+            .map(|i| {
+                let r = self.row(i);
+                let mut lanes = [0.0f32; 4];
+                let mut chunks = r.chunks_exact(4);
+                for c in chunks.by_ref() {
+                    lanes[0] += c[0];
+                    lanes[1] += c[1];
+                    lanes[2] += c[2];
+                    lanes[3] += c[3];
+                }
+                let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+                for &x in chunks.remainder() {
+                    s += x;
+                }
+                s
+            })
+            .collect()
     }
 
-    /// Max of each row (numerical-safety pass).
+    /// Max of each row (numerical-safety pass), same four-lane shape —
+    /// `f32::max` is order-insensitive so lanes cost nothing semantically.
     pub fn row_max(&self) -> Vec<f32> {
         (0..self.rows)
-            .map(|i| self.row(i).iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b)))
+            .map(|i| {
+                let r = self.row(i);
+                let mut lanes = [f32::NEG_INFINITY; 4];
+                let mut chunks = r.chunks_exact(4);
+                for c in chunks.by_ref() {
+                    lanes[0] = lanes[0].max(c[0]);
+                    lanes[1] = lanes[1].max(c[1]);
+                    lanes[2] = lanes[2].max(c[2]);
+                    lanes[3] = lanes[3].max(c[3]);
+                }
+                let mut m = lanes[0].max(lanes[1]).max(lanes[2].max(lanes[3]));
+                for &x in chunks.remainder() {
+                    m = m.max(x);
+                }
+                m
+            })
             .collect()
     }
 
@@ -342,6 +456,47 @@ mod tests {
         let m = a.matmul(&b.transpose());
         assert!(d.max_abs_diff(&m) < 1e-5);
         assert_eq!((d.rows, d.cols), (3, 4));
+    }
+
+    /// The 4×4 micro-kernel and the scalar remainder path must agree on
+    /// every tile-boundary combination (full tiles, row tail, col tail).
+    #[test]
+    fn dot_bt_tiled_agrees_on_awkward_shapes() {
+        let mut rng = Rng::new(11);
+        for (m, n, k) in [(1, 1, 1), (4, 4, 8), (5, 7, 3), (9, 6, 13), (8, 8, 1), (3, 12, 32)] {
+            let a = rng.mat(m, k);
+            let b = rng.mat(n, k);
+            let fast = a.dot_bt(&b);
+            // straight-line oracle
+            let mut want = Mat::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += a.at(i, kk) * b.at(j, kk);
+                    }
+                    *want.at_mut(i, j) = acc;
+                }
+            }
+            // bit-identical: both paths reduce in ascending-k order
+            assert_eq!(fast.data, want.data, "shape {m}x{n}x{k}");
+        }
+    }
+
+    /// Regression: `matmul` used to skip `a == 0.0` terms, silently turning
+    /// `0·NaN` and `0·inf` contributions into nothing, so references could
+    /// disagree with the blocked executor on non-finite inputs.
+    #[test]
+    fn matmul_propagates_nan_and_inf_through_zero() {
+        let a = Mat::from_vec(1, 2, vec![0.0, 2.0]);
+        let b = Mat::from_vec(2, 2, vec![f32::NAN, f32::INFINITY, 3.0, 4.0]);
+        let c = a.matmul(&b);
+        assert!(c.at(0, 0).is_nan(), "0*NaN + 2*3 must be NaN, got {}", c.at(0, 0));
+        assert!(c.at(0, 1).is_nan(), "0*inf + 2*4 must be NaN, got {}", c.at(0, 1));
+        // finite inputs are unaffected by the fix
+        let f = Mat::from_vec(1, 2, vec![0.0, 2.0]);
+        let g = Mat::from_vec(2, 1, vec![5.0, 7.0]);
+        assert_eq!(f.matmul(&g).data, vec![14.0]);
     }
 
     #[test]

@@ -123,6 +123,12 @@ pub fn fmt_stat(s: &Stats) -> String {
     format!("{} ±{}", fmt_ns(s.median_ns), fmt_ns(s.stddev_ns))
 }
 
+/// Persist a machine-readable bench report (`BENCH_*.json` files track the
+/// perf trajectory across PRs; the JSON writer is `util::json`).
+pub fn write_json_report(path: &str, j: &crate::util::json::Json) -> std::io::Result<()> {
+    std::fs::write(path, format!("{j}\n"))
+}
+
 pub fn fmt_bytes(b: u64) -> String {
     if b < 1024 {
         format!("{b}B")

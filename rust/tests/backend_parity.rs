@@ -1,0 +1,159 @@
+//! Engine/interpreter parity (the compiled-execution tentpole's contract):
+//! every example program run through both `ExecBackend`s must produce
+//! **bit-identical** outputs and identical `MemSim` counters
+//! (`loaded_bytes`, `stored_bytes`, `kernel_launches`, `flops`), on the
+//! naive program and on every fusion snapshot. A random-program property
+//! test extends the guarantee beyond the curated examples.
+
+use blockbuster::coordinator::workloads;
+use blockbuster::exec::{run_lowered_with, ExecBackend, Workload};
+use blockbuster::fusion::fuse;
+use blockbuster::loopir::lower::lower;
+use blockbuster::loopir::LoopIr;
+use blockbuster::lower::lower_array;
+use blockbuster::prop::{forall, random_workload};
+
+fn assert_parity(ir: &LoopIr, wl: &Workload, what: &str) {
+    let a = run_lowered_with(ir, wl, ExecBackend::Interp);
+    let b = run_lowered_with(ir, wl, ExecBackend::Compiled);
+    assert_eq!(
+        a.outputs.len(),
+        b.outputs.len(),
+        "{what}: output sets differ"
+    );
+    let mut names: Vec<&String> = a.outputs.keys().collect();
+    names.sort();
+    for n in names {
+        assert_eq!(
+            a.outputs[n], b.outputs[n],
+            "{what}: output {n} not bit-identical across backends"
+        );
+    }
+    assert_eq!(
+        a.mem.loaded_bytes, b.mem.loaded_bytes,
+        "{what}: loaded_bytes"
+    );
+    assert_eq!(
+        a.mem.stored_bytes, b.mem.stored_bytes,
+        "{what}: stored_bytes"
+    );
+    assert_eq!(a.mem.n_loads, b.mem.n_loads, "{what}: n_loads");
+    assert_eq!(a.mem.n_stores, b.mem.n_stores, "{what}: n_stores");
+    assert_eq!(
+        a.mem.kernel_launches, b.mem.kernel_launches,
+        "{what}: kernel_launches"
+    );
+    assert_eq!(a.mem.flops, b.mem.flops, "{what}: flops");
+}
+
+/// All five example programs (`quickstart`, `attention`,
+/// `layernorm_matmul`, `rmsnorm_ffn_swiglu`, `decoder`): naive program and
+/// every fusion snapshot, both backends, exact agreement.
+#[test]
+fn example_programs_bit_identical_across_backends() {
+    for name in workloads::NAMES {
+        let (p, cfg, params, inputs) = workloads::by_name(name, 1234).unwrap();
+        let wl = Workload {
+            sizes: cfg.sizes.clone(),
+            params,
+            inputs,
+            local_capacity: None,
+        };
+        let g = lower_array(&p);
+        assert_parity(&lower(&g), &wl, &format!("{name}/naive"));
+        for (i, snap) in fuse(g).snapshots.iter().enumerate() {
+            assert_parity(&lower(snap), &wl, &format!("{name}/snapshot{i}"));
+        }
+    }
+}
+
+/// Parity must be insensitive to the worker count: the compiled engine at
+/// 1 thread and at 8 threads produces the same bits as the interpreter.
+#[test]
+fn parity_insensitive_to_thread_count() {
+    use blockbuster::loopir::interp::exec;
+    let (p, cfg, params, inputs) = workloads::rmsnorm_ffn_swiglu_demo(77);
+    let g = lower_array(&p);
+    let fused = fuse(g).snapshots.pop().unwrap();
+    let ir = lower(&fused);
+
+    // build the blocked config directly so `threads` can be pinned
+    let mut base = blockbuster::loopir::interp::ExecConfig::new(cfg.sizes.clone());
+    base.params = params;
+    for decl in &ir.bufs {
+        if !decl.is_input {
+            continue;
+        }
+        let m = &inputs[&decl.name];
+        let rb = cfg.sizes.get(&decl.dims[0]);
+        let cb = cfg.sizes.get(&decl.dims[1]);
+        base.inputs
+            .insert(decl.name.clone(), blockbuster::exec::to_blocks(m, rb, cb));
+    }
+    let want = exec(&ir, &base);
+    for threads in [1usize, 2, 8] {
+        let mut cfg2 = base.clone();
+        cfg2.threads = Some(threads);
+        let prog = blockbuster::loopir::compile::compile(&ir, &cfg2);
+        let got = blockbuster::exec::engine::exec_compiled(&prog, &cfg2);
+        for (n, bv) in &want.outputs {
+            let gbv = &got.outputs[n];
+            assert_eq!(bv.dims, gbv.dims);
+            for (i, slot) in bv.data.iter().enumerate() {
+                let a = slot.as_deref();
+                let b = gbv.data[i].as_deref();
+                assert_eq!(a, b, "threads={threads}, output {n}, slot {i}");
+            }
+        }
+        assert_eq!(want.mem.loaded_bytes, got.mem.loaded_bytes);
+        assert_eq!(want.mem.stored_bytes, got.mem.stored_bytes);
+        assert_eq!(want.mem.flops, got.mem.flops);
+        assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches);
+        if threads == 1 {
+            // sequential engine runs the exact var set/clear sequence of
+            // the interpreter, so even the peak-local approximation must
+            // match — this pins the engine's duplicated local-memory
+            // accounting to the interpreter's
+            assert_eq!(want.mem.peak_local_bytes, got.mem.peak_local_bytes);
+            assert_eq!(want.mem.n_loads, got.mem.n_loads);
+            assert_eq!(want.mem.n_stores, got.mem.n_stores);
+        }
+    }
+}
+
+/// Property: parity holds on random programs, naive and fully fused.
+#[test]
+fn random_programs_bit_identical_across_backends() {
+    forall(25, 0xB17B17, |seed| {
+        let w = random_workload(seed, 4);
+        let g = lower_array(&w.program);
+        let wl = Workload {
+            sizes: w.sizes.clone(),
+            params: w.params.clone(),
+            inputs: w.inputs.clone(),
+            local_capacity: None,
+        };
+        for ir in [lower(&g), lower(fuse(g.clone()).snapshots.last().unwrap())] {
+            let a = run_lowered_with(&ir, &wl, ExecBackend::Interp);
+            let b = run_lowered_with(&ir, &wl, ExecBackend::Compiled);
+            for (n, m) in &a.outputs {
+                if b.outputs.get(n) != Some(m) {
+                    return Err(format!("output {n} differs across backends"));
+                }
+            }
+            if a.mem.loaded_bytes != b.mem.loaded_bytes
+                || a.mem.stored_bytes != b.mem.stored_bytes
+                || a.mem.n_loads != b.mem.n_loads
+                || a.mem.n_stores != b.mem.n_stores
+                || a.mem.flops != b.mem.flops
+                || a.mem.kernel_launches != b.mem.kernel_launches
+            {
+                return Err(format!(
+                    "counters differ: interp {:?} vs compiled {:?}",
+                    a.mem, b.mem
+                ));
+            }
+        }
+        Ok(())
+    });
+}
