@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         params: params.clone(),
         inputs: inputs.clone(),
         local_capacity: None,
+        threads: None,
     };
     let t1 = Instant::now();
     let naive = run(&compiled.block, &wl);

@@ -42,6 +42,7 @@ fn main() {
         params: params.clone(),
         inputs: inputs.clone(),
         local_capacity: None,
+        threads: None,
     };
     let naive = run(&block, &wl);
     let fast = run(fused, &wl);

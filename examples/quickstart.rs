@@ -41,6 +41,7 @@ fn main() {
         params,
         inputs: inputs.clone(),
         local_capacity: None,
+        threads: None,
     };
     let naive = run(&block, &wl);
     let fused = run(result.snapshots.last().unwrap(), &wl);

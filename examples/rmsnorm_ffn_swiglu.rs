@@ -73,6 +73,7 @@ fn main() {
         params: params.clone(),
         inputs: inputs.clone(),
         local_capacity: None,
+        threads: None,
     };
     let naive = run(&block, &wl);
     let fast = run(fused, &wl);

@@ -1,13 +1,18 @@
-//! Bench: the compiled-execution tentpole — naive tree-walking interpreter
-//! vs the flat-tape engine (`ExecBackend::Compiled`) on every example
-//! program's final fused kernel, at shapes scaled up from the demo sizes.
+//! Bench: the compiled-execution stack — naive tree-walking interpreter
+//! vs the flat-tape engine (`ExecBackend::Compiled`, SIMD kernels +
+//! work-stealing grid scheduler) on every example program's final fused
+//! kernel, at shapes scaled up from the demo sizes — plus per-kernel
+//! micro-bench rows (scalar vs SIMD) for the `tensor` substrate.
 //!
 //! Both backends are timed on the same pre-blocked `ExecConfig`; the tape
 //! is compiled once outside the timed loop (the amortization autotune
-//! trials get: one program, many executions). Emits `BENCH_exec.json`
-//! next to the textual table so the interp→engine speedup trajectory is
-//! tracked from this PR onward. Set `BB_BENCH_SMOKE=1` for a seconds-long
-//! CI smoke run at demo sizes.
+//! trials get: one skeleton, many bindings). Emits `BENCH_exec.json`
+//! next to the textual table so the speedup trajectory is tracked from
+//! this PR onward: `speedup_geomean` is the *within-commit* interp→
+//! compiled ratio, while the cross-PR compiled trajectory (e.g. the
+//! "≥1.5× over the previous compiled baseline" acceptance check) is the
+//! per-program `compiled_ms` fields diffed across commits/CI artifacts.
+//! Set `BB_BENCH_SMOKE=1` for a seconds-long CI smoke run at demo sizes.
 
 use blockbuster::coordinator::workloads;
 use blockbuster::exec::to_blocks;
@@ -16,7 +21,7 @@ use blockbuster::loopir::compile::compile;
 use blockbuster::loopir::interp::{exec, ExecConfig};
 use blockbuster::loopir::lower::lower;
 use blockbuster::lower::lower_array;
-use blockbuster::tensor::Rng;
+use blockbuster::tensor::{simd, Rng};
 use blockbuster::util::bench::{bench, fmt_stat, write_json_report, Table};
 use blockbuster::util::json::Json;
 use std::time::Duration;
@@ -37,6 +42,8 @@ fn main() {
         &["workload", "interp", "compiled", "speedup"],
     );
     let mut rows = Vec::new();
+    let mut log_speedups = 0.0f64;
+    let mut n_programs = 0usize;
 
     for name in workloads::NAMES {
         let (p, demo_cfg, params, _) = workloads::by_name(name, 42).unwrap();
@@ -71,6 +78,8 @@ fn main() {
             blockbuster::exec::engine::exec_compiled(&prog, &cfg)
         });
         let speedup = si.median_ns / sc.median_ns;
+        log_speedups += speedup.ln();
+        n_programs += 1;
         t.row(vec![
             name.to_string(),
             fmt_stat(&si),
@@ -84,13 +93,77 @@ fn main() {
             ("speedup", Json::Num(speedup)),
         ]));
     }
-
+    let geomean = (log_speedups / n_programs.max(1) as f64).exp();
     t.print();
+    println!("\ncompiled-backend speedup geomean: {geomean:.2}x");
+
+    // ---- per-kernel micro-bench: scalar vs SIMD ---------------------------
+    let dim = if smoke { 32 } else { 128 };
+    let avx = if simd::simd_active() {
+        "available"
+    } else {
+        "unavailable"
+    };
+    let mut kt = Table::new(
+        &format!("Kernel micro-bench at {dim}x{dim}, scalar vs SIMD (avx2 {avx})"),
+        &["kernel", "scalar", "simd", "speedup"],
+    );
+    let mut krows = Vec::new();
+    let mut rng = Rng::new(99);
+    let a = rng.mat(dim, dim);
+    let b = rng.mat(dim, dim);
+    {
+        let mut run_kernel = |kname: &str, f: &mut dyn FnMut() -> f32| {
+            simd::set_enabled(false);
+            let ss = bench(min_iters, budget / 4, &mut *f);
+            simd::set_enabled(true);
+            let sv = bench(min_iters, budget / 4, &mut *f);
+            let speedup = ss.median_ns / sv.median_ns;
+            kt.row(vec![
+                kname.to_string(),
+                fmt_stat(&ss),
+                fmt_stat(&sv),
+                format!("{speedup:.2}x"),
+            ]);
+            krows.push(Json::obj(vec![
+                ("kernel", Json::Str(kname.to_string())),
+                ("scalar_us", Json::Num(ss.median_ns / 1e3)),
+                ("simd_us", Json::Num(sv.median_ns / 1e3)),
+                ("speedup", Json::Num(speedup)),
+            ]));
+        };
+        run_kernel("dot_bt", &mut || a.dot_bt(&b).at(0, 0));
+        run_kernel("matmul", &mut || a.matmul(&b).at(0, 0));
+        run_kernel("hadamard", &mut || a.hadamard(&b).at(0, 0));
+        run_kernel("add", &mut || a.add(&b).at(0, 0));
+        run_kernel("row_sum", &mut || a.row_sum()[0]);
+        run_kernel("row_max", &mut || a.row_max()[0]);
+    }
+    simd::set_enabled(true);
+    kt.print();
+
     let report = Json::obj(vec![
         ("bench", Json::Str("exec_backend_speedup".into())),
         ("grid_scale", Json::Num(scale as f64)),
         ("smoke", Json::Bool(smoke)),
+        ("simd_active", Json::Bool(simd::simd_active())),
+        (
+            "threads",
+            Json::Num(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1) as f64,
+            ),
+        ),
+        // geomean of interp/compiled ratios; compare `compiled_ms` per
+        // program across commits (CI artifacts) for PR-over-PR compiled
+        // trajectories — the acceptance comparison vs the PR 1 compiled
+        // baseline is a cross-commit diff of those fields
+        ("geomean_basis", Json::Str("interp_vs_compiled".into())),
+        ("speedup_geomean", Json::Num(geomean)),
         ("programs", Json::Arr(rows)),
+        ("kernel_dim", Json::Num(dim as f64)),
+        ("kernels", Json::Arr(krows)),
     ]);
     write_json_report("BENCH_exec.json", &report).expect("writing BENCH_exec.json");
     println!("\nwrote BENCH_exec.json");

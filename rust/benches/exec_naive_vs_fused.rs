@@ -24,6 +24,7 @@ fn main() {
             params,
             inputs,
             local_capacity: None,
+            threads: None,
         };
         let ir_naive = lower(&g);
         let ir_fused = lower(&fused);

@@ -20,6 +20,7 @@ fn main() {
             params,
             inputs,
             local_capacity: None,
+            threads: None,
         };
         let naive = run(&g, &wl);
         let mut t = Table::new(

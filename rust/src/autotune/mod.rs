@@ -15,7 +15,7 @@
 //! many times.
 
 use crate::cost::{analyze, Cost, CostModel, ShapeEnv};
-use crate::exec::{run_lowered_with, ExecBackend, Workload};
+use crate::exec::{run_lowered_cached, ExecBackend, TapeCache, Workload};
 use crate::ir::dim::{Dim, DimSizes};
 use crate::ir::graph::Graph;
 use crate::loopir::interp::MemSim;
@@ -177,9 +177,11 @@ pub struct MeasuredPoint {
 ///
 /// Autotune trials are the hottest caller of the executor, so this is
 /// where the [`ExecBackend`] switch matters most: with
-/// [`ExecBackend::Compiled`] each candidate is flattened once to an
-/// instruction tape and run with multi-threaded grid loops, instead of
-/// tree-walking the `Stmt` nest per trial.
+/// [`ExecBackend::Compiled`] the program structure is compiled **once**
+/// into a size-independent tape skeleton (shared across trials through a
+/// [`TapeCache`]) and each candidate only re-binds trip counts and
+/// stride tables before running with SIMD kernels and multi-threaded
+/// grid loops — instead of tree-walking the `Stmt` nest per trial.
 #[allow(clippy::too_many_arguments)]
 pub fn autotune_measured(
     g: &Graph,
@@ -201,12 +203,14 @@ pub fn autotune_measured(
         params: params.clone(),
         inputs: inputs.clone(),
         local_capacity: None,
+        threads: None,
     };
+    let mut cache = TapeCache::new();
     let mut out = Vec::new();
     for p in static_rank.points.iter().filter(|p| p.feasible).take(trials) {
         w.sizes = p.sizes.clone();
         let t0 = Instant::now();
-        let run = run_lowered_with(&ir, &w, backend);
+        let run = run_lowered_cached(&ir, &w, backend, &mut cache);
         out.push(MeasuredPoint {
             sizes: p.sizes.clone(),
             wall_ns: t0.elapsed().as_nanos(),
@@ -214,6 +218,10 @@ pub fn autotune_measured(
             static_scalar: p.scalar,
         });
     }
+    debug_assert!(
+        backend != ExecBackend::Compiled || cache.misses <= 1,
+        "all trials share one program structure"
+    );
     out.sort_by_key(|m| m.wall_ns);
     out
 }

@@ -75,6 +75,19 @@ pub fn execute_plan_with(
     inputs: &HashMap<String, Mat>,
     backend: ExecBackend,
 ) -> PlanRun {
+    execute_plan_opts(plan, sizes, params, inputs, backend, None)
+}
+
+/// [`execute_plan_with`] plus a worker cap for the compiled engine's
+/// parallel grid loops (the CLI's `--threads`).
+pub fn execute_plan_opts(
+    plan: &SelectionPlan,
+    sizes: &DimSizes,
+    params: &BTreeMap<String, f32>,
+    inputs: &HashMap<String, Mat>,
+    backend: ExecBackend,
+    threads: Option<usize>,
+) -> PlanRun {
     let mut inter: HashMap<(usize, String), BufVal> = HashMap::new();
     let mut outputs = HashMap::new();
     let mut total = MemSim::default();
@@ -84,6 +97,7 @@ pub fn execute_plan_with(
         let ir = lower(&seg.graph);
         let mut cfg = ExecConfig::new(sizes.clone());
         cfg.params = params.clone();
+        cfg.threads = threads;
         for decl in &ir.bufs {
             if !decl.is_input {
                 continue;
@@ -191,6 +205,7 @@ mod tests {
                 params: params.clone(),
                 inputs: inputs.clone(),
                 local_capacity: None,
+                threads: None,
             },
         );
         assert!(run.mem.total_traffic() < naive.mem.total_traffic());

@@ -6,17 +6,31 @@
 //! operator is pre-resolved — no `HashMap` lookups, no per-op allocation
 //! churn, no expression recompilation in the hot loop.
 //!
-//! Top-level `forall` grid loops that passed the compile-time parallel
-//! analysis run their iterations across `std::thread::scope` workers
-//! (no external crates). Each worker owns a private register file, var
-//! file, and [`MemSim`]; it reads shared buffers directly (the analysis
-//! guarantees no buffer is both read and written inside a parallel body)
-//! and defers its stores, which the main thread applies in chunk order
-//! after the join. Counters are merged by summation, so simulated traffic,
-//! flop, and launch counts are **bit-identical** to the sequential
-//! interpreter; `peak_local_bytes` is merged by `max` (it is a scope
-//! approximation in the interpreter already).
+//! **Parallel scheduling.** Every `forall` loop the compile-time analysis
+//! annotated [`LoopMeta::parallel`] may fan its iterations out across
+//! `std::thread::scope` workers (no external crates). Fan-out happens at
+//! the outermost parallel loop the main thread reaches: a parallel
+//! top-level grid always; a parallel loop *nested under a serial outer
+//! loop* when its bind-time executed-instruction weight clears
+//! [`NESTED_FANOUT_MIN_WORK`] (spawning a scope per outer iteration must
+//! be worth it). The region is over-decomposed into up to
+//! [`CHUNKS_PER_WORKER`] chunks per worker and drained through the
+//! work-stealing deques of [`super::sched`], so ragged grids balance.
+//!
+//! Each worker owns a private register file, var file, and [`MemSim`],
+//! **seeded** from the enclosing scope (registers and `Arc`-cloned vars —
+//! the analysis guarantees seeded vars are loop-invariant). Workers read
+//! shared buffers directly (no buffer is both read and written inside a
+//! parallel body) and defer their stores, which the main thread applies
+//! after the join; stores of distinct iterations hit disjoint slots, so
+//! apply order is immaterial. Counters merge by summation, so simulated
+//! traffic, flop, and launch counts are **bit-identical** to the
+//! sequential interpreter; `peak_local_bytes` merges by `max` (a scope
+//! approximation in the interpreter already). With one worker the engine
+//! never leaves the serial path, which keeps even the peak-local
+//! accounting bit-identical (pinned by the threads=1 parity test).
 
+use crate::exec::sched::{split_chunks, StealQueue};
 use crate::loopir::compile::{accum_val, CompiledProgram, Instr, SlotSel};
 use crate::loopir::interp::{BufVal, ExecConfig, ExecResult, MemSim};
 use crate::loopir::BufId;
@@ -24,6 +38,25 @@ use crate::tensor::Val;
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::thread;
+
+/// Hard cap on scheduler workers, whatever `available_parallelism` or
+/// `--threads` claims.
+pub const MAX_WORKERS: usize = 64;
+
+/// Over-decomposition factor: a parallel region is split into up to this
+/// many chunks **per worker**, so the stealing deques can rebalance
+/// ragged grids. `1` would reproduce the old static-chunk schedule.
+pub const CHUNKS_PER_WORKER: usize = 4;
+
+/// Minimum executed-instruction weight ([`crate::loopir::compile::LoopMeta::weight`],
+/// which folds in bound trip counts of nested loops) before a *nested*
+/// parallel loop is worth a `thread::scope` spawn per enclosing
+/// iteration: a spawn+join costs tens of microseconds, one tape
+/// instruction (a block op on a small tile) runs in well under one, so
+/// fan-out below ~1k instructions would lose to the serial path it
+/// replaces. Top-level grids always fan out (their spawn cost is paid
+/// once per kernel, not once per outer iteration).
+pub const NESTED_FANOUT_MIN_WORK: u64 = 1024;
 
 // Global memory is the interpreter's own `BufVal` (Arc payloads): engine
 // setup/teardown moves pointers, never block data, and buffers can be
@@ -58,6 +91,17 @@ impl Sink<'_> {
             Sink::Deferred { pending, .. } => pending.push((buf, flat, v)),
         }
     }
+}
+
+/// What one worker brings back from a parallel region.
+struct WorkerOut {
+    mem: MemSim,
+    pending: Vec<(BufId, usize, Arc<Val>)>,
+    /// Values of the loop's clear-set vars after the final iteration
+    /// (`Some` only for the worker that ran the last chunk) — sequential
+    /// semantics: after a loop, its assigned vars hold the final
+    /// iteration's values.
+    final_vars: Option<Vec<Option<Arc<Val>>>>,
 }
 
 /// Execution state: register file, var file, counters. One per thread.
@@ -108,8 +152,17 @@ impl Machine {
         }
     }
 
-    /// Execute the instruction range `[range.0, range.1)`.
-    fn run_range(&mut self, prog: &CompiledProgram, range: (usize, usize), sink: &mut Sink) {
+    /// Execute the instruction range `[range.0, range.1)`. `par_workers`
+    /// is the fan-out budget for parallel loops met along the way
+    /// (`<= 1` disables fan-out — always the case inside workers, which
+    /// prevents nested thread scopes).
+    fn run_range(
+        &mut self,
+        prog: &CompiledProgram,
+        range: (usize, usize),
+        sink: &mut Sink,
+        par_workers: usize,
+    ) {
         let mut ip = range.0;
         while ip < range.1 {
             match &prog.instrs[ip] {
@@ -118,6 +171,18 @@ impl Machine {
                     if m.start >= m.trip {
                         ip = m.end_ip + 1;
                         continue;
+                    }
+                    if par_workers > 1 && m.parallel {
+                        let iters = m.trip - m.start;
+                        if iters >= 2 && m.weight >= NESTED_FANOUT_MIN_WORK {
+                            if let Sink::Direct(bufs) = sink {
+                                let end = m.end_ip;
+                                let li = *li;
+                                self.run_parallel_loop(prog, li, &mut **bufs, par_workers);
+                                ip = end + 1;
+                                continue;
+                            }
+                        }
                     }
                     self.regs[m.reg] = m.start;
                     for &c in &m.clears {
@@ -218,6 +283,111 @@ impl Machine {
             }
         }
     }
+
+    /// Fan the iterations of parallel loop `li` out across `workers`
+    /// scoped threads via the work-stealing deques, then merge: apply
+    /// deferred stores, sum counters, adopt the final iteration's var
+    /// values, and leave the loop register at its sequential exit value.
+    fn run_parallel_loop(
+        &mut self,
+        prog: &CompiledProgram,
+        li: usize,
+        bufs: &mut Vec<BufVal>,
+        workers: usize,
+    ) {
+        let meta = &prog.loops[li];
+        let chunks = split_chunks(meta.start, meta.trip, workers * CHUNKS_PER_WORKER);
+        debug_assert!(!chunks.is_empty(), "fan-out requires >= 2 iterations");
+        let nw = workers.min(chunks.len());
+        let last_chunk = chunks.len() - 1;
+        let queue = StealQueue::new(nw, chunks);
+        let base_live = self.live;
+        let cap = self.cap;
+        // Workers are seeded with the enclosing scope's registers (outer
+        // loop indices feed buffer accesses inside the body) and var file
+        // (Arc clones; the analysis guarantees seeded vars are read-only
+        // within the body).
+        let seed_regs: Vec<usize> = self.regs.clone();
+        let seed_vars: Vec<Option<Arc<Val>>> = self.vars.clone();
+        let results: Vec<WorkerOut> = thread::scope(|s| {
+            let shared: &[BufVal] = bufs;
+            let queue = &queue;
+            let seed_regs = &seed_regs;
+            let seed_vars = &seed_vars;
+            let handles: Vec<_> = (0..nw)
+                .map(|w| {
+                    s.spawn(move || {
+                        let mut wm = Machine::new(prog.n_regs, prog.n_vars, cap);
+                        wm.regs.copy_from_slice(seed_regs);
+                        wm.vars = seed_vars.clone();
+                        // capacity baseline: the enclosing scope's live
+                        // locals still occupy local memory
+                        wm.live = base_live;
+                        let mut sink = Sink::Deferred {
+                            shared,
+                            pending: Vec::new(),
+                        };
+                        let m = &prog.loops[li];
+                        let mut final_vars: Option<Vec<Option<Arc<Val>>>> = None;
+                        while let Some(chunk) = queue.next(w) {
+                            for x in chunk.lo..chunk.hi {
+                                for &c in &m.clears {
+                                    wm.clear_var(c);
+                                }
+                                wm.regs[m.reg] = x;
+                                wm.run_range(prog, (m.body_ip, m.end_ip), &mut sink, 0);
+                            }
+                            if chunk.id == last_chunk {
+                                final_vars =
+                                    Some(m.clears.iter().map(|&v| wm.vars[v].clone()).collect());
+                            }
+                        }
+                        let pending = match sink {
+                            Sink::Deferred { pending, .. } => pending,
+                            Sink::Direct(_) => unreachable!(),
+                        };
+                        WorkerOut {
+                            mem: wm.mem,
+                            pending,
+                            final_vars,
+                        }
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    // re-raise with the original payload so capacity and
+                    // read-before-assignment diagnostics survive threading
+                    Err(p) => std::panic::resume_unwind(p),
+                })
+                .collect()
+        });
+        for wo in results {
+            for (b, f, v) in wo.pending {
+                bufs[b].data[f] = Some(v);
+            }
+            self.mem.loaded_bytes += wo.mem.loaded_bytes;
+            self.mem.stored_bytes += wo.mem.stored_bytes;
+            self.mem.n_loads += wo.mem.n_loads;
+            self.mem.n_stores += wo.mem.n_stores;
+            self.mem.flops += wo.mem.flops;
+            self.mem.kernel_launches += wo.mem.kernel_launches;
+            self.mem.peak_local_bytes = self.mem.peak_local_bytes.max(wo.mem.peak_local_bytes);
+            if let Some(fv) = wo.final_vars {
+                for (&v, val) in prog.loops[li].clears.iter().zip(fv) {
+                    match val {
+                        Some(a) => self.set_var(v, a),
+                        None => self.clear_var(v),
+                    }
+                }
+            }
+        }
+        // sequential register semantics: after the loop, its register
+        // holds the final iteration's index
+        self.regs[prog.loops[li].reg] = prog.loops[li].trip - 1;
+    }
 }
 
 /// Row-major enumeration of the flat indices selected by a partial index
@@ -286,7 +456,7 @@ pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
                 .map(|n| n.get())
                 .unwrap_or(1)
         })
-        .clamp(1, 64);
+        .clamp(1, MAX_WORKERS);
 
     let mut mach = Machine::new(prog.n_regs, prog.n_vars, cfg.local_capacity);
 
@@ -294,96 +464,24 @@ pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
         if top.kernel {
             mach.mem.kernel_launches += 1;
         }
-        let par = if workers > 1 { top.par_loop } else { None };
-        let li = match par {
-            Some(li) => li,
+        // A parallel top-level grid fans out unconditionally (spawn cost
+        // is once per kernel); anything else runs serially on the main
+        // machine, fanning out nested parallel loops it encounters.
+        let top_li = match prog.instrs.get(top.ips.0) {
+            Some(Instr::LoopBegin(li))
+                if workers > 1
+                    && prog.loops[*li].parallel
+                    && prog.loops[*li].trip.saturating_sub(prog.loops[*li].start) >= 2 =>
+            {
+                Some(*li)
+            }
+            _ => None,
+        };
+        match top_li {
+            Some(li) => mach.run_parallel_loop(prog, li, &mut bufs, workers),
             None => {
                 let mut sink = Sink::Direct(&mut bufs);
-                mach.run_range(prog, top.ips, &mut sink);
-                continue;
-            }
-        };
-        let meta = &prog.loops[li];
-        let iters = meta.trip.saturating_sub(meta.start);
-        if iters < 2 {
-            let mut sink = Sink::Direct(&mut bufs);
-            mach.run_range(prog, top.ips, &mut sink);
-            continue;
-        }
-        // contiguous, non-empty chunks of the grid range (ceil division)
-        let nw = workers.min(iters);
-        let chunk = iters / nw + usize::from(iters % nw != 0);
-        let ranges: Vec<(usize, usize)> = (0..nw)
-            .map(|w| {
-                let lo = meta.start + w * chunk;
-                let hi = (lo + chunk).min(meta.trip);
-                (lo, hi)
-            })
-            .filter(|(lo, hi)| lo < hi)
-            .collect();
-        let base_live = mach.live;
-        let cap = cfg.local_capacity;
-        let results: Vec<(Machine, Vec<(BufId, usize, Arc<Val>)>)> = thread::scope(|s| {
-            let shared: &Vec<BufVal> = &bufs;
-            let handles: Vec<_> = ranges
-                .iter()
-                .map(|&(lo, hi)| {
-                    s.spawn(move || {
-                        let mut wm = Machine::new(prog.n_regs, prog.n_vars, cap);
-                        // capacity baseline: the enclosing scope's live
-                        // locals still occupy local memory
-                        wm.live = base_live;
-                        let mut sink = Sink::Deferred {
-                            shared,
-                            pending: Vec::new(),
-                        };
-                        let m = &prog.loops[li];
-                        for x in lo..hi {
-                            for &c in &m.clears {
-                                wm.clear_var(c);
-                            }
-                            wm.regs[m.reg] = x;
-                            wm.run_range(prog, (m.body_ip, m.end_ip), &mut sink);
-                        }
-                        let pending = match sink {
-                            Sink::Deferred { pending, .. } => pending,
-                            Sink::Direct(_) => unreachable!(),
-                        };
-                        (wm, pending)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| match h.join() {
-                    Ok(r) => r,
-                    // re-raise with the original payload so capacity and
-                    // read-before-assignment diagnostics survive threading
-                    Err(p) => std::panic::resume_unwind(p),
-                })
-                .collect()
-        });
-        let last = results.len() - 1;
-        for (wi, (wm, pending)) in results.into_iter().enumerate() {
-            for (b, f, v) in pending {
-                bufs[b].data[f] = Some(v);
-            }
-            mach.mem.loaded_bytes += wm.mem.loaded_bytes;
-            mach.mem.stored_bytes += wm.mem.stored_bytes;
-            mach.mem.n_loads += wm.mem.n_loads;
-            mach.mem.n_stores += wm.mem.n_stores;
-            mach.mem.flops += wm.mem.flops;
-            mach.mem.kernel_launches += wm.mem.kernel_launches;
-            mach.mem.peak_local_bytes = mach.mem.peak_local_bytes.max(wm.mem.peak_local_bytes);
-            if wi == last {
-                // sequential semantics: after the loop, its assigned vars
-                // hold the final iteration's values
-                for &v in &prog.loops[li].clears {
-                    match &wm.vars[v] {
-                        Some(a) => mach.set_var(v, a.clone()),
-                        None => mach.clear_var(v),
-                    }
-                }
+                mach.run_range(prog, top.ips, &mut sink, workers);
             }
         }
     }
@@ -403,13 +501,14 @@ pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::dim::DimSizes;
+    use crate::ir::dim::{Dim, DimSizes};
     use crate::ir::expr::Expr;
     use crate::ir::graph::{map_over, ArgMode, Graph};
     use crate::ir::types::Ty;
     use crate::loopir::compile::compile;
     use crate::loopir::interp::exec;
     use crate::loopir::lower::lower;
+    use crate::loopir::{analyze_clears, BufDecl, COp, Index, LoopIr, LoopKind, Stmt};
     use crate::tensor::Rng;
 
     fn block_list(rng: &mut Rng, n: usize, r: usize, c: usize) -> BufVal {
@@ -473,5 +572,210 @@ mod tests {
         cfg.threads = Some(1);
         let prog = compile(&ir, &cfg);
         let _ = exec_compiled(&prog, &cfg);
+    }
+
+    /// The scheduler constants must stay self-consistent: the chunk split
+    /// derived from them tiles any range exactly, and one worker never
+    /// over-decomposes below one iteration per chunk.
+    #[test]
+    fn scheduler_constants_invariant() {
+        assert!(MAX_WORKERS >= 1);
+        assert!(CHUNKS_PER_WORKER >= 1);
+        for workers in [1usize, 2, 7, MAX_WORKERS] {
+            for (start, trip) in [(0usize, 5usize), (1, 33), (0, 257)] {
+                let chunks = split_chunks(start, trip, workers * CHUNKS_PER_WORKER);
+                assert!(chunks.len() <= workers * CHUNKS_PER_WORKER);
+                let covered: usize = chunks.iter().map(|c| c.hi - c.lo).sum();
+                assert_eq!(covered, trip - start);
+            }
+        }
+    }
+
+    /// for m (serial) { forall n (parallel) { ... } } — the nested grid
+    /// must fan out and still match the interpreter bit for bit,
+    /// counters included.
+    #[test]
+    fn nested_parallel_loop_matches_interpreter() {
+        let (m, n) = (Dim::new("M"), Dim::new("N"));
+        let buf = |name: &str, is_input: bool| BufDecl {
+            name: name.into(),
+            dims: vec![m.clone(), n.clone()],
+            item: crate::ir::types::Item::Block,
+            is_input,
+            is_output: !is_input,
+        };
+        let mut ir = LoopIr {
+            bufs: vec![buf("A", true), buf("B", false)],
+            body: vec![Stmt::Loop {
+                kind: LoopKind::For,
+                dim: m.clone(),
+                skip_first: false,
+                clears: vec![],
+                body: vec![Stmt::Loop {
+                    kind: LoopKind::ForAll,
+                    dim: n.clone(),
+                    skip_first: false,
+                    clears: vec![],
+                    body: vec![
+                        Stmt::Load {
+                            var: 0,
+                            buf: 0,
+                            idx: vec![Index::Iter(m.clone()), Index::Iter(n.clone())],
+                        },
+                        Stmt::Compute {
+                            var: 1,
+                            op: COp::Func(crate::ir::func::FuncOp::Mul),
+                            args: vec![0, 0],
+                        },
+                        Stmt::Store {
+                            var: 1,
+                            buf: 1,
+                            idx: vec![Index::Iter(m.clone()), Index::Iter(n.clone())],
+                        },
+                    ],
+                }],
+            }],
+            n_vars: 2,
+            params: vec![],
+        };
+        analyze_clears(&mut ir);
+
+        let mut rng = Rng::new(31);
+        // inner grid must clear NESTED_FANOUT_MIN_WORK: 512 × 3 instrs
+        let (mm, nn) = (3usize, 512usize);
+        let mut bv = BufVal::new(vec![mm, nn]);
+        for i in 0..mm {
+            for j in 0..nn {
+                bv.set(&[i, j], Val::Block(rng.mat(4, 4)));
+            }
+        }
+        let mut cfg = ExecConfig::new(DimSizes::of(&[("M", mm), ("N", nn)]));
+        cfg.inputs.insert("A".into(), bv);
+        let want = exec(&ir, &cfg);
+        for threads in [2usize, 4] {
+            let mut c2 = cfg.clone();
+            c2.threads = Some(threads);
+            let prog = compile(&ir, &c2);
+            assert!(!prog.loops[0].parallel && prog.loops[1].parallel);
+            assert!(
+                prog.loops[1].weight >= NESTED_FANOUT_MIN_WORK,
+                "test grid must actually fan out (weight {})",
+                prog.loops[1].weight
+            );
+            let got = exec_compiled(&prog, &c2);
+            for i in 0..mm {
+                for j in 0..nn {
+                    assert_eq!(
+                        want.outputs["B"].get(&[i, j]),
+                        got.outputs["B"].get(&[i, j]),
+                        "threads={threads} slot ({i},{j})"
+                    );
+                }
+            }
+            assert_eq!(want.mem.loaded_bytes, got.mem.loaded_bytes);
+            assert_eq!(want.mem.stored_bytes, got.mem.stored_bytes);
+            assert_eq!(want.mem.n_loads, got.mem.n_loads);
+            assert_eq!(want.mem.n_stores, got.mem.n_stores);
+            assert_eq!(want.mem.flops, got.mem.flops);
+            assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches);
+        }
+    }
+
+    /// A parallel grid reading a var assigned by an *earlier* top-level
+    /// nest (loop-invariant free read): workers must see the seeded
+    /// value and agree with the interpreter exactly.
+    #[test]
+    fn seeded_free_var_matches_interpreter() {
+        let n = Dim::new("N");
+        let buf = |name: &str, is_input: bool, is_output: bool| BufDecl {
+            name: name.into(),
+            dims: vec![n.clone()],
+            item: crate::ir::types::Item::Block,
+            is_input,
+            is_output,
+        };
+        // top0: forall i { t0 = load A[i]; t1 = t0+t0; store t1 -> B[i] }
+        //   (after the loop t1 holds 2·A[N-1])
+        // top1: forall i { t2 = load A[i]; t3 = t2+t1; store t3 -> C[i] }
+        //   (t1 is a loop-invariant free read seeded into workers)
+        let grid = |dst: usize, body: Vec<Stmt>| Stmt::Loop {
+            kind: LoopKind::ForAll,
+            dim: n.clone(),
+            skip_first: false,
+            clears: vec![],
+            body: {
+                let mut b = body;
+                b.push(Stmt::Store {
+                    var: dst,
+                    buf: if dst == 1 { 1 } else { 2 },
+                    idx: vec![Index::Iter(n.clone())],
+                });
+                b
+            },
+        };
+        let mut ir = LoopIr {
+            bufs: vec![
+                buf("A", true, false),
+                buf("B", false, true),
+                buf("C", false, true),
+            ],
+            body: vec![
+                grid(
+                    1,
+                    vec![
+                        Stmt::Load {
+                            var: 0,
+                            buf: 0,
+                            idx: vec![Index::Iter(n.clone())],
+                        },
+                        Stmt::Compute {
+                            var: 1,
+                            op: COp::Func(crate::ir::func::FuncOp::Add),
+                            args: vec![0, 0],
+                        },
+                    ],
+                ),
+                grid(
+                    3,
+                    vec![
+                        Stmt::Load {
+                            var: 2,
+                            buf: 0,
+                            idx: vec![Index::Iter(n.clone())],
+                        },
+                        Stmt::Compute {
+                            var: 3,
+                            op: COp::Func(crate::ir::func::FuncOp::Add),
+                            args: vec![2, 1],
+                        },
+                    ],
+                ),
+            ],
+            n_vars: 4,
+            params: vec![],
+        };
+        analyze_clears(&mut ir);
+
+        let mut rng = Rng::new(77);
+        let input = block_list(&mut rng, 12, 4, 4);
+        let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 12)]));
+        cfg.inputs.insert("A".into(), input);
+        let want = exec(&ir, &cfg);
+        let mut c2 = cfg.clone();
+        c2.threads = Some(4);
+        let prog = compile(&ir, &c2);
+        assert_eq!(prog.parallel_grid_loops(), 2, "both grids parallel");
+        let got = exec_compiled(&prog, &c2);
+        for out in ["B", "C"] {
+            for i in 0..12 {
+                assert_eq!(
+                    want.outputs[out].get(&[i]),
+                    got.outputs[out].get(&[i]),
+                    "output {out} slot {i}"
+                );
+            }
+        }
+        assert_eq!(want.mem.flops, got.mem.flops);
+        assert_eq!(want.mem.loaded_bytes, got.mem.loaded_bytes);
     }
 }

@@ -11,21 +11,40 @@
 //! * [`ExecBackend::Interp`] — the tree-walking interpreter
 //!   (`loopir::interp`), the semantic ground truth;
 //! * [`ExecBackend::Compiled`] — `loopir::compile` flattens the program to
-//!   an instruction tape that [`engine`] executes, fanning independent
-//!   grid-loop iterations across threads. Outputs and traffic counters are
-//!   bit-identical to the interpreter; wall-clock is several times faster,
-//!   which is what makes autotune trials and large benches tractable.
+//!   an instruction tape that [`engine`] executes. Outputs and traffic
+//!   counters are bit-identical to the interpreter; wall-clock is several
+//!   times faster, which is what makes autotune trials and large benches
+//!   tractable.
+//!
+//! The compiled path stacks three mechanisms (PR 2):
+//!
+//! * **SIMD kernels** — the block operators bottom out in
+//!   [`crate::tensor::simd`]'s explicit-width kernels (AVX2 with a
+//!   bit-identical scalar fallback; `simd` cargo feature, runtime
+//!   `--no-simd` kill-switch);
+//! * **work-stealing scheduler** — parallel grid loops (top-level *or*
+//!   nested under a serial loop, per [`crate::loopir::compile`]'s
+//!   per-loop annotations) are over-decomposed into chunks and drained
+//!   through [`sched`]'s stealing deques across `std::thread::scope`
+//!   workers (`Workload::threads` / `--threads` caps the worker count);
+//! * **tape caching** — compilation is split into a size-independent
+//!   [`TapeSkeleton`] and a cheap per-`DimSizes` bind; [`TapeCache`]
+//!   shares skeletons across executions that differ only in block
+//!   counts, which is exactly the autotuner's measured-trial loop.
 
 pub mod engine;
 pub mod reference;
+pub mod sched;
 
 use crate::ir::dim::DimSizes;
 use crate::ir::graph::Graph;
+use crate::loopir::compile::{compile_skeleton, TapeSkeleton};
 use crate::loopir::interp::{exec, BufVal, ExecConfig, ExecResult, MemSim};
 use crate::loopir::lower::lower;
 use crate::loopir::LoopIr;
 use crate::tensor::{Mat, Val};
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
 /// Which executor runs a lowered block program.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
@@ -59,7 +78,8 @@ impl ExecBackend {
 /// `Compiled` flattens the tape on each call; callers that execute one
 /// program many times under the *same* config (benches, measurement
 /// loops) can amortize by calling `loopir::compile::compile` once and
-/// `engine::exec_compiled` per run.
+/// `engine::exec_compiled` per run; callers that vary only `DimSizes`
+/// across runs should go through [`TapeCache`] instead.
 pub fn exec_ir(ir: &LoopIr, cfg: &ExecConfig, backend: ExecBackend) -> ExecResult {
     match backend {
         ExecBackend::Interp => exec(ir, cfg),
@@ -67,6 +87,76 @@ pub fn exec_ir(ir: &LoopIr, cfg: &ExecConfig, backend: ExecBackend) -> ExecResul
             let prog = crate::loopir::compile::compile(ir, cfg);
             engine::exec_compiled(&prog, cfg)
         }
+    }
+}
+
+/// Cross-trial compiled-tape cache, keyed by **program structure** (the
+/// full structural dump of the Loop IR plus scalar params — everything
+/// except `DimSizes`) and backend name. The key stores the dump itself,
+/// not a hash of it, so two distinct programs can never alias an entry.
+///
+/// The autotuner probes one lowered program under many block-count
+/// assignments; without the cache every trial re-ran the whole
+/// compilation (operator resolution, elementwise-expression compilation,
+/// parallel-safety analysis, tape layout). With it, the size-independent
+/// [`TapeSkeleton`] is built once per structure and each trial only
+/// re-binds trip counts and stride tables ([`TapeSkeleton::bind`]).
+///
+/// The misc-op registries are resolved into the skeleton but not part of
+/// the key: use one cache per registry (every current caller does).
+pub struct TapeCache {
+    entries: HashMap<(String, &'static str), Arc<TapeSkeleton>>,
+    /// Lookups served from the cache (telemetry for tests/benches).
+    pub hits: u64,
+    /// Lookups that compiled a fresh skeleton.
+    pub misses: u64,
+}
+
+impl TapeCache {
+    pub fn new() -> TapeCache {
+        TapeCache {
+            entries: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Structural key: buffers, body, var count, and scalar params (dims
+    /// appear by *name* only, so all `DimSizes` bindings of one program
+    /// share a key). Exact — compared by equality, never by hash alone.
+    fn fingerprint(ir: &LoopIr, cfg: &ExecConfig) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = write!(s, "{:?}|{:?}|{}", ir.bufs, ir.body, ir.n_vars);
+        for (k, v) in &cfg.params {
+            let _ = write!(s, "|{k}={:08x}", v.to_bits());
+        }
+        s
+    }
+
+    /// The skeleton for `ir` under `cfg`'s params, compiled at most once
+    /// per (structure, backend) key.
+    pub fn skeleton(
+        &mut self,
+        ir: &LoopIr,
+        cfg: &ExecConfig,
+        backend: ExecBackend,
+    ) -> Arc<TapeSkeleton> {
+        let key = (Self::fingerprint(ir, cfg), backend.name());
+        if let Some(s) = self.entries.get(&key) {
+            self.hits += 1;
+            return s.clone();
+        }
+        self.misses += 1;
+        let s = Arc::new(compile_skeleton(ir, cfg));
+        self.entries.insert(key, s.clone());
+        s
+    }
+}
+
+impl Default for TapeCache {
+    fn default() -> Self {
+        TapeCache::new()
     }
 }
 
@@ -104,12 +194,15 @@ pub fn from_blocks(bv: &BufVal) -> Mat {
 }
 
 /// A ready-to-run workload: dim sizes (block counts), scalar params, full
-/// input matrices, optional local-memory capacity.
+/// input matrices, optional local-memory capacity, optional worker cap.
 pub struct Workload {
     pub sizes: DimSizes,
     pub params: BTreeMap<String, f32>,
     pub inputs: HashMap<String, Mat>,
     pub local_capacity: Option<u64>,
+    /// Worker cap for the compiled engine's parallel grid loops (`None`
+    /// = one per available core); the interpreter ignores it.
+    pub threads: Option<usize>,
 }
 
 impl Workload {
@@ -119,6 +212,7 @@ impl Workload {
             params: BTreeMap::new(),
             inputs: HashMap::new(),
             local_capacity: None,
+            threads: None,
         }
     }
 
@@ -129,6 +223,11 @@ impl Workload {
 
     pub fn param(mut self, name: &str, v: f32) -> Self {
         self.params.insert(name.into(), v);
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
         self
     }
 }
@@ -154,11 +253,13 @@ pub fn run_lowered(ir: &LoopIr, w: &Workload) -> RunResult {
     run_lowered_with(ir, w, ExecBackend::Interp)
 }
 
-/// Run an already-lowered program on the chosen backend.
-pub fn run_lowered_with(ir: &LoopIr, w: &Workload, backend: ExecBackend) -> RunResult {
+/// Build the blocked `ExecConfig` for a workload (splitting every full
+/// input matrix into its block grid).
+fn build_cfg(ir: &LoopIr, w: &Workload) -> ExecConfig {
     let mut cfg = ExecConfig::new(w.sizes.clone());
     cfg.params = w.params.clone();
     cfg.local_capacity = w.local_capacity;
+    cfg.threads = w.threads;
     for decl in &ir.bufs {
         if !decl.is_input {
             continue;
@@ -177,7 +278,10 @@ pub fn run_lowered_with(ir: &LoopIr, w: &Workload, backend: ExecBackend) -> RunR
         let cb = w.sizes.get(&decl.dims[1]);
         cfg.inputs.insert(decl.name.clone(), to_blocks(m, rb, cb));
     }
-    let res = exec_ir(ir, &cfg, backend);
+    cfg
+}
+
+fn unblock(res: ExecResult) -> RunResult {
     let outputs = res
         .outputs
         .iter()
@@ -187,6 +291,33 @@ pub fn run_lowered_with(ir: &LoopIr, w: &Workload, backend: ExecBackend) -> RunR
         outputs,
         mem: res.mem,
     }
+}
+
+/// Run an already-lowered program on the chosen backend.
+pub fn run_lowered_with(ir: &LoopIr, w: &Workload, backend: ExecBackend) -> RunResult {
+    let cfg = build_cfg(ir, w);
+    unblock(exec_ir(ir, &cfg, backend))
+}
+
+/// Like [`run_lowered_with`], but the compiled backend pulls its tape
+/// skeleton from `cache` and only binds the workload's `DimSizes` —
+/// the autotuner's measured-trial path.
+pub fn run_lowered_cached(
+    ir: &LoopIr,
+    w: &Workload,
+    backend: ExecBackend,
+    cache: &mut TapeCache,
+) -> RunResult {
+    let cfg = build_cfg(ir, w);
+    let res = match backend {
+        ExecBackend::Interp => exec(ir, &cfg),
+        ExecBackend::Compiled => {
+            let skel = cache.skeleton(ir, &cfg, backend);
+            let prog = skel.bind(&cfg.sizes);
+            engine::exec_compiled(&prog, &cfg)
+        }
+    };
+    unblock(res)
 }
 
 #[cfg(test)]
@@ -210,5 +341,41 @@ mod tests {
         let mut rng = Rng::new(5);
         let m = rng.mat(5, 8);
         to_blocks(&m, 3, 2);
+    }
+
+    /// The tape cache: one skeleton compile per program structure, and
+    /// cached executions bit-identical to uncached ones across different
+    /// `DimSizes` bindings of the same program.
+    #[test]
+    fn tape_cache_rebinds_across_sizes() {
+        use crate::ir::expr::Expr;
+        use crate::ir::graph::{map_over, ArgMode};
+        let mut g = Graph::new();
+        let a = g.input("A", crate::ir::types::Ty::blocks(&["M", "N"]));
+        let o = map_over(&mut g, "M", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let inner = map_over(&mut mb.g, "N", &[(ins[0], ArgMode::Mapped)], |mb2, ins2| {
+                let r = mb2.g.ew1(Expr::var(0).exp(), ins2[0]);
+                mb2.collect(r);
+            });
+            mb.collect(inner[0]);
+        });
+        g.output("B", o[0]);
+        let ir = lower(&g);
+
+        let mut rng = Rng::new(13);
+        let input = rng.mat(16, 16);
+        let mut cache = TapeCache::new();
+        for (mb, nb) in [(2usize, 4usize), (4, 2), (8, 8)] {
+            let w = Workload::new(DimSizes::of(&[("M", mb), ("N", nb)]))
+                .input("A", input.clone())
+                .threads(2);
+            let plain = run_lowered_with(&ir, &w, ExecBackend::Compiled);
+            let cached = run_lowered_cached(&ir, &w, ExecBackend::Compiled, &mut cache);
+            assert_eq!(plain.outputs["B"], cached.outputs["B"], "({mb},{nb})");
+            assert_eq!(plain.mem.loaded_bytes, cached.mem.loaded_bytes);
+            assert_eq!(plain.mem.flops, cached.mem.flops);
+        }
+        assert_eq!(cache.misses, 1, "one skeleton for all three bindings");
+        assert_eq!(cache.hits, 2);
     }
 }

@@ -16,16 +16,25 @@
 //!   contract the paper defers to its companion paper.
 //! * [`loopir`] — the loop-nest IR used to print the paper's code listings,
 //!   to statically analyse memory traffic, and to execute block programs.
-//!   `loopir::compile` flattens the loop nest into a linear instruction
-//!   tape: trip counts and buffer strides pre-resolved, elementwise
-//!   expressions pre-compiled, top-level grid loops analyzed for parallel
-//!   safety.
+//!   `loopir::compile` flattens the loop nest in two phases: a
+//!   size-independent **tape skeleton** (trip counts symbolic, elementwise
+//!   expressions pre-compiled, every `forall` — top-level or nested —
+//!   carrying a parallel-safety annotation) plus a cheap per-`DimSizes`
+//!   **bind** of trip counts and stride tables.
+//! * [`tensor`] — the dense f32 substrate; its hot kernels sit on
+//!   `tensor::simd`, an explicit 8-lane SIMD layer (runtime-dispatched
+//!   AVX2 behind the `simd` cargo feature, with a scalar fallback that
+//!   follows the identical canonical reduction order — so vector and
+//!   scalar results are bit-identical).
 //! * [`exec`] — a two-tier-memory execution substrate that runs block
 //!   programs on concrete data behind an `ExecBackend` switch:
 //!   `Interp` tree-walks the loop nest (the semantic ground truth),
-//!   `Compiled` executes the flat tape with multi-threaded grid loops —
-//!   bit-identical outputs and traffic counters, several times faster
-//!   (autotune trials and benches are the hot callers).
+//!   `Compiled` executes the flat tape with SIMD kernels and a
+//!   work-stealing grid-loop scheduler (`exec::sched`), fanning out
+//!   nested grids when the top level is serial — bit-identical outputs
+//!   and traffic counters, several times faster. `exec::TapeCache`
+//!   shares tape skeletons across executions that differ only in block
+//!   counts (the autotuner's measured-trial loop).
 //! * [`cost`] + [`autotune`] — the traffic/compute cost model and the block
 //!   shape autotuner the paper's epilogues rely on.
 //! * [`stabilize`] — the Appendix's numerical-safety pass

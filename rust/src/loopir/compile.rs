@@ -4,28 +4,29 @@
 //! index through a `HashMap<Dim, usize>` and recompiles every elementwise
 //! expression each time it executes — fine as a semantic ground truth,
 //! far too slow to demonstrate fusion wins at realistic sizes. This pass
-//! removes all of that ahead of time:
+//! removes all of that ahead of time, in **two phases**:
 //!
-//! * loop dims are resolved to integer **trip counts** and one integer
-//!   register per loop site (no name lookups in the hot loop);
-//! * buffer accesses become precomputed **stride terms**
-//!   (`flat = Σ reg·stride`), so a load is an array index, not a
-//!   `Vec<usize>` build plus a rank-checked walk;
-//! * elementwise expressions and miscellaneous-op callbacks are resolved
-//!   **once** into [`ComputeKind`] (a [`CompiledExpr`] tape / fn pointer);
-//! * top-level `forall` grid loops are statically analyzed for
-//!   parallel safety ([`TopRange::par_loop`]) so the engine
-//!   ([`crate::exec::engine`]) can fan their iterations out across
-//!   `std::thread::scope` workers while staying bit-identical to the
-//!   sequential interpreter.
+//! 1. [`compile_skeleton`] produces a size-independent [`TapeSkeleton`]:
+//!    the flat instruction tape, loop registers, elementwise expressions
+//!    pre-compiled to [`ComputeKind`], miscellaneous-op callbacks
+//!    pre-resolved, buffer accesses reduced to `(register, axis)` stride
+//!    terms, and a **per-loop parallel-safety annotation**
+//!    ([`LoopMeta::parallel`], analyzed structurally — trip counts play
+//!    no role) that marks every `forall` whose iterations the engine may
+//!    fan out, whether the loop is top-level or nested under a serial
+//!    loop.
+//! 2. [`TapeSkeleton::bind`] specializes the skeleton to one concrete
+//!    [`DimSizes`]: integer trip counts, buffer extents, and row-major
+//!    stride tables. Binding is a cheap table rebuild — callers that
+//!    execute one program structure under many size assignments (the
+//!    autotuner's measured trials, via [`crate::exec::TapeCache`])
+//!    compile the skeleton once and re-bind per trial.
 //!
-//! Compilation needs the concrete [`ExecConfig`] (sizes, params, misc-op
-//! registries); the product is a [`CompiledProgram`] that can be executed
-//! many times — autotune trials and benches amortize it.
+//! [`compile`] runs both phases back to back for one-shot callers.
 
 use super::interp::ExecConfig;
 use super::{BufId, COp, Index, LoopIr, LoopKind, Stmt, VarId};
-use crate::ir::dim::Dim;
+use crate::ir::dim::{Dim, DimSizes};
 use crate::ir::expr::CompiledExpr;
 use crate::ir::func::{FuncOp, ReduceOp};
 use crate::tensor::{Mat, Val};
@@ -42,7 +43,7 @@ pub fn accum_val(acc: Option<&Val>, op: ReduceOp, src: Arc<Val>) -> (Arc<Val>, u
         (None, _) => (src, 0),
         (Some(a), ReduceOp::Add) => {
             let fl = (src.bytes() / 4) as u64;
-            (Arc::new(a.zip(&src, |x, y| x + y)), fl)
+            (Arc::new(a.add(&src)), fl)
         }
         (Some(a), ReduceOp::Max) => (Arc::new(a.zip(&src, f32::max)), 0),
     }
@@ -83,6 +84,14 @@ pub struct LoopMeta {
     pub end_ip: usize,
     /// Vars reset at the top of every iteration (from [`Stmt::Loop`]).
     pub clears: Vec<VarId>,
+    /// This `forall`'s iterations passed the parallel-safety analysis:
+    /// the engine may run them concurrently (fanning out at the
+    /// outermost such loop it reaches on the main thread).
+    pub parallel: bool,
+    /// Tape instructions executed by one full run of this loop (bound
+    /// trip counts of nested loops folded in) — the engine's cost proxy
+    /// for whether a nested fan-out is worth a thread-scope spawn.
+    pub weight: u64,
 }
 
 /// One slot of a (possibly partial) miscellaneous-call buffer index.
@@ -183,12 +192,12 @@ impl ComputeKind {
     pub fn apply(&self, args: &[&Val], stack: &mut Vec<f32>) -> (Val, u64) {
         match self {
             ComputeKind::Add => {
-                let v = args[0].zip(args[1], |a, b| a + b);
+                let v = args[0].add(args[1]);
                 let fl = (v.bytes() / 4) as u64;
                 (v, fl)
             }
             ComputeKind::Mul => {
-                let v = args[0].zip(args[1], |a, b| a * b);
+                let v = args[0].mul(args[1]);
                 let fl = (v.bytes() / 4) as u64;
                 (v, fl)
             }
@@ -294,14 +303,13 @@ pub struct BufMeta {
     pub is_output: bool,
 }
 
-/// One top-level statement of the program: its instruction range, whether
-/// it counts as a kernel launch, and — for `forall` grid loops that passed
-/// the parallel-safety analysis — the loop id the engine may fan out.
+/// One top-level statement of the program: its instruction range and
+/// whether it counts as a kernel launch. (Which loops may fan out is a
+/// per-loop property now — see [`LoopMeta::parallel`].)
 #[derive(Clone, Debug)]
 pub struct TopRange {
     pub ips: (usize, usize),
     pub kernel: bool,
-    pub par_loop: Option<usize>,
 }
 
 /// A fully lowered, ready-to-execute program.
@@ -319,30 +327,218 @@ pub struct CompiledProgram {
 }
 
 impl CompiledProgram {
-    /// Grid loops the engine is allowed to run multi-threaded.
+    /// Grid loops the engine is allowed to run multi-threaded (top-level
+    /// or nested).
     pub fn parallel_grid_loops(&self) -> usize {
-        self.tops.iter().filter(|t| t.par_loop.is_some()).count()
+        self.loops.iter().filter(|l| l.parallel).count()
     }
 }
 
-/// Flatten `ir` against the concrete `cfg` (sizes, params, misc registry).
+// ---------------------------------------------------------------------------
+// Size-independent skeleton
+// ---------------------------------------------------------------------------
+
+/// A loop site before sizes are known: the trip count is still a [`Dim`].
+#[derive(Clone, Debug)]
+pub struct SymLoop {
+    pub reg: Reg,
+    pub dim: Dim,
+    pub start: usize,
+    pub body_ip: usize,
+    pub end_ip: usize,
+    pub clears: Vec<VarId>,
+    pub parallel: bool,
+}
+
+/// A buffer access before sizes are known: `(register, buffer axis)`
+/// terms; the axis stride is looked up at bind time.
+#[derive(Clone, Debug)]
+pub struct SymAccess {
+    pub buf: BufId,
+    pub terms: Vec<(Reg, usize)>,
+}
+
+/// A miscellaneous-call index slot before sizes are known.
+#[derive(Clone, Debug)]
+pub enum SymSlot {
+    Reg(Reg),
+    Fixed(usize),
+    /// Ranges over the whole axis; the extent is bound per `DimSizes`.
+    All,
+}
+
+/// A miscellaneous-call site before sizes are known.
+#[derive(Clone)]
+pub struct SymMisc {
+    pub tag: String,
+    pub f: fn(&[Vec<Val>]) -> Vec<Val>,
+    pub args: Vec<(BufId, Vec<SymSlot>)>,
+    pub out: (BufId, Vec<SymSlot>),
+}
+
+impl std::fmt::Debug for SymMisc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SymMisc")
+            .field("tag", &self.tag)
+            .field("args", &self.args)
+            .field("out", &self.out)
+            .finish()
+    }
+}
+
+/// A buffer declaration before sizes are known.
+#[derive(Clone, Debug)]
+pub struct SymBuf {
+    pub name: String,
+    pub dims: Vec<Dim>,
+    pub is_input: bool,
+    pub is_output: bool,
+}
+
+/// The size-independent product of phase 1: everything in a
+/// [`CompiledProgram`] except trip counts, buffer extents, and stride
+/// tables. Immutable and shareable (`Arc`) across threads and autotune
+/// trials; see [`crate::exec::TapeCache`].
+#[derive(Clone, Debug)]
+pub struct TapeSkeleton {
+    pub instrs: Vec<Instr>,
+    pub loops: Vec<SymLoop>,
+    pub accesses: Vec<SymAccess>,
+    pub computes: Vec<ComputeSite>,
+    pub miscs: Vec<SymMisc>,
+    pub bufs: Vec<SymBuf>,
+    pub tops: Vec<TopRange>,
+    pub n_vars: usize,
+    pub n_regs: usize,
+}
+
+fn bind_slots(sels: &[SymSlot], buf: &BufMeta) -> Vec<SlotSel> {
+    sels.iter()
+        .enumerate()
+        .map(|(i, s)| match s {
+            SymSlot::Reg(r) => SlotSel::Reg(*r),
+            SymSlot::Fixed(c) => SlotSel::Fixed(*c),
+            SymSlot::All => SlotSel::All(buf.dims[i]),
+        })
+        .collect()
+}
+
+impl TapeSkeleton {
+    /// Phase 2: specialize to one concrete size assignment. Only trip
+    /// counts, buffer extents, and stride tables are computed here — the
+    /// tape, operator resolution, and parallel annotations carry over.
+    pub fn bind(&self, sizes: &DimSizes) -> CompiledProgram {
+        let bufs: Vec<BufMeta> = self
+            .bufs
+            .iter()
+            .map(|b| {
+                let dims: Vec<usize> = b.dims.iter().map(|d| sizes.get(d)).collect();
+                let mut strides = vec![1usize; dims.len()];
+                for i in (0..dims.len().saturating_sub(1)).rev() {
+                    strides[i] = strides[i + 1] * dims[i + 1];
+                }
+                BufMeta {
+                    name: b.name.clone(),
+                    dims,
+                    strides,
+                    is_input: b.is_input,
+                    is_output: b.is_output,
+                }
+            })
+            .collect();
+        let accesses: Vec<Access> = self
+            .accesses
+            .iter()
+            .map(|a| Access {
+                terms: a
+                    .terms
+                    .iter()
+                    .map(|&(r, axis)| (r, bufs[a.buf].strides[axis]))
+                    .collect(),
+            })
+            .collect();
+        let mut loops: Vec<LoopMeta> = self
+            .loops
+            .iter()
+            .map(|l| LoopMeta {
+                reg: l.reg,
+                start: l.start,
+                trip: sizes.get(&l.dim),
+                body_ip: l.body_ip,
+                end_ip: l.end_ip,
+                clears: l.clears.clone(),
+                parallel: l.parallel,
+                weight: 0,
+            })
+            .collect();
+        // Executed-instruction weights, inner loops first (a nested loop
+        // always has a higher index than its parent, so reverse order
+        // has every inner weight ready when its parent sums the body).
+        let mut weights = vec![0u64; loops.len()];
+        for li in (0..loops.len()).rev() {
+            let mut cost = 0u64;
+            let mut ip = loops[li].body_ip;
+            while ip < loops[li].end_ip {
+                if let Instr::LoopBegin(lj) = &self.instrs[ip] {
+                    cost += weights[*lj];
+                    ip = loops[*lj].end_ip + 1;
+                } else {
+                    cost += 1;
+                    ip += 1;
+                }
+            }
+            let iters = loops[li].trip.saturating_sub(loops[li].start) as u64;
+            weights[li] = iters * cost.max(1);
+        }
+        for (l, w) in loops.iter_mut().zip(&weights) {
+            l.weight = *w;
+        }
+        let miscs: Vec<MiscSite> = self
+            .miscs
+            .iter()
+            .map(|ms| MiscSite {
+                tag: ms.tag.clone(),
+                f: ms.f,
+                args: ms
+                    .args
+                    .iter()
+                    .map(|(b, sels)| (*b, bind_slots(sels, &bufs[*b])))
+                    .collect(),
+                out: (ms.out.0, bind_slots(&ms.out.1, &bufs[ms.out.0])),
+            })
+            .collect();
+        CompiledProgram {
+            instrs: self.instrs.clone(),
+            loops,
+            accesses,
+            computes: self.computes.clone(),
+            miscs,
+            bufs,
+            tops: self.tops.clone(),
+            n_vars: self.n_vars,
+            n_regs: self.n_regs,
+        }
+    }
+}
+
+/// Flatten `ir` against the concrete `cfg` (sizes, params, misc registry):
+/// both phases back to back.
 pub fn compile(ir: &LoopIr, cfg: &ExecConfig) -> CompiledProgram {
-    let bufs: Vec<BufMeta> = ir
+    compile_skeleton(ir, cfg).bind(&cfg.sizes)
+}
+
+/// Phase 1: build the size-independent tape skeleton (see module docs).
+/// Uses `cfg` only for scalar params and the misc-op registries — never
+/// `cfg.sizes`.
+pub fn compile_skeleton(ir: &LoopIr, cfg: &ExecConfig) -> TapeSkeleton {
+    let bufs: Vec<SymBuf> = ir
         .bufs
         .iter()
-        .map(|d| {
-            let dims: Vec<usize> = d.dims.iter().map(|dm| cfg.sizes.get(dm)).collect();
-            let mut strides = vec![1usize; dims.len()];
-            for i in (0..dims.len().saturating_sub(1)).rev() {
-                strides[i] = strides[i + 1] * dims[i + 1];
-            }
-            BufMeta {
-                name: d.name.clone(),
-                dims,
-                strides,
-                is_input: d.is_input,
-                is_output: d.is_output,
-            }
+        .map(|d| SymBuf {
+            name: d.name.clone(),
+            dims: d.dims.clone(),
+            is_input: d.is_input,
+            is_output: d.is_output,
         })
         .collect();
 
@@ -362,31 +558,14 @@ pub fn compile(ir: &LoopIr, cfg: &ExecConfig) -> CompiledProgram {
         let start = c.instrs.len();
         c.stmt(s);
         let end = c.instrs.len();
-        let kernel = matches!(s, Stmt::Loop { .. });
-        let par_loop = match s {
-            Stmt::Loop {
-                kind: LoopKind::ForAll,
-                dim,
-                body,
-                ..
-            } if loop_is_parallel(dim, body) => {
-                // the first instruction of this range is the LoopBegin
-                match &c.instrs[start] {
-                    Instr::LoopBegin(li) => Some(*li),
-                    _ => None,
-                }
-            }
-            _ => None,
-        };
         tops.push(TopRange {
             ips: (start, end),
-            kernel,
-            par_loop,
+            kernel: matches!(s, Stmt::Loop { .. }),
         });
     }
 
     let n_regs = c.loops.len();
-    CompiledProgram {
+    TapeSkeleton {
         instrs: c.instrs,
         loops: c.loops,
         accesses: c.accesses,
@@ -401,12 +580,12 @@ pub fn compile(ir: &LoopIr, cfg: &ExecConfig) -> CompiledProgram {
 
 struct Compiler<'a> {
     cfg: &'a ExecConfig,
-    bufs: Vec<BufMeta>,
+    bufs: Vec<SymBuf>,
     instrs: Vec<Instr>,
-    loops: Vec<LoopMeta>,
-    accesses: Vec<Access>,
+    loops: Vec<SymLoop>,
+    accesses: Vec<SymAccess>,
     computes: Vec<ComputeSite>,
-    miscs: Vec<MiscSite>,
+    miscs: Vec<SymMisc>,
     /// Enclosing loops, innermost last: (dim, register).
     scope: Vec<(Dim, Reg)>,
 }
@@ -433,22 +612,21 @@ impl<'a> Compiler<'a> {
             match ix {
                 Index::Iter(d) => {
                     let reg = self.lookup(d);
-                    terms.push((reg, self.bufs[buf].strides[i]));
+                    terms.push((reg, i));
                 }
                 Index::Zero => {}
             }
         }
-        self.accesses.push(Access { terms });
+        self.accesses.push(SymAccess { buf, terms });
         self.accesses.len() - 1
     }
 
-    fn slot_sels(&self, buf: BufId, idx: &[Option<Index>]) -> Vec<SlotSel> {
+    fn slot_sels(&self, idx: &[Option<Index>]) -> Vec<SymSlot> {
         idx.iter()
-            .enumerate()
-            .map(|(i, s)| match s {
-                Some(Index::Iter(d)) => SlotSel::Reg(self.lookup(d)),
-                Some(Index::Zero) => SlotSel::Fixed(0),
-                None => SlotSel::All(self.bufs[buf].dims[i]),
+            .map(|s| match s {
+                Some(Index::Iter(d)) => SymSlot::Reg(self.lookup(d)),
+                Some(Index::Zero) => SymSlot::Fixed(0),
+                None => SymSlot::All,
             })
             .collect()
     }
@@ -456,20 +634,22 @@ impl<'a> Compiler<'a> {
     fn stmt(&mut self, s: &Stmt) {
         match s {
             Stmt::Loop {
+                kind,
                 dim,
                 skip_first,
                 body,
                 clears,
-                ..
             } => {
+                let parallel = *kind == LoopKind::ForAll && loop_is_parallel(dim, body);
                 let loop_id = self.loops.len();
-                self.loops.push(LoopMeta {
+                self.loops.push(SymLoop {
                     reg: loop_id,
+                    dim: dim.clone(),
                     start: usize::from(*skip_first),
-                    trip: self.cfg.sizes.get(dim),
                     body_ip: 0,
                     end_ip: 0,
                     clears: clears.clone(),
+                    parallel,
                 });
                 let begin_ip = self.instrs.len();
                 self.instrs.push(Instr::LoopBegin(loop_id));
@@ -523,14 +703,14 @@ impl<'a> Compiler<'a> {
                     .misc_list_ops
                     .get(tag)
                     .unwrap_or_else(|| panic!("no whole-array misc-op registered for {tag}"));
-                let site = MiscSite {
+                let site = SymMisc {
                     tag: tag.clone(),
                     f,
                     args: args
                         .iter()
-                        .map(|(b, idx)| (*b, self.slot_sels(*b, idx)))
+                        .map(|(b, idx)| (*b, self.slot_sels(idx)))
                         .collect(),
-                    out: (out.0, self.slot_sels(out.0, &out.1)),
+                    out: (out.0, self.slot_sels(&out.1)),
                 };
                 self.miscs.push(site);
                 self.instrs.push(Instr::Misc(self.miscs.len() - 1));
@@ -540,21 +720,30 @@ impl<'a> Compiler<'a> {
 }
 
 // ---------------------------------------------------------------------------
-// Parallel-safety analysis for top-level grid loops
+// Parallel-safety analysis for grid loops
 // ---------------------------------------------------------------------------
 
-/// A top-level `forall dim` loop can run its iterations concurrently iff
-/// sequential execution could not observe any cross-iteration state:
+/// A `forall dim` loop can run its iterations concurrently iff sequential
+/// execution could not observe any cross-iteration state:
 ///
 /// * no direct-child accumulator (those carry across iterations; every
 ///   other var assigned in the body is in the loop's clear set, so each
 ///   iteration starts from scratch);
-/// * no reads of vars defined *before* the loop (iterations are
-///   self-contained over local memory);
+/// * vars read before assignment in the body (free vars) are **not also
+///   assigned** in the body — genuinely loop-invariant. The engine seeds
+///   each worker with the enclosing scope's var file, so reading outer
+///   locals is safe; a var both free and assigned would be a
+///   read-before-clear even sequentially;
 /// * every store site indexes its buffer by `dim` (iterations write
 ///   disjoint slots) and no buffer is both read and written inside the
 ///   body (no iteration can observe another's stores);
 /// * no inner loop shadows `dim` (which would defeat the previous check).
+///
+/// The analysis is structural — trip counts and extents play no role —
+/// so it runs once per [`TapeSkeleton`] and survives re-binding. It
+/// applies to nested loops exactly as to top-level ones: a serial outer
+/// loop with a safe inner `forall` gets the inner loop annotated, which
+/// the engine fans out per outer iteration.
 fn loop_is_parallel(dim: &Dim, body: &[Stmt]) -> bool {
     if body.iter().any(|s| matches!(s, Stmt::Accum { .. })) {
         return false;
@@ -562,7 +751,7 @@ fn loop_is_parallel(dim: &Dim, body: &[Stmt]) -> bool {
     let mut assigned = HashSet::new();
     let mut free = HashSet::new();
     scan_reads(body, &mut assigned, &mut free);
-    if !free.is_empty() {
+    if free.iter().any(|v| assigned.contains(v)) {
         return false;
     }
     let mut loaded = HashSet::new();
@@ -722,7 +911,7 @@ mod tests {
         assert_eq!(p.n_regs, 1);
         assert_eq!(p.tops.len(), 1);
         assert!(p.tops[0].kernel);
-        assert_eq!(p.tops[0].par_loop, Some(0), "grid loop must be parallel");
+        assert!(p.loops[0].parallel, "grid loop must be parallel");
         // LoopBegin, Load, Compute, Store, LoopEnd
         assert_eq!(p.instrs.len(), 5);
         assert_eq!(p.parallel_grid_loops(), 1);
@@ -733,7 +922,7 @@ mod tests {
         let ir = grid_ir(LoopKind::For);
         let cfg = ExecConfig::new(DimSizes::of(&[("M", 3)]));
         let p = compile(&ir, &cfg);
-        assert_eq!(p.tops[0].par_loop, None);
+        assert!(!p.loops[0].parallel);
     }
 
     #[test]
@@ -750,13 +939,14 @@ mod tests {
         }
         let cfg = ExecConfig::new(DimSizes::of(&[("M", 3)]));
         let p = compile(&ir, &cfg);
-        assert_eq!(p.tops[0].par_loop, None);
+        assert!(!p.loops[0].parallel);
     }
 
     #[test]
-    fn free_var_read_rejected() {
+    fn loop_invariant_free_var_read_allowed() {
         // forall m { t1 = t9 + t9; store t1 -> B[m] } — t9 comes from
-        // outside the loop: iterations are not self-contained.
+        // outside the loop and is never assigned inside it: the engine
+        // seeds workers with the enclosing var file, so this is safe.
         let mut ir = grid_ir(LoopKind::ForAll);
         if let Stmt::Loop { body, .. } = &mut ir.body[0] {
             body[1] = Stmt::Compute {
@@ -769,7 +959,86 @@ mod tests {
         super::super::analyze_clears(&mut ir);
         let cfg = ExecConfig::new(DimSizes::of(&[("M", 3)]));
         let p = compile(&ir, &cfg);
-        assert_eq!(p.tops[0].par_loop, None);
+        assert!(p.loops[0].parallel);
+    }
+
+    #[test]
+    fn free_var_also_assigned_rejected() {
+        // forall m { t1 = t1 + t1; store t1 -> B[m] } — t1 is read before
+        // it is assigned *and* assigned in the body: cross-iteration (and
+        // sequentially a read-before-clear), so it must stay serial.
+        let mut ir = grid_ir(LoopKind::ForAll);
+        if let Stmt::Loop { body, .. } = &mut ir.body[0] {
+            body.remove(0); // drop the load; body: t1 = t1+t1; store t1
+            body[0] = Stmt::Compute {
+                var: 1,
+                op: COp::Func(FuncOp::Add),
+                args: vec![1, 1],
+            };
+        }
+        super::super::analyze_clears(&mut ir);
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 3)]));
+        let p = compile(&ir, &cfg);
+        assert!(!p.loops[0].parallel);
+    }
+
+    #[test]
+    fn nested_forall_under_serial_loop_annotated() {
+        // for m { forall n { t0 = load A[m,n]; t1 = t0+t0;
+        //                    store t1 -> B[m,n] } }
+        // The serial outer loop is not parallel; the inner grid is.
+        let (m, n) = (Dim::new("M"), Dim::new("N"));
+        let buf = |name: &str, is_input: bool| BufDecl {
+            name: name.into(),
+            dims: vec![m.clone(), n.clone()],
+            item: Item::Block,
+            is_input,
+            is_output: !is_input,
+        };
+        let mut ir = LoopIr {
+            bufs: vec![buf("A", true), buf("B", false)],
+            body: vec![Stmt::Loop {
+                kind: LoopKind::For,
+                dim: m.clone(),
+                skip_first: false,
+                clears: vec![],
+                body: vec![Stmt::Loop {
+                    kind: LoopKind::ForAll,
+                    dim: n.clone(),
+                    skip_first: false,
+                    clears: vec![],
+                    body: vec![
+                        Stmt::Load {
+                            var: 0,
+                            buf: 0,
+                            idx: vec![Index::Iter(m.clone()), Index::Iter(n.clone())],
+                        },
+                        Stmt::Compute {
+                            var: 1,
+                            op: COp::Func(FuncOp::Add),
+                            args: vec![0, 0],
+                        },
+                        Stmt::Store {
+                            var: 1,
+                            buf: 1,
+                            idx: vec![Index::Iter(m), Index::Iter(n)],
+                        },
+                    ],
+                }],
+            }],
+            n_vars: 2,
+            params: vec![],
+        };
+        super::super::analyze_clears(&mut ir);
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 2), ("N", 8)]));
+        let p = compile(&ir, &cfg);
+        assert_eq!(p.loops.len(), 2);
+        assert!(!p.loops[0].parallel, "serial outer loop");
+        assert!(p.loops[1].parallel, "inner grid loop");
+        assert_eq!(p.parallel_grid_loops(), 1);
+        // inner: 8 iterations × 3 instrs; outer folds the inner in
+        assert_eq!(p.loops[1].weight, 24);
+        assert_eq!(p.loops[0].weight, 48);
     }
 
     #[test]
@@ -810,5 +1079,30 @@ mod tests {
         assert_eq!(p.accesses.len(), 1);
         assert_eq!(p.accesses[0].terms, vec![(0, 4), (1, 1)]);
         assert_eq!(p.accesses[0].flat(&[2, 3]), 11);
+    }
+
+    /// The skeleton/bind split: one skeleton re-bound to two size
+    /// assignments yields the same tapes `compile` would build, with
+    /// annotations intact and only the size tables differing.
+    #[test]
+    fn skeleton_rebinds_across_sizes() {
+        let ir = grid_ir(LoopKind::ForAll);
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 3)]));
+        let skel = compile_skeleton(&ir, &cfg);
+        let p3 = skel.bind(&DimSizes::of(&[("M", 3)]));
+        let p6 = skel.bind(&DimSizes::of(&[("M", 6)]));
+        assert_eq!(p3.loops[0].trip, 3);
+        assert_eq!(p6.loops[0].trip, 6);
+        // weight = iterations × body instructions (Load, Compute, Store)
+        assert_eq!(p3.loops[0].weight, 9);
+        assert_eq!(p6.loops[0].weight, 18);
+        assert_eq!(p3.instrs.len(), p6.instrs.len());
+        assert!(p3.loops[0].parallel && p6.loops[0].parallel);
+        assert_eq!(p3.bufs[0].dims, vec![3]);
+        assert_eq!(p6.bufs[0].dims, vec![6]);
+        // direct compile at M=6 produces the same shape
+        let direct = compile(&ir, &ExecConfig::new(DimSizes::of(&[("M", 6)])));
+        assert_eq!(direct.loops[0].trip, p6.loops[0].trip);
+        assert_eq!(direct.accesses[0].terms, p6.accesses[0].terms);
     }
 }

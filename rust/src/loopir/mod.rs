@@ -9,8 +9,9 @@
 //! * [`interp`] executes programs on concrete data while simulating the
 //!   two-tier memory (counting every global<->local transfer);
 //! * [`compile`] flattens the `Stmt` tree into a linear instruction tape
-//!   (trip counts and buffer strides pre-resolved, elementwise exprs
-//!   pre-compiled, grid loops analyzed for parallel safety) which
+//!   in two phases — a size-independent skeleton (elementwise exprs
+//!   pre-compiled, every `forall` annotated for parallel safety) plus a
+//!   cheap per-`DimSizes` bind of trip counts and stride tables — which
 //!   `exec::engine` executes — the compile-then-execute pipeline used by
 //!   the `ExecBackend::Compiled` switch;
 //! * `cost` (top-level module) statically derives traffic/flops/launches.

@@ -4,14 +4,19 @@
 //! blockbuster trace <program> [--listing] [--dot]   fusion trace (+ fused code)
 //! blockbuster compile <program>                     selection plan report
 //! blockbuster run <program> [--seed N] [--backend interp|compiled]
-//!                                                   execute plan vs naive
+//!                 [--threads N] [--no-simd]         execute plan vs naive
 //! blockbuster tune <program> [--capacity BYTES]     autotune block counts
 //! blockbuster xla <model> [--artifacts DIR]         run an AOT artifact (PJRT)
 //! blockbuster list                                  available programs/models
 //! ```
+//!
+//! `--threads N` caps the compiled engine's worker count (default: one
+//! per available core); `--no-simd` throws the runtime kill-switch on the
+//! AVX2 kernels (bit-identical scalar fallback — a debugging/benching
+//! aid, not a correctness knob).
 
 use blockbuster::autotune::autotune;
-use blockbuster::coordinator::{compile, execute_plan_with, plan_report, workloads};
+use blockbuster::coordinator::{compile, execute_plan_opts, plan_report, workloads};
 use blockbuster::cost::CostModel;
 use blockbuster::exec::{run_with, ExecBackend, Workload};
 use blockbuster::fusion::fuse;
@@ -35,8 +40,11 @@ fn usage() -> ! {
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["seed", "capacity", "artifacts", "backend"],
+        &["seed", "capacity", "artifacts", "backend", "threads"],
     );
+    if args.flag("no-simd") {
+        blockbuster::tensor::simd::set_enabled(false);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     match cmd {
         "trace" => cmd_trace(&args),
@@ -120,10 +128,25 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             std::process::exit(2);
         }),
     };
+    let threads = args.opt("threads").map(|s| {
+        s.parse::<usize>().unwrap_or_else(|_| {
+            eprintln!("--threads expects a number, got {s}");
+            std::process::exit(2);
+        })
+    });
     let (p, cfg, params, inputs) = demo_or_die(args);
     let compiled = compile(&p, cfg.clone());
     print!("{}", plan_report(&compiled));
-    println!("executor backend: {}", backend.name());
+    println!(
+        "executor backend: {} (threads: {}, simd: {})",
+        backend.name(),
+        threads.map_or("auto".to_string(), |t| t.to_string()),
+        if blockbuster::tensor::simd::simd_active() {
+            "on"
+        } else {
+            "off"
+        }
+    );
 
     let naive = run_with(
         &compiled.block,
@@ -132,10 +155,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             params: params.clone(),
             inputs: inputs.clone(),
             local_capacity: None,
+            threads,
         },
         backend,
     );
-    let plan = execute_plan_with(&compiled.plan, &cfg.sizes, &params, &inputs, backend);
+    let plan = execute_plan_opts(&compiled.plan, &cfg.sizes, &params, &inputs, backend, threads);
     println!(
         "\nnaive : traffic {}  launches {}  flops {}",
         fmt_bytes(naive.mem.total_traffic()),

@@ -5,6 +5,13 @@
 //! matrix type, the Table-1 block operations, and the [`Val`] sum type the
 //! interpreter passes around (scalar / vector / block — the three local-
 //! memory item kinds of §2.1).
+//!
+//! The hot kernels (`dot_bt`, `matmul`, `add`, `hadamard`, row ops) are
+//! built on the explicit-width SIMD layer in [`simd`]: every reduction
+//! follows one canonical 8-lane order, so the AVX2 and portable scalar
+//! paths — and therefore both execution backends — are bit-identical.
+
+pub mod simd;
 
 use std::fmt;
 
@@ -59,75 +66,32 @@ impl Mat {
     /// `self @ other.T` — the paper's `dot` block operator.
     /// Constraint (Table 1): `self.cols == other.cols`.
     ///
-    /// Register-tiled: a 4×4 micro-kernel keeps 16 accumulators live and
-    /// streams both operands row-contiguously (both already iterate along
-    /// `k`, so no transpose is needed). Per output element the reduction
-    /// order is ascending `k`, exactly as in the scalar fallback, so all
-    /// tile paths are bit-identical to each other.
+    /// Dispatches to [`simd::dot_bt_into`]: an AVX2 4-row register-tiled
+    /// micro-kernel streaming both operands row-contiguously (both already
+    /// iterate along `k`, so no transpose is needed), or the portable
+    /// scalar fallback. Per output element the reduction follows the
+    /// canonical [`simd::LANES`]-lane order, so every path is
+    /// bit-identical to every other.
     pub fn dot_bt(&self, other: &Mat) -> Mat {
         assert_eq!(
             self.cols, other.cols,
             "dot: inner dims differ ({}x{} vs {}x{})",
             self.rows, self.cols, other.rows, other.cols
         );
-        const MR: usize = 4;
-        const NR: usize = 4;
         let (m, n, k) = (self.rows, other.rows, self.cols);
         let mut out = Mat::zeros(m, n);
-        let mut i = 0;
-        while i < m {
-            let ih = MR.min(m - i);
-            let mut j = 0;
-            while j < n {
-                let jh = NR.min(n - j);
-                if ih == MR && jh == NR {
-                    let a = [self.row(i), self.row(i + 1), self.row(i + 2), self.row(i + 3)];
-                    let b = [
-                        other.row(j),
-                        other.row(j + 1),
-                        other.row(j + 2),
-                        other.row(j + 3),
-                    ];
-                    let mut acc = [[0.0f32; NR]; MR];
-                    for kk in 0..k {
-                        let av = [a[0][kk], a[1][kk], a[2][kk], a[3][kk]];
-                        let bv = [b[0][kk], b[1][kk], b[2][kk], b[3][kk]];
-                        for (accr, &x) in acc.iter_mut().zip(&av) {
-                            for (c, &y) in accr.iter_mut().zip(&bv) {
-                                *c += x * y;
-                            }
-                        }
-                    }
-                    for (ii, accr) in acc.iter().enumerate() {
-                        out.data[(i + ii) * n + j..(i + ii) * n + j + NR].copy_from_slice(accr);
-                    }
-                } else {
-                    for ii in i..i + ih {
-                        let a = self.row(ii);
-                        for jj in j..j + jh {
-                            let b = other.row(jj);
-                            let mut acc = 0.0f32;
-                            for kk in 0..k {
-                                acc += a[kk] * b[kk];
-                            }
-                            out.data[ii * n + jj] = acc;
-                        }
-                    }
-                }
-                j += jh;
-            }
-            i += ih;
-        }
+        simd::dot_bt_into(&self.data, &other.data, &mut out.data, m, n, k);
         out
     }
 
     /// Plain `self @ other` (used by reference paths and tests).
     ///
-    /// Cache-blocked `i-k-j` loop: the inner axpy walks both the output row
-    /// and the `other` row contiguously, which vectorizes. There is
-    /// deliberately no `a == 0.0` skip — it silently turned `0·NaN`/`0·inf`
-    /// contributions into nothing, so references could disagree with the
-    /// blocked executor on non-finite inputs.
+    /// `i-k-j` loop whose inner axpy walks both the output row and the
+    /// `other` row contiguously ([`simd::axpy`] vectorizes across output
+    /// columns, so each output element still reduces in ascending `k`
+    /// order). There is deliberately no `a == 0.0` skip — it silently
+    /// turned `0·NaN`/`0·inf` contributions into nothing, so references
+    /// could disagree with the blocked executor on non-finite inputs.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul: inner dims differ");
         let (m, kdim, n) = (self.rows, self.cols, other.cols);
@@ -137,9 +101,7 @@ impl Mat {
             for k in 0..kdim {
                 let a = self.data[i * kdim + k];
                 let brow = &other.data[k * n..(k + 1) * n];
-                for (o, b) in orow.iter_mut().zip(brow) {
-                    *o += a * *b;
-                }
+                simd::axpy(orow, a, brow);
             }
         }
         out
@@ -149,8 +111,7 @@ impl Mat {
         Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
     }
 
-    /// Elementwise add (Table 1 `add`). Slice-level loop so the compiler
-    /// can vectorize without closure indirection.
+    /// Elementwise add (Table 1 `add`), one flat [`simd::add_assign`].
     pub fn add(&self, other: &Mat) -> Mat {
         assert_eq!(
             (self.rows, self.cols),
@@ -158,13 +119,11 @@ impl Mat {
             "add: shape mismatch"
         );
         let mut out = self.clone();
-        for (o, b) in out.data.iter_mut().zip(&other.data) {
-            *o += *b;
-        }
+        simd::add_assign(&mut out.data, &other.data);
         out
     }
 
-    /// Hadamard product (Table 1 `mul`), same flat vectorizable loop.
+    /// Hadamard product (Table 1 `mul`), one flat [`simd::mul_assign`].
     pub fn hadamard(&self, other: &Mat) -> Mat {
         assert_eq!(
             (self.rows, self.cols),
@@ -172,9 +131,7 @@ impl Mat {
             "mul: shape mismatch"
         );
         let mut out = self.clone();
-        for (o, b) in out.data.iter_mut().zip(&other.data) {
-            *o *= *b;
-        }
+        simd::mul_assign(&mut out.data, &other.data);
         out
     }
 
@@ -209,9 +166,7 @@ impl Mat {
         assert_eq!(c.len(), self.rows, "row_shift: vector len != rows");
         let mut out = self.clone();
         for (i, &ci) in c.iter().enumerate() {
-            for v in &mut out.data[i * self.cols..(i + 1) * self.cols] {
-                *v += ci;
-            }
+            simd::add_scalar(&mut out.data[i * self.cols..(i + 1) * self.cols], ci);
         }
         out
     }
@@ -221,58 +176,24 @@ impl Mat {
         assert_eq!(c.len(), self.rows, "row_scale: vector len != rows");
         let mut out = self.clone();
         for (i, &ci) in c.iter().enumerate() {
-            for v in &mut out.data[i * self.cols..(i + 1) * self.cols] {
-                *v *= ci;
-            }
+            simd::mul_scalar(&mut out.data[i * self.cols..(i + 1) * self.cols], ci);
         }
         out
     }
 
-    /// Sum of each row (see DESIGN.md on the Table-1 `row_sum` erratum).
-    /// Four interleaved partial sums break the serial dependence chain so
-    /// the reduction pipelines; the tail is folded in sequentially.
+    /// Sum of each row (see DESIGN.md on the Table-1 `row_sum` erratum),
+    /// in the canonical [`simd::LANES`]-lane order: 8 stride-8 partial
+    /// sums, fixed-tree combine, ascending tail.
     pub fn row_sum(&self) -> Vec<f32> {
-        (0..self.rows)
-            .map(|i| {
-                let r = self.row(i);
-                let mut lanes = [0.0f32; 4];
-                let mut chunks = r.chunks_exact(4);
-                for c in chunks.by_ref() {
-                    lanes[0] += c[0];
-                    lanes[1] += c[1];
-                    lanes[2] += c[2];
-                    lanes[3] += c[3];
-                }
-                let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
-                for &x in chunks.remainder() {
-                    s += x;
-                }
-                s
-            })
-            .collect()
+        (0..self.rows).map(|i| simd::sum(self.row(i))).collect()
     }
 
-    /// Max of each row (numerical-safety pass), same four-lane shape —
-    /// `f32::max` is order-insensitive so lanes cost nothing semantically.
+    /// Max of each row (numerical-safety pass), via [`simd::max`]'s
+    /// deterministic `>`-select (NaN elements are ignored — a NaN is
+    /// never `>` the running max, matching the previous `f32::max`-over-
+    /// `-inf` behavior; an empty row yields `-inf`).
     pub fn row_max(&self) -> Vec<f32> {
-        (0..self.rows)
-            .map(|i| {
-                let r = self.row(i);
-                let mut lanes = [f32::NEG_INFINITY; 4];
-                let mut chunks = r.chunks_exact(4);
-                for c in chunks.by_ref() {
-                    lanes[0] = lanes[0].max(c[0]);
-                    lanes[1] = lanes[1].max(c[1]);
-                    lanes[2] = lanes[2].max(c[2]);
-                    lanes[3] = lanes[3].max(c[3]);
-                }
-                let mut m = lanes[0].max(lanes[1]).max(lanes[2].max(lanes[3]));
-                for &x in chunks.remainder() {
-                    m = m.max(x);
-                }
-                m
-            })
-            .collect()
+        (0..self.rows).map(|i| simd::max(self.row(i))).collect()
     }
 
     /// Outer product of two vectors (Table 1 `outer`).
@@ -369,6 +290,38 @@ impl Val {
         }
     }
 
+    /// Elementwise sum — the [`Val::zip`] `+` fast path. Vector and block
+    /// operands run on [`simd::add_assign`] instead of a per-element
+    /// closure; scalars (and kind mismatches, which panic) fall back to
+    /// `zip`. Bit-identical to `zip(other, |a, b| a + b)`.
+    pub fn add(&self, other: &Val) -> Val {
+        match (self, other) {
+            (Val::Block(a), Val::Block(b)) => Val::Block(a.add(b)),
+            (Val::Vector(a), Val::Vector(b)) => {
+                assert_eq!(a.len(), b.len(), "Val::add: vector length mismatch");
+                let mut out = a.clone();
+                simd::add_assign(&mut out, b);
+                Val::Vector(out)
+            }
+            _ => self.zip(other, |x, y| x + y),
+        }
+    }
+
+    /// Elementwise product — the [`Val::zip`] `*` fast path (see
+    /// [`Val::add`]).
+    pub fn mul(&self, other: &Val) -> Val {
+        match (self, other) {
+            (Val::Block(a), Val::Block(b)) => Val::Block(a.hadamard(b)),
+            (Val::Vector(a), Val::Vector(b)) => {
+                assert_eq!(a.len(), b.len(), "Val::mul: vector length mismatch");
+                let mut out = a.clone();
+                simd::mul_assign(&mut out, b);
+                Val::Vector(out)
+            }
+            _ => self.zip(other, |x, y| x * y),
+        }
+    }
+
     /// Elementwise combine of same-shaped values.
     pub fn zip(&self, other: &Val, f: impl Fn(f32, f32) -> f32) -> Val {
         match (self, other) {
@@ -458,27 +411,38 @@ mod tests {
         assert_eq!((d.rows, d.cols), (3, 4));
     }
 
-    /// The 4×4 micro-kernel and the scalar remainder path must agree on
-    /// every tile-boundary combination (full tiles, row tail, col tail).
+    /// The tiled micro-kernel and the remainder paths must agree on every
+    /// tile-boundary combination (full tiles, row tail, lane tail).
     #[test]
     fn dot_bt_tiled_agrees_on_awkward_shapes() {
+        // straight-line oracle of the documented canonical reduction
+        // order: 8 stride-8 lanes, fixed combine tree, ascending tail
+        fn dot_oracle(a: &[f32], b: &[f32]) -> f32 {
+            let n = a.len();
+            let full = n - n % 8;
+            let mut lanes = [0.0f32; 8];
+            for i in 0..full {
+                lanes[i % 8] += a[i] * b[i];
+            }
+            let mut s = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+                + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+            for i in full..n {
+                s += a[i] * b[i];
+            }
+            s
+        }
         let mut rng = Rng::new(11);
         for (m, n, k) in [(1, 1, 1), (4, 4, 8), (5, 7, 3), (9, 6, 13), (8, 8, 1), (3, 12, 32)] {
             let a = rng.mat(m, k);
             let b = rng.mat(n, k);
             let fast = a.dot_bt(&b);
-            // straight-line oracle
             let mut want = Mat::zeros(m, n);
             for i in 0..m {
                 for j in 0..n {
-                    let mut acc = 0.0f32;
-                    for kk in 0..k {
-                        acc += a.at(i, kk) * b.at(j, kk);
-                    }
-                    *want.at_mut(i, j) = acc;
+                    *want.at_mut(i, j) = dot_oracle(a.row(i), b.row(j));
                 }
             }
-            // bit-identical: both paths reduce in ascending-k order
+            // bit-identical: every path reduces in the canonical order
             assert_eq!(fast.data, want.data, "shape {m}x{n}x{k}");
         }
     }
@@ -536,6 +500,23 @@ mod tests {
         let b = Val::Vector(vec![3., 4.]);
         assert_eq!(a.zip(&b, |x, y| x + y), Val::Vector(vec![4., 6.]));
         assert_eq!(a.map(|x| x * 2.), Val::Vector(vec![2., 4.]));
+    }
+
+    /// The `Val::add`/`Val::mul` fast paths are bit-identical to the
+    /// closure `zip` they replace, on every item kind.
+    #[test]
+    fn val_fast_paths_match_zip() {
+        let mut rng = Rng::new(21);
+        let vals = [
+            Val::Scalar(rng.f32()),
+            Val::Vector((0..11).map(|_| rng.f32()).collect()),
+            Val::Block(rng.mat(5, 9)),
+        ];
+        for v in &vals {
+            let w = v.map(|x| x * 0.5 + 0.25);
+            assert_eq!(v.add(&w), v.zip(&w, |x, y| x + y));
+            assert_eq!(v.mul(&w), v.zip(&w, |x, y| x * y));
+        }
     }
 
     #[test]

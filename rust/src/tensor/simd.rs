@@ -1,0 +1,596 @@
+//! Explicit-width SIMD substrate for the [`super::Mat`] kernels.
+//!
+//! The numeric contract of every kernel in this module is defined by a
+//! fixed **virtual lane width** ([`LANES`] = 8), not by whatever vector
+//! unit happens to execute it:
+//!
+//! * reductions (`dot`, `sum`) accumulate into 8 stride-8 partial lanes,
+//!   combine the lanes in one fixed tree order
+//!   (`((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`), and fold the tail in
+//!   ascending order;
+//! * `max` uses an explicit `if x > m` select per lane (deterministic for
+//!   NaN — a NaN is never `>` — and for `±0.0`), the same tree combine
+//!   shape, and an ascending tail;
+//! * elementwise kernels (`add_assign`, `mul_assign`, `axpy`,
+//!   `add_scalar`, `mul_scalar`) perform one rounding per element in a
+//!   lane-independent order.
+//!
+//! The AVX2 path executes exactly that recipe with 256-bit vectors
+//! (explicit mul-then-add — **no FMA**, which would change rounding); the
+//! portable path executes it with scalar arrays. Results are therefore
+//! **bit-identical** whether the `simd` cargo feature is on or off,
+//! whether the CPU has AVX2 or not, and whether the runtime kill-switch
+//! ([`set_enabled`]) is thrown — which is what lets
+//! `tests/backend_parity.rs` and `tests/simd_parity.rs` demand exact
+//! equality instead of tolerances.
+//!
+//! Dispatch is resolved at runtime per kernel call (one relaxed atomic
+//! load plus `std`'s cached CPUID probe), hoisted out of all inner loops.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Virtual lane width that defines the canonical reduction order.
+pub const LANES: usize = 8;
+
+/// Runtime kill-switch (the CLI's `--no-simd`); `true` means *disabled*.
+static SIMD_DISABLED: AtomicBool = AtomicBool::new(false);
+
+/// Enable or disable the vector paths at runtime. Scalar and vector paths
+/// are bit-identical, so flipping this mid-run changes wall-clock only.
+pub fn set_enabled(on: bool) {
+    SIMD_DISABLED.store(!on, Ordering::Relaxed);
+}
+
+/// Whether the runtime kill-switch currently allows vector paths.
+pub fn runtime_enabled() -> bool {
+    !SIMD_DISABLED.load(Ordering::Relaxed)
+}
+
+/// True when the vector paths will actually run: `simd` feature compiled
+/// in, runtime switch on, and AVX2 available on this CPU.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+pub fn simd_active() -> bool {
+    runtime_enabled() && std::is_x86_feature_detected!("avx2")
+}
+
+/// Scalar-only build (feature off or non-x86_64): never active.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+#[inline]
+pub fn simd_active() -> bool {
+    false
+}
+
+/// The fixed lane-combine tree for additive reductions.
+#[inline]
+fn combine_add(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// The fixed lane-combine tree for the `>`-select max.
+#[inline]
+fn combine_max(l: &[f32; LANES]) -> f32 {
+    let g = |a: f32, b: f32| if b > a { b } else { a };
+    g(g(g(l[0], l[1]), g(l[2], l[3])), g(g(l[4], l[5]), g(l[6], l[7])))
+}
+
+// ---------------------------------------------------------------------------
+// Portable scalar implementations of the canonical recipes
+// ---------------------------------------------------------------------------
+
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for ((lane, &x), &y) in lanes.iter_mut().zip(xa).zip(xb) {
+            *lane += x * y;
+        }
+    }
+    let mut s = combine_add(&lanes);
+    for (&x, &y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+fn sum_scalar(x: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let mut chunks = x.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for (lane, &v) in lanes.iter_mut().zip(c) {
+            *lane += v;
+        }
+    }
+    let mut s = combine_add(&lanes);
+    for &v in chunks.remainder() {
+        s += v;
+    }
+    s
+}
+
+fn max_scalar(x: &[f32]) -> f32 {
+    let mut lanes = [f32::NEG_INFINITY; LANES];
+    let mut chunks = x.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for (lane, &v) in lanes.iter_mut().zip(c) {
+            if v > *lane {
+                *lane = v;
+            }
+        }
+    }
+    let mut m = combine_max(&lanes);
+    for &v in chunks.remainder() {
+        if v > m {
+            m = v;
+        }
+    }
+    m
+}
+
+fn dot_bt_scalar(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            out[i * n + j] = dot_scalar(ar, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+fn axpy_scalar(out: &mut [f32], a: f32, x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+fn add_assign_scalar(out: &mut [f32], x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += v;
+    }
+}
+
+fn mul_assign_scalar(out: &mut [f32], x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o *= v;
+    }
+}
+
+fn add_scalar_scalar(out: &mut [f32], c: f32) {
+    for o in out.iter_mut() {
+        *o += c;
+    }
+}
+
+fn mul_scalar_scalar(out: &mut [f32], c: f32) {
+    for o in out.iter_mut() {
+        *o *= c;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 implementations (x86_64 + `simd` feature only)
+// ---------------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx {
+    //! 256-bit executions of the canonical lane recipes. Every function is
+    //! `unsafe` only because of `#[target_feature]`; callers must have
+    //! verified AVX2 via [`super::simd_active`]. All loads/stores are
+    //! unaligned (`Mat` data is a plain `Vec<f32>`).
+
+    use super::{combine_add, LANES};
+    use std::arch::x86_64::*;
+
+    /// Spill a vector accumulator and run the fixed scalar combine tree,
+    /// so the horizontal step is bit-identical to the portable path.
+    #[inline]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut l = [0.0f32; LANES];
+        _mm256_storeu_ps(l.as_mut_ptr(), v);
+        combine_add(&l)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut kk = 0;
+        while kk + LANES <= k {
+            let av = _mm256_loadu_ps(a.as_ptr().add(kk));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(kk));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+            kk += LANES;
+        }
+        let mut s = hsum(acc);
+        while kk < k {
+            s += a[kk] * b[kk];
+            kk += 1;
+        }
+        s
+    }
+
+    /// 4-row register-tiled `A @ B^T` micro-kernel: four k-accumulator
+    /// vectors stay live while each `B` row is loaded once per row group.
+    /// Per output element the operation sequence is exactly [`dot`]'s.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_bt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+        const MR: usize = 4;
+        let mut i = 0;
+        while i + MR <= m {
+            let a0 = a.as_ptr().add(i * k);
+            let a1 = a.as_ptr().add((i + 1) * k);
+            let a2 = a.as_ptr().add((i + 2) * k);
+            let a3 = a.as_ptr().add((i + 3) * k);
+            for j in 0..n {
+                let bp = b.as_ptr().add(j * k);
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                let mut acc2 = _mm256_setzero_ps();
+                let mut acc3 = _mm256_setzero_ps();
+                let mut kk = 0;
+                while kk + LANES <= k {
+                    let bv = _mm256_loadu_ps(bp.add(kk));
+                    acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(a0.add(kk)), bv));
+                    acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_loadu_ps(a1.add(kk)), bv));
+                    acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_loadu_ps(a2.add(kk)), bv));
+                    acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_loadu_ps(a3.add(kk)), bv));
+                    kk += LANES;
+                }
+                let mut s0 = hsum(acc0);
+                let mut s1 = hsum(acc1);
+                let mut s2 = hsum(acc2);
+                let mut s3 = hsum(acc3);
+                while kk < k {
+                    let bx = *bp.add(kk);
+                    s0 += *a0.add(kk) * bx;
+                    s1 += *a1.add(kk) * bx;
+                    s2 += *a2.add(kk) * bx;
+                    s3 += *a3.add(kk) * bx;
+                    kk += 1;
+                }
+                out[i * n + j] = s0;
+                out[(i + 1) * n + j] = s1;
+                out[(i + 2) * n + j] = s2;
+                out[(i + 3) * n + j] = s3;
+            }
+            i += MR;
+        }
+        while i < m {
+            let ar = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                out[i * n + j] = dot(ar, &b[j * k..(j + 1) * k]);
+            }
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + LANES <= n {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(x.as_ptr().add(i)));
+            i += LANES;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += x[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max(x: &[f32]) -> f32 {
+        let n = x.len();
+        // `cmp GT (ordered, quiet)` + blend reproduces the scalar
+        // `if v > lane` select exactly, including NaN (never greater)
+        // and ±0.0 (+0 > -0 is false).
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i + LANES <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(v, acc);
+            acc = _mm256_blendv_ps(acc, v, gt);
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut m = super::combine_max(&lanes);
+        while i < n {
+            if x[i] > m {
+                m = x[i];
+            }
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+        let n = out.len();
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(
+                out.as_mut_ptr().add(i),
+                _mm256_add_ps(o, _mm256_mul_ps(av, v)),
+            );
+            i += LANES;
+        }
+        while i < n {
+            out[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(out: &mut [f32], x: &[f32]) {
+        let n = out.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(o, v));
+            i += LANES;
+        }
+        while i < n {
+            out[i] += x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_assign(out: &mut [f32], x: &[f32]) {
+        let n = out.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(o, v));
+            i += LANES;
+        }
+        while i < n {
+            out[i] *= x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_scalar(out: &mut [f32], c: f32) {
+        let n = out.len();
+        let cv = _mm256_set1_ps(c);
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(o, cv));
+            i += LANES;
+        }
+        while i < n {
+            out[i] += c;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_scalar(out: &mut [f32], c: f32) {
+        let n = out.len();
+        let cv = _mm256_set1_ps(c);
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(o, cv));
+            i += LANES;
+        }
+        while i < n {
+            out[i] *= c;
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public dispatching kernels
+// ---------------------------------------------------------------------------
+
+/// Lane-structured dot product `Σ a[i]·b[i]` (lengths must match).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            return unsafe { avx::dot(a, b) };
+        }
+    }
+    dot_scalar(a, b)
+}
+
+/// `out[i*n + j] = dot(row i of a, row j of b)` for row-major `a` (m×k)
+/// and `b` (n×k) — the `A @ B^T` kernel behind [`super::Mat::dot_bt`].
+pub fn dot_bt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::dot_bt_into(a, b, out, m, n, k) };
+            return;
+        }
+    }
+    dot_bt_scalar(a, b, out, m, n, k);
+}
+
+/// Lane-structured sum of `x`.
+pub fn sum(x: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            return unsafe { avx::sum(x) };
+        }
+    }
+    sum_scalar(x)
+}
+
+/// `>`-select maximum of `x` (NaN elements are never selected); returns
+/// `-inf` for an empty slice.
+pub fn max(x: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            return unsafe { avx::max(x) };
+        }
+    }
+    max_scalar(x)
+}
+
+/// `out[i] += a · x[i]` (lengths must match).
+pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::axpy(out, a, x) };
+            return;
+        }
+    }
+    axpy_scalar(out, a, x);
+}
+
+/// `out[i] += x[i]` (lengths must match).
+pub fn add_assign(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::add_assign(out, x) };
+            return;
+        }
+    }
+    add_assign_scalar(out, x);
+}
+
+/// `out[i] *= x[i]` (lengths must match).
+pub fn mul_assign(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::mul_assign(out, x) };
+            return;
+        }
+    }
+    mul_assign_scalar(out, x);
+}
+
+/// `out[i] += c`.
+pub fn add_scalar(out: &mut [f32], c: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::add_scalar(out, c) };
+            return;
+        }
+    }
+    add_scalar_scalar(out, c);
+}
+
+/// `out[i] *= c`.
+pub fn mul_scalar(out: &mut [f32], c: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::mul_scalar(out, c) };
+            return;
+        }
+    }
+    mul_scalar_scalar(out, c);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Straight-line oracle of the canonical dot order, written
+    /// independently of `dot_scalar`'s chunking helpers.
+    fn dot_oracle(a: &[f32], b: &[f32]) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        let full = a.len() - a.len() % LANES;
+        let mut i = 0;
+        while i < full {
+            lanes[i % LANES] += a[i] * b[i];
+            i += 1;
+        }
+        let mut s = combine_add(&lanes);
+        while i < a.len() {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[test]
+    fn scalar_dot_matches_canonical_order() {
+        let a: Vec<f32> = (0..37).map(|i| (i as f32 * 0.7).sin()).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32 * 1.3).cos()).collect();
+        for len in [0usize, 1, 7, 8, 9, 16, 23, 37] {
+            let s = dot_scalar(&a[..len], &b[..len]);
+            let o = dot_oracle(&a[..len], &b[..len]);
+            assert_eq!(s.to_bits(), o.to_bits(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn max_select_ignores_nan_and_handles_empty() {
+        assert_eq!(max_scalar(&[]), f32::NEG_INFINITY);
+        let v = [1.0, f32::NAN, 3.0, f32::NEG_INFINITY, 2.0];
+        assert_eq!(max_scalar(&v), 3.0);
+        let all_nan = [f32::NAN; 11];
+        assert_eq!(max_scalar(&all_nan), f32::NEG_INFINITY);
+        let with_inf = [0.0, f32::INFINITY, -1.0];
+        assert_eq!(max_scalar(&with_inf), f32::INFINITY);
+    }
+
+    #[test]
+    fn elementwise_scalar_kernels() {
+        let mut o = vec![1.0f32, 2.0, 3.0];
+        add_assign_scalar(&mut o, &[10.0, 20.0, 30.0]);
+        assert_eq!(o, vec![11.0, 22.0, 33.0]);
+        mul_assign_scalar(&mut o, &[2.0, 2.0, 2.0]);
+        assert_eq!(o, vec![22.0, 44.0, 66.0]);
+        axpy_scalar(&mut o, 0.5, &[2.0, 2.0, 2.0]);
+        assert_eq!(o, vec![23.0, 45.0, 67.0]);
+        add_scalar_scalar(&mut o, 1.0);
+        mul_scalar_scalar(&mut o, 0.0);
+        assert_eq!(o, vec![0.0, 0.0, 0.0]);
+    }
+
+    /// Dispatch and scalar paths agree bitwise on this machine, whichever
+    /// path `simd_active()` selects (the cross-mode sweep lives in
+    /// `tests/simd_parity.rs`).
+    #[test]
+    fn dispatch_matches_scalar_here() {
+        let a: Vec<f32> = (0..53).map(|i| (i as f32 * 0.11).sin()).collect();
+        let b: Vec<f32> = (0..53).map(|i| (i as f32 * 0.37).cos()).collect();
+        assert_eq!(dot(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits());
+        assert_eq!(sum(&a).to_bits(), sum_scalar(&a).to_bits());
+        assert_eq!(max(&a).to_bits(), max_scalar(&a).to_bits());
+        let mut o1 = a.clone();
+        let mut o2 = a.clone();
+        axpy(&mut o1, 1.5, &b);
+        axpy_scalar(&mut o2, 1.5, &b);
+        assert_eq!(o1, o2);
+    }
+}

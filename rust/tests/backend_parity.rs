@@ -2,8 +2,10 @@
 //! every example program run through both `ExecBackend`s must produce
 //! **bit-identical** outputs and identical `MemSim` counters
 //! (`loaded_bytes`, `stored_bytes`, `kernel_launches`, `flops`), on the
-//! naive program and on every fusion snapshot. A random-program property
-//! test extends the guarantee beyond the curated examples.
+//! naive program and on every fusion snapshot — across thread counts
+//! **and across SIMD on/off** (the lane-structured kernels make the
+//! vector and scalar paths exact). A random-program property test
+//! extends the guarantee beyond the curated examples.
 
 use blockbuster::coordinator::workloads;
 use blockbuster::exec::{run_lowered_with, ExecBackend, Workload};
@@ -58,6 +60,7 @@ fn example_programs_bit_identical_across_backends() {
             params,
             inputs,
             local_capacity: None,
+            threads: None,
         };
         let g = lower_array(&p);
         assert_parity(&lower(&g), &wl, &format!("{name}/naive"));
@@ -67,11 +70,15 @@ fn example_programs_bit_identical_across_backends() {
     }
 }
 
-/// Parity must be insensitive to the worker count: the compiled engine at
-/// 1 thread and at 8 threads produces the same bits as the interpreter.
+/// Parity must be insensitive to the worker count **and** the SIMD
+/// switch: the compiled engine at 1/2/8 threads, with vector kernels on
+/// or off, produces the same bits as the interpreter run in the same
+/// SIMD mode — and the two SIMD modes produce the same bits as each
+/// other (the interpreter reference is computed once, with SIMD on).
 #[test]
-fn parity_insensitive_to_thread_count() {
+fn parity_insensitive_to_thread_count_and_simd() {
     use blockbuster::loopir::interp::exec;
+    use blockbuster::tensor::simd;
     let (p, cfg, params, inputs) = workloads::rmsnorm_ffn_swiglu_demo(77);
     let g = lower_array(&p);
     let fused = fuse(g).snapshots.pop().unwrap();
@@ -90,35 +97,41 @@ fn parity_insensitive_to_thread_count() {
         base.inputs
             .insert(decl.name.clone(), blockbuster::exec::to_blocks(m, rb, cb));
     }
+    simd::set_enabled(true);
     let want = exec(&ir, &base);
-    for threads in [1usize, 2, 8] {
-        let mut cfg2 = base.clone();
-        cfg2.threads = Some(threads);
-        let prog = blockbuster::loopir::compile::compile(&ir, &cfg2);
-        let got = blockbuster::exec::engine::exec_compiled(&prog, &cfg2);
-        for (n, bv) in &want.outputs {
-            let gbv = &got.outputs[n];
-            assert_eq!(bv.dims, gbv.dims);
-            for (i, slot) in bv.data.iter().enumerate() {
-                let a = slot.as_deref();
-                let b = gbv.data[i].as_deref();
-                assert_eq!(a, b, "threads={threads}, output {n}, slot {i}");
+    for simd_on in [true, false] {
+        simd::set_enabled(simd_on);
+        for threads in [1usize, 2, 8] {
+            let mut cfg2 = base.clone();
+            cfg2.threads = Some(threads);
+            let prog = blockbuster::loopir::compile::compile(&ir, &cfg2);
+            let got = blockbuster::exec::engine::exec_compiled(&prog, &cfg2);
+            for (n, bv) in &want.outputs {
+                let gbv = &got.outputs[n];
+                assert_eq!(bv.dims, gbv.dims);
+                for (i, slot) in bv.data.iter().enumerate() {
+                    let a = slot.as_deref();
+                    let b = gbv.data[i].as_deref();
+                    assert_eq!(a, b, "simd={simd_on}, threads={threads}, output {n}, slot {i}");
+                }
+            }
+            assert_eq!(want.mem.loaded_bytes, got.mem.loaded_bytes);
+            assert_eq!(want.mem.stored_bytes, got.mem.stored_bytes);
+            assert_eq!(want.mem.flops, got.mem.flops);
+            assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches);
+            if threads == 1 {
+                // sequential engine runs the exact var set/clear sequence
+                // of the interpreter, so even the peak-local approximation
+                // must match — this pins the engine's duplicated
+                // local-memory accounting (and its serial single-worker
+                // path) to the interpreter's
+                assert_eq!(want.mem.peak_local_bytes, got.mem.peak_local_bytes);
+                assert_eq!(want.mem.n_loads, got.mem.n_loads);
+                assert_eq!(want.mem.n_stores, got.mem.n_stores);
             }
         }
-        assert_eq!(want.mem.loaded_bytes, got.mem.loaded_bytes);
-        assert_eq!(want.mem.stored_bytes, got.mem.stored_bytes);
-        assert_eq!(want.mem.flops, got.mem.flops);
-        assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches);
-        if threads == 1 {
-            // sequential engine runs the exact var set/clear sequence of
-            // the interpreter, so even the peak-local approximation must
-            // match — this pins the engine's duplicated local-memory
-            // accounting to the interpreter's
-            assert_eq!(want.mem.peak_local_bytes, got.mem.peak_local_bytes);
-            assert_eq!(want.mem.n_loads, got.mem.n_loads);
-            assert_eq!(want.mem.n_stores, got.mem.n_stores);
-        }
     }
+    simd::set_enabled(true);
 }
 
 /// Property: parity holds on random programs, naive and fully fused.
@@ -132,6 +145,7 @@ fn random_programs_bit_identical_across_backends() {
             params: w.params.clone(),
             inputs: w.inputs.clone(),
             local_capacity: None,
+            threads: None,
         };
         for ir in [lower(&g), lower(fuse(g.clone()).snapshots.last().unwrap())] {
             let a = run_lowered_with(&ir, &wl, ExecBackend::Interp);

@@ -28,6 +28,7 @@ fn run_w(
             params: w.params.clone(),
             inputs: w.inputs.clone(),
             local_capacity: None,
+            threads: None,
         },
     );
     (r.outputs, r.mem)
@@ -196,6 +197,7 @@ fn static_peak_local_is_enforceable() {
                     inputs: w.inputs.clone(),
                     // static peak is an upper-ish approximation; allow 2x
                     local_capacity: Some(st.peak_local_bytes * 2 + 64),
+                    threads: None,
                 },
             )
         });

@@ -37,6 +37,7 @@ fn attention_three_way_agreement() {
             params: params.clone(),
             inputs: inputs.clone(),
             local_capacity: None,
+            threads: None,
         },
     );
     // 2. XLA on the naive JAX model; 3. XLA on the fused Pallas kernel

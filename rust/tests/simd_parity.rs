@@ -1,0 +1,160 @@
+//! SIMD vs scalar kernel parity: the vector paths must be **bit-identical**
+//! to the lane-structured scalar fallback — compared via `to_bits`, so NaN
+//! payloads count — on odd / non-multiple-of-lane shapes, empty dims, and
+//! NaN/±inf inputs (regression-guarding the `0·NaN` class of bug fixed in
+//! PR 1 at the SIMD layer).
+//!
+//! On machines without AVX2 (or builds without the `simd` feature) both
+//! runs take the scalar path and the assertions are trivially true — the
+//! suite is then exercised for real by the CI x86_64 runners.
+
+use blockbuster::tensor::{simd, Mat, Rng};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Serialize tests that flip the global SIMD switch (the paths are
+/// bit-identical, so concurrent readers are safe — this lock only keeps
+/// each test's "scalar run" honestly scalar).
+fn toggle_lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+fn vbits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run `f` with SIMD disabled, then enabled; the two results must match
+/// exactly.
+fn assert_modes_agree<T: PartialEq + std::fmt::Debug>(what: &str, f: impl Fn() -> T) {
+    let _g = toggle_lock();
+    simd::set_enabled(false);
+    let scalar = f();
+    simd::set_enabled(true);
+    let vector = f();
+    assert_eq!(scalar, vector, "{what}: scalar and SIMD paths disagree");
+}
+
+/// Shapes straddling every lane/tile boundary: 1, lane-1, lane, lane+1,
+/// multiple tiles, row tails, long tails.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (2, 3, 7),
+    (4, 4, 8),
+    (5, 7, 9),
+    (8, 8, 16),
+    (9, 6, 13),
+    (3, 12, 33),
+    (16, 1, 8),
+    (1, 16, 100),
+    (7, 5, 24),
+];
+
+#[test]
+fn dot_bt_and_matmul_parity_on_awkward_shapes() {
+    let mut rng = Rng::new(0xD07);
+    for &(m, n, k) in SHAPES {
+        let a = rng.mat(m, k);
+        let bt = rng.mat(n, k);
+        let b = rng.mat(k, n);
+        assert_modes_agree(&format!("dot_bt {m}x{n}x{k}"), || bits(&a.dot_bt(&bt)));
+        assert_modes_agree(&format!("matmul {m}x{n}x{k}"), || bits(&a.matmul(&b)));
+    }
+}
+
+#[test]
+fn elementwise_and_row_op_parity_on_awkward_shapes() {
+    let mut rng = Rng::new(0xE1E);
+    for &(m, n, _) in SHAPES {
+        let a = rng.mat(m, n);
+        let b = rng.mat(m, n);
+        let c: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+        assert_modes_agree(&format!("add {m}x{n}"), || bits(&a.add(&b)));
+        assert_modes_agree(&format!("hadamard {m}x{n}"), || bits(&a.hadamard(&b)));
+        assert_modes_agree(&format!("row_shift {m}x{n}"), || bits(&a.row_shift(&c)));
+        assert_modes_agree(&format!("row_scale {m}x{n}"), || bits(&a.row_scale(&c)));
+        assert_modes_agree(&format!("row_sum {m}x{n}"), || vbits(&a.row_sum()));
+        assert_modes_agree(&format!("row_max {m}x{n}"), || vbits(&a.row_max()));
+    }
+}
+
+#[test]
+fn empty_dims_parity() {
+    // 0-row / 0-col operands: kernels must no-op identically (and the
+    // reductions of an empty row give 0 / -inf deterministically).
+    let e05 = Mat::zeros(0, 5);
+    let e50 = Mat::zeros(5, 0);
+    assert_modes_agree("dot_bt 0x5 @ (3x5)^T", || {
+        let b = Mat::from_fn(3, 5, |i, j| (i + j) as f32);
+        let r = e05.dot_bt(&b);
+        ((r.rows, r.cols), bits(&r))
+    });
+    assert_modes_agree("dot_bt 5x0 @ (4x0)^T", || {
+        let b = Mat::zeros(4, 0);
+        let r = e50.dot_bt(&b);
+        ((r.rows, r.cols), bits(&r))
+    });
+    assert_modes_agree("row_sum/max of 0-col rows", || {
+        (vbits(&e50.row_sum()), vbits(&e50.row_max()))
+    });
+    let s = e50.row_sum();
+    let m = e50.row_max();
+    assert!(s.iter().all(|&x| x == 0.0));
+    assert!(m.iter().all(|&x| x == f32::NEG_INFINITY));
+}
+
+/// Scatter NaN / +inf / -inf through otherwise-finite matrices.
+fn poisoned(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    let mut m = rng.mat(rows, cols);
+    let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0];
+    for (i, s) in specials.iter().cycle().take(rows.max(1) * 2).enumerate() {
+        let idx = (i * 7 + 3) % (rows * cols).max(1);
+        if idx < m.data.len() {
+            m.data[idx] = *s;
+        }
+    }
+    m
+}
+
+#[test]
+fn nan_inf_propagation_parity() {
+    let mut rng = Rng::new(0x1F);
+    for &(m, n, k) in &[(5usize, 7usize, 9usize), (8, 8, 16), (3, 4, 33)] {
+        let a = poisoned(&mut rng, m, k);
+        let bt = poisoned(&mut rng, n, k);
+        let b = poisoned(&mut rng, k, n);
+        let e = poisoned(&mut rng, m, n);
+        let f = poisoned(&mut rng, m, n);
+        assert_modes_agree(&format!("dot_bt nan/inf {m}x{n}x{k}"), || {
+            bits(&a.dot_bt(&bt))
+        });
+        assert_modes_agree(&format!("matmul nan/inf {m}x{n}x{k}"), || bits(&a.matmul(&b)));
+        assert_modes_agree(&format!("add nan/inf {m}x{n}"), || bits(&e.add(&f)));
+        assert_modes_agree(&format!("hadamard nan/inf {m}x{n}"), || {
+            bits(&e.hadamard(&f))
+        });
+        assert_modes_agree(&format!("row_sum nan/inf {m}x{n}"), || vbits(&e.row_sum()));
+        assert_modes_agree(&format!("row_max nan/inf {m}x{n}"), || vbits(&e.row_max()));
+    }
+}
+
+/// `0 · NaN` and `0 · inf` must stay NaN through the SIMD matmul exactly
+/// as through the scalar one (the PR 1 regression, now at the SIMD layer).
+#[test]
+fn zero_times_nan_is_preserved_in_both_modes() {
+    let _g = toggle_lock();
+    let a = Mat::from_vec(1, 2, vec![0.0, 2.0]);
+    let b = Mat::from_vec(2, 2, vec![f32::NAN, f32::INFINITY, 3.0, 4.0]);
+    for on in [false, true] {
+        simd::set_enabled(on);
+        let c = a.matmul(&b);
+        assert!(c.at(0, 0).is_nan(), "simd={on}: 0*NaN + 2*3 must be NaN");
+        assert!(c.at(0, 1).is_nan(), "simd={on}: 0*inf + 2*4 must be NaN");
+    }
+    simd::set_enabled(true);
+}
