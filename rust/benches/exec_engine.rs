@@ -9,10 +9,12 @@
 //! trials get: one skeleton, many bindings). Emits `BENCH_exec.json`
 //! next to the textual table so the speedup trajectory is tracked from
 //! this PR onward: `speedup_geomean` is the *within-commit* interp→
-//! compiled ratio, while the cross-PR compiled trajectory (e.g. the
-//! "≥1.5× over the previous compiled baseline" acceptance check) is the
-//! per-program `compiled_ms` fields diffed across commits/CI artifacts.
-//! Set `BB_BENCH_SMOKE=1` for a seconds-long CI smoke run at demo sizes.
+//! compiled ratio, `ew_speedup_geomean` the per-expression scalar-tape→
+//! batched-VM ratio (the `exprs` rows), while the cross-PR compiled
+//! trajectory (e.g. the "≥1.5× over the previous compiled baseline"
+//! acceptance check) is the per-program `compiled_ms` fields diffed
+//! across commits/CI artifacts. Set `BB_BENCH_SMOKE=1` for a
+//! seconds-long CI smoke run at demo sizes.
 
 use blockbuster::coordinator::workloads;
 use blockbuster::exec::to_blocks;
@@ -142,6 +144,70 @@ fn main() {
     simd::set_enabled(true);
     kt.print();
 
+    // ---- per-expression micro-bench: scalar tape vs batched VM ------------
+    // The elementwise chains that dominate the paper's fused mega-kernels,
+    // evaluated over one dim×dim block: per-element `eval_with` (the old
+    // `ComputeKind::Ew` path) vs one `ExprVm::run` (the new path). Both
+    // run with SIMD enabled — this row isolates the batching win itself.
+    use blockbuster::ir::expr::Expr;
+    use blockbuster::ir::exprvm::{EwScratch, ExprVm};
+    // same canned expressions the backend-parity suite certifies
+    // (`Expr::softmax_tail` / `Expr::gelu_erf`), so the bench measures
+    // exactly what the tests cover
+    let exprs: Vec<(&str, Expr)> = vec![
+        ("swish", Expr::swish(Expr::var(0))),
+        ("softmax_tail", Expr::softmax_tail(Expr::var(0), Expr::var(1))),
+        ("gelu_erf", Expr::gelu_erf(Expr::var(0))),
+        ("relu", Expr::relu(Expr::var(0))),
+    ];
+    let mut et = Table::new(
+        &format!("Elementwise expressions over a {dim}x{dim} block, scalar tape vs batched VM"),
+        &["expr", "scalar", "vm", "speedup"],
+    );
+    let mut erows = Vec::new();
+    let mut ew_log_speedups = 0.0f64;
+    let x0: Vec<f32> = a.data.clone();
+    let x1: Vec<f32> = b.data.clone();
+    for (name, e) in &exprs {
+        let ce = e.compile(&Default::default());
+        let vm = ExprVm::from_compiled(&ce);
+        let n = ce.arity;
+        let args: Vec<&[f32]> = [&x0[..], &x1[..]][..n].to_vec();
+        let mut scratch = EwScratch::new();
+        let mut out = vec![0.0f32; x0.len()];
+        let ss = bench(min_iters, budget / 4, || {
+            let mut xs = [0.0f32; 2];
+            for i in 0..out.len() {
+                for (k, arg) in args.iter().enumerate() {
+                    xs[k] = arg[i];
+                }
+                out[i] = ce.eval_with(&xs[..n], &mut scratch.stack);
+            }
+            out[0]
+        });
+        let sv = bench(min_iters, budget / 4, || {
+            vm.run(&args, &mut out, &mut scratch);
+            out[0]
+        });
+        let speedup = ss.median_ns / sv.median_ns;
+        ew_log_speedups += speedup.ln();
+        et.row(vec![
+            name.to_string(),
+            fmt_stat(&ss),
+            fmt_stat(&sv),
+            format!("{speedup:.2}x"),
+        ]);
+        erows.push(Json::obj(vec![
+            ("expr", Json::Str(name.to_string())),
+            ("scalar_us", Json::Num(ss.median_ns / 1e3)),
+            ("vm_us", Json::Num(sv.median_ns / 1e3)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    let ew_geomean = (ew_log_speedups / exprs.len().max(1) as f64).exp();
+    et.print();
+    println!("\nexpression-VM speedup geomean: {ew_geomean:.2}x");
+
     let report = Json::obj(vec![
         ("bench", Json::Str("exec_backend_speedup".into())),
         ("grid_scale", Json::Num(scale as f64)),
@@ -161,9 +227,13 @@ fn main() {
         // baseline is a cross-commit diff of those fields
         ("geomean_basis", Json::Str("interp_vs_compiled".into())),
         ("speedup_geomean", Json::Num(geomean)),
+        // scalar-tape → batched-VM ratio over the per-expression rows
+        // below (both sides SIMD-on, so this isolates the batching win)
+        ("ew_speedup_geomean", Json::Num(ew_geomean)),
         ("programs", Json::Arr(rows)),
         ("kernel_dim", Json::Num(dim as f64)),
         ("kernels", Json::Arr(krows)),
+        ("exprs", Json::Arr(erows)),
     ]);
     write_json_report("BENCH_exec.json", &report).expect("writing BENCH_exec.json");
     println!("\nwrote BENCH_exec.json");

@@ -193,6 +193,25 @@ pub fn autotune_measured(
     backend: ExecBackend,
     trials: usize,
 ) -> Vec<MeasuredPoint> {
+    autotune_measured_opts(g, full, local_capacity, model, params, inputs, backend, trials, None)
+}
+
+/// [`autotune_measured`] plus a worker cap for the compiled engine's
+/// parallel grid loops (the CLI's `--threads`): measured trials should
+/// run under the same worker budget the tuned program will deploy with,
+/// or the measured ranking optimizes for the wrong machine shape.
+#[allow(clippy::too_many_arguments)]
+pub fn autotune_measured_opts(
+    g: &Graph,
+    full: &HashMap<String, (usize, usize)>,
+    local_capacity: u64,
+    model: &CostModel,
+    params: &BTreeMap<String, f32>,
+    inputs: &HashMap<String, Mat>,
+    backend: ExecBackend,
+    trials: usize,
+    threads: Option<usize>,
+) -> Vec<MeasuredPoint> {
     let ir = lower(g);
     let static_rank = autotune_ir(&ir, full, local_capacity, model);
     // one workload shared across trials (inputs can be large); only the
@@ -203,7 +222,7 @@ pub fn autotune_measured(
         params: params.clone(),
         inputs: inputs.clone(),
         local_capacity: None,
-        threads: None,
+        threads,
     };
     let mut cache = TapeCache::new();
     let mut out = Vec::new();

@@ -7,13 +7,16 @@
 //! churn, no expression recompilation in the hot loop.
 //!
 //! **Parallel scheduling.** Every `forall` loop the compile-time analysis
-//! annotated [`LoopMeta::parallel`] may fan its iterations out across
-//! `std::thread::scope` workers (no external crates). Fan-out happens at
-//! the outermost parallel loop the main thread reaches: a parallel
-//! top-level grid always; a parallel loop *nested under a serial outer
-//! loop* when its bind-time executed-instruction weight clears
-//! [`NESTED_FANOUT_MIN_WORK`] (spawning a scope per outer iteration must
-//! be worth it). The region is over-decomposed into up to
+//! annotated [`LoopMeta::parallel`] may fan its iterations out across the
+//! persistent worker pool of [`super::pool`] (no external crates; workers
+//! are spawned lazily once, parked between regions, and handed jobs by
+//! epoch — the per-region `thread::scope` spawn/join of earlier PRs is
+//! gone from the hot path). Fan-out happens at the outermost parallel
+//! loop the main thread reaches: a parallel top-level grid always; a
+//! parallel loop *nested under a serial outer loop* when its bind-time
+//! executed-instruction weight clears [`NESTED_FANOUT_MIN_WORK`] (a pool
+//! handoff is cheap but not free, and it is paid per enclosing
+//! iteration). The region is over-decomposed into up to
 //! [`CHUNKS_PER_WORKER`] chunks per worker and drained through the
 //! work-stealing deques of [`super::sched`], so ragged grids balance.
 //!
@@ -31,12 +34,13 @@
 //! accounting bit-identical (pinned by the threads=1 parity test).
 
 use crate::exec::sched::{split_chunks, StealQueue};
+use crate::ir::exprvm::EwScratch;
 use crate::loopir::compile::{accum_val, CompiledProgram, Instr, SlotSel};
 use crate::loopir::interp::{BufVal, ExecConfig, ExecResult, MemSim};
 use crate::loopir::BufId;
 use crate::tensor::Val;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 
 /// Hard cap on scheduler workers, whatever `available_parallelism` or
@@ -50,12 +54,16 @@ pub const CHUNKS_PER_WORKER: usize = 4;
 
 /// Minimum executed-instruction weight ([`crate::loopir::compile::LoopMeta::weight`],
 /// which folds in bound trip counts of nested loops) before a *nested*
-/// parallel loop is worth a `thread::scope` spawn per enclosing
-/// iteration: a spawn+join costs tens of microseconds, one tape
-/// instruction (a block op on a small tile) runs in well under one, so
-/// fan-out below ~1k instructions would lose to the serial path it
-/// replaces. Top-level grids always fan out (their spawn cost is paid
-/// once per kernel, not once per outer iteration).
+/// parallel loop is worth a pool handoff per enclosing iteration. The
+/// persistent pool removed the thread spawn+join this constant was
+/// originally sized against, but a handoff still costs a condvar
+/// broadcast, worker seeding (register/var file clones), and the
+/// deferred-store merge — while one tape instruction (a block op on a
+/// small tile) runs in well under a microsecond. The threshold is kept
+/// unchanged: it only gates a wall-clock trade, never results (fan-out
+/// is bit-identical), and re-tuning it belongs with a measured bench.
+/// Top-level grids always fan out (their handoff is paid once per
+/// kernel, not once per outer iteration).
 pub const NESTED_FANOUT_MIN_WORK: u64 = 1024;
 
 // Global memory is the interpreter's own `BufVal` (Arc payloads): engine
@@ -108,7 +116,9 @@ struct WorkerOut {
 struct Machine {
     regs: Vec<usize>,
     vars: Vec<Option<Arc<Val>>>,
-    stack: Vec<f32>,
+    /// Elementwise workspace (scalar stack + expression-VM slab file),
+    /// reused across every compute site this machine executes.
+    scratch: EwScratch,
     mem: MemSim,
     live: u64,
     cap: Option<u64>,
@@ -119,7 +129,7 @@ impl Machine {
         Machine {
             regs: vec![0; n_regs],
             vars: vec![None; n_vars],
-            stack: Vec::with_capacity(16),
+            scratch: EwScratch::new(),
             mem: MemSim::default(),
             live: 0,
             cap,
@@ -154,8 +164,8 @@ impl Machine {
 
     /// Execute the instruction range `[range.0, range.1)`. `par_workers`
     /// is the fan-out budget for parallel loops met along the way
-    /// (`<= 1` disables fan-out — always the case inside workers, which
-    /// prevents nested thread scopes).
+    /// (`<= 1` disables fan-out — always the case inside pool workers,
+    /// which prevents re-entrant pool submissions).
     fn run_range(
         &mut self,
         prog: &CompiledProgram,
@@ -233,7 +243,7 @@ impl Machine {
                                 .unwrap_or_else(|| panic!("var t{a} read before assignment"))
                         })
                         .collect();
-                    let (v, fl) = cs.kind.apply(&args, &mut self.stack);
+                    let (v, fl) = cs.kind.apply(&args, &mut self.scratch);
                     drop(args);
                     self.mem.flops += fl;
                     self.set_var(*var, Arc::new(v));
@@ -284,10 +294,13 @@ impl Machine {
         }
     }
 
-    /// Fan the iterations of parallel loop `li` out across `workers`
-    /// scoped threads via the work-stealing deques, then merge: apply
-    /// deferred stores, sum counters, adopt the final iteration's var
-    /// values, and leave the loop register at its sequential exit value.
+    /// Fan the iterations of parallel loop `li` out across `workers` of
+    /// the persistent pool ([`super::pool`]) via the work-stealing
+    /// deques, then merge: apply deferred stores, sum counters, adopt the
+    /// final iteration's var values, and leave the loop register at its
+    /// sequential exit value. Worker panics re-raise here with their
+    /// original payload (capacity and read-before-assignment diagnostics
+    /// survive pooling).
     fn run_parallel_loop(
         &mut self,
         prog: &CompiledProgram,
@@ -309,62 +322,56 @@ impl Machine {
         // within the body).
         let seed_regs: Vec<usize> = self.regs.clone();
         let seed_vars: Vec<Option<Arc<Val>>> = self.vars.clone();
-        let results: Vec<WorkerOut> = thread::scope(|s| {
+        // One slot per worker; the pool guarantees every index runs
+        // exactly once before `run` returns, so the merge below sees
+        // every slot filled. The merge itself is order-insensitive
+        // (disjoint stores, summed counters, single last-chunk snapshot),
+        // so pooling cannot change results vs scoped threads.
+        let slots: Vec<Mutex<Option<WorkerOut>>> = (0..nw).map(|_| Mutex::new(None)).collect();
+        {
             let shared: &[BufVal] = bufs;
             let queue = &queue;
             let seed_regs = &seed_regs;
             let seed_vars = &seed_vars;
-            let handles: Vec<_> = (0..nw)
-                .map(|w| {
-                    s.spawn(move || {
-                        let mut wm = Machine::new(prog.n_regs, prog.n_vars, cap);
-                        wm.regs.copy_from_slice(seed_regs);
-                        wm.vars = seed_vars.clone();
-                        // capacity baseline: the enclosing scope's live
-                        // locals still occupy local memory
-                        wm.live = base_live;
-                        let mut sink = Sink::Deferred {
-                            shared,
-                            pending: Vec::new(),
-                        };
-                        let m = &prog.loops[li];
-                        let mut final_vars: Option<Vec<Option<Arc<Val>>>> = None;
-                        while let Some(chunk) = queue.next(w) {
-                            for x in chunk.lo..chunk.hi {
-                                for &c in &m.clears {
-                                    wm.clear_var(c);
-                                }
-                                wm.regs[m.reg] = x;
-                                wm.run_range(prog, (m.body_ip, m.end_ip), &mut sink, 0);
-                            }
-                            if chunk.id == last_chunk {
-                                final_vars =
-                                    Some(m.clears.iter().map(|&v| wm.vars[v].clone()).collect());
-                            }
+            let slots = &slots;
+            super::pool::global().run(nw, &move |w: usize| {
+                let mut wm = Machine::new(prog.n_regs, prog.n_vars, cap);
+                wm.regs.copy_from_slice(seed_regs);
+                wm.vars = seed_vars.clone();
+                // capacity baseline: the enclosing scope's live
+                // locals still occupy local memory
+                wm.live = base_live;
+                let mut sink = Sink::Deferred {
+                    shared,
+                    pending: Vec::new(),
+                };
+                let m = &prog.loops[li];
+                let mut final_vars: Option<Vec<Option<Arc<Val>>>> = None;
+                while let Some(chunk) = queue.next(w) {
+                    for x in chunk.lo..chunk.hi {
+                        for &c in &m.clears {
+                            wm.clear_var(c);
                         }
-                        let pending = match sink {
-                            Sink::Deferred { pending, .. } => pending,
-                            Sink::Direct(_) => unreachable!(),
-                        };
-                        WorkerOut {
-                            mem: wm.mem,
-                            pending,
-                            final_vars,
-                        }
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| match h.join() {
-                    Ok(r) => r,
-                    // re-raise with the original payload so capacity and
-                    // read-before-assignment diagnostics survive threading
-                    Err(p) => std::panic::resume_unwind(p),
-                })
-                .collect()
-        });
-        for wo in results {
+                        wm.regs[m.reg] = x;
+                        wm.run_range(prog, (m.body_ip, m.end_ip), &mut sink, 0);
+                    }
+                    if chunk.id == last_chunk {
+                        final_vars = Some(m.clears.iter().map(|&v| wm.vars[v].clone()).collect());
+                    }
+                }
+                let pending = match sink {
+                    Sink::Deferred { pending, .. } => pending,
+                    Sink::Direct(_) => unreachable!(),
+                };
+                *slots[w].lock().unwrap() = Some(WorkerOut {
+                    mem: wm.mem,
+                    pending,
+                    final_vars,
+                });
+            });
+        }
+        for slot in slots {
+            let wo = slot.into_inner().unwrap().expect("pool ran every worker index");
             for (b, f, v) in wo.pending {
                 bufs[b].data[f] = Some(v);
             }

@@ -16,23 +16,30 @@
 //!   times faster, which is what makes autotune trials and large benches
 //!   tractable.
 //!
-//! The compiled path stacks three mechanisms (PR 2):
+//! The compiled path stacks four mechanisms (PR 2–3):
 //!
 //! * **SIMD kernels** — the block operators bottom out in
 //!   [`crate::tensor::simd`]'s explicit-width kernels (AVX2 with a
 //!   bit-identical scalar fallback; `simd` cargo feature, runtime
 //!   `--no-simd` kill-switch);
-//! * **work-stealing scheduler** — parallel grid loops (top-level *or*
-//!   nested under a serial loop, per [`crate::loopir::compile`]'s
-//!   per-loop annotations) are over-decomposed into chunks and drained
-//!   through [`sched`]'s stealing deques across `std::thread::scope`
-//!   workers (`Workload::threads` / `--threads` caps the worker count);
+//! * **batched elementwise VM** — `ComputeKind::Ew` sites evaluate
+//!   whole vectors/blocks through [`crate::ir::exprvm`]'s slice-at-a-
+//!   time expression VM instead of a per-element stack machine (also
+//!   governed by the SIMD kill-switch, and bit-identical either way);
+//! * **work-stealing scheduler on a persistent pool** — parallel grid
+//!   loops (top-level *or* nested under a serial loop, per
+//!   [`crate::loopir::compile`]'s per-loop annotations) are
+//!   over-decomposed into chunks and drained through [`sched`]'s
+//!   stealing deques across the lazily-spawned, parked workers of
+//!   [`pool`] (`Workload::threads` / `--threads` caps the worker
+//!   count; threads=1 never touches the pool);
 //! * **tape caching** — compilation is split into a size-independent
 //!   [`TapeSkeleton`] and a cheap per-`DimSizes` bind; [`TapeCache`]
 //!   shares skeletons across executions that differ only in block
 //!   counts, which is exactly the autotuner's measured-trial loop.
 
 pub mod engine;
+pub mod pool;
 pub mod reference;
 pub mod sched;
 

@@ -1,0 +1,282 @@
+//! Persistent worker pool for the compiled engine's parallel regions.
+//!
+//! PR 1/2 fanned every parallel region out through a fresh
+//! `std::thread::scope` — correct, but each region paid thread
+//! spawn+join (tens of microseconds), which nested fan-out re-paid *per
+//! enclosing iteration* and small grids could never amortize. This
+//! module replaces the per-region scope with one process-wide pool:
+//!
+//! * **lazily initialized** — no threads exist until the first region
+//!   actually fans out (threads=1 executions never touch the pool);
+//! * **capped** — worker count only grows to the largest fan-out ever
+//!   requested, clamped to [`crate::exec::engine::MAX_WORKERS`]; workers
+//!   are never torn down (they park on a condvar between jobs, costing
+//!   only an idle stack);
+//! * **epoch-based job handoff** — a region submission bumps an epoch
+//!   under the state lock and publishes one job (a `Fn(usize)` run once
+//!   per worker index); parked workers wake on the epoch change, run
+//!   their index if it is in range, and check in. The submitter blocks
+//!   until every participating worker has checked in, so the job's
+//!   borrowed environment (tape, buffers, steal queue, seed files) is
+//!   guaranteed dead before [`WorkerPool::run`] returns — which is what
+//!   makes the one `unsafe` lifetime erasure below sound.
+//!
+//! Worker panics are caught and re-raised on the submitting thread with
+//! the original payload (capacity and read-before-assignment diagnostics
+//! survive pooling exactly as they survived scoped threads). A job
+//! submitted *from* a pool worker (impossible today — workers execute
+//! with fan-out disabled — but cheap insurance) runs inline on the
+//! caller rather than deadlocking on its own pool.
+//!
+//! **Known trade-off:** the pool runs one job at a time — concurrent
+//! submitters (two executions driven from different OS threads in one
+//! process) serialize their parallel regions on the submit lock, where
+//! the old scoped engine let each execution spawn its own threads.
+//! Single-execution callers (the CLI, benches, the autotuner's trial
+//! loop) are unaffected; if concurrent in-process executions ever become
+//! a hot path, the handoff needs per-job state instead of one slot.
+//!
+//! Determinism: the pool only changes *where* worker bodies run, not what
+//! they compute or how results merge — outputs and `MemSim` counters
+//! stay bit-identical to the scoped-thread engine and to the
+//! interpreter (pinned by `tests/pool_stress.rs` and the parity suites).
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::thread;
+
+use super::engine::MAX_WORKERS;
+
+/// Type-erased job: run once per participating worker index.
+type JobFn = dyn Fn(usize) + Sync;
+
+/// Raw job pointer shipped to workers. Lifetime-erased; validity is
+/// guaranteed by [`WorkerPool::run`] blocking until all check-ins.
+#[derive(Clone, Copy)]
+struct JobPtr(*const JobFn);
+// SAFETY: the pointee is `Sync` (shared by all workers by construction)
+// and outlives every dereference (see module docs on the handoff
+// protocol), so shipping the pointer across threads is sound.
+unsafe impl Send for JobPtr {}
+
+struct State {
+    /// Bumped once per submission; workers detect new work by comparing
+    /// against the last epoch they served.
+    epoch: u64,
+    /// The most recently published job and its worker count. `None` only
+    /// before the first submission ever — the slot is deliberately *not*
+    /// cleared on completion, so a slow non-participating worker that
+    /// wakes after a job finished observes a stale (possibly dangling)
+    /// entry; that is sound because it only *copies* the pointer and,
+    /// seeing `w >= nw`, never dereferences it. A worker with `w < nw`
+    /// is a participant, and the submitter cannot return (ending the
+    /// pointee's lifetime) until that worker's check-in — which happens
+    /// strictly after its dereference.
+    job: Option<(JobPtr, usize)>,
+    /// Workers spawned so far (monotone, ≤ [`MAX_WORKERS`]).
+    spawned: usize,
+    /// Participating workers that have not yet checked in.
+    unfinished: usize,
+    /// First worker panic of the current job, re-raised by the submitter.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// The process-wide persistent worker pool (see module docs).
+pub struct WorkerPool {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The submitter parks here until all check-ins.
+    done_cv: Condvar,
+    /// Serializes submitters (defense in depth: the engine only ever
+    /// submits from the main execution thread).
+    submit: Mutex<()>,
+}
+
+thread_local! {
+    /// Set on pool worker threads; routes re-entrant submissions inline.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// The global pool instance (created empty; threads spawn on first use).
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool {
+        state: Mutex::new(State {
+            epoch: 0,
+            job: None,
+            spawned: 0,
+            unfinished: 0,
+            panic: None,
+        }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+        submit: Mutex::new(()),
+    })
+}
+
+impl WorkerPool {
+    /// Run `f(0)`, …, `f(nw-1)`, one call per pool worker, and block
+    /// until all have finished. Panics in any call are re-raised here
+    /// with their original payload. `nw` is clamped to [`MAX_WORKERS`];
+    /// `nw == 0` is a no-op.
+    pub fn run(&'static self, nw: usize, f: &(dyn Fn(usize) + Sync)) {
+        if nw == 0 {
+            return;
+        }
+        if IN_POOL_WORKER.with(|c| c.get()) {
+            // Re-entrant submission from a worker body: run inline
+            // instead of deadlocking on our own handoff.
+            for w in 0..nw {
+                f(w);
+            }
+            return;
+        }
+        let nw = nw.min(MAX_WORKERS);
+        // A propagated worker panic unwinds `run` while this guard is
+        // held, poisoning the mutex; the lock protects no data (it only
+        // serializes submitters), so poisoning is recovered, not fatal.
+        let _submit = self
+            .submit
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        // Lifetime erasure (fat reference → 'static fat pointer; the
+        // pointer-to-pointer step ignores trait-object lifetime bounds):
+        // `f` must stay alive until every worker checks in, which the
+        // wait loop below enforces before returning.
+        let job = JobPtr(f as *const _ as *const JobFn);
+        {
+            let mut st = self.state.lock().unwrap();
+            while st.spawned < nw {
+                let w = st.spawned;
+                let seen = st.epoch;
+                thread::Builder::new()
+                    .name(format!("bb-pool-{w}"))
+                    .spawn(move || worker_loop(global(), w, seen))
+                    .expect("spawning pool worker");
+                st.spawned += 1;
+            }
+            st.epoch += 1;
+            st.job = Some((job, nw));
+            st.unfinished = nw;
+        }
+        self.work_cv.notify_all();
+        let mut st = self.state.lock().unwrap();
+        while st.unfinished > 0 {
+            st = self.done_cv.wait(st).unwrap();
+        }
+        // `st.job` is intentionally left stale (see its field docs).
+        let panic = st.panic.take();
+        drop(st);
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+    }
+
+    /// Worker threads spawned so far — monotone and ≤ [`MAX_WORKERS`]
+    /// (the stress suite's leak/cap check).
+    pub fn spawned(&self) -> usize {
+        self.state.lock().unwrap().spawned
+    }
+}
+
+/// The parked-worker loop: wait for an epoch bump, serve the job if this
+/// worker's index participates, check in, re-park.
+fn worker_loop(pool: &'static WorkerPool, w: usize, mut seen: u64) {
+    IN_POOL_WORKER.with(|c| c.set(true));
+    loop {
+        let (job, nw) = {
+            let mut st = pool.state.lock().unwrap();
+            loop {
+                if st.epoch != seen {
+                    // An epoch bump always publishes a job first; the
+                    // entry may be stale if this worker slept through
+                    // completed epochs, in which case `w >= nw` below
+                    // keeps the (possibly dangling) pointer untouched —
+                    // see the `State::job` field docs.
+                    let (job, nw) = st.job.expect("epoch bumped without a job");
+                    seen = st.epoch;
+                    break (job, nw);
+                }
+                st = pool.work_cv.wait(st).unwrap();
+            }
+        };
+        if w >= nw {
+            // Not participating in this job; wait for the next epoch.
+            continue;
+        }
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: `run` keeps the pointee alive until this worker's
+            // check-in below.
+            unsafe { (&*job.0)(w) }
+        }))
+        .err();
+        let mut st = pool.state.lock().unwrap();
+        if let Some(p) = err {
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+        st.unfinished -= 1;
+        if st.unfinished == 0 {
+            pool.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..6).map(|_| AtomicUsize::new(0)).collect();
+        global().run(6, &|w| {
+            hits[w].fetch_add(1, Ordering::SeqCst);
+        });
+        for (w, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "worker {w}");
+        }
+        assert!(global().spawned() >= 6);
+        assert!(global().spawned() <= MAX_WORKERS);
+    }
+
+    #[test]
+    fn reuses_workers_across_jobs() {
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            global().run(4, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 200);
+        assert!(global().spawned() <= MAX_WORKERS, "pool must stay capped");
+    }
+
+    #[test]
+    fn worker_panic_propagates_payload() {
+        let r = std::panic::catch_unwind(|| {
+            global().run(3, &|w| {
+                if w == 1 {
+                    panic!("pool test payload");
+                }
+            });
+        });
+        let p = r.expect_err("panic must propagate");
+        let msg = p
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_string)
+            .or_else(|| p.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("pool test payload"), "got: {msg}");
+        // the pool must remain usable after a panicked job
+        let ok = AtomicUsize::new(0);
+        global().run(3, &|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 3);
+    }
+}

@@ -110,6 +110,30 @@ impl Expr {
         x.max(Expr::cst(0.0))
     }
 
+    /// `exp(x − shift) / (exp(x − shift) + 0.125)` — the exp/sub/div
+    /// chain left after fusing a numerically-safe softmax (shifted
+    /// numerator over a shifted partial denominator). Shared by the
+    /// Ew-heavy backend-parity programs and the expression-VM bench so
+    /// they certify and measure the same expression.
+    pub fn softmax_tail(x: Expr, shift: Expr) -> Expr {
+        let s = x.sub(shift).exp();
+        s.clone().div(s.add(Expr::cst(0.125)))
+    }
+
+    /// `0.5·x·(1 + sign(x)·(1 − exp(−|x|·(a + b·|x|))))` — a tanh-free
+    /// GELU-style erf approximation built from exp/abs, with the sign
+    /// recovered as `x/(|x|+ε)`. Shared by the Ew-heavy backend-parity
+    /// programs and the expression-VM bench (see [`Expr::softmax_tail`]).
+    pub fn gelu_erf(x: Expr) -> Expr {
+        let absx = x.clone().abs();
+        let inner = absx
+            .clone()
+            .mul(Expr::cst(1.13).add(Expr::cst(0.273).mul(absx.clone())));
+        let mag = Expr::cst(1.0).sub(inner.neg().exp());
+        let sign = x.clone().div(absx.add(Expr::cst(1e-6)));
+        Expr::cst(0.5).mul(x).mul(Expr::cst(1.0).add(sign.mul(mag)))
+    }
+
     /// Highest input index referenced, plus one (0 if no inputs referenced).
     pub fn arity(&self) -> usize {
         match self {
@@ -309,8 +333,12 @@ pub struct CompiledExpr {
     pub arity: usize,
 }
 
+/// One postfix instruction of a [`CompiledExpr`]. Public so the batched
+/// expression VM ([`super::exprvm`]) can translate the tape into its
+/// slice-at-a-time program; the scalar evaluator below stays the
+/// semantic reference.
 #[derive(Clone, Copy, Debug)]
-enum TapeOp {
+pub enum TapeOp {
     PushVar(usize),
     PushConst(f32),
     Un(UnOp),
@@ -361,6 +389,12 @@ impl Expr {
 }
 
 impl CompiledExpr {
+    /// The postfix instruction tape (read-only; consumed by
+    /// [`super::exprvm::ExprVm::from_compiled`]).
+    pub fn ops(&self) -> &[TapeOp] {
+        &self.tape
+    }
+
     /// Evaluate on the given argument values; `stack` is caller-provided
     /// scratch (cleared here) to keep the per-element path allocation-free.
     #[inline]

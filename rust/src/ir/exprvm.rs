@@ -1,0 +1,361 @@
+//! Batched (block-at-a-time) elementwise expression VM.
+//!
+//! [`super::expr::CompiledExpr`] evaluates one element per call through a
+//! postfix stack machine — fine for scalars, ruinous for blocks: a fused
+//! mega-kernel's elementwise tail re-runs the interpreter dispatch loop
+//! `rows*cols` times per block operator ("the largest remaining scalar
+//! hotspot" per ROADMAP). This module compiles the postfix tape **once**
+//! into a vector program whose ops operate on whole slices:
+//!
+//! * the per-element value stack becomes a **register stack of slabs** —
+//!   one flat scratch buffer ([`EwScratch::slabs`]) striped into
+//!   `max_slabs` strides of up to [`SLAB_CHUNK`] elements, reused across
+//!   calls (no per-element `Vec` churn, bounded footprint for big blocks);
+//! * `PushVar`/`PushConst` fill a slab (one `copy_from_slice`/`fill`);
+//!   `Un`/`Bin` run one [`crate::tensor::simd`] elementwise slice kernel
+//!   over the top slab(s);
+//! * the translation fuses `PushVar x; Bin op` / `PushConst c; Bin op`
+//!   pairs into single [`VmOp::BinVar`]/[`VmOp::BinConst`] ops — in
+//!   postfix, an operand pushed immediately before a binary op *is* that
+//!   op's right-hand side, so the fusion just skips materializing it in a
+//!   slab (most binary ops in real programs have a leaf rhs, so this
+//!   halves slab traffic and stack depth).
+//!
+//! **Bit-identity contract.** For every element, the VM applies exactly
+//! the operation sequence `eval_with` applies, with the same operand
+//! order, through kernels that are per-element identical to the scalar
+//! ops on every dispatch path (see `tensor::simd`'s elementwise kernel
+//! docs: AVX2 only where IEEE-identical; libm and `f32::max`/`min` stay
+//! scalar calls inside slice loops). Elementwise ops carry no
+//! cross-element reduction, so chunking into slabs cannot reorder
+//! anything; the remainder tail of a chunk runs the identical op
+//! sequence. The differential fuzz suite (`tests/expr_fuzz.rs`) holds
+//! the VM to bitwise equality with `eval_with` — NaN payloads included —
+//! across simd on/off.
+
+use super::expr::{BinOp, CompiledExpr, TapeOp, UnOp};
+use crate::tensor::simd;
+
+/// Elements per slab stride: bounds scratch memory at
+/// `max_slabs * SLAB_CHUNK` floats however large the block is, while
+/// keeping the working set of one chunk L1/L2-resident.
+pub const SLAB_CHUNK: usize = 512;
+
+/// One op of the vector program. `Bin*` ops combine **into** the slab
+/// below the operand (lhs in place), mirroring `eval_with`'s
+/// `*x = *x op y`.
+#[derive(Clone, Copy, Debug)]
+enum VmOp {
+    /// Copy input `i` into a fresh top slab.
+    PushVar(usize),
+    /// Fill a fresh top slab with a constant.
+    PushConst(f32),
+    /// Unary kernel in place on the top slab.
+    Un(UnOp),
+    /// Binary kernel: `top-1 = (top-1) op top`; pops.
+    Bin(BinOp),
+    /// Fused `PushVar i; Bin op`: `top = top op input[i]`.
+    BinVar(BinOp, usize),
+    /// Fused `PushConst c; Bin op`: `top = top op c`.
+    BinConst(BinOp, f32),
+}
+
+/// A compiled-once vector program over slices (see module docs).
+#[derive(Clone, Debug)]
+pub struct ExprVm {
+    ops: Vec<VmOp>,
+    /// Peak register-stack depth of the fused program (≤ the scalar
+    /// tape's `max_stack`).
+    max_slabs: usize,
+    /// Input arity (same meaning as [`CompiledExpr::arity`]).
+    pub arity: usize,
+}
+
+/// Reusable scratch for elementwise evaluation: the scalar stack machine's
+/// value stack plus the VM's slab file. One per execution thread
+/// (`exec::engine::Machine` owns one; the interpreter builds one per
+/// compute site, its deliberate naive-baseline behavior).
+#[derive(Default)]
+pub struct EwScratch {
+    /// Scalar-path stack for [`CompiledExpr::eval_with`].
+    pub stack: Vec<f32>,
+    /// Slab file, striped `max_slabs × stride`; grown on demand, reused.
+    slabs: Vec<f32>,
+}
+
+impl EwScratch {
+    pub fn new() -> EwScratch {
+        EwScratch {
+            stack: Vec::with_capacity(16),
+            slabs: Vec::new(),
+        }
+    }
+}
+
+impl ExprVm {
+    /// Translate a compiled postfix tape into the fused vector program.
+    pub fn from_compiled(ce: &CompiledExpr) -> ExprVm {
+        let tape = ce.ops();
+        let mut ops = Vec::with_capacity(tape.len());
+        let mut i = 0;
+        while i < tape.len() {
+            // In postfix, a leaf pushed immediately before a binary op is
+            // that op's rhs — fuse the pair.
+            match (&tape[i], tape.get(i + 1)) {
+                (TapeOp::PushVar(v), Some(TapeOp::Bin(b))) => {
+                    ops.push(VmOp::BinVar(*b, *v));
+                    i += 2;
+                }
+                (TapeOp::PushConst(c), Some(TapeOp::Bin(b))) => {
+                    ops.push(VmOp::BinConst(*b, *c));
+                    i += 2;
+                }
+                (TapeOp::PushVar(v), _) => {
+                    ops.push(VmOp::PushVar(*v));
+                    i += 1;
+                }
+                (TapeOp::PushConst(c), _) => {
+                    ops.push(VmOp::PushConst(*c));
+                    i += 1;
+                }
+                (TapeOp::Un(u), _) => {
+                    ops.push(VmOp::Un(*u));
+                    i += 1;
+                }
+                (TapeOp::Bin(b), _) => {
+                    ops.push(VmOp::Bin(*b));
+                    i += 1;
+                }
+            }
+        }
+        let mut depth = 0usize;
+        let mut max = 0usize;
+        for op in &ops {
+            match op {
+                VmOp::PushVar(_) | VmOp::PushConst(_) => depth += 1,
+                VmOp::Bin(_) => depth -= 1,
+                VmOp::Un(_) | VmOp::BinVar(..) | VmOp::BinConst(..) => {}
+            }
+            max = max.max(depth);
+        }
+        ExprVm {
+            ops,
+            max_slabs: max,
+            arity: ce.arity,
+        }
+    }
+
+    /// Evaluate the expression over whole slices: `out[e] =
+    /// expr(args[0][e], …, args[arity-1][e])` for every `e`, bit-identical
+    /// to calling [`CompiledExpr::eval_with`] per element. `args` must
+    /// hold `arity` slices, each of `out.len()` elements (arity 0 needs
+    /// no inputs and fills `out` with the constant result).
+    pub fn run(&self, args: &[&[f32]], out: &mut [f32], scratch: &mut EwScratch) {
+        assert_eq!(args.len(), self.arity, "exprvm: arity mismatch");
+        for a in args {
+            assert_eq!(a.len(), out.len(), "exprvm: input length mismatch");
+        }
+        let len = out.len();
+        if len == 0 {
+            return;
+        }
+        let stride = len.min(SLAB_CHUNK);
+        let want = self.max_slabs.max(1) * stride;
+        if scratch.slabs.len() < want {
+            scratch.slabs.resize(want, 0.0);
+        }
+        let mut base = 0;
+        while base < len {
+            let n = stride.min(len - base);
+            self.run_chunk(args, base, n, stride, &mut scratch.slabs, out);
+            base += n;
+        }
+    }
+
+    /// One slab-sized chunk `[base, base+n)` of the element range.
+    fn run_chunk(
+        &self,
+        args: &[&[f32]],
+        base: usize,
+        n: usize,
+        stride: usize,
+        slabs: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let mut depth = 0usize;
+        for op in &self.ops {
+            match op {
+                VmOp::PushVar(i) => {
+                    slabs[depth * stride..depth * stride + n]
+                        .copy_from_slice(&args[*i][base..base + n]);
+                    depth += 1;
+                }
+                VmOp::PushConst(c) => {
+                    slabs[depth * stride..depth * stride + n].fill(*c);
+                    depth += 1;
+                }
+                VmOp::Un(u) => {
+                    let top = &mut slabs[(depth - 1) * stride..(depth - 1) * stride + n];
+                    apply_un(*u, top);
+                }
+                VmOp::Bin(b) => {
+                    let (lo, hi) = slabs.split_at_mut((depth - 1) * stride);
+                    let lhs = &mut lo[(depth - 2) * stride..(depth - 2) * stride + n];
+                    let rhs = &hi[..n];
+                    apply_bin(*b, lhs, rhs);
+                    depth -= 1;
+                }
+                VmOp::BinVar(b, i) => {
+                    let lhs = &mut slabs[(depth - 1) * stride..(depth - 1) * stride + n];
+                    apply_bin(*b, lhs, &args[*i][base..base + n]);
+                }
+                VmOp::BinConst(b, c) => {
+                    let lhs = &mut slabs[(depth - 1) * stride..(depth - 1) * stride + n];
+                    apply_bin_c(*b, lhs, *c);
+                }
+            }
+        }
+        out[base..base + n].copy_from_slice(&slabs[..n]);
+    }
+}
+
+/// Unary slice kernel dispatch — per element exactly `eval_with`'s match.
+fn apply_un(u: UnOp, x: &mut [f32]) {
+    match u {
+        UnOp::Neg => simd::ew_neg(x),
+        UnOp::Exp => simd::ew_exp(x),
+        UnOp::Log => simd::ew_ln(x),
+        UnOp::Sqrt => simd::ew_sqrt(x),
+        UnOp::Recip => simd::ew_recip(x),
+        UnOp::Abs => simd::ew_abs(x),
+    }
+}
+
+/// Binary slice kernel dispatch (`lhs = lhs op rhs`, operand order as in
+/// `eval_with`'s `*x = *x op y`).
+fn apply_bin(b: BinOp, lhs: &mut [f32], rhs: &[f32]) {
+    match b {
+        BinOp::Add => simd::add_assign(lhs, rhs),
+        BinOp::Sub => simd::ew_sub(lhs, rhs),
+        BinOp::Mul => simd::mul_assign(lhs, rhs),
+        BinOp::Div => simd::ew_div(lhs, rhs),
+        BinOp::Pow => simd::ew_pow(lhs, rhs),
+        BinOp::Max => simd::ew_max(lhs, rhs),
+        BinOp::Min => simd::ew_min(lhs, rhs),
+    }
+}
+
+/// Binary slice kernel with a constant rhs.
+fn apply_bin_c(b: BinOp, lhs: &mut [f32], c: f32) {
+    match b {
+        BinOp::Add => simd::add_scalar(lhs, c),
+        BinOp::Sub => simd::ew_sub_c(lhs, c),
+        BinOp::Mul => simd::mul_scalar(lhs, c),
+        BinOp::Div => simd::ew_div_c(lhs, c),
+        BinOp::Pow => simd::ew_pow_c(lhs, c),
+        BinOp::Max => simd::ew_max_c(lhs, c),
+        BinOp::Min => simd::ew_min_c(lhs, c),
+    }
+}
+
+/// A pre-compiled elementwise kernel: the scalar tape (kept for the
+/// per-scalar path and as the differential-fuzz reference) plus its
+/// batched vector program. This is what `ComputeKind::Ew` carries.
+#[derive(Clone, Debug)]
+pub struct EwKernel {
+    pub expr: CompiledExpr,
+    pub vm: ExprVm,
+}
+
+impl EwKernel {
+    pub fn new(expr: CompiledExpr) -> EwKernel {
+        let vm = ExprVm::from_compiled(&expr);
+        EwKernel { expr, vm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Expr;
+    use std::collections::BTreeMap;
+
+    fn no_params() -> BTreeMap<String, f32> {
+        BTreeMap::new()
+    }
+
+    fn assert_vm_matches_scalar(e: &Expr, args: &[Vec<f32>], len: usize) {
+        let ce = e.compile(&no_params());
+        let vm = ExprVm::from_compiled(&ce);
+        let mut scratch = EwScratch::new();
+        let slices: Vec<&[f32]> = args.iter().map(|a| &a[..]).collect();
+        let mut got = vec![0.0f32; len];
+        vm.run(&slices, &mut got, &mut scratch);
+        let mut xs = vec![0.0f32; ce.arity];
+        for e_i in 0..len {
+            for (k, a) in args.iter().enumerate() {
+                xs[k] = a[e_i];
+            }
+            let want = ce.eval_with(&xs, &mut scratch.stack);
+            assert_eq!(
+                got[e_i].to_bits(),
+                want.to_bits(),
+                "element {e_i}: vm {} vs scalar {want}",
+                got[e_i]
+            );
+        }
+    }
+
+    #[test]
+    fn swish_batched_matches_scalar() {
+        let e = Expr::swish(Expr::var(0));
+        let xs: Vec<f32> = (0..37).map(|i| (i as f32 - 18.0) * 0.3).collect();
+        assert_vm_matches_scalar(&e, &[xs], 37);
+    }
+
+    #[test]
+    fn fusion_preserves_operand_order() {
+        // c - x and x - c must not be confused by the BinConst fusion
+        let x: Vec<f32> = vec![1.0, 2.5, -3.0, f32::NAN, 0.0];
+        let a = Expr::cst(10.0).sub(Expr::var(0)); // PushConst; PushVar; Bin
+        let b = Expr::var(0).sub(Expr::cst(10.0)); // PushVar; BinConst fused
+        assert_vm_matches_scalar(&a, &[x.clone()], 5);
+        assert_vm_matches_scalar(&b, &[x], 5);
+    }
+
+    #[test]
+    fn arity_zero_fills_constant() {
+        let e = Expr::cst(2.0).mul(Expr::cst(3.0));
+        let ce = e.compile(&no_params());
+        let vm = ExprVm::from_compiled(&ce);
+        let mut out = vec![0.0f32; 11];
+        vm.run(&[], &mut out, &mut EwScratch::new());
+        assert!(out.iter().all(|&v| v == 6.0));
+    }
+
+    #[test]
+    fn chunking_crosses_slab_boundary() {
+        // length > SLAB_CHUNK exercises the multi-chunk path
+        let len = SLAB_CHUNK + 129;
+        let x: Vec<f32> = (0..len).map(|i| (i as f32 * 0.37).sin()).collect();
+        let y: Vec<f32> = (0..len).map(|i| (i as f32 * 0.11).cos()).collect();
+        let e = Expr::var(0)
+            .mul(Expr::var(1))
+            .add(Expr::var(0).neg().exp())
+            .max(Expr::var(1).abs().sqrt());
+        assert_vm_matches_scalar(&e, &[x, y], len);
+    }
+
+    #[test]
+    fn deep_stack_uses_plain_bins() {
+        // right-leaning tree defeats rhs fusion, forcing real slab pops
+        let e = Expr::var(0).add(
+            Expr::var(1)
+                .exp()
+                .add(Expr::var(0).mul(Expr::var(1).add(Expr::var(0).recip()))),
+        );
+        let x: Vec<f32> = (0..19).map(|i| i as f32 - 9.0).collect();
+        let y: Vec<f32> = (0..19).map(|i| (i as f32).ln().max(0.1)).collect();
+        assert_vm_matches_scalar(&e, &[x, y], 19);
+    }
+}

@@ -3,6 +3,9 @@
 //! * [`dim`] — named iteration dimensions and concrete size environments.
 //! * [`types`] — item/list value types; buffering is derived from types.
 //! * [`expr`] — symbolic scalar expressions for elementwise operators.
+//! * [`exprvm`] — the batched slice-at-a-time VM those expressions
+//!   compile to for block/vector evaluation (bit-identical to [`expr`]'s
+//!   scalar stack machine).
 //! * [`func`] — the Table-1 functional operator vocabulary.
 //! * [`graph`] — the hierarchical DAG itself plus builders and algorithms.
 //! * [`validate`] — structural and type invariants.
@@ -11,6 +14,7 @@
 pub mod dim;
 pub mod display;
 pub mod expr;
+pub mod exprvm;
 pub mod func;
 pub mod graph;
 pub mod types;

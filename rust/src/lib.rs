@@ -29,12 +29,15 @@
 //! * [`exec`] — a two-tier-memory execution substrate that runs block
 //!   programs on concrete data behind an `ExecBackend` switch:
 //!   `Interp` tree-walks the loop nest (the semantic ground truth),
-//!   `Compiled` executes the flat tape with SIMD kernels and a
-//!   work-stealing grid-loop scheduler (`exec::sched`), fanning out
-//!   nested grids when the top level is serial — bit-identical outputs
-//!   and traffic counters, several times faster. `exec::TapeCache`
-//!   shares tape skeletons across executions that differ only in block
-//!   counts (the autotuner's measured-trial loop).
+//!   `Compiled` executes the flat tape with SIMD kernels, a batched
+//!   elementwise expression VM (`ir::exprvm`, slice-at-a-time instead
+//!   of per-element), and a work-stealing grid-loop scheduler
+//!   (`exec::sched`) draining a persistent parked worker pool
+//!   (`exec::pool`), fanning out nested grids when the top level is
+//!   serial — bit-identical outputs and traffic counters, several
+//!   times faster. `exec::TapeCache` shares tape skeletons across
+//!   executions that differ only in block counts (the autotuner's
+//!   measured-trial loop).
 //! * [`cost`] + [`autotune`] — the traffic/compute cost model and the block
 //!   shape autotuner the paper's epilogues rely on.
 //! * [`stabilize`] — the Appendix's numerical-safety pass

@@ -27,7 +27,7 @@
 use super::interp::ExecConfig;
 use super::{BufId, COp, Index, LoopIr, LoopKind, Stmt, VarId};
 use crate::ir::dim::{Dim, DimSizes};
-use crate::ir::expr::CompiledExpr;
+use crate::ir::exprvm::{EwKernel, EwScratch};
 use crate::ir::func::{FuncOp, ReduceOp};
 use crate::tensor::{Mat, Val};
 use std::collections::HashSet;
@@ -136,6 +136,11 @@ pub struct ComputeSite {
 /// A block operator with all name/param resolution done ahead of time.
 /// Shared by both backends: the interpreter builds one per execution (its
 /// naive baseline behavior), the compiled engine builds one per site.
+///
+/// `Ew` carries an [`EwKernel`]: the scalar postfix tape *and* its
+/// batched vector program, compiled together at resolution time, so
+/// vector/block applications run one VM pass per value instead of one
+/// stack-machine round-trip per element.
 #[derive(Clone)]
 pub enum ComputeKind {
     Add,
@@ -145,7 +150,7 @@ pub enum ComputeKind {
     RowSum,
     Dot,
     Outer,
-    Ew(CompiledExpr),
+    Ew(EwKernel),
     Misc(fn(&[Val]) -> Val),
 }
 
@@ -176,7 +181,7 @@ impl ComputeKind {
             COp::Func(FuncOp::RowSum) => ComputeKind::RowSum,
             COp::Func(FuncOp::Dot) => ComputeKind::Dot,
             COp::Func(FuncOp::Outer) => ComputeKind::Outer,
-            COp::Func(FuncOp::Ew(e)) => ComputeKind::Ew(e.compile(&cfg.params)),
+            COp::Func(FuncOp::Ew(e)) => ComputeKind::Ew(EwKernel::new(e.compile(&cfg.params))),
             COp::Misc(tag) => ComputeKind::Misc(
                 *cfg.misc_ops
                     .get(tag)
@@ -188,8 +193,10 @@ impl ComputeKind {
     /// Apply to local values; returns the result and its flop charge.
     /// This is the single source of truth for block-op numerics *and*
     /// flop accounting — both backends route through it, which is what
-    /// makes their outputs and `MemSim.flops` bit-identical.
-    pub fn apply(&self, args: &[&Val], stack: &mut Vec<f32>) -> (Val, u64) {
+    /// makes their outputs and `MemSim.flops` bit-identical. `scratch`
+    /// is the caller's reusable elementwise workspace (scalar stack +
+    /// VM slab file).
+    pub fn apply(&self, args: &[&Val], scratch: &mut EwScratch) -> (Val, u64) {
         match self {
             ComputeKind::Add => {
                 let v = args[0].add(args[1]);
@@ -227,45 +234,64 @@ impl ComputeKind {
                 let b = args[1].as_vector();
                 (Val::Block(Mat::outer(a, b)), (a.len() * b.len()) as u64)
             }
-            ComputeKind::Ew(ce) => {
-                let n = ce.arity;
+            ComputeKind::Ew(kern) => {
+                let n = kern.expr.arity;
                 assert_eq!(args.len(), n, "ew arity mismatch");
-                assert!(n <= 8, "elementwise arity > 8 unsupported");
-                let mut xs = [0.0f32; 8];
-                let v = match args[0] {
+                let first = args
+                    .first()
+                    .unwrap_or_else(|| panic!("ew with no inputs has no output shape"));
+                // argument marshalling: a fixed stack array up to arity 8
+                // (the common case), a heap allocation beyond — no arity
+                // cap (regression-tested at arity 9).
+                let v = match first {
                     Val::Scalar(_) => {
+                        let mut small = [0.0f32; 8];
+                        let mut big: Vec<f32>;
+                        let xs: &mut [f32] = if n <= 8 {
+                            &mut small[..n]
+                        } else {
+                            big = vec![0.0; n];
+                            &mut big
+                        };
                         for (k, a) in args.iter().enumerate() {
                             xs[k] = a.as_scalar();
                         }
-                        Val::Scalar(ce.eval_with(&xs[..n], stack))
+                        Val::Scalar(kern.expr.eval_with(xs, &mut scratch.stack))
                     }
+                    // vectors and blocks run the batched VM: one slice
+                    // program per value instead of one stack-machine
+                    // round-trip per element, bit-identical by the
+                    // exprvm contract
                     Val::Vector(v0) => {
-                        let mut out = Vec::with_capacity(v0.len());
-                        for i in 0..v0.len() {
+                        let mut out = vec![0.0f32; v0.len()];
+                        let mut small: [&[f32]; 8] = [&[]; 8];
+                        let big: Vec<&[f32]>;
+                        let slices: &[&[f32]] = if n <= 8 {
                             for (k, a) in args.iter().enumerate() {
-                                xs[k] = a.as_vector()[i];
+                                small[k] = a.as_vector();
                             }
-                            out.push(ce.eval_with(&xs[..n], stack));
-                        }
+                            &small[..n]
+                        } else {
+                            big = args.iter().map(|a| a.as_vector()).collect();
+                            &big
+                        };
+                        kern.vm.run(slices, &mut out, scratch);
                         Val::Vector(out)
                     }
                     Val::Block(m0) => {
                         let mut out = Mat::zeros(m0.rows, m0.cols);
-                        let len = m0.rows * m0.cols;
-                        if n == 1 {
-                            let a0 = &args[0].as_block().data;
-                            for i in 0..len {
-                                xs[0] = a0[i];
-                                out.data[i] = ce.eval_with(&xs[..1], stack);
+                        let mut small: [&[f32]; 8] = [&[]; 8];
+                        let big: Vec<&[f32]>;
+                        let slices: &[&[f32]] = if n <= 8 {
+                            for (k, a) in args.iter().enumerate() {
+                                small[k] = &a.as_block().data;
                             }
+                            &small[..n]
                         } else {
-                            for i in 0..len {
-                                for (k, a) in args.iter().enumerate() {
-                                    xs[k] = a.as_block().data[i];
-                                }
-                                out.data[i] = ce.eval_with(&xs[..n], stack);
-                            }
-                        }
+                            big = args.iter().map(|a| &a.as_block().data[..]).collect();
+                            &big
+                        };
+                        kern.vm.run(slices, &mut out.data, scratch);
                         Val::Block(out)
                     }
                 };
@@ -1079,6 +1105,46 @@ mod tests {
         assert_eq!(p.accesses.len(), 1);
         assert_eq!(p.accesses[0].terms, vec![(0, 4), (1, 1)]);
         assert_eq!(p.accesses[0].flat(&[2, 3]), 11);
+    }
+
+    /// Regression: elementwise arity above 8 used to hit
+    /// `assert!(n <= 8, "elementwise arity > 8 unsupported")`; the
+    /// marshalling now falls back to heap-allocated argument buffers and
+    /// must agree with per-element evaluation on scalars, vectors, and
+    /// blocks.
+    #[test]
+    fn elementwise_arity_nine_supported() {
+        use crate::ir::expr::Expr;
+        use crate::ir::exprvm::{EwKernel, EwScratch};
+        // x0 + x1 + ... + x8 (arity 9)
+        let mut e = Expr::var(0);
+        for i in 1..9 {
+            e = e.add(Expr::var(i));
+        }
+        let ce = e.compile(&std::collections::BTreeMap::new());
+        assert_eq!(ce.arity, 9);
+        let kind = ComputeKind::Ew(EwKernel::new(ce.clone()));
+        let mut scratch = EwScratch::new();
+
+        let scalars: Vec<Val> = (0..9).map(|i| Val::Scalar(i as f32 * 0.5 - 2.0)).collect();
+        let refs: Vec<&Val> = scalars.iter().collect();
+        let (v, fl) = kind.apply(&refs, &mut scratch);
+        let xs: Vec<f32> = scalars.iter().map(|s| s.as_scalar()).collect();
+        assert_eq!(v, Val::Scalar(ce.eval_with(&xs, &mut scratch.stack)));
+        assert_eq!(fl, 1);
+
+        let blocks: Vec<Val> = (0..9)
+            .map(|i| Val::Block(Mat::from_fn(3, 5, |r, c| (r * 5 + c) as f32 * 0.1 + i as f32)))
+            .collect();
+        let refs: Vec<&Val> = blocks.iter().collect();
+        let (v, fl) = kind.apply(&refs, &mut scratch);
+        let got = v.as_block();
+        for idx in 0..15 {
+            let xs: Vec<f32> = blocks.iter().map(|b| b.as_block().data[idx]).collect();
+            let want = ce.eval_with(&xs, &mut scratch.stack);
+            assert_eq!(got.data[idx].to_bits(), want.to_bits(), "element {idx}");
+        }
+        assert_eq!(fl, 15);
     }
 
     /// The skeleton/bind split: one skeleton re-bound to two size

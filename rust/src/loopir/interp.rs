@@ -295,8 +295,8 @@ impl<'a> Interp<'a> {
                 // this into `loopir::compile`; both share `ComputeKind::
                 // apply`, so numerics and flop charges stay bit-identical.
                 let kind = ComputeKind::from_op(op, self.cfg);
-                let mut stack: Vec<f32> = Vec::with_capacity(8);
-                let (v, fl) = kind.apply(&vals, &mut stack);
+                let mut scratch = crate::ir::exprvm::EwScratch::new();
+                let (v, fl) = kind.apply(&vals, &mut scratch);
                 self.mem.flops += fl;
                 self.set_var(*var, Arc::new(v));
             }

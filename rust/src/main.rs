@@ -10,10 +10,12 @@
 //! blockbuster list                                  available programs/models
 //! ```
 //!
-//! `--threads N` caps the compiled engine's worker count (default: one
-//! per available core); `--no-simd` throws the runtime kill-switch on the
-//! AVX2 kernels (bit-identical scalar fallback — a debugging/benching
-//! aid, not a correctness knob).
+//! `--threads N` caps the compiled engine's worker budget — both the
+//! persistent pool behind parallel grid loops and nested fan-out
+//! (default: one per available core; 1 keeps the exact serial path).
+//! `--no-simd` throws the runtime kill-switch on the AVX2 kernels *and*
+//! the batched elementwise expression VM's slice kernels (bit-identical
+//! scalar fallbacks — a debugging/benching aid, not a correctness knob).
 
 use blockbuster::autotune::autotune;
 use blockbuster::coordinator::{compile, execute_plan_opts, plan_report, workloads};

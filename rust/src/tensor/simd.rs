@@ -167,6 +167,67 @@ fn mul_scalar_scalar(out: &mut [f32], c: f32) {
     }
 }
 
+// --- elementwise expression-VM slice kernels (portable recipes) ------------
+//
+// These back `ir::exprvm`: every kernel applies one scalar operation per
+// element, in a lane-independent order, using exactly the operation the
+// scalar `CompiledExpr::eval_with` interpreter would apply — which is what
+// makes the batched VM bit-identical to the per-element path. Kernels with
+// an AVX2 twin below are restricted to the operations whose 256-bit forms
+// are IEEE-identical to their scalar forms (add/sub/mul/div, sqrt,
+// sign-bit neg/abs, and `1.0/x` via a real division — never `rcp_ps`).
+// exp/ln/pow and the `f32::max`/`f32::min` selects have no bit-identical
+// vector form available offline, so their "kernels" are the scalar loop on
+// every path (still batched: one call per slice, not per element).
+
+fn ew_sub_scalar_impl(out: &mut [f32], x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o -= v;
+    }
+}
+
+fn ew_div_scalar_impl(out: &mut [f32], x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o /= v;
+    }
+}
+
+fn ew_sub_c_scalar_impl(out: &mut [f32], c: f32) {
+    for o in out.iter_mut() {
+        *o -= c;
+    }
+}
+
+fn ew_div_c_scalar_impl(out: &mut [f32], c: f32) {
+    for o in out.iter_mut() {
+        *o /= c;
+    }
+}
+
+fn ew_neg_scalar_impl(out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o = -*o;
+    }
+}
+
+fn ew_abs_scalar_impl(out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o = o.abs();
+    }
+}
+
+fn ew_sqrt_scalar_impl(out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o = o.sqrt();
+    }
+}
+
+fn ew_recip_scalar_impl(out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o = 1.0 / *o;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // AVX2 implementations (x86_64 + `simd` feature only)
 // ---------------------------------------------------------------------------
@@ -390,6 +451,143 @@ mod avx {
             i += 1;
         }
     }
+
+    // --- expression-VM elementwise kernels ---------------------------------
+    // Only operations whose 256-bit forms are IEEE-identical to the scalar
+    // forms appear here: vsubps/vdivps (correctly rounded like subss/divss),
+    // vsqrtps (correctly rounded), sign-bit xor/andnot for neg/abs, and
+    // `1.0/x` as a real division. `rcp_ps` (approximate) is deliberately
+    // never used.
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ew_sub(out: &mut [f32], x: &[f32]) {
+        let n = out.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_sub_ps(o, v));
+            i += LANES;
+        }
+        while i < n {
+            out[i] -= x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ew_div(out: &mut [f32], x: &[f32]) {
+        let n = out.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_div_ps(o, v));
+            i += LANES;
+        }
+        while i < n {
+            out[i] /= x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ew_sub_c(out: &mut [f32], c: f32) {
+        let n = out.len();
+        let cv = _mm256_set1_ps(c);
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_sub_ps(o, cv));
+            i += LANES;
+        }
+        while i < n {
+            out[i] -= c;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ew_div_c(out: &mut [f32], c: f32) {
+        let n = out.len();
+        let cv = _mm256_set1_ps(c);
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_div_ps(o, cv));
+            i += LANES;
+        }
+        while i < n {
+            out[i] /= c;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ew_neg(out: &mut [f32]) {
+        let n = out.len();
+        // IEEE negation is a sign-bit flip, NaN payloads included —
+        // exactly what scalar `-x` lowers to.
+        let sign = _mm256_set1_ps(-0.0);
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_xor_ps(o, sign));
+            i += LANES;
+        }
+        while i < n {
+            out[i] = -out[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ew_abs(out: &mut [f32]) {
+        let n = out.len();
+        // `f32::abs` clears the sign bit (NaN payloads included).
+        let sign = _mm256_set1_ps(-0.0);
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_andnot_ps(sign, o));
+            i += LANES;
+        }
+        while i < n {
+            out[i] = out[i].abs();
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ew_sqrt(out: &mut [f32]) {
+        let n = out.len();
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_sqrt_ps(o));
+            i += LANES;
+        }
+        while i < n {
+            out[i] = out[i].sqrt();
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ew_recip(out: &mut [f32]) {
+        let n = out.len();
+        let ones = _mm256_set1_ps(1.0);
+        let mut i = 0;
+        while i + LANES <= n {
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_div_ps(ones, o));
+            i += LANES;
+        }
+        while i < n {
+            out[i] = 1.0 / out[i];
+            i += 1;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -519,6 +717,187 @@ pub fn mul_scalar(out: &mut [f32], c: f32) {
     mul_scalar_scalar(out, c);
 }
 
+// ---------------------------------------------------------------------------
+// Expression-VM elementwise slice kernels
+// ---------------------------------------------------------------------------
+//
+// The batched expression VM (`ir::exprvm`) runs every op of a compiled
+// elementwise expression over a whole slice through these kernels. Each is
+// per-element identical to the operation `CompiledExpr::eval_with` applies,
+// so the VM stays bit-identical to the scalar interpreter on every path —
+// AVX2 or portable, runtime switch on or off.
+
+/// `out[i] -= x[i]` (lengths must match).
+pub fn ew_sub(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::ew_sub(out, x) };
+            return;
+        }
+    }
+    ew_sub_scalar_impl(out, x);
+}
+
+/// `out[i] /= x[i]` (lengths must match).
+pub fn ew_div(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::ew_div(out, x) };
+            return;
+        }
+    }
+    ew_div_scalar_impl(out, x);
+}
+
+/// `out[i] -= c`.
+pub fn ew_sub_c(out: &mut [f32], c: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::ew_sub_c(out, c) };
+            return;
+        }
+    }
+    ew_sub_c_scalar_impl(out, c);
+}
+
+/// `out[i] /= c` (a real division — not a `* (1/c)` rewrite, which would
+/// change rounding).
+pub fn ew_div_c(out: &mut [f32], c: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::ew_div_c(out, c) };
+            return;
+        }
+    }
+    ew_div_c_scalar_impl(out, c);
+}
+
+/// `out[i] = -out[i]` (sign-bit flip, NaN payloads included).
+pub fn ew_neg(out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::ew_neg(out) };
+            return;
+        }
+    }
+    ew_neg_scalar_impl(out);
+}
+
+/// `out[i] = |out[i]|` (sign-bit clear, NaN payloads included).
+pub fn ew_abs(out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::ew_abs(out) };
+            return;
+        }
+    }
+    ew_abs_scalar_impl(out);
+}
+
+/// `out[i] = sqrt(out[i])` (correctly rounded on every path).
+pub fn ew_sqrt(out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::ew_sqrt(out) };
+            return;
+        }
+    }
+    ew_sqrt_scalar_impl(out);
+}
+
+/// `out[i] = 1 / out[i]` (a real division — `rcp_ps` is approximate and
+/// never used).
+pub fn ew_recip(out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            unsafe { avx::ew_recip(out) };
+            return;
+        }
+    }
+    ew_recip_scalar_impl(out);
+}
+
+/// `out[i] = exp(out[i])`. One libm call per element on every path — there
+/// is no bit-identical vector exp offline, so batching here means one call
+/// per *slice*, with the loop body free of stack-machine dispatch.
+pub fn ew_exp(out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o = o.exp();
+    }
+}
+
+/// `out[i] = ln(out[i])` (see [`ew_exp`] on why this is a scalar loop).
+pub fn ew_ln(out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o = o.ln();
+    }
+}
+
+/// `out[i] = out[i].powf(y[i])` (lengths must match; libm per element).
+pub fn ew_pow(out: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(out.len(), y.len());
+    for (o, &e) in out.iter_mut().zip(y) {
+        *o = o.powf(e);
+    }
+}
+
+/// `out[i] = out[i].powf(c)`.
+pub fn ew_pow_c(out: &mut [f32], c: f32) {
+    for o in out.iter_mut() {
+        *o = o.powf(c);
+    }
+}
+
+/// `out[i] = f32::max(out[i], y[i])` — exactly `f32::max` (IEEE maxNum:
+/// a NaN operand yields the other operand), which AVX `max_ps` does *not*
+/// implement, so this stays a scalar-call loop on every path.
+pub fn ew_max(out: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(out.len(), y.len());
+    for (o, &v) in out.iter_mut().zip(y) {
+        *o = o.max(v);
+    }
+}
+
+/// `out[i] = f32::max(out[i], c)` (see [`ew_max`]).
+pub fn ew_max_c(out: &mut [f32], c: f32) {
+    for o in out.iter_mut() {
+        *o = o.max(c);
+    }
+}
+
+/// `out[i] = f32::min(out[i], y[i])` (see [`ew_max`]).
+pub fn ew_min(out: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(out.len(), y.len());
+    for (o, &v) in out.iter_mut().zip(y) {
+        *o = o.min(v);
+    }
+}
+
+/// `out[i] = f32::min(out[i], c)` (see [`ew_max`]).
+pub fn ew_min_c(out: &mut [f32], c: f32) {
+    for o in out.iter_mut() {
+        *o = o.min(c);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -575,6 +954,65 @@ mod tests {
         add_scalar_scalar(&mut o, 1.0);
         mul_scalar_scalar(&mut o, 0.0);
         assert_eq!(o, vec![0.0, 0.0, 0.0]);
+    }
+
+    /// The expression-VM slice kernels reproduce the scalar operation on
+    /// every element, special values included — compared via `to_bits` so
+    /// NaN signs/payloads count.
+    #[test]
+    fn ew_kernels_match_scalar_ops_bitwise() {
+        let specials = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.5,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            0.5,
+            -2.0,
+            3.25,
+            1e-30,
+        ];
+        // 27 elements: three full 8-lanes plus a tail
+        let base: Vec<f32> = (0..27)
+            .map(|i| specials[i % specials.len()] * if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let rhs: Vec<f32> = (0..27)
+            .map(|i| specials[(i * 7 + 3) % specials.len()])
+            .collect();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let check_un = |name: &str, kernel: &dyn Fn(&mut [f32]), op: &dyn Fn(f32) -> f32| {
+            let mut got = base.clone();
+            kernel(&mut got);
+            let want: Vec<f32> = base.iter().map(|&x| op(x)).collect();
+            assert_eq!(bits(&got), bits(&want), "{name}");
+        };
+        check_un("neg", &|o| ew_neg(o), &|x| -x);
+        check_un("abs", &|o| ew_abs(o), &|x| x.abs());
+        check_un("sqrt", &|o| ew_sqrt(o), &|x| x.sqrt());
+        check_un("recip", &|o| ew_recip(o), &|x| 1.0 / x);
+        check_un("exp", &|o| ew_exp(o), &|x| x.exp());
+        check_un("ln", &|o| ew_ln(o), &|x| x.ln());
+        let check_bin =
+            |name: &str, kernel: &dyn Fn(&mut [f32], &[f32]), op: &dyn Fn(f32, f32) -> f32| {
+                let mut got = base.clone();
+                kernel(&mut got, &rhs);
+                let want: Vec<f32> = base.iter().zip(&rhs).map(|(&x, &y)| op(x, y)).collect();
+                assert_eq!(bits(&got), bits(&want), "{name}");
+            };
+        check_bin("sub", &|o, x| ew_sub(o, x), &|a, b| a - b);
+        check_bin("div", &|o, x| ew_div(o, x), &|a, b| a / b);
+        check_bin("pow", &|o, x| ew_pow(o, x), &|a, b| a.powf(b));
+        check_bin("max", &|o, x| ew_max(o, x), &|a, b| a.max(b));
+        check_bin("min", &|o, x| ew_min(o, x), &|a, b| a.min(b));
+        for c in [0.0f32, -0.0, 2.5, f32::NAN, f32::INFINITY] {
+            check_un(&format!("sub_c {c}"), &|o| ew_sub_c(o, c), &|x| x - c);
+            check_un(&format!("div_c {c}"), &|o| ew_div_c(o, c), &|x| x / c);
+            check_un(&format!("pow_c {c}"), &|o| ew_pow_c(o, c), &|x| x.powf(c));
+            check_un(&format!("max_c {c}"), &|o| ew_max_c(o, c), &|x| x.max(c));
+            check_un(&format!("min_c {c}"), &|o| ew_min_c(o, c), &|x| x.min(c));
+        }
     }
 
     /// Dispatch and scalar paths agree bitwise on this machine, whichever

@@ -134,6 +134,90 @@ fn parity_insensitive_to_thread_count_and_simd() {
     simd::set_enabled(true);
 }
 
+/// Two Ew-heavy snapshot programs — the workloads the batched expression
+/// VM exists for — swept over backends × simd × threads; everything must
+/// agree bitwise with the interpreter reference (computed once, simd on).
+///
+/// * **softmax tail**: the exp/sub/div chain left after fusing a
+///   numerically-safe softmax (`exp(x−shift)` normalized by a shifted
+///   denominator), as a two-input elementwise op;
+/// * **GELU-style**: a tanh-free erf approximation built from exp/abs
+///   (sign recovered as `x/(|x|+ε)`), the long single-input chain shape.
+#[test]
+fn ew_heavy_programs_bit_identical_across_backends_simd_threads() {
+    use blockbuster::ir::dim::DimSizes;
+    use blockbuster::ir::expr::Expr;
+    use blockbuster::ir::graph::{map_over, ArgMode, Graph};
+    use blockbuster::ir::types::Ty;
+    use blockbuster::tensor::{simd, Rng};
+
+    // program 1: two mapped inputs feeding the softmax tail per block
+    let mut g1 = Graph::new();
+    let a = g1.input("X", Ty::blocks(&["M", "N"]));
+    let b = g1.input("S", Ty::blocks(&["M", "N"]));
+    let o = map_over(&mut g1, "M", &[(a, ArgMode::Mapped), (b, ArgMode::Mapped)], |mb, ins| {
+        let inner = map_over(
+            &mut mb.g,
+            "N",
+            &[(ins[0], ArgMode::Mapped), (ins[1], ArgMode::Mapped)],
+            |mb2, ins2| {
+                let e = Expr::softmax_tail(Expr::var(0), Expr::var(1));
+                let r = mb2.g.ew2(e, ins2[0], ins2[1]);
+                mb2.collect(r);
+            },
+        );
+        mb.collect(inner[0]);
+    });
+    g1.output("P", o[0]);
+
+    // program 2: one mapped input through the GELU-style erf chain
+    let mut g2 = Graph::new();
+    let a = g2.input("X", Ty::blocks(&["M", "N"]));
+    let o = map_over(&mut g2, "M", &[(a, ArgMode::Mapped)], |mb, ins| {
+        let inner = map_over(&mut mb.g, "N", &[(ins[0], ArgMode::Mapped)], |mb2, ins2| {
+            let r = mb2.g.ew1(Expr::gelu_erf(Expr::var(0)), ins2[0]);
+            mb2.collect(r);
+        });
+        mb.collect(inner[0]);
+    });
+    g2.output("G", o[0]);
+
+    let mut rng = Rng::new(0xE77);
+    for (pname, g, out, ins) in [
+        ("softmax_tail", g1, "P", vec!["X", "S"]),
+        ("gelu_erf", g2, "G", vec!["X"]),
+    ] {
+        let ir = lower(&g);
+        let mut base = Workload::new(DimSizes::of(&[("M", 4), ("N", 6)]));
+        for n in &ins {
+            base.inputs.insert(n.to_string(), rng.mat(16, 24));
+        }
+        simd::set_enabled(true);
+        let want = run_lowered_with(&ir, &base, ExecBackend::Interp);
+        for simd_on in [true, false] {
+            simd::set_enabled(simd_on);
+            for backend in [ExecBackend::Interp, ExecBackend::Compiled] {
+                for threads in [1usize, 2, 8] {
+                    let mut w = Workload::new(base.sizes.clone());
+                    w.inputs = base.inputs.clone();
+                    w.threads = Some(threads);
+                    let got = run_lowered_with(&ir, &w, backend);
+                    let tag = format!(
+                        "{pname} backend={} simd={simd_on} threads={threads}",
+                        backend.name()
+                    );
+                    assert_eq!(want.outputs[out], got.outputs[out], "{tag}: output");
+                    assert_eq!(want.mem.loaded_bytes, got.mem.loaded_bytes, "{tag}");
+                    assert_eq!(want.mem.stored_bytes, got.mem.stored_bytes, "{tag}");
+                    assert_eq!(want.mem.flops, got.mem.flops, "{tag}");
+                    assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches, "{tag}");
+                }
+            }
+        }
+        simd::set_enabled(true);
+    }
+}
+
 /// Property: parity holds on random programs, naive and fully fused.
 #[test]
 fn random_programs_bit_identical_across_backends() {

@@ -1,0 +1,187 @@
+//! Persistent-pool stress: repeated `run`/`run_lowered_cached` cycles
+//! across worker counts, on programs with top-level grids *and* nested
+//! fan-out (a parallel `forall` under a serial `for`), must
+//!
+//! * terminate (no handoff deadlock, job after job on one process-wide
+//!   pool),
+//! * keep the pool capped (workers are reused, never re-spawned per
+//!   region — `spawned()` stays ≤ the largest worker count ever used and
+//!   never exceeds `MAX_WORKERS`),
+//! * stay **bit-identical** to the interpreter ground truth — outputs
+//!   and the `loaded_bytes`/`stored_bytes`/`kernel_launches`/`flops`
+//!   counters — at every thread count, exactly as the scoped-thread
+//!   engine was.
+
+use blockbuster::exec::engine::{exec_compiled, MAX_WORKERS, NESTED_FANOUT_MIN_WORK};
+use blockbuster::exec::{
+    pool, run_lowered_cached, run_lowered_with, ExecBackend, TapeCache, Workload,
+};
+use blockbuster::ir::dim::{Dim, DimSizes};
+use blockbuster::ir::expr::Expr;
+use blockbuster::ir::func::FuncOp;
+use blockbuster::ir::graph::{map_over, ArgMode, Graph};
+use blockbuster::ir::types::{Item, Ty};
+use blockbuster::loopir::interp::{exec, BufVal, ExecConfig, ExecResult};
+use blockbuster::loopir::lower::lower;
+use blockbuster::loopir::{analyze_clears, BufDecl, COp, Index, LoopIr, LoopKind, Stmt};
+use blockbuster::tensor::{Rng, Val};
+
+/// for m (serial) { forall n (parallel) { B[m,n] = ew(A[m,n]) } } — the
+/// nested fan-out shape: each outer iteration hands the pool a fresh job.
+fn nested_fanout_ir() -> LoopIr {
+    let (m, n) = (Dim::new("M"), Dim::new("N"));
+    let buf = |name: &str, is_input: bool| BufDecl {
+        name: name.into(),
+        dims: vec![m.clone(), n.clone()],
+        item: Item::Block,
+        is_input,
+        is_output: !is_input,
+    };
+    let mut ir = LoopIr {
+        bufs: vec![buf("A", true), buf("B", false)],
+        body: vec![Stmt::Loop {
+            kind: LoopKind::For,
+            dim: m.clone(),
+            skip_first: false,
+            clears: vec![],
+            body: vec![Stmt::Loop {
+                kind: LoopKind::ForAll,
+                dim: n.clone(),
+                skip_first: false,
+                clears: vec![],
+                body: vec![
+                    Stmt::Load {
+                        var: 0,
+                        buf: 0,
+                        idx: vec![Index::Iter(m.clone()), Index::Iter(n.clone())],
+                    },
+                    Stmt::Compute {
+                        var: 1,
+                        op: COp::Func(FuncOp::Ew(Expr::swish(Expr::var(0)))),
+                        args: vec![0],
+                    },
+                    Stmt::Store {
+                        var: 1,
+                        buf: 1,
+                        idx: vec![Index::Iter(m), Index::Iter(n)],
+                    },
+                ],
+            }],
+        }],
+        n_vars: 2,
+        params: vec![],
+    };
+    analyze_clears(&mut ir);
+    ir
+}
+
+fn nested_cfg(seed: u64, mm: usize, nn: usize) -> ExecConfig {
+    let mut rng = Rng::new(seed);
+    let mut bv = BufVal::new(vec![mm, nn]);
+    for i in 0..mm {
+        for j in 0..nn {
+            bv.set(&[i, j], Val::Block(rng.mat(4, 4)));
+        }
+    }
+    let mut cfg = ExecConfig::new(DimSizes::of(&[("M", mm), ("N", nn)]));
+    cfg.inputs.insert("A".into(), bv);
+    cfg
+}
+
+fn assert_mem_eq(want: &ExecResult, got: &ExecResult, what: &str) {
+    assert_eq!(want.mem.loaded_bytes, got.mem.loaded_bytes, "{what}: loaded_bytes");
+    assert_eq!(want.mem.stored_bytes, got.mem.stored_bytes, "{what}: stored_bytes");
+    assert_eq!(want.mem.n_loads, got.mem.n_loads, "{what}: n_loads");
+    assert_eq!(want.mem.n_stores, got.mem.n_stores, "{what}: n_stores");
+    assert_eq!(want.mem.flops, got.mem.flops, "{what}: flops");
+    assert_eq!(
+        want.mem.kernel_launches, got.mem.kernel_launches,
+        "{what}: kernel_launches"
+    );
+}
+
+/// Nested fan-out cycled many times over threads 1/2/8: every cycle
+/// bit-identical to the interpreter, pool capped throughout.
+#[test]
+fn nested_fanout_cycles_stay_bit_identical_and_capped() {
+    let ir = nested_fanout_ir();
+    let (mm, nn) = (3usize, 512usize);
+    let cfg = nested_cfg(31, mm, nn);
+    let want = exec(&ir, &cfg);
+    for cycle in 0..4 {
+        for threads in [1usize, 2, 8] {
+            let mut c2 = cfg.clone();
+            c2.threads = Some(threads);
+            let prog = blockbuster::loopir::compile::compile(&ir, &c2);
+            assert!(
+                prog.loops[1].weight >= NESTED_FANOUT_MIN_WORK,
+                "test grid must actually fan out (weight {})",
+                prog.loops[1].weight
+            );
+            let got = exec_compiled(&prog, &c2);
+            for i in 0..mm {
+                for j in 0..nn {
+                    assert_eq!(
+                        want.outputs["B"].get(&[i, j]),
+                        got.outputs["B"].get(&[i, j]),
+                        "cycle {cycle} threads {threads} slot ({i},{j})"
+                    );
+                }
+            }
+            assert_mem_eq(&want, &got, &format!("cycle {cycle} threads {threads}"));
+            assert!(pool::global().spawned() <= MAX_WORKERS, "pool exceeded the hard cap");
+        }
+    }
+    // 4 cycles × 3 thread counts × 3 outer iterations of pooled regions:
+    // the pool must have reused its workers, not accumulated them. The
+    // suite never asks for more than 8 workers, so more than 8 spawned
+    // threads would mean regions leak workers instead of reusing them.
+    let spawned = pool::global().spawned();
+    assert!(spawned >= 2, "fan-out must have engaged the pool");
+    assert!(spawned <= 8, "pool grew past the largest request: {spawned}");
+}
+
+/// Top-level grids through the high-level `run_lowered_with` /
+/// `run_lowered_cached` entry points, cycled across thread counts with a
+/// shared tape cache — Workload-level outputs and counters must agree
+/// with the interpreter backend on every cycle.
+#[test]
+fn cached_runs_across_thread_counts_match_interp() {
+    let mut g = Graph::new();
+    let a = g.input("A", Ty::blocks(&["M", "N"]));
+    let o = map_over(&mut g, "M", &[(a, ArgMode::Mapped)], |mb, ins| {
+        let inner = map_over(&mut mb.g, "N", &[(ins[0], ArgMode::Mapped)], |mb2, ins2| {
+            let r = mb2.g.ew1(Expr::var(0).exp().neg().max(Expr::cst(-0.75)), ins2[0]);
+            mb2.collect(r);
+        });
+        mb.collect(inner[0]);
+    });
+    g.output("B", o[0]);
+    let ir = lower(&g);
+
+    let mut rng = Rng::new(97);
+    let input = rng.mat(32, 32);
+    let mut cache = TapeCache::new();
+    for cycle in 0..3 {
+        for threads in [1usize, 2, 8] {
+            let w = Workload::new(DimSizes::of(&[("M", 8), ("N", 8)]))
+                .input("A", input.clone())
+                .threads(threads);
+            let base = run_lowered_with(&ir, &w, ExecBackend::Interp);
+            let plain = run_lowered_with(&ir, &w, ExecBackend::Compiled);
+            let cached = run_lowered_cached(&ir, &w, ExecBackend::Compiled, &mut cache);
+            for (out, m) in [("plain", &plain), ("cached", &cached)] {
+                assert_eq!(
+                    base.outputs["B"], m.outputs["B"],
+                    "cycle {cycle} threads {threads} {out}: output"
+                );
+                assert_eq!(m.mem.loaded_bytes, base.mem.loaded_bytes);
+                assert_eq!(m.mem.stored_bytes, base.mem.stored_bytes);
+                assert_eq!(m.mem.flops, base.mem.flops);
+                assert_eq!(m.mem.kernel_launches, base.mem.kernel_launches);
+            }
+            assert!(pool::global().spawned() <= MAX_WORKERS);
+        }
+    }
+    assert_eq!(cache.misses, 1, "one skeleton across all cycles");
+}
