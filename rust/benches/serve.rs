@@ -1,0 +1,141 @@
+//! Bench: the compile-once serving layer (`serve::ModelServer`) —
+//! closed-loop throughput and end-to-end latency at dynamic batch sizes
+//! 1/4/16 on one workload, a mixed 3-workload round-robin stream, and
+//! the compile-amortization ratio (how many served requests pay back one
+//! `coordinator::compile` + plan prepare). Emits `BENCH_serve.json` next
+//! to the textual tables; set `BB_BENCH_SMOKE=1` for the seconds-long CI
+//! run.
+//!
+//! Latency here is enqueue→response (queue wait + batched launch), so a
+//! full burst's tail requests see queueing delay — the realistic
+//! closed-loop number, not the bare launch time.
+
+use blockbuster::exec::ExecBackend;
+use blockbuster::serve::{ModelServer, ServerConfig};
+use blockbuster::util::bench::{percentile, write_json_report, Table};
+use blockbuster::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn server_with(max_batch: usize, mix: &[&str]) -> ModelServer {
+    let mut s = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: None,
+        max_batch,
+        max_wait: Duration::from_secs(3600),
+    });
+    for name in mix {
+        s.register(name).unwrap();
+    }
+    s
+}
+
+fn main() {
+    let smoke = std::env::var("BB_BENCH_SMOKE").is_ok();
+    let program = "rmsnorm_ffn_swiglu";
+    let n_requests = if smoke { 24 } else { 192 };
+
+    // ---- compile-once cost: register (compile + prepare) one workload
+    let t0 = Instant::now();
+    drop(server_with(8, &[program]));
+    let compile_ns = t0.elapsed().as_nanos() as f64;
+
+    // ---- single-workload throughput/latency at batch sizes 1/4/16 ----
+    let mut t = Table::new(
+        &format!("Serving {program}, {n_requests} requests per row"),
+        &["max_batch", "throughput", "mean lat", "p95 lat"],
+    );
+    let mut rows = Vec::new();
+    let mut steady_ns_per_req = f64::NAN;
+    for batch in [1usize, 4, 16] {
+        let mut server = server_with(batch, &[program]);
+        // warmup: one full batch through the whole path
+        for i in 0..batch as u64 {
+            server.submit_synthetic(program, i).unwrap();
+        }
+        server.drain();
+
+        let t1 = Instant::now();
+        for i in 0..n_requests as u64 {
+            server.submit_synthetic(program, 10_000 + i).unwrap();
+        }
+        let responses = server.drain();
+        let wall = t1.elapsed();
+        assert_eq!(responses.len(), n_requests);
+
+        let lat: Vec<u128> = responses.iter().map(|r| r.queue_ns + r.exec_ns).collect();
+        let mean_us = lat.iter().sum::<u128>() as f64 / lat.len() as f64 / 1e3;
+        let p95_us = percentile(&lat, 95.0) as f64 / 1e3;
+        let rps = n_requests as f64 / wall.as_secs_f64();
+        let ns_per_req = wall.as_nanos() as f64 / n_requests as f64;
+        if batch == 16 {
+            steady_ns_per_req = ns_per_req;
+        }
+        t.row(vec![
+            batch.to_string(),
+            format!("{rps:.0} req/s"),
+            format!("{mean_us:.1}µs"),
+            format!("{p95_us:.1}µs"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("batch", Json::Num(batch as f64)),
+            ("throughput_rps", Json::Num(rps)),
+            ("mean_latency_us", Json::Num(mean_us)),
+            ("p95_latency_us", Json::Num(p95_us)),
+        ]));
+    }
+    t.print();
+
+    // ---- mixed 3-workload round-robin stream --------------------------
+    let mix = ["quickstart", "attention", "rmsnorm_ffn_swiglu"];
+    let mut server = server_with(8, &mix);
+    for (i, name) in mix.iter().enumerate() {
+        server.submit_synthetic(name, i as u64).unwrap(); // warmup
+    }
+    server.drain();
+    let t2 = Instant::now();
+    for (i, name) in mix.iter().cycle().take(n_requests).enumerate() {
+        server.submit_synthetic(name, 20_000 + i as u64).unwrap();
+    }
+    let responses = server.drain();
+    let mixed_wall = t2.elapsed();
+    assert_eq!(responses.len(), n_requests);
+    let mixed_rps = n_requests as f64 / mixed_wall.as_secs_f64();
+    let compiles: u64 = server.stats().per_program.values().map(|s| s.compiles).sum();
+    println!(
+        "\nmixed {} stream: {mixed_rps:.0} req/s over {n_requests} requests, {compiles} compiles",
+        mix.join("+")
+    );
+
+    // ---- compile amortization ----------------------------------------
+    let amortize = compile_ns / steady_ns_per_req;
+    println!(
+        "compile+prepare {:.2}ms ≈ {amortize:.0} steady-state requests (batch 16)",
+        compile_ns / 1e6
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("serve".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("program", Json::Str(program.into())),
+        ("requests", Json::Num(n_requests as f64)),
+        ("compile_ms", Json::Num(compile_ns / 1e6)),
+        // requests whose steady-state serving time equals one compile —
+        // the compile-once amortization horizon
+        ("amortize_requests", Json::Num(amortize)),
+        ("batch_rows", Json::Arr(rows)),
+        (
+            "mixed",
+            Json::obj(vec![
+                (
+                    "programs",
+                    Json::Arr(mix.iter().map(|s| Json::Str(s.to_string())).collect()),
+                ),
+                ("requests", Json::Num(n_requests as f64)),
+                ("throughput_rps", Json::Num(mixed_rps)),
+                ("compiles", Json::Num(compiles as f64)),
+            ]),
+        ),
+    ]);
+    write_json_report("BENCH_serve.json", &report).expect("writing BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json");
+}

@@ -212,6 +212,38 @@ pub fn autotune_measured_opts(
     trials: usize,
     threads: Option<usize>,
 ) -> Vec<MeasuredPoint> {
+    let mut cache = TapeCache::new();
+    autotune_measured_cached(
+        g,
+        full,
+        local_capacity,
+        model,
+        params,
+        inputs,
+        backend,
+        trials,
+        threads,
+        &mut cache,
+    )
+}
+
+/// [`autotune_measured_opts`] with a caller-owned [`TapeCache`], so
+/// long-lived hosts (the serving layer's `tune`) share one skeleton
+/// cache between serving traffic and measured trials — a re-tune of an
+/// already-cached structure compiles nothing.
+#[allow(clippy::too_many_arguments)]
+pub fn autotune_measured_cached(
+    g: &Graph,
+    full: &HashMap<String, (usize, usize)>,
+    local_capacity: u64,
+    model: &CostModel,
+    params: &BTreeMap<String, f32>,
+    inputs: &HashMap<String, Mat>,
+    backend: ExecBackend,
+    trials: usize,
+    threads: Option<usize>,
+    cache: &mut TapeCache,
+) -> Vec<MeasuredPoint> {
     let ir = lower(g);
     let static_rank = autotune_ir(&ir, full, local_capacity, model);
     // one workload shared across trials (inputs can be large); only the
@@ -224,12 +256,12 @@ pub fn autotune_measured_opts(
         local_capacity: None,
         threads,
     };
-    let mut cache = TapeCache::new();
+    let misses_before = cache.misses;
     let mut out = Vec::new();
     for p in static_rank.points.iter().filter(|p| p.feasible).take(trials) {
         w.sizes = p.sizes.clone();
         let t0 = Instant::now();
-        let run = run_lowered_cached(&ir, &w, backend, &mut cache);
+        let run = run_lowered_cached(&ir, &w, backend, cache);
         out.push(MeasuredPoint {
             sizes: p.sizes.clone(),
             wall_ns: t0.elapsed().as_nanos(),
@@ -238,7 +270,7 @@ pub fn autotune_measured_opts(
         });
     }
     debug_assert!(
-        backend != ExecBackend::Compiled || cache.misses <= 1,
+        backend != ExecBackend::Compiled || cache.misses - misses_before <= 1,
         "all trials share one program structure"
     );
     out.sort_by_key(|m| m.wall_ns);

@@ -7,15 +7,30 @@
 //! intermediates flowing between segments through (simulated) global
 //! memory. The paper's contribution is the compiler, so this layer is a
 //! thin deterministic driver; reports quantify what fusion bought.
+//!
+//! Execution comes in two flavors:
+//!
+//! * **one-shot** — [`execute_plan`] / [`execute_plan_opts`] lower and
+//!   (on the compiled backend) flatten every segment per call; right for
+//!   a single run of a plan;
+//! * **compile-once** — [`prepare_plan`] lowers each segment once and,
+//!   on [`ExecBackend::Compiled`], binds its tape skeleton once, yielding
+//!   a [`PreparedPlan`] that [`execute_prepared`] can run any number of
+//!   times on fresh inputs with zero per-request compilation. This is
+//!   the substrate of the serving layer ([`crate::serve`]); the one-shot
+//!   entry points are a thin wrapper over it, so the two paths cannot
+//!   drift apart.
 
 pub mod workloads;
 
 use crate::cost::CostModel;
-use crate::exec::{exec_ir, from_blocks, to_blocks, ExecBackend};
+use crate::exec::{exec_ir, from_blocks, to_blocks, ExecBackend, TapeCache};
 use crate::ir::dim::DimSizes;
 use crate::ir::graph::Graph;
+use crate::loopir::compile::CompiledProgram;
 use crate::loopir::interp::{BufVal, ExecConfig, MemSim};
 use crate::loopir::lower::lower;
+use crate::loopir::LoopIr;
 use crate::lower::lower_array;
 use crate::select::{select, SelectCtx, SelectionPlan, ValueRef};
 use crate::tensor::Mat;
@@ -80,6 +95,12 @@ pub fn execute_plan_with(
 
 /// [`execute_plan_with`] plus a worker cap for the compiled engine's
 /// parallel grid loops (the CLI's `--threads`).
+///
+/// One-shot: lowers (and on the compiled backend flattens) every segment
+/// on each call. Callers that execute one plan many times should
+/// [`prepare_plan`] once and call [`execute_prepared`] per run instead —
+/// this function is exactly that pair with a throwaway cache, so the two
+/// paths are equivalent by construction.
 pub fn execute_plan_opts(
     plan: &SelectionPlan,
     sizes: &DimSizes,
@@ -88,17 +109,107 @@ pub fn execute_plan_opts(
     backend: ExecBackend,
     threads: Option<usize>,
 ) -> PlanRun {
+    let mut cache = TapeCache::new();
+    let prepared = prepare_plan(plan, sizes, params, backend, &mut cache);
+    execute_prepared(&prepared, inputs, threads)
+}
+
+/// One segment of a [`PreparedPlan`]: the lowered Loop IR, the bound
+/// instruction tape (compiled backend only), and the I/O wiring copied
+/// from the source [`crate::select::Segment`].
+pub struct PreparedSegment {
+    /// The segment's lowered loop nest (lowering runs once, at prepare
+    /// time).
+    pub ir: LoopIr,
+    /// `Some` iff the plan was prepared for [`ExecBackend::Compiled`]:
+    /// the tape skeleton bound to the plan's `DimSizes`.
+    pub tape: Option<CompiledProgram>,
+    /// For each segment input label: where its value comes from.
+    pub inputs: Vec<(String, ValueRef)>,
+    /// For each segment output label: the program output it implements.
+    pub outputs: Vec<(String, Option<String>)>,
+}
+
+/// A [`SelectionPlan`] made ready for compile-once/execute-many use:
+/// every segment lowered once and (on the compiled backend) its tape
+/// bound once. [`execute_prepared`] runs it on fresh inputs with zero
+/// per-request compilation — the serving layer's hot path.
+pub struct PreparedPlan {
+    pub backend: ExecBackend,
+    pub sizes: DimSizes,
+    pub params: BTreeMap<String, f32>,
+    pub segments: Vec<PreparedSegment>,
+    /// Tape binds performed while preparing (== segment count on the
+    /// compiled backend, 0 on the interpreter) — compile-once telemetry.
+    pub binds: u64,
+}
+
+/// Lower every segment of `plan` and, on [`ExecBackend::Compiled`], pull
+/// its tape skeleton from `cache` (compiling it on first sight) and bind
+/// it to `sizes`. All per-structure work happens here, once; the returned
+/// [`PreparedPlan`] is immutable and shareable across any number of
+/// [`execute_prepared`] calls (it is `Sync` — the serving layer fans
+/// batches of requests over it from worker threads).
+pub fn prepare_plan(
+    plan: &SelectionPlan,
+    sizes: &DimSizes,
+    params: &BTreeMap<String, f32>,
+    backend: ExecBackend,
+    cache: &mut TapeCache,
+) -> PreparedPlan {
+    let mut segments = Vec::with_capacity(plan.segments.len());
+    let mut binds = 0u64;
+    for seg in &plan.segments {
+        let ir = lower(&seg.graph);
+        let tape = match backend {
+            ExecBackend::Interp => None,
+            ExecBackend::Compiled => {
+                // The skeleton depends on params and misc registries but
+                // never on `DimSizes`; the bind is the cheap phase.
+                let mut cfg = ExecConfig::new(sizes.clone());
+                cfg.params = params.clone();
+                let skel = cache.skeleton(&ir, &cfg, backend);
+                binds += 1;
+                Some(skel.bind(sizes))
+            }
+        };
+        segments.push(PreparedSegment {
+            ir,
+            tape,
+            inputs: seg.inputs.clone(),
+            outputs: seg.outputs.clone(),
+        });
+    }
+    PreparedPlan {
+        backend,
+        sizes: sizes.clone(),
+        params: params.clone(),
+        segments,
+        binds,
+    }
+}
+
+/// Execute a [`PreparedPlan`] on fresh inputs: segment by segment,
+/// intermediates flowing through (simulated) global memory — identical
+/// semantics (outputs and traffic counters) to [`execute_plan_opts`] on
+/// the same plan, but with no lowering or tape compilation on the hot
+/// path. `threads` caps the compiled engine's parallel grid loops.
+pub fn execute_prepared(
+    prepared: &PreparedPlan,
+    inputs: &HashMap<String, Mat>,
+    threads: Option<usize>,
+) -> PlanRun {
+    let sizes = &prepared.sizes;
     let mut inter: HashMap<(usize, String), BufVal> = HashMap::new();
     let mut outputs = HashMap::new();
     let mut total = MemSim::default();
     let mut per_segment = Vec::new();
 
-    for (si, seg) in plan.segments.iter().enumerate() {
-        let ir = lower(&seg.graph);
+    for (si, seg) in prepared.segments.iter().enumerate() {
         let mut cfg = ExecConfig::new(sizes.clone());
-        cfg.params = params.clone();
+        cfg.params = prepared.params.clone();
         cfg.threads = threads;
-        for decl in &ir.bufs {
+        for decl in &seg.ir.bufs {
             if !decl.is_input {
                 continue;
             }
@@ -122,7 +233,10 @@ pub fn execute_plan_opts(
             };
             cfg.inputs.insert(decl.name.clone(), bv);
         }
-        let res = exec_ir(&ir, &cfg, backend);
+        let res = match &seg.tape {
+            Some(prog) => crate::exec::engine::exec_compiled(prog, &cfg),
+            None => exec_ir(&seg.ir, &cfg, ExecBackend::Interp),
+        };
         for (label, prog_out) in &seg.outputs {
             let bv = res.outputs.get(label).unwrap_or_else(|| {
                 panic!("segment {si}: executor produced no output {label}")
@@ -238,6 +352,55 @@ mod tests {
         assert_eq!(a.mem.stored_bytes, b.mem.stored_bytes);
         assert_eq!(a.mem.kernel_launches, b.mem.kernel_launches);
         assert_eq!(a.mem.flops, b.mem.flops);
+    }
+
+    /// Compile-once path: `prepare_plan` + `execute_prepared` must be
+    /// bit-identical to the one-shot `execute_plan_opts` on both
+    /// backends, repeated executions must stay bit-identical, and a
+    /// second prepare of the same plan must be served from the cache.
+    #[test]
+    fn prepared_plan_matches_one_shot_and_caches() {
+        let (p, cfg, params, inputs) = workloads::attention_demo(42);
+        let compiled = compile(&p, cfg.clone());
+        for backend in [ExecBackend::Interp, ExecBackend::Compiled] {
+            let mut cache = TapeCache::new();
+            let prepared = prepare_plan(&compiled.plan, &cfg.sizes, &params, backend, &mut cache);
+            assert_eq!(
+                prepared.binds,
+                if backend == ExecBackend::Compiled {
+                    compiled.plan.segments.len() as u64
+                } else {
+                    0
+                }
+            );
+            let one_shot =
+                execute_plan_opts(&compiled.plan, &cfg.sizes, &params, &inputs, backend, Some(2));
+            let a = execute_prepared(&prepared, &inputs, Some(2));
+            let b = execute_prepared(&prepared, &inputs, Some(2));
+            // traffic counters, minus the peak estimate (the one field
+            // the engine does not pin across worker fan-outs)
+            let counters = |r: &PlanRun| {
+                (
+                    r.mem.loaded_bytes,
+                    r.mem.stored_bytes,
+                    r.mem.n_loads,
+                    r.mem.n_stores,
+                    r.mem.kernel_launches,
+                    r.mem.flops,
+                )
+            };
+            for (name, m) in &one_shot.outputs {
+                assert_eq!(m, &a.outputs[name], "{} output {name}", backend.name());
+                assert_eq!(m, &b.outputs[name], "{} re-run {name}", backend.name());
+            }
+            assert_eq!(counters(&one_shot), counters(&a));
+            assert_eq!(counters(&one_shot), counters(&b));
+            let misses = cache.misses;
+            let again = prepare_plan(&compiled.plan, &cfg.sizes, &params, backend, &mut cache);
+            assert_eq!(cache.misses, misses, "re-prepare must hit the cache");
+            let c = execute_prepared(&again, &inputs, Some(2));
+            assert_eq!(counters(&one_shot), counters(&c));
+        }
     }
 
     #[test]

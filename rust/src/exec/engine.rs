@@ -429,6 +429,20 @@ fn enumerate_slots(sels: &[SlotSel], regs: &[usize], strides: &[usize]) -> Vec<u
     out
 }
 
+/// Resolve a worker-count cap (`None` = one per available core) to the
+/// effective worker budget, clamped to `[1, MAX_WORKERS]`. Shared by the
+/// grid-loop fan-out here and the serving layer's batch fan-out
+/// (`serve`), so the two budgets cannot drift.
+pub fn worker_budget(threads: Option<usize>) -> usize {
+    threads
+        .unwrap_or_else(|| {
+            thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .clamp(1, MAX_WORKERS)
+}
+
 /// Execute a compiled program under `cfg`. Semantics (outputs and the
 /// traffic/flop/launch counters) are bit-identical to
 /// [`crate::loopir::interp::exec`] on the same program and config.
@@ -456,14 +470,7 @@ pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
         })
         .collect();
 
-    let workers = cfg
-        .threads
-        .unwrap_or_else(|| {
-            thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        })
-        .clamp(1, MAX_WORKERS);
+    let workers = worker_budget(cfg.threads);
 
     let mut mach = Machine::new(prog.n_regs, prog.n_vars, cfg.local_capacity);
 

@@ -174,6 +174,36 @@ impl WorkerPool {
         }
     }
 
+    /// Heterogeneous job handoff: run `f(0)`, …, `f(n_tasks-1)` — one
+    /// call per **task**, not per worker — across up to `nw` pool
+    /// workers, worker `w` draining the strided run `w, w+nw, …`.
+    /// Blocks until every task has finished; worker panics re-raise on
+    /// the caller with their original payload (via [`WorkerPool::run`]).
+    ///
+    /// Where [`WorkerPool::run`] hands every worker the *same* body
+    /// parameterized by worker index (homogeneous grid chunks), this
+    /// entry point lets each task index select arbitrarily different
+    /// work — the serving layer uses it to coalesce a batch of requests
+    /// into one pool submission, each task executing one request's plan.
+    /// `nw <= 1` (or a single task) runs inline on the caller, touching
+    /// no threads — mirroring the engine's threads=1 serial-path rule.
+    pub fn run_tasks(&'static self, nw: usize, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        let nw = nw.min(n_tasks).min(MAX_WORKERS);
+        if nw <= 1 {
+            for t in 0..n_tasks {
+                f(t);
+            }
+            return;
+        }
+        self.run(nw, &|w| {
+            let mut t = w;
+            while t < n_tasks {
+                f(t);
+                t += nw;
+            }
+        });
+    }
+
     /// Worker threads spawned so far — monotone and ≤ [`MAX_WORKERS`]
     /// (the stress suite's leak/cap check).
     pub fn spawned(&self) -> usize {
@@ -253,6 +283,29 @@ mod tests {
         }
         assert_eq!(total.load(Ordering::SeqCst), 200);
         assert!(global().spawned() <= MAX_WORKERS, "pool must stay capped");
+    }
+
+    #[test]
+    fn run_tasks_covers_every_task_exactly_once() {
+        // more tasks than workers: strided draining must cover all
+        let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+        global().run_tasks(4, 23, &|t| {
+            hits[t].fetch_add(1, Ordering::SeqCst);
+        });
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task {t}");
+        }
+        // nw=1 and single-task runs stay inline (no new workers needed)
+        let inline = AtomicUsize::new(0);
+        global().run_tasks(1, 5, &|_| {
+            inline.fetch_add(1, Ordering::SeqCst);
+        });
+        global().run_tasks(8, 1, &|_| {
+            inline.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(inline.load(Ordering::SeqCst), 6);
+        // zero tasks is a no-op
+        global().run_tasks(4, 0, &|_| panic!("no tasks to run"));
     }
 
     #[test]

@@ -8,14 +8,14 @@
 //! into a vector program whose ops operate on whole slices:
 //!
 //! * the per-element value stack becomes a **register stack of slabs** —
-//!   one flat scratch buffer ([`EwScratch::slabs`]) striped into
+//!   one flat scratch buffer ([`EwScratch`]'s slab store) striped into
 //!   `max_slabs` strides of up to [`SLAB_CHUNK`] elements, reused across
 //!   calls (no per-element `Vec` churn, bounded footprint for big blocks);
 //! * `PushVar`/`PushConst` fill a slab (one `copy_from_slice`/`fill`);
 //!   `Un`/`Bin` run one [`crate::tensor::simd`] elementwise slice kernel
 //!   over the top slab(s);
 //! * the translation fuses `PushVar x; Bin op` / `PushConst c; Bin op`
-//!   pairs into single [`VmOp::BinVar`]/[`VmOp::BinConst`] ops — in
+//!   pairs into single `BinVar`/`BinConst` vector ops — in
 //!   postfix, an operand pushed immediately before a binary op *is* that
 //!   op's right-hand side, so the fusion just skips materializing it in a
 //!   slab (most binary ops in real programs have a leaf rhs, so this

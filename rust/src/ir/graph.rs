@@ -651,7 +651,7 @@ impl Graph {
 
 /// Body-under-construction of a map operator; passed to the closure of
 /// [`map_over`]. `g` is the inner graph; use [`MapBody::collect`] /
-/// [`MapBody::reduce`] to register outputs.
+/// [`MapBody::reduce_out`] to register outputs.
 pub struct MapBody {
     pub g: Graph,
     outputs: Vec<(Port, OutMode)>,

@@ -44,11 +44,32 @@
 //!   (significand–exponent pairs / online softmax).
 //! * [`runtime`] — PJRT client wrapper: loads AOT artifacts produced by the
 //!   Python build path (`python/compile/aot.py`) and executes them.
-//! * [`coordinator`] — the end-to-end compiler driver and CLI plumbing.
+//! * [`coordinator`] — the end-to-end compiler driver and CLI plumbing;
+//!   `coordinator::prepare_plan` splits plan execution into a
+//!   compile-once [`coordinator::PreparedPlan`] and a zero-compilation
+//!   per-request `coordinator::execute_prepared` hot path.
+//! * [`serve`] — the compile-once/execute-many serving layer:
+//!   `serve::ModelServer` holds prepared plans for all registered
+//!   workloads, coalesces queued requests into dynamically-sized batches
+//!   (size- and latency-bound flushes), and drains mixed-program traffic
+//!   round-robin through the persistent worker pool — outputs and
+//!   traffic counters bit-identical to sequential execution.
 //!
 //! Python (JAX + Pallas) exists only on the *build path*: it authors the
 //! reference models and fused Pallas kernels and AOT-lowers them to HLO text
 //! artifacts; the Rust binary is self-contained afterwards.
+//!
+//! ---
+//!
+//! The repository guides are included below verbatim so docs.rs-style
+//! output carries them; they live at the repo root as `README.md` and
+//! `ARCHITECTURE.md`.
+//!
+//! # Repository README
+#![doc = include_str!("../../README.md")]
+//!
+//! # Architecture guide
+#![doc = include_str!("../../ARCHITECTURE.md")]
 
 pub mod array;
 pub mod autotune;
@@ -63,6 +84,7 @@ pub mod prop;
 pub mod rules;
 pub mod runtime;
 pub mod select;
+pub mod serve;
 pub mod stabilize;
 pub mod tensor;
 pub mod util;

@@ -1,18 +1,31 @@
-//! `blockbuster` CLI — the compiler driver.
+//! `blockbuster` CLI — the compiler driver and model server.
 //!
 //! ```text
-//! blockbuster trace <program> [--listing] [--dot]   fusion trace (+ fused code)
-//! blockbuster compile <program>                     selection plan report
+//! blockbuster trace <program> [--seed N] [--listing] [--dot] [--dump]
+//! blockbuster compile <program> [--seed N]
 //! blockbuster run <program> [--seed N] [--backend interp|compiled]
-//!                 [--threads N] [--no-simd]         execute plan vs naive
-//! blockbuster tune <program> [--capacity BYTES]     autotune block counts
-//! blockbuster xla <model> [--artifacts DIR]         run an AOT artifact (PJRT)
-//! blockbuster list                                  available programs/models
+//!                 [--threads N] [--no-simd]
+//! blockbuster tune <program> [--seed N] [--capacity BYTES]
+//! blockbuster serve [--requests N] [--mix a,b:2,c] [--max-batch N]
+//!                   [--max-wait-ms MS] [--backend interp|compiled]
+//!                   [--threads N] [--seed N] [--no-simd]
+//! blockbuster xla [<model>] [--artifacts DIR] [--seed N]
+//! blockbuster list
 //! ```
 //!
-//! `--threads N` caps the compiled engine's worker budget — both the
-//! persistent pool behind parallel grid loops and nested fan-out
-//! (default: one per available core; 1 keeps the exact serial path).
+//! `trace` prints the fusion trace (plus the fused kernel listing /
+//! graphviz / IR dump on request); `compile` the selection-plan report;
+//! `run` executes one plan against the naive unfused baseline; `tune`
+//! ranks block-count assignments under a local-memory budget; `serve`
+//! drives the compile-once serving layer over a mixed request stream
+//! with dynamic batching; `xla` runs an AOT artifact through PJRT;
+//! `list` names the available programs. Full flag semantics are in
+//! `usage()` (run with no arguments) and the README's quickstart.
+//!
+//! `--threads N` caps the compiled engine's worker budget — the
+//! persistent pool behind parallel grid loops, nested fan-out, and
+//! `serve`'s batch fan-out (default: one per available core; 1 keeps
+//! the exact serial path).
 //! `--no-simd` throws the runtime kill-switch on the AVX2 kernels *and*
 //! the batched elementwise expression VM's slice kernels (bit-identical
 //! scalar fallbacks — a debugging/benching aid, not a correctness knob).
@@ -26,14 +39,48 @@ use blockbuster::ir::display::{dump, to_dot};
 use blockbuster::loopir::lower::lower;
 use blockbuster::loopir::print::render;
 use blockbuster::lower::lower_array;
+use blockbuster::serve::{ModelServer, ServerConfig};
 use blockbuster::tensor::{Mat, Rng};
-use blockbuster::util::bench::fmt_bytes;
+use blockbuster::util::bench::{fmt_bytes, percentile, Table};
 use blockbuster::util::cli::Args;
+use std::time::{Duration, Instant};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: blockbuster <trace|compile|run|tune|xla|list> [args]\n\
-         programs: {}",
+        "usage: blockbuster <command> [args]
+
+commands:
+  trace <program>    print the fusion trace for a program
+      --seed N           input seed (default 42)
+      --listing          also print the fused kernel, paper-listing style
+      --dot              also print the fused graph as graphviz
+      --dump             also print the raw block-program IR
+  compile <program>  print the selection-plan report
+      --seed N           input seed (default 42)
+  run <program>      execute the selected plan vs the naive baseline
+      --seed N           input seed (default 42)
+      --backend B        executor backend: interp | compiled (default interp)
+      --threads N        worker cap for parallel grid loops (default: cores)
+      --no-simd          force the bit-identical scalar kernels
+  tune <program>     rank block-count assignments by the static cost model
+      --seed N           input seed (default 42)
+      --capacity BYTES   local-memory budget (default 1048576)
+  serve              drive the compile-once server on a request stream
+      --requests N       requests to generate (default 64)
+      --mix SPEC         workload mix, name[:weight],... (default
+                         quickstart,attention,rmsnorm_ffn_swiglu)
+      --max-batch N      coalesce up to N same-program requests (default 8)
+      --max-wait-ms MS   flush a partial batch after MS ms (default 2)
+      --backend B        executor backend: interp | compiled (default compiled)
+      --threads N        worker cap: batch fan-out + grid loops (default: cores)
+      --seed N           request-stream seed (default 42)
+      --no-simd          force the bit-identical scalar kernels
+  xla [<model>]      run an AOT artifact through PJRT (default attention_fused)
+      --artifacts DIR    artifact directory (default artifacts)
+      --seed N           input seed (default 42)
+  list               list the available programs
+
+programs: {}",
         workloads::NAMES.join(", ")
     );
     std::process::exit(2);
@@ -42,7 +89,17 @@ fn usage() -> ! {
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["seed", "capacity", "artifacts", "backend", "threads"],
+        &[
+            "seed",
+            "capacity",
+            "artifacts",
+            "backend",
+            "threads",
+            "requests",
+            "mix",
+            "max-batch",
+            "max-wait-ms",
+        ],
     );
     if args.flag("no-simd") {
         blockbuster::tensor::simd::set_enabled(false);
@@ -53,6 +110,7 @@ fn main() -> anyhow::Result<()> {
         "compile" => cmd_compile(&args),
         "run" => cmd_run(&args),
         "tune" => cmd_tune(&args),
+        "serve" => cmd_serve(&args),
         "xla" => cmd_xla(&args),
         "list" => {
             println!("programs: {}", workloads::NAMES.join(", "));
@@ -60,6 +118,26 @@ fn main() -> anyhow::Result<()> {
         }
         _ => usage(),
     }
+}
+
+/// `--backend` / `--threads`, shared by `run` and `serve`.
+fn backend_or_die(args: &Args, default: ExecBackend) -> ExecBackend {
+    match args.opt("backend") {
+        None => default,
+        Some(s) => ExecBackend::from_name(s).unwrap_or_else(|| {
+            eprintln!("unknown backend {s}; have: interp, compiled");
+            std::process::exit(2);
+        }),
+    }
+}
+
+fn threads_or_die(args: &Args) -> Option<usize> {
+    args.opt("threads").map(|s| {
+        s.parse::<usize>().unwrap_or_else(|_| {
+            eprintln!("--threads expects a number, got {s}");
+            std::process::exit(2);
+        })
+    })
 }
 
 fn demo_or_die(args: &Args) -> workloads::Demo {
@@ -123,19 +201,8 @@ fn cmd_compile(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
-    let backend = match args.opt("backend") {
-        None => ExecBackend::default(),
-        Some(s) => ExecBackend::from_name(s).unwrap_or_else(|| {
-            eprintln!("unknown backend {s}; have: interp, compiled");
-            std::process::exit(2);
-        }),
-    };
-    let threads = args.opt("threads").map(|s| {
-        s.parse::<usize>().unwrap_or_else(|_| {
-            eprintln!("--threads expects a number, got {s}");
-            std::process::exit(2);
-        })
-    });
+    let backend = backend_or_die(args, ExecBackend::default());
+    let threads = threads_or_die(args);
     let (p, cfg, params, inputs) = demo_or_die(args);
     let compiled = compile(&p, cfg.clone());
     print!("{}", plan_report(&compiled));
@@ -210,6 +277,165 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
             if p.feasible { "" } else { "(infeasible)" }
         );
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let backend = backend_or_die(args, ExecBackend::Compiled);
+    let threads = threads_or_die(args);
+    let requests = args.opt_usize("requests", 64);
+    let max_batch = args.opt_usize("max-batch", 8);
+    let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 2) as u64);
+    let seed = args.opt_usize("seed", 42) as u64;
+
+    // --mix name[:weight],... — the traffic composition
+    let mix = args
+        .opt("mix")
+        .unwrap_or("quickstart,attention,rmsnorm_ffn_swiglu");
+    let mut spec: Vec<(String, usize)> = Vec::new();
+    for part in mix.split(',').filter(|s| !s.is_empty()) {
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => {
+                let w = w.parse::<usize>().unwrap_or_else(|_| {
+                    eprintln!("--mix: bad weight in {part}");
+                    std::process::exit(2);
+                });
+                (n, w.max(1))
+            }
+            None => (part, 1),
+        };
+        // repeated names merge their weights (so "a,a:3" means weight 4)
+        match spec.iter_mut().find(|(n, _)| n == name) {
+            Some((_, w0)) => *w0 += weight,
+            None => spec.push((name.to_string(), weight)),
+        }
+    }
+    if spec.is_empty() {
+        eprintln!("--mix named no workloads");
+        std::process::exit(2);
+    }
+
+    let mut server = ModelServer::new(ServerConfig {
+        backend,
+        threads,
+        max_batch,
+        max_wait,
+    });
+    for (name, _) in &spec {
+        server.register(name)?;
+    }
+    println!(
+        "serving {} workload(s) on backend {} (threads: {}, simd: {})",
+        spec.len(),
+        backend.name(),
+        threads.map_or("auto".to_string(), |t| t.to_string()),
+        if blockbuster::tensor::simd::simd_active() {
+            "on"
+        } else {
+            "off"
+        }
+    );
+    println!("batching: max_batch {max_batch}, max_wait {max_wait:?}");
+
+    // Deterministic weighted request stream; poll() between arrivals so
+    // the latency-bound flush gets exercised, drain() at end of stream.
+    let total_weight: usize = spec.iter().map(|(_, w)| w).sum();
+    let mut lcg: u64 = seed | 1;
+    let mut submitted: Vec<(u64, String, u64)> = Vec::new(); // (id, workload, seed)
+    let mut responses = Vec::new();
+    let serve_t0 = Instant::now();
+    for i in 0..requests {
+        lcg = lcg
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let mut pick = (lcg >> 33) as usize % total_weight;
+        let name = spec
+            .iter()
+            .find_map(|(n, w)| {
+                if pick < *w {
+                    Some(n.clone())
+                } else {
+                    pick -= w;
+                    None
+                }
+            })
+            .expect("weighted pick in range");
+        let req_seed = seed.wrapping_add(i as u64);
+        let id = server.submit_synthetic(&name, req_seed)?;
+        submitted.push((id, name, req_seed));
+        responses.extend(server.poll());
+    }
+    responses.extend(server.drain());
+    let serve_secs = serve_t0.elapsed().as_secs_f64();
+    assert_eq!(responses.len(), requests, "every request must be served");
+
+    // Parity spot-check: for each workload, re-run the first served
+    // request through an independent one-shot compile + sequential
+    // execution; outputs and traffic counters must match bit-for-bit.
+    for (name, _) in &spec {
+        let Some(r) = responses.iter().find(|r| &r.workload == name) else {
+            continue; // workload drew no traffic in this stream
+        };
+        let (_, _, req_seed) = submitted
+            .iter()
+            .find(|(id, ..)| *id == r.id)
+            .expect("response id was submitted");
+        let (p, ccfg, params, _) = workloads::by_name(name, 0).expect("registered name");
+        let compiled = compile(&p, ccfg.clone());
+        let inputs = server.synthetic_inputs(name, *req_seed)?;
+        let seq =
+            execute_plan_opts(&compiled.plan, &ccfg.sizes, &params, &inputs, backend, threads);
+        for (out_name, m) in &seq.outputs {
+            assert_eq!(
+                m, &r.outputs[out_name],
+                "served output {out_name} of {name} diverged from sequential execution"
+            );
+        }
+        assert_eq!(
+            (seq.mem.loaded_bytes, seq.mem.stored_bytes, seq.mem.kernel_launches, seq.mem.flops),
+            (r.mem.loaded_bytes, r.mem.stored_bytes, r.mem.kernel_launches, r.mem.flops),
+            "served traffic counters of {name} diverged from sequential execution"
+        );
+        println!("parity OK: {name} (batched == sequential, bit-identical)");
+    }
+
+    let mut t = Table::new(
+        "Serving stats (per workload)",
+        &["workload", "served", "batches", "avg batch", "peak", "p50 lat", "p95 lat"],
+    );
+    let stats = server.stats();
+    for (name, st) in &stats.per_program {
+        let fmt_ms = |ns: u128| format!("{:.2}ms", ns as f64 / 1e6);
+        t.row(vec![
+            name.clone(),
+            st.served.to_string(),
+            st.batches.to_string(),
+            format!("{:.2}", st.mean_batch()),
+            st.peak_batch.to_string(),
+            fmt_ms(percentile(&st.latency_ns, 50.0)),
+            fmt_ms(st.percentile_latency_ns(95.0)),
+        ]);
+    }
+    t.print();
+    let compiles: u64 = stats.per_program.values().map(|s| s.compiles).sum();
+    let binds: u64 = stats.per_program.values().map(|s| s.binds).sum();
+    println!(
+        "\ncompile-once: {} workload(s), {compiles} compile(s), {binds} tape bind(s), \
+         {} skeleton(s) compiled, 0 recompiles during serving",
+        spec.len(),
+        server.cache_misses()
+    );
+    // submit→drain window only (excludes registration compiles and the
+    // parity spot-check above)
+    println!(
+        "throughput: {:.0} req/s over {} request(s)",
+        if serve_secs > 0.0 {
+            requests as f64 / serve_secs
+        } else {
+            0.0
+        },
+        stats.total_served()
+    );
     Ok(())
 }
 

@@ -1,0 +1,680 @@
+//! Compile-once / execute-many serving layer with dynamic batching.
+//!
+//! Every `blockbuster run` invocation recompiles its plan and executes
+//! exactly one request. This module is the inference-server shape the
+//! paper positions Blockbuster for: a [`ModelServer`] that compiles each
+//! registered workload **once** through [`crate::coordinator::compile`],
+//! holds its [`PreparedPlan`] (segments lowered once, tape skeletons
+//! pulled from a shared [`TapeCache`] and bound once per `DimSizes`),
+//! and then drains a submission queue of [`Request`]s with zero
+//! per-request compilation.
+//!
+//! **Dynamic batching.** Requests are queued per workload; a workload's
+//! queue flushes when it reaches [`ServerConfig::max_batch`] requests or
+//! its oldest entry has waited [`ServerConfig::max_wait`] (the classic
+//! throughput/latency trade-off knobs). A flushed batch becomes **one**
+//! submission to the persistent worker pool
+//! ([`crate::exec::pool::WorkerPool::run_tasks`]): each pool task
+//! executes one request's full multi-segment plan against the shared
+//! `PreparedPlan`, so the batch pays one job handoff instead of one
+//! spawn/join per request, and mixed-program traffic is scheduled
+//! round-robin across workloads so no queue starves.
+//!
+//! **Determinism.** Batching changes *where* a request executes (a pool
+//! worker instead of the caller) and *when* (coalesced with its batch),
+//! never *what*: outputs and [`MemSim`] traffic counters are
+//! bit-identical to a sequential
+//! [`crate::coordinator::execute_plan_opts`] run on the same inputs
+//! (all but the `peak_local_bytes` estimate, which no execution path
+//! pins across worker fan-outs) — pinned by `tests/serve_parity.rs`
+//! across thread counts and SIMD modes.
+//!
+//! ```
+//! use blockbuster::serve::{ModelServer, ServerConfig};
+//!
+//! let mut server = ModelServer::new(ServerConfig::default());
+//! server.register("quickstart").unwrap();
+//! let id = server.submit_synthetic("quickstart", 7).unwrap();
+//! let responses = server.drain();
+//! assert_eq!(responses.len(), 1);
+//! assert_eq!(responses[0].id, id);
+//! assert_eq!(server.stats().per_program["quickstart"].compiles, 1);
+//! ```
+
+use crate::array::ArrayProgram;
+use crate::autotune::{autotune_measured_cached, MeasuredPoint};
+use crate::coordinator::{
+    compile, execute_prepared, prepare_plan, workloads, CompileConfig, PlanRun, PreparedPlan,
+};
+use crate::cost::CostModel;
+use crate::exec::{pool, ExecBackend, TapeCache};
+use crate::fusion::fuse;
+use crate::ir::graph::Graph;
+use crate::loopir::interp::MemSim;
+use crate::tensor::{Mat, Rng};
+use anyhow::{anyhow, bail};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Serving configuration: executor backend, worker cap, and the dynamic
+/// batching knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Backend every registered plan is prepared for.
+    pub backend: ExecBackend,
+    /// Worker cap shared by batch fan-out and the engine's parallel grid
+    /// loops (`None` = one per available core; `Some(1)` never touches
+    /// the pool).
+    pub threads: Option<usize>,
+    /// Flush a workload's queue as soon as it holds this many requests.
+    pub max_batch: usize,
+    /// Flush a workload's queue (on [`ModelServer::poll`]) once its
+    /// oldest request has waited this long, even if the batch is not
+    /// full — the latency bound.
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            backend: ExecBackend::Compiled,
+            threads: None,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One inference request: a registered workload name plus a full matrix
+/// per program input (shapes must match the registered `full_shapes`).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub workload: String,
+    pub inputs: HashMap<String, Mat>,
+}
+
+/// One served request: the plan outputs, the request's own (simulated)
+/// memory-traffic counters, and latency telemetry.
+pub struct Response {
+    /// The id [`ModelServer::submit`] returned for this request.
+    pub id: u64,
+    pub workload: String,
+    pub outputs: HashMap<String, Mat>,
+    /// This request's traffic counters — loads/stores, launches, and
+    /// flops bit-identical to a sequential
+    /// [`crate::coordinator::execute_plan_opts`] run on the same inputs.
+    /// (`peak_local_bytes` is the one exception: a peak *estimate* the
+    /// engine does not pin across worker fan-outs.)
+    pub mem: MemSim,
+    /// How many requests shared this request's batched launch.
+    pub batch_size: usize,
+    /// Time spent queued before the batch launched.
+    pub queue_ns: u128,
+    /// Wall-clock of the whole batched launch this request rode in
+    /// (shared across the batch, not divided by it).
+    pub exec_ns: u128,
+}
+
+/// Latency samples retained per workload: the summaries window over the
+/// most recent this-many requests, so a long-lived server's telemetry
+/// stays bounded no matter how much traffic flows.
+pub const LATENCY_SAMPLE_CAP: usize = 4096;
+
+/// Per-workload serving counters.
+#[derive(Clone, Debug, Default)]
+pub struct ProgramStats {
+    /// [`crate::coordinator::compile`] invocations — compile-once means
+    /// this stays at 1 no matter how many requests are served.
+    pub compiles: u64,
+    /// Tape-skeleton binds performed at registration (== plan segments
+    /// on the compiled backend); serving performs none.
+    pub binds: u64,
+    /// Requests served.
+    pub served: u64,
+    /// Batched launches performed.
+    pub batches: u64,
+    /// Largest batch coalesced so far.
+    pub peak_batch: usize,
+    /// Per-request end-to-end latency (queue + batched launch) of the
+    /// most recent [`LATENCY_SAMPLE_CAP`] requests (a ring buffer — the
+    /// latency summaries describe that window).
+    pub latency_ns: Vec<u128>,
+    /// Ring cursor into `latency_ns` once the cap is reached.
+    latency_next: usize,
+}
+
+impl ProgramStats {
+    /// Record one request's end-to-end latency, overwriting the oldest
+    /// sample once [`LATENCY_SAMPLE_CAP`] are held.
+    fn record_latency(&mut self, ns: u128) {
+        if self.latency_ns.len() < LATENCY_SAMPLE_CAP {
+            self.latency_ns.push(ns);
+        } else {
+            self.latency_ns[self.latency_next] = ns;
+        }
+        self.latency_next = (self.latency_next + 1) % LATENCY_SAMPLE_CAP;
+    }
+    /// Mean occupancy of this workload's batched launches.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+
+    pub fn mean_latency_ns(&self) -> f64 {
+        if self.latency_ns.is_empty() {
+            0.0
+        } else {
+            self.latency_ns.iter().sum::<u128>() as f64 / self.latency_ns.len() as f64
+        }
+    }
+
+    /// Nearest-rank p-th percentile of the end-to-end latencies.
+    pub fn percentile_latency_ns(&self, p: f64) -> u128 {
+        crate::util::bench::percentile(&self.latency_ns, p)
+    }
+}
+
+/// Aggregate serving telemetry. Throughput is deliberately *not* a
+/// method here: a meaningful req/s figure needs a serving window chosen
+/// by the caller (the CLI times its submit→drain span; dividing by
+/// server uptime would dilute the number with registration/compile and
+/// idle time).
+#[derive(Debug)]
+pub struct ServerStats {
+    pub per_program: BTreeMap<String, ProgramStats>,
+    /// When the server was created (uptime reference).
+    pub started: Instant,
+}
+
+impl ServerStats {
+    pub fn total_served(&self) -> u64 {
+        self.per_program.values().map(|s| s.served).sum()
+    }
+}
+
+/// A registered workload: its prepared plan plus everything needed to
+/// validate and synthesize requests (and to re-tune block shapes).
+struct Served {
+    prepared: PreparedPlan,
+    /// The initial (unfused) block program, kept for [`ModelServer::tune`].
+    block: Graph,
+    full_shapes: HashMap<String, (usize, usize)>,
+    model: CostModel,
+    queue: VecDeque<Pending>,
+}
+
+struct Pending {
+    id: u64,
+    inputs: HashMap<String, Mat>,
+    enqueued: Instant,
+}
+
+/// The compile-once model server (see module docs).
+pub struct ModelServer {
+    cfg: ServerConfig,
+    programs: BTreeMap<String, Served>,
+    /// Registration order — the round-robin schedule for mixed traffic.
+    order: Vec<String>,
+    /// Next round-robin offset into `order`.
+    rr: usize,
+    /// Skeleton cache shared across all registered workloads (and with
+    /// [`ModelServer::tune`]'s measured trials).
+    cache: TapeCache,
+    next_id: u64,
+    stats: ServerStats,
+}
+
+impl ModelServer {
+    pub fn new(cfg: ServerConfig) -> ModelServer {
+        ModelServer {
+            cfg,
+            programs: BTreeMap::new(),
+            order: Vec::new(),
+            rr: 0,
+            cache: TapeCache::new(),
+            next_id: 0,
+            stats: ServerStats {
+                per_program: BTreeMap::new(),
+                started: Instant::now(),
+            },
+        }
+    }
+
+    /// Register one of the canonical demo workloads
+    /// ([`crate::coordinator::workloads`]) by CLI name — compiling and
+    /// preparing its plan exactly once.
+    pub fn register(&mut self, name: &str) -> anyhow::Result<()> {
+        let (program, cfg, params, _inputs) = workloads::by_name(name, 0).ok_or_else(|| {
+            anyhow!(
+                "unknown workload {name}; have {}",
+                workloads::NAMES.join(", ")
+            )
+        })?;
+        self.register_program(name, &program, cfg, params)
+    }
+
+    /// Register an arbitrary array program under `name`: runs the full
+    /// compilation pipeline once, then lowers and binds every plan
+    /// segment once. All subsequent requests reuse that work.
+    pub fn register_program(
+        &mut self,
+        name: &str,
+        program: &ArrayProgram,
+        cfg: CompileConfig,
+        params: BTreeMap<String, f32>,
+    ) -> anyhow::Result<()> {
+        if self.programs.contains_key(name) {
+            bail!("workload {name} already registered");
+        }
+        let full_shapes = cfg.full_shapes.clone();
+        let model = cfg.model;
+        let sizes = cfg.sizes.clone();
+        let compiled = compile(program, cfg);
+        let prepared = prepare_plan(
+            &compiled.plan,
+            &sizes,
+            &params,
+            self.cfg.backend,
+            &mut self.cache,
+        );
+        let st = self.stats.per_program.entry(name.to_string()).or_default();
+        st.compiles += 1;
+        st.binds += prepared.binds;
+        self.programs.insert(
+            name.to_string(),
+            Served {
+                prepared,
+                block: compiled.block,
+                full_shapes,
+                model,
+                queue: VecDeque::new(),
+            },
+        );
+        self.order.push(name.to_string());
+        Ok(())
+    }
+
+    /// Enqueue a request; returns its id. The request is validated (the
+    /// workload must be registered, every program input present at its
+    /// registered full shape) but not executed until a batch flushes.
+    pub fn submit(&mut self, req: Request) -> anyhow::Result<u64> {
+        let served = self
+            .programs
+            .get_mut(&req.workload)
+            .ok_or_else(|| anyhow!("unknown workload {}", req.workload))?;
+        for (input, &(r, c)) in &served.full_shapes {
+            let m = req
+                .inputs
+                .get(input)
+                .ok_or_else(|| anyhow!("request for {} missing input {input}", req.workload))?;
+            if (m.rows, m.cols) != (r, c) {
+                bail!(
+                    "request for {}: input {input} is {}x{}, registered shape is {r}x{c}",
+                    req.workload,
+                    m.rows,
+                    m.cols
+                );
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        served.queue.push_back(Pending {
+            id,
+            inputs: req.inputs,
+            enqueued: Instant::now(),
+        });
+        Ok(id)
+    }
+
+    /// The synthetic inputs [`Self::submit_synthetic`] generates for
+    /// `(workload, seed)` — exposed so callers can reproduce a request
+    /// for verification (input names are generated in sorted order, so
+    /// the mapping is deterministic).
+    pub fn synthetic_inputs(
+        &self,
+        workload: &str,
+        seed: u64,
+    ) -> anyhow::Result<HashMap<String, Mat>> {
+        let served = self
+            .programs
+            .get(workload)
+            .ok_or_else(|| anyhow!("unknown workload {workload}"))?;
+        let mut names: Vec<&String> = served.full_shapes.keys().collect();
+        names.sort();
+        let mut rng = Rng::new(seed);
+        Ok(names
+            .into_iter()
+            .map(|n| {
+                let (r, c) = served.full_shapes[n];
+                (n.clone(), rng.mat(r, c))
+            })
+            .collect())
+    }
+
+    /// Enqueue a request with deterministic random inputs derived from
+    /// `seed` at the workload's registered shapes.
+    pub fn submit_synthetic(&mut self, workload: &str, seed: u64) -> anyhow::Result<u64> {
+        let inputs = self.synthetic_inputs(workload, seed)?;
+        self.submit(Request {
+            workload: workload.to_string(),
+            inputs,
+        })
+    }
+
+    /// Requests currently queued across all workloads.
+    pub fn pending(&self) -> usize {
+        self.programs.values().map(|s| s.queue.len()).sum()
+    }
+
+    /// Flush every workload whose queue is due — full
+    /// ([`ServerConfig::max_batch`]) or latency-bound (oldest entry
+    /// older than [`ServerConfig::max_wait`]) — visiting workloads
+    /// round-robin.
+    /// Returns the responses of every batch launched; an empty vec means
+    /// nothing was due.
+    pub fn poll(&mut self) -> Vec<Response> {
+        let now = Instant::now();
+        let mut out = Vec::new();
+        let n = self.order.len();
+        for k in 0..n {
+            let name = self.order[(self.rr + k) % n].clone();
+            let due = {
+                let s = &self.programs[&name];
+                s.queue.len() >= self.cfg.max_batch.max(1)
+                    || s.queue
+                        .front()
+                        .is_some_and(|p| now.duration_since(p.enqueued) >= self.cfg.max_wait)
+            };
+            if due {
+                out.extend(self.flush_one(&name));
+            }
+        }
+        if n > 0 {
+            self.rr = (self.rr + 1) % n;
+        }
+        out
+    }
+
+    /// Flush until every queue is empty, taking at most `max_batch`
+    /// requests per workload per round-robin turn (so mixed traffic
+    /// interleaves instead of one workload draining first).
+    pub fn drain(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        let n = self.order.len();
+        if n == 0 {
+            return out;
+        }
+        loop {
+            let mut any = false;
+            for k in 0..n {
+                let name = self.order[(self.rr + k) % n].clone();
+                if !self.programs[&name].queue.is_empty() {
+                    out.extend(self.flush_one(&name));
+                    any = true;
+                }
+            }
+            self.rr = (self.rr + 1) % n;
+            if !any {
+                return out;
+            }
+        }
+    }
+
+    /// Take up to `max_batch` queued requests of `name` and launch them
+    /// as one batch.
+    fn flush_one(&mut self, name: &str) -> Vec<Response> {
+        let take = {
+            let q = &self.programs[name].queue;
+            q.len().min(self.cfg.max_batch.max(1))
+        };
+        if take == 0 {
+            return Vec::new();
+        }
+        let batch: Vec<Pending> = self
+            .programs
+            .get_mut(name)
+            .expect("flush_one: registered workload")
+            .queue
+            .drain(..take)
+            .collect();
+        self.run_batch(name, batch)
+    }
+
+    /// Execute one coalesced batch: a single pool submission whose tasks
+    /// each run one request's full plan against the shared
+    /// [`PreparedPlan`]. With one request (or a worker cap of 1) the
+    /// batch runs inline on the caller — the exact serial path.
+    fn run_batch(&mut self, name: &str, batch: Vec<Pending>) -> Vec<Response> {
+        let bs = batch.len();
+        let workers = effective_workers(self.cfg.threads, bs);
+        let threads = self.cfg.threads;
+        let (runs, launched, finished) = {
+            let prepared = &self.programs[name].prepared;
+            let t0 = Instant::now();
+            let runs: Vec<PlanRun> = if workers <= 1 || bs == 1 {
+                // Serial path: intra-request grid parallelism still
+                // applies under the caller's thread budget.
+                batch
+                    .iter()
+                    .map(|p| execute_prepared(prepared, &p.inputs, threads))
+                    .collect()
+            } else {
+                // One heterogeneous pool job for the whole batch. Each
+                // task runs its request serially (threads=1): the batch
+                // itself is the parallelism, and nested fan-out from
+                // inside a pool worker would run inline anyway.
+                let slots: Vec<Mutex<Option<PlanRun>>> =
+                    (0..bs).map(|_| Mutex::new(None)).collect();
+                pool::global().run_tasks(workers, bs, &|t| {
+                    let run = execute_prepared(prepared, &batch[t].inputs, Some(1));
+                    *slots[t].lock().unwrap() = Some(run);
+                });
+                slots
+                    .into_iter()
+                    .map(|s| {
+                        s.into_inner()
+                            .expect("batch slot lock")
+                            .expect("batch task completed")
+                    })
+                    .collect()
+            };
+            (runs, t0, Instant::now())
+        };
+        let exec_ns = finished.duration_since(launched).as_nanos();
+
+        let st = self.stats.per_program.entry(name.to_string()).or_default();
+        st.served += bs as u64;
+        st.batches += 1;
+        st.peak_batch = st.peak_batch.max(bs);
+        let mut out = Vec::with_capacity(bs);
+        for (p, run) in batch.into_iter().zip(runs) {
+            st.record_latency(finished.duration_since(p.enqueued).as_nanos());
+            out.push(Response {
+                id: p.id,
+                workload: name.to_string(),
+                outputs: run.outputs,
+                mem: run.mem,
+                batch_size: bs,
+                queue_ns: launched.duration_since(p.enqueued).as_nanos(),
+                exec_ns,
+            });
+        }
+        out
+    }
+
+    /// Measured block-shape autotuning for a registered workload,
+    /// sharing the server's skeleton cache (so trials re-bind the same
+    /// skeletons serving uses instead of recompiling). Returns the
+    /// candidates best-first by measured wall-clock; the server keeps
+    /// serving at its registered sizes — re-register to adopt a winner.
+    pub fn tune(
+        &mut self,
+        name: &str,
+        local_capacity: u64,
+        trials: usize,
+        seed: u64,
+    ) -> anyhow::Result<Vec<MeasuredPoint>> {
+        let inputs = self.synthetic_inputs(name, seed)?;
+        let served = self
+            .programs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown workload {name}"))?;
+        let fused = fuse(served.block.clone())
+            .snapshots
+            .pop()
+            .expect("fusion produces at least the initial snapshot");
+        Ok(autotune_measured_cached(
+            &fused,
+            &served.full_shapes,
+            local_capacity,
+            &served.model,
+            &served.prepared.params,
+            &inputs,
+            self.cfg.backend,
+            trials,
+            self.cfg.threads,
+            &mut self.cache,
+        ))
+    }
+
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// Registered workload names, in registration (round-robin) order.
+    pub fn workloads(&self) -> &[String] {
+        &self.order
+    }
+
+    /// Skeleton-cache misses so far. Stable across any amount of serving
+    /// traffic — recompiles would show up here (see `tests/serve_parity.rs`).
+    pub fn cache_misses(&self) -> u64 {
+        self.cache.misses
+    }
+
+    /// Skeleton-cache hits so far (structure sharing across workloads
+    /// and [`Self::tune`] trials).
+    pub fn cache_hits(&self) -> u64 {
+        self.cache.hits
+    }
+}
+
+/// Worker budget for a batch of `tasks` requests: the engine's own
+/// budget resolution ([`crate::exec::engine::worker_budget`]), further
+/// capped by the batch size.
+fn effective_workers(threads: Option<usize>, tasks: usize) -> usize {
+    crate::exec::engine::worker_budget(threads).min(tasks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_rejects_unknown_and_duplicate() {
+        let mut s = ModelServer::new(ServerConfig::default());
+        assert!(s.register("no_such_program").is_err());
+        s.register("quickstart").unwrap();
+        let err = s.register("quickstart").unwrap_err().to_string();
+        assert!(err.contains("already registered"), "got: {err}");
+    }
+
+    #[test]
+    fn submit_validates_workload_and_shapes() {
+        let mut s = ModelServer::new(ServerConfig::default());
+        s.register("quickstart").unwrap();
+        assert!(s.submit_synthetic("attention", 0).is_err());
+        // wrong shape for a known input
+        let mut inputs = s.synthetic_inputs("quickstart", 0).unwrap();
+        let a = inputs.get_mut("A").unwrap();
+        *a = Mat::zeros(a.rows + 1, a.cols);
+        let err = s
+            .submit(Request {
+                workload: "quickstart".into(),
+                inputs,
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("registered shape"), "got: {err}");
+        // missing input
+        let err = s
+            .submit(Request {
+                workload: "quickstart".into(),
+                inputs: HashMap::new(),
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing input"), "got: {err}");
+    }
+
+    #[test]
+    fn size_and_latency_bound_flushes() {
+        // size-triggered: nothing flushes until max_batch requests queue
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        s.submit_synthetic("quickstart", 0).unwrap();
+        s.submit_synthetic("quickstart", 1).unwrap();
+        assert!(s.poll().is_empty(), "batch not full, wait not exceeded");
+        assert_eq!(s.pending(), 2);
+        s.submit_synthetic("quickstart", 2).unwrap();
+        let r = s.poll();
+        assert_eq!(r.len(), 3);
+        assert!(r.iter().all(|r| r.batch_size == 3));
+        assert_eq!(s.pending(), 0);
+
+        // latency-triggered: max_wait zero flushes a lone request at once
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 100,
+            max_wait: Duration::ZERO,
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        s.submit_synthetic("quickstart", 0).unwrap();
+        let r = s.poll();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].batch_size, 1);
+        assert_eq!(s.stats().per_program["quickstart"].peak_batch, 1);
+    }
+
+    #[test]
+    fn latency_samples_stay_bounded() {
+        let mut st = ProgramStats::default();
+        for i in 0..(LATENCY_SAMPLE_CAP as u128 + 10) {
+            st.record_latency(i);
+        }
+        assert_eq!(st.latency_ns.len(), LATENCY_SAMPLE_CAP);
+        // the ring overwrote the oldest slots with the newest samples
+        assert_eq!(st.latency_ns[0], LATENCY_SAMPLE_CAP as u128);
+        assert_eq!(st.latency_ns[9], LATENCY_SAMPLE_CAP as u128 + 9);
+        assert_eq!(st.latency_ns[10], 10);
+    }
+
+    #[test]
+    fn tune_shares_the_server_cache() {
+        let mut s = ModelServer::new(ServerConfig {
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let pts = s.tune("quickstart", 1 << 20, 3, 9).unwrap();
+        assert!(!pts.is_empty() && pts.len() <= 3);
+        let misses = s.cache_misses();
+        // a second tune re-binds cached skeletons, compiling nothing new
+        s.tune("quickstart", 1 << 20, 3, 10).unwrap();
+        assert_eq!(s.cache_misses(), misses);
+    }
+}

@@ -129,6 +129,19 @@ pub fn write_json_report(path: &str, j: &crate::util::json::Json) -> std::io::Re
     std::fs::write(path, format!("{j}\n"))
 }
 
+/// Nearest-rank p-th percentile (`p` in 0..=100) of an unsorted sample
+/// set; 0 on an empty set. Used for the serving layer's latency
+/// summaries (`serve::ProgramStats`) and the serve bench rows.
+pub fn percentile(samples: &[u128], p: f64) -> u128 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 pub fn fmt_bytes(b: u64) -> String {
     if b < 1024 {
         format!("{b}B")
@@ -170,5 +183,18 @@ mod tests {
         assert_eq!(fmt_bytes(512), "512B");
         assert_eq!(fmt_bytes(2048), "2.0KiB");
         assert!(fmt_ns(1500.0).contains("µs"));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 95.0), 0);
+        assert_eq!(percentile(&[7], 50.0), 7);
+        let s: Vec<u128> = (1..=100).collect();
+        assert_eq!(percentile(&s, 50.0), 50);
+        assert_eq!(percentile(&s, 95.0), 95);
+        assert_eq!(percentile(&s, 100.0), 100);
+        assert_eq!(percentile(&s, 0.0), 1);
+        // unsorted input is handled
+        assert_eq!(percentile(&[30, 10, 20], 50.0), 20);
     }
 }

@@ -1,0 +1,242 @@
+//! Serving parity: batched / mixed-traffic serving through
+//! `serve::ModelServer` must be **bit-identical** — outputs compared via
+//! `to_bits`, traffic counters compared exactly — to sequential
+//! `coordinator::execute_plan_opts` runs on the same inputs, across
+//! worker caps 1/2/8 and SIMD on/off, and it must never compile more
+//! than once per registered workload no matter how much traffic flows.
+//!
+//! (`peak_local_bytes` is excluded from the counter comparison, matching
+//! the backend-parity suite: peak merging across worker fan-outs is the
+//! one counter the engine does not pin across thread counts.)
+
+use blockbuster::coordinator::{compile, execute_plan_opts, workloads, PlanRun};
+use blockbuster::exec::ExecBackend;
+use blockbuster::serve::{ModelServer, Response, ServerConfig};
+use blockbuster::tensor::{simd, Mat};
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// Serialize tests that flip the global SIMD switch (same idiom as
+/// `tests/simd_parity.rs`).
+fn toggle_lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The three-workload mix the acceptance criteria name.
+const MIX: &[&str] = &["quickstart", "attention", "rmsnorm_ffn_swiglu"];
+
+fn assert_response_matches(name: &str, r: &Response, seq: &PlanRun) {
+    assert_eq!(
+        r.outputs.len(),
+        seq.outputs.len(),
+        "{name}: output set differs"
+    );
+    for (out_name, m) in &seq.outputs {
+        assert_eq!(
+            bits(m),
+            bits(&r.outputs[out_name]),
+            "{name}: output {out_name} not bit-identical"
+        );
+    }
+    assert_eq!(r.mem.loaded_bytes, seq.mem.loaded_bytes, "{name}: loads");
+    assert_eq!(r.mem.stored_bytes, seq.mem.stored_bytes, "{name}: stores");
+    assert_eq!(r.mem.n_loads, seq.mem.n_loads, "{name}: n_loads");
+    assert_eq!(r.mem.n_stores, seq.mem.n_stores, "{name}: n_stores");
+    assert_eq!(
+        r.mem.kernel_launches, seq.mem.kernel_launches,
+        "{name}: launches"
+    );
+    assert_eq!(r.mem.flops, seq.mem.flops, "{name}: flops");
+}
+
+/// Serve an interleaved 3-workload stream batched up to 4, then check
+/// every response bit-for-bit against an independent one-shot compile +
+/// sequential execution of the same request.
+fn serve_vs_sequential(backend: ExecBackend, threads: usize) {
+    let mut server = ModelServer::new(ServerConfig {
+        backend,
+        threads: Some(threads),
+        max_batch: 4,
+        // no latency-bound flushes: batches are size-triggered or drained
+        max_wait: Duration::from_secs(3600),
+    });
+    for name in MIX {
+        server.register(name).unwrap();
+    }
+    let misses_after_register = server.cache_misses();
+
+    // interleaved submission: 6 requests per workload, distinct seeds
+    let mut submitted: Vec<(u64, &str, u64)> = Vec::new();
+    for i in 0..18u64 {
+        let name = MIX[(i % 3) as usize];
+        let seed = 1000 + i;
+        let id = server.submit_synthetic(name, seed).unwrap();
+        submitted.push((id, name, seed));
+    }
+    let responses = server.drain();
+    assert_eq!(responses.len(), 18, "drain must serve every request");
+    assert_eq!(server.pending(), 0);
+
+    // compile-once semantics: exactly one compile per workload, no
+    // skeleton compiled after registration, binds == segments once
+    for name in MIX {
+        let st = &server.stats().per_program[*name];
+        assert_eq!(st.compiles, 1, "{name}: compile-once violated");
+        assert_eq!(st.served, 6, "{name}: all requests served");
+        assert!(st.batches <= 2, "{name}: 6 requests in ≤2 batches of 4");
+        assert!(st.peak_batch >= 2, "{name}: batching actually coalesced");
+    }
+    assert_eq!(
+        server.cache_misses(),
+        misses_after_register,
+        "serving traffic must never compile a skeleton"
+    );
+
+    // ground truth: one independent compile per workload, then
+    // sequential one-shot executions
+    let mut plans = HashMap::new();
+    for name in MIX {
+        let (p, cfg, params, _) = workloads::by_name(name, 0).unwrap();
+        let compiled = compile(&p, cfg.clone());
+        plans.insert(*name, (compiled, cfg, params));
+    }
+    for (id, name, seed) in &submitted {
+        let r = responses
+            .iter()
+            .find(|r| r.id == *id)
+            .unwrap_or_else(|| panic!("request {id} has no response"));
+        assert_eq!(&r.workload, name);
+        let (compiled, cfg, params) = &plans[name];
+        let inputs = server.synthetic_inputs(name, *seed).unwrap();
+        let seq = execute_plan_opts(
+            &compiled.plan,
+            &cfg.sizes,
+            params,
+            &inputs,
+            backend,
+            Some(threads),
+        );
+        assert_response_matches(name, r, &seq);
+    }
+}
+
+/// Run `serve_vs_sequential` with SIMD off then on (both sides of the
+/// comparison run under the same mode).
+fn sweep(backend: ExecBackend, threads: usize) {
+    let _g = toggle_lock();
+    simd::set_enabled(false);
+    serve_vs_sequential(backend, threads);
+    simd::set_enabled(true);
+    serve_vs_sequential(backend, threads);
+}
+
+#[test]
+fn batched_serving_matches_sequential_threads_1() {
+    sweep(ExecBackend::Compiled, 1);
+}
+
+#[test]
+fn batched_serving_matches_sequential_threads_2() {
+    sweep(ExecBackend::Compiled, 2);
+}
+
+#[test]
+fn batched_serving_matches_sequential_threads_8() {
+    sweep(ExecBackend::Compiled, 8);
+}
+
+/// The interpreter backend serves too (no tapes, still compile-once).
+#[test]
+fn interp_serving_matches_sequential() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    serve_vs_sequential(ExecBackend::Interp, 2);
+}
+
+/// Degenerate batching (max_batch 1) must still serve correctly — every
+/// request its own launch.
+#[test]
+fn unbatched_serving_is_just_sequential() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(2),
+        max_batch: 1,
+        max_wait: Duration::from_secs(3600),
+    });
+    server.register("attention").unwrap();
+    for i in 0..3u64 {
+        server.submit_synthetic("attention", i).unwrap();
+    }
+    let responses = server.drain();
+    assert_eq!(responses.len(), 3);
+    assert!(responses.iter().all(|r| r.batch_size == 1));
+    let st = &server.stats().per_program["attention"];
+    assert_eq!(st.batches, 3);
+    assert_eq!(st.compiles, 1);
+
+    let (p, cfg, params, _) = workloads::by_name("attention", 0).unwrap();
+    let compiled = compile(&p, cfg.clone());
+    for (i, r) in responses.iter().enumerate() {
+        let inputs = server.synthetic_inputs("attention", i as u64).unwrap();
+        let seq = execute_plan_opts(
+            &compiled.plan,
+            &cfg.sizes,
+            &params,
+            &inputs,
+            ExecBackend::Compiled,
+            Some(2),
+        );
+        assert_response_matches("attention", r, &seq);
+    }
+}
+
+/// Oversized traffic bursts: a queue much longer than max_batch flushes
+/// in max_batch-sized launches, round-robin with the other workloads.
+#[test]
+fn burst_traffic_batches_at_max_batch() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(4),
+        max_batch: 4,
+        max_wait: Duration::from_secs(3600),
+    });
+    server.register("quickstart").unwrap();
+    server.register("layernorm_matmul").unwrap();
+    for i in 0..12u64 {
+        server.submit_synthetic("quickstart", i).unwrap();
+    }
+    for i in 0..2u64 {
+        server.submit_synthetic("layernorm_matmul", 100 + i).unwrap();
+    }
+    let responses = server.drain();
+    assert_eq!(responses.len(), 14);
+    let qs = &server.stats().per_program["quickstart"];
+    assert_eq!(qs.batches, 3, "12 requests at max_batch 4");
+    assert_eq!(qs.peak_batch, 4);
+    let ln = &server.stats().per_program["layernorm_matmul"];
+    assert_eq!(ln.batches, 1);
+    assert_eq!(ln.peak_batch, 2);
+    // drain interleaves: the small queue must not wait for the burst to
+    // finish — its batch appears among the first four launches' worth
+    // of responses (round-robin order: qs[4], ln[2], qs[4], qs[4])
+    let first_ln = responses
+        .iter()
+        .position(|r| r.workload == "layernorm_matmul")
+        .unwrap();
+    assert!(
+        first_ln < 8,
+        "round-robin starved the small queue (first at {first_ln})"
+    );
+}
