@@ -1,10 +1,11 @@
 //! Bench: the compile-once serving layer (`serve::ModelServer`) —
 //! closed-loop throughput and end-to-end latency at dynamic batch sizes
-//! 1/4/16 on one workload, a mixed 3-workload round-robin stream, and
-//! the compile-amortization ratio (how many served requests pay back one
-//! `coordinator::compile` + plan prepare). Emits `BENCH_serve.json` next
-//! to the textual tables; set `BB_BENCH_SMOKE=1` for the seconds-long CI
-//! run.
+//! 1/4/16 on one workload, coalesced (stacked-launch) vs fanned
+//! execution of the same batched stream, a mixed 3-workload round-robin
+//! stream, and the compile-amortization ratio (how many served requests
+//! pay back one `coordinator::compile` + plan prepare). Emits
+//! `BENCH_serve.json` next to the textual tables; set `BB_BENCH_SMOKE=1`
+//! for the seconds-long CI run.
 //!
 //! Latency here is enqueue→response (queue wait + batched launch), so a
 //! full burst's tail requests see queueing delay — the realistic
@@ -16,12 +17,13 @@ use blockbuster::util::bench::{percentile, write_json_report, Table};
 use blockbuster::util::json::Json;
 use std::time::{Duration, Instant};
 
-fn server_with(max_batch: usize, mix: &[&str]) -> ModelServer {
+fn server_with(max_batch: usize, coalesce: bool, mix: &[&str]) -> ModelServer {
     let mut s = ModelServer::new(ServerConfig {
         backend: ExecBackend::Compiled,
         threads: None,
         max_batch,
         max_wait: Duration::from_secs(3600),
+        coalesce,
     });
     for name in mix {
         s.register(name).unwrap();
@@ -36,7 +38,7 @@ fn main() {
 
     // ---- compile-once cost: register (compile + prepare) one workload
     let t0 = Instant::now();
-    drop(server_with(8, &[program]));
+    drop(server_with(8, false, &[program]));
     let compile_ns = t0.elapsed().as_nanos() as f64;
 
     // ---- single-workload throughput/latency at batch sizes 1/4/16 ----
@@ -47,7 +49,7 @@ fn main() {
     let mut rows = Vec::new();
     let mut steady_ns_per_req = f64::NAN;
     for batch in [1usize, 4, 16] {
-        let mut server = server_with(batch, &[program]);
+        let mut server = server_with(batch, false, &[program]);
         // warmup: one full batch through the whole path
         for i in 0..batch as u64 {
             server.submit_synthetic(program, i).unwrap();
@@ -85,9 +87,66 @@ fn main() {
     }
     t.print();
 
+    // ---- coalesced (stacked launch) vs fanned, same batched stream ----
+    // Synthetic requests share weights bit-for-bit, so with coalescing
+    // on every full batch rides ONE stacked tape launch; off, each
+    // request is its own plan execution fanned across the pool.
+    let mut ct = Table::new(
+        &format!("Coalescing {program}, max_batch 16, {n_requests} requests"),
+        &["mode", "throughput", "kernel launches", "stacked batches"],
+    );
+    let mut coalesce_rows = Vec::new();
+    let mut rps_by_mode = [f64::NAN; 2];
+    for (mi, coalesce) in [false, true].into_iter().enumerate() {
+        let mut server = server_with(16, coalesce, &[program]);
+        for i in 0..16u64 {
+            server.submit_synthetic(program, i).unwrap(); // warmup
+        }
+        server.drain();
+        // counter baseline after warmup, so the reported launch ledger
+        // covers exactly the timed stream
+        let (warm_launches, warm_stacked, warm_coalesced) = {
+            let st = &server.stats().per_program[program];
+            (st.launches, st.stacked_batches, st.coalesced)
+        };
+        let t1 = Instant::now();
+        for i in 0..n_requests as u64 {
+            server.submit_synthetic(program, 30_000 + i).unwrap();
+        }
+        let responses = server.drain();
+        let wall = t1.elapsed();
+        assert_eq!(responses.len(), n_requests);
+        let st = &server.stats().per_program[program];
+        let launches = st.launches - warm_launches;
+        let stacked_batches = st.stacked_batches - warm_stacked;
+        if coalesce {
+            assert!(
+                st.coalesced - warm_coalesced > 0,
+                "coalescing must engage on {program}"
+            );
+        }
+        let rps = n_requests as f64 / wall.as_secs_f64();
+        rps_by_mode[mi] = rps;
+        ct.row(vec![
+            if coalesce { "coalesced" } else { "fanned" }.to_string(),
+            format!("{rps:.0} req/s"),
+            launches.to_string(),
+            stacked_batches.to_string(),
+        ]);
+        coalesce_rows.push(Json::obj(vec![
+            ("coalesce", Json::Bool(coalesce)),
+            ("throughput_rps", Json::Num(rps)),
+            ("kernel_launches", Json::Num(launches as f64)),
+            ("stacked_batches", Json::Num(stacked_batches as f64)),
+        ]));
+    }
+    ct.print();
+    let coalesce_speedup = rps_by_mode[1] / rps_by_mode[0];
+    println!("coalesce_speedup: {coalesce_speedup:.2}x (stacked vs fanned throughput)");
+
     // ---- mixed 3-workload round-robin stream --------------------------
     let mix = ["quickstart", "attention", "rmsnorm_ffn_swiglu"];
-    let mut server = server_with(8, &mix);
+    let mut server = server_with(8, false, &mix);
     for (i, name) in mix.iter().enumerate() {
         server.submit_synthetic(name, i as u64).unwrap(); // warmup
     }
@@ -123,6 +182,10 @@ fn main() {
         // the compile-once amortization horizon
         ("amortize_requests", Json::Num(amortize)),
         ("batch_rows", Json::Arr(rows)),
+        // stacked-launch coalescing vs per-request fan-out on the same
+        // batched stream (throughput ratio; >1 means coalescing wins)
+        ("coalesce_speedup", Json::Num(coalesce_speedup)),
+        ("coalesce_rows", Json::Arr(coalesce_rows)),
         (
             "mixed",
             Json::obj(vec![

@@ -24,17 +24,20 @@
 pub mod workloads;
 
 use crate::cost::CostModel;
-use crate::exec::{exec_ir, from_blocks, to_blocks, ExecBackend, TapeCache};
-use crate::ir::dim::DimSizes;
+use crate::exec::{
+    exec_ir, from_blocks, stack_blocks, to_blocks, unstack_blocks, ExecBackend, TapeCache,
+};
+use crate::ir::dim::{Dim, DimSizes};
 use crate::ir::graph::Graph;
-use crate::loopir::compile::CompiledProgram;
+use crate::loopir::compile::{stackable_grid_dim, CompiledProgram, TapeSkeleton};
 use crate::loopir::interp::{BufVal, ExecConfig, MemSim};
 use crate::loopir::lower::lower;
 use crate::loopir::LoopIr;
 use crate::lower::lower_array;
 use crate::select::{select, SelectCtx, SelectionPlan, ValueRef};
 use crate::tensor::Mat;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::Arc;
 
 /// Compiler configuration.
 #[derive(Clone, Debug)]
@@ -124,6 +127,10 @@ pub struct PreparedSegment {
     /// `Some` iff the plan was prepared for [`ExecBackend::Compiled`]:
     /// the tape skeleton bound to the plan's `DimSizes`.
     pub tape: Option<CompiledProgram>,
+    /// The cached skeleton behind `tape` (same `Some`-ness): kept so
+    /// stacked-batch execution ([`bind_stacked`]) can re-bind to an
+    /// enlarged `DimSizes` without touching the [`TapeCache`] again.
+    pub skeleton: Option<Arc<TapeSkeleton>>,
     /// For each segment input label: where its value comes from.
     pub inputs: Vec<(String, ValueRef)>,
     /// For each segment output label: the program output it implements.
@@ -161,8 +168,8 @@ pub fn prepare_plan(
     let mut binds = 0u64;
     for seg in &plan.segments {
         let ir = lower(&seg.graph);
-        let tape = match backend {
-            ExecBackend::Interp => None,
+        let (tape, skeleton) = match backend {
+            ExecBackend::Interp => (None, None),
             ExecBackend::Compiled => {
                 // The skeleton depends on params and misc registries but
                 // never on `DimSizes`; the bind is the cheap phase.
@@ -170,12 +177,13 @@ pub fn prepare_plan(
                 cfg.params = params.clone();
                 let skel = cache.skeleton(&ir, &cfg, backend);
                 binds += 1;
-                Some(skel.bind(sizes))
+                (Some(skel.bind(sizes)), Some(skel))
             }
         };
         segments.push(PreparedSegment {
             ir,
             tape,
+            skeleton,
             inputs: seg.inputs.clone(),
             outputs: seg.outputs.clone(),
         });
@@ -246,13 +254,7 @@ pub fn execute_prepared(
             }
             inter.insert((si, label.clone()), bv.clone());
         }
-        total.loaded_bytes += res.mem.loaded_bytes;
-        total.stored_bytes += res.mem.stored_bytes;
-        total.n_loads += res.mem.n_loads;
-        total.n_stores += res.mem.n_stores;
-        total.kernel_launches += res.mem.kernel_launches;
-        total.flops += res.mem.flops;
-        total.peak_local_bytes = total.peak_local_bytes.max(res.mem.peak_local_bytes);
+        total.add_counters(&res.mem);
         per_segment.push(res.mem);
     }
 
@@ -261,6 +263,252 @@ pub fn execute_prepared(
         mem: total,
         per_segment,
     }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-request kernel coalescing: stacked batch execution
+// ---------------------------------------------------------------------------
+
+/// How a prepared plan coalesces batches: the grid dimension every
+/// segment's top-level loops iterate (typically the row-block dim `M`)
+/// and its per-request trip count. Produced by [`plan_stack_info`].
+#[derive(Clone, Debug)]
+pub struct StackInfo {
+    pub dim: Dim,
+    /// Per-request block count along `dim` (the plan's own binding).
+    pub trip: usize,
+}
+
+/// Whether `prepared` can execute a batch of same-shape requests as
+/// **one stacked launch**: every segment must expose the same stackable
+/// grid dim (`loopir::compile::stackable_grid_dim` — all top-level
+/// nests are `forall dim` grids whose iterations are provably
+/// independent and slice-aligned). Returns the dim and its per-request
+/// trip, or `None` (callers fall back to per-request fan-out).
+pub fn plan_stack_info(prepared: &PreparedPlan) -> Option<StackInfo> {
+    let mut dim: Option<Dim> = None;
+    for seg in &prepared.segments {
+        let d = stackable_grid_dim(&seg.ir)?;
+        match &dim {
+            None => dim = Some(d),
+            Some(d0) if *d0 == d => {}
+            Some(_) => return None,
+        }
+    }
+    let dim = dim?;
+    let trip = prepared.sizes.try_get(&dim)?;
+    Some(StackInfo { dim, trip })
+}
+
+/// Names of program inputs that do **not** carry the stack dim — shared
+/// weight-like operands. A coalesced batch binds request 0's copy of
+/// each for the whole stacked launch, so the caller must verify they
+/// are bit-identical across the batch before coalescing (the serving
+/// layer falls back to fan-out otherwise).
+pub fn unstacked_inputs(prepared: &PreparedPlan, info: &StackInfo) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for seg in &prepared.segments {
+        for (label, vref) in &seg.inputs {
+            if let ValueRef::ProgramInput(name) = vref {
+                let decl = seg
+                    .ir
+                    .bufs
+                    .iter()
+                    .find(|b| b.name == *label)
+                    .expect("wired segment input is declared");
+                if !decl.dims.contains(&info.dim) {
+                    out.insert(name.clone());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A [`PreparedPlan`] re-bound for stacked execution at one batch size:
+/// the enlarged `DimSizes` (`dim -> batch · trip`) plus, on the
+/// compiled backend, each segment's tape skeleton re-bound to it. No
+/// compilation happens here — skeletons were cached by
+/// [`prepare_plan`]; this is only the cheap bind phase, so servers can
+/// afford one per observed batch size.
+pub struct StackedPlan {
+    pub batch: usize,
+    pub info: StackInfo,
+    pub sizes: DimSizes,
+    /// Tape binds this stacked re-bind performed (== compiled segments;
+    /// 0 on the interpreter backend) — telemetry for the serving
+    /// layer's compile-once ledger.
+    pub binds: u64,
+    tapes: Vec<Option<CompiledProgram>>,
+}
+
+/// Bind `prepared` for stacked execution of `batch` requests (see
+/// [`StackedPlan`]). `info` must come from [`plan_stack_info`] on the
+/// same plan.
+pub fn bind_stacked(prepared: &PreparedPlan, info: &StackInfo, batch: usize) -> StackedPlan {
+    assert!(batch >= 1, "bind_stacked: empty batch");
+    let mut sizes = prepared.sizes.clone();
+    sizes.set(info.dim.clone(), info.trip * batch);
+    let tapes: Vec<Option<CompiledProgram>> = prepared
+        .segments
+        .iter()
+        .map(|seg| seg.skeleton.as_ref().map(|sk| sk.bind(&sizes)))
+        .collect();
+    let binds = tapes.iter().filter(|t| t.is_some()).count() as u64;
+    StackedPlan {
+        batch,
+        info: info.clone(),
+        sizes,
+        binds,
+        tapes,
+    }
+}
+
+/// Result of a stacked batch execution: one [`PlanRun`] per request
+/// plus the launch's true aggregate counters.
+pub struct BatchRun {
+    /// Per-request runs, batch order. Outputs and traffic counters are
+    /// bit-identical to a sequential [`execute_prepared`] of the same
+    /// request (`peak_local_bytes` excepted, as everywhere).
+    pub runs: Vec<PlanRun>,
+    /// What actually executed: `kernel_launches` here is one per
+    /// top-level nest per segment — independent of the batch size. The
+    /// per-request counters deliberately report the launches each
+    /// request *would have paid* alone (the parity contract); this
+    /// field is where the coalescing win shows.
+    pub agg: MemSim,
+}
+
+/// Execute one **stacked launch** for a batch of same-shape requests:
+/// each request's `dim`-carrying inputs are stacked along that axis of
+/// the block grid (pointer moves — payload blocks are `Arc`-shared),
+/// shared weight operands are bound once, every segment runs as a
+/// single enlarged tape execution across the full worker budget, and
+/// outputs are de-stacked per request. Per-request `MemSim` counters
+/// come from the executor's grid-slice attribution
+/// (`ExecConfig::slices`), so each response's traffic is bit-identical
+/// to a sequential run of that request alone.
+///
+/// Caller contract (the serving layer enforces both): `stacked` was
+/// bound from this `prepared` at `inputs.len()`, and every input named
+/// by [`unstacked_inputs`] is bit-identical across the batch.
+pub fn execute_prepared_stacked(
+    prepared: &PreparedPlan,
+    stacked: &StackedPlan,
+    inputs: &[&HashMap<String, Mat>],
+    threads: Option<usize>,
+) -> BatchRun {
+    let b = stacked.batch;
+    assert_eq!(
+        inputs.len(),
+        b,
+        "stacked execution: {} request(s) for a batch-{b} bind",
+        inputs.len()
+    );
+    let dim = &stacked.info.dim;
+    let mut inter: HashMap<(usize, String), BufVal> = HashMap::new();
+    let mut agg = MemSim::default();
+    let mut outs: Vec<HashMap<String, Mat>> = (0..b).map(|_| HashMap::new()).collect();
+    let mut mems: Vec<MemSim> = vec![MemSim::default(); b];
+    let mut per_seg: Vec<Vec<MemSim>> = (0..b).map(|_| Vec::new()).collect();
+
+    for (si, seg) in prepared.segments.iter().enumerate() {
+        let mut cfg = ExecConfig::new(stacked.sizes.clone());
+        cfg.params = prepared.params.clone();
+        cfg.threads = threads;
+        cfg.slices = Some(b);
+        for decl in &seg.ir.bufs {
+            if !decl.is_input {
+                continue;
+            }
+            let (_, vref) = seg
+                .inputs
+                .iter()
+                .find(|(l, _)| *l == decl.name)
+                .unwrap_or_else(|| panic!("segment {si}: no wiring for input {}", decl.name));
+            let bv = match vref {
+                ValueRef::ProgramInput(name) => {
+                    assert_eq!(decl.dims.len(), 2, "program input {name} must be 2-d");
+                    // per-request block counts come from the plan's own
+                    // sizes; only the stacked grid grows
+                    let rb = prepared.sizes.get(&decl.dims[0]);
+                    let cb = prepared.sizes.get(&decl.dims[1]);
+                    match decl.dims.iter().position(|d| d == dim) {
+                        Some(axis) => {
+                            let parts: Vec<BufVal> = inputs
+                                .iter()
+                                .map(|req| {
+                                    let m = req.get(name).unwrap_or_else(|| {
+                                        panic!("missing program input {name}")
+                                    });
+                                    to_blocks(m, rb, cb)
+                                })
+                                .collect();
+                            stack_blocks(&parts, axis)
+                        }
+                        None => {
+                            // shared weight operand: bind request 0's
+                            // copy for every slice (caller verified
+                            // bit-equality across the batch)
+                            let m = inputs[0].get(name).unwrap_or_else(|| {
+                                panic!("missing program input {name}")
+                            });
+                            to_blocks(m, rb, cb)
+                        }
+                    }
+                }
+                ValueRef::SegmentOutput { segment, label } => inter
+                    .get(&(*segment, label.clone()))
+                    .unwrap_or_else(|| panic!("segment {si}: missing intermediate {label}"))
+                    .clone(),
+            };
+            cfg.inputs.insert(decl.name.clone(), bv);
+        }
+        let res = match &stacked.tapes[si] {
+            Some(prog) => crate::exec::engine::exec_compiled(prog, &cfg),
+            None => exec_ir(&seg.ir, &cfg, ExecBackend::Interp),
+        };
+        assert_eq!(res.per_slice.len(), b, "executor must attribute {b} slices");
+        for r in 0..b {
+            mems[r].add_counters(&res.per_slice[r]);
+            per_seg[r].push(res.per_slice[r].clone());
+        }
+        agg.add_counters(&res.mem);
+        for (label, prog_out) in &seg.outputs {
+            let bv = res.outputs.get(label).unwrap_or_else(|| {
+                panic!("segment {si}: executor produced no output {label}")
+            });
+            if let Some(name) = prog_out {
+                let decl = seg
+                    .ir
+                    .bufs
+                    .iter()
+                    .find(|bd| bd.name == *label)
+                    .expect("output buffer is declared");
+                let axis = decl
+                    .dims
+                    .iter()
+                    .position(|d| d == dim)
+                    .unwrap_or_else(|| panic!("stacked output {label} does not carry {dim}"));
+                for (r, o) in outs.iter_mut().enumerate() {
+                    o.insert(name.clone(), from_blocks(&unstack_blocks(bv, axis, b, r)));
+                }
+            }
+            inter.insert((si, label.clone()), bv.clone());
+        }
+    }
+
+    let runs = outs
+        .into_iter()
+        .zip(mems)
+        .zip(per_seg)
+        .map(|((outputs, mem), per_segment)| PlanRun {
+            outputs,
+            mem,
+            per_segment,
+        })
+        .collect();
+    BatchRun { runs, agg }
 }
 
 /// Human-readable report of a compiled plan.
@@ -400,6 +648,101 @@ mod tests {
             assert_eq!(cache.misses, misses, "re-prepare must hit the cache");
             let c = execute_prepared(&again, &inputs, Some(2));
             assert_eq!(counters(&one_shot), counters(&c));
+        }
+    }
+
+    /// The coalescing tentpole's core contract: a stacked batch of 3
+    /// requests (fresh activations, shared weights) must be
+    /// bit-identical **per request** — outputs and traffic counters —
+    /// to sequential `execute_prepared` runs, on both backends, while
+    /// the aggregate launch count stays that of ONE request.
+    #[test]
+    fn stacked_batch_matches_sequential_per_request() {
+        let (p, cfg, params, base_inputs) = workloads::attention_demo(42);
+        let compiled = compile(&p, cfg.clone());
+        for backend in [ExecBackend::Interp, ExecBackend::Compiled] {
+            let mut cache = TapeCache::new();
+            let prepared = prepare_plan(&compiled.plan, &cfg.sizes, &params, backend, &mut cache);
+            let info =
+                plan_stack_info(&prepared).expect("attention stacks along its row-block grid");
+            assert_eq!(info.dim.name(), "M");
+            assert_eq!(info.trip, 4);
+            let shared = unstacked_inputs(&prepared, &info);
+            assert!(
+                shared.contains("KT") && shared.contains("VT"),
+                "weights are shared operands: {shared:?}"
+            );
+            assert!(!shared.contains("Q"), "activations stack: {shared:?}");
+
+            // 3 requests: same KT/VT, fresh Q per request
+            let mut rng = Rng::new(99);
+            let reqs: Vec<HashMap<String, Mat>> = (0..3)
+                .map(|_| {
+                    let mut m = base_inputs.clone();
+                    let q = &base_inputs["Q"];
+                    m.insert("Q".into(), rng.mat(q.rows, q.cols));
+                    m
+                })
+                .collect();
+            let misses = cache.misses;
+            let sp = bind_stacked(&prepared, &info, 3);
+            assert_eq!(cache.misses, misses, "stacked bind must not compile");
+            let refs: Vec<&HashMap<String, Mat>> = reqs.iter().collect();
+            let br = execute_prepared_stacked(&prepared, &sp, &refs, Some(2));
+            assert_eq!(br.runs.len(), 3);
+            let mut per_req_launches = 0;
+            for (r, run) in br.runs.iter().enumerate() {
+                let seq = execute_prepared(&prepared, &reqs[r], Some(2));
+                for (name, m) in &seq.outputs {
+                    assert_eq!(
+                        m,
+                        &run.outputs[name],
+                        "{} request {r} output {name}",
+                        backend.name()
+                    );
+                }
+                assert_eq!(run.mem.loaded_bytes, seq.mem.loaded_bytes, "request {r}");
+                assert_eq!(run.mem.stored_bytes, seq.mem.stored_bytes, "request {r}");
+                assert_eq!(run.mem.n_loads, seq.mem.n_loads, "request {r}");
+                assert_eq!(run.mem.n_stores, seq.mem.n_stores, "request {r}");
+                assert_eq!(run.mem.flops, seq.mem.flops, "request {r}");
+                assert_eq!(
+                    run.mem.kernel_launches, seq.mem.kernel_launches,
+                    "request {r}"
+                );
+                assert_eq!(run.per_segment.len(), seq.per_segment.len());
+                per_req_launches = seq.mem.kernel_launches;
+            }
+            // the coalescing win: the stacked launch performed ONE
+            // request's worth of kernel launches for the whole batch
+            assert_eq!(br.agg.kernel_launches, per_req_launches);
+            assert_eq!(
+                br.agg.flops,
+                br.runs.iter().map(|r| r.mem.flops).sum::<u64>(),
+                "aggregate flops are the batch total"
+            );
+        }
+    }
+
+    /// Every canonical serving workload must expose a stackable grid dim
+    /// (the serving layer's coalescing relies on it) — and the stack dim
+    /// is always the row-block grid `M`.
+    #[test]
+    fn canonical_workloads_are_stackable() {
+        for name in workloads::NAMES {
+            let (p, cfg, params, _) = workloads::by_name(name, 0).unwrap();
+            let compiled = compile(&p, cfg.clone());
+            let mut cache = TapeCache::new();
+            let prepared = prepare_plan(
+                &compiled.plan,
+                &cfg.sizes,
+                &params,
+                ExecBackend::Compiled,
+                &mut cache,
+            );
+            let info = plan_stack_info(&prepared)
+                .unwrap_or_else(|| panic!("{name}: plan is not stackable"));
+            assert_eq!(info.dim.name(), "M", "{name}");
         }
     }
 

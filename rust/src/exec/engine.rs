@@ -105,6 +105,10 @@ impl Sink<'_> {
 struct WorkerOut {
     mem: MemSim,
     pending: Vec<(BufId, usize, Arc<Val>)>,
+    /// Per-slice counter attribution (empty unless the region runs with
+    /// slice tracking): this worker's contribution to each grid slice,
+    /// recorded as per-iteration deltas keyed by `iteration / d`.
+    slice_mem: Vec<MemSim>,
     /// Values of the loop's clear-set vars after the final iteration
     /// (`Some` only for the worker that ran the last chunk) — sequential
     /// semantics: after a loop, its assigned vars hold the final
@@ -188,7 +192,7 @@ impl Machine {
                             if let Sink::Direct(bufs) = sink {
                                 let end = m.end_ip;
                                 let li = *li;
-                                self.run_parallel_loop(prog, li, &mut **bufs, par_workers);
+                                self.run_parallel_loop(prog, li, &mut **bufs, par_workers, None);
                                 ip = end + 1;
                                 continue;
                             }
@@ -301,12 +305,18 @@ impl Machine {
     /// sequential exit value. Worker panics re-raise here with their
     /// original payload (capacity and read-before-assignment diagnostics
     /// survive pooling).
+    ///
+    /// `slices`, when set to `(d, out)`, attributes counters per grid
+    /// slice of `d` iterations: each worker records per-iteration deltas
+    /// into `out[iteration / d]` (chunks need no slice alignment — the
+    /// key is computed per iteration), merged additively across workers.
     fn run_parallel_loop(
         &mut self,
         prog: &CompiledProgram,
         li: usize,
         bufs: &mut Vec<BufVal>,
         workers: usize,
+        mut slices: Option<(usize, &mut [MemSim])>,
     ) {
         let meta = &prog.loops[li];
         let chunks = split_chunks(meta.start, meta.trip, workers * CHUNKS_PER_WORKER);
@@ -316,6 +326,8 @@ impl Machine {
         let queue = StealQueue::new(nw, chunks);
         let base_live = self.live;
         let cap = self.cap;
+        let slice_d = slices.as_ref().map(|(d, _)| *d);
+        let n_slices = slices.as_ref().map_or(0, |(_, out)| out.len());
         // Workers are seeded with the enclosing scope's registers (outer
         // loop indices feed buffer accesses inside the body) and var file
         // (Arc clones; the analysis guarantees seeded vars are read-only
@@ -346,14 +358,19 @@ impl Machine {
                     pending: Vec::new(),
                 };
                 let m = &prog.loops[li];
+                let mut slice_mem: Vec<MemSim> = vec![MemSim::default(); n_slices];
                 let mut final_vars: Option<Vec<Option<Arc<Val>>>> = None;
                 while let Some(chunk) = queue.next(w) {
                     for x in chunk.lo..chunk.hi {
+                        let base = slice_d.map(|_| wm.mem.clone());
                         for &c in &m.clears {
                             wm.clear_var(c);
                         }
                         wm.regs[m.reg] = x;
                         wm.run_range(prog, (m.body_ip, m.end_ip), &mut sink, 0);
+                        if let (Some(d), Some(base)) = (slice_d, base) {
+                            slice_mem[x / d].add_counters(&wm.mem.counter_delta(&base));
+                        }
                     }
                     if chunk.id == last_chunk {
                         final_vars = Some(m.clears.iter().map(|&v| wm.vars[v].clone()).collect());
@@ -366,6 +383,7 @@ impl Machine {
                 *slots[w].lock().unwrap() = Some(WorkerOut {
                     mem: wm.mem,
                     pending,
+                    slice_mem,
                     final_vars,
                 });
             });
@@ -375,13 +393,12 @@ impl Machine {
             for (b, f, v) in wo.pending {
                 bufs[b].data[f] = Some(v);
             }
-            self.mem.loaded_bytes += wo.mem.loaded_bytes;
-            self.mem.stored_bytes += wo.mem.stored_bytes;
-            self.mem.n_loads += wo.mem.n_loads;
-            self.mem.n_stores += wo.mem.n_stores;
-            self.mem.flops += wo.mem.flops;
-            self.mem.kernel_launches += wo.mem.kernel_launches;
-            self.mem.peak_local_bytes = self.mem.peak_local_bytes.max(wo.mem.peak_local_bytes);
+            self.mem.add_counters(&wo.mem);
+            if let Some((_, out)) = slices.as_mut() {
+                for (s, sm) in out.iter_mut().zip(&wo.slice_mem) {
+                    s.add_counters(sm);
+                }
+            }
             if let Some(fv) = wo.final_vars {
                 for (&v, val) in prog.loops[li].clears.iter().zip(fv) {
                     match val {
@@ -474,9 +491,62 @@ pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
 
     let mut mach = Machine::new(prog.n_regs, prog.n_vars, cfg.local_capacity);
 
+    let mut per_slice = vec![MemSim::default(); cfg.slices.unwrap_or(0)];
     for top in &prog.tops {
         if top.kernel {
             mach.mem.kernel_launches += 1;
+        }
+        if let Some(b) = cfg.slices {
+            // Slice-attributed drive (the serving layer's stacked-batch
+            // path): every top-level statement must be a grid loop whose
+            // trip divides into `b` equal slices; counters accrue per
+            // slice, and each slice is charged the kernel launch it
+            // would pay running alone.
+            let li = match prog.instrs.get(top.ips.0) {
+                Some(Instr::LoopBegin(li)) => *li,
+                _ => panic!(
+                    "slice attribution requires every top-level statement to be a grid loop"
+                ),
+            };
+            let (start, trip) = (prog.loops[li].start, prog.loops[li].trip);
+            assert!(
+                start == 0 && b > 0 && trip % b == 0,
+                "slice attribution: {trip} iterations (start {start}) do not divide into {b} slices"
+            );
+            let d = trip / b;
+            if workers > 1 && prog.loops[li].parallel && trip >= 2 {
+                mach.run_parallel_loop(
+                    prog,
+                    li,
+                    &mut bufs,
+                    workers,
+                    Some((d, per_slice.as_mut_slice())),
+                );
+            } else {
+                // Serial per-iteration drive: same clears-then-body
+                // sequence the tape's LoopBegin/LoopEnd jumps produce.
+                let m = &prog.loops[li];
+                for x in 0..trip {
+                    let base = mach.mem.clone();
+                    for &c in &m.clears {
+                        mach.clear_var(c);
+                    }
+                    mach.regs[m.reg] = x;
+                    let mut sink = Sink::Direct(&mut bufs);
+                    mach.run_range(prog, (m.body_ip, m.end_ip), &mut sink, workers);
+                    per_slice[x / d].add_counters(&mach.mem.counter_delta(&base));
+                }
+                if trip > 0 {
+                    // sequential register semantics (as after any loop)
+                    mach.regs[m.reg] = trip - 1;
+                }
+            }
+            if top.kernel {
+                for s in per_slice.iter_mut() {
+                    s.kernel_launches += 1;
+                }
+            }
+            continue;
         }
         // A parallel top-level grid fans out unconditionally (spawn cost
         // is once per kernel); anything else runs serially on the main
@@ -492,7 +562,7 @@ pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
             _ => None,
         };
         match top_li {
-            Some(li) => mach.run_parallel_loop(prog, li, &mut bufs, workers),
+            Some(li) => mach.run_parallel_loop(prog, li, &mut bufs, workers, None),
             None => {
                 let mut sink = Sink::Direct(&mut bufs);
                 mach.run_range(prog, top.ips, &mut sink, workers);
@@ -509,6 +579,7 @@ pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
     ExecResult {
         outputs,
         mem: mach.mem,
+        per_slice,
     }
 }
 
@@ -571,6 +642,53 @@ mod tests {
             assert_eq!(want.mem.n_loads, got.mem.n_loads);
             assert_eq!(want.mem.n_stores, got.mem.n_stores);
             assert_eq!(want.mem.flops, got.mem.flops);
+            assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches);
+        }
+    }
+
+    /// Slice attribution must be identical between the interpreter, the
+    /// serial engine, and the fanned-out engine — per-slice counters and
+    /// outputs alike (the stacked-batch parity contract's foundation).
+    #[test]
+    fn slice_attribution_matches_across_backends_and_threads() {
+        let ir = lower(&map_graph());
+        let mut rng = Rng::new(21);
+        let input = block_list(&mut rng, 12, 4, 4);
+        let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 12)]));
+        cfg.inputs.insert("A".into(), input.clone());
+        cfg.slices = Some(4);
+        let want = exec(&ir, &cfg);
+        assert_eq!(want.per_slice.len(), 4);
+        assert_eq!(want.mem.kernel_launches, 1, "one stacked launch");
+        assert_eq!(want.per_slice[0].kernel_launches, 1, "per-slice launch");
+        // uniform body: every slice charges the same traffic, and the
+        // slice sum reproduces the aggregate
+        let sum: u64 = want.per_slice.iter().map(|s| s.loaded_bytes).sum();
+        assert_eq!(sum, want.mem.loaded_bytes);
+        for threads in [Some(1), Some(4)] {
+            let mut c2 = cfg.clone();
+            c2.threads = threads;
+            let prog = compile(&ir, &c2);
+            let got = exec_compiled(&prog, &c2);
+            for i in 0..12 {
+                assert_eq!(
+                    want.outputs["B"].get(&[i]),
+                    got.outputs["B"].get(&[i]),
+                    "threads={threads:?} element {i}"
+                );
+            }
+            assert_eq!(got.per_slice.len(), 4);
+            for (r, (a, b)) in want.per_slice.iter().zip(&got.per_slice).enumerate() {
+                assert_eq!(a.loaded_bytes, b.loaded_bytes, "threads={threads:?} slice {r}");
+                assert_eq!(a.stored_bytes, b.stored_bytes, "threads={threads:?} slice {r}");
+                assert_eq!(a.n_loads, b.n_loads, "threads={threads:?} slice {r}");
+                assert_eq!(a.n_stores, b.n_stores, "threads={threads:?} slice {r}");
+                assert_eq!(a.flops, b.flops, "threads={threads:?} slice {r}");
+                assert_eq!(
+                    a.kernel_launches, b.kernel_launches,
+                    "threads={threads:?} slice {r}"
+                );
+            }
             assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches);
         }
     }

@@ -200,6 +200,73 @@ pub fn from_blocks(bv: &BufVal) -> Mat {
     out
 }
 
+/// Stack same-shaped block grids along `axis`: part `r`'s element at
+/// `axis`-coordinate `x` lands at coordinate `r·d + x` of the stacked
+/// grid (`d` = the per-part extent). Payloads are `Arc`-shared, so
+/// stacking moves pointers, never block data — the serving layer uses
+/// this to coalesce a batch of requests into one enlarged launch.
+pub fn stack_blocks(parts: &[BufVal], axis: usize) -> BufVal {
+    let first = parts.first().expect("stack_blocks: empty part list");
+    assert!(
+        axis < first.dims.len(),
+        "stack_blocks: axis {axis} out of rank {}",
+        first.dims.len()
+    );
+    let mut dims = first.dims.clone();
+    dims[axis] *= parts.len();
+    let mut out = BufVal::new(dims);
+    let d = first.dims[axis];
+    for (r, p) in parts.iter().enumerate() {
+        assert_eq!(p.dims, first.dims, "stack_blocks: part {r} shape differs");
+        for (flat, v) in p.data.iter().enumerate() {
+            out.data[offset_flat(flat, &p.dims, &out.dims, axis, r * d)] = v.clone();
+        }
+    }
+    out
+}
+
+/// Inverse of [`stack_blocks`]: slice `r` of `parts` equal slabs along
+/// `axis` (pointer copies, like stacking).
+pub fn unstack_blocks(stacked: &BufVal, axis: usize, parts: usize, r: usize) -> BufVal {
+    assert!(axis < stacked.dims.len() && r < parts, "unstack_blocks: bad axis/slice");
+    assert_eq!(
+        stacked.dims[axis] % parts,
+        0,
+        "unstack_blocks: extent {} does not divide into {parts} slabs",
+        stacked.dims[axis]
+    );
+    let mut dims = stacked.dims.clone();
+    dims[axis] /= parts;
+    let d = dims[axis];
+    let mut out = BufVal::new(dims.clone());
+    for (flat, slot) in out.data.iter_mut().enumerate() {
+        *slot = stacked.data[offset_flat(flat, &dims, &stacked.dims, axis, r * d)].clone();
+    }
+    out
+}
+
+/// Row-major flat index in a `big`-shaped grid of the element whose
+/// coordinates equal those of `flat` in the `small`-shaped grid, with
+/// `offset` added on `axis` (all other extents must agree). Fixed
+/// scratch, no allocation — this runs once per block pointer of every
+/// coalesced batch (same rank-≤8 convention as the interpreter's index
+/// scratch).
+fn offset_flat(flat: usize, small: &[usize], big: &[usize], axis: usize, offset: usize) -> usize {
+    assert!(small.len() <= 8, "block grids are rank <= 8");
+    let mut rem = flat;
+    let mut coords = [0usize; 8];
+    for i in (0..small.len()).rev() {
+        coords[i] = rem % small[i];
+        rem /= small[i];
+    }
+    coords[axis] += offset;
+    let mut f = 0;
+    for (i, &e) in big.iter().enumerate() {
+        f = f * e + coords[i];
+    }
+    f
+}
+
 /// A ready-to-run workload: dim sizes (block counts), scalar params, full
 /// input matrices, optional local-memory capacity, optional worker cap.
 pub struct Workload {
@@ -340,6 +407,34 @@ mod tests {
         assert_eq!(bv.dims, vec![3, 2]);
         let back = from_blocks(&bv);
         assert_eq!(back, m);
+    }
+
+    /// Stacking block grids along either axis round-trips through
+    /// unstacking, and a vertical stack of matrices equals blocking the
+    /// vertically concatenated matrix.
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let mut rng = Rng::new(11);
+        let mats: Vec<Mat> = (0..3).map(|_| rng.mat(4, 6)).collect();
+        for axis in [0usize, 1] {
+            let parts: Vec<BufVal> = mats.iter().map(|m| to_blocks(m, 2, 3)).collect();
+            let stacked = stack_blocks(&parts, axis);
+            let mut want = vec![2usize, 3];
+            want[axis] *= 3;
+            assert_eq!(stacked.dims, want);
+            for (r, m) in mats.iter().enumerate() {
+                let back = unstack_blocks(&stacked, axis, 3, r);
+                assert_eq!(&from_blocks(&back), m, "axis {axis} slice {r}");
+            }
+        }
+        // vertical stack == blocking the row-concatenated matrix
+        let parts: Vec<BufVal> = mats.iter().map(|m| to_blocks(m, 2, 3)).collect();
+        let stacked = stack_blocks(&parts, 0);
+        let mut cat = Mat::zeros(12, 6);
+        for (r, m) in mats.iter().enumerate() {
+            cat.place(r * 4, 0, m);
+        }
+        assert_eq!(from_blocks(&stacked), cat);
     }
 
     #[test]

@@ -38,6 +38,35 @@ impl MemSim {
     pub fn total_traffic(&self) -> u64 {
         self.loaded_bytes + self.stored_bytes
     }
+
+    /// Fold `o` into `self`: additive counters sum, `peak_local_bytes`
+    /// merges by max (it is a peak, not a flow). This is the one merge
+    /// rule every layer uses — the engine's worker join, the
+    /// coordinator's per-segment totals, and per-slice attribution.
+    pub fn add_counters(&mut self, o: &MemSim) {
+        self.loaded_bytes += o.loaded_bytes;
+        self.stored_bytes += o.stored_bytes;
+        self.n_loads += o.n_loads;
+        self.n_stores += o.n_stores;
+        self.kernel_launches += o.kernel_launches;
+        self.flops += o.flops;
+        self.peak_local_bytes = self.peak_local_bytes.max(o.peak_local_bytes);
+    }
+
+    /// Counters accrued since `base` (a prior snapshot of `self`).
+    /// `peak_local_bytes` is not additive, so the delta carries the
+    /// current absolute peak — callers treat it as the estimate it is.
+    pub fn counter_delta(&self, base: &MemSim) -> MemSim {
+        MemSim {
+            loaded_bytes: self.loaded_bytes - base.loaded_bytes,
+            stored_bytes: self.stored_bytes - base.stored_bytes,
+            n_loads: self.n_loads - base.n_loads,
+            n_stores: self.n_stores - base.n_stores,
+            peak_local_bytes: self.peak_local_bytes,
+            kernel_launches: self.kernel_launches - base.kernel_launches,
+            flops: self.flops - base.flops,
+        }
+    }
 }
 
 /// A multi-dimensional global buffer of local items.
@@ -118,6 +147,16 @@ pub struct ExecConfig {
     /// (`None` = one worker per available core). The tree-walking
     /// interpreter ignores this — it is always sequential.
     pub threads: Option<usize>,
+    /// `Some(B)`: split traffic attribution into `B` equal grid slices
+    /// of every top-level loop, reported in [`ExecResult::per_slice`] —
+    /// the serving layer's stacked-batch path (slice `r` of a coalesced
+    /// launch is request `r`'s traffic). Requires every top-level
+    /// statement to be a grid loop whose trip count divides by `B`
+    /// (see `loopir::compile::stackable_grid_dim`). Each slice is also
+    /// charged one kernel launch per top-level nest — what it would have
+    /// paid running alone — while the aggregate counters keep the single
+    /// stacked launch. `None`: no attribution (the normal path).
+    pub slices: Option<usize>,
 }
 
 impl ExecConfig {
@@ -130,6 +169,7 @@ impl ExecConfig {
             misc_ops: HashMap::new(),
             misc_list_ops: HashMap::new(),
             threads: None,
+            slices: None,
         }
     }
 }
@@ -138,6 +178,12 @@ impl ExecConfig {
 pub struct ExecResult {
     pub outputs: HashMap<String, BufVal>,
     pub mem: MemSim,
+    /// Per-slice traffic attribution — one entry per slice when
+    /// [`ExecConfig::slices`] is set, empty otherwise. Slice `r`'s
+    /// counters are bit-identical to what a standalone execution of the
+    /// slice's sub-problem would charge (`peak_local_bytes` excepted:
+    /// it reports the executing machine's running peak).
+    pub per_slice: Vec<MemSim>,
 }
 
 struct Interp<'a> {
@@ -178,11 +224,58 @@ pub fn exec(ir: &LoopIr, cfg: &ExecConfig) -> ExecResult {
         mem: MemSim::default(),
         live_local: 0,
     };
+    let mut per_slice = vec![MemSim::default(); cfg.slices.unwrap_or(0)];
     for s in &ir.body {
         if matches!(s, Stmt::Loop { .. }) {
             it.mem.kernel_launches += 1;
         }
-        it.stmt(s);
+        match (cfg.slices, s) {
+            (None, _) => it.stmt(s),
+            (
+                Some(b),
+                Stmt::Loop {
+                    dim,
+                    skip_first,
+                    body,
+                    clears,
+                    ..
+                },
+            ) => {
+                // Slice-attributed drive: same per-iteration semantics
+                // (clears, then body) as `Interp::stmt`, with counter
+                // deltas recorded at slice boundaries. Each slice also
+                // gets the kernel launch it would pay running alone.
+                assert!(
+                    !*skip_first,
+                    "slice attribution: top-level loop over {dim} must not skip iteration 0"
+                );
+                let n = cfg.sizes.get(dim);
+                assert!(
+                    b > 0 && n % b == 0,
+                    "slice attribution: {n} iterations of {dim} do not divide into {b} slices"
+                );
+                let d = n / b;
+                for (r, slice) in per_slice.iter_mut().enumerate() {
+                    let base = it.mem.clone();
+                    for x in r * d..(r + 1) * d {
+                        for &c in clears {
+                            it.clear_var(c);
+                        }
+                        it.iters.insert(dim.clone(), x);
+                        for st in body {
+                            it.stmt(st);
+                        }
+                    }
+                    let mut delta = it.mem.counter_delta(&base);
+                    delta.kernel_launches += 1;
+                    slice.add_counters(&delta);
+                }
+                it.iters.remove(dim);
+            }
+            (Some(_), _) => {
+                panic!("slice attribution requires every top-level statement to be a grid loop")
+            }
+        }
     }
     let mut outputs = HashMap::new();
     for (i, decl) in ir.bufs.iter().enumerate() {
@@ -193,6 +286,7 @@ pub fn exec(ir: &LoopIr, cfg: &ExecConfig) -> ExecResult {
     ExecResult {
         outputs,
         mem: it.mem,
+        per_slice,
     }
 }
 
@@ -497,6 +591,56 @@ mod tests {
         assert_eq!(unfused.mem.total_traffic(), 2 * fused.mem.total_traffic());
         assert_eq!(unfused.mem.kernel_launches, 2);
         assert_eq!(fused.mem.kernel_launches, 1);
+    }
+
+    /// Slice attribution: executing the 4-block map as 2 slices must
+    /// charge each slice exactly what a standalone 2-block run charges,
+    /// while the aggregate keeps the single stacked launch.
+    #[test]
+    fn slice_attribution_matches_standalone_runs() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp().neg(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o[0]);
+        let ir = lower(&g);
+
+        let mut rng = Rng::new(7);
+        let input = block_list(&mut rng, 4, 2, 3);
+        let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 4)]));
+        cfg.inputs.insert("A".into(), input.clone());
+        cfg.slices = Some(2);
+        let res = exec(&ir, &cfg);
+        assert_eq!(res.per_slice.len(), 2);
+        assert_eq!(res.mem.kernel_launches, 1, "one stacked launch");
+
+        for r in 0..2usize {
+            // standalone run of slice r's half of the input
+            let mut half = BufVal::new(vec![2]);
+            for i in 0..2 {
+                half.set(&[i], input.get(&[r * 2 + i]).clone());
+            }
+            let mut c2 = ExecConfig::new(DimSizes::of(&[("N", 2)]));
+            c2.inputs.insert("A".into(), half);
+            let alone = exec(&ir, &c2);
+            let s = &res.per_slice[r];
+            assert_eq!(s.loaded_bytes, alone.mem.loaded_bytes, "slice {r}");
+            assert_eq!(s.stored_bytes, alone.mem.stored_bytes, "slice {r}");
+            assert_eq!(s.n_loads, alone.mem.n_loads, "slice {r}");
+            assert_eq!(s.n_stores, alone.mem.n_stores, "slice {r}");
+            assert_eq!(s.flops, alone.mem.flops, "slice {r}");
+            assert_eq!(s.kernel_launches, alone.mem.kernel_launches, "slice {r}");
+            // stacked output slice r equals the standalone outputs
+            for i in 0..2 {
+                assert_eq!(
+                    res.outputs["B"].get(&[r * 2 + i]),
+                    alone.outputs["B"].get(&[i]),
+                    "slice {r} element {i}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //!                 [--threads N] [--no-simd]
 //! blockbuster tune <program> [--seed N] [--capacity BYTES]
 //! blockbuster serve [--requests N] [--mix a,b:2,c] [--max-batch N]
-//!                   [--max-wait-ms MS] [--backend interp|compiled]
+//!                   [--max-wait-ms MS] [--coalesce]
+//!                   [--backend interp|compiled]
 //!                   [--threads N] [--seed N] [--no-simd]
 //! blockbuster xla [<model>] [--artifacts DIR] [--seed N]
 //! blockbuster list
@@ -69,8 +70,13 @@ commands:
       --requests N       requests to generate (default 64)
       --mix SPEC         workload mix, name[:weight],... (default
                          quickstart,attention,rmsnorm_ffn_swiglu)
-      --max-batch N      coalesce up to N same-program requests (default 8)
+      --max-batch N      batch up to N same-program requests (default 8)
       --max-wait-ms MS   flush a partial batch after MS ms (default 2)
+      --coalesce         stack a same-shape batch along the plan's row-block
+                         grid into ONE tape launch (per-segment launch
+                         overhead paid once per batch, not once per request;
+                         falls back to per-request fan-out when a plan has no
+                         stackable grid dim or batch weights differ)
       --backend B        executor backend: interp | compiled (default compiled)
       --threads N        worker cap: batch fan-out + grid loops (default: cores)
       --seed N           request-stream seed (default 42)
@@ -286,9 +292,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let requests = args.opt_usize("requests", 64);
     let max_batch = args.opt_usize("max-batch", 8);
     let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 2) as u64);
+    let coalesce = args.flag("coalesce");
     let seed = args.opt_usize("seed", 42) as u64;
 
-    // --mix name[:weight],... — the traffic composition
+    // --mix name[:weight],... — the traffic composition. Repeated names
+    // merge their weights (so "a,a:3" weighs a at 4) instead of
+    // double-registering the workload; an explicit weight 0 is a spec
+    // error, not a silent "weight 1".
     let mix = args
         .opt("mix")
         .unwrap_or("quickstart,attention,rmsnorm_ffn_swiglu");
@@ -300,11 +310,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     eprintln!("--mix: bad weight in {part}");
                     std::process::exit(2);
                 });
-                (n, w.max(1))
+                if w == 0 {
+                    eprintln!("--mix: {n} has weight 0 — omit the workload instead");
+                    std::process::exit(2);
+                }
+                (n, w)
             }
             None => (part, 1),
         };
-        // repeated names merge their weights (so "a,a:3" means weight 4)
         match spec.iter_mut().find(|(n, _)| n == name) {
             Some((_, w0)) => *w0 += weight,
             None => spec.push((name.to_string(), weight)),
@@ -320,6 +333,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         threads,
         max_batch,
         max_wait,
+        coalesce,
     });
     for (name, _) in &spec {
         server.register(name)?;
@@ -335,7 +349,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             "off"
         }
     );
-    println!("batching: max_batch {max_batch}, max_wait {max_wait:?}");
+    println!(
+        "batching: max_batch {max_batch}, max_wait {max_wait:?}, coalesce {}",
+        if coalesce { "on" } else { "off" }
+    );
 
     // Deterministic weighted request stream; poll() between arrivals so
     // the latency-bound flush gets exercised, drain() at end of stream.
@@ -401,7 +418,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     let mut t = Table::new(
         "Serving stats (per workload)",
-        &["workload", "served", "batches", "avg batch", "peak", "p50 lat", "p95 lat"],
+        &[
+            "workload", "served", "batches", "avg batch", "peak", "coalesced", "launches",
+            "p50 lat", "p95 lat",
+        ],
     );
     let stats = server.stats();
     for (name, st) in &stats.per_program {
@@ -412,11 +432,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             st.batches.to_string(),
             format!("{:.2}", st.mean_batch()),
             st.peak_batch.to_string(),
+            st.coalesced.to_string(),
+            st.launches.to_string(),
             fmt_ms(percentile(&st.latency_ns, 50.0)),
             fmt_ms(st.percentile_latency_ns(95.0)),
         ]);
     }
     t.print();
+    if coalesce {
+        let coalesced: u64 = stats.per_program.values().map(|s| s.coalesced).sum();
+        let stacked: u64 = stats.per_program.values().map(|s| s.stacked_batches).sum();
+        let launches: u64 = stats.per_program.values().map(|s| s.launches).sum();
+        println!(
+            "\ncoalescing: {coalesced} request(s) rode {stacked} stacked launch(es); \
+             {launches} kernel launch(es) actually executed"
+        );
+    }
     let compiles: u64 = stats.per_program.values().map(|s| s.compiles).sum();
     let binds: u64 = stats.per_program.values().map(|s| s.binds).sum();
     println!(

@@ -12,13 +12,31 @@
 //! **Dynamic batching.** Requests are queued per workload; a workload's
 //! queue flushes when it reaches [`ServerConfig::max_batch`] requests or
 //! its oldest entry has waited [`ServerConfig::max_wait`] (the classic
-//! throughput/latency trade-off knobs). A flushed batch becomes **one**
-//! submission to the persistent worker pool
+//! throughput/latency trade-off knobs), and an over-full queue keeps
+//! flushing while it still holds a full batch (bursts drain in one
+//! poll). A flushed batch becomes **one** submission to the persistent
+//! worker pool
 //! ([`crate::exec::pool::WorkerPool::run_tasks`]): each pool task
 //! executes one request's full multi-segment plan against the shared
 //! `PreparedPlan`, so the batch pays one job handoff instead of one
 //! spawn/join per request, and mixed-program traffic is scheduled
 //! round-robin across workloads so no queue starves.
+//!
+//! **Cross-request kernel coalescing** ([`ServerConfig::coalesce`]).
+//! Fanning a batch across the pool still launches every plan segment
+//! once *per request*. When the plan's segments all grid over one
+//! stackable dimension (the row-block dim `M` on every canonical
+//! workload — see `loopir::compile::stackable_grid_dim`), a coalesced
+//! batch instead stacks the requests' activations along that grid axis,
+//! binds the enlarged `DimSizes` against the same cached tape skeletons
+//! ([`crate::coordinator::bind_stacked`]), and runs **one stacked tape
+//! launch** across the full worker budget
+//! ([`crate::coordinator::execute_prepared_stacked`]): per-segment
+//! launch overhead is paid once per batch instead of once per request
+//! ([`ProgramStats::launches`] is where the win shows). Weight-like
+//! inputs (no stack dim) are bound once; a batch whose weights are not
+//! bit-identical — or a plan with no stackable grid dim — falls back to
+//! the fan-out path, per batch, automatically.
 //!
 //! **Determinism.** Batching changes *where* a request executes (a pool
 //! worker instead of the caller) and *when* (coalesced with its batch),
@@ -27,7 +45,10 @@
 //! [`crate::coordinator::execute_plan_opts`] run on the same inputs
 //! (all but the `peak_local_bytes` estimate, which no execution path
 //! pins across worker fan-outs) — pinned by `tests/serve_parity.rs`
-//! across thread counts and SIMD modes.
+//! across thread counts, SIMD modes, and coalescing on/off. Stacked
+//! launches keep the contract through per-slice attribution: the
+//! executor splits its counters by grid-slice ownership, so each
+//! response reports exactly what its request would have charged alone.
 //!
 //! ```
 //! use blockbuster::serve::{ModelServer, ServerConfig};
@@ -44,7 +65,9 @@
 use crate::array::ArrayProgram;
 use crate::autotune::{autotune_measured_cached, MeasuredPoint};
 use crate::coordinator::{
-    compile, execute_prepared, prepare_plan, workloads, CompileConfig, PlanRun, PreparedPlan,
+    bind_stacked, compile, execute_prepared, execute_prepared_stacked, plan_stack_info,
+    prepare_plan, unstacked_inputs, workloads, CompileConfig, PlanRun, PreparedPlan, StackInfo,
+    StackedPlan,
 };
 use crate::cost::CostModel;
 use crate::exec::{pool, ExecBackend, TapeCache};
@@ -53,7 +76,7 @@ use crate::ir::graph::Graph;
 use crate::loopir::interp::MemSim;
 use crate::tensor::{Mat, Rng};
 use anyhow::{anyhow, bail};
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -68,11 +91,22 @@ pub struct ServerConfig {
     /// the pool).
     pub threads: Option<usize>,
     /// Flush a workload's queue as soon as it holds this many requests.
+    /// Normalized to at least 1 at server construction — 0 would mean no
+    /// batch could ever fill, so no flush call site needs its own clamp.
     pub max_batch: usize,
     /// Flush a workload's queue (on [`ModelServer::poll`]) once its
     /// oldest request has waited this long, even if the batch is not
     /// full — the latency bound.
     pub max_wait: Duration,
+    /// Cross-request kernel coalescing: execute a same-shape batch as
+    /// **one stacked tape launch** (requests stacked along the plan's
+    /// row-block grid dim) instead of fanning one plan execution per
+    /// request across the pool. Falls back to fan-out per batch when
+    /// the plan has no stackable grid dim or the batch's shared weight
+    /// operands are not bit-identical. Per-request outputs and traffic
+    /// counters are unchanged either way (the parity contract); only
+    /// the *actual* launch count ([`ProgramStats::launches`]) shrinks.
+    pub coalesce: bool,
 }
 
 impl Default for ServerConfig {
@@ -82,7 +116,19 @@ impl Default for ServerConfig {
             threads: None,
             max_batch: 8,
             max_wait: Duration::from_millis(2),
+            coalesce: false,
         }
+    }
+}
+
+impl ServerConfig {
+    /// Normalize degenerate knobs once, at server construction:
+    /// `max_batch == 0` becomes 1, so no flush/queue call site ever
+    /// needs a per-site clamp (and a future call site cannot forget
+    /// one).
+    fn normalized(mut self) -> ServerConfig {
+        self.max_batch = self.max_batch.max(1);
+        self
     }
 }
 
@@ -105,10 +151,16 @@ pub struct Response {
     /// flops bit-identical to a sequential
     /// [`crate::coordinator::execute_plan_opts`] run on the same inputs.
     /// (`peak_local_bytes` is the one exception: a peak *estimate* the
-    /// engine does not pin across worker fan-outs.)
+    /// engine does not pin across worker fan-outs.) Coalesced launches
+    /// report per-request counters via grid-slice attribution, so the
+    /// contract holds there too — including `kernel_launches`, which
+    /// stays what this request would have paid alone.
     pub mem: MemSim,
     /// How many requests shared this request's batched launch.
     pub batch_size: usize,
+    /// Whether this request rode a stacked (coalesced) launch rather
+    /// than a per-request fan-out.
+    pub coalesced: bool,
     /// Time spent queued before the batch launched.
     pub queue_ns: u128,
     /// Wall-clock of the whole batched launch this request rode in
@@ -127,8 +179,10 @@ pub struct ProgramStats {
     /// [`crate::coordinator::compile`] invocations — compile-once means
     /// this stays at 1 no matter how many requests are served.
     pub compiles: u64,
-    /// Tape-skeleton binds performed at registration (== plan segments
-    /// on the compiled backend); serving performs none.
+    /// Tape-skeleton binds performed: plan segments once at
+    /// registration (on the compiled backend), plus one per segment for
+    /// each first-seen coalesced batch size (stacked re-binds — the
+    /// cheap phase only; skeletons are never recompiled while serving).
     pub binds: u64,
     /// Requests served.
     pub served: u64,
@@ -136,6 +190,17 @@ pub struct ProgramStats {
     pub batches: u64,
     /// Largest batch coalesced so far.
     pub peak_batch: usize,
+    /// Requests served via stacked (coalesced) launches.
+    pub coalesced: u64,
+    /// Stacked launches performed (each serving a whole batch).
+    pub stacked_batches: u64,
+    /// Kernel launches **actually executed** for this workload: a
+    /// stacked batch contributes one request's worth regardless of its
+    /// size; a fanned batch contributes every request's. This is the
+    /// coalescing win the per-response [`Response::mem`] counters
+    /// deliberately do not show (they keep the sequential-parity
+    /// contract).
+    pub launches: u64,
     /// Per-request end-to-end latency (queue + batched launch) of the
     /// most recent [`LATENCY_SAMPLE_CAP`] requests (a ring buffer — the
     /// latency summaries describe that window).
@@ -205,6 +270,17 @@ struct Served {
     full_shapes: HashMap<String, (usize, usize)>,
     model: CostModel,
     queue: VecDeque<Pending>,
+    /// `Some` iff the plan can coalesce same-shape batches into one
+    /// stacked launch (every segment's top-level nests grid over the
+    /// same dim) — computed once at registration.
+    stack: Option<StackInfo>,
+    /// Program inputs that do not carry the stack dim (weight-like,
+    /// bound once per stacked launch): a batch only coalesces when
+    /// these are bit-identical across its requests.
+    shared_inputs: BTreeSet<String>,
+    /// Stacked re-binds of the prepared plan, one per batch size seen
+    /// (bounded by `max_batch`; each is only the cheap bind phase).
+    stacked: HashMap<usize, StackedPlan>,
 }
 
 struct Pending {
@@ -231,7 +307,7 @@ pub struct ModelServer {
 impl ModelServer {
     pub fn new(cfg: ServerConfig) -> ModelServer {
         ModelServer {
-            cfg,
+            cfg: cfg.normalized(),
             programs: BTreeMap::new(),
             order: Vec::new(),
             rr: 0,
@@ -281,6 +357,11 @@ impl ModelServer {
             self.cfg.backend,
             &mut self.cache,
         );
+        let stack = plan_stack_info(&prepared);
+        let shared_inputs = stack
+            .as_ref()
+            .map(|info| unstacked_inputs(&prepared, info))
+            .unwrap_or_default();
         let st = self.stats.per_program.entry(name.to_string()).or_default();
         st.compiles += 1;
         st.binds += prepared.binds;
@@ -292,6 +373,9 @@ impl ModelServer {
                 full_shapes,
                 model,
                 queue: VecDeque::new(),
+                stack,
+                shared_inputs,
+                stacked: HashMap::new(),
             },
         );
         self.order.push(name.to_string());
@@ -334,6 +418,13 @@ impl ModelServer {
     /// `(workload, seed)` — exposed so callers can reproduce a request
     /// for verification (input names are generated in sorted order, so
     /// the mapping is deterministic).
+    ///
+    /// Weight-like inputs — those that do not carry the plan's stackable
+    /// grid dim — are drawn from a **fixed** per-workload stream instead
+    /// of `seed`: synthetic traffic then models a served model (fixed
+    /// weights, per-request activations), and any two synthetic requests
+    /// of one workload share their weights bit-for-bit, which is exactly
+    /// the condition a coalesced batch needs.
     pub fn synthetic_inputs(
         &self,
         workload: &str,
@@ -346,11 +437,17 @@ impl ModelServer {
         let mut names: Vec<&String> = served.full_shapes.keys().collect();
         names.sort();
         let mut rng = Rng::new(seed);
+        let mut weight_rng = Rng::new(SYNTHETIC_WEIGHT_SEED);
         Ok(names
             .into_iter()
             .map(|n| {
                 let (r, c) = served.full_shapes[n];
-                (n.clone(), rng.mat(r, c))
+                let m = if served.shared_inputs.contains(n) {
+                    weight_rng.mat(r, c)
+                } else {
+                    rng.mat(r, c)
+                };
+                (n.clone(), m)
             })
             .collect())
     }
@@ -370,39 +467,24 @@ impl ModelServer {
         self.programs.values().map(|s| s.queue.len()).sum()
     }
 
-    /// Flush every workload whose queue is due — full
-    /// ([`ServerConfig::max_batch`]) or latency-bound (oldest entry
-    /// older than [`ServerConfig::max_wait`]) — visiting workloads
-    /// round-robin.
-    /// Returns the responses of every batch launched; an empty vec means
-    /// nothing was due.
-    pub fn poll(&mut self) -> Vec<Response> {
-        let now = Instant::now();
-        let mut out = Vec::new();
-        let n = self.order.len();
-        for k in 0..n {
-            let name = self.order[(self.rr + k) % n].clone();
-            let due = {
-                let s = &self.programs[&name];
-                s.queue.len() >= self.cfg.max_batch.max(1)
-                    || s.queue
-                        .front()
-                        .is_some_and(|p| now.duration_since(p.enqueued) >= self.cfg.max_wait)
-            };
-            if due {
-                out.extend(self.flush_one(&name));
-            }
-        }
-        if n > 0 {
-            self.rr = (self.rr + 1) % n;
-        }
-        out
+    /// Whether `name`'s queue is due a flush as of `now`: holds a full
+    /// batch ([`ServerConfig::max_batch`]) or its oldest entry has
+    /// waited past [`ServerConfig::max_wait`] (the latency bound).
+    fn queue_due(&self, name: &str, now: Instant) -> bool {
+        let s = &self.programs[name];
+        s.queue.len() >= self.cfg.max_batch
+            || s.queue
+                .front()
+                .is_some_and(|p| now.duration_since(p.enqueued) >= self.cfg.max_wait)
     }
 
-    /// Flush until every queue is empty, taking at most `max_batch`
-    /// requests per workload per round-robin turn (so mixed traffic
-    /// interleaves instead of one workload draining first).
-    pub fn drain(&mut self) -> Vec<Response> {
+    /// Repeated round-robin sweeps, one batch per eligible workload per
+    /// sweep (so mixed traffic interleaves instead of one workload's
+    /// backlog blocking the others), until a full sweep flushes
+    /// nothing. The cursor advances once per sweep. Terminates: every
+    /// sweep that continues flushed at least one request, and the
+    /// eligibility predicates only shrink as queues drain.
+    fn sweep_flush(&mut self, eligible: impl Fn(&ModelServer, &str) -> bool) -> Vec<Response> {
         let mut out = Vec::new();
         let n = self.order.len();
         if n == 0 {
@@ -412,7 +494,7 @@ impl ModelServer {
             let mut any = false;
             for k in 0..n {
                 let name = self.order[(self.rr + k) % n].clone();
-                if !self.programs[&name].queue.is_empty() {
+                if eligible(self, &name) {
                     out.extend(self.flush_one(&name));
                     any = true;
                 }
@@ -424,12 +506,34 @@ impl ModelServer {
         }
     }
 
+    /// Flush every workload whose queue is due — full
+    /// ([`ServerConfig::max_batch`]) or latency-bound (oldest entry
+    /// older than [`ServerConfig::max_wait`]) — in round-robin sweeps
+    /// that repeat **while anything stays due**: a burst that queued
+    /// several `max_batch` fulls drains in this one poll (instead of
+    /// leaking backlog at one batch per poll), and a latency-due
+    /// partial remainder flushes here too rather than aging another
+    /// poll cycle.
+    /// Returns the responses of every batch launched; an empty vec means
+    /// nothing was due.
+    pub fn poll(&mut self) -> Vec<Response> {
+        let now = Instant::now();
+        self.sweep_flush(move |s, name| s.queue_due(name, now))
+    }
+
+    /// Flush until every queue is empty, taking at most `max_batch`
+    /// requests per workload per round-robin turn (so mixed traffic
+    /// interleaves instead of one workload draining first).
+    pub fn drain(&mut self) -> Vec<Response> {
+        self.sweep_flush(|s, name| !s.programs[name].queue.is_empty())
+    }
+
     /// Take up to `max_batch` queued requests of `name` and launch them
     /// as one batch.
     fn flush_one(&mut self, name: &str) -> Vec<Response> {
         let take = {
             let q = &self.programs[name].queue;
-            q.len().min(self.cfg.max_batch.max(1))
+            q.len().min(self.cfg.max_batch)
         };
         if take == 0 {
             return Vec::new();
@@ -444,18 +548,44 @@ impl ModelServer {
         self.run_batch(name, batch)
     }
 
-    /// Execute one coalesced batch: a single pool submission whose tasks
-    /// each run one request's full plan against the shared
-    /// [`PreparedPlan`]. With one request (or a worker cap of 1) the
-    /// batch runs inline on the caller — the exact serial path.
+    /// Execute one batch. With coalescing on and an eligible batch
+    /// (stackable plan, ≥2 requests, shared weights bit-identical) the
+    /// whole batch becomes **one stacked tape launch** across the full
+    /// worker budget ([`crate::coordinator::execute_prepared_stacked`]):
+    /// per-segment launch overhead is paid once instead of once per
+    /// request. Otherwise the batch fans out as one pool submission
+    /// whose tasks each run one request's plan. With one request (or a
+    /// worker cap of 1) the fan-out runs inline on the caller — the
+    /// exact serial path.
     fn run_batch(&mut self, name: &str, batch: Vec<Pending>) -> Vec<Response> {
         let bs = batch.len();
-        let workers = effective_workers(self.cfg.threads, bs);
         let threads = self.cfg.threads;
-        let (runs, launched, finished) = {
-            let prepared = &self.programs[name].prepared;
+        let workers = effective_workers(threads, bs);
+        let served = self
+            .programs
+            .get_mut(name)
+            .expect("run_batch: registered workload");
+        let stack_ok = self.cfg.coalesce
+            && bs >= 2
+            && served.stack.is_some()
+            && shared_inputs_identical(&served.shared_inputs, &batch);
+        let (runs, agg_launches, coalesced, new_binds, launched, finished) = if stack_ok {
+            let info = served.stack.clone().expect("stack_ok implies stack info");
+            let mut new_binds = 0;
+            if !served.stacked.contains_key(&bs) {
+                let sp = bind_stacked(&served.prepared, &info, bs);
+                new_binds = sp.binds;
+                served.stacked.insert(bs, sp);
+            }
+            let stacked = &served.stacked[&bs];
+            let input_refs: Vec<&HashMap<String, Mat>> = batch.iter().map(|p| &p.inputs).collect();
             let t0 = Instant::now();
-            let runs: Vec<PlanRun> = if workers <= 1 || bs == 1 {
+            let br = execute_prepared_stacked(&served.prepared, stacked, &input_refs, threads);
+            (br.runs, br.agg.kernel_launches, true, new_binds, t0, Instant::now())
+        } else {
+            let prepared = &served.prepared;
+            let t0 = Instant::now();
+            let rs: Vec<PlanRun> = if workers <= 1 || bs == 1 {
                 // Serial path: intra-request grid parallelism still
                 // applies under the caller's thread budget.
                 batch
@@ -482,7 +612,8 @@ impl ModelServer {
                     })
                     .collect()
             };
-            (runs, t0, Instant::now())
+            let launches = rs.iter().map(|r| r.mem.kernel_launches).sum();
+            (rs, launches, false, 0, t0, Instant::now())
         };
         let exec_ns = finished.duration_since(launched).as_nanos();
 
@@ -490,6 +621,12 @@ impl ModelServer {
         st.served += bs as u64;
         st.batches += 1;
         st.peak_batch = st.peak_batch.max(bs);
+        st.launches += agg_launches;
+        st.binds += new_binds;
+        if coalesced {
+            st.coalesced += bs as u64;
+            st.stacked_batches += 1;
+        }
         let mut out = Vec::with_capacity(bs);
         for (p, run) in batch.into_iter().zip(runs) {
             st.record_latency(finished.duration_since(p.enqueued).as_nanos());
@@ -499,6 +636,7 @@ impl ModelServer {
                 outputs: run.outputs,
                 mem: run.mem,
                 batch_size: bs,
+                coalesced,
                 queue_ns: launched.duration_since(p.enqueued).as_nanos(),
                 exec_ns,
             });
@@ -572,6 +710,41 @@ impl ModelServer {
 /// capped by the batch size.
 fn effective_workers(threads: Option<usize>, tasks: usize) -> usize {
     crate::exec::engine::worker_budget(threads).min(tasks)
+}
+
+/// Seed of the fixed weight stream behind [`ModelServer::synthetic_inputs`]
+/// (weight-like inputs are shared across all synthetic requests of a
+/// workload; activations vary with the request seed).
+const SYNTHETIC_WEIGHT_SEED: u64 = 0x5eed_b10c;
+
+/// Bitwise equality of every shared (weight-like) input across a batch.
+/// Value equality (`==`) is not enough — `-0.0 == 0.0` and NaN never
+/// compares equal — and a stacked launch binds request 0's copy for the
+/// whole batch, so anything short of bit-identity would break the
+/// per-request parity contract. The scan is O(batch · weight bytes) per
+/// flush, deliberately: a hash pre-check could only *reject* cheaply
+/// (matching hashes would still need this confirm scan to keep the
+/// bit-identical guarantee), and one linear pass over the weights is
+/// noise next to the launch itself, which re-reads them many times.
+fn shared_inputs_identical(shared: &BTreeSet<String>, batch: &[Pending]) -> bool {
+    shared.iter().all(|name| {
+        let m0 = batch[0]
+            .inputs
+            .get(name)
+            .expect("validated request has every program input");
+        batch[1..].iter().all(|p| {
+            let m = p
+                .inputs
+                .get(name)
+                .expect("validated request has every program input");
+            m.rows == m0.rows
+                && m.cols == m0.cols
+                && m.data
+                    .iter()
+                    .zip(&m0.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+        })
+    })
 }
 
 #[cfg(test)]
@@ -648,6 +821,84 @@ mod tests {
         assert_eq!(r.len(), 1);
         assert_eq!(r[0].batch_size, 1);
         assert_eq!(s.stats().per_program["quickstart"].peak_batch, 1);
+    }
+
+    /// Regression (burst under-drain): a queue holding several
+    /// `max_batch`-fulls must flush them all in ONE poll — the old
+    /// one-flush-per-poll behavior grew unbounded backlog whenever
+    /// arrival bursts outpaced the poll rate.
+    #[test]
+    fn poll_drains_overfull_queue_in_one_call() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        for i in 0..7u64 {
+            s.submit_synthetic("quickstart", i).unwrap();
+        }
+        let r = s.poll();
+        assert_eq!(r.len(), 6, "three full batches flush in one poll");
+        assert_eq!(s.pending(), 1, "the partial batch stays queued");
+        assert_eq!(s.stats().per_program["quickstart"].batches, 3);
+        // the remainder is below max_batch and not yet latency-due
+        assert!(s.poll().is_empty());
+    }
+
+    /// `max_batch == 0` normalizes to 1 at construction — no call site
+    /// clamps it anymore, so the server must behave exactly like
+    /// `max_batch == 1`.
+    #[test]
+    fn max_batch_zero_normalizes_to_one() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 0,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        assert_eq!(s.config().max_batch, 1);
+        s.register("quickstart").unwrap();
+        s.submit_synthetic("quickstart", 0).unwrap();
+        s.submit_synthetic("quickstart", 1).unwrap();
+        let r = s.poll();
+        assert_eq!(r.len(), 2, "two single-request batches");
+        assert!(r.iter().all(|r| r.batch_size == 1));
+    }
+
+    /// Coalescing smoke: a full same-shape batch rides one stacked
+    /// launch, and the actual launch count is one request's worth — the
+    /// per-response counters still report the sequential values.
+    #[test]
+    fn coalesced_batch_is_one_stacked_launch() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(2),
+            coalesce: true,
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        for i in 0..4u64 {
+            s.submit_synthetic("quickstart", i).unwrap();
+        }
+        let r = s.poll();
+        assert_eq!(r.len(), 4);
+        assert!(r.iter().all(|r| r.coalesced && r.batch_size == 4));
+        let st = &s.stats().per_program["quickstart"];
+        assert_eq!(st.coalesced, 4);
+        assert_eq!(st.stacked_batches, 1);
+        let per_req = r[0].mem.kernel_launches;
+        assert!(per_req > 0);
+        assert!(
+            r.iter().all(|x| x.mem.kernel_launches == per_req),
+            "same plan, same per-request launch charge"
+        );
+        assert_eq!(
+            st.launches, per_req,
+            "the stacked launch paid one request's worth of kernel launches for the whole batch"
+        );
     }
 
     #[test]

@@ -2,8 +2,15 @@
 //! `serve::ModelServer` must be **bit-identical** — outputs compared via
 //! `to_bits`, traffic counters compared exactly — to sequential
 //! `coordinator::execute_plan_opts` runs on the same inputs, across
-//! worker caps 1/2/8 and SIMD on/off, and it must never compile more
-//! than once per registered workload no matter how much traffic flows.
+//! worker caps 1/2/8, SIMD on/off, both backends, and cross-request
+//! kernel coalescing on/off, and it must never compile more than once
+//! per registered workload no matter how much traffic flows.
+//!
+//! With coalescing on, the suite additionally pins the launch ledger:
+//! every multi-request batch of the (stackable) canonical workloads must
+//! ride a stacked launch, and the kernel launches *actually executed*
+//! must be one request's worth per stacked batch — while each response
+//! still reports the launches its request would have paid alone.
 //!
 //! (`peak_local_bytes` is excluded from the counter comparison, matching
 //! the backend-parity suite: peak merging across worker fan-outs is the
@@ -59,14 +66,17 @@ fn assert_response_matches(name: &str, r: &Response, seq: &PlanRun) {
 
 /// Serve an interleaved 3-workload stream batched up to 4, then check
 /// every response bit-for-bit against an independent one-shot compile +
-/// sequential execution of the same request.
-fn serve_vs_sequential(backend: ExecBackend, threads: usize) {
+/// sequential execution of the same request. With `coalesce`, also pin
+/// the launch ledger: every multi-request batch must ride a stacked
+/// launch that executes ONE request's worth of kernel launches.
+fn serve_vs_sequential(backend: ExecBackend, threads: usize, coalesce: bool) {
     let mut server = ModelServer::new(ServerConfig {
         backend,
         threads: Some(threads),
         max_batch: 4,
         // no latency-bound flushes: batches are size-triggered or drained
         max_wait: Duration::from_secs(3600),
+        coalesce,
     });
     for name in MIX {
         server.register(name).unwrap();
@@ -93,11 +103,21 @@ fn serve_vs_sequential(backend: ExecBackend, threads: usize) {
         assert_eq!(st.served, 6, "{name}: all requests served");
         assert!(st.batches <= 2, "{name}: 6 requests in ≤2 batches of 4");
         assert!(st.peak_batch >= 2, "{name}: batching actually coalesced");
+        if coalesce {
+            // synthetic requests share weights bit-for-bit, and all
+            // canonical plans stack along M: every multi-request batch
+            // (every batch here — 6 requests split 4+2) must coalesce
+            assert_eq!(st.coalesced, 6, "{name}: all requests coalesced");
+            assert_eq!(st.stacked_batches, st.batches, "{name}: all batches stacked");
+        } else {
+            assert_eq!(st.coalesced, 0, "{name}: coalescing off");
+            assert_eq!(st.stacked_batches, 0, "{name}");
+        }
     }
     assert_eq!(
         server.cache_misses(),
         misses_after_register,
-        "serving traffic must never compile a skeleton"
+        "serving traffic (stacked binds included) must never compile a skeleton"
     );
 
     // ground truth: one independent compile per workload, then
@@ -108,12 +128,14 @@ fn serve_vs_sequential(backend: ExecBackend, threads: usize) {
         let compiled = compile(&p, cfg.clone());
         plans.insert(*name, (compiled, cfg, params));
     }
+    let mut per_req_launches: HashMap<&str, u64> = HashMap::new();
     for (id, name, seed) in &submitted {
         let r = responses
             .iter()
             .find(|r| r.id == *id)
             .unwrap_or_else(|| panic!("request {id} has no response"));
         assert_eq!(&r.workload, name);
+        assert_eq!(r.coalesced, coalesce, "{name}: coalesced flag");
         let (compiled, cfg, params) = &plans[name];
         let inputs = server.synthetic_inputs(name, *seed).unwrap();
         let seq = execute_plan_opts(
@@ -125,32 +147,64 @@ fn serve_vs_sequential(backend: ExecBackend, threads: usize) {
             Some(threads),
         );
         assert_response_matches(name, r, &seq);
+        per_req_launches.insert(*name, seq.mem.kernel_launches);
+    }
+
+    // launch ledger: a stacked batch executes one request's worth of
+    // kernel launches; a fanned batch executes every request's
+    for name in MIX {
+        let st = &server.stats().per_program[*name];
+        let per_req = per_req_launches[name];
+        let want = if coalesce {
+            st.batches * per_req
+        } else {
+            st.served * per_req
+        };
+        assert_eq!(
+            st.launches, want,
+            "{name}: launch ledger (coalesce={coalesce})"
+        );
     }
 }
 
 /// Run `serve_vs_sequential` with SIMD off then on (both sides of the
 /// comparison run under the same mode).
-fn sweep(backend: ExecBackend, threads: usize) {
+fn sweep(backend: ExecBackend, threads: usize, coalesce: bool) {
     let _g = toggle_lock();
     simd::set_enabled(false);
-    serve_vs_sequential(backend, threads);
+    serve_vs_sequential(backend, threads, coalesce);
     simd::set_enabled(true);
-    serve_vs_sequential(backend, threads);
+    serve_vs_sequential(backend, threads, coalesce);
 }
 
 #[test]
 fn batched_serving_matches_sequential_threads_1() {
-    sweep(ExecBackend::Compiled, 1);
+    sweep(ExecBackend::Compiled, 1, false);
 }
 
 #[test]
 fn batched_serving_matches_sequential_threads_2() {
-    sweep(ExecBackend::Compiled, 2);
+    sweep(ExecBackend::Compiled, 2, false);
 }
 
 #[test]
 fn batched_serving_matches_sequential_threads_8() {
-    sweep(ExecBackend::Compiled, 8);
+    sweep(ExecBackend::Compiled, 8, false);
+}
+
+#[test]
+fn coalesced_serving_matches_sequential_threads_1() {
+    sweep(ExecBackend::Compiled, 1, true);
+}
+
+#[test]
+fn coalesced_serving_matches_sequential_threads_2() {
+    sweep(ExecBackend::Compiled, 2, true);
+}
+
+#[test]
+fn coalesced_serving_matches_sequential_threads_8() {
+    sweep(ExecBackend::Compiled, 8, true);
 }
 
 /// The interpreter backend serves too (no tapes, still compile-once).
@@ -158,7 +212,16 @@ fn batched_serving_matches_sequential_threads_8() {
 fn interp_serving_matches_sequential() {
     let _g = toggle_lock();
     simd::set_enabled(true);
-    serve_vs_sequential(ExecBackend::Interp, 2);
+    serve_vs_sequential(ExecBackend::Interp, 2, false);
+}
+
+/// Coalesced stacked execution on the interpreter backend: no tapes,
+/// same per-request parity and launch ledger.
+#[test]
+fn interp_coalesced_serving_matches_sequential() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    serve_vs_sequential(ExecBackend::Interp, 2, true);
 }
 
 /// Degenerate batching (max_batch 1) must still serve correctly — every
@@ -172,6 +235,7 @@ fn unbatched_serving_is_just_sequential() {
         threads: Some(2),
         max_batch: 1,
         max_wait: Duration::from_secs(3600),
+        coalesce: true, // irrelevant at batch size 1 — stays serial
     });
     server.register("attention").unwrap();
     for i in 0..3u64 {
@@ -200,6 +264,88 @@ fn unbatched_serving_is_just_sequential() {
     }
 }
 
+/// A batch whose shared weight operands differ across requests must
+/// fall back to per-request fan-out — and still be bit-identical to
+/// sequential execution of each request's own inputs.
+#[test]
+fn differing_weights_fall_back_to_fanout() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(2),
+        max_batch: 4,
+        max_wait: Duration::from_secs(3600),
+        coalesce: true,
+    });
+    server.register("quickstart").unwrap();
+    // four requests, one of which perturbs the shared weight BT
+    let mut submitted: Vec<(u64, std::collections::HashMap<String, Mat>)> = Vec::new();
+    for i in 0..4u64 {
+        let mut inputs = server.synthetic_inputs("quickstart", 2000 + i).unwrap();
+        if i == 2 {
+            let bt = inputs.get_mut("BT").unwrap();
+            bt.data[0] += 1.0;
+        }
+        let id = server
+            .submit(blockbuster::serve::Request {
+                workload: "quickstart".into(),
+                inputs: inputs.clone(),
+            })
+            .unwrap();
+        submitted.push((id, inputs));
+    }
+    let responses = server.drain();
+    assert_eq!(responses.len(), 4);
+    assert!(
+        responses.iter().all(|r| !r.coalesced),
+        "weight mismatch must disable coalescing for the batch"
+    );
+    let st = &server.stats().per_program["quickstart"];
+    assert_eq!(st.coalesced, 0);
+    assert_eq!(st.stacked_batches, 0);
+
+    let (p, cfg, params, _) = workloads::by_name("quickstart", 0).unwrap();
+    let compiled = compile(&p, cfg.clone());
+    for (id, inputs) in &submitted {
+        let r = responses.iter().find(|r| r.id == *id).unwrap();
+        let seq = execute_plan_opts(
+            &compiled.plan,
+            &cfg.sizes,
+            &params,
+            inputs,
+            ExecBackend::Compiled,
+            Some(2),
+        );
+        assert_response_matches("quickstart", r, &seq);
+    }
+}
+
+/// Mixed-shape traffic: different workloads never share a batch, so a
+/// coalescing server handles a mixed stream as per-workload stacked
+/// launches — and a single-request flush (the latency-bound path) falls
+/// back to the serial path with `coalesced == false`.
+#[test]
+fn coalesce_single_request_batches_stay_serial() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(2),
+        max_batch: 8,
+        max_wait: Duration::ZERO,
+        coalesce: true,
+    });
+    server.register("quickstart").unwrap();
+    server.submit_synthetic("quickstart", 7).unwrap();
+    let r = server.poll();
+    assert_eq!(r.len(), 1);
+    assert!(!r[0].coalesced, "a lone request has nothing to stack");
+    let st = &server.stats().per_program["quickstart"];
+    assert_eq!(st.coalesced, 0);
+    assert_eq!(st.launches, r[0].mem.kernel_launches);
+}
+
 /// Oversized traffic bursts: a queue much longer than max_batch flushes
 /// in max_batch-sized launches, round-robin with the other workloads.
 #[test]
@@ -211,6 +357,7 @@ fn burst_traffic_batches_at_max_batch() {
         threads: Some(4),
         max_batch: 4,
         max_wait: Duration::from_secs(3600),
+        coalesce: false,
     });
     server.register("quickstart").unwrap();
     server.register("layernorm_matmul").unwrap();
