@@ -2,18 +2,25 @@
 //! closed-loop throughput and end-to-end latency at dynamic batch sizes
 //! 1/4/16 on one workload, coalesced (stacked-launch) vs fanned
 //! execution of the same batched stream, a mixed 3-workload round-robin
-//! stream, and the compile-amortization ratio (how many served requests
-//! pay back one `coordinator::compile` + plan prepare). Emits
-//! `BENCH_serve.json` next to the textual tables; set `BB_BENCH_SMOKE=1`
-//! for the seconds-long CI run.
+//! stream, the compile-amortization ratio (how many served requests
+//! pay back one `coordinator::compile` + plan prepare), *open-loop*
+//! arrival curves through the daemon (p50/p95/p99 + shed counts at
+//! 0.5x/1x/2x of measured capacity against a bounded queue), and a
+//! seeded-fault row (containment + counter reconciliation under
+//! injected batch panics). Emits `BENCH_serve.json` next to the textual
+//! tables; set `BB_BENCH_SMOKE=1` for the seconds-long CI run.
 //!
 //! Latency here is enqueue→response (queue wait + batched launch), so a
 //! full burst's tail requests see queueing delay — the realistic
-//! closed-loop number, not the bare launch time.
+//! closed-loop number, not the bare launch time. The open-loop rows
+//! pace arrivals independently of completions, which is what actually
+//! separates an overloaded server from a busy one.
 
 use blockbuster::exec::ExecBackend;
-use blockbuster::serve::{ModelServer, ServerConfig};
+use blockbuster::serve::daemon::{Daemon, Ticket};
+use blockbuster::serve::{ModelServer, Request, Response, ServerConfig};
 use blockbuster::util::bench::{percentile, write_json_report, Table};
+use blockbuster::util::fault;
 use blockbuster::util::json::Json;
 use std::time::{Duration, Instant};
 
@@ -24,6 +31,7 @@ fn server_with(max_batch: usize, coalesce: bool, mix: &[&str]) -> ModelServer {
         max_batch,
         max_wait: Duration::from_secs(3600),
         coalesce,
+        ..ServerConfig::default()
     });
     for name in mix {
         s.register(name).unwrap();
@@ -120,10 +128,7 @@ fn main() {
         let launches = st.launches - warm_launches;
         let stacked_batches = st.stacked_batches - warm_stacked;
         if coalesce {
-            assert!(
-                st.coalesced - warm_coalesced > 0,
-                "coalescing must engage on {program}"
-            );
+            assert!(st.coalesced - warm_coalesced > 0, "coalescing must engage on {program}");
         }
         let rps = n_requests as f64 / wall.as_secs_f64();
         rps_by_mode[mi] = rps;
@@ -172,6 +177,119 @@ fn main() {
         compile_ns / 1e6
     );
 
+    // ---- open-loop arrival curves through the daemon ------------------
+    // Arrivals are paced independently of completions (open loop): at
+    // 0.5x measured capacity the queue stays short; past 1x the bounded
+    // queue sheds the overload with typed rejections and p99 saturates
+    // near queue_cap * service time instead of growing without bound.
+    let capacity_rps = 1e9 / steady_ns_per_req;
+    let open_n = if smoke { 32 } else { 128 };
+    let mut ot = Table::new(
+        &format!("Open-loop {program} via daemon, queue_cap 32, {open_n} arrivals per row"),
+        &["offered", "served", "shed", "p50 lat", "p95 lat", "p99 lat"],
+    );
+    let mut open_loop_rows = Vec::new();
+    for factor in [0.5f64, 1.0, 2.0] {
+        let offered_rps = capacity_rps * factor;
+        let mut s = ModelServer::new(ServerConfig {
+            backend: ExecBackend::Compiled,
+            threads: None,
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            coalesce: false,
+            queue_cap: Some(32),
+            ..ServerConfig::default()
+        });
+        s.register(program).unwrap();
+        // pre-generate the stream (inputs need the server's shape specs)
+        let reqs: Vec<Request> = (0..open_n as u64)
+            .map(|i| Request::new(program, s.synthetic_inputs(program, 40_000 + i).unwrap()))
+            .collect();
+        let daemon = Daemon::start(s, None);
+        let client = daemon.client();
+        let t1 = Instant::now();
+        let mut tickets: Vec<Ticket> = Vec::with_capacity(open_n);
+        for (i, req) in reqs.into_iter().enumerate() {
+            let due = Duration::from_secs_f64(i as f64 / offered_rps);
+            let now = t1.elapsed();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            tickets.push(client.submit(req));
+        }
+        let responses: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+        let server = daemon.shutdown();
+        assert_eq!(responses.len(), open_n);
+        let st = &server.stats().per_program[program];
+        assert_eq!(st.accounted(), st.submitted, "open-loop counters must reconcile at {factor}x");
+        let lat: Vec<u128> = responses
+            .iter()
+            .filter(|r| r.is_ok())
+            .map(|r| r.queue_ns + r.exec_ns)
+            .collect();
+        let shed = st.rejected();
+        let (p50, p95, p99) = (
+            percentile(&lat, 50.0) as f64 / 1e3,
+            percentile(&lat, 95.0) as f64 / 1e3,
+            percentile(&lat, 99.0) as f64 / 1e3,
+        );
+        ot.row(vec![
+            format!("{factor:.1}x cap"),
+            st.served.to_string(),
+            shed.to_string(),
+            format!("{p50:.1}µs"),
+            format!("{p95:.1}µs"),
+            format!("{p99:.1}µs"),
+        ]);
+        open_loop_rows.push(Json::obj(vec![
+            ("offered_factor", Json::Num(factor)),
+            ("offered_rps", Json::Num(offered_rps)),
+            ("served", Json::Num(st.served as f64)),
+            ("shed", Json::Num(shed as f64)),
+            ("p50_latency_us", Json::Num(p50)),
+            ("p95_latency_us", Json::Num(p95)),
+            ("p99_latency_us", Json::Num(p99)),
+        ]));
+    }
+    ot.print();
+
+    // ---- seeded faults: containment + accounting under panics ---------
+    let fault_n = if smoke { 24 } else { 96 };
+    fault::set(0.2, 0xb10c_fa17);
+    let mut s = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: None,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        coalesce: false,
+        ..ServerConfig::default()
+    });
+    s.register(program).unwrap();
+    let reqs: Vec<Request> = (0..fault_n as u64)
+        .map(|i| Request::new(program, s.synthetic_inputs(program, 50_000 + i).unwrap()))
+        .collect();
+    let daemon = Daemon::start(s, None);
+    let client = daemon.client();
+    let tickets: Vec<Ticket> = reqs.into_iter().map(|r| client.submit(r)).collect();
+    let responses: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+    let server = daemon.shutdown();
+    fault::off();
+    assert_eq!(responses.len(), fault_n, "every submission answered under faults");
+    let st = &server.stats().per_program[program];
+    assert_eq!(st.accounted(), st.submitted, "fault-row counters must reconcile");
+    println!(
+        "\nfaults @ 20%: {} submitted = {} served + {} failed \
+         ({} contained panic(s)); daemon never aborted",
+        st.submitted, st.served, st.failed, st.panics
+    );
+    let fault_obj = Json::obj(vec![
+        ("rate", Json::Num(0.2)),
+        ("submitted", Json::Num(st.submitted as f64)),
+        ("served", Json::Num(st.served as f64)),
+        ("failed", Json::Num(st.failed as f64)),
+        ("contained_panics", Json::Num(st.panics as f64)),
+    ]);
+
     let report = Json::obj(vec![
         ("bench", Json::Str("serve".into())),
         ("smoke", Json::Bool(smoke)),
@@ -198,6 +316,12 @@ fn main() {
                 ("compiles", Json::Num(compiles as f64)),
             ]),
         ),
+        // paced (open-loop) arrivals vs a bounded queue: offered load,
+        // shed counts, and the latency tail per offered/capacity ratio
+        ("open_loop_rows", Json::Arr(open_loop_rows)),
+        // seeded 20% batch-panic injection: the daemon keeps serving,
+        // failures are typed responses, and the ledger still reconciles
+        ("fault", fault_obj),
     ]);
     write_json_report("BENCH_serve.json", &report).expect("writing BENCH_serve.json");
     println!("\nwrote BENCH_serve.json");

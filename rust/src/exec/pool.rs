@@ -43,10 +43,11 @@
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::{Condvar, Mutex, OnceLock};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread;
 
 use super::engine::MAX_WORKERS;
+use crate::util::fault;
 
 /// Type-erased job: run once per participating worker index.
 type JobFn = dyn Fn(usize) + Sync;
@@ -80,6 +81,12 @@ struct State {
     unfinished: usize,
     /// First worker panic of the current job, re-raised by the submitter.
     panic: Option<Box<dyn std::any::Any + Send>>,
+    /// Indexes of workers that died (today only via injected faults —
+    /// see [`crate::util::fault`]); respawned by the next submission so
+    /// a worker death never strands future jobs.
+    dead: Vec<usize>,
+    /// Workers respawned after a death (monotone; chaos-suite telemetry).
+    respawns: u64,
 }
 
 /// The process-wide persistent worker pool (see module docs).
@@ -109,6 +116,8 @@ pub fn global() -> &'static WorkerPool {
             spawned: 0,
             unfinished: 0,
             panic: None,
+            dead: Vec::new(),
+            respawns: 0,
         }),
         work_cv: Condvar::new(),
         done_cv: Condvar::new(),
@@ -117,6 +126,16 @@ pub fn global() -> &'static WorkerPool {
 }
 
 impl WorkerPool {
+    /// Lock the pool state, recovering from poison: every state mutation
+    /// here is a plain counter/slot update that stays consistent even if
+    /// a holder unwound mid-critical-section, so a poisoned lock must
+    /// degrade to a recoverable condition, not take the daemon down.
+    fn st(&self) -> MutexGuard<'_, State> {
+        self.state
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
     /// Run `f(0)`, …, `f(nw-1)`, one call per pool worker, and block
     /// until all have finished. Panics in any call are re-raised here
     /// with their original payload. `nw` is clamped to [`MAX_WORKERS`];
@@ -147,7 +166,19 @@ impl WorkerPool {
         // wait loop below enforces before returning.
         let job = JobPtr(f as *const _ as *const JobFn);
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.st();
+            // Respawn any workers that died since the last job (injected
+            // faults kill worker threads *after* check-in, so a death
+            // never hangs the job it happened in — but the index must be
+            // re-staffed before the next job can count on it).
+            while let Some(w) = st.dead.pop() {
+                let seen = st.epoch;
+                thread::Builder::new()
+                    .name(format!("bb-pool-{w}"))
+                    .spawn(move || worker_loop(global(), w, seen))
+                    .expect("respawning pool worker");
+                st.respawns += 1;
+            }
             while st.spawned < nw {
                 let w = st.spawned;
                 let seen = st.epoch;
@@ -162,9 +193,12 @@ impl WorkerPool {
             st.unfinished = nw;
         }
         self.work_cv.notify_all();
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.st();
         while st.unfinished > 0 {
-            st = self.done_cv.wait(st).unwrap();
+            st = self
+                .done_cv
+                .wait(st)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
         }
         // `st.job` is intentionally left stale (see its field docs).
         let panic = st.panic.take();
@@ -205,9 +239,16 @@ impl WorkerPool {
     }
 
     /// Worker threads spawned so far — monotone and ≤ [`MAX_WORKERS`]
-    /// (the stress suite's leak/cap check).
+    /// (the stress suite's leak/cap check). Respawns reuse their dead
+    /// predecessor's index and do **not** grow this count.
     pub fn spawned(&self) -> usize {
-        self.state.lock().unwrap().spawned
+        self.st().spawned
+    }
+
+    /// Workers respawned after an (injected) death — the chaos suite's
+    /// evidence that worker mortality is survived, not just avoided.
+    pub fn respawns(&self) -> u64 {
+        self.st().respawns
     }
 }
 
@@ -217,7 +258,7 @@ fn worker_loop(pool: &'static WorkerPool, w: usize, mut seen: u64) {
     IN_POOL_WORKER.with(|c| c.set(true));
     loop {
         let (job, nw) = {
-            let mut st = pool.state.lock().unwrap();
+            let mut st = pool.st();
             loop {
                 if st.epoch != seen {
                     // An epoch bump always publishes a job first; the
@@ -229,7 +270,10 @@ fn worker_loop(pool: &'static WorkerPool, w: usize, mut seen: u64) {
                     seen = st.epoch;
                     break (job, nw);
                 }
-                st = pool.work_cv.wait(st).unwrap();
+                st = pool
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
             }
         };
         if w >= nw {
@@ -242,7 +286,7 @@ fn worker_loop(pool: &'static WorkerPool, w: usize, mut seen: u64) {
             unsafe { (&*job.0)(w) }
         }))
         .err();
-        let mut st = pool.state.lock().unwrap();
+        let mut st = pool.st();
         if let Some(p) = err {
             if st.panic.is_none() {
                 st.panic = Some(p);
@@ -251,6 +295,13 @@ fn worker_loop(pool: &'static WorkerPool, w: usize, mut seen: u64) {
         st.unfinished -= 1;
         if st.unfinished == 0 {
             pool.done_cv.notify_all();
+        }
+        // Injected worker mortality (chaos suite): die *after* checking
+        // in, so the in-flight job still completes; the index is queued
+        // for respawn by the next submission.
+        if fault::injected(fault::Site::PoolWorker) {
+            st.dead.push(w);
+            return;
         }
     }
 }

@@ -8,6 +8,9 @@
 //! blockbuster tune <program> [--seed N] [--capacity BYTES]
 //! blockbuster serve [--requests N] [--mix a,b:2,c] [--max-batch N]
 //!                   [--max-wait-ms MS] [--coalesce]
+//!                   [--queue-cap N] [--deadline-ms MS]
+//!                   [--shed-policy reject-new|drop-oldest]
+//!                   [--retune-every N]
 //!                   [--backend interp|compiled]
 //!                   [--threads N] [--seed N] [--no-simd]
 //! blockbuster xla [<model>] [--artifacts DIR] [--seed N]
@@ -18,8 +21,10 @@
 //! graphviz / IR dump on request); `compile` the selection-plan report;
 //! `run` executes one plan against the naive unfused baseline; `tune`
 //! ranks block-count assignments under a local-memory budget; `serve`
-//! drives the compile-once serving layer over a mixed request stream
-//! with dynamic batching; `xla` runs an AOT artifact through PJRT;
+//! runs the fault-tolerant serving daemon (channel ingest + background
+//! flusher) over a mixed request stream with dynamic batching,
+//! admission control, deadlines, and optional live re-tuning; `xla`
+//! runs an AOT artifact through PJRT;
 //! `list` names the available programs. Full flag semantics are in
 //! `usage()` (run with no arguments) and the README's quickstart.
 //!
@@ -40,7 +45,8 @@ use blockbuster::ir::display::{dump, to_dot};
 use blockbuster::loopir::lower::lower;
 use blockbuster::loopir::print::render;
 use blockbuster::lower::lower_array;
-use blockbuster::serve::{ModelServer, ServerConfig};
+use blockbuster::serve::daemon::{Daemon, RetuneConfig, Ticket};
+use blockbuster::serve::{ModelServer, Request, Response, ServerConfig, ShedPolicy};
 use blockbuster::tensor::{Mat, Rng};
 use blockbuster::util::bench::{fmt_bytes, percentile, Table};
 use blockbuster::util::cli::Args;
@@ -66,7 +72,7 @@ commands:
   tune <program>     rank block-count assignments by the static cost model
       --seed N           input seed (default 42)
       --capacity BYTES   local-memory budget (default 1048576)
-  serve              drive the compile-once server on a request stream
+  serve              run the serving daemon on a request stream
       --requests N       requests to generate (default 64)
       --mix SPEC         workload mix, name[:weight],... (default
                          quickstart,attention,rmsnorm_ffn_swiglu)
@@ -77,10 +83,23 @@ commands:
                          overhead paid once per batch, not once per request;
                          falls back to per-request fan-out when a plan has no
                          stackable grid dim or batch weights differ)
+      --queue-cap N      admission control: bound each workload's queue at N
+                         pending requests; over-cap submissions are shed with
+                         a typed QueueFull rejection (default: unbounded)
+      --deadline-ms MS   per-request deadline from admission; expired work is
+                         shed (at admission or batch formation) instead of
+                         executed (default: none)
+      --shed-policy P    who pays when a queue is full: reject-new (default)
+                         or drop-oldest
+      --retune-every N   re-tune each workload's block shapes after every N
+                         served requests and hot-swap measured winners into
+                         the live plan between batches (default: off)
       --backend B        executor backend: interp | compiled (default compiled)
       --threads N        worker cap: batch fan-out + grid loops (default: cores)
       --seed N           request-stream seed (default 42)
       --no-simd          force the bit-identical scalar kernels
+      (env) BB_FAULT_RATE / BB_FAULT_SEED arm the seeded fault injector —
+            injected batch panics are contained as error responses
   xla [<model>]      run an AOT artifact through PJRT (default attention_fused)
       --artifacts DIR    artifact directory (default artifacts)
       --seed N           input seed (default 42)
@@ -105,11 +124,16 @@ fn main() -> anyhow::Result<()> {
             "mix",
             "max-batch",
             "max-wait-ms",
+            "queue-cap",
+            "deadline-ms",
+            "shed-policy",
+            "retune-every",
         ],
     );
     if args.flag("no-simd") {
         blockbuster::tensor::simd::set_enabled(false);
     }
+    blockbuster::util::fault::init_from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     match cmd {
         "trace" => cmd_trace(&args),
@@ -154,10 +178,7 @@ fn demo_or_die(args: &Args) -> workloads::Demo {
         .unwrap_or_else(|| usage());
     let seed = args.opt_usize("seed", 42) as u64;
     workloads::by_name(name, seed).unwrap_or_else(|| {
-        eprintln!(
-            "unknown program {name}; have {}",
-            workloads::NAMES.join(", ")
-        );
+        eprintln!("unknown program {name}; have {}", workloads::NAMES.join(", "));
         std::process::exit(2);
     })
 }
@@ -172,11 +193,7 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         g.interior_buffered_count_recursive()
     );
     let res = fuse(g);
-    println!(
-        "fusion trace ({} steps, {}):",
-        res.trace.len(),
-        res.trace.summary()
-    );
+    println!("fusion trace ({} steps, {}):", res.trace.len(), res.trace.summary());
     print!("{}", res.trace);
     let fused = res.snapshots.last().unwrap();
     println!(
@@ -185,10 +202,7 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         fused.interior_buffered_count_recursive()
     );
     if args.flag("listing") {
-        println!(
-            "\nfused kernel (paper-style listing):\n{}",
-            render(&lower(fused))
-        );
+        println!("\nfused kernel (paper-style listing):\n{}", render(&lower(fused)));
     }
     if args.flag("dot") {
         println!("{}", to_dot(fused, "fused"));
@@ -268,11 +282,7 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     let g = lower_array(&p);
     let fused = fuse(g).snapshots.pop().unwrap();
     let res = autotune(&fused, &cfg.full_shapes, capacity, &CostModel::default());
-    println!(
-        "{} configurations; best under {} first:",
-        res.points.len(),
-        fmt_bytes(capacity)
-    );
+    println!("{} configurations; best under {} first:", res.points.len(), fmt_bytes(capacity));
     for p in res.points.iter().take(8) {
         println!(
             "  {:?} -> traffic {} flops {} peak-local {} {}",
@@ -294,6 +304,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 2) as u64);
     let coalesce = args.flag("coalesce");
     let seed = args.opt_usize("seed", 42) as u64;
+    let queue_cap = args.opt("queue-cap").map(|s| {
+        s.parse::<usize>().unwrap_or_else(|_| {
+            eprintln!("--queue-cap expects a number, got {s}");
+            std::process::exit(2);
+        })
+    });
+    let deadline = args
+        .opt("deadline-ms")
+        .map(|s| {
+            s.parse::<u64>().unwrap_or_else(|_| {
+                eprintln!("--deadline-ms expects a number, got {s}");
+                std::process::exit(2);
+            })
+        })
+        .map(Duration::from_millis);
+    let shed_policy = match args.opt("shed-policy") {
+        None => ShedPolicy::RejectNew,
+        Some(s) => ShedPolicy::from_name(s).unwrap_or_else(|| {
+            eprintln!("unknown shed policy {s}; have: reject-new, drop-oldest");
+            std::process::exit(2);
+        }),
+    };
+    let retune_every = args.opt_usize("retune-every", 0) as u64;
 
     // --mix name[:weight],... — the traffic composition. Repeated names
     // merge their weights (so "a,a:3" weighs a at 4) instead of
@@ -334,6 +367,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         max_batch,
         max_wait,
         coalesce,
+        queue_cap,
+        deadline,
+        shed_policy,
     });
     for (name, _) in &spec {
         server.register(name)?;
@@ -353,14 +389,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "batching: max_batch {max_batch}, max_wait {max_wait:?}, coalesce {}",
         if coalesce { "on" } else { "off" }
     );
+    println!(
+        "admission: queue_cap {}, deadline {}, shed_policy {:?}, retune_every {}",
+        queue_cap.map_or("unbounded".to_string(), |c| c.to_string()),
+        deadline.map_or("none".to_string(), |d| format!("{d:?}")),
+        shed_policy,
+        if retune_every == 0 {
+            "off".to_string()
+        } else {
+            retune_every.to_string()
+        }
+    );
+    let fault_rate = blockbuster::util::fault::rate();
+    if fault_rate > 0.0 {
+        println!("fault injection: armed at rate {fault_rate} (BB_FAULT_RATE)");
+    }
 
-    // Deterministic weighted request stream; poll() between arrivals so
-    // the latency-bound flush gets exercised, drain() at end of stream.
+    // Deterministic weighted request stream, fully generated up front so
+    // the daemon sees a pure ingest workload (inputs need &server for
+    // the registered shape specs, and the server moves into the daemon).
     let total_weight: usize = spec.iter().map(|(_, w)| w).sum();
     let mut lcg: u64 = seed | 1;
-    let mut submitted: Vec<(u64, String, u64)> = Vec::new(); // (id, workload, seed)
-    let mut responses = Vec::new();
-    let serve_t0 = Instant::now();
+    let mut meta: Vec<(String, u64)> = Vec::new(); // (workload, seed), submission order
+    let mut stream: Vec<Request> = Vec::new();
     for i in 0..requests {
         lcg = lcg
             .wrapping_mul(6364136223846793005)
@@ -378,57 +429,91 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             })
             .expect("weighted pick in range");
         let req_seed = seed.wrapping_add(i as u64);
-        let id = server.submit_synthetic(&name, req_seed)?;
-        submitted.push((id, name, req_seed));
-        responses.extend(server.poll());
+        stream.push(Request::new(&name, server.synthetic_inputs(&name, req_seed)?));
+        meta.push((name, req_seed));
     }
-    responses.extend(server.drain());
-    let serve_secs = serve_t0.elapsed().as_secs_f64();
-    assert_eq!(responses.len(), requests, "every request must be served");
 
-    // Parity spot-check: for each workload, re-run the first served
+    // Channel ingest → background flusher → worker pool; shutdown() is a
+    // graceful drain that hands the server back for stats + parity.
+    let retune = (retune_every > 0).then(|| RetuneConfig {
+        every: retune_every,
+        local_capacity: 1 << 20,
+        trials: 3,
+    });
+    let daemon = Daemon::start(server, retune);
+    let client = daemon.client();
+    let serve_t0 = Instant::now();
+    let tickets: Vec<Ticket> = stream.into_iter().map(|r| client.submit(r)).collect();
+    let responses: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+    let serve_secs = serve_t0.elapsed().as_secs_f64();
+    let server = daemon.shutdown();
+    assert_eq!(responses.len(), requests, "every submission must yield exactly one response");
+
+    // Parity spot-check: for each workload, re-run the first *served*
     // request through an independent one-shot compile + sequential
     // execution; outputs and traffic counters must match bit-for-bit.
-    for (name, _) in &spec {
-        let Some(r) = responses.iter().find(|r| &r.workload == name) else {
-            continue; // workload drew no traffic in this stream
-        };
-        let (_, _, req_seed) = submitted
-            .iter()
-            .find(|(id, ..)| *id == r.id)
-            .expect("response id was submitted");
-        let (p, ccfg, params, _) = workloads::by_name(name, 0).expect("registered name");
-        let compiled = compile(&p, ccfg.clone());
-        let inputs = server.synthetic_inputs(name, *req_seed)?;
-        let seq =
-            execute_plan_opts(&compiled.plan, &ccfg.sizes, &params, &inputs, backend, threads);
-        for (out_name, m) in &seq.outputs {
+    // Skipped when re-tuning is on (the live plan may legitimately
+    // diverge from the registration-time plan) or faults are armed.
+    if retune_every == 0 && fault_rate == 0.0 {
+        for (name, _) in &spec {
+            let Some((idx, r)) = responses
+                .iter()
+                .enumerate()
+                .find(|(_, r)| &r.workload == name && r.is_ok())
+            else {
+                continue; // workload drew no (served) traffic in this stream
+            };
+            let (_, req_seed) = &meta[idx];
+            let (p, ccfg, params, _) = workloads::by_name(name, 0).expect("registered name");
+            let compiled = compile(&p, ccfg.clone());
+            let inputs = server.synthetic_inputs(name, *req_seed)?;
+            let seq =
+                execute_plan_opts(&compiled.plan, &ccfg.sizes, &params, &inputs, backend, threads);
+            for (out_name, m) in &seq.outputs {
+                assert_eq!(
+                    m, &r.outputs[out_name],
+                    "served output {out_name} of {name} diverged from sequential execution"
+                );
+            }
             assert_eq!(
-                m, &r.outputs[out_name],
-                "served output {out_name} of {name} diverged from sequential execution"
+                (
+                    seq.mem.loaded_bytes,
+                    seq.mem.stored_bytes,
+                    seq.mem.kernel_launches,
+                    seq.mem.flops
+                ),
+                (
+                    r.mem.loaded_bytes,
+                    r.mem.stored_bytes,
+                    r.mem.kernel_launches,
+                    r.mem.flops
+                ),
+                "served traffic counters of {name} diverged from sequential execution"
             );
+            println!("parity OK: {name} (batched == sequential, bit-identical)");
         }
-        assert_eq!(
-            (seq.mem.loaded_bytes, seq.mem.stored_bytes, seq.mem.kernel_launches, seq.mem.flops),
-            (r.mem.loaded_bytes, r.mem.stored_bytes, r.mem.kernel_launches, r.mem.flops),
-            "served traffic counters of {name} diverged from sequential execution"
-        );
-        println!("parity OK: {name} (batched == sequential, bit-identical)");
     }
 
     let mut t = Table::new(
         "Serving stats (per workload)",
         &[
-            "workload", "served", "batches", "avg batch", "peak", "coalesced", "launches",
-            "p50 lat", "p95 lat",
+            "workload", "served", "shed", "failed", "batches", "avg batch", "peak", "coalesced",
+            "launches", "p50 lat", "p95 lat", "p99 lat",
         ],
     );
     let stats = server.stats();
     for (name, st) in &stats.per_program {
         let fmt_ms = |ns: u128| format!("{:.2}ms", ns as f64 / 1e6);
+        assert_eq!(
+            st.accounted(),
+            st.submitted,
+            "{name}: shed/reject/failed counters must reconcile with submissions"
+        );
         t.row(vec![
             name.clone(),
             st.served.to_string(),
+            st.rejected().to_string(),
+            st.failed.to_string(),
             st.batches.to_string(),
             format!("{:.2}", st.mean_batch()),
             st.peak_batch.to_string(),
@@ -436,6 +521,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             st.launches.to_string(),
             fmt_ms(percentile(&st.latency_ns, 50.0)),
             fmt_ms(st.percentile_latency_ns(95.0)),
+            fmt_ms(st.percentile_latency_ns(99.0)),
         ]);
     }
     t.print();
@@ -450,18 +536,29 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let compiles: u64 = stats.per_program.values().map(|s| s.compiles).sum();
     let binds: u64 = stats.per_program.values().map(|s| s.binds).sum();
+    let swaps: u64 = stats.per_program.values().map(|s| s.plan_swaps).sum();
+    let panics: u64 = stats.per_program.values().map(|s| s.panics).sum();
     println!(
         "\ncompile-once: {} workload(s), {compiles} compile(s), {binds} tape bind(s), \
-         {} skeleton(s) compiled, 0 recompiles during serving",
+         {} skeleton(s) compiled, {swaps} live plan swap(s)",
         spec.len(),
         server.cache_misses()
+    );
+    println!(
+        "robustness: {} submitted = {} served + {} rejected/shed + {} failed \
+         ({panics} contained panic(s), {} pool respawn(s))",
+        stats.total_submitted(),
+        stats.total_served(),
+        stats.total_rejected(),
+        stats.total_failed(),
+        blockbuster::exec::pool::global().respawns()
     );
     // submit→drain window only (excludes registration compiles and the
     // parity spot-check above)
     println!(
-        "throughput: {:.0} req/s over {} request(s)",
+        "throughput: {:.0} req/s over {} served request(s)",
         if serve_secs > 0.0 {
-            requests as f64 / serve_secs
+            stats.total_served() as f64 / serve_secs
         } else {
             0.0
         },

@@ -1,0 +1,379 @@
+//! The standalone serving daemon: a channel-fed ingest front end plus a
+//! background flusher thread around a [`ModelServer`].
+//!
+//! The library server is passive — `max_wait` only fires when somebody
+//! calls [`ModelServer::poll`]. The daemon makes the latency bound
+//! self-enforcing *without polling*: its flusher thread sleeps on the
+//! ingest channel with a timeout of exactly
+//! [`ModelServer::next_due`]`- now`, so it wakes either because new
+//! work arrived (a channel send) or because the oldest queued request
+//! just crossed `max_wait` (or a deadline) — never on a spin loop.
+//!
+//! Lifecycle: **ingest → flusher → pool.**
+//! [`DaemonClient::submit`] ships a [`Request`] plus a private reply
+//! channel to the flusher; the flusher admits it through
+//! [`ModelServer::submit`] (admission control, deadlines), flushes due
+//! batches to the worker pool, and routes each [`Response`] back over
+//! the submitting client's reply channel ([`Ticket::wait`]). Clients
+//! are cheap `Sender` clones — any number of threads can submit
+//! concurrently.
+//!
+//! Shutdown is graceful by construction: [`Daemon::shutdown`] sends a
+//! stop message; the flusher then (1) stops admitting
+//! ([`ModelServer::begin_shutdown`] — stragglers racing the shutdown
+//! get typed [`Rejected::Shutdown`](super::Rejected::Shutdown)
+//! responses *through the server*, so its counters still reconcile),
+//! (2) drains every queued request, (3) routes the final responses, and
+//! only then returns the server — which [`Daemon::shutdown`] hands back
+//! for stats inspection. A client that submits after the daemon is gone
+//! gets an immediate `Rejected::Shutdown` self-reply rather than a
+//! hang.
+//!
+//! Re-tuning under live traffic: with a [`RetuneConfig`], the flusher
+//! calls [`ModelServer::retune_and_swap`] between batches once a
+//! workload has served `every` more requests — adopting measured block
+//! shape winners via the atomic `Arc` plan swap while requests keep
+//! flowing.
+
+use super::{ModelServer, Request, Response, Verdict};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Sentinel id on responses synthesized outside the server (a submit
+/// that never reached admission — daemon already shut down, or a
+/// validation failure surfaced as a [`Verdict::Failed`] response).
+pub const INVALID_ID: u64 = u64::MAX;
+
+/// How long the flusher sleeps when no queue has a due time (idle
+/// server). Purely a liveness backstop — submissions wake it instantly.
+const IDLE_TICK: Duration = Duration::from_millis(25);
+
+/// Background re-tuning knobs (`--retune-every`).
+#[derive(Clone, Debug)]
+pub struct RetuneConfig {
+    /// Re-tune a workload after it has served this many more requests
+    /// (0 disables).
+    pub every: u64,
+    /// Local-memory capacity handed to the autotuner's pruner.
+    pub local_capacity: u64,
+    /// Measured trials per re-tune.
+    pub trials: usize,
+}
+
+enum Msg {
+    Submit(Request, Sender<Response>),
+    Shutdown,
+}
+
+/// A running serving daemon. Owns the flusher thread; dropped tickets
+/// and clients are harmless (routing to a vanished client is a no-op).
+pub struct Daemon {
+    tx: Sender<Msg>,
+    flusher: JoinHandle<ModelServer>,
+}
+
+/// A cheap, cloneable handle for submitting requests to a [`Daemon`].
+#[derive(Clone)]
+pub struct DaemonClient {
+    tx: Sender<Msg>,
+}
+
+/// The pending reply to one submitted request.
+pub struct Ticket {
+    rx: Receiver<Response>,
+}
+
+impl Ticket {
+    /// Block until this request's [`Response`] arrives (admission
+    /// rejections included — every submission yields exactly one
+    /// response). If the daemon vanished before routing the reply, a
+    /// synthesized [`Verdict::Failed`] response is returned instead of
+    /// hanging.
+    pub fn wait(self) -> Response {
+        self.rx.recv().unwrap_or_else(|_| {
+            Response::unserved(
+                INVALID_ID,
+                "",
+                Verdict::Failed("daemon exited before the request was routed".to_string()),
+                0,
+            )
+        })
+    }
+}
+
+impl Daemon {
+    /// Move `server` into a new flusher thread and start serving.
+    pub fn start(server: ModelServer, retune: Option<RetuneConfig>) -> Daemon {
+        let (tx, rx) = channel();
+        let flusher = std::thread::Builder::new()
+            .name("bb-serve-flusher".to_string())
+            .spawn(move || flusher_loop(server, rx, retune))
+            .expect("spawning serve flusher thread");
+        Daemon { tx, flusher }
+    }
+
+    /// A cloneable submission handle (e.g. one per load-generator
+    /// thread).
+    pub fn client(&self) -> DaemonClient {
+        DaemonClient {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Submit a request from the owning thread.
+    pub fn submit(&self, req: Request) -> Ticket {
+        submit_via(&self.tx, req)
+    }
+
+    /// Graceful drain: stop admitting, flush everything in flight, join
+    /// the flusher, and return the server (with its final stats).
+    pub fn shutdown(self) -> ModelServer {
+        let Daemon { tx, flusher } = self;
+        let _ = tx.send(Msg::Shutdown);
+        drop(tx);
+        // The flusher thread is panic-hardened (every launch body is
+        // guarded); a join error would mean a bug in the loop itself and
+        // is propagated honestly rather than masked.
+        flusher
+            .join()
+            .unwrap_or_else(|p| std::panic::resume_unwind(p))
+    }
+}
+
+impl DaemonClient {
+    /// Submit a request; returns the [`Ticket`] its response arrives on.
+    /// If the daemon has already shut down, the ticket resolves
+    /// immediately to a [`Rejected::Shutdown`](super::Rejected::Shutdown)
+    /// response.
+    pub fn submit(&self, req: Request) -> Ticket {
+        submit_via(&self.tx, req)
+    }
+}
+
+fn submit_via(tx: &Sender<Msg>, req: Request) -> Ticket {
+    let (rtx, rrx) = channel();
+    if let Err(e) = tx.send(Msg::Submit(req, rtx)) {
+        // Daemon gone: recover the message from the send error and
+        // self-reply a typed rejection so the caller never hangs.
+        if let Msg::Submit(req, rtx) = e.0 {
+            let _ = rtx.send(Response::unserved(
+                INVALID_ID,
+                &req.workload,
+                Verdict::Rejected(super::Rejected::Shutdown),
+                0,
+            ));
+        }
+    }
+    Ticket { rx: rrx }
+}
+
+/// The flusher thread: admit arrivals, sleep exactly until the next
+/// queue is due, flush, route responses, and (optionally) re-tune —
+/// until a shutdown message or every ingest handle is dropped.
+fn flusher_loop(
+    mut server: ModelServer,
+    rx: Receiver<Msg>,
+    retune: Option<RetuneConfig>,
+) -> ModelServer {
+    let mut waiters: HashMap<u64, Sender<Response>> = HashMap::new();
+    let mut last_tuned: HashMap<String, u64> = HashMap::new();
+    let mut tune_seed: u64 = 0x7e7e_0001;
+    loop {
+        let timeout = server
+            .next_due()
+            .map(|t| t.saturating_duration_since(Instant::now()))
+            .unwrap_or(IDLE_TICK);
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Submit(req, rtx)) => {
+                accept(&mut server, req, rtx, &mut waiters);
+                // Burst drain: admit everything already queued on the
+                // channel before flushing, so a burst forms full batches
+                // instead of max_batch-1 stragglers.
+                loop {
+                    match rx.try_recv() {
+                        Ok(Msg::Submit(req, rtx)) => accept(&mut server, req, rtx, &mut waiters),
+                        Ok(Msg::Shutdown) | Err(TryRecvError::Disconnected) => {
+                            return drain_and_return(server, rx, waiters);
+                        }
+                        Err(TryRecvError::Empty) => break,
+                    }
+                }
+            }
+            Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                return drain_and_return(server, rx, waiters);
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+        for resp in server.poll() {
+            route(resp, &mut waiters);
+        }
+        if let Some(rt) = &retune {
+            maybe_retune(&mut server, rt, &mut last_tuned, &mut tune_seed);
+        }
+    }
+}
+
+/// Admit one arrival. Validation failures (unknown workload, bad
+/// shapes) become immediate [`Verdict::Failed`] replies; everything
+/// else gets an id and its reply channel parked until the response
+/// routes.
+fn accept(
+    server: &mut ModelServer,
+    req: Request,
+    rtx: Sender<Response>,
+    waiters: &mut HashMap<u64, Sender<Response>>,
+) {
+    let workload = req.workload.clone();
+    match server.submit(req) {
+        Ok(id) => {
+            waiters.insert(id, rtx);
+        }
+        Err(e) => {
+            let _ = rtx.send(Response::unserved(
+                INVALID_ID,
+                &workload,
+                Verdict::Failed(e.to_string()),
+                0,
+            ));
+        }
+    }
+}
+
+fn route(resp: Response, waiters: &mut HashMap<u64, Sender<Response>>) {
+    if let Some(tx) = waiters.remove(&resp.id) {
+        // A client that dropped its ticket is not an error.
+        let _ = tx.send(resp);
+    }
+}
+
+/// Graceful drain (see module docs): stop admitting, flush everything,
+/// answer stragglers through the server (typed shutdown rejections),
+/// and hand the server back.
+fn drain_and_return(
+    mut server: ModelServer,
+    rx: Receiver<Msg>,
+    mut waiters: HashMap<u64, Sender<Response>>,
+) -> ModelServer {
+    server.begin_shutdown();
+    for resp in server.drain() {
+        route(resp, &mut waiters);
+    }
+    // Submissions that raced the shutdown message: run them through the
+    // server so they get counted, typed rejections.
+    while let Ok(msg) = rx.try_recv() {
+        if let Msg::Submit(req, rtx) = msg {
+            accept(&mut server, req, rtx, &mut waiters);
+        }
+    }
+    for resp in server.drain() {
+        route(resp, &mut waiters);
+    }
+    server
+}
+
+/// Between-batch re-tuning: once a workload has served
+/// [`RetuneConfig::every`] more requests since its last tune, measure
+/// and (maybe) hot-swap. Failures are logged, never fatal — the daemon
+/// keeps serving on the live plan.
+fn maybe_retune(
+    server: &mut ModelServer,
+    rt: &RetuneConfig,
+    last_tuned: &mut HashMap<String, u64>,
+    tune_seed: &mut u64,
+) {
+    if rt.every == 0 {
+        return;
+    }
+    let names: Vec<String> = server.workloads().to_vec();
+    for name in names {
+        let served = server
+            .stats()
+            .per_program
+            .get(&name)
+            .map(|s| s.served)
+            .unwrap_or(0);
+        let prev = *last_tuned.entry(name.clone()).or_insert(0);
+        if served.saturating_sub(prev) < rt.every {
+            continue;
+        }
+        *tune_seed = tune_seed
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        match server.retune_and_swap(&name, rt.local_capacity, rt.trials, *tune_seed) {
+            Ok(_) => {}
+            Err(e) => eprintln!("serve: re-tune of {name} failed (still serving): {e}"),
+        }
+        last_tuned.insert(name, served);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{Rejected, ServerConfig};
+
+    #[test]
+    fn daemon_serves_and_drains_on_shutdown() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| Request::new("quickstart", s.synthetic_inputs("quickstart", i).unwrap()))
+            .collect();
+        let daemon = Daemon::start(s, None);
+        let client = daemon.client();
+        let tickets: Vec<Ticket> = reqs.into_iter().map(|r| client.submit(r)).collect();
+        let responses: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+        assert_eq!(responses.len(), 6);
+        assert!(responses.iter().all(|r| r.is_ok()));
+        let server = daemon.shutdown();
+        let st = &server.stats().per_program["quickstart"];
+        assert_eq!(st.served, 6);
+        assert_eq!(st.accounted(), st.submitted);
+    }
+
+    /// The flusher honors `max_wait` without anyone polling: one lone
+    /// request (batch never fills) still completes.
+    #[test]
+    fn flusher_honors_max_wait_without_polling() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(20),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let req = Request::new("quickstart", s.synthetic_inputs("quickstart", 3).unwrap());
+        let daemon = Daemon::start(s, None);
+        let t0 = Instant::now();
+        let resp = daemon.submit(req).wait();
+        assert!(resp.is_ok());
+        assert!(
+            t0.elapsed() >= Duration::from_millis(20),
+            "a lone request must ride the max_wait latency bound"
+        );
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_self_replies_rejected() {
+        let mut s = ModelServer::new(ServerConfig {
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let req = Request::new("quickstart", s.synthetic_inputs("quickstart", 0).unwrap());
+        let daemon = Daemon::start(s, None);
+        let client = daemon.client();
+        daemon.shutdown();
+        let resp = client.submit(req).wait();
+        assert_eq!(resp.verdict, Verdict::Rejected(Rejected::Shutdown));
+        assert_eq!(resp.id, INVALID_ID);
+    }
+}

@@ -50,6 +50,32 @@
 //! executor splits its counters by grid-slice ownership, so each
 //! response reports exactly what its request would have charged alone.
 //!
+//! **Robustness.** The server is built to degrade, not die. Admission
+//! control bounds every workload queue ([`ServerConfig::queue_cap`]):
+//! an over-cap submission is *shed* with a typed
+//! [`Verdict::Rejected`] response ([`Rejected::QueueFull`]) instead of
+//! growing the backlog — [`ShedPolicy`] picks whether the new request
+//! or the oldest queued one pays. Per-request **deadlines**
+//! ([`Request::deadline`], defaulted from [`ServerConfig::deadline`])
+//! are checked at admission *and again at batch formation*, so expired
+//! work is shed ([`Rejected::DeadlineExpired`]) before it burns a
+//! launch. **Panic isolation**: a panicking batch launch is caught and
+//! converted into [`Verdict::Failed`] error responses for exactly that
+//! batch's requests (per *request* on the fan-out path, per batch on a
+//! stacked launch); the worker pool respawns dead workers
+//! ([`crate::exec::pool`]), lock poisoning is recovered, and every
+//! formerly panicking `expect` on the serve path is a recoverable
+//! error. The seeded fault injector ([`crate::util::fault`]) makes all
+//! of this testable on demand (`tests/serve_chaos.rs`).
+//!
+//! **Daemon.** [`daemon::Daemon`] wraps a [`ModelServer`] in a
+//! channel-fed background flusher thread that honors `max_wait`
+//! *without polling* (it sleeps exactly until [`ModelServer::next_due`]),
+//! drains gracefully on shutdown (stop admitting → flush in-flight →
+//! join), and can re-tune block shapes under live traffic, adopting a
+//! measured winner via an atomic `Arc` plan swap between batches
+//! ([`ModelServer::adopt_sizes`]).
+//!
 //! ```
 //! use blockbuster::serve::{ModelServer, ServerConfig};
 //!
@@ -59,8 +85,11 @@
 //! let responses = server.drain();
 //! assert_eq!(responses.len(), 1);
 //! assert_eq!(responses[0].id, id);
+//! assert!(responses[0].is_ok());
 //! assert_eq!(server.stats().per_program["quickstart"].compiles, 1);
 //! ```
+
+pub mod daemon;
 
 use crate::array::ArrayProgram;
 use crate::autotune::{autotune_measured_cached, MeasuredPoint};
@@ -72,12 +101,16 @@ use crate::coordinator::{
 use crate::cost::CostModel;
 use crate::exec::{pool, ExecBackend, TapeCache};
 use crate::fusion::fuse;
+use crate::ir::dim::DimSizes;
 use crate::ir::graph::Graph;
 use crate::loopir::interp::MemSim;
+use crate::select::{select, SelectCtx};
 use crate::tensor::{Mat, Rng};
+use crate::util::fault;
 use anyhow::{anyhow, bail};
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
-use std::sync::Mutex;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Serving configuration: executor backend, worker cap, and the dynamic
@@ -107,6 +140,20 @@ pub struct ServerConfig {
     /// counters are unchanged either way (the parity contract); only
     /// the *actual* launch count ([`ProgramStats::launches`]) shrinks.
     pub coalesce: bool,
+    /// Admission control: cap each workload's queue at this many pending
+    /// requests (`None` = unbounded, the pre-daemon behavior). An
+    /// over-cap submission sheds per [`ServerConfig::shed_policy`] with
+    /// a typed [`Rejected::QueueFull`] response.
+    pub queue_cap: Option<usize>,
+    /// Default per-request deadline, measured from admission (`None` =
+    /// no deadline). A request carrying its own [`Request::deadline`]
+    /// overrides this. Expired requests are shed with
+    /// [`Rejected::DeadlineExpired`] — at admission if already past due,
+    /// or at batch formation if they expired while queued.
+    pub deadline: Option<Duration>,
+    /// Who pays when a queue is full: the new arrival or the oldest
+    /// queued request.
+    pub shed_policy: ShedPolicy,
 }
 
 impl Default for ServerConfig {
@@ -117,27 +164,103 @@ impl Default for ServerConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             coalesce: false,
+            queue_cap: None,
+            deadline: None,
+            shed_policy: ShedPolicy::RejectNew,
         }
     }
 }
 
 impl ServerConfig {
     /// Normalize degenerate knobs once, at server construction:
-    /// `max_batch == 0` becomes 1, so no flush/queue call site ever
-    /// needs a per-site clamp (and a future call site cannot forget
-    /// one).
+    /// `max_batch == 0` becomes 1 and `queue_cap == Some(0)` becomes
+    /// `Some(1)` (a cap of 0 could never admit anything), so no
+    /// flush/queue call site ever needs a per-site clamp (and a future
+    /// call site cannot forget one).
     fn normalized(mut self) -> ServerConfig {
         self.max_batch = self.max_batch.max(1);
+        self.queue_cap = self.queue_cap.map(|c| c.max(1));
         self
     }
 }
 
+/// What to shed when a workload's queue is at [`ServerConfig::queue_cap`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Reject the arriving request; queued work is never evicted.
+    #[default]
+    RejectNew,
+    /// Evict the oldest queued request (it gets the
+    /// [`Rejected::QueueFull`] response) and admit the arrival — keeps
+    /// the queue biased toward fresh work under sustained overload.
+    DropOldest,
+}
+
+impl ShedPolicy {
+    /// Parse a CLI `--shed-policy` value.
+    pub fn from_name(name: &str) -> Option<ShedPolicy> {
+        match name {
+            "reject-new" => Some(ShedPolicy::RejectNew),
+            "drop-oldest" => Some(ShedPolicy::DropOldest),
+            _ => None,
+        }
+    }
+}
+
+/// Why a request was shed without executing. Carried in
+/// [`Verdict::Rejected`] responses and tallied per workload in
+/// [`ProgramStats`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// The workload's queue was at [`ServerConfig::queue_cap`].
+    QueueFull,
+    /// The server is draining ([`ModelServer::begin_shutdown`]) and no
+    /// longer admits work.
+    Shutdown,
+    /// The request's deadline passed — at admission or while queued.
+    DeadlineExpired,
+}
+
+/// Outcome of one request, carried on every [`Response`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Executed; `outputs`/`mem` hold the parity-contract results.
+    Ok,
+    /// Shed by admission control or deadline enforcement — never
+    /// executed, `outputs` is empty.
+    Rejected(Rejected),
+    /// Its batch (stacked) or its own task (fan-out) panicked; the
+    /// panic was contained and converted into this error message.
+    Failed(String),
+}
+
 /// One inference request: a registered workload name plus a full matrix
-/// per program input (shapes must match the registered `full_shapes`).
+/// per program input (shapes must match the registered `full_shapes`),
+/// optionally carrying its own completion deadline.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub workload: String,
     pub inputs: HashMap<String, Mat>,
+    /// Absolute deadline; overrides [`ServerConfig::deadline`] when set.
+    /// A request not launched by this instant is shed with
+    /// [`Rejected::DeadlineExpired`].
+    pub deadline: Option<Instant>,
+}
+
+impl Request {
+    pub fn new(workload: impl Into<String>, inputs: HashMap<String, Mat>) -> Request {
+        Request {
+            workload: workload.into(),
+            inputs,
+            deadline: None,
+        }
+    }
+
+    /// Builder-style absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
 }
 
 /// One served request: the plan outputs, the request's own (simulated)
@@ -166,6 +289,32 @@ pub struct Response {
     /// Wall-clock of the whole batched launch this request rode in
     /// (shared across the batch, not divided by it).
     pub exec_ns: u128,
+    /// How this request ended: served, shed, or failed. Only
+    /// [`Verdict::Ok`] responses carry outputs and counters.
+    pub verdict: Verdict,
+}
+
+impl Response {
+    /// Whether the request executed successfully.
+    pub fn is_ok(&self) -> bool {
+        self.verdict == Verdict::Ok
+    }
+
+    /// A response for a request that never executed (shed or failed
+    /// before launch): empty outputs, zeroed counters.
+    fn unserved(id: u64, workload: &str, verdict: Verdict, queue_ns: u128) -> Response {
+        Response {
+            id,
+            workload: workload.to_string(),
+            outputs: HashMap::new(),
+            mem: MemSim::default(),
+            batch_size: 0,
+            coalesced: false,
+            queue_ns,
+            exec_ns: 0,
+            verdict,
+        }
+    }
 }
 
 /// Latency samples retained per workload: the summaries window over the
@@ -184,8 +333,30 @@ pub struct ProgramStats {
     /// each first-seen coalesced batch size (stacked re-binds — the
     /// cheap phase only; skeletons are never recompiled while serving).
     pub binds: u64,
-    /// Requests served.
+    /// Requests served successfully ([`Verdict::Ok`] responses only).
     pub served: u64,
+    /// Admission attempts that passed validation — including ones later
+    /// rejected, shed, or failed. When every response has been drained,
+    /// `submitted == accounted()` (the chaos suite's reconciliation).
+    pub submitted: u64,
+    /// Rejected at admission: queue at [`ServerConfig::queue_cap`]
+    /// (counts [`ShedPolicy::DropOldest`] evictions too — either way
+    /// one request paid for the full queue).
+    pub rejected_full: u64,
+    /// Rejected at admission: deadline already expired.
+    pub rejected_deadline: u64,
+    /// Rejected at admission: server draining
+    /// ([`ModelServer::begin_shutdown`]).
+    pub rejected_shutdown: u64,
+    /// Shed at batch formation: deadline expired while queued.
+    pub shed_deadline: u64,
+    /// Requests whose launch panicked ([`Verdict::Failed`] responses).
+    pub failed: u64,
+    /// Panicking launches contained (one per poisoned stacked batch,
+    /// one per poisoned fan-out task).
+    pub panics: u64,
+    /// Live plan hot-swaps adopted ([`ModelServer::adopt_sizes`]).
+    pub plan_swaps: u64,
     /// Batched launches performed.
     pub batches: u64,
     /// Largest batch coalesced so far.
@@ -237,9 +408,28 @@ impl ProgramStats {
         }
     }
 
-    /// Nearest-rank p-th percentile of the end-to-end latencies.
+    /// Nearest-rank p-th percentile of the end-to-end latencies; 0 when
+    /// no samples have been recorded yet (never NaN — see
+    /// [`crate::util::bench::percentile`]).
     pub fn percentile_latency_ns(&self, p: f64) -> u128 {
         crate::util::bench::percentile(&self.latency_ns, p)
+    }
+
+    /// Every admission that has been answered: served + rejected + shed
+    /// + failed. Once all responses are drained this equals
+    /// [`ProgramStats::submitted`] — requests are never silently lost.
+    pub fn accounted(&self) -> u64 {
+        self.served
+            + self.rejected_full
+            + self.rejected_deadline
+            + self.rejected_shutdown
+            + self.shed_deadline
+            + self.failed
+    }
+
+    /// Requests shed by admission control or deadline enforcement.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_full + self.rejected_deadline + self.rejected_shutdown + self.shed_deadline
     }
 }
 
@@ -259,12 +449,31 @@ impl ServerStats {
     pub fn total_served(&self) -> u64 {
         self.per_program.values().map(|s| s.served).sum()
     }
+
+    pub fn total_submitted(&self) -> u64 {
+        self.per_program.values().map(|s| s.submitted).sum()
+    }
+
+    /// Requests shed (queue-full + deadline + shutdown) across programs.
+    pub fn total_rejected(&self) -> u64 {
+        self.per_program.values().map(|s| s.rejected()).sum()
+    }
+
+    /// Requests that got [`Verdict::Failed`] responses across programs.
+    pub fn total_failed(&self) -> u64 {
+        self.per_program.values().map(|s| s.failed).sum()
+    }
 }
 
 /// A registered workload: its prepared plan plus everything needed to
 /// validate and synthesize requests (and to re-tune block shapes).
 struct Served {
-    prepared: PreparedPlan,
+    /// The live plan, behind an `Arc` so a batch launch holds its own
+    /// handle: [`ModelServer::adopt_sizes`] can swap in a re-tuned plan
+    /// between batches (atomically, from the one serving thread's point
+    /// of view) without invalidating telemetry or racing an in-flight
+    /// launch.
+    prepared: Arc<PreparedPlan>,
     /// The initial (unfused) block program, kept for [`ModelServer::tune`].
     block: Graph,
     full_shapes: HashMap<String, (usize, usize)>,
@@ -287,6 +496,9 @@ struct Pending {
     id: u64,
     inputs: HashMap<String, Mat>,
     enqueued: Instant,
+    /// Effective absolute deadline (request's own, else admission time
+    /// plus [`ServerConfig::deadline`]); `None` = never expires.
+    deadline: Option<Instant>,
 }
 
 /// The compile-once model server (see module docs).
@@ -302,6 +514,14 @@ pub struct ModelServer {
     cache: TapeCache,
     next_id: u64,
     stats: ServerStats,
+    /// Set by [`ModelServer::begin_shutdown`]: new submissions are
+    /// rejected ([`Rejected::Shutdown`]) while queued work still drains.
+    shutting_down: bool,
+    /// Responses produced outside a batch flush (admission rejections,
+    /// shed evictions) — handed out at the next [`ModelServer::poll`] /
+    /// [`ModelServer::drain`] so every admitted id yields exactly one
+    /// response through the same channel.
+    deferred: Vec<Response>,
 }
 
 impl ModelServer {
@@ -317,6 +537,8 @@ impl ModelServer {
                 per_program: BTreeMap::new(),
                 started: Instant::now(),
             },
+            shutting_down: false,
+            deferred: Vec::new(),
         }
     }
 
@@ -325,10 +547,7 @@ impl ModelServer {
     /// preparing its plan exactly once.
     pub fn register(&mut self, name: &str) -> anyhow::Result<()> {
         let (program, cfg, params, _inputs) = workloads::by_name(name, 0).ok_or_else(|| {
-            anyhow!(
-                "unknown workload {name}; have {}",
-                workloads::NAMES.join(", ")
-            )
+            anyhow!("unknown workload {name}; have {}", workloads::NAMES.join(", "))
         })?;
         self.register_program(name, &program, cfg, params)
     }
@@ -368,7 +587,7 @@ impl ModelServer {
         self.programs.insert(
             name.to_string(),
             Served {
-                prepared,
+                prepared: Arc::new(prepared),
                 block: compiled.block,
                 full_shapes,
                 model,
@@ -384,7 +603,13 @@ impl ModelServer {
 
     /// Enqueue a request; returns its id. The request is validated (the
     /// workload must be registered, every program input present at its
-    /// registered full shape) but not executed until a batch flushes.
+    /// registered full shape — `Err` on violations, as before), then
+    /// passes admission control: a draining server, an
+    /// already-expired deadline, or a queue at
+    /// [`ServerConfig::queue_cap`] sheds it with a typed
+    /// [`Verdict::Rejected`] response delivered by the next
+    /// [`ModelServer::poll`]/[`ModelServer::drain`]. Admitted or shed,
+    /// every `Ok(id)` yields exactly one response.
     pub fn submit(&mut self, req: Request) -> anyhow::Result<u64> {
         let served = self
             .programs
@@ -406,10 +631,68 @@ impl ModelServer {
         }
         let id = self.next_id;
         self.next_id += 1;
+        let now = Instant::now();
+        let st = self
+            .stats
+            .per_program
+            .entry(req.workload.clone())
+            .or_default();
+        st.submitted += 1;
+        if self.shutting_down {
+            st.rejected_shutdown += 1;
+            self.deferred.push(Response::unserved(
+                id,
+                &req.workload,
+                Verdict::Rejected(Rejected::Shutdown),
+                0,
+            ));
+            return Ok(id);
+        }
+        let deadline = match req.deadline {
+            Some(d) => Some(d),
+            None => self.cfg.deadline.and_then(|d| now.checked_add(d)),
+        };
+        if deadline.is_some_and(|d| d <= now) {
+            st.rejected_deadline += 1;
+            self.deferred.push(Response::unserved(
+                id,
+                &req.workload,
+                Verdict::Rejected(Rejected::DeadlineExpired),
+                0,
+            ));
+            return Ok(id);
+        }
+        if let Some(cap) = self.cfg.queue_cap {
+            if served.queue.len() >= cap {
+                st.rejected_full += 1;
+                match self.cfg.shed_policy {
+                    ShedPolicy::RejectNew => {
+                        self.deferred.push(Response::unserved(
+                            id,
+                            &req.workload,
+                            Verdict::Rejected(Rejected::QueueFull),
+                            0,
+                        ));
+                        return Ok(id);
+                    }
+                    ShedPolicy::DropOldest => {
+                        if let Some(evicted) = served.queue.pop_front() {
+                            self.deferred.push(Response::unserved(
+                                evicted.id,
+                                &req.workload,
+                                Verdict::Rejected(Rejected::QueueFull),
+                                now.duration_since(evicted.enqueued).as_nanos(),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
         served.queue.push_back(Pending {
             id,
             inputs: req.inputs,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline,
         });
         Ok(id)
     }
@@ -456,10 +739,7 @@ impl ModelServer {
     /// `seed` at the workload's registered shapes.
     pub fn submit_synthetic(&mut self, workload: &str, seed: u64) -> anyhow::Result<u64> {
         let inputs = self.synthetic_inputs(workload, seed)?;
-        self.submit(Request {
-            workload: workload.to_string(),
-            inputs,
-        })
+        self.submit(Request::new(workload, inputs))
     }
 
     /// Requests currently queued across all workloads.
@@ -468,14 +748,51 @@ impl ModelServer {
     }
 
     /// Whether `name`'s queue is due a flush as of `now`: holds a full
-    /// batch ([`ServerConfig::max_batch`]) or its oldest entry has
-    /// waited past [`ServerConfig::max_wait`] (the latency bound).
+    /// batch ([`ServerConfig::max_batch`]), its oldest entry has waited
+    /// past [`ServerConfig::max_wait`] (the latency bound), or any
+    /// queued entry's deadline has expired (so the shed happens
+    /// promptly, not at the next unrelated flush).
     fn queue_due(&self, name: &str, now: Instant) -> bool {
-        let s = &self.programs[name];
+        let Some(s) = self.programs.get(name) else {
+            return false;
+        };
         s.queue.len() >= self.cfg.max_batch
             || s.queue
                 .front()
                 .is_some_and(|p| now.duration_since(p.enqueued) >= self.cfg.max_wait)
+            || s.queue
+                .iter()
+                .any(|p| p.deadline.is_some_and(|d| d <= now))
+    }
+
+    /// The earliest instant at which any queue becomes due — the
+    /// daemon's flusher sleeps exactly until this (or until new work
+    /// arrives), which is how `max_wait` is honored *without polling*.
+    /// `None` means nothing is queued. A queue already holding a full
+    /// batch returns "now".
+    pub fn next_due(&self) -> Option<Instant> {
+        let mut due: Option<Instant> = None;
+        let mut fold = |t: Instant| {
+            due = Some(match due {
+                Some(d) => d.min(t),
+                None => t,
+            });
+        };
+        for s in self.programs.values() {
+            if s.queue.len() >= self.cfg.max_batch {
+                fold(Instant::now());
+                continue;
+            }
+            if let Some(p) = s.queue.front() {
+                fold(p.enqueued + self.cfg.max_wait);
+            }
+            for p in &s.queue {
+                if let Some(d) = p.deadline {
+                    fold(d);
+                }
+            }
+        }
+        due
     }
 
     /// Repeated round-robin sweeps, one batch per eligible workload per
@@ -514,38 +831,80 @@ impl ModelServer {
     /// leaking backlog at one batch per poll), and a latency-due
     /// partial remainder flushes here too rather than aging another
     /// poll cycle.
-    /// Returns the responses of every batch launched; an empty vec means
-    /// nothing was due.
+    /// Returns the responses of every batch launched plus any pending
+    /// admission-control rejections; an empty vec means nothing was due.
     pub fn poll(&mut self) -> Vec<Response> {
         let now = Instant::now();
-        self.sweep_flush(move |s, name| s.queue_due(name, now))
+        let mut out = std::mem::take(&mut self.deferred);
+        out.extend(self.sweep_flush(move |s, name| s.queue_due(name, now)));
+        out
     }
 
     /// Flush until every queue is empty, taking at most `max_batch`
     /// requests per workload per round-robin turn (so mixed traffic
-    /// interleaves instead of one workload draining first).
+    /// interleaves instead of one workload draining first). Pending
+    /// admission-control rejections are delivered too.
     pub fn drain(&mut self) -> Vec<Response> {
-        self.sweep_flush(|s, name| !s.programs[name].queue.is_empty())
+        let mut out = std::mem::take(&mut self.deferred);
+        out.extend(self.sweep_flush(|s, name| {
+            s.programs.get(name).is_some_and(|p| !p.queue.is_empty())
+        }));
+        out
+    }
+
+    /// Stop admitting: every later [`ModelServer::submit`] is shed with
+    /// [`Rejected::Shutdown`]; queued work still flushes via
+    /// [`ModelServer::poll`]/[`ModelServer::drain`]. The daemon calls
+    /// this at the head of its graceful drain.
+    pub fn begin_shutdown(&mut self) {
+        self.shutting_down = true;
+    }
+
+    /// Whether [`ModelServer::begin_shutdown`] has been called.
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutting_down
     }
 
     /// Take up to `max_batch` queued requests of `name` and launch them
-    /// as one batch.
+    /// as one batch, first shedding queued entries whose deadline
+    /// expired (each gets a [`Rejected::DeadlineExpired`] response —
+    /// expired work must not burn a launch slot).
     fn flush_one(&mut self, name: &str) -> Vec<Response> {
-        let take = {
-            let q = &self.programs[name].queue;
-            q.len().min(self.cfg.max_batch)
+        let now = Instant::now();
+        let mut out = Vec::new();
+        let batch: Vec<Pending> = {
+            let Some(served) = self.programs.get_mut(name) else {
+                // Unregistered mid-flush is unreachable today; degrade to
+                // a no-op instead of the old `.expect` panic.
+                return out;
+            };
+            let mut i = 0;
+            while i < served.queue.len() {
+                let expired = served.queue[i].deadline.is_some_and(|d| d <= now);
+                if expired {
+                    if let Some(p) = served.queue.remove(i) {
+                        out.push(Response::unserved(
+                            p.id,
+                            name,
+                            Verdict::Rejected(Rejected::DeadlineExpired),
+                            now.duration_since(p.enqueued).as_nanos(),
+                        ));
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            let take = served.queue.len().min(self.cfg.max_batch);
+            served.queue.drain(..take).collect()
         };
-        if take == 0 {
-            return Vec::new();
+        if !out.is_empty() {
+            let st = self.stats.per_program.entry(name.to_string()).or_default();
+            st.shed_deadline += out.len() as u64;
         }
-        let batch: Vec<Pending> = self
-            .programs
-            .get_mut(name)
-            .expect("flush_one: registered workload")
-            .queue
-            .drain(..take)
-            .collect();
-        self.run_batch(name, batch)
+        if !batch.is_empty() {
+            out.extend(self.run_batch(name, batch));
+        }
+        out
     }
 
     /// Execute one batch. With coalescing on and an eligible batch
@@ -557,89 +916,190 @@ impl ModelServer {
     /// whose tasks each run one request's plan. With one request (or a
     /// worker cap of 1) the fan-out runs inline on the caller — the
     /// exact serial path.
+    ///
+    /// **Panic isolation.** Every launch body runs under `catch_unwind`:
+    /// a panic (real or injected via [`crate::util::fault`]) poisons
+    /// only its own scope — the whole batch on the stacked path (one
+    /// launch serves everyone), the one task's request on the fan-out
+    /// path — and each poisoned request gets a [`Verdict::Failed`]
+    /// response carrying the panic message. The server itself never
+    /// unwinds.
     fn run_batch(&mut self, name: &str, batch: Vec<Pending>) -> Vec<Response> {
         let bs = batch.len();
+        if bs == 0 {
+            return Vec::new();
+        }
         let threads = self.cfg.threads;
         let workers = effective_workers(threads, bs);
-        let served = self
-            .programs
-            .get_mut(name)
-            .expect("run_batch: registered workload");
-        let stack_ok = self.cfg.coalesce
+        let Some(served) = self.programs.get_mut(name) else {
+            // Unregistered mid-batch is unreachable today; degrade to
+            // error responses instead of the old `.expect` panic.
+            let st = self.stats.per_program.entry(name.to_string()).or_default();
+            st.failed += bs as u64;
+            return batch
+                .into_iter()
+                .map(|p| {
+                    Response::unserved(
+                        p.id,
+                        name,
+                        Verdict::Failed(format!("workload {name} is not registered")),
+                        0,
+                    )
+                })
+                .collect();
+        };
+        // `stack_info.is_some()` replaces the old boolean + `.expect`
+        // pair: eligibility and the info travel together.
+        let stack_info = if self.cfg.coalesce
             && bs >= 2
-            && served.stack.is_some()
-            && shared_inputs_identical(&served.shared_inputs, &batch);
-        let (runs, agg_launches, coalesced, new_binds, launched, finished) = if stack_ok {
-            let info = served.stack.clone().expect("stack_ok implies stack info");
-            let mut new_binds = 0;
+            && shared_inputs_identical(&served.shared_inputs, &batch)
+        {
+            served.stack.clone()
+        } else {
+            None
+        };
+        // The batch holds its own plan handle: a concurrent-looking
+        // `adopt_sizes` (between batches) swaps `served.prepared`
+        // without touching this launch.
+        let prepared = Arc::clone(&served.prepared);
+        let mut new_binds = 0u64;
+        let outcome = if let Some(info) = stack_info {
             if !served.stacked.contains_key(&bs) {
-                let sp = bind_stacked(&served.prepared, &info, bs);
+                let sp = bind_stacked(&prepared, &info, bs);
                 new_binds = sp.binds;
                 served.stacked.insert(bs, sp);
             }
             let stacked = &served.stacked[&bs];
             let input_refs: Vec<&HashMap<String, Mat>> = batch.iter().map(|p| &p.inputs).collect();
             let t0 = Instant::now();
-            let br = execute_prepared_stacked(&served.prepared, stacked, &input_refs, threads);
-            (br.runs, br.agg.kernel_launches, true, new_binds, t0, Instant::now())
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                if fault::injected(fault::Site::Compute) {
+                    panic!("injected compute fault (stacked batch)");
+                }
+                execute_prepared_stacked(&prepared, stacked, &input_refs, threads)
+            }));
+            let t1 = Instant::now();
+            match run {
+                Ok(br) => Flushed {
+                    launches: br.agg.kernel_launches,
+                    results: br.runs.into_iter().map(Ok).collect(),
+                    coalesced: true,
+                    contained: 0,
+                    launched: t0,
+                    finished: t1,
+                },
+                Err(p) => {
+                    // One launch served the whole batch, so one panic
+                    // poisons every request in it.
+                    let msg = panic_message(p);
+                    Flushed {
+                        launches: 0,
+                        results: (0..bs).map(|_| Err(msg.clone())).collect(),
+                        coalesced: false,
+                        contained: 1,
+                        launched: t0,
+                        finished: t1,
+                    }
+                }
+            }
         } else {
-            let prepared = &served.prepared;
             let t0 = Instant::now();
-            let rs: Vec<PlanRun> = if workers <= 1 || bs == 1 {
+            let results: Vec<Result<PlanRun, String>> = if workers <= 1 || bs == 1 {
                 // Serial path: intra-request grid parallelism still
                 // applies under the caller's thread budget.
                 batch
                     .iter()
-                    .map(|p| execute_prepared(prepared, &p.inputs, threads))
+                    .map(|p| execute_guarded(&prepared, &p.inputs, threads))
                     .collect()
             } else {
                 // One heterogeneous pool job for the whole batch. Each
                 // task runs its request serially (threads=1): the batch
                 // itself is the parallelism, and nested fan-out from
-                // inside a pool worker would run inline anyway.
-                let slots: Vec<Mutex<Option<PlanRun>>> =
+                // inside a pool worker would run inline anyway. Task
+                // bodies guard themselves, so a panicking request fails
+                // alone; the outer guard and the poison-recovering slot
+                // locks are defense in depth against pool internals.
+                let slots: Vec<Mutex<Option<Result<PlanRun, String>>>> =
                     (0..bs).map(|_| Mutex::new(None)).collect();
-                pool::global().run_tasks(workers, bs, &|t| {
-                    let run = execute_prepared(prepared, &batch[t].inputs, Some(1));
-                    *slots[t].lock().unwrap() = Some(run);
-                });
+                let submit = catch_unwind(AssertUnwindSafe(|| {
+                    pool::global().run_tasks(workers, bs, &|t| {
+                        let run = execute_guarded(&prepared, &batch[t].inputs, Some(1));
+                        *slots[t].lock().unwrap_or_else(|e| e.into_inner()) = Some(run);
+                    });
+                }));
+                let submit_err = submit.err().map(panic_message);
                 slots
                     .into_iter()
                     .map(|s| {
                         s.into_inner()
-                            .expect("batch slot lock")
-                            .expect("batch task completed")
+                            .unwrap_or_else(|e| e.into_inner())
+                            .unwrap_or_else(|| {
+                                Err(submit_err
+                                    .clone()
+                                    .unwrap_or_else(|| "batch task did not run".to_string()))
+                            })
                     })
                     .collect()
             };
-            let launches = rs.iter().map(|r| r.mem.kernel_launches).sum();
-            (rs, launches, false, 0, t0, Instant::now())
+            let launches = results
+                .iter()
+                .filter_map(|r| r.as_ref().ok().map(|x| x.mem.kernel_launches))
+                .sum();
+            let contained = results.iter().filter(|r| r.is_err()).count() as u64;
+            Flushed {
+                launches,
+                results,
+                coalesced: false,
+                contained,
+                launched: t0,
+                finished: Instant::now(),
+            }
         };
-        let exec_ns = finished.duration_since(launched).as_nanos();
+        let exec_ns = outcome.finished.duration_since(outcome.launched).as_nanos();
 
+        let ok = outcome.results.iter().filter(|r| r.is_ok()).count() as u64;
         let st = self.stats.per_program.entry(name.to_string()).or_default();
-        st.served += bs as u64;
+        st.served += ok;
+        st.failed += bs as u64 - ok;
+        st.panics += outcome.contained;
         st.batches += 1;
         st.peak_batch = st.peak_batch.max(bs);
-        st.launches += agg_launches;
+        st.launches += outcome.launches;
         st.binds += new_binds;
-        if coalesced {
+        if outcome.coalesced {
             st.coalesced += bs as u64;
             st.stacked_batches += 1;
         }
         let mut out = Vec::with_capacity(bs);
-        for (p, run) in batch.into_iter().zip(runs) {
-            st.record_latency(finished.duration_since(p.enqueued).as_nanos());
-            out.push(Response {
-                id: p.id,
-                workload: name.to_string(),
-                outputs: run.outputs,
-                mem: run.mem,
-                batch_size: bs,
-                coalesced,
-                queue_ns: launched.duration_since(p.enqueued).as_nanos(),
-                exec_ns,
-            });
+        for (p, run) in batch.into_iter().zip(outcome.results) {
+            let queue_ns = outcome.launched.duration_since(p.enqueued).as_nanos();
+            match run {
+                Ok(run) => {
+                    st.record_latency(outcome.finished.duration_since(p.enqueued).as_nanos());
+                    out.push(Response {
+                        id: p.id,
+                        workload: name.to_string(),
+                        outputs: run.outputs,
+                        mem: run.mem,
+                        batch_size: bs,
+                        coalesced: outcome.coalesced,
+                        queue_ns,
+                        exec_ns,
+                        verdict: Verdict::Ok,
+                    });
+                }
+                Err(msg) => out.push(Response {
+                    id: p.id,
+                    workload: name.to_string(),
+                    outputs: HashMap::new(),
+                    mem: MemSim::default(),
+                    batch_size: bs,
+                    coalesced: false,
+                    queue_ns,
+                    exec_ns,
+                    verdict: Verdict::Failed(msg),
+                }),
+            }
         }
         out
     }
@@ -648,7 +1108,8 @@ impl ModelServer {
     /// sharing the server's skeleton cache (so trials re-bind the same
     /// skeletons serving uses instead of recompiling). Returns the
     /// candidates best-first by measured wall-clock; the server keeps
-    /// serving at its registered sizes — re-register to adopt a winner.
+    /// serving at its registered sizes — [`ModelServer::adopt_sizes`]
+    /// (or [`ModelServer::retune_and_swap`]) hot-swaps a winner in.
     pub fn tune(
         &mut self,
         name: &str,
@@ -664,7 +1125,7 @@ impl ModelServer {
         let fused = fuse(served.block.clone())
             .snapshots
             .pop()
-            .expect("fusion produces at least the initial snapshot");
+            .ok_or_else(|| anyhow!("fusion produced no snapshots for {name}"))?;
         Ok(autotune_measured_cached(
             &fused,
             &served.full_shapes,
@@ -677,6 +1138,86 @@ impl ModelServer {
             self.cfg.threads,
             &mut self.cache,
         ))
+    }
+
+    /// Re-select and re-prepare `name`'s plan at new block `sizes`, then
+    /// hot-swap it in via an atomic `Arc` swap. Queued requests and the
+    /// next batch pick up the new plan; a batch already holding its
+    /// handle (none can be, on this single serving thread, but the
+    /// daemon's flusher calls this *between* batches regardless) keeps
+    /// the old one until it finishes. Stacked re-binds are invalidated
+    /// (they bound the old plan's skeletons); the shared skeleton cache
+    /// makes the re-prepare cheap when the new structure has been seen.
+    pub fn adopt_sizes(&mut self, name: &str, sizes: &DimSizes) -> anyhow::Result<()> {
+        let (plan, params) = {
+            let served = self
+                .programs
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown workload {name}"))?;
+            let ctx = SelectCtx {
+                sizes: sizes.clone(),
+                full_shapes: served.full_shapes.clone(),
+                model: served.model,
+            };
+            (select(&served.block, &ctx), served.prepared.params.clone())
+        };
+        let prepared = prepare_plan(&plan, sizes, &params, self.cfg.backend, &mut self.cache);
+        let stack = plan_stack_info(&prepared);
+        let shared_inputs = stack
+            .as_ref()
+            .map(|info| unstacked_inputs(&prepared, info))
+            .unwrap_or_default();
+        let binds = prepared.binds;
+        let Some(served) = self.programs.get_mut(name) else {
+            bail!("workload {name} disappeared during adopt_sizes");
+        };
+        served.prepared = Arc::new(prepared);
+        served.stack = stack;
+        served.shared_inputs = shared_inputs;
+        served.stacked.clear();
+        let st = self.stats.per_program.entry(name.to_string()).or_default();
+        st.binds += binds;
+        st.plan_swaps += 1;
+        Ok(())
+    }
+
+    /// Measured re-tune + hot-swap: run [`ModelServer::tune`] and, if
+    /// the measured winner's sizes differ from the live plan's, adopt
+    /// them via [`ModelServer::adopt_sizes`]. Returns the adopted sizes,
+    /// or `None` if the live plan already wins (or tuning produced no
+    /// candidates). The daemon's flusher calls this between batches
+    /// under live traffic (`--retune-every`).
+    pub fn retune_and_swap(
+        &mut self,
+        name: &str,
+        local_capacity: u64,
+        trials: usize,
+        seed: u64,
+    ) -> anyhow::Result<Option<DimSizes>> {
+        let points = self.tune(name, local_capacity, trials, seed)?;
+        let Some(best) = points.first() else {
+            return Ok(None);
+        };
+        let best_sizes = best.sizes.clone();
+        let current = self
+            .programs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown workload {name}"))?
+            .prepared
+            .sizes
+            .clone();
+        if best_sizes == current {
+            return Ok(None);
+        }
+        self.adopt_sizes(name, &best_sizes)?;
+        Ok(Some(best_sizes))
+    }
+
+    /// The live plan handle for `name` — the exact plan the next batch
+    /// will execute (tests compare hot-swapped serving against direct
+    /// [`crate::coordinator::execute_prepared`] runs of this).
+    pub fn live_plan(&self, name: &str) -> Option<Arc<PreparedPlan>> {
+        self.programs.get(name).map(|s| Arc::clone(&s.prepared))
     }
 
     pub fn stats(&self) -> &ServerStats {
@@ -705,6 +1246,49 @@ impl ModelServer {
     }
 }
 
+/// What one batch launch produced: per-request results (an `Err` is a
+/// contained panic's message), plus the telemetry `run_batch` folds
+/// into [`ProgramStats`].
+struct Flushed {
+    results: Vec<Result<PlanRun, String>>,
+    /// Kernel launches actually executed (0 for a poisoned stacked
+    /// batch — nothing completed).
+    launches: u64,
+    /// Whether the batch rode one successful stacked launch.
+    coalesced: bool,
+    /// Panicking launches contained (1 per poisoned stacked batch, 1
+    /// per poisoned fan-out task).
+    contained: u64,
+    launched: Instant,
+    finished: Instant,
+}
+
+/// Execute one request's plan under a panic guard, with the seeded
+/// fault injector's compute site armed in front of it: a panic becomes
+/// an `Err` message instead of unwinding the server.
+fn execute_guarded(
+    prepared: &PreparedPlan,
+    inputs: &HashMap<String, Mat>,
+    threads: Option<usize>,
+) -> Result<PlanRun, String> {
+    catch_unwind(AssertUnwindSafe(|| {
+        if fault::injected(fault::Site::Compute) {
+            panic!("injected compute fault");
+        }
+        execute_prepared(prepared, inputs, threads)
+    }))
+    .map_err(panic_message)
+}
+
+/// Best-effort extraction of a panic payload's message (`&str` and
+/// `String` payloads cover every `panic!` in this crate).
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "opaque panic payload".to_string())
+}
+
 /// Worker budget for a batch of `tasks` requests: the engine's own
 /// budget resolution ([`crate::exec::engine::worker_budget`]), further
 /// capped by the batch size.
@@ -728,21 +1312,21 @@ const SYNTHETIC_WEIGHT_SEED: u64 = 0x5eed_b10c;
 /// noise next to the launch itself, which re-reads them many times.
 fn shared_inputs_identical(shared: &BTreeSet<String>, batch: &[Pending]) -> bool {
     shared.iter().all(|name| {
-        let m0 = batch[0]
-            .inputs
-            .get(name)
-            .expect("validated request has every program input");
+        // Validation at submit guarantees every input is present; if
+        // that invariant ever broke, declining to coalesce (fan-out
+        // would surface the real error per request) beats panicking.
+        let Some(m0) = batch.first().and_then(|p| p.inputs.get(name)) else {
+            return false;
+        };
         batch[1..].iter().all(|p| {
-            let m = p
-                .inputs
-                .get(name)
-                .expect("validated request has every program input");
-            m.rows == m0.rows
-                && m.cols == m0.cols
-                && m.data
-                    .iter()
-                    .zip(&m0.data)
-                    .all(|(a, b)| a.to_bits() == b.to_bits())
+            p.inputs.get(name).is_some_and(|m| {
+                m.rows == m0.rows
+                    && m.cols == m0.cols
+                    && m.data
+                        .iter()
+                        .zip(&m0.data)
+                        .all(|(a, b)| a.to_bits() == b.to_bits())
+            })
         })
     })
 }
@@ -770,22 +1354,18 @@ mod tests {
         let a = inputs.get_mut("A").unwrap();
         *a = Mat::zeros(a.rows + 1, a.cols);
         let err = s
-            .submit(Request {
-                workload: "quickstart".into(),
-                inputs,
-            })
+            .submit(Request::new("quickstart", inputs))
             .unwrap_err()
             .to_string();
         assert!(err.contains("registered shape"), "got: {err}");
         // missing input
         let err = s
-            .submit(Request {
-                workload: "quickstart".into(),
-                inputs: HashMap::new(),
-            })
+            .submit(Request::new("quickstart", HashMap::new()))
             .unwrap_err()
             .to_string();
         assert!(err.contains("missing input"), "got: {err}");
+        // validation failures never consume admission accounting
+        assert_eq!(s.stats().per_program["quickstart"].submitted, 0);
     }
 
     #[test]
@@ -927,5 +1507,209 @@ mod tests {
         // a second tune re-binds cached skeletons, compiling nothing new
         s.tune("quickstart", 1 << 20, 3, 10).unwrap();
         assert_eq!(s.cache_misses(), misses);
+    }
+
+    /// Satellite: stats summaries on an empty/fresh server are zeros,
+    /// never NaN (`mean_batch`/`mean_latency_ns` divide, and a NaN here
+    /// would propagate straight into the CLI stats table).
+    #[test]
+    fn stats_empty_samples_are_zero_not_nan() {
+        let st = ProgramStats::default();
+        assert_eq!(st.mean_batch(), 0.0);
+        assert_eq!(st.mean_latency_ns(), 0.0);
+        assert_eq!(st.percentile_latency_ns(50.0), 0);
+        assert_eq!(st.percentile_latency_ns(99.0), 0);
+        assert!(!st.mean_batch().is_nan());
+        assert!(!st.mean_latency_ns().is_nan());
+        assert_eq!(st.accounted(), 0);
+        assert_eq!(st.rejected(), 0);
+    }
+
+    #[test]
+    fn queue_cap_sheds_new_arrivals_with_reject_new() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            queue_cap: Some(2),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let a = s.submit_synthetic("quickstart", 0).unwrap();
+        let b = s.submit_synthetic("quickstart", 1).unwrap();
+        let c = s.submit_synthetic("quickstart", 2).unwrap();
+        assert_eq!(s.pending(), 2, "cap holds");
+        // the shed response arrives via the normal poll channel
+        let r = s.poll();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, c);
+        assert_eq!(r[0].verdict, Verdict::Rejected(Rejected::QueueFull));
+        let served: Vec<u64> = s.drain().iter().map(|r| r.id).collect();
+        assert_eq!(served, vec![a, b]);
+        let st = &s.stats().per_program["quickstart"];
+        assert_eq!(st.submitted, 3);
+        assert_eq!(st.rejected_full, 1);
+        assert_eq!(st.served, 2);
+        assert_eq!(st.accounted(), st.submitted);
+    }
+
+    #[test]
+    fn queue_cap_drop_oldest_evicts_the_queue_head() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            queue_cap: Some(2),
+            shed_policy: ShedPolicy::DropOldest,
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let a = s.submit_synthetic("quickstart", 0).unwrap();
+        let b = s.submit_synthetic("quickstart", 1).unwrap();
+        let c = s.submit_synthetic("quickstart", 2).unwrap();
+        let r = s.poll();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, a, "the oldest queued request paid");
+        assert_eq!(r[0].verdict, Verdict::Rejected(Rejected::QueueFull));
+        let served: Vec<u64> = s.drain().iter().map(|r| r.id).collect();
+        assert_eq!(served, vec![b, c], "fresh work survived");
+        let st = &s.stats().per_program["quickstart"];
+        assert_eq!(st.accounted(), st.submitted);
+    }
+
+    #[test]
+    fn deadline_rejects_at_admission() {
+        // a config-level zero deadline is already expired at admission
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            deadline: Some(Duration::ZERO),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let id = s.submit_synthetic("quickstart", 0).unwrap();
+        assert_eq!(s.pending(), 0, "never queued");
+        let r = s.poll();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, id);
+        assert_eq!(r[0].verdict, Verdict::Rejected(Rejected::DeadlineExpired));
+        assert_eq!(s.stats().per_program["quickstart"].rejected_deadline, 1);
+
+        // a per-request deadline in the past overrides a generous config
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            deadline: Some(Duration::from_secs(3600)),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let inputs = s.synthetic_inputs("quickstart", 0).unwrap();
+        let past = Instant::now() - Duration::from_millis(1);
+        s.submit(Request::new("quickstart", inputs).with_deadline(past))
+            .unwrap();
+        let r = s.poll();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].verdict, Verdict::Rejected(Rejected::DeadlineExpired));
+    }
+
+    #[test]
+    fn deadline_sheds_at_batch_formation() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            deadline: Some(Duration::from_millis(5)),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let id = s.submit_synthetic("quickstart", 0).unwrap();
+        assert_eq!(s.pending(), 1, "admitted — not yet expired");
+        std::thread::sleep(Duration::from_millis(10));
+        // an expired queued deadline makes the queue due on its own
+        let r = s.poll();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, id);
+        assert_eq!(r[0].verdict, Verdict::Rejected(Rejected::DeadlineExpired));
+        let st = &s.stats().per_program["quickstart"];
+        assert_eq!(st.shed_deadline, 1, "shed at flush, not at admission");
+        assert_eq!(st.rejected_deadline, 0);
+        assert_eq!(st.batches, 0, "no launch was burned");
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work_but_drains_queued() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let a = s.submit_synthetic("quickstart", 0).unwrap();
+        s.begin_shutdown();
+        assert!(s.is_shutting_down());
+        let b = s.submit_synthetic("quickstart", 1).unwrap();
+        let r = s.drain();
+        assert_eq!(r.len(), 2);
+        let rb = r.iter().find(|x| x.id == b).unwrap();
+        assert_eq!(rb.verdict, Verdict::Rejected(Rejected::Shutdown));
+        let ra = r.iter().find(|x| x.id == a).unwrap();
+        assert!(ra.is_ok(), "queued work still drains after shutdown");
+        let st = &s.stats().per_program["quickstart"];
+        assert_eq!(st.rejected_shutdown, 1);
+        assert_eq!(st.accounted(), st.submitted);
+    }
+
+    /// Hot-swap smoke: adopting new block sizes swaps the live plan
+    /// between batches, serving continues, and the served outputs match
+    /// a direct execution of the swapped-in plan bit for bit.
+    #[test]
+    fn adopt_sizes_hot_swaps_the_live_plan() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        s.submit_synthetic("quickstart", 0).unwrap();
+        assert!(s.drain().iter().all(|r| r.is_ok()));
+
+        let old_sizes = s.live_plan("quickstart").unwrap().sizes.clone();
+        let mut new_sizes = old_sizes.clone();
+        let m = crate::ir::dim::Dim::new("M");
+        new_sizes.set(m.clone(), old_sizes.get(&m) / 2);
+        s.adopt_sizes("quickstart", &new_sizes).unwrap();
+        let live = s.live_plan("quickstart").unwrap();
+        assert_eq!(live.sizes, new_sizes, "swap adopted the new sizes");
+        assert_eq!(s.stats().per_program["quickstart"].plan_swaps, 1);
+        assert_eq!(
+            s.stats().per_program["quickstart"].compiles,
+            1,
+            "hot-swap re-selects and re-binds; it never recompiles from scratch"
+        );
+
+        let inputs = s.synthetic_inputs("quickstart", 7).unwrap();
+        s.submit(Request::new("quickstart", inputs.clone())).unwrap();
+        let r = s.drain();
+        assert_eq!(r.len(), 1);
+        assert!(r[0].is_ok());
+        let direct = execute_prepared(&live, &inputs, Some(1));
+        for (name, got) in &r[0].outputs {
+            let want = &direct.outputs[name];
+            assert_eq!(got.rows, want.rows);
+            assert_eq!(got.cols, want.cols);
+            assert!(
+                got.data
+                    .iter()
+                    .zip(&want.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "served output {name} must match the live plan bit for bit"
+            );
+        }
+        let st = &s.stats().per_program["quickstart"];
+        assert_eq!(st.accounted(), st.submitted);
     }
 }

@@ -1,0 +1,117 @@
+//! Seeded fault injection for the serving layer's chaos tests.
+//!
+//! The daemon's robustness claims (panic isolation, worker respawn,
+//! shed/reject accounting) are only testable if faults can be *made to
+//! happen* on demand. This module is that switch: a process-global,
+//! seeded, lock-free fault source that instrumented sites query via
+//! [`injected`]. Production runs never pay more than one relaxed atomic
+//! load per site (the rate defaults to 0 and the fast path is a single
+//! compare against 0).
+//!
+//! Determinism model: the underlying LCG stream is fully determined by
+//! `(rate, seed)`, but *which* concurrent consumer observes the n-th
+//! draw depends on thread interleaving. Chaos tests therefore assert
+//! invariants (containment, accounting, bit-identical survivors), never
+//! exact victim identities.
+//!
+//! Environment hooks (read once by [`init_from_env`], called from
+//! `main`): `BB_FAULT_RATE` (fault probability in [0,1]) and
+//! `BB_FAULT_SEED` (u64 stream seed, default `0xb10c_fa17`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Instrumented fault sites. Keeping the site explicit lets tests (and
+/// future per-site rates) distinguish compute-path panics from pool
+/// worker deaths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// A batch's compute task (serve's `run_batch` launch body).
+    Compute,
+    /// A pool worker thread (dies after job check-in; pool respawns it).
+    PoolWorker,
+}
+
+/// Fault probability in parts-per-million (0 = disabled, the default).
+static RATE_PPM: AtomicU64 = AtomicU64::new(0);
+/// LCG state; advanced with a compare-exchange loop so every consumer
+/// takes a distinct draw from one deterministic stream.
+static STATE: AtomicU64 = AtomicU64::new(0xb10c_fa17);
+
+const LCG_MUL: u64 = 6364136223846793005;
+const LCG_ADD: u64 = 1442695040888963407;
+
+/// Enable fault injection at `rate` (clamped to [0,1]) with a seed.
+pub fn set(rate: f64, seed: u64) {
+    let ppm = (rate.clamp(0.0, 1.0) * 1_000_000.0).round() as u64;
+    STATE.store(seed, Ordering::SeqCst);
+    RATE_PPM.store(ppm, Ordering::SeqCst);
+}
+
+/// Disable fault injection (rate back to 0).
+pub fn off() {
+    RATE_PPM.store(0, Ordering::SeqCst);
+}
+
+/// The currently configured fault probability in [0,1].
+pub fn rate() -> f64 {
+    RATE_PPM.load(Ordering::Relaxed) as f64 / 1_000_000.0
+}
+
+/// Read `BB_FAULT_RATE` / `BB_FAULT_SEED` and arm the injector if a
+/// nonzero rate is configured. Called once from `main`; tests call
+/// [`set`] directly instead.
+pub fn init_from_env() {
+    let rate = std::env::var("BB_FAULT_RATE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.0);
+    if rate > 0.0 {
+        let seed = std::env::var("BB_FAULT_SEED")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(0xb10c_fa17);
+        set(rate, seed);
+    }
+}
+
+/// Should this site fault now? One deterministic LCG draw per call when
+/// armed; a single relaxed load (and no draw) when disabled.
+pub fn injected(_site: Site) -> bool {
+    let ppm = RATE_PPM.load(Ordering::Relaxed);
+    if ppm == 0 {
+        return false;
+    }
+    let mut cur = STATE.load(Ordering::Relaxed);
+    loop {
+        let next = cur.wrapping_mul(LCG_MUL).wrapping_add(LCG_ADD);
+        match STATE.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => {
+                // Top bits of an LCG are the well-mixed ones.
+                let draw = next >> 40; // 24 bits: 0..16_777_216
+                return draw % 1_000_000 < ppm;
+            }
+            Err(observed) => cur = observed,
+        }
+    }
+}
+
+// NOTE: lib unit tests here deliberately never *arm* the injector —
+// `cargo test` runs the lib suite multi-threaded in one process, and an
+// armed global rate would bleed injected panics into concurrently
+// running serve/pool tests. Armed behavior (rate adherence, seeded
+// determinism, containment) is pinned by `tests/serve_chaos.rs`, whose
+// binary serializes every armed section behind a lock.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default() {
+        assert_eq!(RATE_PPM.load(Ordering::Relaxed), 0);
+        for _ in 0..100 {
+            assert!(!injected(Site::Compute));
+            assert!(!injected(Site::PoolWorker));
+        }
+        assert_eq!(rate(), 0.0);
+    }
+}

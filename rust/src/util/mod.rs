@@ -1,7 +1,9 @@
 //! Small self-built substrates the offline environment lacks crates for:
 //! a minimal JSON parser/writer ([`json`]), a statistical micro-benchmark
-//! harness ([`bench`]), and a tiny CLI argument helper ([`cli`]).
+//! harness ([`bench`]), a tiny CLI argument helper ([`cli`]), and a
+//! seeded fault injector for the chaos suite ([`fault`]).
 
 pub mod bench;
 pub mod cli;
+pub mod fault;
 pub mod json;

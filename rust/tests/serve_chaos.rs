@@ -1,0 +1,401 @@
+//! Chaos suite: the serving daemon under seeded fault injection.
+//!
+//! The acceptance bar (ISSUE PR 6): with faults armed the daemon never
+//! aborts, exactly the poisoned batch's requests get error responses,
+//! every surviving response is **bit-identical** (outputs + MemSim
+//! counters) to an unfaulted sequential execution, and the
+//! shed/reject/panic counters reconcile with submitted − served.
+//!
+//! The injector (`util::fault`) is process-global, so every test here —
+//! armed or not — serializes behind one lock; arming is RAII-guarded
+//! ([`FaultGuard`]) so a failing assertion can't leave the injector hot
+//! for the next test. The fault *stream* is seeded and deterministic,
+//! but which concurrent consumer observes the n-th draw is not, so
+//! assertions are invariants (containment, accounting, survivor
+//! parity), never exact victim identities.
+//!
+//! Env overrides for CI sweeps: `BB_FAULT_RATE` scales the injected
+//! rate, `BB_CHAOS_ITERS` the request counts.
+
+use blockbuster::coordinator::{compile, execute_plan_opts, execute_prepared, workloads, PlanRun};
+use blockbuster::exec::{pool, ExecBackend};
+use blockbuster::serve::daemon::{Daemon, RetuneConfig, Ticket};
+use blockbuster::serve::{ModelServer, Request, Response, ServerConfig, Verdict};
+use blockbuster::tensor::Mat;
+use blockbuster::util::fault;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// Serialize every test in this binary: the fault injector and the
+/// worker pool are process-global.
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// RAII arming: disarms the global injector even if the test unwinds on
+/// a failed assertion mid-chaos.
+struct FaultGuard;
+
+impl FaultGuard {
+    fn arm(rate: f64, seed: u64) -> FaultGuard {
+        fault::set(rate, seed);
+        FaultGuard
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        fault::off();
+    }
+}
+
+fn env_rate(default: f64) -> f64 {
+    std::env::var("BB_FAULT_RATE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_iters(default: usize) -> usize {
+    std::env::var("BB_CHAOS_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Survivor parity: same fields as `tests/serve_parity.rs`
+/// (`peak_local_bytes` excluded — the one counter the engine does not
+/// pin across worker fan-outs).
+fn assert_survivor_matches(i: usize, r: &Response, seq: &PlanRun) {
+    for (name, m) in &seq.outputs {
+        assert_eq!(
+            bits(m),
+            bits(&r.outputs[name]),
+            "request {i}: surviving output {name} not bit-identical"
+        );
+    }
+    assert_eq!(r.mem.loaded_bytes, seq.mem.loaded_bytes, "request {i}: loads");
+    assert_eq!(r.mem.stored_bytes, seq.mem.stored_bytes, "request {i}: stores");
+    assert_eq!(r.mem.n_loads, seq.mem.n_loads, "request {i}: n_loads");
+    assert_eq!(r.mem.n_stores, seq.mem.n_stores, "request {i}: n_stores");
+    assert_eq!(r.mem.kernel_launches, seq.mem.kernel_launches, "request {i}: launches");
+    assert_eq!(r.mem.flops, seq.mem.flops, "request {i}: flops");
+}
+
+/// Shared chaos harness: ground truth computed first (unarmed), then the
+/// same stream through an armed daemon; returns the responses alongside
+/// the recovered server.
+fn chaos_run(
+    program: &str,
+    n: usize,
+    rate: f64,
+    fault_seed: u64,
+    coalesce: bool,
+) -> (Vec<Response>, Vec<PlanRun>, ModelServer) {
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(2),
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        coalesce,
+        ..ServerConfig::default()
+    });
+    server.register(program).unwrap();
+
+    // Ground truth FIRST, before arming: independent one-shot compile +
+    // sequential execution per request seed.
+    let (p, cfg, params, _) = workloads::by_name(program, 0).unwrap();
+    let compiled = compile(&p, cfg.clone());
+    let mut expected = Vec::with_capacity(n);
+    let mut reqs = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        let inputs = server.synthetic_inputs(program, 7_000 + i).unwrap();
+        expected.push(execute_plan_opts(
+            &compiled.plan,
+            &cfg.sizes,
+            &params,
+            &inputs,
+            ExecBackend::Compiled,
+            Some(2),
+        ));
+        reqs.push(Request::new(program, inputs));
+    }
+
+    let guard = FaultGuard::arm(rate, fault_seed);
+    let daemon = Daemon::start(server, None);
+    let client = daemon.client();
+    let tickets: Vec<Ticket> = reqs.into_iter().map(|r| client.submit(r)).collect();
+    let responses: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+    let server = daemon.shutdown();
+    drop(guard);
+    (responses, expected, server)
+}
+
+/// The injector itself: off by default, deterministic per (rate, seed),
+/// and rate-adherent over a large single-threaded sample.
+#[test]
+fn armed_injector_is_seeded_and_rate_adherent() {
+    let _l = chaos_lock();
+    let guard = FaultGuard::arm(0.25, 0x5eed);
+    let first: Vec<bool> = (0..64).map(|_| fault::injected(fault::Site::Compute)).collect();
+    // Re-arming with the same (rate, seed) replays the same stream.
+    fault::set(0.25, 0x5eed);
+    let second: Vec<bool> = (0..64).map(|_| fault::injected(fault::Site::Compute)).collect();
+    assert_eq!(first, second, "same (rate, seed) must replay the same stream");
+    assert!(
+        first.iter().any(|&b| b) && first.iter().any(|&b| !b),
+        "64 draws at 25% should mix hits and misses"
+    );
+    fault::set(0.25, 0x5eed);
+    let n = 100_000;
+    let hits = (0..n)
+        .filter(|_| fault::injected(fault::Site::PoolWorker))
+        .count();
+    let p = hits as f64 / n as f64;
+    assert!((0.23..0.27).contains(&p), "empirical rate {p} too far from configured 0.25");
+    drop(guard);
+    assert_eq!(fault::rate(), 0.0, "guard must disarm on drop");
+    assert!(!fault::injected(fault::Site::Compute));
+}
+
+/// Acceptance: fan-out serving under ~30% injected panics. The daemon
+/// never aborts, failures are typed error responses mentioning the
+/// injection, survivors are bit-identical to sequential execution, and
+/// the ledger reconciles exactly.
+#[test]
+fn injected_panics_are_contained_and_survivors_bit_identical() {
+    let _l = chaos_lock();
+    let n = env_iters(60);
+    let rate = env_rate(0.3);
+    let (responses, expected, server) = chaos_run("quickstart", n, rate, 0xc4a05, false);
+
+    assert_eq!(responses.len(), n, "every submission must be answered");
+    let mut ok = 0u64;
+    for (i, r) in responses.iter().enumerate() {
+        match &r.verdict {
+            Verdict::Ok => {
+                ok += 1;
+                assert_survivor_matches(i, r, &expected[i]);
+            }
+            Verdict::Failed(msg) => {
+                assert!(
+                    msg.contains("injected"),
+                    "request {i}: non-injected failure leaked through: {msg}"
+                );
+            }
+            Verdict::Rejected(rej) => panic!("request {i}: unexpected rejection {rej:?}"),
+        }
+    }
+    let st = &server.stats().per_program["quickstart"];
+    assert_eq!(st.submitted, n as u64);
+    assert_eq!(st.accounted(), st.submitted, "ledger must reconcile under faults");
+    assert_eq!(st.served, ok);
+    assert_eq!(st.served + st.failed, n as u64);
+    if rate >= 0.2 && n >= 40 {
+        assert!(st.panics >= 1, "rate {rate} over {n} requests injected nothing");
+        // fan-out containment is per-request: each contained panic
+        // failed exactly one request
+        assert_eq!(st.panics, st.failed, "fan-out containment granularity");
+    }
+}
+
+/// With coalescing on, a poisoned stacked batch fails as a *unit* —
+/// every rider gets the error response — and only that batch is lost;
+/// other batches' riders stay bit-identical.
+#[test]
+fn stacked_batch_poisoning_fails_the_whole_batch_only() {
+    let _l = chaos_lock();
+    let n = env_iters(64);
+    let rate = env_rate(0.5);
+    let (responses, expected, server) = chaos_run("quickstart", n, rate, 0x57ac, true);
+
+    assert_eq!(responses.len(), n);
+    for (i, r) in responses.iter().enumerate() {
+        match &r.verdict {
+            Verdict::Ok => assert_survivor_matches(i, r, &expected[i]),
+            Verdict::Failed(msg) => assert!(
+                msg.contains("injected"),
+                "request {i}: non-injected failure leaked through: {msg}"
+            ),
+            Verdict::Rejected(rej) => panic!("request {i}: unexpected rejection {rej:?}"),
+        }
+    }
+    let st = &server.stats().per_program["quickstart"];
+    assert_eq!(st.accounted(), st.submitted, "ledger must reconcile under faults");
+    assert_eq!(st.served + st.failed, n as u64);
+    if rate >= 0.4 && n >= 40 {
+        assert!(st.panics >= 1, "rate {rate} over {n} requests injected nothing");
+        // stacked containment is per-batch: one contained panic can fail
+        // up to max_batch riders
+        assert!(st.failed >= st.panics, "a poisoned stacked batch must fail every rider");
+    }
+}
+
+/// Injected worker mortality: every task still completes (workers die
+/// only after check-in), dead indexes are respawned, and the pool keeps
+/// serving afterwards.
+#[test]
+fn pool_worker_deaths_are_respawned_and_jobs_complete() {
+    let _l = chaos_lock();
+    let pool = pool::global();
+    let respawns_before = pool.respawns();
+    let guard = FaultGuard::arm(env_rate(0.5), 0xdead);
+    let total = AtomicUsize::new(0);
+    for _ in 0..25 {
+        pool.run_tasks(4, 8, &|_t| {
+            total.fetch_add(1, Ordering::SeqCst);
+        });
+    }
+    drop(guard);
+    assert_eq!(
+        total.load(Ordering::SeqCst),
+        25 * 8,
+        "every task must run despite worker mortality"
+    );
+    // One more (unarmed) job drains any still-dead indexes into respawns
+    // and proves the pool serves normally after the storm.
+    let after = AtomicUsize::new(0);
+    pool.run_tasks(4, 4, &|_| {
+        after.fetch_add(1, Ordering::SeqCst);
+    });
+    assert_eq!(after.load(Ordering::SeqCst), 4);
+    if env_rate(0.5) > 0.0 {
+        assert!(
+            pool.respawns() > respawns_before,
+            "injected deaths must be respawned, not accumulated"
+        );
+    }
+}
+
+/// Shutdown with a full queue and nothing flushed yet (max_wait far in
+/// the future): graceful drain serves every queued request instead of
+/// dropping it.
+#[test]
+fn shutdown_with_queued_work_drains_everything() {
+    let _l = chaos_lock();
+    let program = "quickstart";
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(1),
+        max_batch: 64,
+        max_wait: Duration::from_secs(3600),
+        coalesce: false,
+        ..ServerConfig::default()
+    });
+    server.register(program).unwrap();
+    let reqs: Vec<Request> = (0..10u64)
+        .map(|i| Request::new(program, server.synthetic_inputs(program, i).unwrap()))
+        .collect();
+    let daemon = Daemon::start(server, None);
+    let client = daemon.client();
+    let tickets: Vec<Ticket> = reqs.into_iter().map(|r| client.submit(r)).collect();
+    // Shut down immediately: the queue (nothing was due yet) must be
+    // drained and routed before the flusher exits.
+    let server = daemon.shutdown();
+    let responses: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+    assert_eq!(responses.len(), 10);
+    assert!(
+        responses.iter().all(|r| r.is_ok()),
+        "graceful drain must serve queued work, not drop it"
+    );
+    let st = &server.stats().per_program[program];
+    assert_eq!(st.served, 10);
+    assert_eq!(st.accounted(), st.submitted);
+}
+
+/// Plan hot-swap between batches under a live request stream: every
+/// batch's responses are bit-identical to `execute_prepared` on the
+/// exact plan handle that was live when the batch was submitted.
+#[test]
+fn hot_swap_between_batches_stays_bit_identical() {
+    let _l = chaos_lock();
+    let program = "quickstart";
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(1),
+        max_batch: 2,
+        max_wait: Duration::from_secs(3600),
+        coalesce: false,
+        ..ServerConfig::default()
+    });
+    server.register(program).unwrap();
+    let base_sizes = server.live_plan(program).unwrap().sizes.clone();
+    let mut small = base_sizes.clone();
+    small.set("M", 2);
+
+    let mut swaps = 0u64;
+    for round in 0..6u64 {
+        // Alternate the live plan's block sizes between rounds — the
+        // atomic Arc swap the daemon's re-tuner uses, driven directly.
+        if round > 0 {
+            let next = if round % 2 == 1 { &small } else { &base_sizes };
+            server.adopt_sizes(program, next).unwrap();
+            swaps += 1;
+        }
+        let live = server.live_plan(program).unwrap();
+        let inputs_a = server.synthetic_inputs(program, 100 + round).unwrap();
+        let inputs_b = server.synthetic_inputs(program, 200 + round).unwrap();
+        let a = server.submit(Request::new(program, inputs_a.clone())).unwrap();
+        let b = server.submit(Request::new(program, inputs_b.clone())).unwrap();
+        let responses = server.drain();
+        assert_eq!(responses.len(), 2);
+        for (id, inputs) in [(a, &inputs_a), (b, &inputs_b)] {
+            let r = responses.iter().find(|r| r.id == id).unwrap();
+            assert!(r.is_ok(), "round {round}: verdict {:?}", r.verdict);
+            let seq = execute_prepared(&live, inputs, Some(1));
+            assert_survivor_matches(round as usize, r, &seq);
+        }
+    }
+    let st = &server.stats().per_program[program];
+    assert_eq!(st.plan_swaps, swaps);
+    assert_eq!(st.compiles, 1, "hot-swapping must never recompile the workload");
+    assert_eq!(st.served, 12);
+    assert_eq!(st.accounted(), st.submitted);
+}
+
+/// The daemon's own re-tune path (`--retune-every`): measured re-tuning
+/// runs between batches under live traffic and every response still
+/// serves correctly with the workload compiled exactly once.
+#[test]
+fn daemon_retunes_between_batches_under_live_traffic() {
+    let _l = chaos_lock();
+    let program = "quickstart";
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(1),
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        coalesce: false,
+        ..ServerConfig::default()
+    });
+    server.register(program).unwrap();
+    let reqs: Vec<Request> = (0..24u64)
+        .map(|i| Request::new(program, server.synthetic_inputs(program, 500 + i).unwrap()))
+        .collect();
+    let daemon = Daemon::start(
+        server,
+        Some(RetuneConfig {
+            every: 6,
+            local_capacity: 1 << 20,
+            trials: 2,
+        }),
+    );
+    let client = daemon.client();
+    let tickets: Vec<Ticket> = reqs.into_iter().map(|r| client.submit(r)).collect();
+    let responses: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+    let server = daemon.shutdown();
+    assert_eq!(responses.len(), 24);
+    assert!(responses.iter().all(|r| r.is_ok()));
+    let st = &server.stats().per_program[program];
+    assert_eq!(st.served, 24);
+    assert_eq!(st.accounted(), st.submitted);
+    assert_eq!(st.compiles, 1, "re-tuning re-binds cached skeletons, never recompiles");
+}
