@@ -18,10 +18,14 @@
 
 use blockbuster::exec::ExecBackend;
 use blockbuster::serve::daemon::{Daemon, Ticket};
-use blockbuster::serve::{ModelServer, Request, Response, ServerConfig};
+use blockbuster::serve::net::client::{synthetic_request, ClientConfig, NetClient};
+use blockbuster::serve::net::proto::Frame;
+use blockbuster::serve::net::{NetConfig, NetServer};
+use blockbuster::serve::{ModelServer, Request, Response, ServerConfig, Verdict};
 use blockbuster::util::bench::{percentile, write_json_report, Table};
 use blockbuster::util::fault;
 use blockbuster::util::json::Json;
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 fn server_with(max_batch: usize, coalesce: bool, mix: &[&str]) -> ModelServer {
@@ -290,6 +294,77 @@ fn main() {
         ("contained_panics", Json::Num(st.panics as f64)),
     ]);
 
+    // ---- loopback TCP ingress: what the wire protocol costs -----------
+    // The same closed-loop stream, but over a real socket: preamble
+    // handshake, checksummed frame encode/decode both ways, and the
+    // per-connection reader/writer pair in front of the daemon.
+    let net_n = if smoke { 24 } else { 96 };
+    let mut s = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: None,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        coalesce: false,
+        ..ServerConfig::default()
+    });
+    s.register(program).unwrap();
+    let daemon = Daemon::start(s, None);
+    let net = NetServer::start("127.0.0.1:0", daemon.client(), NetConfig::default())
+        .expect("loopback listener");
+    let mut cli = NetClient::connect(&net.local_addr().to_string(), ClientConfig::default())
+        .expect("loopback connect");
+    // one warmup round trip so connect/compile costs stay out of the row
+    let warm = cli.call_synthetic(program, u64::MAX, 59_999).expect("loopback warmup");
+    assert_eq!(warm.verdict, Verdict::Ok, "warmup must serve");
+    let window = 16usize;
+    let mut sent = 0usize;
+    let mut got = 0usize;
+    let mut in_flight: VecDeque<Instant> = VecDeque::new();
+    let mut net_lat: Vec<u128> = Vec::with_capacity(net_n);
+    let t_net = Instant::now();
+    while got < net_n {
+        while sent < net_n && in_flight.len() < window {
+            let req = synthetic_request(program, sent as u64, 60_000 + sent as u64).unwrap();
+            cli.send(&req).expect("loopback send");
+            in_flight.push_back(Instant::now());
+            sent += 1;
+        }
+        match cli.recv().expect("loopback recv") {
+            Frame::Response(r) => {
+                assert_eq!(r.verdict, Verdict::Ok, "loopback row must serve everything");
+                let sent_at = in_flight.pop_front().expect("response without a request");
+                net_lat.push(sent_at.elapsed().as_nanos());
+                got += 1;
+            }
+            other => panic!("unexpected frame in loopback row: {other:?}"),
+        }
+    }
+    let net_wall = t_net.elapsed();
+    drop(cli);
+    net.begin_shutdown();
+    let server = daemon.shutdown();
+    let net_stats = net.shutdown();
+    assert!(net_stats.reconciles(), "loopback ledger must reconcile: {net_stats:?}");
+    let st = &server.stats().per_program[program];
+    assert_eq!(st.accounted(), st.submitted, "loopback row counters must reconcile");
+    let net_rps = net_n as f64 / net_wall.as_secs_f64();
+    let np50 = percentile(&net_lat, 50.0) as f64 / 1e3;
+    let np95 = percentile(&net_lat, 95.0) as f64 / 1e3;
+    let np99 = percentile(&net_lat, 99.0) as f64 / 1e3;
+    println!(
+        "\nloopback socket: {net_rps:.0} req/s over {net_n} pipelined requests \
+         (p50 {np50:.1}µs, p95 {np95:.1}µs, p99 {np99:.1}µs end to end over TCP)"
+    );
+    let loopback_obj = Json::obj(vec![
+        ("requests", Json::Num(net_n as f64)),
+        ("pipeline_window", Json::Num(window as f64)),
+        ("throughput_rps", Json::Num(net_rps)),
+        ("p50_latency_us", Json::Num(np50)),
+        ("p95_latency_us", Json::Num(np95)),
+        ("p99_latency_us", Json::Num(np99)),
+        ("delivered", Json::Num(net_stats.delivered as f64)),
+    ]);
+
     let report = Json::obj(vec![
         ("bench", Json::Str("serve".into())),
         ("smoke", Json::Bool(smoke)),
@@ -322,6 +397,9 @@ fn main() {
         // seeded 20% batch-panic injection: the daemon keeps serving,
         // failures are typed responses, and the ledger still reconciles
         ("fault", fault_obj),
+        // framed requests over a real loopback socket: end-to-end wire
+        // latency and throughput through the TCP ingress
+        ("loopback", loopback_obj),
     ]);
     write_json_report("BENCH_serve.json", &report).expect("writing BENCH_serve.json");
     println!("\nwrote BENCH_serve.json");

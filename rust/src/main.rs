@@ -10,9 +10,13 @@
 //!                   [--max-wait-ms MS] [--coalesce]
 //!                   [--queue-cap N] [--deadline-ms MS]
 //!                   [--shed-policy reject-new|drop-oldest]
-//!                   [--retune-every N]
+//!                   [--retune-every N] [--weights a:4,b:1]
+//!                   [--listen ADDR] [--serve-for-ms MS] [--max-inflight N]
 //!                   [--backend interp|compiled]
 //!                   [--threads N] [--seed N] [--no-simd]
+//! blockbuster client [--addr HOST:PORT] [--requests N] [--mix a,b]
+//!                   [--pipeline N] [--seed N] [--backoff-attempts N]
+//!                   [--backoff-base-ms MS] [--backoff-cap-ms MS]
 //! blockbuster xla [<model>] [--artifacts DIR] [--seed N]
 //! blockbuster list
 //! ```
@@ -23,7 +27,11 @@
 //! ranks block-count assignments under a local-memory budget; `serve`
 //! runs the fault-tolerant serving daemon (channel ingest + background
 //! flusher) over a mixed request stream with dynamic batching,
-//! admission control, deadlines, and optional live re-tuning; `xla`
+//! admission control, deadlines, and optional live re-tuning — over a
+//! synthetic local stream by default, or over TCP with `--listen`
+//! (hardened framed wire protocol, graceful drain at the end of the
+//! serve window); `client` drives such a TCP daemon with pipelined
+//! framed requests and reconnect-with-backoff; `xla`
 //! runs an AOT artifact through PJRT;
 //! `list` names the available programs. Full flag semantics are in
 //! `usage()` (run with no arguments) and the README's quickstart.
@@ -46,10 +54,15 @@ use blockbuster::loopir::lower::lower;
 use blockbuster::loopir::print::render;
 use blockbuster::lower::lower_array;
 use blockbuster::serve::daemon::{Daemon, RetuneConfig, Ticket};
-use blockbuster::serve::{ModelServer, Request, Response, ServerConfig, ShedPolicy};
+use blockbuster::serve::net::client::{synthetic_request, BackoffConfig, ClientConfig, NetClient};
+use blockbuster::serve::net::proto::Frame;
+use blockbuster::serve::net::{NetConfig, NetServer};
+use blockbuster::serve::{ModelServer, Request, Response, ServerConfig, ShedPolicy, Verdict};
 use blockbuster::tensor::{Mat, Rng};
 use blockbuster::util::bench::{fmt_bytes, percentile, Table};
 use blockbuster::util::cli::Args;
+use std::collections::VecDeque;
+use std::io::ErrorKind;
 use std::time::{Duration, Instant};
 
 fn usage() -> ! {
@@ -94,12 +107,32 @@ commands:
       --retune-every N   re-tune each workload's block shapes after every N
                          served requests and hot-swap measured winners into
                          the live plan between batches (default: off)
+      --weights SPEC     scheduler weights, name:w,...: deficit round-robin
+                         flush order — a weight-w workload may flush up to
+                         w*max_batch requests per sweep turn (default: 1 each,
+                         i.e. plain round-robin)
+      --listen ADDR      serve over TCP (framed wire protocol) instead of the
+                         synthetic local stream; registered workloads come
+                         from --mix, traffic from connected clients
+      --serve-for-ms MS  TCP serve window before the graceful drain
+                         (default 5000)
+      --max-inflight N   global cap on in-flight network requests; overflow
+                         gets typed QueueFull rejects at the edge (default 256)
       --backend B        executor backend: interp | compiled (default compiled)
       --threads N        worker cap: batch fan-out + grid loops (default: cores)
       --seed N           request-stream seed (default 42)
       --no-simd          force the bit-identical scalar kernels
       (env) BB_FAULT_RATE / BB_FAULT_SEED arm the seeded fault injector —
             injected batch panics are contained as error responses
+  client             drive a TCP serving daemon (see serve --listen)
+      --addr HOST:PORT   server address (default 127.0.0.1:7571)
+      --requests N       requests to send (default 16)
+      --mix SPEC         workload names, comma-separated (default quickstart)
+      --pipeline N       max requests in flight on the connection (default 4)
+      --seed N           input seed (default 42)
+      --backoff-attempts N   reconnect tries per (re)connect (default 5)
+      --backoff-base-ms MS   first reconnect sleep; doubles per try (default 50)
+      --backoff-cap-ms MS    reconnect sleep ceiling (default 2000)
   xla [<model>]      run an AOT artifact through PJRT (default attention_fused)
       --artifacts DIR    artifact directory (default artifacts)
       --seed N           input seed (default 42)
@@ -128,6 +161,15 @@ fn main() -> anyhow::Result<()> {
             "deadline-ms",
             "shed-policy",
             "retune-every",
+            "weights",
+            "listen",
+            "serve-for-ms",
+            "max-inflight",
+            "addr",
+            "pipeline",
+            "backoff-attempts",
+            "backoff-base-ms",
+            "backoff-cap-ms",
         ],
     );
     if args.flag("no-simd") {
@@ -141,6 +183,7 @@ fn main() -> anyhow::Result<()> {
         "run" => cmd_run(&args),
         "tune" => cmd_tune(&args),
         "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "xla" => cmd_xla(&args),
         "list" => {
             println!("programs: {}", workloads::NAMES.join(", "));
@@ -374,6 +417,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     for (name, _) in &spec {
         server.register(name)?;
     }
+    // --weights name:w,... — deficit-round-robin scheduler weights
+    // (distinct from --mix's traffic-composition weights).
+    if let Some(wspec) = args.opt("weights") {
+        for part in wspec.split(',').filter(|s| !s.is_empty()) {
+            let Some((name, w)) = part.split_once(':') else {
+                eprintln!("--weights expects name:weight, got {part}");
+                std::process::exit(2);
+            };
+            let w = w.parse::<u64>().unwrap_or_else(|_| {
+                eprintln!("--weights: bad weight in {part}");
+                std::process::exit(2);
+            });
+            server.set_weight(name, w)?;
+        }
+        println!("fairness: deficit round-robin weights {wspec}");
+    }
     println!(
         "serving {} workload(s) on backend {} (threads: {}, simd: {})",
         spec.len(),
@@ -403,6 +462,62 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let fault_rate = blockbuster::util::fault::rate();
     if fault_rate > 0.0 {
         println!("fault injection: armed at rate {fault_rate} (BB_FAULT_RATE)");
+    }
+    let retune = (retune_every > 0).then(|| RetuneConfig {
+        every: retune_every,
+        local_capacity: 1 << 20,
+        trials: 3,
+    });
+
+    // --listen: serve over TCP for the serve window, then drain in the
+    // documented order — net.begin_shutdown() so no new work is
+    // admitted, daemon.shutdown() so every in-flight ticket resolves,
+    // net.shutdown() so writers flush and every open connection gets a
+    // Shutdown frame.
+    if let Some(addr) = args.opt("listen") {
+        let serve_for = Duration::from_millis(args.opt_usize("serve-for-ms", 5000) as u64);
+        let net_cfg = NetConfig {
+            max_inflight: args.opt_usize("max-inflight", 256),
+            ..NetConfig::default()
+        };
+        let daemon = Daemon::start(server, retune);
+        let net = NetServer::start(addr, daemon.client(), net_cfg)
+            .map_err(|e| anyhow::anyhow!("cannot listen on {addr}: {e}"))?;
+        println!("listening on {} (serve window {serve_for:?})", net.local_addr());
+        std::thread::sleep(serve_for);
+        net.begin_shutdown();
+        let server = daemon.shutdown();
+        let stats = net.shutdown();
+        println!(
+            "net ingress: {} conn(s) accepted, {} frame(s); {} request(s) = {} delivered + \
+             {} disconnected; {} edge-rejected, {} malformed, {} oversized, {} idle-closed, \
+             {} frame-timeout(s), {} handshake failure(s), {} shutdown frame(s)",
+            stats.accepted,
+            stats.frames_in,
+            stats.requests_in,
+            stats.delivered,
+            stats.disconnected,
+            stats.rejected_inflight,
+            stats.malformed,
+            stats.oversized,
+            stats.idle_closed,
+            stats.frame_timeouts,
+            stats.handshake_failures,
+            stats.shutdown_frames
+        );
+        assert!(stats.reconciles(), "net ledger must reconcile after the drain: {stats:?}");
+        let sstats = server.stats();
+        for (name, st) in &sstats.per_program {
+            assert_eq!(st.accounted(), st.submitted, "{name}: daemon ledger must reconcile");
+        }
+        println!(
+            "robustness: {} submitted = {} served + {} rejected/shed + {} failed",
+            sstats.total_submitted(),
+            sstats.total_served(),
+            sstats.total_rejected(),
+            sstats.total_failed()
+        );
+        return Ok(());
     }
 
     // Deterministic weighted request stream, fully generated up front so
@@ -435,11 +550,6 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     // Channel ingest → background flusher → worker pool; shutdown() is a
     // graceful drain that hands the server back for stats + parity.
-    let retune = (retune_every > 0).then(|| RetuneConfig {
-        every: retune_every,
-        local_capacity: 1 << 20,
-        trials: 3,
-    });
     let daemon = Daemon::start(server, retune);
     let client = daemon.client();
     let serve_t0 = Instant::now();
@@ -564,6 +674,147 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         },
         stats.total_served()
     );
+    Ok(())
+}
+
+/// `blockbuster client` — drive a TCP serving daemon over the framed
+/// wire protocol: windowed pipelining, reconnect with capped
+/// exponential backoff, and a ledger-style summary at the end. The
+/// error-kind contract from `serve::net::client` decides what a failed
+/// send means: `BrokenPipe` = never admitted (safe to retry),
+/// `ConnectionAborted` = possibly in flight server-side (counted lost,
+/// never retried — at-most-once, no duplicates).
+fn cmd_client(args: &Args) -> anyhow::Result<()> {
+    let addr = args.opt("addr").unwrap_or("127.0.0.1:7571");
+    let requests = args.opt_usize("requests", 16) as u64;
+    let pipeline = args.opt_usize("pipeline", 4).max(1);
+    let seed = args.opt_usize("seed", 42) as u64;
+    let names: Vec<String> = args
+        .opt("mix")
+        .unwrap_or("quickstart")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.to_string())
+        .collect();
+    if names.is_empty() {
+        eprintln!("--mix named no workloads");
+        std::process::exit(2);
+    }
+    for name in &names {
+        if workloads::by_name(name, 0).is_none() {
+            eprintln!("unknown program {name}; have {}", workloads::NAMES.join(", "));
+            std::process::exit(2);
+        }
+    }
+    let cfg = ClientConfig {
+        backoff: BackoffConfig {
+            attempts: args.opt_usize("backoff-attempts", 5) as u32,
+            base: Duration::from_millis(args.opt_usize("backoff-base-ms", 50) as u64),
+            cap: Duration::from_millis(args.opt_usize("backoff-cap-ms", 2000) as u64),
+        },
+        ..ClientConfig::default()
+    };
+    let mut cli =
+        NetClient::connect(addr, cfg).map_err(|e| anyhow::anyhow!("cannot reach {addr}: {e}"))?;
+    println!("connected to {addr} (pipeline window {pipeline})");
+
+    let mut ok = 0u64;
+    let mut rejected = 0u64;
+    let mut failed = 0u64;
+    let mut lost = 0u64;
+    let mut lat_ns: Vec<u128> = Vec::new();
+    let mut inflight: VecDeque<(u64, Instant)> = VecDeque::new();
+    let mut next = 0u64;
+    let mut draining = false;
+    while !draining && (next < requests || !inflight.is_empty()) {
+        // Fill the pipeline window.
+        while next < requests && inflight.len() < pipeline {
+            let name = &names[next as usize % names.len()];
+            let req = synthetic_request(name, next, seed.wrapping_add(next))
+                .expect("validated workload");
+            match cli.send(&req) {
+                Ok(()) => {
+                    inflight.push_back((next, Instant::now()));
+                    next += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::BrokenPipe => {
+                    // Torn write: this request never arrived whole, but
+                    // anything already in flight died with the
+                    // connection. Reconnect and retry this request.
+                    lost += inflight.len() as u64;
+                    inflight.clear();
+                    cli.reconnect()
+                        .map_err(|e| anyhow::anyhow!("reconnect to {addr} failed: {e}"))?;
+                }
+                Err(e) if e.kind() == ErrorKind::ConnectionAborted => {
+                    // Written whole, then dropped: may be in flight
+                    // server-side — counted lost, never retried.
+                    lost += inflight.len() as u64 + 1;
+                    inflight.clear();
+                    next += 1;
+                    cli.reconnect()
+                        .map_err(|e| anyhow::anyhow!("reconnect to {addr} failed: {e}"))?;
+                }
+                Err(e) => return Err(anyhow::anyhow!("send failed: {e}")),
+            }
+        }
+        let Some(&(_, t0)) = inflight.front() else {
+            continue;
+        };
+        match cli.recv() {
+            Ok(Frame::Response(r)) => {
+                inflight.pop_front();
+                lat_ns.push(t0.elapsed().as_nanos());
+                match &r.verdict {
+                    Verdict::Ok => ok += 1,
+                    Verdict::Rejected(_) => rejected += 1,
+                    Verdict::Failed(_) => failed += 1,
+                }
+            }
+            Ok(Frame::Reject { .. }) => {
+                inflight.pop_front();
+                rejected += 1;
+            }
+            Ok(Frame::Shutdown) => {
+                // Server draining: no further responses are coming.
+                lost += inflight.len() as u64;
+                inflight.clear();
+                draining = true;
+            }
+            Ok(Frame::Error { code, msg }) => {
+                return Err(anyhow::anyhow!("server closed the connection: {code:?}: {msg}"));
+            }
+            Ok(other) => return Err(anyhow::anyhow!("unexpected frame {other:?}")),
+            Err(_) => {
+                // Response fate unknown: the whole window is lost.
+                lost += inflight.len() as u64;
+                inflight.clear();
+                cli.reconnect()
+                    .map_err(|e| anyhow::anyhow!("reconnect to {addr} failed: {e}"))?;
+            }
+        }
+    }
+    if !draining {
+        // Polite half-close: the server drains and answers Shutdown.
+        if cli.finish().is_ok() {
+            let _ = cli.recv();
+        }
+    }
+    let unsent = requests - next;
+    println!(
+        "client: {requests} requested = {ok} ok + {rejected} rejected + {failed} failed + \
+         {lost} lost + {unsent} unsent"
+    );
+    if !lat_ns.is_empty() {
+        let ms = |p: f64| percentile(&lat_ns, p) as f64 / 1e6;
+        println!(
+            "latency: p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms over {} response(s)",
+            ms(50.0),
+            ms(95.0),
+            ms(99.0),
+            lat_ns.len()
+        );
+    }
     Ok(())
 }
 

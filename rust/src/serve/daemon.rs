@@ -361,6 +361,60 @@ mod tests {
         daemon.shutdown();
     }
 
+    /// Regression for the network edge's disconnect path: a client that
+    /// vanishes before its reply arrives drops its [`Ticket`] receiver.
+    /// Every reply-send site (`route`, `submit_via`, `accept`'s
+    /// validation failures) must treat that as a no-op — never panic,
+    /// never count the request twice. The requests still *execute* and
+    /// the server ledger still reconciles exactly.
+    #[test]
+    fn dropped_ticket_receivers_never_panic_or_double_count() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let inputs: Vec<_> = (0..8)
+            .map(|i| s.synthetic_inputs("quickstart", i).unwrap())
+            .collect();
+        let daemon = Daemon::start(s, None);
+        let client = daemon.client();
+        let mut kept = Vec::new();
+        for (i, input) in inputs.into_iter().enumerate() {
+            let ticket = client.submit(Request::new("quickstart", input));
+            if i % 2 == 0 {
+                // Client gone before the reply: the receiver drops here,
+                // possibly while the flusher is mid-route.
+                drop(ticket);
+            } else {
+                kept.push(ticket);
+            }
+        }
+        for t in kept {
+            assert!(t.wait().is_ok(), "surviving clients still get replies");
+        }
+        let server = daemon.shutdown();
+        let st = &server.stats().per_program["quickstart"];
+        assert_eq!(st.submitted, 8);
+        assert_eq!(st.served, 8, "dropped receivers do not cancel execution");
+        assert_eq!(st.accounted(), st.submitted, "no double counting");
+
+        // Validation failures route through the same reply channel;
+        // dropping that ticket immediately must be just as harmless.
+        let mut s2 = ModelServer::new(ServerConfig {
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s2.register("quickstart").unwrap();
+        let daemon = Daemon::start(s2, None);
+        drop(daemon.submit(Request::new("quickstart", HashMap::new())));
+        let server = daemon.shutdown();
+        let st = &server.stats().per_program["quickstart"];
+        assert_eq!(st.submitted, 0, "validation failures never enter the ledger");
+    }
+
     #[test]
     fn submit_after_shutdown_self_replies_rejected() {
         let mut s = ModelServer::new(ServerConfig {

@@ -90,6 +90,7 @@
 //! ```
 
 pub mod daemon;
+pub mod net;
 
 use crate::array::ArrayProgram;
 use crate::autotune::{autotune_measured_cached, MeasuredPoint};
@@ -490,6 +491,15 @@ struct Served {
     /// Stacked re-binds of the prepared plan, one per batch size seen
     /// (bounded by `max_batch`; each is only the cheap bind phase).
     stacked: HashMap<usize, StackedPlan>,
+    /// Fair-share weight ([`ModelServer::set_weight`], default 1): per
+    /// scheduling round this workload may flush up to
+    /// `weight * max_batch` requests before yielding the turn.
+    weight: u64,
+    /// Deficit-round-robin credit carried between rounds, in request
+    /// units. Banked when a turn ends mid-batch, zeroed whenever the
+    /// workload has nothing eligible (an idle workload must not hoard
+    /// credit it would later use to starve the others).
+    deficit: u64,
 }
 
 struct Pending {
@@ -595,10 +605,35 @@ impl ModelServer {
                 stack,
                 shared_inputs,
                 stacked: HashMap::new(),
+                weight: 1,
+                deficit: 0,
             },
         );
         self.order.push(name.to_string());
         Ok(())
+    }
+
+    /// Set `name`'s fair-share weight: per scheduling round it may
+    /// flush up to `weight * max_batch` requests before yielding (see
+    /// [`ModelServer::sweep_flush`]'s deficit round-robin). All
+    /// workloads default to 1 — plain round-robin. A weight of 0 is
+    /// rejected: it would mean "never scheduled", which is starvation
+    /// by configuration, not fairness.
+    pub fn set_weight(&mut self, name: &str, weight: u64) -> anyhow::Result<()> {
+        if weight == 0 {
+            bail!("weight must be >= 1 (0 would never be scheduled)");
+        }
+        let served = self
+            .programs
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("unknown workload {name}"))?;
+        served.weight = weight;
+        Ok(())
+    }
+
+    /// The fair-share weight of a registered workload.
+    pub fn weight_of(&self, name: &str) -> Option<u64> {
+        self.programs.get(name).map(|s| s.weight)
     }
 
     /// Enqueue a request; returns its id. The request is validated (the
@@ -795,25 +830,58 @@ impl ModelServer {
         due
     }
 
-    /// Repeated round-robin sweeps, one batch per eligible workload per
-    /// sweep (so mixed traffic interleaves instead of one workload's
-    /// backlog blocking the others), until a full sweep flushes
-    /// nothing. The cursor advances once per sweep. Terminates: every
-    /// sweep that continues flushed at least one request, and the
-    /// eligibility predicates only shrink as queues drain.
+    /// Repeated weighted-fair sweeps (deficit round-robin), until a
+    /// full sweep flushes nothing. Each sweep visits every workload in
+    /// registration order starting at the rotating cursor; an eligible
+    /// workload banks `weight * max_batch` request units of credit
+    /// (capped at twice that, so credit cannot accumulate without
+    /// bound) and flushes batches until the credit is spent or nothing
+    /// eligible remains. With all weights at 1 and full batches this
+    /// degenerates to the previous plain round-robin — one batch per
+    /// workload per sweep — while weights let a hot workload take a
+    /// proportionally larger (but still *bounded*) share of each round:
+    /// the starvation bound is that between two turns of any workload,
+    /// every other workload flushes at most `2 * weight * max_batch`
+    /// requests.
+    ///
+    /// Terminates: every sweep that continues flushed at least one
+    /// response, queues only shrink, and the eligibility predicates
+    /// only shrink as queues drain.
     fn sweep_flush(&mut self, eligible: impl Fn(&ModelServer, &str) -> bool) -> Vec<Response> {
         let mut out = Vec::new();
         let n = self.order.len();
         if n == 0 {
             return out;
         }
+        let unit = self.cfg.max_batch as u64;
         loop {
             let mut any = false;
             for k in 0..n {
                 let name = self.order[(self.rr + k) % n].clone();
-                if eligible(self, &name) {
-                    out.extend(self.flush_one(&name));
+                if !eligible(self, &name) {
+                    // No credit hoarding while idle (see `Served::deficit`).
+                    if let Some(s) = self.programs.get_mut(&name) {
+                        s.deficit = 0;
+                    }
+                    continue;
+                }
+                let (weight, banked) = {
+                    let s = &self.programs[&name];
+                    (s.weight, s.deficit)
+                };
+                let quantum = weight.saturating_mul(unit);
+                let mut deficit = banked.saturating_add(quantum).min(quantum.saturating_mul(2));
+                while deficit > 0 && eligible(self, &name) {
+                    let flushed = self.flush_one(&name);
+                    if flushed.is_empty() {
+                        break;
+                    }
+                    deficit = deficit.saturating_sub(flushed.len() as u64);
+                    out.extend(flushed);
                     any = true;
+                }
+                if let Some(s) = self.programs.get_mut(&name) {
+                    s.deficit = deficit;
                 }
             }
             self.rr = (self.rr + 1) % n;
@@ -1711,5 +1779,137 @@ mod tests {
         }
         let st = &s.stats().per_program["quickstart"];
         assert_eq!(st.accounted(), st.submitted);
+    }
+
+    #[test]
+    fn set_weight_validates_name_and_value() {
+        let mut s = ModelServer::new(ServerConfig::default());
+        s.register("quickstart").unwrap();
+        assert_eq!(s.weight_of("quickstart"), Some(1), "default weight is 1");
+        s.set_weight("quickstart", 4).unwrap();
+        assert_eq!(s.weight_of("quickstart"), Some(4));
+        let err = s.set_weight("quickstart", 0).unwrap_err().to_string();
+        assert!(err.contains("weight must be"), "got: {err}");
+        assert!(s.set_weight("no_such_program", 2).is_err());
+        assert_eq!(s.weight_of("no_such_program"), None);
+    }
+
+    /// The acceptance test for weighted fairness: one saturating hot
+    /// workload at weight 4 against two weight-1 workloads, all backed
+    /// by the same program. Deficit round-robin must give the hot
+    /// workload its 4x share *per round* while the cold workloads keep
+    /// flushing every round — so the colds finish well before the hot
+    /// backlog and no workload's p99 queue wait grows past the hot
+    /// tail's.
+    #[test]
+    fn weighted_fairness_bounds_starvation_under_saturation() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        for name in ["hot", "cold1", "cold2"] {
+            let (program, cfg, params, _inputs) = workloads::by_name("quickstart", 0).unwrap();
+            s.register_program(name, &program, cfg, params).unwrap();
+        }
+        s.set_weight("hot", 4).unwrap();
+
+        // Pre-generate all inputs, then enqueue hots strictly before
+        // colds: any cold response that waits longer than the hot tail
+        // then proves a scheduling failure, not clock noise.
+        let hot_inputs: Vec<_> = (0..40)
+            .map(|i| s.synthetic_inputs("hot", i).unwrap())
+            .collect();
+        let cold_inputs: Vec<_> = (0..6)
+            .map(|i| {
+                (
+                    s.synthetic_inputs("cold1", 100 + i).unwrap(),
+                    s.synthetic_inputs("cold2", 200 + i).unwrap(),
+                )
+            })
+            .collect();
+        for inputs in hot_inputs {
+            s.submit(Request::new("hot", inputs)).unwrap();
+        }
+        for (c1, c2) in cold_inputs {
+            s.submit(Request::new("cold1", c1)).unwrap();
+            s.submit(Request::new("cold2", c2)).unwrap();
+        }
+
+        let responses = s.drain();
+        assert_eq!(responses.len(), 52);
+        assert!(responses.iter().all(|r| r.is_ok()));
+
+        // Round 1 (cursor starts at "hot"): hot spends its full quantum
+        // of 4 batches, then each cold gets its one batch — the 4:1:1
+        // weighted share, exactly.
+        let first: Vec<&str> = responses[..12].iter().map(|r| r.workload.as_str()).collect();
+        let mut want = vec!["hot"; 8];
+        want.extend(["cold1", "cold1", "cold2", "cold2"]);
+        assert_eq!(first, want, "round 1 must be 8 hot + 2 cold1 + 2 cold2");
+
+        // Starvation bound: the colds (6 requests each, 2 per round)
+        // need 3 rounds, so every cold response lands within the first
+        // 36 — the hot backlog's tail (16 more requests) cannot push
+        // them back.
+        let last_cold = responses
+            .iter()
+            .rposition(|r| r.workload != "hot")
+            .expect("cold responses exist");
+        assert!(last_cold < 36, "last cold response at {last_cold}, starved past round 3");
+
+        // And in time, not just order: every workload's p99 queue wait
+        // is bounded by the hot tail's worst wait (colds were enqueued
+        // after every hot, so ordering alone makes this deterministic).
+        let waits = |name: &str| -> Vec<u128> {
+            responses
+                .iter()
+                .filter(|r| r.workload == name)
+                .map(|r| r.queue_ns)
+                .collect()
+        };
+        let hot_max = *waits("hot").iter().max().unwrap();
+        for cold in ["cold1", "cold2"] {
+            let p99 = crate::util::bench::percentile(&waits(cold), 99.0);
+            assert!(
+                p99 <= hot_max,
+                "{cold} p99 queue wait {p99}ns exceeds the hot tail's {hot_max}ns"
+            );
+        }
+
+        for name in ["hot", "cold1", "cold2"] {
+            let st = &s.stats().per_program[name];
+            assert_eq!(st.accounted(), st.submitted, "{name} ledger");
+        }
+    }
+
+    /// With every weight at 1, deficit round-robin must degenerate to
+    /// the old behavior: one batch per workload per round, strict
+    /// interleave.
+    #[test]
+    fn weight_one_stays_plain_round_robin() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        for name in ["a", "b"] {
+            let (program, cfg, params, _inputs) = workloads::by_name("quickstart", 0).unwrap();
+            s.register_program(name, &program, cfg, params).unwrap();
+        }
+        for i in 0..4u64 {
+            let inputs = s.synthetic_inputs("a", i).unwrap();
+            s.submit(Request::new("a", inputs)).unwrap();
+            let inputs = s.synthetic_inputs("b", i).unwrap();
+            s.submit(Request::new("b", inputs)).unwrap();
+        }
+        let order: Vec<String> = s.drain().into_iter().map(|r| r.workload).collect();
+        assert_eq!(
+            order,
+            ["a", "a", "b", "b", "b", "b", "a", "a"],
+            "one batch per workload per round (cursor rotates between rounds)"
+        );
     }
 }

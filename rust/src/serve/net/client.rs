@@ -1,0 +1,352 @@
+//! A blocking client for the daemon's TCP ingress: preamble handshake,
+//! pipelined framed requests, reconnect with capped exponential
+//! backoff — and the network fault sites the chaos suite injects
+//! ([`Site::NetTornWrite`], [`Site::NetStallRead`],
+//! [`Site::NetDisconnect`]) so slow/torn/vanishing clients can be
+//! manufactured deterministically against a real socket.
+//!
+//! Error-kind contract (what a failed call tells the caller):
+//!
+//! * `BrokenPipe` from [`NetClient::send`] — the frame did **not** reach
+//!   the server whole (torn write); the request was never admitted.
+//! * `ConnectionAborted` from [`NetClient::send`] — the frame was
+//!   written in full, then the connection dropped; the request may be
+//!   in flight server-side (it will resolve as a disconnect there).
+//! * Any error from [`NetClient::recv`] — the response's fate is
+//!   unknown; reconnect and treat the request as lost.
+
+use super::proto::{self, Frame, WireHealth, WireRequest, WireResponse, HEADER_LEN, PREAMBLE_LEN};
+use super::{read_full, ReadEnd};
+use crate::coordinator::workloads;
+use crate::serve::Verdict;
+use crate::tensor::Mat;
+use crate::util::fault::{self, Site};
+use std::io::{self, ErrorKind, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Reconnect policy: `attempts` tries, sleeping `min(base * 2^i, cap)`
+/// between consecutive failures.
+#[derive(Clone, Debug)]
+pub struct BackoffConfig {
+    pub attempts: u32,
+    pub base: Duration,
+    pub cap: Duration,
+}
+
+impl Default for BackoffConfig {
+    fn default() -> BackoffConfig {
+        BackoffConfig {
+            attempts: 5,
+            base: Duration::from_millis(50),
+            cap: Duration::from_secs(2),
+        }
+    }
+}
+
+impl BackoffConfig {
+    /// The sleep before retry `i` (0-based), exponentially grown from
+    /// `base` and clamped at `cap`.
+    pub fn delay(&self, i: u32) -> Duration {
+        let factor = 1u32.checked_shl(i.min(16)).unwrap_or(u32::MAX);
+        self.base.saturating_mul(factor).min(self.cap)
+    }
+}
+
+/// Client knobs. `stall` is only consumed by the injected
+/// [`Site::NetStallRead`] fault.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Overall bound on one [`NetClient::recv`].
+    pub read_timeout: Duration,
+    /// Socket write timeout for request frames.
+    pub write_timeout: Duration,
+    /// Largest response frame this client will accept.
+    pub max_frame: u32,
+    pub backoff: BackoffConfig,
+    /// How long an injected stalled-read fault sleeps before reading.
+    pub stall: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(2),
+            max_frame: proto::DEFAULT_MAX_FRAME,
+            backoff: BackoffConfig::default(),
+            stall: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Poll slice for the client's interruptible reads.
+const POLL: Duration = Duration::from_millis(25);
+
+/// A connected client. Requests pipeline freely: [`NetClient::send`]
+/// any number of frames, then [`NetClient::recv`] the responses — the
+/// server resolves one connection's responses in submission order.
+pub struct NetClient {
+    addr: String,
+    cfg: ClientConfig,
+    stream: TcpStream,
+}
+
+fn ioerr(kind: ErrorKind, msg: impl Into<String>) -> io::Error {
+    io::Error::new(kind, msg.into())
+}
+
+impl NetClient {
+    /// Connect and handshake, retrying per [`BackoffConfig`]. The
+    /// backoff matters in practice: a client racing a server's bind
+    /// (CI's loopback smoke does exactly this) connects on a later
+    /// attempt instead of failing the run.
+    pub fn connect(addr: &str, cfg: ClientConfig) -> io::Result<NetClient> {
+        let mut last: Option<io::Error> = None;
+        for i in 0..cfg.backoff.attempts.max(1) {
+            if i > 0 {
+                std::thread::sleep(cfg.backoff.delay(i - 1));
+            }
+            match connect_once(addr, &cfg) {
+                Ok(stream) => {
+                    return Ok(NetClient {
+                        addr: addr.to_string(),
+                        cfg,
+                        stream,
+                    })
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last
+            .unwrap_or_else(|| ioerr(ErrorKind::NotConnected, "no connection attempts configured")))
+    }
+
+    /// Drop the current connection and dial again (same backoff).
+    pub fn reconnect(&mut self) -> io::Result<()> {
+        let _ = self.stream.shutdown(Shutdown::Both);
+        let mut last: Option<io::Error> = None;
+        for i in 0..self.cfg.backoff.attempts.max(1) {
+            if i > 0 {
+                std::thread::sleep(self.cfg.backoff.delay(i - 1));
+            }
+            match connect_once(&self.addr, &self.cfg) {
+                Ok(stream) => {
+                    self.stream = stream;
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last
+            .unwrap_or_else(|| ioerr(ErrorKind::NotConnected, "no connection attempts configured")))
+    }
+
+    /// Write one request frame. Consumes the torn-write and disconnect
+    /// fault sites (see the module docs for the error-kind contract).
+    pub fn send(&mut self, req: &WireRequest) -> io::Result<()> {
+        let bytes = proto::encode_frame(&Frame::Request(req.clone()));
+        if fault::injected(Site::NetTornWrite) {
+            // Write half the frame and vanish: the server must time the
+            // torn frame out, never hang on it.
+            let half = bytes.len() / 2;
+            let _ = self.stream.write_all(&bytes[..half]);
+            let _ = self.stream.flush();
+            let _ = self.stream.shutdown(Shutdown::Both);
+            return Err(ioerr(ErrorKind::BrokenPipe, "injected torn write"));
+        }
+        self.stream.write_all(&bytes)?;
+        if fault::injected(Site::NetDisconnect) {
+            // The request reached the server; the client vanishes before
+            // collecting the reply — server-side it resolves as a
+            // disconnect, not a leak.
+            let _ = self.stream.shutdown(Shutdown::Both);
+            return Err(ioerr(ErrorKind::ConnectionAborted, "injected disconnect"));
+        }
+        Ok(())
+    }
+
+    /// Read one frame (any kind), bounded by
+    /// [`ClientConfig::read_timeout`]. Consumes the stalled-read fault
+    /// site.
+    pub fn recv(&mut self) -> io::Result<Frame> {
+        if fault::injected(Site::NetStallRead) {
+            // A deliberately slow reader: the server's reply path must
+            // tolerate this (bounded by its write timeout), not block
+            // other connections.
+            std::thread::sleep(self.cfg.stall);
+        }
+        let deadline = Instant::now() + self.cfg.read_timeout;
+        let mut hdr = [0u8; HEADER_LEN];
+        read_end(read_full(&mut self.stream, &mut hdr, deadline, None))?;
+        let header = proto::decode_header(&hdr, self.cfg.max_frame)
+            .map_err(|e| ioerr(ErrorKind::InvalidData, e.0))?;
+        let mut payload = vec![0u8; header.payload_len as usize];
+        read_end(read_full(&mut self.stream, &mut payload, deadline, None))?;
+        proto::decode_frame(&header, &payload).map_err(|e| ioerr(ErrorKind::InvalidData, e.0))
+    }
+
+    /// Send one request and wait for its resolution. Edge rejections
+    /// ([`Frame::Reject`]) are folded into a [`WireResponse`] with the
+    /// matching [`Verdict::Rejected`], so callers handle one shape.
+    pub fn call(&mut self, req: &WireRequest) -> io::Result<WireResponse> {
+        self.send(req)?;
+        match self.recv()? {
+            Frame::Response(r) => Ok(*r),
+            Frame::Reject { corr, reason } => Ok(WireResponse {
+                corr,
+                verdict: Verdict::Rejected(reason),
+                batch_size: 0,
+                coalesced: false,
+                queue_ns: 0,
+                exec_ns: 0,
+                mem: Default::default(),
+                outputs: vec![],
+            }),
+            Frame::Shutdown => Err(ioerr(ErrorKind::ConnectionAborted, "server draining")),
+            Frame::Error { code, msg } => {
+                Err(ioerr(ErrorKind::InvalidData, format!("server error {code:?}: {msg}")))
+            }
+            other => Err(ioerr(
+                ErrorKind::InvalidData,
+                format!("unexpected frame {:?} awaiting a response", frame_name(&other)),
+            )),
+        }
+    }
+
+    /// [`NetClient::call`] with deterministic synthetic inputs for one
+    /// of the canonical demo workloads.
+    pub fn call_synthetic(
+        &mut self,
+        workload: &str,
+        corr: u64,
+        seed: u64,
+    ) -> io::Result<WireResponse> {
+        let req = synthetic_request(workload, corr, seed)
+            .ok_or_else(|| ioerr(ErrorKind::InvalidInput, format!("unknown workload {workload}")))?;
+        self.call(&req)
+    }
+
+    /// Probe server liveness.
+    pub fn health(&mut self) -> io::Result<WireHealth> {
+        let bytes = proto::encode_frame(&Frame::Health);
+        self.stream.write_all(&bytes)?;
+        match self.recv()? {
+            Frame::HealthReply(h) => Ok(h),
+            other => Err(ioerr(
+                ErrorKind::InvalidData,
+                format!("unexpected frame {:?} awaiting a health reply", frame_name(&other)),
+            )),
+        }
+    }
+
+    /// Politely announce end-of-requests (the server drains what is
+    /// owed, sends `Shutdown`, and closes).
+    pub fn finish(&mut self) -> io::Result<()> {
+        let bytes = proto::encode_frame(&Frame::Shutdown);
+        self.stream.write_all(&bytes)
+    }
+}
+
+/// Build a deterministic synthetic [`WireRequest`] for a canonical demo
+/// workload: full-shape inputs from `seed`, sorted by name so the wire
+/// bytes are reproducible.
+pub fn synthetic_request(workload: &str, corr: u64, seed: u64) -> Option<WireRequest> {
+    let (_program, _cfg, _params, inputs) = workloads::by_name(workload, seed)?;
+    let mut inputs: Vec<(String, Mat)> = inputs.into_iter().collect();
+    inputs.sort_by(|a, b| a.0.cmp(&b.0));
+    Some(WireRequest {
+        corr,
+        workload: workload.to_string(),
+        deadline_ms: 0,
+        inputs,
+    })
+}
+
+fn frame_name(f: &Frame) -> &'static str {
+    match f {
+        Frame::Request(_) => "Request",
+        Frame::Response(_) => "Response",
+        Frame::Reject { .. } => "Reject",
+        Frame::Health => "Health",
+        Frame::HealthReply(_) => "HealthReply",
+        Frame::Error { .. } => "Error",
+        Frame::Shutdown => "Shutdown",
+    }
+}
+
+fn read_end(end: ReadEnd) -> io::Result<()> {
+    match end {
+        ReadEnd::Done => Ok(()),
+        ReadEnd::Eof { .. } => Err(ioerr(ErrorKind::UnexpectedEof, "server closed mid-frame")),
+        ReadEnd::TimedOut => Err(ioerr(ErrorKind::TimedOut, "response read timed out")),
+        ReadEnd::Stopped => unreachable!("client reads pass no stop flag"),
+        ReadEnd::Gone => Err(ioerr(ErrorKind::ConnectionReset, "connection lost mid-frame")),
+    }
+}
+
+fn connect_once(addr: &str, cfg: &ClientConfig) -> io::Result<TcpStream> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(POLL))?;
+    stream.set_write_timeout(Some(cfg.write_timeout))?;
+    stream.write_all(&proto::encode_preamble())?;
+    let mut echo = [0u8; PREAMBLE_LEN];
+    read_end(read_full(&mut stream, &mut echo, Instant::now() + cfg.read_timeout, None))?;
+    if proto::check_preamble(&echo).is_err() {
+        return Err(ioerr(
+            ErrorKind::InvalidData,
+            "handshake rejected (magic/version mismatch)",
+        ));
+    }
+    Ok(stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let b = BackoffConfig {
+            attempts: 8,
+            base: Duration::from_millis(50),
+            cap: Duration::from_millis(400),
+        };
+        assert_eq!(b.delay(0), Duration::from_millis(50));
+        assert_eq!(b.delay(1), Duration::from_millis(100));
+        assert_eq!(b.delay(2), Duration::from_millis(200));
+        assert_eq!(b.delay(3), Duration::from_millis(400));
+        assert_eq!(b.delay(4), Duration::from_millis(400), "capped");
+        assert_eq!(b.delay(63), Duration::from_millis(400), "shift-safe");
+    }
+
+    #[test]
+    fn connect_to_nothing_exhausts_backoff_quickly() {
+        // A port from the ephemeral range with (almost certainly) no
+        // listener; tiny backoff so the test is fast either way.
+        let cfg = ClientConfig {
+            backoff: BackoffConfig {
+                attempts: 2,
+                base: Duration::from_millis(1),
+                cap: Duration::from_millis(2),
+            },
+            ..ClientConfig::default()
+        };
+        let t0 = Instant::now();
+        let r = NetClient::connect("127.0.0.1:1", cfg);
+        assert!(r.is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn synthetic_requests_are_deterministic() {
+        let a = synthetic_request("quickstart", 1, 7).unwrap();
+        let b = synthetic_request("quickstart", 2, 7).unwrap();
+        assert_eq!(a.inputs, b.inputs, "same seed, same inputs");
+        assert_ne!(a.corr, b.corr);
+        let c = synthetic_request("quickstart", 1, 8).unwrap();
+        assert_ne!(a.inputs, c.inputs, "different seed, different inputs");
+        assert!(synthetic_request("no_such_workload", 0, 0).is_none());
+    }
+}

@@ -1,0 +1,800 @@
+//! Hardened TCP ingress for the serving daemon.
+//!
+//! [`NetServer`] is a std-only threaded front end over
+//! [`DaemonClient`]: an accept loop plus two threads per connection (a
+//! frame reader and a response writer), speaking the versioned
+//! length-prefixed protocol of [`proto`]. The build is offline — no
+//! async runtime exists here by design; connection counts in this
+//! system are bounded by the in-flight cap long before thread-per-
+//! connection becomes the limit.
+//!
+//! **Robustness contract.** The network edge must uphold the daemon's
+//! ledger discipline against everything a real client can do to it:
+//!
+//! * *Malformed bytes* — bad magic, wrong version, unknown frame kinds,
+//!   oversized length prefixes, checksum mismatches, truncated or
+//!   over-long payloads — get a typed [`Frame::Error`] and a
+//!   connection close. Never a panic, never a hang, never an
+//!   allocation driven by an attacker-controlled length (the frame cap
+//!   is enforced from the 10-byte header alone).
+//! * *Slow clients* — a client that trickles a frame byte-by-byte is
+//!   bounded by `frame_timeout` from the frame's first byte
+//!   (slowloris defense); a fully quiet connection is reaped after
+//!   `idle_timeout` (the idle clock pauses while responses are still
+//!   owed, so a client waiting on its replies is not "idle"); a client
+//!   that stops *reading* is bounded by `write_timeout` on the reply
+//!   path.
+//! * *Vanished clients* — a disconnect with requests in flight resolves
+//!   those tickets as `disconnected` (the daemon side is unaffected:
+//!   routing a response to a dropped ticket receiver is a no-op).
+//!   `requests_in == delivered + disconnected` reconciles exactly, at
+//!   all times, per server.
+//! * *Connection storms* — a global in-flight cap turns overload into
+//!   immediate typed [`Frame::Reject`]`(QueueFull)` frames at the
+//!   network edge instead of unbounded queue growth.
+//!
+//! **Shutdown ordering.** Graceful drain is a three-step dance with the
+//! daemon, in this order:
+//!
+//! ```text
+//! net.begin_shutdown();            // 1. stop accepting; readers wind down
+//! let server = daemon.shutdown();  // 2. daemon drains -> every ticket resolves
+//! let stats = net.shutdown();      // 3. writers flush replies + Shutdown frame
+//! ```
+//!
+//! Step 2 between 1 and 3 is what makes 3 prompt: writers block on
+//! [`Ticket::wait`], and the daemon's drain is what resolves those
+//! tickets. [`NetServer::shutdown`] performs step 1 itself if the
+//! caller has not, so the worst misuse is a slow join, not a deadlock.
+
+pub mod client;
+pub mod proto;
+
+use self::proto::{
+    ErrorCode, Frame, WireHealth, WireRequest, WireResponse, HEADER_LEN, PREAMBLE_LEN,
+};
+use super::daemon::{DaemonClient, Ticket};
+use super::{Rejected, Request, Response};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Tuning knobs of one [`NetServer`]. The defaults suit a trusted LAN;
+/// tests shrink every timeout to keep the chaos suite fast.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Hard cap on one frame's payload bytes; enforced from the header
+    /// alone, before any payload allocation.
+    pub max_frame: u32,
+    /// Global cap on requests in flight through this ingress (admitted
+    /// to the daemon, response not yet resolved). Arrivals over the cap
+    /// get an immediate [`Frame::Reject`]`(QueueFull)`.
+    pub max_inflight: usize,
+    /// Reap a connection that has been fully quiet this long (no frame
+    /// in progress *and* no response owed).
+    pub idle_timeout: Duration,
+    /// A frame, once started, must arrive in full within this bound —
+    /// the slowloris defense.
+    pub frame_timeout: Duration,
+    /// Socket write timeout per reply write: bounds a client that stops
+    /// reading its responses.
+    pub write_timeout: Duration,
+    /// Poll slice for interruptible reads and the accept loop: the
+    /// granularity at which shutdown and deadlines are noticed.
+    pub poll: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            max_frame: proto::DEFAULT_MAX_FRAME,
+            max_inflight: 256,
+            idle_timeout: Duration::from_secs(30),
+            frame_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(2),
+            poll: Duration::from_millis(25),
+        }
+    }
+}
+
+/// Monotonic counters of one ingress, snapshot via [`NetServer::stats`].
+/// The ledger invariant: `requests_in == delivered + disconnected` once
+/// the server has shut down (transiently, the difference is the
+/// requests still in flight).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted (past the TCP accept, before the handshake).
+    pub accepted: u64,
+    /// Connections dropped during the preamble exchange (bad magic,
+    /// wrong version, timeout, immediate disconnect).
+    pub handshake_failures: u64,
+    /// Well-formed frames decoded (all kinds).
+    pub frames_in: u64,
+    /// Requests admitted into the daemon.
+    pub requests_in: u64,
+    /// Responses written back to their clients in full.
+    pub delivered: u64,
+    /// Admitted requests whose client was gone by reply time (ticket
+    /// resolved as a disconnect).
+    pub disconnected: u64,
+    /// Requests refused at the network edge by the in-flight cap
+    /// (typed `Reject` frames; these never reached the daemon).
+    pub rejected_inflight: u64,
+    /// Frames refused for protocol violations (checksum, truncation,
+    /// unknown kinds, trailing bytes, client-sent server frames).
+    pub malformed: u64,
+    /// Frames refused from the header alone for exceeding `max_frame`.
+    pub oversized: u64,
+    /// Connections reaped by the idle timeout.
+    pub idle_closed: u64,
+    /// Connections closed by the slowloris bound (a started frame that
+    /// did not complete within `frame_timeout`).
+    pub frame_timeouts: u64,
+    /// Health probes answered.
+    pub health_probes: u64,
+    /// Shutdown frames sent (graceful connection closes).
+    pub shutdown_frames: u64,
+    /// Requests currently in flight (gauge, not a counter).
+    pub inflight: u64,
+}
+
+impl NetStats {
+    /// The edge ledger: every admitted request resolved exactly once.
+    pub fn reconciles(&self) -> bool {
+        self.inflight == 0 && self.requests_in == self.delivered + self.disconnected
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    accepted: AtomicU64,
+    handshake_failures: AtomicU64,
+    frames_in: AtomicU64,
+    requests_in: AtomicU64,
+    delivered: AtomicU64,
+    disconnected: AtomicU64,
+    rejected_inflight: AtomicU64,
+    malformed: AtomicU64,
+    oversized: AtomicU64,
+    idle_closed: AtomicU64,
+    frame_timeouts: AtomicU64,
+    health_probes: AtomicU64,
+    shutdown_frames: AtomicU64,
+    inflight: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> NetStats {
+        NetStats {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            handshake_failures: self.handshake_failures.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            requests_in: self.requests_in.load(Ordering::Relaxed),
+            delivered: self.delivered.load(Ordering::Relaxed),
+            disconnected: self.disconnected.load(Ordering::Relaxed),
+            rejected_inflight: self.rejected_inflight.load(Ordering::Relaxed),
+            malformed: self.malformed.load(Ordering::Relaxed),
+            oversized: self.oversized.load(Ordering::Relaxed),
+            idle_closed: self.idle_closed.load(Ordering::Relaxed),
+            frame_timeouts: self.frame_timeouts.load(Ordering::Relaxed),
+            health_probes: self.health_probes.load(Ordering::Relaxed),
+            shutdown_frames: self.shutdown_frames.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A running TCP ingress: accept loop + per-connection threads, all
+/// feeding one [`DaemonClient`]. See the module docs for the shutdown
+/// ordering.
+pub struct NetServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting. The daemon stays owned by the caller; the
+    /// server only holds a cheap submission handle.
+    pub fn start(addr: &str, client: DaemonClient, cfg: NetConfig) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(Counters::default());
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = std::thread::Builder::new()
+            .name("bb-net-accept".to_string())
+            .spawn({
+                let shutdown = Arc::clone(&shutdown);
+                let counters = Arc::clone(&counters);
+                let conns = Arc::clone(&conns);
+                move || accept_loop(listener, client, cfg, shutdown, counters, conns)
+            })?;
+        Ok(NetServer { addr: local, shutdown, counters, accept: Some(accept), conns })
+    }
+
+    /// The bound address (resolves the ephemeral port of `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A point-in-time snapshot of the ingress counters.
+    pub fn stats(&self) -> NetStats {
+        self.counters.snapshot()
+    }
+
+    /// Whether the server is draining.
+    pub fn is_draining(&self) -> bool {
+        self.shutdown.load(Ordering::Relaxed)
+    }
+
+    /// Step 1 of the drain: stop accepting, tell every connection
+    /// reader to wind down. Idempotent. Call `daemon.shutdown()` after
+    /// this and [`NetServer::shutdown`] after that.
+    pub fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Step 3 of the drain: join the accept loop and every connection.
+    /// Writers flush any resolved responses, send each open connection
+    /// a [`Frame::Shutdown`], and close. Returns the final counters.
+    pub fn shutdown(mut self) -> NetStats {
+        self.begin_shutdown();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut v = self.conns.lock().unwrap_or_else(|p| p.into_inner());
+            v.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        self.counters.snapshot()
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    client: DaemonClient,
+    cfg: NetConfig,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                counters.accepted.fetch_add(1, Ordering::Relaxed);
+                let handle = std::thread::Builder::new().name("bb-net-conn".to_string()).spawn({
+                    let client = client.clone();
+                    let cfg = cfg.clone();
+                    let shutdown = Arc::clone(&shutdown);
+                    let counters = Arc::clone(&counters);
+                    move || conn_loop(stream, client, cfg, shutdown, counters)
+                });
+                match handle {
+                    Ok(h) => {
+                        let mut v = conns.lock().unwrap_or_else(|p| p.into_inner());
+                        // Reap finished connections so a long-lived server
+                        // does not accumulate dead JoinHandles.
+                        let mut i = 0;
+                        while i < v.len() {
+                            if v[i].is_finished() {
+                                let _ = v.remove(i).join();
+                            } else {
+                                i += 1;
+                            }
+                        }
+                        v.push(h);
+                    }
+                    Err(_) => {
+                        // Thread spawn failed (resource exhaustion): drop
+                        // the connection rather than the server.
+                        let _ = stream.shutdown(Shutdown::Both);
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(cfg.poll),
+            // Transient accept errors (e.g. EMFILE under storm): back
+            // off a slice and keep the listener alive.
+            Err(_) => std::thread::sleep(cfg.poll),
+        }
+    }
+}
+
+/// What a bounded, interruptible exact read ended as.
+enum ReadEnd {
+    /// The buffer was filled.
+    Done,
+    /// The peer closed its write half after `got` of the wanted bytes.
+    Eof { got: usize },
+    /// The deadline passed first.
+    TimedOut,
+    /// The stop flag was observed before any byte arrived.
+    Stopped,
+    /// A hard socket error (peer vanished).
+    Gone,
+}
+
+/// Read exactly `buf.len()` bytes in poll slices, honoring a deadline —
+/// and, when `stop` is given, aborting cleanly if the flag is raised
+/// before the first byte lands. The stream's read timeout is the poll
+/// slice, so each loop turn is short.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Instant,
+    stop: Option<&AtomicBool>,
+) -> ReadEnd {
+    let mut got = 0;
+    while got < buf.len() {
+        if got == 0 {
+            if let Some(s) = stop {
+                if s.load(Ordering::Relaxed) {
+                    return ReadEnd::Stopped;
+                }
+            }
+        }
+        if Instant::now() >= deadline {
+            return ReadEnd::TimedOut;
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return ReadEnd::Eof { got },
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return ReadEnd::Gone,
+        }
+    }
+    ReadEnd::Done
+}
+
+fn write_frame(stream: &mut TcpStream, f: &Frame) -> std::io::Result<()> {
+    stream.write_all(&proto::encode_frame(f))
+}
+
+/// Messages from a connection's reader to its writer. `Hangup` is
+/// always the final message.
+enum WMsg {
+    /// An admitted request: wait the ticket, write the response.
+    Ticket { corr: u64, ticket: Ticket },
+    /// An immediate frame (reject, health reply, error).
+    Frame(Frame),
+    /// Last message: `graceful` closes with a `Shutdown` frame,
+    /// non-graceful closes cold.
+    Hangup { graceful: bool },
+}
+
+/// One connection: handshake, then read frames until EOF, error,
+/// timeout, or server drain. Spawns the writer thread and joins it
+/// before returning, so the connection's JoinHandle covers both.
+fn conn_loop(
+    mut stream: TcpStream,
+    client: DaemonClient,
+    cfg: NetConfig,
+    shutdown: Arc<AtomicBool>,
+    c: Arc<Counters>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.poll));
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+
+    // Handshake: the client leads with the preamble; we echo it back.
+    let mut pre = [0u8; PREAMBLE_LEN];
+    match read_full(&mut stream, &mut pre, Instant::now() + cfg.idle_timeout, Some(&shutdown)) {
+        ReadEnd::Done => {}
+        _ => {
+            c.handshake_failures.fetch_add(1, Ordering::Relaxed);
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+    }
+    if let Err((code, msg)) = proto::check_preamble(&pre) {
+        c.handshake_failures.fetch_add(1, Ordering::Relaxed);
+        let _ = write_frame(&mut stream, &Frame::Error { code, msg });
+        let _ = stream.shutdown(Shutdown::Both);
+        return;
+    }
+    if stream.write_all(&proto::encode_preamble()).is_err() {
+        c.handshake_failures.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+
+    let wstream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+    };
+    let (wtx, wrx) = channel::<WMsg>();
+    // Raised by the reader when the client is known gone or the
+    // connection is protocol-dead: the writer then resolves remaining
+    // tickets as disconnects instead of writing into the void.
+    let gone = Arc::new(AtomicBool::new(false));
+    // Responses owed on this connection — while nonzero, the idle
+    // reaper leaves a quiet (reading-only) client alone.
+    let owed = Arc::new(AtomicU64::new(0));
+    let writer = std::thread::Builder::new()
+        .name("bb-net-writer".to_string())
+        .spawn({
+            let c = Arc::clone(&c);
+            let gone = Arc::clone(&gone);
+            let owed = Arc::clone(&owed);
+            move || writer_loop(wstream, wrx, c, gone, owed)
+        });
+    let writer = match writer {
+        Ok(w) => w,
+        Err(_) => {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+    };
+
+    read_frames(&mut stream, &client, &cfg, &shutdown, &c, &wtx, &gone, &owed);
+
+    drop(wtx);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// The reader's frame loop. Terminal paths send their error frame (if
+/// any) and the final `Hangup`; the caller joins the writer.
+#[allow(clippy::too_many_arguments)]
+fn read_frames(
+    stream: &mut TcpStream,
+    client: &DaemonClient,
+    cfg: &NetConfig,
+    shutdown: &Arc<AtomicBool>,
+    c: &Arc<Counters>,
+    wtx: &Sender<WMsg>,
+    gone: &Arc<AtomicBool>,
+    owed: &Arc<AtomicU64>,
+) {
+    let fail = |frame: Option<Frame>| {
+        gone.store(true, Ordering::SeqCst);
+        if let Some(f) = frame {
+            let _ = wtx.send(WMsg::Frame(f));
+        }
+        let _ = wtx.send(WMsg::Hangup { graceful: false });
+    };
+    loop {
+        // Await the next frame's first byte. The idle clock only runs
+        // while nothing is owed: a client waiting on responses is not
+        // idle, it is reading.
+        let mut hdr = [0u8; HEADER_LEN];
+        let first = loop {
+            let idle = Instant::now() + cfg.idle_timeout;
+            let r = read_full(stream, &mut hdr[..1], idle, Some(shutdown));
+            if matches!(r, ReadEnd::TimedOut) && owed.load(Ordering::Relaxed) > 0 {
+                continue;
+            }
+            break r;
+        };
+        match first {
+            ReadEnd::Done => {}
+            ReadEnd::Eof { .. } | ReadEnd::Stopped => {
+                // Clean client EOF, or server drain: deliver what is
+                // owed, then a Shutdown frame.
+                let _ = wtx.send(WMsg::Hangup { graceful: true });
+                return;
+            }
+            ReadEnd::TimedOut => {
+                c.idle_closed.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("idle for {:?}", cfg.idle_timeout);
+                fail(Some(Frame::Error { code: ErrorCode::IdleTimeout, msg }));
+                return;
+            }
+            ReadEnd::Gone => {
+                fail(None);
+                return;
+            }
+        }
+
+        // A frame has started: everything else about it — header rest,
+        // payload — must land within frame_timeout (slowloris bound).
+        let frame_deadline = Instant::now() + cfg.frame_timeout;
+        match read_full(stream, &mut hdr[1..], frame_deadline, None) {
+            ReadEnd::Done => {}
+            ReadEnd::TimedOut => {
+                c.frame_timeouts.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("frame header incomplete after {:?}", cfg.frame_timeout);
+                fail(Some(Frame::Error { code: ErrorCode::FrameTimeout, msg }));
+                return;
+            }
+            ReadEnd::Eof { .. } => {
+                c.malformed.fetch_add(1, Ordering::Relaxed);
+                fail(Some(Frame::Error {
+                    code: ErrorCode::Malformed,
+                    msg: "connection closed mid-header".to_string(),
+                }));
+                return;
+            }
+            ReadEnd::Stopped | ReadEnd::Gone => {
+                fail(None);
+                return;
+            }
+        }
+        let header = match proto::decode_header(&hdr, cfg.max_frame) {
+            Ok(h) => h,
+            Err(e) => {
+                let len = u32::from_le_bytes([hdr[2], hdr[3], hdr[4], hdr[5]]);
+                let code = if len > cfg.max_frame {
+                    c.oversized.fetch_add(1, Ordering::Relaxed);
+                    ErrorCode::Oversized
+                } else {
+                    c.malformed.fetch_add(1, Ordering::Relaxed);
+                    ErrorCode::Malformed
+                };
+                fail(Some(Frame::Error { code, msg: e.0 }));
+                return;
+            }
+        };
+        let mut payload = vec![0u8; header.payload_len as usize];
+        match read_full(stream, &mut payload, frame_deadline, None) {
+            ReadEnd::Done => {}
+            ReadEnd::TimedOut => {
+                c.frame_timeouts.fetch_add(1, Ordering::Relaxed);
+                let msg = format!(
+                    "frame payload ({} bytes) incomplete after {:?}",
+                    header.payload_len, cfg.frame_timeout
+                );
+                fail(Some(Frame::Error { code: ErrorCode::FrameTimeout, msg }));
+                return;
+            }
+            ReadEnd::Eof { .. } => {
+                c.malformed.fetch_add(1, Ordering::Relaxed);
+                fail(Some(Frame::Error {
+                    code: ErrorCode::Malformed,
+                    msg: "connection closed mid-payload (torn frame)".to_string(),
+                }));
+                return;
+            }
+            ReadEnd::Stopped | ReadEnd::Gone => {
+                fail(None);
+                return;
+            }
+        }
+        let frame = match proto::decode_frame(&header, &payload) {
+            Ok(f) => f,
+            Err(e) => {
+                c.malformed.fetch_add(1, Ordering::Relaxed);
+                let code = if e.0.contains("checksum") {
+                    ErrorCode::BadChecksum
+                } else {
+                    ErrorCode::Malformed
+                };
+                fail(Some(Frame::Error { code, msg: e.0 }));
+                return;
+            }
+        };
+        c.frames_in.fetch_add(1, Ordering::Relaxed);
+
+        match frame {
+            Frame::Request(wr) => {
+                // Global in-flight cap: overload surfaces as a typed
+                // edge rejection, never as memory growth.
+                let cur = c.inflight.fetch_add(1, Ordering::SeqCst);
+                if cur >= cfg.max_inflight as u64 {
+                    c.inflight.fetch_sub(1, Ordering::SeqCst);
+                    c.rejected_inflight.fetch_add(1, Ordering::Relaxed);
+                    let _ = wtx.send(WMsg::Frame(Frame::Reject {
+                        corr: wr.corr,
+                        reason: Rejected::QueueFull,
+                    }));
+                    continue;
+                }
+                let WireRequest { corr, workload, deadline_ms, inputs } = wr;
+                let mut req = Request::new(workload, inputs.into_iter().collect());
+                if deadline_ms > 0 {
+                    req = req
+                        .with_deadline(Instant::now() + Duration::from_millis(deadline_ms as u64));
+                }
+                c.requests_in.fetch_add(1, Ordering::Relaxed);
+                owed.fetch_add(1, Ordering::SeqCst);
+                let ticket = client.submit(req);
+                let _ = wtx.send(WMsg::Ticket { corr, ticket });
+            }
+            Frame::Health => {
+                c.health_probes.fetch_add(1, Ordering::Relaxed);
+                let _ = wtx.send(WMsg::Frame(Frame::HealthReply(WireHealth {
+                    inflight: c.inflight.load(Ordering::Relaxed),
+                    requests_in: c.requests_in.load(Ordering::Relaxed),
+                    delivered: c.delivered.load(Ordering::Relaxed),
+                    draining: shutdown.load(Ordering::Relaxed),
+                })));
+            }
+            Frame::Shutdown => {
+                // Client-initiated half-close: no more requests, still
+                // reading. Drain what is owed and close politely.
+                let _ = wtx.send(WMsg::Hangup { graceful: true });
+                return;
+            }
+            Frame::Error { .. } => {
+                // The client is aborting; nothing further to say.
+                fail(None);
+                return;
+            }
+            Frame::Response(_) | Frame::Reject { .. } | Frame::HealthReply(_) => {
+                c.malformed.fetch_add(1, Ordering::Relaxed);
+                fail(Some(Frame::Error {
+                    code: ErrorCode::Malformed,
+                    msg: "client sent a server-only frame kind".to_string(),
+                }));
+                return;
+            }
+        }
+    }
+}
+
+/// The writer drains its channel in order: tickets resolve FIFO (so
+/// pipelined responses arrive in submission order), immediate frames go
+/// straight out, and the final `Hangup` decides between a `Shutdown`
+/// frame and a cold close. Every ticket decrements the global in-flight
+/// gauge exactly once, delivered or not.
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: Receiver<WMsg>,
+    c: Arc<Counters>,
+    gone: Arc<AtomicBool>,
+    owed: Arc<AtomicU64>,
+) {
+    let mut broken = false;
+    let mut graceful = false;
+    for msg in rx {
+        match msg {
+            WMsg::Ticket { corr, ticket } => {
+                if broken || gone.load(Ordering::Relaxed) {
+                    // Client is not coming back: resolve as a disconnect
+                    // without waiting (dropping the ticket is safe — the
+                    // daemon routes into a dropped receiver as a no-op).
+                    drop(ticket);
+                    owed.fetch_sub(1, Ordering::SeqCst);
+                    c.inflight.fetch_sub(1, Ordering::SeqCst);
+                    c.disconnected.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                let resp = ticket.wait();
+                owed.fetch_sub(1, Ordering::SeqCst);
+                c.inflight.fetch_sub(1, Ordering::SeqCst);
+                let frame = response_frame(corr, resp);
+                if write_frame(&mut stream, &frame).is_ok() {
+                    c.delivered.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    broken = true;
+                    c.disconnected.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            WMsg::Frame(f) => {
+                if !broken && write_frame(&mut stream, &f).is_err() {
+                    broken = true;
+                }
+            }
+            WMsg::Hangup { graceful: g } => {
+                graceful = g;
+            }
+        }
+    }
+    if graceful && !broken && write_frame(&mut stream, &Frame::Shutdown).is_ok() {
+        c.shutdown_frames.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Convert a daemon [`Response`] to its wire form. Outputs are sorted
+/// by name so the byte encoding is deterministic (the chaos suite's
+/// bit-identical comparisons hold across the socket).
+fn response_frame(corr: u64, resp: Response) -> Frame {
+    let mut outputs: Vec<(String, crate::tensor::Mat)> = resp.outputs.into_iter().collect();
+    outputs.sort_by(|a, b| a.0.cmp(&b.0));
+    Frame::Response(Box::new(WireResponse {
+        corr,
+        verdict: resp.verdict,
+        batch_size: resp.batch_size as u32,
+        coalesced: resp.coalesced,
+        queue_ns: resp.queue_ns.min(u64::MAX as u128) as u64,
+        exec_ns: resp.exec_ns.min(u64::MAX as u128) as u64,
+        mem: resp.mem,
+        outputs,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::client::{ClientConfig, NetClient};
+    use super::*;
+    use crate::serve::daemon::Daemon;
+    use crate::serve::{ModelServer, ServerConfig};
+
+    fn test_cfg() -> NetConfig {
+        NetConfig {
+            idle_timeout: Duration::from_millis(400),
+            frame_timeout: Duration::from_millis(200),
+            write_timeout: Duration::from_millis(200),
+            poll: Duration::from_millis(5),
+            ..NetConfig::default()
+        }
+    }
+
+    fn start_stack() -> (Daemon, NetServer) {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let daemon = Daemon::start(s, None);
+        let net = NetServer::start("127.0.0.1:0", daemon.client(), test_cfg()).unwrap();
+        (daemon, net)
+    }
+
+    fn drain(daemon: Daemon, net: NetServer) -> NetStats {
+        net.begin_shutdown();
+        daemon.shutdown();
+        net.shutdown()
+    }
+
+    #[test]
+    fn loopback_roundtrip_serves_and_reconciles() {
+        let (daemon, net) = start_stack();
+        let addr = net.local_addr().to_string();
+        let mut cli = NetClient::connect(&addr, ClientConfig::default()).unwrap();
+        for i in 0..3u64 {
+            let resp = cli.call_synthetic("quickstart", i, i).unwrap();
+            assert_eq!(resp.corr, i);
+            assert_eq!(resp.verdict, crate::serve::Verdict::Ok);
+            assert!(!resp.outputs.is_empty());
+        }
+        drop(cli);
+        let stats = drain(daemon, net);
+        assert_eq!(stats.requests_in, 3);
+        assert_eq!(stats.delivered, 3);
+        assert!(stats.reconciles(), "{stats:?}");
+    }
+
+    #[test]
+    fn bad_magic_is_rejected_at_the_handshake() {
+        let (daemon, net) = start_stack();
+        let mut raw = TcpStream::connect(net.local_addr()).unwrap();
+        raw.write_all(b"NOTBBP1!").unwrap();
+        let mut buf = Vec::new();
+        let _ = raw.read_to_end(&mut buf); // server errors (maybe) and closes
+        drop(raw);
+        // The server survives: a well-behaved client still gets served.
+        let addr = net.local_addr().to_string();
+        let mut cli = NetClient::connect(&addr, ClientConfig::default()).unwrap();
+        assert!(cli.call_synthetic("quickstart", 0, 9).is_ok());
+        drop(cli);
+        let stats = drain(daemon, net);
+        assert_eq!(stats.handshake_failures, 1);
+        assert!(stats.reconciles(), "{stats:?}");
+    }
+
+    #[test]
+    fn drain_sends_shutdown_frame_to_open_connections() {
+        let (daemon, net) = start_stack();
+        let addr = net.local_addr().to_string();
+        let mut cli = NetClient::connect(&addr, ClientConfig::default()).unwrap();
+        assert!(cli.call_synthetic("quickstart", 0, 1).is_ok());
+        net.begin_shutdown();
+        daemon.shutdown();
+        // The open, idle connection is told the server is going away.
+        let f = cli.recv().unwrap();
+        assert_eq!(f, Frame::Shutdown);
+        let stats = net.shutdown();
+        assert_eq!(stats.shutdown_frames, 1);
+        assert!(stats.reconciles(), "{stats:?}");
+    }
+}

@@ -1,0 +1,775 @@
+//! The versioned, length-prefixed binary wire protocol of the serving
+//! daemon's TCP ingress (`serve::net`).
+//!
+//! **Connection preamble.** A client opens with 8 bytes — [`MAGIC`]
+//! (`u32` LE), [`VERSION`] (`u16` LE), two reserved zero bytes — and the
+//! server echoes the same 8 bytes back on acceptance. A bad magic or an
+//! unsupported version gets a typed [`Frame::Error`] and a close; random
+//! port scanners never reach the frame layer.
+//!
+//! **Frames.** Everything after the preamble is length-prefixed frames:
+//!
+//! ```text
+//! [kind u8][reserved u8][payload_len u32 LE][checksum u32 LE] payload…
+//! ```
+//!
+//! The checksum is FNV-1a over the payload, so a torn or corrupted
+//! frame is detected before any payload byte is interpreted. Payloads
+//! above the connection's frame-size cap are rejected from the header
+//! alone (the payload is never read into memory). Decoding is strict:
+//! every decoder must consume its payload exactly — trailing bytes,
+//! truncated fields, and unknown tags are all typed errors, never
+//! panics ([`ProtoError`]).
+//!
+//! Frame kinds: `Request` (client → server, one inference request),
+//! `Response` (server → client, the daemon's verdict + outputs +
+//! traffic counters), `Reject` (server → client, a network-edge
+//! rejection that never reached the daemon — e.g. the global in-flight
+//! cap), `Health`/`HealthReply` (liveness probe), `Error` (fatal
+//! protocol violation; the connection closes after), and `Shutdown`
+//! (server → client: graceful drain — no further responses follow).
+
+use crate::loopir::interp::MemSim;
+use crate::serve::{Rejected, Verdict};
+use crate::tensor::Mat;
+use std::fmt;
+
+/// `"BBP1"` — Blockbuster protocol, generation 1.
+pub const MAGIC: u32 = 0x4231_5042;
+/// Bumped on any incompatible frame-layout change; the preamble
+/// handshake rejects mismatches before any frame is parsed.
+pub const VERSION: u16 = 1;
+/// Connection preamble length: magic + version + 2 reserved bytes.
+pub const PREAMBLE_LEN: usize = 8;
+/// Frame header length: kind + reserved + payload len + checksum.
+pub const HEADER_LEN: usize = 10;
+/// Default hard cap on one frame's payload (16 MiB) — an adversarial
+/// length prefix must not be able to make the server allocate.
+pub const DEFAULT_MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// A decode/validation failure. Always a typed error — the protocol
+/// layer never panics on wire bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProtoError(pub String);
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "protocol error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+fn perr<T>(msg: impl Into<String>) -> Result<T, ProtoError> {
+    Err(ProtoError(msg.into()))
+}
+
+/// FNV-1a over `bytes` — the frame payload checksum. Not cryptographic;
+/// it exists to catch torn writes and corruption, not tampering.
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Why the server is terminating a connection (carried in
+/// [`Frame::Error`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    BadMagic,
+    BadVersion,
+    BadChecksum,
+    Oversized,
+    Malformed,
+    IdleTimeout,
+    FrameTimeout,
+    TooManyConnections,
+    Internal,
+}
+
+impl ErrorCode {
+    fn to_u8(self) -> u8 {
+        match self {
+            ErrorCode::BadMagic => 1,
+            ErrorCode::BadVersion => 2,
+            ErrorCode::BadChecksum => 3,
+            ErrorCode::Oversized => 4,
+            ErrorCode::Malformed => 5,
+            ErrorCode::IdleTimeout => 6,
+            ErrorCode::FrameTimeout => 7,
+            ErrorCode::TooManyConnections => 8,
+            ErrorCode::Internal => 9,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<ErrorCode, ProtoError> {
+        Ok(match b {
+            1 => ErrorCode::BadMagic,
+            2 => ErrorCode::BadVersion,
+            3 => ErrorCode::BadChecksum,
+            4 => ErrorCode::Oversized,
+            5 => ErrorCode::Malformed,
+            6 => ErrorCode::IdleTimeout,
+            7 => ErrorCode::FrameTimeout,
+            8 => ErrorCode::TooManyConnections,
+            9 => ErrorCode::Internal,
+            other => return perr(format!("unknown error code {other}")),
+        })
+    }
+}
+
+/// One inference request on the wire. `corr` is the client's own
+/// correlation id, echoed verbatim on the matching [`WireResponse`] /
+/// [`Frame::Reject`]; the server's internal request ids never leak.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub corr: u64,
+    pub workload: String,
+    /// Relative deadline in milliseconds from server-side admission
+    /// (0 = none) — wall-clock instants do not cross machines.
+    pub deadline_ms: u32,
+    /// Named program inputs, in the order the client wrote them.
+    pub inputs: Vec<(String, Mat)>,
+}
+
+/// One served response on the wire: the daemon's verdict plus outputs
+/// and the request's own traffic counters (the serving layer's
+/// sequential-parity contract crosses the socket intact).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResponse {
+    pub corr: u64,
+    pub verdict: Verdict,
+    pub batch_size: u32,
+    pub coalesced: bool,
+    pub queue_ns: u64,
+    pub exec_ns: u64,
+    pub mem: MemSim,
+    pub outputs: Vec<(String, Mat)>,
+}
+
+/// The [`Frame::HealthReply`] payload: a cheap liveness probe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireHealth {
+    /// Requests currently in flight through this ingress.
+    pub inflight: u64,
+    /// Requests admitted into the daemon since the server started.
+    pub requests_in: u64,
+    /// Responses delivered to clients since the server started.
+    pub delivered: u64,
+    /// Whether the server is draining (shutdown in progress).
+    pub draining: bool,
+}
+
+/// Every frame the protocol can carry. See the module docs for the
+/// direction and lifecycle of each kind.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Request(WireRequest),
+    Response(Box<WireResponse>),
+    /// A network-edge rejection that never reached the daemon (e.g. the
+    /// global in-flight cap): the request identified by `corr` was shed
+    /// with this typed reason.
+    Reject { corr: u64, reason: Rejected },
+    Health,
+    HealthReply(WireHealth),
+    /// Fatal, connection-scoped: the peer violated the protocol (or
+    /// timed out); the sender closes the connection after this frame.
+    Error { code: ErrorCode, msg: String },
+    /// Graceful drain: no further responses will be sent.
+    Shutdown,
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Request(_) => 1,
+            Frame::Response(_) => 2,
+            Frame::Reject { .. } => 3,
+            Frame::Health => 4,
+            Frame::HealthReply(_) => 5,
+            Frame::Error { .. } => 6,
+            Frame::Shutdown => 7,
+        }
+    }
+}
+
+fn rejected_to_u8(r: Rejected) -> u8 {
+    match r {
+        Rejected::QueueFull => 1,
+        Rejected::Shutdown => 2,
+        Rejected::DeadlineExpired => 3,
+    }
+}
+
+fn rejected_from_u8(b: u8) -> Result<Rejected, ProtoError> {
+    Ok(match b {
+        1 => Rejected::QueueFull,
+        2 => Rejected::Shutdown,
+        3 => Rejected::DeadlineExpired,
+        other => return perr(format!("unknown rejection tag {other}")),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        let b = s.as_bytes();
+        // Length-capped at u16: workload names and error messages are
+        // short; anything longer is truncated rather than rejected.
+        let n = b.len().min(u16::MAX as usize);
+        self.u16(n as u16);
+        self.buf.extend_from_slice(&b[..n]);
+    }
+
+    fn mat(&mut self, m: &Mat) {
+        self.u32(m.rows as u32);
+        self.u32(m.cols as u32);
+        for v in &m.data {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn mem(&mut self, m: &MemSim) {
+        self.u64(m.loaded_bytes);
+        self.u64(m.stored_bytes);
+        self.u64(m.n_loads);
+        self.u64(m.n_stores);
+        self.u64(m.peak_local_bytes);
+        self.u64(m.kernel_launches);
+        self.u64(m.flops);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Decoding (strict: bounds-checked, and the frame decoder verifies the
+// payload was consumed exactly)
+// ---------------------------------------------------------------------
+
+struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        match self.b.get(self.i..self.i + n) {
+            Some(s) => {
+                self.i += n;
+                Ok(s)
+            }
+            None => perr(format!(
+                "truncated payload: wanted {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len()
+            )),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtoError> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        let s = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn str(&mut self) -> Result<String, ProtoError> {
+        let n = self.u16()? as usize;
+        let s = self.take(n)?;
+        match std::str::from_utf8(s) {
+            Ok(s) => Ok(s.to_string()),
+            Err(_) => perr("non-UTF8 string field"),
+        }
+    }
+
+    fn mat(&mut self) -> Result<Mat, ProtoError> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        // The element count is validated against the *remaining* payload
+        // before allocating, so a lying rows/cols pair cannot force a
+        // huge allocation: the frame-size cap already bounded the bytes.
+        let n = rows.checked_mul(cols).ok_or_else(|| ProtoError("matrix size overflow".into()))?;
+        let need = n.checked_mul(4).ok_or_else(|| ProtoError("matrix size overflow".into()))?;
+        if self.b.len() - self.i < need {
+            return perr(format!(
+                "matrix claims {rows}x{cols} ({need} bytes) but only {} remain",
+                self.b.len() - self.i
+            ));
+        }
+        let s = self.take(need)?;
+        let mut data = Vec::with_capacity(n);
+        for chunk in s.chunks_exact(4) {
+            data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    fn mem(&mut self) -> Result<MemSim, ProtoError> {
+        Ok(MemSim {
+            loaded_bytes: self.u64()?,
+            stored_bytes: self.u64()?,
+            n_loads: self.u64()?,
+            n_stores: self.u64()?,
+            peak_local_bytes: self.u64()?,
+            kernel_launches: self.u64()?,
+            flops: self.u64()?,
+        })
+    }
+
+    fn finish(self) -> Result<(), ProtoError> {
+        if self.i != self.b.len() {
+            return perr(format!(
+                "trailing payload bytes: consumed {}, frame carried {}",
+                self.i,
+                self.b.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Preamble
+// ---------------------------------------------------------------------
+
+/// The 8-byte connection preamble both sides exchange.
+pub fn encode_preamble() -> [u8; PREAMBLE_LEN] {
+    let mut b = [0u8; PREAMBLE_LEN];
+    b[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    b[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    b
+}
+
+/// Validate a received preamble. Distinguishes bad magic (not our
+/// protocol at all) from a version mismatch (our protocol, wrong
+/// generation) so the error frame can say which.
+pub fn check_preamble(b: &[u8; PREAMBLE_LEN]) -> Result<(), (ErrorCode, String)> {
+    let magic = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    if magic != MAGIC {
+        return Err((ErrorCode::BadMagic, format!("bad magic {magic:#010x}")));
+    }
+    let version = u16::from_le_bytes([b[4], b[5]]);
+    if version != VERSION {
+        return Err((
+            ErrorCode::BadVersion,
+            format!("unsupported protocol version {version} (want {VERSION})"),
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Frame encode/decode
+// ---------------------------------------------------------------------
+
+/// Encode one frame (header + checksummed payload) into a byte vector.
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    let mut e = Enc::new();
+    match f {
+        Frame::Request(r) => {
+            e.u64(r.corr);
+            e.u32(r.deadline_ms);
+            e.str(&r.workload);
+            e.u16(r.inputs.len().min(u16::MAX as usize) as u16);
+            for (name, m) in &r.inputs {
+                e.str(name);
+                e.mat(m);
+            }
+        }
+        Frame::Response(r) => {
+            e.u64(r.corr);
+            match &r.verdict {
+                Verdict::Ok => e.u8(0),
+                Verdict::Rejected(rej) => e.u8(rejected_to_u8(*rej)),
+                Verdict::Failed(msg) => {
+                    e.u8(4);
+                    e.str(msg);
+                }
+            }
+            e.u32(r.batch_size);
+            e.u8(r.coalesced as u8);
+            e.u64(r.queue_ns);
+            e.u64(r.exec_ns);
+            e.mem(&r.mem);
+            e.u16(r.outputs.len().min(u16::MAX as usize) as u16);
+            for (name, m) in &r.outputs {
+                e.str(name);
+                e.mat(m);
+            }
+        }
+        Frame::Reject { corr, reason } => {
+            e.u64(*corr);
+            e.u8(rejected_to_u8(*reason));
+        }
+        Frame::Health => {}
+        Frame::HealthReply(h) => {
+            e.u64(h.inflight);
+            e.u64(h.requests_in);
+            e.u64(h.delivered);
+            e.u8(h.draining as u8);
+        }
+        Frame::Error { code, msg } => {
+            e.u8(code.to_u8());
+            e.str(msg);
+        }
+        Frame::Shutdown => {}
+    }
+    let payload = e.buf;
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.push(f.kind());
+    out.push(0); // reserved
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&checksum(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// A parsed frame header: the payload length/checksum still pending.
+#[derive(Clone, Copy, Debug)]
+pub struct Header {
+    pub kind: u8,
+    pub payload_len: u32,
+    pub checksum: u32,
+}
+
+/// Parse and validate a frame header against the frame-size cap. The
+/// payload has not been read yet — an oversized frame is rejected here,
+/// before any allocation.
+pub fn decode_header(b: &[u8; HEADER_LEN], max_frame: u32) -> Result<Header, ProtoError> {
+    let kind = b[0];
+    if !(1..=7).contains(&kind) {
+        return perr(format!("unknown frame kind {kind}"));
+    }
+    let payload_len = u32::from_le_bytes([b[2], b[3], b[4], b[5]]);
+    if payload_len > max_frame {
+        return perr(format!("frame payload {payload_len} exceeds cap {max_frame}"));
+    }
+    let cks = u32::from_le_bytes([b[6], b[7], b[8], b[9]]);
+    Ok(Header { kind, payload_len, checksum: cks })
+}
+
+/// Decode one frame body. The payload must checksum-match the header
+/// and every decoder must consume it exactly.
+pub fn decode_frame(h: &Header, payload: &[u8]) -> Result<Frame, ProtoError> {
+    if payload.len() != h.payload_len as usize {
+        return perr("payload length mismatch");
+    }
+    if checksum(payload) != h.checksum {
+        return perr("payload checksum mismatch (torn or corrupted frame)");
+    }
+    let mut d = Dec::new(payload);
+    let f = match h.kind {
+        1 => {
+            let corr = d.u64()?;
+            let deadline_ms = d.u32()?;
+            let workload = d.str()?;
+            let n = d.u16()? as usize;
+            let mut inputs = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                let name = d.str()?;
+                let m = d.mat()?;
+                inputs.push((name, m));
+            }
+            Frame::Request(WireRequest { corr, workload, deadline_ms, inputs })
+        }
+        2 => {
+            let corr = d.u64()?;
+            let verdict = match d.u8()? {
+                0 => Verdict::Ok,
+                4 => Verdict::Failed(d.str()?),
+                tag => Verdict::Rejected(rejected_from_u8(tag)?),
+            };
+            let batch_size = d.u32()?;
+            let coalesced = d.u8()? != 0;
+            let queue_ns = d.u64()?;
+            let exec_ns = d.u64()?;
+            let mem = d.mem()?;
+            let n = d.u16()? as usize;
+            let mut outputs = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                let name = d.str()?;
+                let m = d.mat()?;
+                outputs.push((name, m));
+            }
+            Frame::Response(Box::new(WireResponse {
+                corr,
+                verdict,
+                batch_size,
+                coalesced,
+                queue_ns,
+                exec_ns,
+                mem,
+                outputs,
+            }))
+        }
+        3 => {
+            let corr = d.u64()?;
+            let reason = rejected_from_u8(d.u8()?)?;
+            Frame::Reject { corr, reason }
+        }
+        4 => Frame::Health,
+        5 => {
+            let inflight = d.u64()?;
+            let requests_in = d.u64()?;
+            let delivered = d.u64()?;
+            let draining = d.u8()? != 0;
+            Frame::HealthReply(WireHealth { inflight, requests_in, delivered, draining })
+        }
+        6 => {
+            let code = ErrorCode::from_u8(d.u8()?)?;
+            let msg = d.str()?;
+            Frame::Error { code, msg }
+        }
+        7 => Frame::Shutdown,
+        other => return perr(format!("unknown frame kind {other}")),
+    };
+    d.finish()?;
+    Ok(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn roundtrip(f: Frame) {
+        let bytes = encode_frame(&f);
+        let mut hdr = [0u8; HEADER_LEN];
+        hdr.copy_from_slice(&bytes[..HEADER_LEN]);
+        let h = decode_header(&hdr, DEFAULT_MAX_FRAME).unwrap();
+        let got = decode_frame(&h, &bytes[HEADER_LEN..]).unwrap();
+        assert_eq!(got, f);
+    }
+
+    #[test]
+    fn frames_roundtrip_bit_exact() {
+        let mut rng = Rng::new(7);
+        let m = rng.mat(3, 5);
+        roundtrip(Frame::Request(WireRequest {
+            corr: 42,
+            workload: "quickstart".into(),
+            deadline_ms: 250,
+            inputs: vec![("A".into(), m.clone()), ("B".into(), rng.mat(2, 2))],
+        }));
+        roundtrip(Frame::Response(Box::new(WireResponse {
+            corr: 42,
+            verdict: Verdict::Ok,
+            batch_size: 4,
+            coalesced: true,
+            queue_ns: 123,
+            exec_ns: 456,
+            mem: MemSim {
+                loaded_bytes: 1,
+                stored_bytes: 2,
+                n_loads: 3,
+                n_stores: 4,
+                peak_local_bytes: 5,
+                kernel_launches: 6,
+                flops: 7,
+            },
+            outputs: vec![("Y".into(), m)],
+        })));
+        roundtrip(Frame::Response(Box::new(WireResponse {
+            corr: 1,
+            verdict: Verdict::Failed("injected compute fault".into()),
+            batch_size: 0,
+            coalesced: false,
+            queue_ns: 0,
+            exec_ns: 0,
+            mem: MemSim::default(),
+            outputs: vec![],
+        })));
+        roundtrip(Frame::Reject { corr: 9, reason: Rejected::QueueFull });
+        roundtrip(Frame::Health);
+        roundtrip(Frame::HealthReply(WireHealth {
+            inflight: 3,
+            requests_in: 10,
+            delivered: 7,
+            draining: false,
+        }));
+        roundtrip(Frame::Error { code: ErrorCode::BadChecksum, msg: "torn".into() });
+        roundtrip(Frame::Shutdown);
+    }
+
+    #[test]
+    fn nan_and_inf_survive_the_wire_bit_exact() {
+        let m = Mat { rows: 1, cols: 4, data: vec![f32::NAN, f32::INFINITY, -0.0, 1.5e-42] };
+        let f = Frame::Request(WireRequest {
+            corr: 0,
+            workload: "w".into(),
+            deadline_ms: 0,
+            inputs: vec![("X".into(), m.clone())],
+        });
+        let bytes = encode_frame(&f);
+        let mut hdr = [0u8; HEADER_LEN];
+        hdr.copy_from_slice(&bytes[..HEADER_LEN]);
+        let h = decode_header(&hdr, DEFAULT_MAX_FRAME).unwrap();
+        let Frame::Request(r) = decode_frame(&h, &bytes[HEADER_LEN..]).unwrap() else {
+            panic!("wrong frame kind");
+        };
+        let got = &r.inputs[0].1;
+        assert_eq!(got.rows, 1);
+        for (a, b) in got.data.iter().zip(&m.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "wire transport must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn preamble_checks_magic_and_version() {
+        let good = encode_preamble();
+        assert!(check_preamble(&good).is_ok());
+        let mut bad = good;
+        bad[0] ^= 0xff;
+        assert_eq!(check_preamble(&bad).unwrap_err().0, ErrorCode::BadMagic);
+        let mut wrong_ver = good;
+        wrong_ver[4] = 99;
+        assert_eq!(check_preamble(&wrong_ver).unwrap_err().0, ErrorCode::BadVersion);
+    }
+
+    #[test]
+    fn oversized_frames_rejected_from_the_header_alone() {
+        let mut hdr = [0u8; HEADER_LEN];
+        hdr[0] = 1; // Request
+        hdr[2..6].copy_from_slice(&(1_000_000u32).to_le_bytes());
+        assert!(decode_header(&hdr, 1_000_000).is_ok());
+        let err = decode_header(&hdr, 999_999).unwrap_err();
+        assert!(err.0.contains("exceeds cap"), "got: {}", err.0);
+    }
+
+    #[test]
+    fn corrupted_and_truncated_frames_are_typed_errors() {
+        let f = Frame::Reject { corr: 5, reason: Rejected::QueueFull };
+        let bytes = encode_frame(&f);
+        let mut hdr = [0u8; HEADER_LEN];
+        hdr.copy_from_slice(&bytes[..HEADER_LEN]);
+        let h = decode_header(&hdr, DEFAULT_MAX_FRAME).unwrap();
+
+        // checksum mismatch (one flipped payload bit)
+        let mut torn = bytes[HEADER_LEN..].to_vec();
+        torn[0] ^= 1;
+        let err = decode_frame(&h, &torn).unwrap_err();
+        assert!(err.0.contains("checksum"), "got: {}", err.0);
+
+        // truncated payload
+        let err = decode_frame(&h, &bytes[HEADER_LEN..bytes.len() - 1]).unwrap_err();
+        assert!(err.0.contains("length mismatch"), "got: {}", err.0);
+
+        // unknown kind
+        let mut bad_kind = hdr;
+        bad_kind[0] = 200;
+        assert!(decode_header(&bad_kind, DEFAULT_MAX_FRAME).is_err());
+    }
+
+    #[test]
+    fn trailing_payload_bytes_are_rejected() {
+        // A Shutdown frame carries no payload; hand-build one that does.
+        let payload = vec![0u8; 3];
+        let h = Header { kind: 7, payload_len: 3, checksum: checksum(&payload) };
+        let err = decode_frame(&h, &payload).unwrap_err();
+        assert!(err.0.contains("trailing"), "got: {}", err.0);
+    }
+
+    #[test]
+    fn lying_matrix_dims_cannot_force_allocation() {
+        // A request whose matrix header claims 1e9 elements but whose
+        // payload holds none: rejected by the remaining-bytes check.
+        let mut e = Vec::new();
+        e.extend_from_slice(&0u64.to_le_bytes()); // corr
+        e.extend_from_slice(&0u32.to_le_bytes()); // deadline
+        e.extend_from_slice(&1u16.to_le_bytes()); // workload len
+        e.push(b'w');
+        e.extend_from_slice(&1u16.to_le_bytes()); // one input
+        e.extend_from_slice(&1u16.to_le_bytes()); // name len
+        e.push(b'X');
+        e.extend_from_slice(&1_000_000_000u32.to_le_bytes()); // rows
+        e.extend_from_slice(&1_000_000_000u32.to_le_bytes()); // cols
+        let h = Header { kind: 1, payload_len: e.len() as u32, checksum: checksum(&e) };
+        let err = decode_frame(&h, &e).unwrap_err();
+        assert!(
+            err.0.contains("overflow") || err.0.contains("remain"),
+            "got: {}",
+            err.0
+        );
+    }
+
+    #[test]
+    fn decoder_survives_seeded_random_bytes() {
+        // The decoder must return typed errors on arbitrary input, never
+        // panic: fully random headers+payloads, and single-bit mutations
+        // of a valid frame (which exercise the deep payload parsers past
+        // the checksum only when the flip lands in the header).
+        let mut rng = Rng::new(0xf4a3);
+        let iters = std::env::var("BB_FUZZ_ITERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(500);
+        let valid = encode_frame(&Frame::Reject { corr: 1, reason: Rejected::QueueFull });
+        for _ in 0..iters {
+            let mut hdr = [0u8; HEADER_LEN];
+            for b in hdr.iter_mut() {
+                *b = rng.next_u64() as u8;
+            }
+            if let Ok(h) = decode_header(&hdr, 4096) {
+                let payload: Vec<u8> =
+                    (0..h.payload_len as usize).map(|_| rng.next_u64() as u8).collect();
+                let _ = decode_frame(&h, &payload);
+            }
+
+            let mut mutated = valid.clone();
+            let i = rng.below(mutated.len());
+            mutated[i] ^= 1 << rng.below(8);
+            let mut hdr = [0u8; HEADER_LEN];
+            hdr.copy_from_slice(&mutated[..HEADER_LEN]);
+            if let Ok(h) = decode_header(&hdr, DEFAULT_MAX_FRAME) {
+                let _ = decode_frame(&h, &mutated[HEADER_LEN..]);
+            }
+        }
+    }
+}

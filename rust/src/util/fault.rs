@@ -22,13 +22,25 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Instrumented fault sites. Keeping the site explicit lets tests (and
 /// future per-site rates) distinguish compute-path panics from pool
-/// worker deaths.
+/// worker deaths and network-edge misbehavior.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Site {
     /// A batch's compute task (serve's `run_batch` launch body).
     Compute,
     /// A pool worker thread (dies after job check-in; pool respawns it).
     PoolWorker,
+    /// A network client tears a frame write in half and vanishes
+    /// mid-frame (`serve::net::client` request path) — the server must
+    /// time the torn frame out or reject it, never hang or panic.
+    NetTornWrite,
+    /// A network client stalls before reading a queued response
+    /// (`serve::net::client` receive path) — the server's reply path
+    /// must tolerate a reader that is arbitrarily slow.
+    NetStallRead,
+    /// A network client drops its connection after submitting but
+    /// before collecting replies — the server must resolve the orphaned
+    /// in-flight tickets as disconnects, not leak them.
+    NetDisconnect,
 }
 
 /// Fault probability in parts-per-million (0 = disabled, the default).

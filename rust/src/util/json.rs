@@ -2,9 +2,22 @@
 //!
 //! Supports the full JSON value grammar minus exotic number forms; good
 //! enough for `artifacts/manifest.json` and report emission.
+//!
+//! The parser is hardened for untrusted input — bench/stats files now
+//! cross process boundaries (CI artifacts, the serving CLI), so it must
+//! degrade to typed errors, never panics or stack overflows: trailing
+//! garbage is rejected, nesting is capped at [`MAX_DEPTH`], truncated
+//! escapes are bounds-checked, and [`Json::parse_bytes`] validates
+//! UTF-8 before the grammar ever sees the bytes. The seeded fuzz tests
+//! below pin all of that.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum container nesting the parser accepts. Deeper input is a
+/// typed error instead of unbounded recursion (each level is one
+/// [`Parser::value`] stack frame).
+pub const MAX_DEPTH: usize = 128;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -23,12 +36,21 @@ impl Json {
             i: 0,
         };
         p.ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.ws();
         if p.i != p.b.len() {
             return Err(format!("trailing data at byte {}", p.i));
         }
         Ok(v)
+    }
+
+    /// Parse raw bytes (a file or socket payload): UTF-8 is validated
+    /// up front, so malformed encodings are a typed error before the
+    /// grammar ever runs.
+    pub fn parse_bytes(b: &[u8]) -> Result<Json, String> {
+        let s = std::str::from_utf8(b)
+            .map_err(|e| format!("invalid UTF-8 at byte {}", e.valid_up_to()))?;
+        Json::parse(s)
     }
 
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
@@ -98,10 +120,13 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.i));
+        }
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -159,8 +184,13 @@ impl<'a> Parser<'a> {
                         Some(b'\\') => out.push('\\'),
                         Some(b'/') => out.push('/'),
                         Some(b'u') => {
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| "bad \\u escape")?;
+                            // `.get` (not a slice): a `\u` cut off by
+                            // end-of-input must error, not panic.
+                            let hex = self
+                                .b
+                                .get(self.i + 1..self.i + 5)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or("truncated \\u escape")?;
                             let cp =
                                 u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
                             out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
@@ -184,7 +214,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
         self.expect(b'[')?;
         let mut v = Vec::new();
         self.ws();
@@ -194,7 +224,7 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.ws();
-            v.push(self.value()?);
+            v.push(self.value(depth + 1)?);
             self.ws();
             match self.peek() {
                 Some(b',') => self.i += 1,
@@ -207,7 +237,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
@@ -221,7 +251,7 @@ impl<'a> Parser<'a> {
             self.ws();
             self.expect(b':')?;
             self.ws();
-            let v = self.value()?;
+            let v = self.value(depth + 1)?;
             m.insert(k, v);
             self.ws();
             match self.peek() {
@@ -333,5 +363,75 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn truncated_unicode_escape_is_an_error_not_a_panic() {
+        // Regression: the escape used to slice `b[i+1..i+5]` and panic
+        // when the input ended inside the escape.
+        assert!(Json::parse("\"\\u12").is_err());
+        assert!(Json::parse("\"\\u").is_err());
+        assert!(Json::parse("\"\\uZZZZ\"").is_err());
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+        // Unpaired surrogates degrade to the replacement character.
+        assert_eq!(Json::parse("\"\\uD800\"").unwrap(), Json::Str("\u{FFFD}".into()));
+    }
+
+    #[test]
+    fn deep_nesting_is_a_typed_error_not_a_stack_overflow() {
+        let deep = "[".repeat(4096);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.contains("nesting deeper"), "got: {err}");
+        let mixed = "{\"a\":".repeat(4096);
+        assert!(Json::parse(&mixed).unwrap_err().contains("nesting deeper"));
+        // At or under the cap still parses.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn parse_bytes_rejects_non_utf8_gracefully() {
+        let err = Json::parse_bytes(b"{\"a\": \xff\xfe}").unwrap_err();
+        assert!(err.contains("invalid UTF-8"), "got: {err}");
+        assert_eq!(Json::parse_bytes(b"[1, 2]").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    /// Seeded fuzz: the parser must return (Ok or Err) on arbitrary
+    /// garbage — never panic, never overflow the stack. Two streams:
+    /// token soup assembled from JSON-ish fragments, and byte-level
+    /// mutations/truncations of a valid document. `BB_FUZZ_ITERS`
+    /// scales the effort (CI raises it).
+    #[test]
+    fn fuzz_malformed_inputs_never_panic() {
+        let iters: u64 = std::env::var("BB_FUZZ_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(200);
+        let mut state: u64 = 0x6a50_4a51;
+        let mut next = move || {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let fragments: &[&str] = &[
+            "{", "}", "[", "]", ",", ":", "\"", "\\", "\\u", "\\u12", "null", "true", "false",
+            "tru", "-", "1.5e", "e+3", "9", "0.0", " ", "\n", "\"k\"", "\u{2603}",
+        ];
+        let valid = r#"{"rows":[{"name":"serve","ns":[1,2,3]},{"name":"net","ns":[4.5e1,-0]}]}"#;
+        for _ in 0..iters {
+            // Token soup.
+            let n = 1 + (next() % 24) as usize;
+            let soup: String = (0..n)
+                .map(|_| fragments[next() as usize % fragments.len()])
+                .collect();
+            let _ = Json::parse(&soup);
+            // Mutate one byte of a valid doc and truncate it somewhere.
+            let mut bytes = valid.as_bytes().to_vec();
+            let flip = next() as usize % bytes.len();
+            bytes[flip] ^= (1 + next() % 255) as u8;
+            bytes.truncate(1 + next() as usize % bytes.len());
+            let _ = Json::parse_bytes(&bytes);
+        }
     }
 }

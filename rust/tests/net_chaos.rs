@@ -1,0 +1,509 @@
+//! Chaos suite for the TCP ingress (`serve::net`): a real loopback
+//! socket abused every way the ISSUE's acceptance bar demands.
+//!
+//! Invariants pinned here, per scenario:
+//!
+//! * Malformed bytes (unknown kinds, oversized length prefixes,
+//!   checksum corruption, torn frames, wrong protocol version) get a
+//!   *typed* error frame and a close — never a panic, never a hang —
+//!   and the server keeps serving well-behaved clients afterwards.
+//! * Slow clients are bounded: a trickled frame dies at
+//!   `frame_timeout`, a silent connection at `idle_timeout`.
+//! * Surviving responses are **bit-identical** over the wire to an
+//!   independent sequential execution of the same inputs.
+//! * The edge ledger reconciles exactly: every admitted request
+//!   resolves as delivered or disconnected, overflow beyond the
+//!   in-flight cap gets typed rejects, and the daemon's own
+//!   `accounted() == submitted` holds underneath it all.
+//!
+//! The fault injector is process-global (and its rate applies to every
+//! site, including the daemon's compute path), so armed sections
+//! tolerate `Failed("injected …")` verdicts and every test serializes
+//! behind one lock, same as `tests/serve_chaos.rs`.
+
+use blockbuster::coordinator::{compile, execute_plan_opts, workloads, PlanRun};
+use blockbuster::exec::ExecBackend;
+use blockbuster::serve::daemon::Daemon;
+use blockbuster::serve::net::client::{synthetic_request, BackoffConfig, ClientConfig, NetClient};
+use blockbuster::serve::net::proto::{self, ErrorCode, Frame, WireResponse};
+use blockbuster::serve::net::{NetConfig, NetServer, NetStats};
+use blockbuster::serve::{ModelServer, Rejected, ServerConfig, Verdict};
+use blockbuster::tensor::Mat;
+use blockbuster::util::fault;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Serialize every test in this binary: the fault injector is
+/// process-global, and socket-timing assertions dislike CPU contention.
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// RAII arming: disarms the global injector even if the test unwinds.
+struct FaultGuard;
+
+impl FaultGuard {
+    fn arm(rate: f64, seed: u64) -> FaultGuard {
+        fault::set(rate, seed);
+        FaultGuard
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        fault::off();
+    }
+}
+
+fn env_rate(default: f64) -> f64 {
+    std::env::var("BB_FAULT_RATE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_iters(default: usize) -> usize {
+    std::env::var("BB_CHAOS_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Per-test timeout knobs: only the reaper test uses tight clocks —
+/// everywhere else generous timeouts keep a CI scheduling stall from
+/// reaping a healthy connection mid-assertion.
+fn net_cfg(max_inflight: usize, idle: Duration, frame: Duration) -> NetConfig {
+    NetConfig {
+        max_inflight,
+        idle_timeout: idle,
+        frame_timeout: frame,
+        write_timeout: Duration::from_millis(500),
+        poll: Duration::from_millis(5),
+        ..NetConfig::default()
+    }
+}
+
+/// The lenient variant for tests not exercising the reapers.
+fn lenient_cfg(max_inflight: usize) -> NetConfig {
+    net_cfg(max_inflight, Duration::from_secs(10), Duration::from_secs(2))
+}
+
+fn client_cfg() -> ClientConfig {
+    ClientConfig {
+        read_timeout: Duration::from_secs(10),
+        backoff: BackoffConfig {
+            attempts: 3,
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(20),
+        },
+        ..ClientConfig::default()
+    }
+}
+
+fn start_stack(max_wait: Duration, cfg: NetConfig) -> (Daemon, NetServer) {
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(1),
+        max_batch: 4,
+        max_wait,
+        coalesce: false,
+        ..ServerConfig::default()
+    });
+    server.register("quickstart").unwrap();
+    let daemon = Daemon::start(server, None);
+    let net = NetServer::start("127.0.0.1:0", daemon.client(), cfg).unwrap();
+    (daemon, net)
+}
+
+/// Graceful drain in the documented order; returns both ledgers.
+fn drain(daemon: Daemon, net: NetServer) -> (ModelServer, NetStats) {
+    net.begin_shutdown();
+    let server = daemon.shutdown();
+    let stats = net.shutdown();
+    (server, stats)
+}
+
+/// A raw (non-`NetClient`) socket with bounded reads, for speaking
+/// deliberately broken protocol.
+fn raw(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s
+}
+
+fn handshake_raw(addr: SocketAddr) -> TcpStream {
+    let mut s = raw(addr);
+    s.write_all(&proto::encode_preamble()).unwrap();
+    let mut echo = [0u8; proto::PREAMBLE_LEN];
+    s.read_exact(&mut echo).unwrap();
+    assert!(proto::check_preamble(&echo).is_ok());
+    s
+}
+
+fn read_frame_raw(s: &mut TcpStream) -> Frame {
+    let mut hdr = [0u8; proto::HEADER_LEN];
+    s.read_exact(&mut hdr).unwrap();
+    let header = proto::decode_header(&hdr, proto::DEFAULT_MAX_FRAME).unwrap();
+    let mut payload = vec![0u8; header.payload_len as usize];
+    s.read_exact(&mut payload).unwrap();
+    proto::decode_frame(&header, &payload).unwrap()
+}
+
+fn expect_error(s: &mut TcpStream) -> ErrorCode {
+    match read_frame_raw(s) {
+        Frame::Error { code, .. } => code,
+        other => panic!("expected an Error frame, got {other:?}"),
+    }
+}
+
+/// Independent ground truth: one-shot compile + sequential execution of
+/// the exact inputs `synthetic_request` sends for each seed.
+fn ground_truth(seeds: &[u64]) -> Vec<PlanRun> {
+    let (p, cfg, params, _) = workloads::by_name("quickstart", 0).unwrap();
+    let compiled = compile(&p, cfg.clone());
+    seeds
+        .iter()
+        .map(|&seed| {
+            let (_, _, _, inputs) = workloads::by_name("quickstart", seed).unwrap();
+            execute_plan_opts(
+                &compiled.plan,
+                &cfg.sizes,
+                &params,
+                &inputs,
+                ExecBackend::Compiled,
+                Some(1),
+            )
+        })
+        .collect()
+}
+
+/// Bit-identity of a wire response against sequential ground truth
+/// (same field set as `tests/serve_chaos.rs`; `peak_local_bytes` is the
+/// one counter the engine does not pin across fan-outs).
+fn assert_wire_matches(i: u64, r: &WireResponse, seq: &PlanRun) {
+    assert_eq!(r.outputs.len(), seq.outputs.len(), "request {i}: output set size");
+    for (name, m) in &r.outputs {
+        assert_eq!(
+            bits(m),
+            bits(&seq.outputs[name]),
+            "request {i}: output {name} not bit-identical over the wire"
+        );
+    }
+    assert_eq!(r.mem.loaded_bytes, seq.mem.loaded_bytes, "request {i}: loads");
+    assert_eq!(r.mem.stored_bytes, seq.mem.stored_bytes, "request {i}: stores");
+    assert_eq!(r.mem.n_loads, seq.mem.n_loads, "request {i}: n_loads");
+    assert_eq!(r.mem.n_stores, seq.mem.n_stores, "request {i}: n_stores");
+    assert_eq!(r.mem.kernel_launches, seq.mem.kernel_launches, "request {i}: launches");
+    assert_eq!(r.mem.flops, seq.mem.flops, "request {i}: flops");
+}
+
+/// Every class of malformed bytes gets its typed error code and a
+/// close, the counters attribute each one correctly, and a well-behaved
+/// client is served immediately afterwards.
+#[test]
+fn malformed_frames_get_typed_errors_and_the_server_survives() {
+    let _l = chaos_lock();
+    let (daemon, net) = start_stack(Duration::from_millis(1), lenient_cfg(64));
+    let addr = net.local_addr();
+
+    // Wrong protocol version: rejected at the handshake, typed.
+    let mut s = raw(addr);
+    let mut pre = proto::encode_preamble();
+    pre[4] = 0xff;
+    s.write_all(&pre).unwrap();
+    assert_eq!(expect_error(&mut s), ErrorCode::BadVersion);
+    drop(s);
+
+    // Unknown frame kind.
+    let mut s = handshake_raw(addr);
+    s.write_all(&[99u8, 0, 0, 0, 0, 0, 0, 0, 0, 0]).unwrap();
+    assert_eq!(expect_error(&mut s), ErrorCode::Malformed);
+    drop(s);
+
+    // Adversarial length prefix: refused from the header alone.
+    let mut s = handshake_raw(addr);
+    let mut hdr = [0u8; proto::HEADER_LEN];
+    hdr[0] = 1;
+    hdr[2..6].copy_from_slice(&u32::MAX.to_le_bytes());
+    s.write_all(&hdr).unwrap();
+    assert_eq!(expect_error(&mut s), ErrorCode::Oversized);
+    drop(s);
+
+    // Corrupted checksum field on an otherwise valid frame.
+    let mut s = handshake_raw(addr);
+    let mut bytes = proto::encode_frame(&Frame::Health);
+    bytes[6] ^= 0xff;
+    s.write_all(&bytes).unwrap();
+    assert_eq!(expect_error(&mut s), ErrorCode::BadChecksum);
+    drop(s);
+
+    // Torn frame: a valid request minus its last byte, then FIN.
+    let mut s = handshake_raw(addr);
+    let req = synthetic_request("quickstart", 0, 0).unwrap();
+    let bytes = proto::encode_frame(&Frame::Request(req));
+    s.write_all(&bytes[..bytes.len() - 1]).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    assert_eq!(expect_error(&mut s), ErrorCode::Malformed);
+    drop(s);
+
+    // The server took five kinds of abuse; a real client is unfazed.
+    let mut cli = NetClient::connect(&addr.to_string(), client_cfg()).unwrap();
+    let resp = cli.call_synthetic("quickstart", 7, 7).unwrap();
+    assert_eq!(resp.verdict, Verdict::Ok);
+    drop(cli);
+
+    let (_server, stats) = drain(daemon, net);
+    assert_eq!(stats.handshake_failures, 1, "{stats:?}");
+    assert_eq!(stats.malformed, 3, "{stats:?}");
+    assert_eq!(stats.oversized, 1, "{stats:?}");
+    assert_eq!(stats.requests_in, 1);
+    assert_eq!(stats.delivered, 1);
+    assert!(stats.reconciles(), "{stats:?}");
+}
+
+/// Slow-client defense: a trickled frame is closed at `frame_timeout`,
+/// a fully silent connection at `idle_timeout` — both with typed error
+/// frames, both without collateral damage to a healthy client.
+#[test]
+fn slowloris_and_idle_connections_are_reaped() {
+    let _l = chaos_lock();
+    let cfg = net_cfg(64, Duration::from_millis(300), Duration::from_millis(150));
+    let (daemon, net) = start_stack(Duration::from_millis(1), cfg);
+    let addr = net.local_addr();
+
+    // Slowloris: start a frame, send three header bytes, stall.
+    let mut trickler = handshake_raw(addr);
+    trickler.write_all(&[1u8, 0, 0]).unwrap();
+    let t0 = Instant::now();
+    assert_eq!(expect_error(&mut trickler), ErrorCode::FrameTimeout);
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "frame timeout must fire promptly, waited {:?}",
+        t0.elapsed()
+    );
+    drop(trickler);
+
+    // Fully quiet connection: reaped by the idle clock.
+    let mut silent = handshake_raw(addr);
+    let t0 = Instant::now();
+    assert_eq!(expect_error(&mut silent), ErrorCode::IdleTimeout);
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "idle reaper must fire promptly, waited {:?}",
+        t0.elapsed()
+    );
+    drop(silent);
+
+    let mut cli = NetClient::connect(&addr.to_string(), client_cfg()).unwrap();
+    assert_eq!(cli.call_synthetic("quickstart", 0, 3).unwrap().verdict, Verdict::Ok);
+    drop(cli);
+
+    let (_server, stats) = drain(daemon, net);
+    assert_eq!(stats.frame_timeouts, 1, "{stats:?}");
+    assert_eq!(stats.idle_closed, 1, "{stats:?}");
+    assert!(stats.reconciles(), "{stats:?}");
+}
+
+/// Pipelining: many requests in flight on one connection come back in
+/// submission order, every payload bit-identical to an independent
+/// sequential execution of the same inputs.
+#[test]
+fn pipelined_responses_are_bit_identical_to_sequential() {
+    let _l = chaos_lock();
+    let (daemon, net) = start_stack(Duration::from_millis(1), lenient_cfg(64));
+    let n = 8u64;
+    let seeds: Vec<u64> = (0..n).map(|i| 1_000 + i).collect();
+    let expected = ground_truth(&seeds);
+
+    let mut cli = NetClient::connect(&net.local_addr().to_string(), client_cfg()).unwrap();
+    for (i, &seed) in seeds.iter().enumerate() {
+        let req = synthetic_request("quickstart", i as u64, seed).unwrap();
+        cli.send(&req).unwrap();
+    }
+    for i in 0..n {
+        match cli.recv().unwrap() {
+            Frame::Response(r) => {
+                assert_eq!(r.corr, i, "pipelined responses must arrive in submission order");
+                assert_eq!(r.verdict, Verdict::Ok);
+                assert_wire_matches(i, &r, &expected[i as usize]);
+            }
+            other => panic!("request {i}: unexpected frame {other:?}"),
+        }
+    }
+    drop(cli);
+
+    let (server, stats) = drain(daemon, net);
+    assert_eq!(stats.requests_in, n);
+    assert_eq!(stats.delivered, n);
+    assert!(stats.reconciles(), "{stats:?}");
+    let st = &server.stats().per_program["quickstart"];
+    assert_eq!(st.submitted, n);
+    assert_eq!(st.accounted(), st.submitted);
+}
+
+/// A storm past the in-flight cap: overflow gets immediate typed
+/// `Reject(QueueFull)` frames at the edge (never touching the daemon),
+/// admitted work survives the drain, and a post-drain connect is
+/// refused.
+#[test]
+fn inflight_cap_rejects_overflow_and_drain_serves_the_rest() {
+    let _l = chaos_lock();
+    // max_wait far in the future: admitted requests park in the queue,
+    // holding the in-flight gauge up until the drain flushes them.
+    let (daemon, net) = start_stack(Duration::from_secs(3600), lenient_cfg(2));
+    let addr = net.local_addr().to_string();
+
+    let mut cli = NetClient::connect(&addr, client_cfg()).unwrap();
+    for i in 0..5u64 {
+        let req = synthetic_request("quickstart", i, 3_000 + i).unwrap();
+        cli.send(&req).unwrap();
+    }
+    // Wait for the reader to classify the whole burst before draining.
+    let t0 = Instant::now();
+    loop {
+        let s = net.stats();
+        if s.requests_in + s.rejected_inflight >= 5 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "ingress never admitted the burst: {s:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    net.begin_shutdown();
+    let server = daemon.shutdown();
+    // Responses resolve FIFO: the two admitted requests (served by the
+    // graceful drain), then the three edge rejections, then Shutdown.
+    for i in 0..2u64 {
+        match cli.recv().unwrap() {
+            Frame::Response(r) => {
+                assert_eq!(r.corr, i);
+                assert_eq!(r.verdict, Verdict::Ok, "drain must serve admitted work");
+            }
+            other => panic!("request {i}: unexpected frame {other:?}"),
+        }
+    }
+    for i in 2..5u64 {
+        match cli.recv().unwrap() {
+            Frame::Reject { corr, reason } => {
+                assert_eq!(corr, i);
+                assert_eq!(reason, Rejected::QueueFull);
+            }
+            other => panic!("request {i}: unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(cli.recv().unwrap(), Frame::Shutdown);
+    drop(cli);
+
+    let stats = net.shutdown();
+    assert_eq!(stats.requests_in, 2, "{stats:?}");
+    assert_eq!(stats.delivered, 2, "{stats:?}");
+    assert_eq!(stats.rejected_inflight, 3, "{stats:?}");
+    assert!(stats.reconciles(), "{stats:?}");
+    let st = &server.stats().per_program["quickstart"];
+    assert_eq!(st.submitted, 2, "edge rejections must never reach the daemon");
+    assert_eq!(st.accounted(), st.submitted);
+
+    // The ingress is gone: a fresh connect exhausts its backoff.
+    assert!(
+        NetClient::connect(&addr, client_cfg()).is_err(),
+        "connect must fail after the ingress shut down"
+    );
+}
+
+/// The acceptance scenario: a client stream under injected torn writes,
+/// stalled reads, and mid-request disconnects (plus the injector's
+/// usual compute panics server-side). No panic, no hang, surviving
+/// responses bit-identical, and both ledgers — edge and daemon —
+/// reconcile exactly.
+#[test]
+fn injected_network_faults_reconcile_exactly() {
+    let _l = chaos_lock();
+    let n = env_iters(36);
+    let rate = env_rate(0.2);
+    let (daemon, net) = start_stack(Duration::from_millis(1), lenient_cfg(64));
+    let addr = net.local_addr().to_string();
+    let seeds: Vec<u64> = (0..n as u64).map(|i| 2_000 + i).collect();
+    let expected = ground_truth(&seeds);
+
+    let mut cli = NetClient::connect(&addr, client_cfg()).unwrap();
+    let guard = FaultGuard::arm(rate, 0x4e7f);
+    let mut admitted = 0u64;
+    let mut oks = 0u64;
+    let mut torn = 0u64;
+    let mut aborted = 0u64;
+    for i in 0..n as u64 {
+        let req = synthetic_request("quickstart", i, seeds[i as usize]).unwrap();
+        match cli.send(&req) {
+            Ok(()) => admitted += 1,
+            Err(e) if e.kind() == ErrorKind::BrokenPipe => {
+                // Torn write: the frame never arrived whole, so the
+                // request was never admitted. Reconnect, move on.
+                torn += 1;
+                cli.reconnect().expect("reconnect after torn write");
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::ConnectionAborted => {
+                // Written in full, then vanished: admitted server-side,
+                // where it must resolve as a disconnect — not a leak.
+                admitted += 1;
+                aborted += 1;
+                cli.reconnect().expect("reconnect after disconnect");
+                continue;
+            }
+            Err(e) => panic!("request {i}: unexpected send error: {e}"),
+        }
+        match cli.recv() {
+            Ok(Frame::Response(r)) => {
+                assert_eq!(r.corr, i);
+                match &r.verdict {
+                    Verdict::Ok => {
+                        oks += 1;
+                        assert_wire_matches(i, &r, &expected[i as usize]);
+                    }
+                    Verdict::Failed(msg) => {
+                        assert!(msg.contains("injected"), "request {i}: leaked failure: {msg}");
+                    }
+                    Verdict::Rejected(rej) => panic!("request {i}: unexpected rejection {rej:?}"),
+                }
+            }
+            Ok(other) => panic!("request {i}: unexpected frame {other:?}"),
+            Err(e) => {
+                // Response fate unknown (the contract for recv errors):
+                // the ledgers absorb it as delivered-or-disconnected.
+                cli.reconnect().unwrap_or_else(|r| panic!("request {i}: recv {e}, reconnect {r}"));
+            }
+        }
+    }
+    drop(guard);
+    drop(cli);
+
+    let (server, stats) = drain(daemon, net);
+    assert_eq!(
+        stats.requests_in, admitted,
+        "edge admissions must match the client's error-kind contract: {stats:?}"
+    );
+    assert_eq!(stats.malformed, torn, "each torn write is one torn frame: {stats:?}");
+    assert!(stats.reconciles(), "{stats:?}");
+    let st = &server.stats().per_program["quickstart"];
+    assert_eq!(st.submitted, admitted, "every admitted request reached the daemon");
+    assert_eq!(st.served + st.failed, st.submitted);
+    assert_eq!(st.accounted(), st.submitted, "daemon ledger must reconcile under net faults");
+    assert!(oks <= st.served, "client cannot observe more successes than were served");
+    if rate >= 0.2 && n >= 30 {
+        assert!(
+            torn + aborted >= 1,
+            "rate {rate} over {n} requests injected no network faults"
+        );
+        assert!(oks >= 1, "rate {rate} should leave some survivors");
+    }
+}

@@ -19,8 +19,8 @@
 
 use blockbuster::coordinator::{compile, execute_plan_opts, execute_prepared, workloads, PlanRun};
 use blockbuster::exec::{pool, ExecBackend};
-use blockbuster::serve::daemon::{Daemon, RetuneConfig, Ticket};
-use blockbuster::serve::{ModelServer, Request, Response, ServerConfig, Verdict};
+use blockbuster::serve::daemon::{Daemon, RetuneConfig, Ticket, INVALID_ID};
+use blockbuster::serve::{ModelServer, Rejected, Request, Response, ServerConfig, Verdict};
 use blockbuster::tensor::Mat;
 use blockbuster::util::fault;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -359,6 +359,101 @@ fn hot_swap_between_batches_stays_bit_identical() {
     assert_eq!(st.compiles, 1, "hot-swapping must never recompile the workload");
     assert_eq!(st.served, 12);
     assert_eq!(st.accounted(), st.submitted);
+}
+
+/// `Daemon::shutdown` racing concurrent `DaemonClient::submit` calls
+/// from many threads. Every ticket must resolve — served, or a typed
+/// `Rejected::Shutdown` — and the ledger must reconcile exactly:
+/// responses carrying a real id are precisely the ones the server
+/// counted (`submitted`), self-replies from an already-gone daemon
+/// carry `INVALID_ID` and stay off the ledger, and
+/// `accounted() == submitted` holds either way.
+#[test]
+fn shutdown_racing_concurrent_submits_reconciles_exactly() {
+    let _l = chaos_lock();
+    let program = "quickstart";
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(1),
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        coalesce: false,
+        ..ServerConfig::default()
+    });
+    server.register(program).unwrap();
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 12;
+    let warm = Request::new(program, server.synthetic_inputs(program, 8_999).unwrap());
+    let mut batches: Vec<Vec<Request>> = Vec::new();
+    for t in 0..THREADS as u64 {
+        let mut reqs = Vec::with_capacity(PER_THREAD);
+        for i in 0..PER_THREAD as u64 {
+            let inputs = server.synthetic_inputs(program, 9_000 + t * 100 + i).unwrap();
+            reqs.push(Request::new(program, inputs));
+        }
+        batches.push(reqs);
+    }
+
+    let daemon = Daemon::start(server, None);
+    // Warmup: one request served end-to-end before the race begins, so
+    // "at least one served" is guaranteed rather than timing-dependent.
+    let first = daemon.client().submit(warm).wait();
+    assert!(first.is_ok(), "warmup must serve: {:?}", first.verdict);
+
+    let mut handles = Vec::new();
+    for (t, reqs) in batches.into_iter().enumerate() {
+        let client = daemon.client();
+        handles.push(std::thread::spawn(move || {
+            let mut resolved = Vec::with_capacity(PER_THREAD);
+            for (i, req) in reqs.into_iter().enumerate() {
+                let ticket = client.submit(req);
+                // Stagger a little so submissions straddle the shutdown.
+                if i % 3 == t % 3 {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                resolved.push(ticket.wait());
+            }
+            resolved
+        }));
+    }
+    // Let some racing traffic land, then yank the daemon mid-stream.
+    std::thread::sleep(Duration::from_millis(2));
+    let server = daemon.shutdown();
+
+    let mut ok = 0u64;
+    let mut rejected_ledger = 0u64;
+    let mut rejected_client = 0u64;
+    for h in handles {
+        for r in h.join().expect("submitter thread must not panic") {
+            match &r.verdict {
+                Verdict::Ok => ok += 1,
+                Verdict::Rejected(Rejected::Shutdown) => {
+                    if r.id == INVALID_ID {
+                        // Daemon already gone: client-side self-reply.
+                        rejected_client += 1;
+                    } else {
+                        // Raced the drain: the server saw and counted it.
+                        rejected_ledger += 1;
+                    }
+                }
+                other => panic!("unexpected verdict racing shutdown: {other:?}"),
+            }
+        }
+    }
+    assert_eq!(
+        ok + rejected_ledger + rejected_client,
+        (THREADS * PER_THREAD) as u64,
+        "every ticket must resolve"
+    );
+    let st = &server.stats().per_program[program];
+    assert_eq!(st.served, ok + 1, "every Ok response (plus warmup) is a served ledger entry");
+    assert_eq!(st.rejected_shutdown, rejected_ledger);
+    assert_eq!(
+        st.submitted,
+        ok + 1 + rejected_ledger,
+        "the ledger covers exactly the ids it issued"
+    );
+    assert_eq!(st.accounted(), st.submitted, "shutdown race must reconcile exactly");
 }
 
 /// The daemon's own re-tune path (`--retune-every`): measured re-tuning
