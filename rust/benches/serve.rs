@@ -1,7 +1,9 @@
 //! Bench: the compile-once serving layer (`serve::ModelServer`) —
 //! closed-loop throughput and end-to-end latency at dynamic batch sizes
 //! 1/4/16 on one workload, coalesced (stacked-launch) vs fanned
-//! execution of the same batched stream, a mixed 3-workload round-robin
+//! execution of the same batched stream, a ragged mixed-length stream
+//! (shape-bucketed + padded stacking vs own-length fan-out), a mixed
+//! 3-workload round-robin
 //! stream, the compile-amortization ratio (how many served requests
 //! pay back one `coordinator::compile` + plan prepare), *open-loop*
 //! arrival curves through the daemon (p50/p95/p99 + shed counts at
@@ -16,12 +18,13 @@
 //! pace arrivals independently of completions, which is what actually
 //! separates an overloaded server from a busy one.
 
+use blockbuster::coordinator::plan_stack_info;
 use blockbuster::exec::ExecBackend;
 use blockbuster::serve::daemon::{Daemon, Ticket};
 use blockbuster::serve::net::client::{synthetic_request, ClientConfig, NetClient};
 use blockbuster::serve::net::proto::Frame;
 use blockbuster::serve::net::{NetConfig, NetServer};
-use blockbuster::serve::{ModelServer, Request, Response, ServerConfig, Verdict};
+use blockbuster::serve::{BucketLadder, ModelServer, Request, Response, ServerConfig, Verdict};
 use blockbuster::util::bench::{percentile, write_json_report, Table};
 use blockbuster::util::fault;
 use blockbuster::util::json::Json;
@@ -152,6 +155,73 @@ fn main() {
     ct.print();
     let coalesce_speedup = rps_by_mode[1] / rps_by_mode[0];
     println!("coalesce_speedup: {coalesce_speedup:.2}x (stacked vs fanned throughput)");
+
+    // ---- ragged stream: shape-bucketed coalescing vs fan-out ----------
+    // Requests differ along the stackable grid dim (trips cycle 1..=R).
+    // Coalesced mode buckets them under the max ladder and pads each to
+    // the bucket edge (pad waste charged separately as `padded_flops`);
+    // fanned mode executes each request alone at its own length.
+    let mut rt = Table::new(
+        &format!("Ragged {program}, max_batch 16, {n_requests} requests, trips 1..=R"),
+        &["mode", "throughput", "stacked batches", "pad flops"],
+    );
+    let mut ragged_rows = Vec::new();
+    let mut ragged_rps_by_mode = [f64::NAN; 2];
+    for (mi, coalesce) in [false, true].into_iter().enumerate() {
+        let mut server = ModelServer::new(ServerConfig {
+            backend: ExecBackend::Compiled,
+            threads: None,
+            max_batch: 16,
+            max_wait: Duration::from_secs(3600),
+            coalesce,
+            buckets: BucketLadder::Max,
+            pad: coalesce,
+            ..ServerConfig::default()
+        });
+        server.register(program).unwrap();
+        let trip = plan_stack_info(&server.live_plan(program).unwrap())
+            .expect("bench workload must stack")
+            .trip;
+        for i in 0..16u64 {
+            server.submit_synthetic_ragged(program, i, 1 + (i as usize % trip)).unwrap();
+        }
+        server.drain();
+        let (warm_stacked, warm_pad) = {
+            let st = &server.stats().per_program[program];
+            (st.stacked_batches, st.padded_flops)
+        };
+        let t1 = Instant::now();
+        for i in 0..n_requests as u64 {
+            let r = 1 + (i as usize % trip);
+            server.submit_synthetic_ragged(program, 70_000 + i, r).unwrap();
+        }
+        let responses = server.drain();
+        let wall = t1.elapsed();
+        assert_eq!(responses.len(), n_requests);
+        let st = &server.stats().per_program[program];
+        let stacked_batches = st.stacked_batches - warm_stacked;
+        let pad_flops = st.padded_flops - warm_pad;
+        if coalesce {
+            assert!(stacked_batches > 0, "ragged coalescing must engage on {program}");
+        }
+        let rps = n_requests as f64 / wall.as_secs_f64();
+        ragged_rps_by_mode[mi] = rps;
+        rt.row(vec![
+            if coalesce { "coalesced" } else { "fanned" }.to_string(),
+            format!("{rps:.0} req/s"),
+            stacked_batches.to_string(),
+            pad_flops.to_string(),
+        ]);
+        ragged_rows.push(Json::obj(vec![
+            ("coalesce", Json::Bool(coalesce)),
+            ("throughput_rps", Json::Num(rps)),
+            ("stacked_batches", Json::Num(stacked_batches as f64)),
+            ("padded_flops", Json::Num(pad_flops as f64)),
+        ]));
+    }
+    rt.print();
+    let ragged_speedup = ragged_rps_by_mode[1] / ragged_rps_by_mode[0];
+    println!("ragged_speedup: {ragged_speedup:.2}x (bucketed stacked vs fanned, mixed lengths)");
 
     // ---- mixed 3-workload round-robin stream --------------------------
     let mix = ["quickstart", "attention", "rmsnorm_ffn_swiglu"];
@@ -379,6 +449,10 @@ fn main() {
         // batched stream (throughput ratio; >1 means coalescing wins)
         ("coalesce_speedup", Json::Num(coalesce_speedup)),
         ("coalesce_rows", Json::Arr(coalesce_rows)),
+        // mixed-length (ragged) stream: shape-bucketed stacked launches
+        // with pad-to-bucket vs per-request fan-out at own length
+        ("ragged_speedup", Json::Num(ragged_speedup)),
+        ("ragged_rows", Json::Arr(ragged_rows)),
         (
             "mixed",
             Json::obj(vec![

@@ -25,7 +25,8 @@ pub mod workloads;
 
 use crate::cost::CostModel;
 use crate::exec::{
-    exec_ir, from_blocks, stack_blocks, to_blocks, unstack_blocks, ExecBackend, TapeCache,
+    exec_ir, from_blocks, stack_blocks_ragged, to_blocks, unstack_blocks_range, ExecBackend,
+    TapeCache,
 };
 use crate::ir::dim::{Dim, DimSizes};
 use crate::ir::graph::Graph;
@@ -35,7 +36,7 @@ use crate::loopir::lower::lower;
 use crate::loopir::LoopIr;
 use crate::lower::lower_array;
 use crate::select::{select, SelectCtx, SelectionPlan, ValueRef};
-use crate::tensor::Mat;
+use crate::tensor::{Mat, Val};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::Arc;
 
@@ -325,14 +326,18 @@ pub fn unstacked_inputs(prepared: &PreparedPlan, info: &StackInfo) -> BTreeSet<S
     out
 }
 
-/// A [`PreparedPlan`] re-bound for stacked execution at one batch size:
-/// the enlarged `DimSizes` (`dim -> batch · trip`) plus, on the
+/// A [`PreparedPlan`] re-bound for stacked execution at one **total
+/// trip**: the enlarged `DimSizes` (`dim -> total_trip`) plus, on the
 /// compiled backend, each segment's tape skeleton re-bound to it. No
 /// compilation happens here — skeletons were cached by
 /// [`prepare_plan`]; this is only the cheap bind phase, so servers can
-/// afford one per observed batch size.
+/// afford one per observed total trip (for a uniform batch of `b`
+/// registered-shape requests, `total_trip == b · info.trip`; ragged
+/// batches sum their per-request trips plus any pad blocks).
 pub struct StackedPlan {
-    pub batch: usize,
+    /// Total block count along `info.dim` this bind was sized for —
+    /// the sum of every request's trip plus pad blocks.
+    pub total_trip: usize,
     pub info: StackInfo,
     pub sizes: DimSizes,
     /// Tape binds this stacked re-bind performed (== compiled segments;
@@ -342,13 +347,73 @@ pub struct StackedPlan {
     tapes: Vec<Option<CompiledProgram>>,
 }
 
-/// Bind `prepared` for stacked execution of `batch` requests (see
-/// [`StackedPlan`]). `info` must come from [`plan_stack_info`] on the
-/// same plan.
+/// How a stacked launch is carved into per-request slices along the
+/// stack dim. `trips[r]` is request `r`'s own block count; `pads[r]`
+/// is the number of zero pad blocks appended after it to reach its
+/// bucket edge (all zeros when padding is off). Pad blocks execute —
+/// their traffic lands in the launch's aggregate — but are attributed
+/// to the aggregate's `padded_*` counters, never to a request.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StackSpec {
+    pub trips: Vec<usize>,
+    pub pads: Vec<usize>,
+}
+
+impl StackSpec {
+    /// Spec for a uniform batch: every request at the registered trip,
+    /// no padding.
+    pub fn uniform(batch: usize, trip: usize) -> StackSpec {
+        StackSpec {
+            trips: vec![trip; batch],
+            pads: vec![0; batch],
+        }
+    }
+
+    /// Total block count along the stack dim (requests + pads) — the
+    /// `total_trip` the launch's [`StackedPlan`] must be bound at.
+    pub fn total_trip(&self) -> usize {
+        self.trips.iter().sum::<usize>() + self.pads.iter().sum::<usize>()
+    }
+
+    /// Pad blocks across the whole batch.
+    pub fn pad_trip(&self) -> usize {
+        self.pads.iter().sum()
+    }
+
+    /// Executor slice widths: `[trip_0, pad_0, trip_1, pad_1, …]` —
+    /// slice `2r` is request `r`, slice `2r+1` its pad run (width 0
+    /// charges nothing and takes no launch).
+    pub fn widths(&self) -> Vec<usize> {
+        let mut w = Vec::with_capacity(2 * self.trips.len());
+        for (t, p) in self.trips.iter().zip(&self.pads) {
+            w.push(*t);
+            w.push(*p);
+        }
+        w
+    }
+}
+
+/// Bind `prepared` for stacked execution of a uniform batch of `batch`
+/// registered-shape requests (see [`StackedPlan`]). `info` must come
+/// from [`plan_stack_info`] on the same plan.
 pub fn bind_stacked(prepared: &PreparedPlan, info: &StackInfo, batch: usize) -> StackedPlan {
     assert!(batch >= 1, "bind_stacked: empty batch");
+    bind_stacked_trip(prepared, info, info.trip * batch)
+}
+
+/// Bind `prepared` for stacked execution at an arbitrary `total_trip`
+/// along the stack dim — the ragged generalisation of [`bind_stacked`].
+/// Any partition of `total_trip` into request trips and pads (a
+/// [`StackSpec`] with matching [`StackSpec::total_trip`]) can execute
+/// on this bind.
+pub fn bind_stacked_trip(
+    prepared: &PreparedPlan,
+    info: &StackInfo,
+    total_trip: usize,
+) -> StackedPlan {
+    assert!(total_trip >= 1, "bind_stacked_trip: empty stack");
     let mut sizes = prepared.sizes.clone();
-    sizes.set(info.dim.clone(), info.trip * batch);
+    sizes.set(info.dim.clone(), total_trip);
     let tapes: Vec<Option<CompiledProgram>> = prepared
         .segments
         .iter()
@@ -356,12 +421,42 @@ pub fn bind_stacked(prepared: &PreparedPlan, info: &StackInfo, batch: usize) -> 
         .collect();
     let binds = tapes.iter().filter(|t| t.is_some()).count() as u64;
     StackedPlan {
-        batch,
+        total_trip,
         info: info.clone(),
         sizes,
         binds,
         tapes,
     }
+}
+
+/// For each program input that carries the stack dim: which matrix
+/// axis (0 = rows, 1 = cols) it stacks along. Inputs absent from the
+/// map are the shared weight-like operands of [`unstacked_inputs`].
+/// The serving layer uses this to derive a ragged request's trip from
+/// its input extents.
+pub fn stacked_input_axes(prepared: &PreparedPlan, info: &StackInfo) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for seg in &prepared.segments {
+        for (label, vref) in &seg.inputs {
+            if let ValueRef::ProgramInput(name) = vref {
+                let decl = seg
+                    .ir
+                    .bufs
+                    .iter()
+                    .find(|b| b.name == *label)
+                    .expect("wired segment input is declared");
+                if let Some(axis) = decl.dims.iter().position(|d| *d == info.dim) {
+                    if let Some(prev) = out.insert(name.clone(), axis) {
+                        assert_eq!(
+                            prev, axis,
+                            "program input {name} stacked on inconsistent axes"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    out
 }
 
 /// Result of a stacked batch execution: one [`PlanRun`] per request
@@ -379,44 +474,111 @@ pub struct BatchRun {
     pub agg: MemSim,
 }
 
-/// Execute one **stacked launch** for a batch of same-shape requests:
-/// each request's `dim`-carrying inputs are stacked along that axis of
-/// the block grid (pointer moves — payload blocks are `Arc`-shared),
-/// shared weight operands are bound once, every segment runs as a
-/// single enlarged tape execution across the full worker budget, and
-/// outputs are de-stacked per request. Per-request `MemSim` counters
-/// come from the executor's grid-slice attribution
-/// (`ExecConfig::slices`), so each response's traffic is bit-identical
-/// to a sequential run of that request alone.
+/// Execute one **stacked launch** for a uniform batch of
+/// registered-shape requests — the common fast path, equivalent to
+/// [`execute_prepared_stacked_spec`] with [`StackSpec::uniform`].
 ///
 /// Caller contract (the serving layer enforces both): `stacked` was
-/// bound from this `prepared` at `inputs.len()`, and every input named
-/// by [`unstacked_inputs`] is bit-identical across the batch.
+/// bound from this `prepared` at `inputs.len()` requests, and every
+/// input named by [`unstacked_inputs`] is bit-identical across the
+/// batch.
 pub fn execute_prepared_stacked(
     prepared: &PreparedPlan,
     stacked: &StackedPlan,
     inputs: &[&HashMap<String, Mat>],
     threads: Option<usize>,
 ) -> BatchRun {
-    let b = stacked.batch;
+    let spec = StackSpec::uniform(inputs.len(), stacked.info.trip);
+    execute_prepared_stacked_spec(prepared, stacked, &spec, inputs, threads)
+}
+
+/// Build a grid of zero blocks shaped like `part`'s, `pad` wide along
+/// `axis` — the pad run appended after a ragged request to reach its
+/// bucket edge. `to_blocks` splits evenly, so every block in `part`
+/// shares one shape; clone-on-`Arc` keeps this O(pad · grid) pointers
+/// plus a single zero payload.
+fn pad_blocks(part: &BufVal, axis: usize, pad: usize) -> BufVal {
+    let (bh, bw) = match part.data.first().and_then(|v| v.as_deref()) {
+        Some(Val::Block(m)) => (m.rows, m.cols),
+        _ => panic!("pad_blocks: request part has no payload block"),
+    };
+    let zero = Arc::new(Val::Block(Mat::zeros(bh, bw)));
+    let mut dims = part.dims.clone();
+    dims[axis] = pad;
+    let mut bv = BufVal::new(dims.clone());
+    let n: usize = dims.iter().product();
+    for i in 0..n {
+        bv.data[i] = Some(zero.clone());
+    }
+    bv
+}
+
+/// Execute one **stacked launch** for a (possibly ragged) batch: each
+/// request's `dim`-carrying inputs are blocked at its own trip
+/// (`spec.trips[r]`) and stacked along that axis of the block grid
+/// (pointer moves — payload blocks are `Arc`-shared), `spec.pads[r]`
+/// zero blocks follow each request when padding to a bucket edge,
+/// shared weight operands are bound once, every segment runs as a
+/// single enlarged tape execution across the full worker budget, and
+/// outputs are de-stacked per request at its own range. Per-request
+/// `MemSim` counters come from the executor's variable-width
+/// grid-slice attribution (`ExecConfig::slices`), so each response's
+/// traffic is bit-identical to a sequential run of that request alone
+/// at its own size. Pad slices execute for real — their traffic is in
+/// the aggregate's totals — and are additionally broken out in the
+/// aggregate's `padded_loaded_bytes` / `padded_stored_bytes` /
+/// `padded_flops`, so `agg.loaded_bytes == Σ per-request loaded_bytes
+/// + agg.padded_loaded_bytes` (and likewise for stores and flops).
+///
+/// Caller contract: `stacked` was bound at `spec.total_trip()`, every
+/// `spec.trips[r] >= 1`, and shared operands are bit-identical across
+/// the batch.
+pub fn execute_prepared_stacked_spec(
+    prepared: &PreparedPlan,
+    stacked: &StackedPlan,
+    spec: &StackSpec,
+    inputs: &[&HashMap<String, Mat>],
+    threads: Option<usize>,
+) -> BatchRun {
+    let b = spec.trips.len();
     assert_eq!(
         inputs.len(),
         b,
-        "stacked execution: {} request(s) for a batch-{b} bind",
+        "stacked execution: {} request(s) for a {b}-slice spec",
         inputs.len()
     );
+    assert_eq!(spec.pads.len(), b, "stack spec: trips/pads length mismatch");
+    assert!(
+        spec.trips.iter().all(|&t| t >= 1),
+        "stack spec: every request needs at least one block"
+    );
+    assert_eq!(
+        spec.total_trip(),
+        stacked.total_trip,
+        "stack spec totals {} blocks but the bind is sized for {}",
+        spec.total_trip(),
+        stacked.total_trip
+    );
     let dim = &stacked.info.dim;
+    let widths = spec.widths();
     let mut inter: HashMap<(usize, String), BufVal> = HashMap::new();
     let mut agg = MemSim::default();
     let mut outs: Vec<HashMap<String, Mat>> = (0..b).map(|_| HashMap::new()).collect();
     let mut mems: Vec<MemSim> = vec![MemSim::default(); b];
     let mut per_seg: Vec<Vec<MemSim>> = (0..b).map(|_| Vec::new()).collect();
+    // request r's blocks start at offsets[r] along the stack axis
+    let mut offsets = Vec::with_capacity(b);
+    let mut at = 0usize;
+    for r in 0..b {
+        offsets.push(at);
+        at += spec.trips[r] + spec.pads[r];
+    }
 
     for (si, seg) in prepared.segments.iter().enumerate() {
         let mut cfg = ExecConfig::new(stacked.sizes.clone());
         cfg.params = prepared.params.clone();
         cfg.threads = threads;
-        cfg.slices = Some(b);
+        cfg.slices = Some(widths.clone());
         for decl in &seg.ir.bufs {
             if !decl.is_input {
                 continue;
@@ -429,22 +591,32 @@ pub fn execute_prepared_stacked(
             let bv = match vref {
                 ValueRef::ProgramInput(name) => {
                     assert_eq!(decl.dims.len(), 2, "program input {name} must be 2-d");
-                    // per-request block counts come from the plan's own
-                    // sizes; only the stacked grid grows
+                    // non-stack block counts come from the plan's own
+                    // sizes; the stack axis carries each request's trip
                     let rb = prepared.sizes.get(&decl.dims[0]);
                     let cb = prepared.sizes.get(&decl.dims[1]);
                     match decl.dims.iter().position(|d| d == dim) {
                         Some(axis) => {
-                            let parts: Vec<BufVal> = inputs
-                                .iter()
-                                .map(|req| {
-                                    let m = req.get(name).unwrap_or_else(|| {
-                                        panic!("missing program input {name}")
-                                    });
-                                    to_blocks(m, rb, cb)
-                                })
-                                .collect();
-                            stack_blocks(&parts, axis)
+                            let mut parts: Vec<BufVal> = Vec::with_capacity(2 * b);
+                            for (r, req) in inputs.iter().enumerate() {
+                                let m = req.get(name).unwrap_or_else(|| {
+                                    panic!("missing program input {name}")
+                                });
+                                let (rbk, cbk) = if axis == 0 {
+                                    (spec.trips[r], cb)
+                                } else {
+                                    (rb, spec.trips[r])
+                                };
+                                let part = to_blocks(m, rbk, cbk);
+                                if spec.pads[r] > 0 {
+                                    let pad = pad_blocks(&part, axis, spec.pads[r]);
+                                    parts.push(part);
+                                    parts.push(pad);
+                                } else {
+                                    parts.push(part);
+                                }
+                            }
+                            stack_blocks_ragged(&parts, axis)
                         }
                         None => {
                             // shared weight operand: bind request 0's
@@ -468,12 +640,24 @@ pub fn execute_prepared_stacked(
             Some(prog) => crate::exec::engine::exec_compiled(prog, &cfg),
             None => exec_ir(&seg.ir, &cfg, ExecBackend::Interp),
         };
-        assert_eq!(res.per_slice.len(), b, "executor must attribute {b} slices");
-        for r in 0..b {
-            mems[r].add_counters(&res.per_slice[r]);
-            per_seg[r].push(res.per_slice[r].clone());
-        }
+        assert_eq!(
+            res.per_slice.len(),
+            2 * b,
+            "executor must attribute {} slices",
+            2 * b
+        );
         agg.add_counters(&res.mem);
+        for r in 0..b {
+            mems[r].add_counters(&res.per_slice[2 * r]);
+            per_seg[r].push(res.per_slice[2 * r].clone());
+            // pad slice: traffic is already in the aggregate totals;
+            // break it out so callers can reconcile request counters
+            // against the launch
+            let pad = &res.per_slice[2 * r + 1];
+            agg.padded_loaded_bytes += pad.loaded_bytes;
+            agg.padded_stored_bytes += pad.stored_bytes;
+            agg.padded_flops += pad.flops;
+        }
         for (label, prog_out) in &seg.outputs {
             let bv = res.outputs.get(label).unwrap_or_else(|| {
                 panic!("segment {si}: executor produced no output {label}")
@@ -491,7 +675,10 @@ pub fn execute_prepared_stacked(
                     .position(|d| d == dim)
                     .unwrap_or_else(|| panic!("stacked output {label} does not carry {dim}"));
                 for (r, o) in outs.iter_mut().enumerate() {
-                    o.insert(name.clone(), from_blocks(&unstack_blocks(bv, axis, b, r)));
+                    o.insert(
+                        name.clone(),
+                        from_blocks(&unstack_blocks_range(bv, axis, offsets[r], spec.trips[r])),
+                    );
                 }
             }
             inter.insert((si, label.clone()), bv.clone());
@@ -721,6 +908,108 @@ mod tests {
                 br.runs.iter().map(|r| r.mem.flops).sum::<u64>(),
                 "aggregate flops are the batch total"
             );
+        }
+    }
+
+    /// Ragged generalisation of the stacked-batch contract: requests
+    /// whose `M` trips differ (1/4/2/3 row blocks) share one stacked
+    /// launch, each padded to its power-of-two bucket edge. Every
+    /// request's outputs and traffic counters must be bit-identical to
+    /// a sequential one-shot run **at its own size**, per-request
+    /// counters never see pad traffic, and the aggregate reconciles
+    /// exactly: launch totals == Σ per-request + `padded_*`.
+    #[test]
+    fn ragged_stacked_batch_matches_sequential_per_request() {
+        let (p, cfg, params, base_inputs) = workloads::attention_demo(42);
+        let compiled = compile(&p, cfg.clone());
+        let trips = [1usize, 4, 2, 3];
+        let pads = [1usize, 0, 2, 1]; // next power of two minus trip
+        for backend in [ExecBackend::Interp, ExecBackend::Compiled] {
+            let mut cache = TapeCache::new();
+            let prepared = prepare_plan(&compiled.plan, &cfg.sizes, &params, backend, &mut cache);
+            let info =
+                plan_stack_info(&prepared).expect("attention stacks along its row-block grid");
+            assert_eq!(info.trip, 4);
+            let axes = stacked_input_axes(&prepared, &info);
+            assert_eq!(axes.get("Q"), Some(&0), "Q stacks along rows: {axes:?}");
+            assert!(!axes.contains_key("KT"), "weights carry no stack dim");
+
+            // one request per trip: fresh Q at k row blocks, shared KT/VT
+            let q0 = &base_inputs["Q"];
+            let h = q0.rows / info.trip;
+            let mut rng = Rng::new(7);
+            let reqs: Vec<HashMap<String, Mat>> = trips
+                .iter()
+                .map(|&k| {
+                    let mut m = base_inputs.clone();
+                    m.insert("Q".into(), rng.mat(k * h, q0.cols));
+                    m
+                })
+                .collect();
+            let spec = StackSpec {
+                trips: trips.to_vec(),
+                pads: pads.to_vec(),
+            };
+            assert_eq!(spec.total_trip(), 14);
+            let misses = cache.misses;
+            let stacked = bind_stacked_trip(&prepared, &info, spec.total_trip());
+            assert_eq!(cache.misses, misses, "ragged bind must not compile");
+            let refs: Vec<&HashMap<String, Mat>> = reqs.iter().collect();
+            let br = execute_prepared_stacked_spec(&prepared, &stacked, &spec, &refs, Some(2));
+            assert_eq!(br.runs.len(), trips.len());
+
+            for (r, run) in br.runs.iter().enumerate() {
+                let mut sizes_k = cfg.sizes.clone();
+                sizes_k.set(info.dim.clone(), trips[r]);
+                let seq = execute_plan_opts(
+                    &compiled.plan,
+                    &sizes_k,
+                    &params,
+                    &reqs[r],
+                    backend,
+                    Some(2),
+                );
+                for (name, m) in &seq.outputs {
+                    assert_eq!(
+                        m,
+                        &run.outputs[name],
+                        "{} request {r} output {name}",
+                        backend.name()
+                    );
+                }
+                assert_eq!(run.mem.loaded_bytes, seq.mem.loaded_bytes, "request {r}");
+                assert_eq!(run.mem.stored_bytes, seq.mem.stored_bytes, "request {r}");
+                assert_eq!(run.mem.n_loads, seq.mem.n_loads, "request {r}");
+                assert_eq!(run.mem.n_stores, seq.mem.n_stores, "request {r}");
+                assert_eq!(run.mem.flops, seq.mem.flops, "request {r}");
+                assert_eq!(
+                    run.mem.kernel_launches, seq.mem.kernel_launches,
+                    "request {r}"
+                );
+                // pad traffic never leaks into a request's own counters
+                assert_eq!(run.mem.padded_loaded_bytes, 0, "request {r}");
+                assert_eq!(run.mem.padded_stored_bytes, 0, "request {r}");
+                assert_eq!(run.mem.padded_flops, 0, "request {r}");
+            }
+            // pad waste is real traffic in the aggregate, broken out
+            // exactly: totals == Σ per-request + padded_*
+            assert!(br.agg.padded_flops > 0, "pads executed");
+            assert_eq!(
+                br.agg.loaded_bytes,
+                br.runs.iter().map(|r| r.mem.loaded_bytes).sum::<u64>()
+                    + br.agg.padded_loaded_bytes
+            );
+            assert_eq!(
+                br.agg.stored_bytes,
+                br.runs.iter().map(|r| r.mem.stored_bytes).sum::<u64>()
+                    + br.agg.padded_stored_bytes
+            );
+            assert_eq!(
+                br.agg.flops,
+                br.runs.iter().map(|r| r.mem.flops).sum::<u64>() + br.agg.padded_flops
+            );
+            // still one request's worth of kernel launches for the batch
+            assert_eq!(br.agg.kernel_launches, br.runs[0].mem.kernel_launches);
         }
     }
 

@@ -107,7 +107,8 @@ struct WorkerOut {
     pending: Vec<(BufId, usize, Arc<Val>)>,
     /// Per-slice counter attribution (empty unless the region runs with
     /// slice tracking): this worker's contribution to each grid slice,
-    /// recorded as per-iteration deltas keyed by `iteration / d`.
+    /// recorded as per-iteration deltas keyed through the caller's
+    /// iteration→slice table.
     slice_mem: Vec<MemSim>,
     /// Values of the loop's clear-set vars after the final iteration
     /// (`Some` only for the worker that ran the last chunk) — sequential
@@ -306,17 +307,19 @@ impl Machine {
     /// original payload (capacity and read-before-assignment diagnostics
     /// survive pooling).
     ///
-    /// `slices`, when set to `(d, out)`, attributes counters per grid
-    /// slice of `d` iterations: each worker records per-iteration deltas
-    /// into `out[iteration / d]` (chunks need no slice alignment — the
-    /// key is computed per iteration), merged additively across workers.
+    /// `slices`, when set to `(table, out)`, attributes counters per grid
+    /// slice: `table[x]` names the slice owning iteration `x` (slices are
+    /// contiguous but may have unequal widths — the ragged stacked-batch
+    /// path), and each worker records per-iteration deltas into
+    /// `out[table[x]]` (chunks need no slice alignment — the key is
+    /// looked up per iteration), merged additively across workers.
     fn run_parallel_loop(
         &mut self,
         prog: &CompiledProgram,
         li: usize,
         bufs: &mut Vec<BufVal>,
         workers: usize,
-        mut slices: Option<(usize, &mut [MemSim])>,
+        mut slices: Option<(&[usize], &mut [MemSim])>,
     ) {
         let meta = &prog.loops[li];
         let chunks = split_chunks(meta.start, meta.trip, workers * CHUNKS_PER_WORKER);
@@ -326,7 +329,7 @@ impl Machine {
         let queue = StealQueue::new(nw, chunks);
         let base_live = self.live;
         let cap = self.cap;
-        let slice_d = slices.as_ref().map(|(d, _)| *d);
+        let slice_of: Option<&[usize]> = slices.as_ref().map(|(t, _)| *t);
         let n_slices = slices.as_ref().map_or(0, |(_, out)| out.len());
         // Workers are seeded with the enclosing scope's registers (outer
         // loop indices feed buffer accesses inside the body) and var file
@@ -362,14 +365,14 @@ impl Machine {
                 let mut final_vars: Option<Vec<Option<Arc<Val>>>> = None;
                 while let Some(chunk) = queue.next(w) {
                     for x in chunk.lo..chunk.hi {
-                        let base = slice_d.map(|_| wm.mem.clone());
+                        let base = slice_of.map(|_| wm.mem.clone());
                         for &c in &m.clears {
                             wm.clear_var(c);
                         }
                         wm.regs[m.reg] = x;
                         wm.run_range(prog, (m.body_ip, m.end_ip), &mut sink, 0);
-                        if let (Some(d), Some(base)) = (slice_d, base) {
-                            slice_mem[x / d].add_counters(&wm.mem.counter_delta(&base));
+                        if let (Some(table), Some(base)) = (slice_of, base) {
+                            slice_mem[table[x]].add_counters(&wm.mem.counter_delta(&base));
                         }
                     }
                     if chunk.id == last_chunk {
@@ -491,17 +494,19 @@ pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
 
     let mut mach = Machine::new(prog.n_regs, prog.n_vars, cfg.local_capacity);
 
-    let mut per_slice = vec![MemSim::default(); cfg.slices.unwrap_or(0)];
+    let mut per_slice =
+        vec![MemSim::default(); cfg.slices.as_ref().map(|w| w.len()).unwrap_or(0)];
     for top in &prog.tops {
         if top.kernel {
             mach.mem.kernel_launches += 1;
         }
-        if let Some(b) = cfg.slices {
+        if let Some(widths) = cfg.slices.as_deref() {
             // Slice-attributed drive (the serving layer's stacked-batch
             // path): every top-level statement must be a grid loop whose
-            // trip divides into `b` equal slices; counters accrue per
-            // slice, and each slice is charged the kernel launch it
-            // would pay running alone.
+            // trip the slice widths tile exactly (unequal widths are the
+            // ragged-batch case); counters accrue per slice, and each
+            // non-empty slice is charged the kernel launch it would pay
+            // running alone.
             let li = match prog.instrs.get(top.ips.0) {
                 Some(Instr::LoopBegin(li)) => *li,
                 _ => panic!(
@@ -509,18 +514,24 @@ pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
                 ),
             };
             let (start, trip) = (prog.loops[li].start, prog.loops[li].trip);
+            let total: usize = widths.iter().sum();
             assert!(
-                start == 0 && b > 0 && trip % b == 0,
-                "slice attribution: {trip} iterations (start {start}) do not divide into {b} slices"
+                start == 0 && !widths.is_empty() && total == trip,
+                "slice attribution: widths {widths:?} do not cover {trip} iterations (start {start})"
             );
-            let d = trip / b;
+            // iteration → owning slice, looked up per iteration so
+            // work-stealing chunks need no slice alignment
+            let mut slice_of = Vec::with_capacity(trip);
+            for (r, &w) in widths.iter().enumerate() {
+                slice_of.extend(std::iter::repeat(r).take(w));
+            }
             if workers > 1 && prog.loops[li].parallel && trip >= 2 {
                 mach.run_parallel_loop(
                     prog,
                     li,
                     &mut bufs,
                     workers,
-                    Some((d, per_slice.as_mut_slice())),
+                    Some((slice_of.as_slice(), per_slice.as_mut_slice())),
                 );
             } else {
                 // Serial per-iteration drive: same clears-then-body
@@ -534,7 +545,7 @@ pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
                     mach.regs[m.reg] = x;
                     let mut sink = Sink::Direct(&mut bufs);
                     mach.run_range(prog, (m.body_ip, m.end_ip), &mut sink, workers);
-                    per_slice[x / d].add_counters(&mach.mem.counter_delta(&base));
+                    per_slice[slice_of[x]].add_counters(&mach.mem.counter_delta(&base));
                 }
                 if trip > 0 {
                     // sequential register semantics (as after any loop)
@@ -542,8 +553,10 @@ pub fn exec_compiled(prog: &CompiledProgram, cfg: &ExecConfig) -> ExecResult {
                 }
             }
             if top.kernel {
-                for s in per_slice.iter_mut() {
-                    s.kernel_launches += 1;
+                for (s, &w) in per_slice.iter_mut().zip(widths) {
+                    if w > 0 {
+                        s.kernel_launches += 1;
+                    }
                 }
             }
             continue;
@@ -656,7 +669,7 @@ mod tests {
         let input = block_list(&mut rng, 12, 4, 4);
         let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 12)]));
         cfg.inputs.insert("A".into(), input.clone());
-        cfg.slices = Some(4);
+        cfg.slices = Some(vec![3, 3, 3, 3]);
         let want = exec(&ir, &cfg);
         assert_eq!(want.per_slice.len(), 4);
         assert_eq!(want.mem.kernel_launches, 1, "one stacked launch");
@@ -690,6 +703,51 @@ mod tests {
                 );
             }
             assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches);
+        }
+    }
+
+    /// Ragged slice widths (unequal, with an empty slice) must agree
+    /// between the interpreter, the serial engine, and the fanned-out
+    /// engine — the foundation of ragged stacked-batch parity.
+    #[test]
+    fn ragged_slice_attribution_matches_across_backends() {
+        let ir = lower(&map_graph());
+        let mut rng = Rng::new(23);
+        let input = block_list(&mut rng, 12, 4, 4);
+        let widths = vec![5usize, 0, 3, 4];
+        let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 12)]));
+        cfg.inputs.insert("A".into(), input.clone());
+        cfg.slices = Some(widths.clone());
+        let want = exec(&ir, &cfg);
+        assert_eq!(want.per_slice.len(), 4);
+        assert_eq!(want.mem.kernel_launches, 1, "one stacked launch");
+        assert_eq!(want.per_slice[1], MemSim::default(), "empty slice charges nothing");
+        let sum: u64 = want.per_slice.iter().map(|s| s.loaded_bytes).sum();
+        assert_eq!(sum, want.mem.loaded_bytes, "slices partition the loads");
+        for threads in [Some(1), Some(4)] {
+            let mut c2 = cfg.clone();
+            c2.threads = threads;
+            let prog = compile(&ir, &c2);
+            let got = exec_compiled(&prog, &c2);
+            for i in 0..12 {
+                assert_eq!(
+                    want.outputs["B"].get(&[i]),
+                    got.outputs["B"].get(&[i]),
+                    "threads={threads:?} element {i}"
+                );
+            }
+            assert_eq!(got.per_slice.len(), 4);
+            for (r, (a, b)) in want.per_slice.iter().zip(&got.per_slice).enumerate() {
+                assert_eq!(a.loaded_bytes, b.loaded_bytes, "threads={threads:?} slice {r}");
+                assert_eq!(a.stored_bytes, b.stored_bytes, "threads={threads:?} slice {r}");
+                assert_eq!(a.n_loads, b.n_loads, "threads={threads:?} slice {r}");
+                assert_eq!(a.n_stores, b.n_stores, "threads={threads:?} slice {r}");
+                assert_eq!(a.flops, b.flops, "threads={threads:?} slice {r}");
+                assert_eq!(
+                    a.kernel_launches, b.kernel_launches,
+                    "threads={threads:?} slice {r}"
+                );
+            }
         }
     }
 

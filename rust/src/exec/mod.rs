@@ -225,6 +225,57 @@ pub fn stack_blocks(parts: &[BufVal], axis: usize) -> BufVal {
     out
 }
 
+/// [`stack_blocks`] for *ragged* parts: grids may differ in their
+/// `axis` extent (every other extent must agree), and part `r` lands at
+/// the running offset of the extents before it. The serving layer's
+/// shape-bucketed batches use this to stack requests whose stackable
+/// grid dim differs per request (optionally interleaved with zero pad
+/// grids). Pointer moves only, like the uniform case.
+pub fn stack_blocks_ragged(parts: &[BufVal], axis: usize) -> BufVal {
+    let first = parts.first().expect("stack_blocks_ragged: empty part list");
+    assert!(
+        axis < first.dims.len(),
+        "stack_blocks_ragged: axis {axis} out of rank {}",
+        first.dims.len()
+    );
+    let mut dims = first.dims.clone();
+    dims[axis] = parts.iter().map(|p| p.dims[axis]).sum();
+    let mut out = BufVal::new(dims);
+    let mut off = 0usize;
+    for (r, p) in parts.iter().enumerate() {
+        for (i, (&a, &b)) in p.dims.iter().zip(&first.dims).enumerate() {
+            assert!(
+                i == axis || a == b,
+                "stack_blocks_ragged: part {r} differs from part 0 on non-stack axis {i}"
+            );
+        }
+        for (flat, v) in p.data.iter().enumerate() {
+            out.data[offset_flat(flat, &p.dims, &out.dims, axis, off)] = v.clone();
+        }
+        off += p.dims[axis];
+    }
+    out
+}
+
+/// Inverse of [`stack_blocks_ragged`]: the slab of `len` `axis`-slices
+/// starting at coordinate `lo` (pointer copies). Ragged de-stacking —
+/// request `r` of a shape-bucketed batch recovers exactly its own rows,
+/// dropping any pad slices around it.
+pub fn unstack_blocks_range(stacked: &BufVal, axis: usize, lo: usize, len: usize) -> BufVal {
+    assert!(
+        axis < stacked.dims.len() && lo + len <= stacked.dims[axis],
+        "unstack_blocks_range: [{lo}, {lo}+{len}) out of extent {} on axis {axis}",
+        stacked.dims[axis]
+    );
+    let mut dims = stacked.dims.clone();
+    dims[axis] = len;
+    let mut out = BufVal::new(dims.clone());
+    for (flat, slot) in out.data.iter_mut().enumerate() {
+        *slot = stacked.data[offset_flat(flat, &dims, &stacked.dims, axis, lo)].clone();
+    }
+    out
+}
+
 /// Inverse of [`stack_blocks`]: slice `r` of `parts` equal slabs along
 /// `axis` (pointer copies, like stacking).
 pub fn unstack_blocks(stacked: &BufVal, axis: usize, parts: usize, r: usize) -> BufVal {
@@ -435,6 +486,55 @@ mod tests {
             cat.place(r * 4, 0, m);
         }
         assert_eq!(from_blocks(&stacked), cat);
+    }
+
+    /// Ragged stacking: parts with different extents along the stack
+    /// axis concatenate at running offsets, and range de-stacking
+    /// recovers each part exactly — including with zero-extent pads
+    /// interleaved (the pad-to-bucket layout).
+    #[test]
+    fn ragged_stack_and_range_unstack_roundtrip() {
+        let mut rng = Rng::new(17);
+        // row-block counts 1, 3, 2 over 4x6 / 12x6 / 8x6 matrices
+        let mats: Vec<Mat> = [1usize, 3, 2].iter().map(|&k| rng.mat(4 * k, 6)).collect();
+        let parts: Vec<BufVal> = mats.iter().map(|m| to_blocks(m, m.rows / 4, 3)).collect();
+        let stacked = stack_blocks_ragged(&parts, 0);
+        assert_eq!(stacked.dims, vec![6, 3]);
+        let mut lo = 0usize;
+        for (r, m) in mats.iter().enumerate() {
+            let k = m.rows / 4;
+            let back = unstack_blocks_range(&stacked, 0, lo, k);
+            assert_eq!(&from_blocks(&back), m, "part {r}");
+            lo += k;
+        }
+        // row-concatenation equivalence, as in the uniform test
+        let total: usize = mats.iter().map(|m| m.rows).sum();
+        let mut cat = Mat::zeros(total, 6);
+        let mut row = 0;
+        for m in &mats {
+            cat.place(row, 0, m);
+            row += m.rows;
+        }
+        assert_eq!(from_blocks(&stacked), cat);
+
+        // interleave a pad grid and check the ranges still line up
+        let pad = to_blocks(&Mat::zeros(8, 6), 2, 3);
+        let with_pad = stack_blocks_ragged(
+            &[parts[0].clone(), pad, parts[1].clone()],
+            0,
+        );
+        assert_eq!(with_pad.dims, vec![6, 3]);
+        assert_eq!(&from_blocks(&unstack_blocks_range(&with_pad, 0, 0, 1)), &mats[0]);
+        assert_eq!(&from_blocks(&unstack_blocks_range(&with_pad, 0, 3, 3)), &mats[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-stack axis")]
+    fn ragged_stack_rejects_non_stack_axis_mismatch() {
+        let mut rng = Rng::new(19);
+        let a = to_blocks(&rng.mat(4, 6), 2, 3);
+        let b = to_blocks(&rng.mat(4, 4), 2, 2);
+        let _ = stack_blocks_ragged(&[a, b], 0);
     }
 
     #[test]

@@ -888,6 +888,19 @@ pub fn stackable_grid_dim(ir: &LoopIr) -> Option<Dim> {
     accesses_slice_aligned(&ir.body, &ir.bufs, &dim).then_some(dim)
 }
 
+/// Shape-bucket legality: two `DimSizes` bindings of one program may
+/// share a stacked launch iff they agree on every dimension except
+/// (possibly) the stackable grid dim `dim` from [`stackable_grid_dim`].
+/// Any *non*-grid dimension differing changes the shape of shared
+/// (weight-like) operands and of each slice's inner loops, so those
+/// requests can never ride one tape — the serving layer's shape buckets
+/// reject them and fall back to exact-shape queues.
+pub fn bucket_compatible(dim: &Dim, a: &DimSizes, b: &DimSizes) -> bool {
+    a.0.len() == b.0.len()
+        && a.0.keys().all(|d| b.0.contains_key(d))
+        && a.0.iter().all(|(d, &n)| d == dim || b.0.get(d) == Some(&n))
+}
+
 /// Every access to a `dim`-carrying buffer axis must be `Iter(dim)`
 /// (see [`stackable_grid_dim`]).
 fn accesses_slice_aligned(stmts: &[Stmt], bufs: &[super::BufDecl], dim: &Dim) -> bool {
@@ -1320,6 +1333,27 @@ mod tests {
             let _ = body;
         }
         assert_eq!(stackable_grid_dim(&ir), None);
+    }
+
+    /// Shape-bucket legality: bindings differing only in the stackable
+    /// grid dim are compatible; any non-grid difference — value, missing
+    /// dim, or extra dim — rejects.
+    #[test]
+    fn bucket_compatibility_is_grid_dim_only() {
+        let m = Dim::new("M");
+        let a = DimSizes::of(&[("M", 4), ("K", 2), ("N", 3)]);
+        let b = DimSizes::of(&[("M", 1), ("K", 2), ("N", 3)]);
+        assert!(bucket_compatible(&m, &a, &b), "M-only difference buckets");
+        assert!(bucket_compatible(&m, &a, &a), "identical shapes bucket");
+        assert!(bucket_compatible(&m, &b, &a), "symmetric");
+
+        let k_differs = DimSizes::of(&[("M", 4), ("K", 5), ("N", 3)]);
+        assert!(!bucket_compatible(&m, &a, &k_differs), "non-grid dim differs");
+        let missing = DimSizes::of(&[("M", 4), ("K", 2)]);
+        assert!(!bucket_compatible(&m, &a, &missing), "missing dim");
+        assert!(!bucket_compatible(&m, &missing, &a), "extra dim");
+        let renamed = DimSizes::of(&[("M", 4), ("K", 2), ("P", 3)]);
+        assert!(!bucket_compatible(&m, &a, &renamed), "same count, different dims");
     }
 
     /// The skeleton/bind split: one skeleton re-bound to two size

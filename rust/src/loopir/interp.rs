@@ -32,6 +32,18 @@ pub struct MemSim {
     /// Scalar fused multiply-add count of block operations (compute work,
     /// used to quantify Rule-6 work replication).
     pub flops: u64,
+    /// Of `loaded_bytes`, the share attributable to pad rows in a
+    /// padded stacked launch (see the serving layer's pad-to-bucket
+    /// path). Always `0` for ordinary executions and for per-request
+    /// counters: pad waste is charged to the *aggregate* only, so
+    /// `loaded_bytes == Σ per-request loaded_bytes + padded_loaded_bytes`
+    /// reconciles exactly.
+    pub padded_loaded_bytes: u64,
+    /// Pad share of `stored_bytes` (same contract as
+    /// `padded_loaded_bytes`).
+    pub padded_stored_bytes: u64,
+    /// Pad share of `flops` (same contract as `padded_loaded_bytes`).
+    pub padded_flops: u64,
 }
 
 impl MemSim {
@@ -50,6 +62,9 @@ impl MemSim {
         self.n_stores += o.n_stores;
         self.kernel_launches += o.kernel_launches;
         self.flops += o.flops;
+        self.padded_loaded_bytes += o.padded_loaded_bytes;
+        self.padded_stored_bytes += o.padded_stored_bytes;
+        self.padded_flops += o.padded_flops;
         self.peak_local_bytes = self.peak_local_bytes.max(o.peak_local_bytes);
     }
 
@@ -65,6 +80,9 @@ impl MemSim {
             peak_local_bytes: self.peak_local_bytes,
             kernel_launches: self.kernel_launches - base.kernel_launches,
             flops: self.flops - base.flops,
+            padded_loaded_bytes: self.padded_loaded_bytes - base.padded_loaded_bytes,
+            padded_stored_bytes: self.padded_stored_bytes - base.padded_stored_bytes,
+            padded_flops: self.padded_flops - base.padded_flops,
         }
     }
 }
@@ -147,16 +165,20 @@ pub struct ExecConfig {
     /// (`None` = one worker per available core). The tree-walking
     /// interpreter ignores this — it is always sequential.
     pub threads: Option<usize>,
-    /// `Some(B)`: split traffic attribution into `B` equal grid slices
-    /// of every top-level loop, reported in [`ExecResult::per_slice`] —
-    /// the serving layer's stacked-batch path (slice `r` of a coalesced
-    /// launch is request `r`'s traffic). Requires every top-level
-    /// statement to be a grid loop whose trip count divides by `B`
-    /// (see `loopir::compile::stackable_grid_dim`). Each slice is also
-    /// charged one kernel launch per top-level nest — what it would have
-    /// paid running alone — while the aggregate counters keep the single
-    /// stacked launch. `None`: no attribution (the normal path).
-    pub slices: Option<usize>,
+    /// `Some(widths)`: split traffic attribution into `widths.len()`
+    /// contiguous grid slices of every top-level loop — slice `r` covers
+    /// `widths[r]` consecutive iterations — reported in
+    /// [`ExecResult::per_slice`]. This is the serving layer's
+    /// stacked-batch path: slice `r` of a coalesced launch is request
+    /// `r`'s traffic, and ragged batches (different per-request trips,
+    /// or interleaved pad slices) use unequal widths. Requires every
+    /// top-level statement to be a grid loop whose trip count equals
+    /// `widths.iter().sum()` (see `loopir::compile::stackable_grid_dim`).
+    /// Each non-empty slice is also charged one kernel launch per
+    /// top-level nest — what it would have paid running alone — while
+    /// the aggregate counters keep the single stacked launch; zero-width
+    /// slices charge nothing. `None`: no attribution (the normal path).
+    pub slices: Option<Vec<usize>>,
 }
 
 impl ExecConfig {
@@ -224,15 +246,16 @@ pub fn exec(ir: &LoopIr, cfg: &ExecConfig) -> ExecResult {
         mem: MemSim::default(),
         live_local: 0,
     };
-    let mut per_slice = vec![MemSim::default(); cfg.slices.unwrap_or(0)];
+    let mut per_slice =
+        vec![MemSim::default(); cfg.slices.as_ref().map(|w| w.len()).unwrap_or(0)];
     for s in &ir.body {
         if matches!(s, Stmt::Loop { .. }) {
             it.mem.kernel_launches += 1;
         }
-        match (cfg.slices, s) {
+        match (cfg.slices.as_deref(), s) {
             (None, _) => it.stmt(s),
             (
-                Some(b),
+                Some(widths),
                 Stmt::Loop {
                     dim,
                     skip_first,
@@ -243,21 +266,23 @@ pub fn exec(ir: &LoopIr, cfg: &ExecConfig) -> ExecResult {
             ) => {
                 // Slice-attributed drive: same per-iteration semantics
                 // (clears, then body) as `Interp::stmt`, with counter
-                // deltas recorded at slice boundaries. Each slice also
-                // gets the kernel launch it would pay running alone.
+                // deltas recorded at slice boundaries. Each non-empty
+                // slice also gets the kernel launch it would pay
+                // running alone.
                 assert!(
                     !*skip_first,
                     "slice attribution: top-level loop over {dim} must not skip iteration 0"
                 );
                 let n = cfg.sizes.get(dim);
+                let total: usize = widths.iter().sum();
                 assert!(
-                    b > 0 && n % b == 0,
-                    "slice attribution: {n} iterations of {dim} do not divide into {b} slices"
+                    !widths.is_empty() && total == n,
+                    "slice attribution: widths {widths:?} do not cover {n} iterations of {dim}"
                 );
-                let d = n / b;
-                for (r, slice) in per_slice.iter_mut().enumerate() {
+                let mut x0 = 0usize;
+                for (&w, slice) in widths.iter().zip(per_slice.iter_mut()) {
                     let base = it.mem.clone();
-                    for x in r * d..(r + 1) * d {
+                    for x in x0..x0 + w {
                         for &c in clears {
                             it.clear_var(c);
                         }
@@ -266,9 +291,12 @@ pub fn exec(ir: &LoopIr, cfg: &ExecConfig) -> ExecResult {
                             it.stmt(st);
                         }
                     }
-                    let mut delta = it.mem.counter_delta(&base);
-                    delta.kernel_launches += 1;
-                    slice.add_counters(&delta);
+                    x0 += w;
+                    if w > 0 {
+                        let mut delta = it.mem.counter_delta(&base);
+                        delta.kernel_launches += 1;
+                        slice.add_counters(&delta);
+                    }
                 }
                 it.iters.remove(dim);
             }
@@ -611,7 +639,7 @@ mod tests {
         let input = block_list(&mut rng, 4, 2, 3);
         let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 4)]));
         cfg.inputs.insert("A".into(), input.clone());
-        cfg.slices = Some(2);
+        cfg.slices = Some(vec![2, 2]);
         let res = exec(&ir, &cfg);
         assert_eq!(res.per_slice.len(), 2);
         assert_eq!(res.mem.kernel_launches, 1, "one stacked launch");
@@ -641,6 +669,57 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Ragged slice attribution: unequal widths (including a zero-width
+    /// slice) must charge each slice exactly its own iterations, leave
+    /// empty slices all-zero (no launch), and keep the aggregate equal
+    /// to the sum of the slices plus the single stacked launch.
+    #[test]
+    fn ragged_slice_widths_attribute_exactly() {
+        let mut g = Graph::new();
+        let a = g.input("A", Ty::blocks(&["N"]));
+        let o = map_over(&mut g, "N", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let r = mb.g.ew1(Expr::var(0).exp().neg(), ins[0]);
+            mb.collect(r);
+        });
+        g.output("B", o[0]);
+        let ir = lower(&g);
+
+        let mut rng = Rng::new(11);
+        let input = block_list(&mut rng, 6, 2, 3);
+        let mut cfg = ExecConfig::new(DimSizes::of(&[("N", 6)]));
+        cfg.inputs.insert("A".into(), input.clone());
+        cfg.slices = Some(vec![1, 0, 3, 2]);
+        let res = exec(&ir, &cfg);
+        assert_eq!(res.per_slice.len(), 4);
+        assert_eq!(res.mem.kernel_launches, 1, "one stacked launch");
+        assert_eq!(res.per_slice[1], MemSim::default(), "empty slice charges nothing");
+
+        let mut x0 = 0usize;
+        let mut summed = MemSim::default();
+        for (r, &w) in [1usize, 0, 3, 2].iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            let mut part = BufVal::new(vec![w]);
+            for i in 0..w {
+                part.set(&[i], input.get(&[x0 + i]).clone());
+            }
+            x0 += w;
+            let mut c2 = ExecConfig::new(DimSizes::of(&[("N", w)]));
+            c2.inputs.insert("A".into(), part);
+            let alone = exec(&ir, &c2);
+            let s = &res.per_slice[r];
+            assert_eq!(s.loaded_bytes, alone.mem.loaded_bytes, "slice {r}");
+            assert_eq!(s.stored_bytes, alone.mem.stored_bytes, "slice {r}");
+            assert_eq!(s.flops, alone.mem.flops, "slice {r}");
+            assert_eq!(s.kernel_launches, 1, "slice {r} pays its own launch");
+            summed.add_counters(s);
+        }
+        assert_eq!(summed.loaded_bytes, res.mem.loaded_bytes, "slices partition the loads");
+        assert_eq!(summed.stored_bytes, res.mem.stored_bytes, "slices partition the stores");
+        assert_eq!(summed.flops, res.mem.flops, "slices partition the flops");
     }
 
     #[test]

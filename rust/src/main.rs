@@ -8,6 +8,7 @@
 //! blockbuster tune <program> [--seed N] [--capacity BYTES]
 //! blockbuster serve [--requests N] [--mix a,b:2,c] [--max-batch N]
 //!                   [--max-wait-ms MS] [--coalesce]
+//!                   [--ragged] [--buckets exact|pow2|max|E1,E2,..] [--pad]
 //!                   [--queue-cap N] [--deadline-ms MS]
 //!                   [--shed-policy reject-new|drop-oldest]
 //!                   [--retune-every N] [--weights a:4,b:1]
@@ -45,7 +46,7 @@
 //! scalar fallbacks — a debugging/benching aid, not a correctness knob).
 
 use blockbuster::autotune::autotune;
-use blockbuster::coordinator::{compile, execute_plan_opts, plan_report, workloads};
+use blockbuster::coordinator::{compile, execute_plan_opts, plan_report, plan_stack_info, workloads};
 use blockbuster::cost::CostModel;
 use blockbuster::exec::{run_with, ExecBackend, Workload};
 use blockbuster::fusion::fuse;
@@ -57,7 +58,9 @@ use blockbuster::serve::daemon::{Daemon, RetuneConfig, Ticket};
 use blockbuster::serve::net::client::{synthetic_request, BackoffConfig, ClientConfig, NetClient};
 use blockbuster::serve::net::proto::Frame;
 use blockbuster::serve::net::{NetConfig, NetServer};
-use blockbuster::serve::{ModelServer, Request, Response, ServerConfig, ShedPolicy, Verdict};
+use blockbuster::serve::{
+    BucketLadder, ModelServer, Request, Response, ServerConfig, ShedPolicy, Verdict,
+};
 use blockbuster::tensor::{Mat, Rng};
 use blockbuster::util::bench::{fmt_bytes, percentile, Table};
 use blockbuster::util::cli::Args;
@@ -96,6 +99,16 @@ commands:
                          overhead paid once per batch, not once per request;
                          falls back to per-request fan-out when a plan has no
                          stackable grid dim or batch weights differ)
+      --ragged           make the synthetic stream ragged: each request draws
+                         a random length (1..= the registered trip) along the
+                         stackable grid dim instead of the full shape
+      --buckets L        shape-bucket ladder for ragged coalescing: exact
+                         (default; only same-length requests share a queue),
+                         pow2, max, or explicit ascending edges like 2,4,8 —
+                         requests sharing a bucket edge share stacked launches
+      --pad              pad each request up to its bucket edge; pad waste is
+                         charged to the explicit padded_* counters, never to
+                         a request's own MemSim
       --queue-cap N      admission control: bound each workload's queue at N
                          pending requests; over-cap submissions are shed with
                          a typed QueueFull rejection (default: unbounded)
@@ -157,6 +170,7 @@ fn main() -> anyhow::Result<()> {
             "mix",
             "max-batch",
             "max-wait-ms",
+            "buckets",
             "queue-cap",
             "deadline-ms",
             "shed-policy",
@@ -370,6 +384,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }),
     };
     let retune_every = args.opt_usize("retune-every", 0) as u64;
+    let buckets = match args.opt("buckets") {
+        None => BucketLadder::Exact,
+        Some(s) => BucketLadder::from_name(s).unwrap_or_else(|| {
+            eprintln!(
+                "unknown bucket ladder {s}; have: exact, pow2, max, or ascending edges like 2,4,8"
+            );
+            std::process::exit(2);
+        }),
+    };
+    let pad = args.flag("pad");
+    let ragged = args.flag("ragged");
 
     // --mix name[:weight],... — the traffic composition. Repeated names
     // merge their weights (so "a,a:3" weighs a at 4) instead of
@@ -413,6 +438,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         queue_cap,
         deadline,
         shed_policy,
+        buckets: buckets.clone(),
+        pad,
     });
     for (name, _) in &spec {
         server.register(name)?;
@@ -445,8 +472,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     );
     println!(
-        "batching: max_batch {max_batch}, max_wait {max_wait:?}, coalesce {}",
-        if coalesce { "on" } else { "off" }
+        "batching: max_batch {max_batch}, max_wait {max_wait:?}, coalesce {}, ragged {}, \
+         buckets {buckets:?}, pad {}",
+        if coalesce { "on" } else { "off" },
+        if ragged { "on" } else { "off" },
+        if pad { "on" } else { "off" }
     );
     println!(
         "admission: queue_cap {}, deadline {}, shed_policy {:?}, retune_every {}",
@@ -523,29 +553,57 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // Deterministic weighted request stream, fully generated up front so
     // the daemon sees a pure ingest workload (inputs need &server for
     // the registered shape specs, and the server moves into the daemon).
+    // With --ragged, each request of a stackable workload draws a random
+    // length (1..= the registered trip) along the stackable grid dim.
+    let stack_trips: Vec<Option<usize>> = spec
+        .iter()
+        .map(|(name, _)| {
+            server
+                .live_plan(name)
+                .and_then(|p| plan_stack_info(&p))
+                .map(|i| i.trip)
+        })
+        .collect();
     let total_weight: usize = spec.iter().map(|(_, w)| w).sum();
     let mut lcg: u64 = seed | 1;
-    let mut meta: Vec<(String, u64)> = Vec::new(); // (workload, seed), submission order
+    // (workload, seed, ragged trip), submission order
+    let mut meta: Vec<(String, u64, Option<usize>)> = Vec::new();
     let mut stream: Vec<Request> = Vec::new();
     for i in 0..requests {
         lcg = lcg
             .wrapping_mul(6364136223846793005)
             .wrapping_add(1442695040888963407);
-        let mut pick = (lcg >> 33) as usize % total_weight;
-        let name = spec
-            .iter()
-            .find_map(|(n, w)| {
-                if pick < *w {
-                    Some(n.clone())
-                } else {
-                    pick -= w;
-                    None
-                }
-            })
-            .expect("weighted pick in range");
+        let idx = {
+            let mut pick = (lcg >> 33) as usize % total_weight;
+            spec.iter()
+                .position(|(_, w)| {
+                    if pick < *w {
+                        true
+                    } else {
+                        pick -= w;
+                        false
+                    }
+                })
+                .expect("weighted pick in range")
+        };
+        let name = spec[idx].0.clone();
         let req_seed = seed.wrapping_add(i as u64);
-        stream.push(Request::new(&name, server.synthetic_inputs(&name, req_seed)?));
-        meta.push((name, req_seed));
+        let trip = if ragged {
+            stack_trips[idx].map(|t| {
+                lcg = lcg
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                1 + (lcg >> 33) as usize % t
+            })
+        } else {
+            None
+        };
+        let inputs = match trip {
+            Some(t) => server.synthetic_inputs_ragged(&name, req_seed, t)?,
+            None => server.synthetic_inputs(&name, req_seed)?,
+        };
+        stream.push(Request::new(&name, inputs));
+        meta.push((name, req_seed, trip));
     }
 
     // Channel ingest → background flusher → worker pool; shutdown() is a
@@ -573,12 +631,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             else {
                 continue; // workload drew no (served) traffic in this stream
             };
-            let (_, req_seed) = &meta[idx];
+            let (_, req_seed, trip) = &meta[idx];
             let (p, ccfg, params, _) = workloads::by_name(name, 0).expect("registered name");
             let compiled = compile(&p, ccfg.clone());
-            let inputs = server.synthetic_inputs(name, *req_seed)?;
-            let seq =
-                execute_plan_opts(&compiled.plan, &ccfg.sizes, &params, &inputs, backend, threads);
+            // A ragged request compares against a sequential run at its
+            // OWN length (stack dim bound to its trip) — never against
+            // the padded bucket edge it may have ridden.
+            let (inputs, sizes) = match trip {
+                Some(t) => {
+                    let info = plan_stack_info(&server.live_plan(name).expect("registered"))
+                        .expect("ragged trip implies a stackable plan");
+                    let mut sizes = ccfg.sizes.clone();
+                    sizes.set(info.dim.clone(), *t);
+                    (server.synthetic_inputs_ragged(name, *req_seed, *t)?, sizes)
+                }
+                None => (server.synthetic_inputs(name, *req_seed)?, ccfg.sizes.clone()),
+            };
+            let seq = execute_plan_opts(&compiled.plan, &sizes, &params, &inputs, backend, threads);
             for (out_name, m) in &seq.outputs {
                 assert_eq!(
                     m, &r.outputs[out_name],
@@ -608,7 +677,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "Serving stats (per workload)",
         &[
             "workload", "served", "shed", "failed", "batches", "avg batch", "peak", "coalesced",
-            "launches", "p50 lat", "p95 lat", "p99 lat",
+            "launches", "pad flops", "p50 lat", "p95 lat", "p99 lat",
         ],
     );
     let stats = server.stats();
@@ -629,6 +698,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             st.peak_batch.to_string(),
             st.coalesced.to_string(),
             st.launches.to_string(),
+            st.padded_flops.to_string(),
             fmt_ms(percentile(&st.latency_ns, 50.0)),
             fmt_ms(st.percentile_latency_ns(95.0)),
             fmt_ms(st.percentile_latency_ns(99.0)),
@@ -643,6 +713,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             "\ncoalescing: {coalesced} request(s) rode {stacked} stacked launch(es); \
              {launches} kernel launch(es) actually executed"
         );
+        let (pl, ps, pf) = stats.per_program.values().fold((0u64, 0u64, 0u64), |a, s| {
+            (
+                a.0 + s.padded_loaded_bytes,
+                a.1 + s.padded_stored_bytes,
+                a.2 + s.padded_flops,
+            )
+        });
+        if pl + ps + pf > 0 {
+            println!(
+                "pad waste: {pl} byte(s) loaded, {ps} byte(s) stored, {pf} flop(s) — \
+                 charged to the bucket edges, never to a request's own counters"
+            );
+        }
     }
     let compiles: u64 = stats.per_program.values().map(|s| s.compiles).sum();
     let binds: u64 = stats.per_program.values().map(|s| s.binds).sum();

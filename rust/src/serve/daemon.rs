@@ -8,6 +8,10 @@
 //! [`ModelServer::next_due`]`- now`, so it wakes either because new
 //! work arrived (a channel send) or because the oldest queued request
 //! just crossed `max_wait` (or a deadline) — never on a spin loop.
+//! `next_due` is per *bucket queue* (ragged traffic queues per shape
+//! bucket), so a lone ragged straggler wakes the flusher at its own
+//! `max_wait` even while other buckets idle — the daemon itself needs
+//! no bucket awareness.
 //!
 //! Lifecycle: **ingest → flusher → pool.**
 //! [`DaemonClient::submit`] ships a [`Request`] plus a private reply

@@ -38,6 +38,29 @@
 //! bit-identical — or a plan with no stackable grid dim — falls back to
 //! the fan-out path, per batch, automatically.
 //!
+//! **Ragged traffic: shape buckets, padding, continuous batching.**
+//! Requests of a stackable workload need not arrive at the registered
+//! shape: any extent along the stackable grid dim `M` (in whole block
+//! units, up to the registered trip) is admitted, and
+//! [`ModelServer::submit`] derives the request's *trip* (its block
+//! count along `M`) from its input extents. Each workload keeps one
+//! queue per **shape bucket** ([`BucketLadder`] — [`ServerConfig::buckets`]):
+//! requests whose `DimSizes` differ only in the stackable dim land in
+//! the same bucket and share a stacked launch (the legality check is
+//! `loopir::compile::bucket_compatible` — any *other* differing dim is
+//! rejected at admission, since every non-stack extent must match the
+//! registered shape). A ragged batch stacks each request at its own
+//! trip (`coordinator::StackSpec`); with [`ServerConfig::pad`] on, each
+//! request is padded to its bucket edge with zero blocks so stacked
+//! bind sizes stay bounded by the ladder. Pad blocks execute for real,
+//! but their traffic is **never** attributed to a request: it lands in
+//! the aggregate's `padded_*` counters ([`ProgramStats::padded_flops`]
+//! and friends), keeping the reconciliation `launch totals == Σ
+//! per-request + padded_*` exact. Batching is *continuous*: a flush
+//! takes whatever its bucket holds at launch time, so requests
+//! admitted while earlier batches were executing ride the next stacked
+//! launch, and [`ModelServer::next_due`] tracks due times per bucket.
+//!
 //! **Determinism.** Batching changes *where* a request executes (a pool
 //! worker instead of the caller) and *when* (coalesced with its batch),
 //! never *what*: outputs and [`MemSim`] traffic counters are
@@ -95,9 +118,9 @@ pub mod net;
 use crate::array::ArrayProgram;
 use crate::autotune::{autotune_measured_cached, MeasuredPoint};
 use crate::coordinator::{
-    bind_stacked, compile, execute_prepared, execute_prepared_stacked, plan_stack_info,
-    prepare_plan, unstacked_inputs, workloads, CompileConfig, PlanRun, PreparedPlan, StackInfo,
-    StackedPlan,
+    bind_stacked_trip, compile, execute_prepared, execute_prepared_stacked_spec, plan_stack_info,
+    prepare_plan, stacked_input_axes, unstacked_inputs, workloads, CompileConfig, PlanRun,
+    PreparedPlan, StackInfo, StackSpec, StackedPlan,
 };
 use crate::cost::CostModel;
 use crate::exec::{pool, ExecBackend, TapeCache};
@@ -155,6 +178,16 @@ pub struct ServerConfig {
     /// Who pays when a queue is full: the new arrival or the oldest
     /// queued request.
     pub shed_policy: ShedPolicy,
+    /// Shape-bucket ladder for ragged traffic: which requests of one
+    /// workload may share a stacked launch. The default
+    /// ([`BucketLadder::Exact`]) groups only same-trip requests —
+    /// full-shape traffic behaves exactly as before this knob existed.
+    pub buckets: BucketLadder,
+    /// Pad each ragged request to its bucket edge with zero blocks
+    /// (default off). Padding bounds the set of stacked bind sizes by
+    /// the ladder's edges; the waste is charged to the aggregate
+    /// `padded_*` counters, never to a request.
+    pub pad: bool,
 }
 
 impl Default for ServerConfig {
@@ -168,6 +201,8 @@ impl Default for ServerConfig {
             queue_cap: None,
             deadline: None,
             shed_policy: ShedPolicy::RejectNew,
+            buckets: BucketLadder::Exact,
+            pad: false,
         }
     }
 }
@@ -185,7 +220,70 @@ impl ServerConfig {
     }
 }
 
-/// What to shed when a workload's queue is at [`ServerConfig::queue_cap`].
+/// Shape-bucket ladder for ragged traffic: maps a request's trip (its
+/// block count along the stackable grid dim) to the **bucket edge** it
+/// queues under. Requests sharing an edge share a queue — and thus
+/// stacked launches; with [`ServerConfig::pad`] on, each is padded up
+/// to the edge.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum BucketLadder {
+    /// One bucket per exact trip: only same-trip requests coalesce,
+    /// padding is never needed. The default — full-shape traffic
+    /// behaves exactly as it did before buckets existed.
+    #[default]
+    Exact,
+    /// Edges at powers of two, clamped to the registered trip:
+    /// `1, 2, 4, …, registered`. Bounds pad waste to < 2x per request
+    /// while keeping the bucket count logarithmic.
+    Pow2,
+    /// One bucket for everything, at the registered trip. Maximizes
+    /// coalescing opportunity; with padding on, maximizes waste too.
+    Max,
+    /// Explicit ascending edges; a trip above the last edge buckets at
+    /// its own value (no padding).
+    Edges(Vec<usize>),
+}
+
+impl BucketLadder {
+    /// Parse a CLI `--buckets` value: `exact`, `pow2`, `max`, or a
+    /// comma-separated ascending edge list like `2,4,8`.
+    pub fn from_name(name: &str) -> Option<BucketLadder> {
+        match name {
+            "exact" => Some(BucketLadder::Exact),
+            "pow2" => Some(BucketLadder::Pow2),
+            "max" => Some(BucketLadder::Max),
+            _ => {
+                let edges: Option<Vec<usize>> =
+                    name.split(',').map(|s| s.trim().parse().ok()).collect();
+                let edges = edges?;
+                if edges.is_empty() || edges.contains(&0) || edges.windows(2).any(|w| w[0] >= w[1])
+                {
+                    return None;
+                }
+                Some(BucketLadder::Edges(edges))
+            }
+        }
+    }
+
+    /// The bucket edge for a request of `trip` blocks under a plan
+    /// whose registered trip is `registered` (`1 <= trip <=
+    /// registered`, enforced at admission).
+    pub fn edge_for(&self, trip: usize, registered: usize) -> usize {
+        match self {
+            BucketLadder::Exact => trip,
+            BucketLadder::Pow2 => trip.next_power_of_two().min(registered),
+            BucketLadder::Max => registered,
+            BucketLadder::Edges(edges) => edges
+                .iter()
+                .copied()
+                .find(|&e| e >= trip)
+                .map(|e| e.min(registered))
+                .unwrap_or(trip),
+        }
+    }
+}
+
+/// What to shed when a queue is at [`ServerConfig::queue_cap`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum ShedPolicy {
     /// Reject the arriving request; queued work is never evicted.
@@ -373,6 +471,17 @@ pub struct ProgramStats {
     /// deliberately do not show (they keep the sequential-parity
     /// contract).
     pub launches: u64,
+    /// Bytes loaded by pad blocks (pad-to-bucket waste) across this
+    /// workload's stacked launches. Pad traffic executes for real but
+    /// is never attributed to a request's own counters: per launch,
+    /// `aggregate loads == Σ per-request loads + padded loads`.
+    pub padded_loaded_bytes: u64,
+    /// Bytes stored by pad blocks — see
+    /// [`ProgramStats::padded_loaded_bytes`].
+    pub padded_stored_bytes: u64,
+    /// Flops burned on pad blocks — see
+    /// [`ProgramStats::padded_loaded_bytes`].
+    pub padded_flops: u64,
     /// Per-request end-to-end latency (queue + batched launch) of the
     /// most recent [`LATENCY_SAMPLE_CAP`] requests (a ring buffer — the
     /// latency summaries describe that window).
@@ -479,8 +588,13 @@ struct Served {
     block: Graph,
     full_shapes: HashMap<String, (usize, usize)>,
     model: CostModel,
-    queue: VecDeque<Pending>,
-    /// `Some` iff the plan can coalesce same-shape batches into one
+    /// One queue per shape bucket, keyed by bucket edge
+    /// ([`BucketLadder::edge_for`]; 0 for a non-stackable plan, whose
+    /// requests are all full-shape). Requests in one bucket share
+    /// stacked launches; buckets flush independently, each with its
+    /// own due time.
+    queues: BTreeMap<usize, VecDeque<Pending>>,
+    /// `Some` iff the plan can coalesce same-bucket batches into one
     /// stacked launch (every segment's top-level nests grid over the
     /// same dim) — computed once at registration.
     stack: Option<StackInfo>,
@@ -488,9 +602,15 @@ struct Served {
     /// bound once per stacked launch): a batch only coalesces when
     /// these are bit-identical across its requests.
     shared_inputs: BTreeSet<String>,
-    /// Stacked re-binds of the prepared plan, one per batch size seen
-    /// (bounded by `max_batch`; each is only the cheap bind phase).
-    stacked: HashMap<usize, StackedPlan>,
+    /// For each stack-dim-carrying program input, the matrix axis it
+    /// stacks along — how [`ModelServer::submit`] derives a ragged
+    /// request's trip from its extents.
+    stack_axes: BTreeMap<String, usize>,
+    /// Stacked re-binds of the prepared plan, keyed by **total trip**
+    /// (uniform batches bind at `batch · trip`; ragged batches at the
+    /// sum of their trips plus pads — bounded by the bucket ladder's
+    /// edges times `max_batch`). Each is only the cheap bind phase.
+    stacked: HashMap<usize, Arc<StackedPlan>>,
     /// Fair-share weight ([`ModelServer::set_weight`], default 1): per
     /// scheduling round this workload may flush up to
     /// `weight * max_batch` requests before yielding the turn.
@@ -509,6 +629,10 @@ struct Pending {
     /// Effective absolute deadline (request's own, else admission time
     /// plus [`ServerConfig::deadline`]); `None` = never expires.
     deadline: Option<Instant>,
+    /// Block count along the stackable grid dim, derived from the
+    /// request's extents at admission (== the registered trip for a
+    /// full-shape request; 0 when the plan is not stackable).
+    trip: usize,
 }
 
 /// The compile-once model server (see module docs).
@@ -591,6 +715,10 @@ impl ModelServer {
             .as_ref()
             .map(|info| unstacked_inputs(&prepared, info))
             .unwrap_or_default();
+        let stack_axes = stack
+            .as_ref()
+            .map(|info| stacked_input_axes(&prepared, info))
+            .unwrap_or_default();
         let st = self.stats.per_program.entry(name.to_string()).or_default();
         st.compiles += 1;
         st.binds += prepared.binds;
@@ -601,9 +729,10 @@ impl ModelServer {
                 block: compiled.block,
                 full_shapes,
                 model,
-                queue: VecDeque::new(),
+                queues: BTreeMap::new(),
                 stack,
                 shared_inputs,
+                stack_axes,
                 stacked: HashMap::new(),
                 weight: 1,
                 deficit: 0,
@@ -636,34 +765,55 @@ impl ModelServer {
         self.programs.get(name).map(|s| s.weight)
     }
 
-    /// Enqueue a request; returns its id. The request is validated (the
-    /// workload must be registered, every program input present at its
-    /// registered full shape — `Err` on violations, as before), then
-    /// passes admission control: a draining server, an
-    /// already-expired deadline, or a queue at
-    /// [`ServerConfig::queue_cap`] sheds it with a typed
-    /// [`Verdict::Rejected`] response delivered by the next
-    /// [`ModelServer::poll`]/[`ModelServer::drain`]. Admitted or shed,
-    /// every `Ok(id)` yields exactly one response.
+    /// Enqueue a request; returns its id. The request is validated
+    /// first (`Err` on violations, which never consume admission
+    /// accounting): the workload must be registered and every program
+    /// input present. On a stackable plan the stack-dim-carrying
+    /// inputs may be **ragged** — any whole-block extent along the
+    /// stackable grid dim up to the registered shape — while every
+    /// other extent must match registration exactly; the derived trip
+    /// picks the request's shape bucket ([`ServerConfig::buckets`]).
+    /// Then admission control: a draining server, an already-expired
+    /// deadline, or a workload at [`ServerConfig::queue_cap`] sheds it
+    /// with a typed [`Verdict::Rejected`] response delivered by the
+    /// next [`ModelServer::poll`]/[`ModelServer::drain`]. Admitted or
+    /// shed, every `Ok(id)` yields exactly one response.
     pub fn submit(&mut self, req: Request) -> anyhow::Result<u64> {
         let served = self
             .programs
             .get_mut(&req.workload)
             .ok_or_else(|| anyhow!("unknown workload {}", req.workload))?;
-        for (input, &(r, c)) in &served.full_shapes {
-            let m = req
-                .inputs
-                .get(input)
-                .ok_or_else(|| anyhow!("request for {} missing input {input}", req.workload))?;
-            if (m.rows, m.cols) != (r, c) {
-                bail!(
-                    "request for {}: input {input} is {}x{}, registered shape is {r}x{c}",
-                    req.workload,
-                    m.rows,
-                    m.cols
-                );
+        let trip = match &served.stack {
+            Some(info) => derive_trip(
+                &req.workload,
+                info,
+                &served.stack_axes,
+                &served.full_shapes,
+                &req.inputs,
+            )?,
+            None => {
+                // non-stackable plans serve exactly one shape
+                for (input, &(r, c)) in &served.full_shapes {
+                    let m = req.inputs.get(input).ok_or_else(|| {
+                        anyhow!("request for {} missing input {input}", req.workload)
+                    })?;
+                    if (m.rows, m.cols) != (r, c) {
+                        bail!(
+                            "request for {}: input {input} is {}x{}, registered shape is {r}x{c}",
+                            req.workload,
+                            m.rows,
+                            m.cols
+                        );
+                    }
+                }
+                0
             }
-        }
+        };
+        let bucket = served
+            .stack
+            .as_ref()
+            .map(|info| self.cfg.buckets.edge_for(trip, info.trip))
+            .unwrap_or(0);
         let id = self.next_id;
         self.next_id += 1;
         let now = Instant::now();
@@ -698,7 +848,8 @@ impl ModelServer {
             return Ok(id);
         }
         if let Some(cap) = self.cfg.queue_cap {
-            if served.queue.len() >= cap {
+            // the cap bounds the whole workload, across its buckets
+            if served.queues.values().map(|q| q.len()).sum::<usize>() >= cap {
                 st.rejected_full += 1;
                 match self.cfg.shed_policy {
                     ShedPolicy::RejectNew => {
@@ -711,7 +862,17 @@ impl ModelServer {
                         return Ok(id);
                     }
                     ShedPolicy::DropOldest => {
-                        if let Some(evicted) = served.queue.pop_front() {
+                        // evict the oldest head across every bucket
+                        let oldest = served
+                            .queues
+                            .iter()
+                            .filter_map(|(k, q)| q.front().map(|p| (p.enqueued, *k)))
+                            .min()
+                            .map(|(_, k)| k);
+                        if let Some(evicted) = oldest
+                            .and_then(|k| served.queues.get_mut(&k))
+                            .and_then(|q| q.pop_front())
+                        {
                             self.deferred.push(Response::unserved(
                                 evicted.id,
                                 &req.workload,
@@ -723,11 +884,12 @@ impl ModelServer {
                 }
             }
         }
-        served.queue.push_back(Pending {
+        served.queues.entry(bucket).or_default().push_back(Pending {
             id,
             inputs: req.inputs,
             enqueued: now,
             deadline,
+            trip,
         });
         Ok(id)
     }
@@ -777,34 +939,99 @@ impl ModelServer {
         self.submit(Request::new(workload, inputs))
     }
 
-    /// Requests currently queued across all workloads.
-    pub fn pending(&self) -> usize {
-        self.programs.values().map(|s| s.queue.len()).sum()
+    /// Ragged variant of [`ModelServer::synthetic_inputs`]: stack-dim
+    /// carrying inputs are generated at `trip` blocks along their stack
+    /// axis (`1..=` the registered trip) instead of the full registered
+    /// extent; weight-like inputs still come from the fixed per-workload
+    /// stream, so ragged synthetic requests coalesce with full-shape
+    /// ones. Errors if the workload has no stackable grid dim.
+    pub fn synthetic_inputs_ragged(
+        &self,
+        workload: &str,
+        seed: u64,
+        trip: usize,
+    ) -> anyhow::Result<HashMap<String, Mat>> {
+        let served = self
+            .programs
+            .get(workload)
+            .ok_or_else(|| anyhow!("unknown workload {workload}"))?;
+        let info = served
+            .stack
+            .as_ref()
+            .ok_or_else(|| anyhow!("workload {workload} has no stackable grid dim"))?;
+        if trip < 1 || trip > info.trip {
+            bail!(
+                "ragged trip {trip} out of range 1..={} for workload {workload}",
+                info.trip
+            );
+        }
+        let mut names: Vec<&String> = served.full_shapes.keys().collect();
+        names.sort();
+        let mut rng = Rng::new(seed);
+        let mut weight_rng = Rng::new(SYNTHETIC_WEIGHT_SEED);
+        Ok(names
+            .into_iter()
+            .map(|n| {
+                let (r, c) = served.full_shapes[n];
+                let m = if served.shared_inputs.contains(n) {
+                    weight_rng.mat(r, c)
+                } else {
+                    match served.stack_axes.get(n) {
+                        Some(0) => rng.mat(r / info.trip * trip, c),
+                        Some(_) => rng.mat(r, c / info.trip * trip),
+                        None => rng.mat(r, c),
+                    }
+                };
+                (n.clone(), m)
+            })
+            .collect())
     }
 
-    /// Whether `name`'s queue is due a flush as of `now`: holds a full
-    /// batch ([`ServerConfig::max_batch`]), its oldest entry has waited
-    /// past [`ServerConfig::max_wait`] (the latency bound), or any
-    /// queued entry's deadline has expired (so the shed happens
-    /// promptly, not at the next unrelated flush).
+    /// Enqueue a ragged synthetic request: `trip` blocks along the
+    /// stackable grid dim (see [`ModelServer::synthetic_inputs_ragged`]).
+    pub fn submit_synthetic_ragged(
+        &mut self,
+        workload: &str,
+        seed: u64,
+        trip: usize,
+    ) -> anyhow::Result<u64> {
+        let inputs = self.synthetic_inputs_ragged(workload, seed, trip)?;
+        self.submit(Request::new(workload, inputs))
+    }
+
+    /// Requests currently queued across all workloads (and buckets).
+    pub fn pending(&self) -> usize {
+        self.programs
+            .values()
+            .flat_map(|s| s.queues.values())
+            .map(|q| q.len())
+            .sum()
+    }
+
+    /// Whether any of `name`'s bucket queues is due a flush as of
+    /// `now`: a bucket holds a full batch ([`ServerConfig::max_batch`]),
+    /// its oldest entry has waited past [`ServerConfig::max_wait`] (the
+    /// latency bound), or any of its entries' deadlines has expired (so
+    /// the shed happens promptly, not at the next unrelated flush).
     fn queue_due(&self, name: &str, now: Instant) -> bool {
         let Some(s) = self.programs.get(name) else {
             return false;
         };
-        s.queue.len() >= self.cfg.max_batch
-            || s.queue
-                .front()
-                .is_some_and(|p| now.duration_since(p.enqueued) >= self.cfg.max_wait)
-            || s.queue
-                .iter()
-                .any(|p| p.deadline.is_some_and(|d| d <= now))
+        s.queues.values().any(|q| {
+            q.len() >= self.cfg.max_batch
+                || q.front()
+                    .is_some_and(|p| now.duration_since(p.enqueued) >= self.cfg.max_wait)
+                || q.iter().any(|p| p.deadline.is_some_and(|d| d <= now))
+        })
     }
 
-    /// The earliest instant at which any queue becomes due — the
+    /// The earliest instant at which any bucket queue becomes due — the
     /// daemon's flusher sleeps exactly until this (or until new work
     /// arrives), which is how `max_wait` is honored *without polling*.
-    /// `None` means nothing is queued. A queue already holding a full
-    /// batch returns "now".
+    /// `None` means nothing is queued. A bucket already holding a full
+    /// batch returns "now". Each bucket ages independently: a lone
+    /// ragged straggler in one bucket wakes the flusher at its own
+    /// `max_wait`, not when some other bucket happens to fill.
     pub fn next_due(&self) -> Option<Instant> {
         let mut due: Option<Instant> = None;
         let mut fold = |t: Instant| {
@@ -814,16 +1041,18 @@ impl ModelServer {
             });
         };
         for s in self.programs.values() {
-            if s.queue.len() >= self.cfg.max_batch {
-                fold(Instant::now());
-                continue;
-            }
-            if let Some(p) = s.queue.front() {
-                fold(p.enqueued + self.cfg.max_wait);
-            }
-            for p in &s.queue {
-                if let Some(d) = p.deadline {
-                    fold(d);
+            for q in s.queues.values() {
+                if q.len() >= self.cfg.max_batch {
+                    fold(Instant::now());
+                    continue;
+                }
+                if let Some(p) = q.front() {
+                    fold(p.enqueued + self.cfg.max_wait);
+                }
+                for p in q {
+                    if let Some(d) = p.deadline {
+                        fold(d);
+                    }
                 }
             }
         }
@@ -876,7 +1105,17 @@ impl ModelServer {
                     if flushed.is_empty() {
                         break;
                     }
-                    deficit = deficit.saturating_sub(flushed.len() as u64);
+                    // Only responses that occupied a launch slot debit
+                    // the deficit. Deadline-shed rejections never
+                    // executed — debiting them (the old `flushed.len()`)
+                    // charged a workload for work it didn't get,
+                    // shrinking its fair share below its weight
+                    // whenever its queue carried expired entries.
+                    let occupied = flushed
+                        .iter()
+                        .filter(|r| !matches!(r.verdict, Verdict::Rejected(_)))
+                        .count() as u64;
+                    deficit = deficit.saturating_sub(occupied);
                     out.extend(flushed);
                     any = true;
                 }
@@ -901,10 +1140,16 @@ impl ModelServer {
     /// poll cycle.
     /// Returns the responses of every batch launched plus any pending
     /// admission-control rejections; an empty vec means nothing was due.
+    ///
+    /// Due-ness is re-evaluated **per eligibility check**, not once per
+    /// poll: an entry that crosses `max_wait` (or its deadline) while a
+    /// long burst drains earlier in the same poll is flushed by this
+    /// poll, not parked until the next wakeup — which matters to the
+    /// daemon, whose flusher would otherwise sleep until the *next*
+    /// queue event while an already-due request sat queued.
     pub fn poll(&mut self) -> Vec<Response> {
-        let now = Instant::now();
         let mut out = std::mem::take(&mut self.deferred);
-        out.extend(self.sweep_flush(move |s, name| s.queue_due(name, now)));
+        out.extend(self.sweep_flush(|s, name| s.queue_due(name, Instant::now())));
         out
     }
 
@@ -915,7 +1160,9 @@ impl ModelServer {
     pub fn drain(&mut self) -> Vec<Response> {
         let mut out = std::mem::take(&mut self.deferred);
         out.extend(self.sweep_flush(|s, name| {
-            s.programs.get(name).is_some_and(|p| !p.queue.is_empty())
+            s.programs
+                .get(name)
+                .is_some_and(|p| p.queues.values().any(|q| !q.is_empty()))
         }));
         out
     }
@@ -933,10 +1180,20 @@ impl ModelServer {
         self.shutting_down
     }
 
-    /// Take up to `max_batch` queued requests of `name` and launch them
-    /// as one batch, first shedding queued entries whose deadline
-    /// expired (each gets a [`Rejected::DeadlineExpired`] response —
-    /// expired work must not burn a launch slot).
+    /// Take up to `max_batch` queued requests of one of `name`'s
+    /// bucket queues and launch them as one batch, first shedding
+    /// queued entries whose deadline expired (each gets a
+    /// [`Rejected::DeadlineExpired`] response — expired work must not
+    /// burn a launch slot). Bucket choice: the due bucket (full,
+    /// latency-bound) with the oldest head; if none is due (the drain
+    /// path), the oldest head overall. A flush takes whatever its
+    /// bucket holds *now* — requests admitted after the previous
+    /// launch ride this one (continuous batching).
+    ///
+    /// The expiry shed is a single retain-style pass per bucket: the
+    /// old `VecDeque::remove(i)` loop shifted the queue's tail on
+    /// every expired hit — O(n²) on a deeply-expired queue, which is
+    /// exactly the queue a deadline storm produces.
     fn flush_one(&mut self, name: &str) -> Vec<Response> {
         let now = Instant::now();
         let mut out = Vec::new();
@@ -946,24 +1203,52 @@ impl ModelServer {
                 // a no-op instead of the old `.expect` panic.
                 return out;
             };
-            let mut i = 0;
-            while i < served.queue.len() {
-                let expired = served.queue[i].deadline.is_some_and(|d| d <= now);
-                if expired {
-                    if let Some(p) = served.queue.remove(i) {
+            for q in served.queues.values_mut() {
+                if !q.iter().any(|p| p.deadline.is_some_and(|d| d <= now)) {
+                    continue;
+                }
+                let mut kept = VecDeque::with_capacity(q.len());
+                for p in q.drain(..) {
+                    if p.deadline.is_some_and(|d| d <= now) {
                         out.push(Response::unserved(
                             p.id,
                             name,
                             Verdict::Rejected(Rejected::DeadlineExpired),
                             now.duration_since(p.enqueued).as_nanos(),
                         ));
+                    } else {
+                        kept.push_back(p);
                     }
-                } else {
-                    i += 1;
                 }
+                *q = kept;
             }
-            let take = served.queue.len().min(self.cfg.max_batch);
-            served.queue.drain(..take).collect()
+            served.queues.retain(|_, q| !q.is_empty());
+            let due_key = |q: &VecDeque<Pending>| {
+                q.len() >= self.cfg.max_batch
+                    || q.front()
+                        .is_some_and(|p| now.duration_since(p.enqueued) >= self.cfg.max_wait)
+            };
+            let pick = served
+                .queues
+                .iter()
+                .filter(|(_, q)| due_key(q))
+                .filter_map(|(k, q)| q.front().map(|p| (p.enqueued, *k)))
+                .min()
+                .or_else(|| {
+                    served
+                        .queues
+                        .iter()
+                        .filter_map(|(k, q)| q.front().map(|p| (p.enqueued, *k)))
+                        .min()
+                })
+                .map(|(_, k)| k);
+            match pick.and_then(|k| served.queues.get_mut(&k)) {
+                Some(q) => {
+                    let take = q.len().min(self.cfg.max_batch);
+                    q.drain(..take).collect()
+                }
+                None => Vec::new(),
+            }
         };
         if !out.is_empty() {
             let st = self.stats.per_program.entry(name.to_string()).or_default();
@@ -978,12 +1263,18 @@ impl ModelServer {
     /// Execute one batch. With coalescing on and an eligible batch
     /// (stackable plan, ≥2 requests, shared weights bit-identical) the
     /// whole batch becomes **one stacked tape launch** across the full
-    /// worker budget ([`crate::coordinator::execute_prepared_stacked`]):
-    /// per-segment launch overhead is paid once instead of once per
-    /// request. Otherwise the batch fans out as one pool submission
-    /// whose tasks each run one request's plan. With one request (or a
-    /// worker cap of 1) the fan-out runs inline on the caller — the
-    /// exact serial path.
+    /// worker budget
+    /// ([`crate::coordinator::execute_prepared_stacked_spec`]): each
+    /// request rides at its own trip, padded to its bucket edge when
+    /// padding is on, and per-segment launch overhead is paid once
+    /// instead of once per request. Stacked binds are cached by *total*
+    /// trip, so any mix of trips landing on the same total reuses one
+    /// bind. Otherwise the batch fans out as one pool submission whose
+    /// tasks each run one request's plan — ragged requests via a
+    /// single-request stacked bind (the registered-shape plan cannot
+    /// execute them), full-shape requests via the plain prepared plan.
+    /// With one request (or a worker cap of 1) the fan-out runs inline
+    /// on the caller — the exact serial path.
     ///
     /// **Panic isolation.** Every launch body runs under `catch_unwind`:
     /// a panic (real or injected via [`crate::util::fault`]) poisons
@@ -1032,24 +1323,49 @@ impl ModelServer {
         let prepared = Arc::clone(&served.prepared);
         let mut new_binds = 0u64;
         let outcome = if let Some(info) = stack_info {
-            if !served.stacked.contains_key(&bs) {
-                let sp = bind_stacked(&prepared, &info, bs);
-                new_binds = sp.binds;
-                served.stacked.insert(bs, sp);
-            }
-            let stacked = &served.stacked[&bs];
+            // Ragged-aware stack spec: each request at its own trip
+            // (all from one bucket, but trips may differ within it),
+            // padded to its bucket edge when padding is on. Binds are
+            // cached by total trip, so uniform and ragged batches that
+            // land on the same total share one bind.
+            let spec = StackSpec {
+                trips: batch.iter().map(|p| p.trip).collect(),
+                pads: if self.cfg.pad {
+                    batch
+                        .iter()
+                        .map(|p| self.cfg.buckets.edge_for(p.trip, info.trip) - p.trip)
+                        .collect()
+                } else {
+                    vec![0; bs]
+                },
+            };
+            let total = spec.total_trip();
+            let stacked = match served.stacked.get(&total) {
+                Some(sp) => Arc::clone(sp),
+                None => {
+                    let sp = Arc::new(bind_stacked_trip(&prepared, &info, total));
+                    new_binds = sp.binds;
+                    served.stacked.insert(total, Arc::clone(&sp));
+                    sp
+                }
+            };
             let input_refs: Vec<&HashMap<String, Mat>> = batch.iter().map(|p| &p.inputs).collect();
             let t0 = Instant::now();
             let run = catch_unwind(AssertUnwindSafe(|| {
                 if fault::injected(fault::Site::Compute) {
                     panic!("injected compute fault (stacked batch)");
                 }
-                execute_prepared_stacked(&prepared, stacked, &input_refs, threads)
+                execute_prepared_stacked_spec(&prepared, &stacked, &spec, &input_refs, threads)
             }));
             let t1 = Instant::now();
             match run {
                 Ok(br) => Flushed {
                     launches: br.agg.kernel_launches,
+                    padded: (
+                        br.agg.padded_loaded_bytes,
+                        br.agg.padded_stored_bytes,
+                        br.agg.padded_flops,
+                    ),
                     results: br.runs.into_iter().map(Ok).collect(),
                     coalesced: true,
                     contained: 0,
@@ -1062,6 +1378,7 @@ impl ModelServer {
                     let msg = panic_message(p);
                     Flushed {
                         launches: 0,
+                        padded: (0, 0, 0),
                         results: (0..bs).map(|_| Err(msg.clone())).collect(),
                         coalesced: false,
                         contained: 1,
@@ -1071,14 +1388,71 @@ impl ModelServer {
                 }
             }
         } else {
+            // Fan-out. Full-shape requests run the plain prepared plan;
+            // a ragged request rides a single-request stacked bind at
+            // its own trip (padded to its bucket edge when padding is
+            // on) — the registered-shape bind cannot execute it. Binds
+            // happen here, serially, so pool tasks only read.
+            let info_opt = served.stack.clone();
+            let mut singles: HashMap<usize, (Arc<StackedPlan>, StackSpec)> = HashMap::new();
+            if let Some(info) = &info_opt {
+                for p in &batch {
+                    if p.trip != info.trip && !singles.contains_key(&p.trip) {
+                        let pad = if self.cfg.pad {
+                            self.cfg.buckets.edge_for(p.trip, info.trip) - p.trip
+                        } else {
+                            0
+                        };
+                        let spec = StackSpec {
+                            trips: vec![p.trip],
+                            pads: vec![pad],
+                        };
+                        let total = spec.total_trip();
+                        let sp = match served.stacked.get(&total) {
+                            Some(sp) => Arc::clone(sp),
+                            None => {
+                                let sp = Arc::new(bind_stacked_trip(&prepared, info, total));
+                                new_binds += sp.binds;
+                                served.stacked.insert(total, Arc::clone(&sp));
+                                sp
+                            }
+                        };
+                        singles.insert(p.trip, (sp, spec));
+                    }
+                }
+            }
+            // Each task result carries its pad waste (zero on the plain
+            // path) alongside the request's own parity-contract run.
+            type TaskResult = Result<(PlanRun, (u64, u64, u64)), String>;
+            let exec_one = |p: &Pending, threads: Option<usize>| -> TaskResult {
+                match singles.get(&p.trip) {
+                    Some((sp, spec)) => catch_unwind(AssertUnwindSafe(|| {
+                        if fault::injected(fault::Site::Compute) {
+                            panic!("injected compute fault");
+                        }
+                        let mut br = execute_prepared_stacked_spec(
+                            &prepared,
+                            sp,
+                            spec,
+                            &[&p.inputs],
+                            threads,
+                        );
+                        let waste = (
+                            br.agg.padded_loaded_bytes,
+                            br.agg.padded_stored_bytes,
+                            br.agg.padded_flops,
+                        );
+                        (br.runs.remove(0), waste)
+                    }))
+                    .map_err(panic_message),
+                    None => execute_guarded(&prepared, &p.inputs, threads).map(|r| (r, (0, 0, 0))),
+                }
+            };
             let t0 = Instant::now();
-            let results: Vec<Result<PlanRun, String>> = if workers <= 1 || bs == 1 {
+            let results: Vec<TaskResult> = if workers <= 1 || bs == 1 {
                 // Serial path: intra-request grid parallelism still
                 // applies under the caller's thread budget.
-                batch
-                    .iter()
-                    .map(|p| execute_guarded(&prepared, &p.inputs, threads))
-                    .collect()
+                batch.iter().map(|p| exec_one(p, threads)).collect()
             } else {
                 // One heterogeneous pool job for the whole batch. Each
                 // task runs its request serially (threads=1): the batch
@@ -1087,11 +1461,11 @@ impl ModelServer {
                 // bodies guard themselves, so a panicking request fails
                 // alone; the outer guard and the poison-recovering slot
                 // locks are defense in depth against pool internals.
-                let slots: Vec<Mutex<Option<Result<PlanRun, String>>>> =
+                let slots: Vec<Mutex<Option<TaskResult>>> =
                     (0..bs).map(|_| Mutex::new(None)).collect();
                 let submit = catch_unwind(AssertUnwindSafe(|| {
                     pool::global().run_tasks(workers, bs, &|t| {
-                        let run = execute_guarded(&prepared, &batch[t].inputs, Some(1));
+                        let run = exec_one(&batch[t], Some(1));
                         *slots[t].lock().unwrap_or_else(|e| e.into_inner()) = Some(run);
                     });
                 }));
@@ -1111,12 +1485,19 @@ impl ModelServer {
             };
             let launches = results
                 .iter()
-                .filter_map(|r| r.as_ref().ok().map(|x| x.mem.kernel_launches))
+                .filter_map(|r| r.as_ref().ok().map(|(x, _)| x.mem.kernel_launches))
                 .sum();
+            let padded = results
+                .iter()
+                .filter_map(|r| r.as_ref().ok())
+                .fold((0u64, 0u64, 0u64), |acc, (_, w)| {
+                    (acc.0 + w.0, acc.1 + w.1, acc.2 + w.2)
+                });
             let contained = results.iter().filter(|r| r.is_err()).count() as u64;
             Flushed {
                 launches,
-                results,
+                padded,
+                results: results.into_iter().map(|r| r.map(|(run, _)| run)).collect(),
                 coalesced: false,
                 contained,
                 launched: t0,
@@ -1134,6 +1515,9 @@ impl ModelServer {
         st.peak_batch = st.peak_batch.max(bs);
         st.launches += outcome.launches;
         st.binds += new_binds;
+        st.padded_loaded_bytes += outcome.padded.0;
+        st.padded_stored_bytes += outcome.padded.1;
+        st.padded_flops += outcome.padded.2;
         if outcome.coalesced {
             st.coalesced += bs as u64;
             st.stacked_batches += 1;
@@ -1235,6 +1619,10 @@ impl ModelServer {
             .as_ref()
             .map(|info| unstacked_inputs(&prepared, info))
             .unwrap_or_default();
+        let stack_axes = stack
+            .as_ref()
+            .map(|info| stacked_input_axes(&prepared, info))
+            .unwrap_or_default();
         let binds = prepared.binds;
         let Some(served) = self.programs.get_mut(name) else {
             bail!("workload {name} disappeared during adopt_sizes");
@@ -1242,10 +1630,77 @@ impl ModelServer {
         served.prepared = Arc::new(prepared);
         served.stack = stack;
         served.shared_inputs = shared_inputs;
+        served.stack_axes = stack_axes;
         served.stacked.clear();
+        // Re-bucket queued requests against the new plan: bucket edges
+        // are keyed by the plan's registered trip, so both the edges
+        // and each entry's derived trip can shift under a swap. An
+        // entry whose extents no longer divide the new plan's stack
+        // unit cannot execute; it fails out here (as a deferred
+        // response) so the submitted/accounted ledger stays exact.
+        let queued: Vec<Pending> = served
+            .queues
+            .values_mut()
+            .flat_map(|q| q.drain(..))
+            .collect();
+        served.queues.clear();
+        let mut dropped: Vec<(Pending, String)> = Vec::new();
+        for p in queued {
+            match &served.stack {
+                Some(info) => match derive_trip(
+                    name,
+                    info,
+                    &served.stack_axes,
+                    &served.full_shapes,
+                    &p.inputs,
+                ) {
+                    Ok(trip) => {
+                        let bucket = self.cfg.buckets.edge_for(trip, info.trip);
+                        served
+                            .queues
+                            .entry(bucket)
+                            .or_default()
+                            .push_back(Pending { trip, ..p });
+                    }
+                    Err(e) => dropped.push((p, e.to_string())),
+                },
+                None => {
+                    let full = served.full_shapes.iter().all(|(input, &(r, c))| {
+                        p.inputs
+                            .get(input)
+                            .is_some_and(|m| (m.rows, m.cols) == (r, c))
+                    });
+                    if full {
+                        served
+                            .queues
+                            .entry(0)
+                            .or_default()
+                            .push_back(Pending { trip: 0, ..p });
+                    } else {
+                        dropped.push((
+                            p,
+                            format!(
+                                "plan swap for {name}: queued ragged request no longer \
+                                 matches a stackable plan"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
         let st = self.stats.per_program.entry(name.to_string()).or_default();
         st.binds += binds;
         st.plan_swaps += 1;
+        st.failed += dropped.len() as u64;
+        let now = Instant::now();
+        for (p, msg) in dropped {
+            self.deferred.push(Response::unserved(
+                p.id,
+                name,
+                Verdict::Failed(msg),
+                now.duration_since(p.enqueued).as_nanos(),
+            ));
+        }
         Ok(())
     }
 
@@ -1322,6 +1777,10 @@ struct Flushed {
     /// Kernel launches actually executed (0 for a poisoned stacked
     /// batch — nothing completed).
     launches: u64,
+    /// Pad-row waste this launch charged to the bucket edge, as
+    /// `(loaded_bytes, stored_bytes, flops)` — never part of any
+    /// request's own counters.
+    padded: (u64, u64, u64),
     /// Whether the batch rode one successful stacked launch.
     coalesced: bool,
     /// Panicking launches contained (1 per poisoned stacked batch, 1
@@ -1368,6 +1827,68 @@ fn effective_workers(threads: Option<usize>, tasks: usize) -> usize {
 /// (weight-like inputs are shared across all synthetic requests of a
 /// workload; activations vary with the request seed).
 const SYNTHETIC_WEIGHT_SEED: u64 = 0x5eed_b10c;
+
+/// Derive a request's trip (block count along the stack dim) from its
+/// input extents, validating everything else against the registered
+/// shape. Stack-dim-carrying inputs may shrink along their stack axis
+/// in whole block units (1..= the registered trip) but must all agree
+/// on the trip; every other extent — shared weights entirely, and the
+/// non-stack axis of stacked inputs — must match the registered shape
+/// exactly (the serving-level mirror of
+/// `loopir::compile::bucket_compatible`: only the stackable grid dim
+/// may differ).
+fn derive_trip(
+    workload: &str,
+    info: &StackInfo,
+    stack_axes: &BTreeMap<String, usize>,
+    full_shapes: &HashMap<String, (usize, usize)>,
+    inputs: &HashMap<String, Mat>,
+) -> anyhow::Result<usize> {
+    let mut trip: Option<usize> = None;
+    for (input, &(r, c)) in full_shapes {
+        let m = inputs
+            .get(input)
+            .ok_or_else(|| anyhow!("request for {workload} missing input {input}"))?;
+        match stack_axes.get(input) {
+            Some(&axis) => {
+                let (full_stack, got, fixed_ok) = if axis == 0 {
+                    (r, m.rows, m.cols == c)
+                } else {
+                    (c, m.cols, m.rows == r)
+                };
+                let unit = full_stack / info.trip;
+                if !fixed_ok || unit == 0 || got == 0 || got % unit != 0 || got / unit > info.trip
+                {
+                    bail!(
+                        "request for {workload}: input {input} is {}x{}, registered shape is \
+                         {r}x{c} (stackable in units of {unit} along axis {axis})",
+                        m.rows,
+                        m.cols
+                    );
+                }
+                let k = got / unit;
+                match trip {
+                    Some(prev) if prev != k => bail!(
+                        "request for {workload}: inconsistent ragged extents — input {input} \
+                         implies {k} block(s) along the stack dim, earlier inputs implied {prev}"
+                    ),
+                    _ => trip = Some(k),
+                }
+            }
+            None => {
+                if (m.rows, m.cols) != (r, c) {
+                    bail!(
+                        "request for {workload}: input {input} is {}x{}, registered shape is \
+                         {r}x{c}",
+                        m.rows,
+                        m.cols
+                    );
+                }
+            }
+        }
+    }
+    Ok(trip.unwrap_or(info.trip))
+}
 
 /// Bitwise equality of every shared (weight-like) input across a batch.
 /// Value equality (`==`) is not enough — `-0.0 == 0.0` and NaN never
@@ -1911,5 +2432,249 @@ mod tests {
             ["a", "a", "b", "b", "b", "b", "a", "a"],
             "one batch per workload per round (cursor rotates between rounds)"
         );
+    }
+
+    #[test]
+    fn bucket_ladder_parses_and_maps_trips_to_edges() {
+        assert_eq!(BucketLadder::from_name("exact"), Some(BucketLadder::Exact));
+        assert_eq!(BucketLadder::from_name("pow2"), Some(BucketLadder::Pow2));
+        assert_eq!(BucketLadder::from_name("max"), Some(BucketLadder::Max));
+        assert_eq!(
+            BucketLadder::from_name("2,4,8"),
+            Some(BucketLadder::Edges(vec![2, 4, 8]))
+        );
+        assert_eq!(BucketLadder::from_name("8,4"), None, "edges must ascend");
+        assert_eq!(BucketLadder::from_name("0,4"), None, "zero edge");
+        assert_eq!(BucketLadder::from_name("bogus"), None);
+        assert_eq!(BucketLadder::from_name(""), None);
+
+        assert_eq!(BucketLadder::Exact.edge_for(3, 8), 3);
+        assert_eq!(BucketLadder::Pow2.edge_for(3, 8), 4);
+        assert_eq!(BucketLadder::Pow2.edge_for(5, 8), 8);
+        assert_eq!(BucketLadder::Pow2.edge_for(5, 6), 6, "clamped to registered");
+        assert_eq!(BucketLadder::Max.edge_for(1, 8), 8);
+        let edges = BucketLadder::Edges(vec![2, 4]);
+        assert_eq!(edges.edge_for(1, 8), 2);
+        assert_eq!(edges.edge_for(3, 8), 4);
+        assert_eq!(edges.edge_for(5, 8), 5, "past the last edge: exact");
+    }
+
+    /// Regression (fairness debit): deadline-shed rejections used to
+    /// debit the workload's DRR deficit as if they had been served, so
+    /// a workload whose queue carried expired entries got less than its
+    /// weighted share of launch slots. Only responses that occupied a
+    /// slot may debit.
+    #[test]
+    fn deadline_sheds_do_not_debit_drr_deficit() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        for name in ["a", "b"] {
+            let (program, cfg, params, _inputs) = workloads::by_name("quickstart", 0).unwrap();
+            s.register_program(name, &program, cfg, params).unwrap();
+        }
+        s.set_weight("a", 2).unwrap();
+        // four requests that will be dead by drain time...
+        let dead = Instant::now() + Duration::from_millis(5);
+        for i in 0..4u64 {
+            let inputs = s.synthetic_inputs("a", i).unwrap();
+            s.submit(Request::new("a", inputs).with_deadline(dead)).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        // ...then live traffic on both workloads
+        for i in 4..8u64 {
+            let inputs = s.synthetic_inputs("a", i).unwrap();
+            s.submit(Request::new("a", inputs)).unwrap();
+        }
+        for i in 0..2u64 {
+            let inputs = s.synthetic_inputs("b", i).unwrap();
+            s.submit(Request::new("b", inputs)).unwrap();
+        }
+        let responses = s.drain();
+        assert_eq!(responses.len(), 10);
+        let shed = responses
+            .iter()
+            .filter(|r| r.verdict == Verdict::Rejected(Rejected::DeadlineExpired))
+            .count();
+        assert_eq!(shed, 4, "the stale requests shed at batch formation");
+        let served: Vec<&str> = responses
+            .iter()
+            .filter(|r| r.is_ok())
+            .map(|r| r.workload.as_str())
+            .collect();
+        // a's full quantum (weight 2 x max_batch 2) serves all four
+        // live requests before the cursor moves on; the old debit
+        // handed b the round after a had served only two.
+        assert_eq!(served, ["a", "a", "a", "a", "b", "b"]);
+        for name in ["a", "b"] {
+            let st = &s.stats().per_program[name];
+            assert_eq!(st.accounted(), st.submitted, "{name} ledger");
+        }
+    }
+
+    /// Regression (shed complexity): the expiry shed used
+    /// `VecDeque::remove(i)` per expired entry — O(n²) on a
+    /// deeply-expired queue, exactly what a deadline storm produces. A
+    /// 10k-expired backlog must shed in one poll, in one pass.
+    #[test]
+    fn expired_backlog_sheds_in_one_poll() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            deadline: Some(Duration::from_millis(5)),
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        let inputs = s.synthetic_inputs("quickstart", 0).unwrap();
+        for _ in 0..10_000 {
+            s.submit(Request::new("quickstart", inputs.clone())).unwrap();
+        }
+        assert_eq!(s.pending(), 10_000);
+        std::thread::sleep(Duration::from_millis(10));
+        let r = s.poll();
+        assert_eq!(r.len(), 10_000, "the whole expired backlog sheds in one poll");
+        assert!(r
+            .iter()
+            .all(|x| x.verdict == Verdict::Rejected(Rejected::DeadlineExpired)));
+        assert_eq!(s.pending(), 0);
+        let st = &s.stats().per_program["quickstart"];
+        assert_eq!(st.shed_deadline, 10_000);
+        assert_eq!(st.batches, 0, "no launch burned");
+        assert_eq!(st.accounted(), st.submitted);
+    }
+
+    /// Regression (stale `now` in poll): a request crossing `max_wait`
+    /// while a long burst drains must flush in the *same* poll. The old
+    /// code captured `now` once per poll, so the straggler sat through
+    /// the whole drain and waited for the next wakeup.
+    #[test]
+    fn poll_reevaluates_due_ness_per_sweep() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(5),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        for name in ["heavy", "light"] {
+            let (program, cfg, params, _inputs) = workloads::by_name("attention", 0).unwrap();
+            s.register_program(name, &program, cfg, params).unwrap();
+        }
+        for i in 0..16u64 {
+            let inputs = s.synthetic_inputs("heavy", i).unwrap();
+            s.submit(Request::new("heavy", inputs)).unwrap();
+        }
+        // submitted immediately before the poll: not yet latency-due
+        // when the poll starts, due well before its 16 heavy batches
+        // finish draining
+        let inputs = s.synthetic_inputs("light", 99).unwrap();
+        s.submit(Request::new("light", inputs)).unwrap();
+        let r = s.poll();
+        assert!(
+            r.iter().any(|x| x.workload == "light"),
+            "a request crossing max_wait during the drain flushes in the same poll"
+        );
+        assert_eq!(r.len(), 17);
+    }
+
+    /// Ragged coalescing smoke: four distinct trips land in one bucket
+    /// under the `max` ladder and ride ONE stacked launch with zero pad
+    /// waste; under `pow2` + padding, mixed trips sharing an edge pay
+    /// explicit pad counters that never leak into any request's own
+    /// MemSim.
+    #[test]
+    fn ragged_mixed_trips_coalesce_into_one_stacked_launch() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(2),
+            coalesce: true,
+            buckets: BucketLadder::Max,
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        for (i, trip) in [1usize, 2, 3, 4].into_iter().enumerate() {
+            s.submit_synthetic_ragged("quickstart", i as u64, trip).unwrap();
+        }
+        let r = s.poll();
+        assert_eq!(r.len(), 4);
+        assert!(r.iter().all(|x| x.is_ok() && x.coalesced && x.batch_size == 4));
+        let st = &s.stats().per_program["quickstart"];
+        assert_eq!(st.stacked_batches, 1);
+        assert_eq!(st.coalesced, 4);
+        assert_eq!(
+            (st.padded_loaded_bytes, st.padded_stored_bytes, st.padded_flops),
+            (0, 0, 0),
+            "max ladder with padding off stacks ragged, never pads"
+        );
+        assert!(r
+            .iter()
+            .all(|x| x.mem.padded_loaded_bytes == 0 && x.mem.padded_flops == 0));
+
+        // pow2 ladder + padding: trips 3 and 4 share the 4-edge bucket,
+        // the trip-3 request pads by one block — charged to the
+        // program's pad counters, invisible in either request's own.
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(2),
+            coalesce: true,
+            buckets: BucketLadder::Pow2,
+            pad: true,
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        s.submit_synthetic_ragged("quickstart", 0, 3).unwrap();
+        s.submit_synthetic_ragged("quickstart", 1, 4).unwrap();
+        let r = s.poll();
+        assert_eq!(r.len(), 2);
+        assert!(r.iter().all(|x| x.is_ok() && x.coalesced));
+        let st = &s.stats().per_program["quickstart"];
+        assert_eq!(st.stacked_batches, 1);
+        assert!(
+            st.padded_loaded_bytes > 0 && st.padded_flops > 0,
+            "pad rows charged explicitly"
+        );
+        assert!(
+            r.iter()
+                .all(|x| x.mem.padded_loaded_bytes == 0 && x.mem.padded_flops == 0),
+            "pad waste never leaks into a request's own counters"
+        );
+    }
+
+    /// With the default `exact` ladder, a ragged request simply fans
+    /// out (its own bucket, its own single-request stacked bind) and
+    /// still serves correctly — the pre-bucket behavior for full-shape
+    /// traffic, graceful degradation for ragged.
+    #[test]
+    fn exact_ladder_serves_ragged_without_cross_trip_coalescing() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            coalesce: true,
+            ..ServerConfig::default()
+        });
+        s.register("quickstart").unwrap();
+        s.submit_synthetic_ragged("quickstart", 0, 1).unwrap();
+        s.submit_synthetic_ragged("quickstart", 1, 2).unwrap();
+        s.submit_synthetic_ragged("quickstart", 2, 3).unwrap();
+        let r = s.drain();
+        assert_eq!(r.len(), 3);
+        assert!(r.iter().all(|x| x.is_ok()));
+        let st = &s.stats().per_program["quickstart"];
+        assert_eq!(st.stacked_batches, 0, "distinct trips, distinct buckets");
+        assert_eq!(
+            (st.padded_loaded_bytes, st.padded_flops),
+            (0, 0),
+            "exact edges never pad"
+        );
+        // outputs scale with each request's own trip
+        let trips: Vec<usize> = r.iter().map(|x| x.outputs["C"].rows).collect();
+        let unit = trips.iter().min().copied().unwrap();
+        assert!(trips.iter().all(|t| t % unit == 0));
     }
 }

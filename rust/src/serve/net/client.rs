@@ -18,7 +18,7 @@
 use super::proto::{self, Frame, WireHealth, WireRequest, WireResponse, HEADER_LEN, PREAMBLE_LEN};
 use super::{read_full, ReadEnd};
 use crate::coordinator::workloads;
-use crate::serve::Verdict;
+use crate::serve::{ModelServer, ServerConfig, Verdict};
 use crate::tensor::Mat;
 use crate::util::fault::{self, Site};
 use std::io::{self, ErrorKind, Write};
@@ -227,6 +227,25 @@ impl NetClient {
         self.call(&req)
     }
 
+    /// [`NetClient::call`] with *ragged* synthetic inputs: `trip` blocks
+    /// along the workload's stackable grid dim instead of the full
+    /// registered extent (see [`synthetic_ragged_request`]).
+    pub fn call_synthetic_ragged(
+        &mut self,
+        workload: &str,
+        corr: u64,
+        seed: u64,
+        trip: usize,
+    ) -> io::Result<WireResponse> {
+        let req = synthetic_ragged_request(workload, corr, seed, trip).ok_or_else(|| {
+            ioerr(
+                ErrorKind::InvalidInput,
+                format!("unknown or non-stackable workload {workload} (trip {trip})"),
+            )
+        })?;
+        self.call(&req)
+    }
+
     /// Probe server liveness.
     pub fn health(&mut self) -> io::Result<WireHealth> {
         let bytes = proto::encode_frame(&Frame::Health);
@@ -253,6 +272,34 @@ impl NetClient {
 /// bytes are reproducible.
 pub fn synthetic_request(workload: &str, corr: u64, seed: u64) -> Option<WireRequest> {
     let (_program, _cfg, _params, inputs) = workloads::by_name(workload, seed)?;
+    let mut inputs: Vec<(String, Mat)> = inputs.into_iter().collect();
+    inputs.sort_by(|a, b| a.0.cmp(&b.0));
+    Some(WireRequest {
+        corr,
+        workload: workload.to_string(),
+        deadline_ms: 0,
+        inputs,
+    })
+}
+
+/// Build a deterministic *ragged* synthetic [`WireRequest`]: stack-dim
+/// carrying inputs at `trip` blocks (`1..=` the workload's registered
+/// trip), weight-like inputs from the fixed per-workload stream — so
+/// ragged wire traffic coalesces server-side with full-shape synthetic
+/// requests regardless of seed. This *is* the server's generator
+/// ([`ModelServer::synthetic_inputs_ragged`]), run against a throwaway
+/// local registration, so the bytes on the wire match what a local
+/// server would enqueue. The registration compiles the workload once
+/// per call: generate requests outside timed loops.
+pub fn synthetic_ragged_request(
+    workload: &str,
+    corr: u64,
+    seed: u64,
+    trip: usize,
+) -> Option<WireRequest> {
+    let mut server = ModelServer::new(ServerConfig::default());
+    server.register(workload).ok()?;
+    let inputs = server.synthetic_inputs_ragged(workload, seed, trip).ok()?;
     let mut inputs: Vec<(String, Mat)> = inputs.into_iter().collect();
     inputs.sort_by(|a, b| a.0.cmp(&b.0));
     Some(WireRequest {
@@ -348,5 +395,25 @@ mod tests {
         let c = synthetic_request("quickstart", 1, 8).unwrap();
         assert_ne!(a.inputs, c.inputs, "different seed, different inputs");
         assert!(synthetic_request("no_such_workload", 0, 0).is_none());
+    }
+
+    #[test]
+    fn ragged_synthetic_requests_scale_the_stack_dim() {
+        let full = synthetic_ragged_request("quickstart", 0, 7, 4).unwrap();
+        let half = synthetic_ragged_request("quickstart", 1, 7, 2).unwrap();
+        let a_full = &full.inputs.iter().find(|(n, _)| n == "A").unwrap().1;
+        let a_half = &half.inputs.iter().find(|(n, _)| n == "A").unwrap().1;
+        assert_eq!(a_full.rows, 32);
+        assert_eq!(a_half.rows, 16, "half the registered trip, half the rows");
+        assert_eq!(a_full.cols, a_half.cols);
+        // weights ride the fixed stream: bit-identical across seeds, so
+        // ragged wire traffic coalesces with any other synthetic request
+        let bt_full = &full.inputs.iter().find(|(n, _)| n == "BT").unwrap().1;
+        let bt_half = &half.inputs.iter().find(|(n, _)| n == "BT").unwrap().1;
+        assert_eq!(bt_full, bt_half);
+        assert!(
+            synthetic_ragged_request("quickstart", 0, 0, 9).is_none(),
+            "trip above the registered trip"
+        );
     }
 }

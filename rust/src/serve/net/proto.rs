@@ -38,7 +38,7 @@ use std::fmt;
 pub const MAGIC: u32 = 0x4231_5042;
 /// Bumped on any incompatible frame-layout change; the preamble
 /// handshake rejects mismatches before any frame is parsed.
-pub const VERSION: u16 = 1;
+pub const VERSION: u16 = 2;
 /// Connection preamble length: magic + version + 2 reserved bytes.
 pub const PREAMBLE_LEN: usize = 8;
 /// Frame header length: kind + reserved + payload len + checksum.
@@ -267,6 +267,9 @@ impl Enc {
         self.u64(m.peak_local_bytes);
         self.u64(m.kernel_launches);
         self.u64(m.flops);
+        self.u64(m.padded_loaded_bytes);
+        self.u64(m.padded_stored_bytes);
+        self.u64(m.padded_flops);
     }
 }
 
@@ -360,6 +363,9 @@ impl<'a> Dec<'a> {
             peak_local_bytes: self.u64()?,
             kernel_launches: self.u64()?,
             flops: self.u64()?,
+            padded_loaded_bytes: self.u64()?,
+            padded_stored_bytes: self.u64()?,
+            padded_flops: self.u64()?,
         })
     }
 
@@ -613,6 +619,9 @@ mod tests {
                 peak_local_bytes: 5,
                 kernel_launches: 6,
                 flops: 7,
+                padded_loaded_bytes: 8,
+                padded_stored_bytes: 9,
+                padded_flops: 10,
             },
             outputs: vec![("Y".into(), m)],
         })));

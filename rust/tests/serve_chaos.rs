@@ -17,10 +17,14 @@
 //! Env overrides for CI sweeps: `BB_FAULT_RATE` scales the injected
 //! rate, `BB_CHAOS_ITERS` the request counts.
 
-use blockbuster::coordinator::{compile, execute_plan_opts, execute_prepared, workloads, PlanRun};
+use blockbuster::coordinator::{
+    compile, execute_plan_opts, execute_prepared, plan_stack_info, workloads, PlanRun,
+};
 use blockbuster::exec::{pool, ExecBackend};
 use blockbuster::serve::daemon::{Daemon, RetuneConfig, Ticket, INVALID_ID};
-use blockbuster::serve::{ModelServer, Rejected, Request, Response, ServerConfig, Verdict};
+use blockbuster::serve::{
+    BucketLadder, ModelServer, Rejected, Request, Response, ServerConfig, Verdict,
+};
 use blockbuster::tensor::Mat;
 use blockbuster::util::fault;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -237,6 +241,82 @@ fn stacked_batch_poisoning_fails_the_whole_batch_only() {
         // up to max_batch riders
         assert!(st.failed >= st.panics, "a poisoned stacked batch must fail every rider");
     }
+}
+
+/// Ragged traffic under chaos: a mixed-length stream through shape
+/// buckets (max ladder, padding on) with faults armed. Containment and
+/// the ledger hold exactly as for uniform traffic, and every surviving
+/// response is bit-identical to a sequential run at the request's OWN
+/// length — pad rows never leak into a survivor's counters even when
+/// neighbouring batches are being poisoned.
+#[test]
+fn ragged_stacked_chaos_survivors_stay_bit_identical() {
+    let _l = chaos_lock();
+    let program = "quickstart";
+    let n = env_iters(48);
+    let rate = env_rate(0.3);
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(2),
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        coalesce: true,
+        buckets: BucketLadder::Max,
+        pad: true,
+        ..ServerConfig::default()
+    });
+    server.register(program).unwrap();
+
+    // Ground truth FIRST, before arming: each request sequentially at
+    // its own trip (stack dim rebound per request).
+    let (p, cfg, params, _) = workloads::by_name(program, 0).unwrap();
+    let compiled = compile(&p, cfg.clone());
+    let info = plan_stack_info(&server.live_plan(program).unwrap())
+        .expect("quickstart stacks along M");
+    let mut expected = Vec::with_capacity(n);
+    let mut reqs = Vec::with_capacity(n);
+    for i in 0..n as u64 {
+        let trip = 1 + (i as usize % info.trip);
+        let inputs = server.synthetic_inputs_ragged(program, 6_000 + i, trip).unwrap();
+        let mut sizes = cfg.sizes.clone();
+        sizes.set(info.dim.clone(), trip);
+        expected.push(execute_plan_opts(
+            &compiled.plan,
+            &sizes,
+            &params,
+            &inputs,
+            ExecBackend::Compiled,
+            Some(2),
+        ));
+        reqs.push(Request::new(program, inputs));
+    }
+
+    let guard = FaultGuard::arm(rate, 0x4a66);
+    let daemon = Daemon::start(server, None);
+    let client = daemon.client();
+    let tickets: Vec<Ticket> = reqs.into_iter().map(|r| client.submit(r)).collect();
+    let responses: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+    let server = daemon.shutdown();
+    drop(guard);
+
+    assert_eq!(responses.len(), n, "every ragged submission must be answered");
+    for (i, r) in responses.iter().enumerate() {
+        match &r.verdict {
+            Verdict::Ok => {
+                assert_survivor_matches(i, r, &expected[i]);
+                assert_eq!(r.mem.padded_flops, 0, "request {i}: pad leaked into own counters");
+            }
+            Verdict::Failed(msg) => assert!(
+                msg.contains("injected"),
+                "request {i}: non-injected failure leaked through: {msg}"
+            ),
+            Verdict::Rejected(rej) => panic!("request {i}: unexpected rejection {rej:?}"),
+        }
+    }
+    let st = &server.stats().per_program[program];
+    assert_eq!(st.accounted(), st.submitted, "ragged ledger must reconcile under faults");
+    assert_eq!(st.served + st.failed, n as u64);
+    assert_eq!(st.compiles, 1, "ragged stacked binds under chaos never recompile");
 }
 
 /// Injected worker mortality: every task still completes (workers die

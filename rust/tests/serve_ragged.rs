@@ -1,0 +1,474 @@
+//! Ragged-traffic serving parity: mixed-length streams (requests that
+//! differ only along the plan's stackable grid dim) served through
+//! `serve::ModelServer` shape buckets must be **bit-identical** — outputs
+//! compared via `to_bits`, traffic counters compared exactly — to
+//! sequential `coordinator::execute_plan_opts` runs of each request at
+//! its OWN length, across worker caps 1/2/8, SIMD on/off, both
+//! backends, and padding on/off.
+//!
+//! The pad ledger is pinned quantitatively: with padding on, a
+//! workload's `padded_*` counters must equal the summed difference
+//! between a full-length sequential run and each request's own-length
+//! run (pad blocks charge exactly like real blocks — counters are
+//! shape-deterministic) — and `padded_*` must never leak into any
+//! request's own MemSim.
+
+use blockbuster::coordinator::{
+    compile, execute_plan_opts, plan_stack_info, workloads, PlanRun,
+};
+use blockbuster::exec::ExecBackend;
+use blockbuster::serve::{BucketLadder, ModelServer, Request, Response, ServerConfig};
+use blockbuster::tensor::{simd, Mat};
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// Serialize tests that flip the global SIMD switch (same idiom as
+/// `tests/serve_parity.rs`).
+fn toggle_lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The three-workload mix of `tests/serve_parity.rs` — all stack along
+/// `M` with a registered trip of 4.
+const MIX: &[&str] = &["quickstart", "attention", "rmsnorm_ffn_swiglu"];
+
+/// Per-workload ragged lengths: four distinct trips, some repeated.
+const TRIPS: &[usize] = &[1, 2, 3, 4, 2, 3];
+
+fn assert_response_matches(name: &str, r: &Response, seq: &PlanRun) {
+    assert!(r.is_ok(), "{name}: verdict is {:?}", r.verdict);
+    assert_eq!(r.outputs.len(), seq.outputs.len(), "{name}: output set differs");
+    for (out_name, m) in &seq.outputs {
+        assert_eq!(
+            bits(m),
+            bits(&r.outputs[out_name]),
+            "{name}: output {out_name} not bit-identical"
+        );
+    }
+    assert_eq!(r.mem.loaded_bytes, seq.mem.loaded_bytes, "{name}: loads");
+    assert_eq!(r.mem.stored_bytes, seq.mem.stored_bytes, "{name}: stores");
+    assert_eq!(r.mem.n_loads, seq.mem.n_loads, "{name}: n_loads");
+    assert_eq!(r.mem.n_stores, seq.mem.n_stores, "{name}: n_stores");
+    assert_eq!(r.mem.kernel_launches, seq.mem.kernel_launches, "{name}: launches");
+    assert_eq!(r.mem.flops, seq.mem.flops, "{name}: flops");
+    // pad waste is the program's, never the request's
+    assert_eq!(r.mem.padded_loaded_bytes, 0, "{name}: pad leaked into loads");
+    assert_eq!(r.mem.padded_stored_bytes, 0, "{name}: pad leaked into stores");
+    assert_eq!(r.mem.padded_flops, 0, "{name}: pad leaked into flops");
+}
+
+/// One independent sequential run of a ragged synthetic request at its
+/// own length: fresh compile, stack dim bound to `trip`.
+fn seq_ragged(
+    server: &ModelServer,
+    name: &str,
+    seed: u64,
+    trip: usize,
+    backend: ExecBackend,
+    threads: usize,
+) -> PlanRun {
+    let (p, cfg, params, _) = workloads::by_name(name, 0).unwrap();
+    let compiled = compile(&p, cfg.clone());
+    let info = plan_stack_info(&server.live_plan(name).unwrap())
+        .expect("canonical workloads stack along M");
+    let inputs = server.synthetic_inputs_ragged(name, seed, trip).unwrap();
+    let mut sizes = cfg.sizes.clone();
+    sizes.set(info.dim.clone(), trip);
+    execute_plan_opts(&compiled.plan, &sizes, &params, &inputs, backend, Some(threads))
+}
+
+/// Serve an interleaved ragged 3-workload stream under the `max` ladder
+/// (every length shares one bucket per workload), then check every
+/// response bit-for-bit against a sequential run at its own length, and
+/// the pad ledger quantitatively.
+fn ragged_vs_sequential(backend: ExecBackend, threads: usize, pad: bool) {
+    let mut server = ModelServer::new(ServerConfig {
+        backend,
+        threads: Some(threads),
+        max_batch: 4,
+        // no latency-bound flushes: batches are size-triggered or drained
+        max_wait: Duration::from_secs(3600),
+        coalesce: true,
+        buckets: BucketLadder::Max,
+        pad,
+        ..ServerConfig::default()
+    });
+    for &name in MIX {
+        server.register(name).unwrap();
+    }
+    let misses_after_register = server.cache_misses();
+
+    // interleaved ragged submission: 6 requests per workload, 4 distinct
+    // lengths, distinct seeds
+    let mut submitted: Vec<(u64, &str, u64, usize)> = Vec::new();
+    for &trip in TRIPS {
+        for &name in MIX {
+            let seed = 3000 + submitted.len() as u64;
+            let id = server.submit_synthetic_ragged(name, seed, trip).unwrap();
+            submitted.push((id, name, seed, trip));
+        }
+    }
+    let responses = server.drain();
+    assert_eq!(responses.len(), 18, "drain must serve every request");
+    assert_eq!(server.pending(), 0);
+    assert_eq!(
+        server.cache_misses(),
+        misses_after_register,
+        "ragged stacked binds must never compile a skeleton"
+    );
+
+    // ground truth: one independent compile per workload, sequential
+    // executions at each request's own trip
+    let mut plans = HashMap::new();
+    for &name in MIX {
+        let (p, cfg, params, _) = workloads::by_name(name, 0).unwrap();
+        let compiled = compile(&p, cfg.clone());
+        let info = plan_stack_info(&server.live_plan(name).unwrap())
+            .expect("canonical workloads stack along M");
+        plans.insert(name, (compiled, cfg, params, info));
+    }
+    // per-(workload, trip) counters for the pad ledger (counters are
+    // shape-deterministic, so one run per length suffices)
+    let mut seq_mem: HashMap<(&str, usize), (u64, u64, u64)> = HashMap::new();
+    for (id, name, seed, trip) in &submitted {
+        let r = responses
+            .iter()
+            .find(|r| r.id == *id)
+            .unwrap_or_else(|| panic!("request {id} has no response"));
+        assert_eq!(&r.workload, name);
+        assert!(r.coalesced, "{name}: every max-ladder batch here is ≥2 and must stack");
+        let (compiled, cfg, params, info) = &plans[name];
+        let inputs = server.synthetic_inputs_ragged(name, *seed, *trip).unwrap();
+        let mut sizes = cfg.sizes.clone();
+        sizes.set(info.dim.clone(), *trip);
+        let seq =
+            execute_plan_opts(&compiled.plan, &sizes, params, &inputs, backend, Some(threads));
+        assert_response_matches(name, r, &seq);
+        let seq_counters = (seq.mem.loaded_bytes, seq.mem.stored_bytes, seq.mem.flops);
+        seq_mem.insert((*name, *trip), seq_counters);
+    }
+
+    // pad ledger, per workload
+    for &name in MIX {
+        let st = &server.stats().per_program[name];
+        assert_eq!(st.served, 6, "{name}: all requests served");
+        assert!(st.stacked_batches > 0, "{name}: ragged traffic coalesced");
+        assert_eq!(st.stacked_batches, st.batches, "{name}: all batches stacked");
+        if !pad {
+            assert_eq!(
+                (st.padded_loaded_bytes, st.padded_stored_bytes, st.padded_flops),
+                (0, 0, 0),
+                "{name}: ragged stacking without padding charges no pad waste"
+            );
+            continue;
+        }
+        // under the max ladder every request pads to the registered
+        // trip: expected waste = Σ (full-length run − own-length run)
+        let (compiled, cfg, params, info) = &plans[name];
+        let full = {
+            let inputs = server.synthetic_inputs_ragged(name, 0, info.trip).unwrap();
+            let seq = execute_plan_opts(
+                &compiled.plan,
+                &cfg.sizes,
+                params,
+                &inputs,
+                backend,
+                Some(threads),
+            );
+            (seq.mem.loaded_bytes, seq.mem.stored_bytes, seq.mem.flops)
+        };
+        let mut want = (0u64, 0u64, 0u64);
+        for (_, n, _, trip) in &submitted {
+            if *n != name {
+                continue;
+            }
+            let own = seq_mem[&(*n, *trip)];
+            want.0 += full.0 - own.0;
+            want.1 += full.1 - own.1;
+            want.2 += full.2 - own.2;
+        }
+        assert_eq!(
+            (st.padded_loaded_bytes, st.padded_stored_bytes, st.padded_flops),
+            want,
+            "{name}: pad ledger — stacked totals must equal per-request + pad"
+        );
+    }
+}
+
+/// Run `ragged_vs_sequential` with SIMD off then on (both sides of the
+/// comparison run under the same mode).
+fn sweep(backend: ExecBackend, threads: usize, pad: bool) {
+    let _g = toggle_lock();
+    simd::set_enabled(false);
+    ragged_vs_sequential(backend, threads, pad);
+    simd::set_enabled(true);
+    ragged_vs_sequential(backend, threads, pad);
+}
+
+#[test]
+fn ragged_serving_matches_sequential_threads_1() {
+    sweep(ExecBackend::Compiled, 1, false);
+}
+
+#[test]
+fn ragged_serving_matches_sequential_threads_2() {
+    sweep(ExecBackend::Compiled, 2, false);
+}
+
+#[test]
+fn ragged_serving_matches_sequential_threads_8() {
+    sweep(ExecBackend::Compiled, 8, false);
+}
+
+#[test]
+fn padded_ragged_serving_matches_sequential_threads_1() {
+    sweep(ExecBackend::Compiled, 1, true);
+}
+
+#[test]
+fn padded_ragged_serving_matches_sequential_threads_2() {
+    sweep(ExecBackend::Compiled, 2, true);
+}
+
+#[test]
+fn padded_ragged_serving_matches_sequential_threads_8() {
+    sweep(ExecBackend::Compiled, 8, true);
+}
+
+/// The interpreter backend serves ragged traffic too (no tapes, same
+/// per-request parity and pad ledger).
+#[test]
+fn interp_ragged_serving_matches_sequential() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    ragged_vs_sequential(ExecBackend::Interp, 2, false);
+}
+
+#[test]
+fn interp_padded_ragged_serving_matches_sequential() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    ragged_vs_sequential(ExecBackend::Interp, 2, true);
+}
+
+/// The default `exact` ladder still coalesces — but only within a
+/// length: two rounds of trips 1..4 form four same-trip stacked pairs,
+/// never a cross-trip batch, and never any padding.
+#[test]
+fn exact_ladder_coalesces_same_trip_only() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(2),
+        max_batch: 2,
+        max_wait: Duration::from_secs(3600),
+        coalesce: true,
+        ..ServerConfig::default() // buckets: Exact, pad: false
+    });
+    server.register("quickstart").unwrap();
+    for round in 0..2u64 {
+        for trip in 1..=4usize {
+            let seed = 10 * round + trip as u64;
+            server.submit_synthetic_ragged("quickstart", seed, trip).unwrap();
+        }
+    }
+    let responses = server.drain();
+    assert_eq!(responses.len(), 8);
+    assert!(responses.iter().all(|r| r.is_ok() && r.coalesced && r.batch_size == 2));
+    let st = &server.stats().per_program["quickstart"];
+    assert_eq!(st.batches, 4, "one batch per exact-trip bucket");
+    assert_eq!(st.stacked_batches, 4);
+    assert_eq!((st.padded_loaded_bytes, st.padded_flops), (0, 0), "exact edges never pad");
+}
+
+/// `pow2` + padding: trips 3 and 4 share the 4-edge bucket; the trip-3
+/// request pads by exactly one block, charged as exactly the counter
+/// difference between a 4-trip and a 3-trip sequential run.
+#[test]
+fn pow2_ladder_pads_to_the_bucket_edge() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(2),
+        max_batch: 2,
+        max_wait: Duration::from_secs(3600),
+        coalesce: true,
+        buckets: BucketLadder::Pow2,
+        pad: true,
+        ..ServerConfig::default()
+    });
+    server.register("quickstart").unwrap();
+    let a = server.submit_synthetic_ragged("quickstart", 1, 3).unwrap();
+    let b = server.submit_synthetic_ragged("quickstart", 2, 4).unwrap();
+    let responses = server.drain();
+    assert_eq!(responses.len(), 2);
+    let r3 = responses.iter().find(|r| r.id == a).unwrap();
+    let r4 = responses.iter().find(|r| r.id == b).unwrap();
+    assert!(r3.coalesced && r4.coalesced, "trips 3 and 4 share the pow2 edge 4");
+    let s3 = seq_ragged(&server, "quickstart", 1, 3, ExecBackend::Compiled, 2);
+    let s4 = seq_ragged(&server, "quickstart", 2, 4, ExecBackend::Compiled, 2);
+    assert_response_matches("quickstart", r3, &s3);
+    assert_response_matches("quickstart", r4, &s4);
+    let st = &server.stats().per_program["quickstart"];
+    assert_eq!(st.stacked_batches, 1);
+    assert_eq!(
+        (st.padded_loaded_bytes, st.padded_stored_bytes, st.padded_flops),
+        (
+            s4.mem.loaded_bytes - s3.mem.loaded_bytes,
+            s4.mem.stored_bytes - s3.mem.stored_bytes,
+            s4.mem.flops - s3.mem.flops
+        ),
+        "one pad block: exactly the charge of the missing trip"
+    );
+}
+
+/// A lone ragged request (batch of one — the fan-out path) executes via
+/// a single-request stacked bind at its own length, and with padding on
+/// still pads to its bucket edge with the same explicit accounting.
+#[test]
+fn single_ragged_request_pads_on_the_fanout_path() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(2),
+        max_batch: 1,
+        max_wait: Duration::from_secs(3600),
+        coalesce: true,
+        buckets: BucketLadder::Max,
+        pad: true,
+        ..ServerConfig::default()
+    });
+    server.register("quickstart").unwrap();
+    server.submit_synthetic_ragged("quickstart", 5, 2).unwrap();
+    let responses = server.drain();
+    assert_eq!(responses.len(), 1);
+    let r = &responses[0];
+    assert!(r.is_ok());
+    assert!(!r.coalesced, "a lone request has nothing to stack with");
+    let s2 = seq_ragged(&server, "quickstart", 5, 2, ExecBackend::Compiled, 2);
+    let s4 = seq_ragged(&server, "quickstart", 5, 4, ExecBackend::Compiled, 2);
+    assert_response_matches("quickstart", r, &s2);
+    let st = &server.stats().per_program["quickstart"];
+    assert_eq!(st.stacked_batches, 0);
+    assert_eq!(
+        (st.padded_loaded_bytes, st.padded_stored_bytes, st.padded_flops),
+        (
+            s4.mem.loaded_bytes - s2.mem.loaded_bytes,
+            s4.mem.stored_bytes - s2.mem.stored_bytes,
+            s4.mem.flops - s2.mem.flops
+        ),
+        "fan-out singles pad to the bucket edge with the same accounting"
+    );
+}
+
+/// A ragged batch whose shared weight operands differ across requests
+/// must fall back to per-request fan-out — each request still executes
+/// at its own length, bit-identical to a sequential run of its own
+/// (perturbed) inputs.
+#[test]
+fn differing_weights_ragged_falls_back_to_fanout() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(2),
+        max_batch: 3,
+        max_wait: Duration::from_secs(3600),
+        coalesce: true,
+        buckets: BucketLadder::Max,
+        ..ServerConfig::default()
+    });
+    server.register("quickstart").unwrap();
+    let mut submitted: Vec<(u64, usize, HashMap<String, Mat>)> = Vec::new();
+    for (i, trip) in [1usize, 2, 3].into_iter().enumerate() {
+        let mut inputs = server
+            .synthetic_inputs_ragged("quickstart", 4000 + i as u64, trip)
+            .unwrap();
+        if i == 1 {
+            inputs.get_mut("BT").unwrap().data[0] += 1.0;
+        }
+        let id = server.submit(Request::new("quickstart", inputs.clone())).unwrap();
+        submitted.push((id, trip, inputs));
+    }
+    let responses = server.drain();
+    assert_eq!(responses.len(), 3);
+    assert!(
+        responses.iter().all(|r| r.is_ok() && !r.coalesced),
+        "weight mismatch must disable coalescing for the batch"
+    );
+    let st = &server.stats().per_program["quickstart"];
+    assert_eq!(st.stacked_batches, 0);
+
+    let (p, cfg, params, _) = workloads::by_name("quickstart", 0).unwrap();
+    let compiled = compile(&p, cfg.clone());
+    let info = plan_stack_info(&server.live_plan("quickstart").unwrap()).unwrap();
+    for (id, trip, inputs) in &submitted {
+        let r = responses.iter().find(|r| r.id == *id).unwrap();
+        let mut sizes = cfg.sizes.clone();
+        sizes.set(info.dim.clone(), *trip);
+        let seq = execute_plan_opts(
+            &compiled.plan,
+            &sizes,
+            &params,
+            inputs,
+            ExecBackend::Compiled,
+            Some(2),
+        );
+        assert_response_matches("quickstart", r, &seq);
+    }
+}
+
+/// Full-shape and ragged synthetic requests share the weight stream, so
+/// under a coarse ladder they share a bucket — and one stacked launch.
+#[test]
+fn full_and_ragged_requests_share_a_stacked_launch() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    let mut server = ModelServer::new(ServerConfig {
+        backend: ExecBackend::Compiled,
+        threads: Some(2),
+        max_batch: 2,
+        max_wait: Duration::from_secs(3600),
+        coalesce: true,
+        buckets: BucketLadder::Max,
+        ..ServerConfig::default()
+    });
+    server.register("attention").unwrap();
+    let a = server.submit_synthetic("attention", 1).unwrap();
+    let b = server.submit_synthetic_ragged("attention", 2, 2).unwrap();
+    let responses = server.drain();
+    assert_eq!(responses.len(), 2);
+    assert!(responses.iter().all(|r| r.is_ok() && r.coalesced));
+    let st = &server.stats().per_program["attention"];
+    assert_eq!(st.stacked_batches, 1);
+
+    // parity: the full-shape request against its registered-shape run,
+    // the ragged one against its own length
+    let (p, cfg, params, _) = workloads::by_name("attention", 0).unwrap();
+    let compiled = compile(&p, cfg.clone());
+    let r_full = responses.iter().find(|r| r.id == a).unwrap();
+    let inputs = server.synthetic_inputs("attention", 1).unwrap();
+    let seq_full = execute_plan_opts(
+        &compiled.plan,
+        &cfg.sizes,
+        &params,
+        &inputs,
+        ExecBackend::Compiled,
+        Some(2),
+    );
+    assert_response_matches("attention", r_full, &seq_full);
+    let r_ragged = responses.iter().find(|r| r.id == b).unwrap();
+    let seq_r = seq_ragged(&server, "attention", 2, 2, ExecBackend::Compiled, 2);
+    assert_response_matches("attention", r_ragged, &seq_r);
+}
