@@ -223,6 +223,147 @@ fn main() {
     let ragged_speedup = ragged_rps_by_mode[1] / ragged_rps_by_mode[0];
     println!("ragged_speedup: {ragged_speedup:.2}x (bucketed stacked vs fanned, mixed lengths)");
 
+    // ---- KV-cache decode: stacked same-length steps vs fan-out --------
+    // Sessions share the synthetic per-step KV stream, so at every cache
+    // length the open sessions hold bit-identical caches — with
+    // coalescing on, each cache-length bucket flushes as ONE stacked
+    // flash-decode launch; off, every step executes alone.
+    let dname = "decode_attention";
+    let d_sessions = if smoke { 4 } else { 8 };
+    let d_waves = if smoke { 2 } else { 6 };
+    let mut dt = Table::new(
+        &format!("Decode {dname}, {d_sessions} sessions to full cache, {d_waves} wave(s)"),
+        &["mode", "throughput", "steps", "stacked batches", "KV bytes"],
+    );
+    let mut decode_rows = Vec::new();
+    let mut decode_sps_by_mode = [f64::NAN; 2];
+    let mut decode_cap = 0usize;
+    for (mi, coalesce) in [false, true].into_iter().enumerate() {
+        let mut server = server_with(16, coalesce, &[dname]);
+        // Warmup doubles as cap discovery: step one throwaway session
+        // until its cache is full.
+        let cap = {
+            let sid = server.open_session(dname).unwrap();
+            let mut n = 0usize;
+            while server.submit_synthetic_decode(sid, 1).is_ok() {
+                n += 1;
+            }
+            server.drain();
+            server.close_session(sid).unwrap();
+            n
+        };
+        assert!(cap > 0, "decode workload must register a growth cap");
+        decode_cap = cap;
+        let (warm_stacked, warm_bytes) = {
+            let st = &server.stats().per_program[dname];
+            (st.stacked_batches, st.state_appended_bytes)
+        };
+        let steps_total = d_waves * d_sessions * cap;
+        let t1 = Instant::now();
+        let mut served = 0usize;
+        for wave in 0..d_waves as u64 {
+            let sids: Vec<u64> = (0..d_sessions)
+                .map(|_| server.open_session(dname).unwrap())
+                .collect();
+            // Round-major: step t for EVERY session before any t+1, so
+            // same-length steps share a bucket flush.
+            for _ in 0..cap {
+                for (s, &sid) in sids.iter().enumerate() {
+                    server.submit_synthetic_decode(sid, wave * 100 + s as u64).unwrap();
+                }
+            }
+            served += server.drain().iter().filter(|r| r.is_ok()).count();
+            for sid in sids {
+                server.close_session(sid).unwrap();
+            }
+        }
+        let wall = t1.elapsed();
+        assert_eq!(served, steps_total, "every decode step must serve");
+        let st = &server.stats().per_program[dname];
+        let stacked = st.stacked_batches - warm_stacked;
+        let kv_bytes = st.state_appended_bytes - warm_bytes;
+        if coalesce {
+            assert!(stacked > 0, "decode coalescing must engage");
+        }
+        let sps = steps_total as f64 / wall.as_secs_f64();
+        decode_sps_by_mode[mi] = sps;
+        dt.row(vec![
+            if coalesce { "coalesced" } else { "fanned" }.to_string(),
+            format!("{sps:.0} steps/s"),
+            steps_total.to_string(),
+            stacked.to_string(),
+            kv_bytes.to_string(),
+        ]);
+        decode_rows.push(Json::obj(vec![
+            ("coalesce", Json::Bool(coalesce)),
+            ("throughput_sps", Json::Num(sps)),
+            ("steps", Json::Num(steps_total as f64)),
+            ("stacked_batches", Json::Num(stacked as f64)),
+            ("kv_appended_bytes", Json::Num(kv_bytes as f64)),
+        ]));
+    }
+    dt.print();
+    let decode_speedup = decode_sps_by_mode[1] / decode_sps_by_mode[0];
+    println!("decode_speedup: {decode_speedup:.2}x (stacked decode vs per-step fan-out)");
+
+    // ---- mixed prefill + decode on one server -------------------------
+    // Stateless prefill requests and stateful decode steps share the
+    // server, the bucket queues, and the flush sweep: decode buckets
+    // stack by cache length while prefill batches stack along the
+    // row-block grid.
+    let pname = "attention";
+    let mut server = server_with(16, true, &[pname, dname]);
+    let sid0 = server.open_session(dname).unwrap();
+    while server.submit_synthetic_decode(sid0, 1).is_ok() {}
+    server.submit_synthetic(pname, 0).unwrap();
+    server.drain();
+    server.close_session(sid0).unwrap();
+    let mixed_t0 = Instant::now();
+    let mut md_prefill = 0usize;
+    let mut md_steps = 0usize;
+    for wave in 0..d_waves as u64 {
+        let sids: Vec<u64> = (0..d_sessions)
+            .map(|_| server.open_session(dname).unwrap())
+            .collect();
+        for step in 0..decode_cap as u64 {
+            for (s, &sid) in sids.iter().enumerate() {
+                server.submit_synthetic_decode(sid, 7_000 + wave * 100 + s as u64).unwrap();
+            }
+            for k in 0..d_sessions as u64 {
+                server.submit_synthetic(pname, 80_000 + (wave * 100 + step) * 16 + k).unwrap();
+            }
+        }
+        for r in server.drain() {
+            assert!(r.is_ok(), "mixed prefill/decode row must serve everything");
+            if r.workload == dname {
+                md_steps += 1;
+            } else {
+                md_prefill += 1;
+            }
+        }
+        for sid in sids {
+            server.close_session(sid).unwrap();
+        }
+    }
+    let md_wall = mixed_t0.elapsed();
+    let md_total = md_prefill + md_steps;
+    for (name, st) in &server.stats().per_program {
+        assert_eq!(st.accounted(), st.submitted, "{name}: mixed-decode ledger must reconcile");
+    }
+    let md_rps = md_total as f64 / md_wall.as_secs_f64();
+    let md_stacked: u64 = server.stats().per_program.values().map(|s| s.stacked_batches).sum();
+    println!(
+        "mixed prefill+decode: {md_rps:.0} req/s over {md_prefill} prefill + {md_steps} decode \
+         steps ({md_stacked} stacked launches incl. warmup)"
+    );
+    let mixed_decode_obj = Json::obj(vec![
+        ("prefill_program", Json::Str(pname.into())),
+        ("prefill_served", Json::Num(md_prefill as f64)),
+        ("decode_steps", Json::Num(md_steps as f64)),
+        ("throughput_rps", Json::Num(md_rps)),
+        ("stacked_batches", Json::Num(md_stacked as f64)),
+    ]);
+
     // ---- mixed 3-workload round-robin stream --------------------------
     let mix = ["quickstart", "attention", "rmsnorm_ffn_swiglu"];
     let mut server = server_with(8, false, &mix);
@@ -453,6 +594,13 @@ fn main() {
         // with pad-to-bucket vs per-request fan-out at own length
         ("ragged_speedup", Json::Num(ragged_speedup)),
         ("ragged_rows", Json::Arr(ragged_rows)),
+        // KV-cache decode sessions: same-cache-length steps stacked per
+        // bucket (speedup >1 means stacked decode beats per-step fan-out)
+        ("decode_speedup", Json::Num(decode_speedup)),
+        ("decode_rows", Json::Arr(decode_rows)),
+        // stateless prefill + stateful decode steps sharing one server's
+        // bucket queues and flush sweep
+        ("mixed_decode", mixed_decode_obj),
         (
             "mixed",
             Json::obj(vec![

@@ -93,11 +93,21 @@ pub struct ANode {
 pub struct ArrayProgram {
     pub nodes: Vec<ANode>,
     pub outputs: Vec<(String, ANodeId)>,
+    /// Inputs declared *stateful*: `(input name, growth dim)` pairs. A
+    /// stateful input is a buffer that persists across program
+    /// invocations and is appended along the named dim each step (a KV
+    /// cache). Carried through `lower_array` onto [`crate::ir::Graph`].
+    pub state: Vec<(String, String)>,
 }
 
 impl ArrayProgram {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Mark input `name` as a stateful buffer growing along dim `dim`.
+    pub fn mark_state(&mut self, name: &str, dim: &str) {
+        self.state.push((name.into(), dim.into()));
     }
 
     fn push(&mut self, op: AOp, inputs: Vec<ANodeId>, blocking: ABlocking) -> ANodeId {

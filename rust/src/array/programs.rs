@@ -32,6 +32,35 @@ pub fn attention() -> ArrayProgram {
     p
 }
 
+/// KV-cache decode attention — one autoregressive step:
+/// `O = softmax(Q·Kᵀ/√d + MASK)·V` with `KT`/`VT` *stateful* along the
+/// cache dim `N`.
+///
+/// Same block program as [`attention`] plus an additive mask applied to
+/// the scaled scores (so a longer cache can be replayed with future
+/// positions masked to `-inf` — exact bitwise no-ops under the unsafe
+/// softmax, which is what makes T decode steps bit-identical to one
+/// length-T prefill). At decode time `M` is tiny (one query block) and
+/// `N` grows by one block per step; the serving layer owns the growth
+/// (`serve` sessions append to the caches, the plan just reads its
+/// prefix).
+pub fn decode_attention() -> ArrayProgram {
+    let mut p = ArrayProgram::new();
+    let q = p.input("Q", "M", "D");
+    let kt = p.input_t("KT", "N", "D");
+    let vt = p.input_t("VT", "L", "N");
+    let mask = p.input("MASK", "M", "N");
+    let scores = p.matmul(q, kt); // (M,N)
+    let scaled = p.div_sqrt(scores, "DD");
+    let masked = p.add(scaled, mask);
+    let probs = p.softmax(masked);
+    let o = p.matmul(probs, vt); // (M,L)
+    p.output("O", o);
+    p.mark_state("KT", "N");
+    p.mark_state("VT", "N");
+    p
+}
+
 /// Example 2: LayerNorm + Matmul — `Z = LayerNorm(X)·Y`.
 pub fn layernorm_matmul() -> ArrayProgram {
     let mut p = ArrayProgram::new();

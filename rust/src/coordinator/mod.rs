@@ -411,9 +411,29 @@ pub fn bind_stacked_trip(
     info: &StackInfo,
     total_trip: usize,
 ) -> StackedPlan {
-    assert!(total_trip >= 1, "bind_stacked_trip: empty stack");
+    bind_stacked_sized(prepared, info, total_trip, &[])
+}
+
+/// [`bind_stacked_trip`] with extra dim-size `overrides` applied to the
+/// bind (never the stack dim itself). This is how a decode plan
+/// registered at its cache-capacity `N` is re-bound at the *current*
+/// cache length: the stack dim carries the batch as usual while `N` is
+/// overridden to the session's length, so every input blocked from the
+/// bind's sizes — the KV caches and the mask — gets the right grid.
+pub fn bind_stacked_sized(
+    prepared: &PreparedPlan,
+    info: &StackInfo,
+    total_trip: usize,
+    overrides: &[(Dim, usize)],
+) -> StackedPlan {
+    assert!(total_trip >= 1, "bind_stacked_sized: empty stack");
     let mut sizes = prepared.sizes.clone();
     sizes.set(info.dim.clone(), total_trip);
+    for (d, n) in overrides {
+        assert!(*d != info.dim, "bind_stacked_sized: override of the stack dim {d:?}");
+        assert!(*n >= 1, "bind_stacked_sized: zero-block override for {d:?}");
+        sizes.set(d.clone(), *n);
+    }
     let tapes: Vec<Option<CompiledProgram>> = prepared
         .segments
         .iter()
@@ -429,12 +449,12 @@ pub fn bind_stacked_trip(
     }
 }
 
-/// For each program input that carries the stack dim: which matrix
-/// axis (0 = rows, 1 = cols) it stacks along. Inputs absent from the
-/// map are the shared weight-like operands of [`unstacked_inputs`].
-/// The serving layer uses this to derive a ragged request's trip from
-/// its input extents.
-pub fn stacked_input_axes(prepared: &PreparedPlan, info: &StackInfo) -> BTreeMap<String, usize> {
+/// For each *stateful* program input of `prepared` (see
+/// `BufDecl::state_dim`): its growth dim and the matrix axis
+/// (0 = rows, 1 = cols) that dim occupies. Empty for stateless plans.
+/// The serving layer uses this to discover which inputs a session must
+/// own and along which axis each decode step appends.
+pub fn state_input_axes(prepared: &PreparedPlan) -> BTreeMap<String, (Dim, usize)> {
     let mut out = BTreeMap::new();
     for seg in &prepared.segments {
         for (label, vref) in &seg.inputs {
@@ -445,11 +465,84 @@ pub fn stacked_input_axes(prepared: &PreparedPlan, info: &StackInfo) -> BTreeMap
                     .iter()
                     .find(|b| b.name == *label)
                     .expect("wired segment input is declared");
-                if let Some(axis) = decl.dims.iter().position(|d| *d == info.dim) {
+                if let Some(dim) = &decl.state_dim {
+                    let axis = decl
+                        .dims
+                        .iter()
+                        .position(|d| d == dim)
+                        .unwrap_or_else(|| {
+                            panic!("state dim {dim:?} is not a dim of buffer {label}")
+                        });
+                    let prev = out.insert(name.clone(), (dim.clone(), axis));
+                    if let Some(prev) = prev {
+                        assert_eq!(
+                            prev,
+                            (dim.clone(), axis),
+                            "program input {name} stateful on inconsistent dims/axes"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The registered block grid `(row blocks, col blocks)` of a program
+/// input, from its segment declaration and the prepared sizes. `None`
+/// for an unknown input (or a non-matrix declaration). The serving
+/// layer uses this to charge stateful-buffer appends at block
+/// granularity: one decode step appends a slab of `1 × other` (or
+/// `other × 1`) blocks.
+pub fn input_block_grid(prepared: &PreparedPlan, input: &str) -> Option<(usize, usize)> {
+    for seg in &prepared.segments {
+        for (label, vref) in &seg.inputs {
+            if let ValueRef::ProgramInput(name) = vref {
+                if name == input {
+                    let decl = seg.ir.bufs.iter().find(|b| b.name == *label)?;
+                    if decl.dims.len() != 2 {
+                        return None;
+                    }
+                    let rb = prepared.sizes.get(&decl.dims[0]);
+                    let cb = prepared.sizes.get(&decl.dims[1]);
+                    return Some((rb, cb));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// For each program input that carries the stack dim: which matrix
+/// axis (0 = rows, 1 = cols) it stacks along. Inputs absent from the
+/// map are the shared weight-like operands of [`unstacked_inputs`].
+/// The serving layer uses this to derive a ragged request's trip from
+/// its input extents.
+pub fn stacked_input_axes(prepared: &PreparedPlan, info: &StackInfo) -> BTreeMap<String, usize> {
+    input_dim_axes(prepared, &info.dim)
+}
+
+/// For each program input of `prepared` that carries `dim`: the matrix
+/// axis (0 = rows, 1 = cols) it occupies. The generalisation behind
+/// [`stacked_input_axes`]; the serving layer also applies it to a
+/// stateful plan's *growth* dim to find which request inputs (the
+/// decode mask) must arrive scaled to the current cache length.
+pub fn input_dim_axes(prepared: &PreparedPlan, dim: &Dim) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for seg in &prepared.segments {
+        for (label, vref) in &seg.inputs {
+            if let ValueRef::ProgramInput(name) = vref {
+                let decl = seg
+                    .ir
+                    .bufs
+                    .iter()
+                    .find(|b| b.name == *label)
+                    .expect("wired segment input is declared");
+                if let Some(axis) = decl.dims.iter().position(|d| d == dim) {
                     if let Some(prev) = out.insert(name.clone(), axis) {
                         assert_eq!(
                             prev, axis,
-                            "program input {name} stacked on inconsistent axes"
+                            "program input {name} carries {dim:?} on inconsistent axes"
                         );
                     }
                 }
@@ -540,6 +633,24 @@ pub fn execute_prepared_stacked_spec(
     inputs: &[&HashMap<String, Mat>],
     threads: Option<usize>,
 ) -> BatchRun {
+    execute_prepared_stacked_extra(prepared, stacked, spec, inputs, &HashMap::new(), threads)
+}
+
+/// [`execute_prepared_stacked_spec`] plus `extra`: shared operands
+/// resolved from a side map when absent from the per-request inputs.
+/// The serving layer binds session-owned KV caches here — state inputs
+/// never travel in the request, the session's cache prefix is bound
+/// once for the whole launch, exactly like a shared weight. Lookup
+/// order is request 0 first, then `extra`, so a request-supplied copy
+/// (the stateless differential tests) still wins.
+pub fn execute_prepared_stacked_extra(
+    prepared: &PreparedPlan,
+    stacked: &StackedPlan,
+    spec: &StackSpec,
+    inputs: &[&HashMap<String, Mat>],
+    extra: &HashMap<String, Mat>,
+    threads: Option<usize>,
+) -> BatchRun {
     let b = spec.trips.len();
     assert_eq!(
         inputs.len(),
@@ -591,10 +702,13 @@ pub fn execute_prepared_stacked_spec(
             let bv = match vref {
                 ValueRef::ProgramInput(name) => {
                     assert_eq!(decl.dims.len(), 2, "program input {name} must be 2-d");
-                    // non-stack block counts come from the plan's own
-                    // sizes; the stack axis carries each request's trip
-                    let rb = prepared.sizes.get(&decl.dims[0]);
-                    let cb = prepared.sizes.get(&decl.dims[1]);
+                    // non-stack block counts come from the *bind's*
+                    // sizes (the plan's own sizes plus any
+                    // `bind_stacked_sized` overrides — identical for
+                    // ordinary binds); the stack axis carries each
+                    // request's trip
+                    let rb = stacked.sizes.get(&decl.dims[0]);
+                    let cb = stacked.sizes.get(&decl.dims[1]);
                     match decl.dims.iter().position(|d| d == dim) {
                         Some(axis) => {
                             let mut parts: Vec<BufVal> = Vec::with_capacity(2 * b);
@@ -619,12 +733,14 @@ pub fn execute_prepared_stacked_spec(
                             stack_blocks_ragged(&parts, axis)
                         }
                         None => {
-                            // shared weight operand: bind request 0's
-                            // copy for every slice (caller verified
-                            // bit-equality across the batch)
-                            let m = inputs[0].get(name).unwrap_or_else(|| {
-                                panic!("missing program input {name}")
-                            });
+                            // shared operand: bind request 0's copy —
+                            // or the `extra` side map's (session KV
+                            // caches) — for every slice (caller
+                            // verified bit-equality across the batch)
+                            let m = inputs[0]
+                                .get(name)
+                                .or_else(|| extra.get(name))
+                                .unwrap_or_else(|| panic!("missing program input {name}"));
                             to_blocks(m, rb, cb)
                         }
                     }

@@ -59,6 +59,27 @@ pub fn attention_demo(seed: u64) -> Demo {
     (programs::attention(), cfg, params, mats(seed, &specs))
 }
 
+/// KV-cache decode attention: one 8-row query block (`M` = 1 block)
+/// against a cache registered at its capacity (`N` = 4 blocks = the
+/// context cap `T`). `KT`/`VT` are the stateful caches; `MASK` ships
+/// zeroed (a stateless one-shot sees the whole cache) — the serving
+/// layer's sessions grow the caches block by block and scale the mask
+/// to the current length. Block shapes match [`attention_demo`] (8×8),
+/// so decode traffic can ride the same bucket ladder as prefill.
+pub fn decode_attention_demo(seed: u64) -> Demo {
+    let specs = [("Q", 8, 16), ("KT", 32, 16), ("VT", 16, 32), ("MASK", 8, 32)];
+    let cfg = CompileConfig {
+        sizes: DimSizes::of(&[("M", 1), ("N", 4), ("D", 2), ("L", 2)]),
+        full_shapes: shapes(&specs),
+        model: CostModel::default(),
+    };
+    let mut params = BTreeMap::new();
+    params.insert("DD".to_string(), 16.0);
+    let mut inputs = mats(seed, &specs);
+    inputs.insert("MASK".to_string(), Mat::zeros(8, 32));
+    (programs::decode_attention(), cfg, params, inputs)
+}
+
 /// Example 2 at the artifact shapes.
 pub fn layernorm_matmul_demo(seed: u64) -> Demo {
     let specs = [("X", 32, 32), ("YT", 16, 32)];
@@ -134,6 +155,10 @@ pub fn by_name(name: &str, seed: u64) -> Option<Demo> {
     Some(match name {
         "quickstart" | "matmul_relu" => matmul_relu_demo(seed),
         "attention" | "flash_attention" => attention_demo(seed),
+        // Not in `NAMES`: stateful — synthetic *stateless* streams
+        // (`--mix`, benches) must not submit it; decode traffic flows
+        // through sessions (`serve --decode` / `--mix-decode`).
+        "decode_attention" | "decode" => decode_attention_demo(seed),
         "layernorm_matmul" => layernorm_matmul_demo(seed),
         "rmsnorm_ffn_swiglu" | "ffn" => rmsnorm_ffn_swiglu_demo(seed),
         "decoder" | "decoder_block" => decoder_demo(seed),

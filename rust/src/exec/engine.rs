@@ -793,6 +793,7 @@ mod tests {
             item: crate::ir::types::Item::Block,
             is_input,
             is_output: !is_input,
+            state_dim: None,
         };
         let mut ir = LoopIr {
             bufs: vec![buf("A", true), buf("B", false)],
@@ -883,6 +884,7 @@ mod tests {
             item: crate::ir::types::Item::Block,
             is_input,
             is_output,
+            state_dim: None,
         };
         // top0: forall i { t0 = load A[i]; t1 = t0+t0; store t1 -> B[i] }
         //   (after the loop t1 holds 2·A[N-1])

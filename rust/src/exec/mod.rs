@@ -185,6 +185,64 @@ pub fn to_blocks(m: &Mat, rb: usize, cb: usize) -> BufVal {
     bv
 }
 
+/// Append `part` to a *stateful* buffer (a KV cache) along `axis`
+/// (0 = new rows below, 1 = new columns to the right), charging the
+/// incremental traffic to `mem`.
+///
+/// This is the write half of the stateful-buffer contract: a decode
+/// step stores only the block(s) it appends — `part` — instead of
+/// re-materializing the whole cache, so the charge is `part.bytes()`
+/// (plus `blocks = (rb, cb)` store events, the block granularity of
+/// the append). The same bytes are also recorded in the
+/// `MemSim::state_appended_bytes` / `state_appends` breakout so a
+/// decode step's counters reconcile exactly against its stateless
+/// equivalent: `stored == stateless.stored + state_appended_bytes`.
+///
+/// Growing from empty is allowed (a `rows×0` or `0×cols` cache); the
+/// off-axis extent must already match.
+pub fn append_state(
+    cache: &mut Mat,
+    axis: usize,
+    part: &Mat,
+    blocks: (usize, usize),
+    mem: &mut MemSim,
+) {
+    match axis {
+        0 => {
+            assert!(
+                cache.cols == part.cols,
+                "append_state axis 0: cache has {} cols, part has {}",
+                cache.cols,
+                part.cols
+            );
+            cache.data.extend_from_slice(&part.data);
+            cache.rows += part.rows;
+        }
+        1 => {
+            assert!(
+                cache.rows == part.rows,
+                "append_state axis 1: cache has {} rows, part has {}",
+                cache.rows,
+                part.rows
+            );
+            let (oldc, newc) = (cache.cols, cache.cols + part.cols);
+            let mut data = Vec::with_capacity(cache.rows * newc);
+            for i in 0..cache.rows {
+                data.extend_from_slice(&cache.data[i * oldc..(i + 1) * oldc]);
+                data.extend_from_slice(part.row(i));
+            }
+            cache.data = data;
+            cache.cols = newc;
+        }
+        _ => panic!("append_state: axis {axis} out of range for a matrix"),
+    }
+    let n_blocks = (blocks.0 * blocks.1) as u64;
+    mem.stored_bytes += part.bytes() as u64;
+    mem.n_stores += n_blocks;
+    mem.state_appended_bytes += part.bytes() as u64;
+    mem.state_appends += n_blocks;
+}
+
 /// Reassemble a `[rb, cb]` grid of blocks into one matrix.
 pub fn from_blocks(bv: &BufVal) -> Mat {
     assert_eq!(bv.dims.len(), 2, "from_blocks needs a 2-d block grid");

@@ -178,6 +178,15 @@ impl Node {
 pub struct Graph {
     nodes: Vec<Option<Node>>,
     edges: Vec<Edge>,
+    /// Program inputs that are *stateful buffers*: persistent across
+    /// program invocations and read-extended along the named dimension
+    /// each step (a KV cache grows along its sequence dim). The marks
+    /// are metadata only — no rule or lowering changes shape because of
+    /// them — but they survive fusion (the selector copies them onto
+    /// segment input labels) so the serving layer can discover which
+    /// buffers a plan expects to be session state, and `loopir` can tag
+    /// the matching `BufDecl`s.
+    state_dims: HashMap<String, Dim>,
 }
 
 impl Graph {
@@ -199,6 +208,18 @@ impl Graph {
     pub fn input(&mut self, label: impl Into<String>, ty: Ty) -> Port {
         let id = self.add_node(NodeKind::Input { ty }, label);
         port(id, 0)
+    }
+
+    /// Mark the program input `label` as a stateful buffer growing along
+    /// `dim` (see the `state_dims` field docs). Idempotent; re-marking
+    /// overwrites.
+    pub fn mark_state(&mut self, label: impl Into<String>, dim: Dim) {
+        self.state_dims.insert(label.into(), dim);
+    }
+
+    /// The growth dimension of input `label`, if it was marked stateful.
+    pub fn state_dim(&self, label: &str) -> Option<&Dim> {
+        self.state_dims.get(label)
     }
 
     /// Add a program output consuming `src`.

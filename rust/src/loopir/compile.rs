@@ -1003,6 +1003,7 @@ mod tests {
                     item: Item::Block,
                     is_input: true,
                     is_output: false,
+                    state_dim: None,
                 },
                 BufDecl {
                     name: "B".into(),
@@ -1010,6 +1011,7 @@ mod tests {
                     item: Item::Block,
                     is_input: false,
                     is_output: true,
+                    state_dim: None,
                 },
             ],
             body: vec![Stmt::Loop {
@@ -1135,6 +1137,7 @@ mod tests {
             item: Item::Block,
             is_input,
             is_output: !is_input,
+            state_dim: None,
         };
         let mut ir = LoopIr {
             bufs: vec![buf("A", true), buf("B", false)],
@@ -1193,6 +1196,7 @@ mod tests {
                 item: Item::Block,
                 is_input: false,
                 is_output: true,
+                state_dim: None,
             }],
             body: vec![Stmt::Loop {
                 kind: LoopKind::ForAll,

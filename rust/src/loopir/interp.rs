@@ -44,6 +44,15 @@ pub struct MemSim {
     pub padded_stored_bytes: u64,
     /// Pad share of `flops` (same contract as `padded_loaded_bytes`).
     pub padded_flops: u64,
+    /// Of `stored_bytes`, the share spent appending new blocks to a
+    /// *stateful* buffer (a KV cache growing across decode steps; see
+    /// `exec::append_state`). A decode step's traffic is its stateless
+    /// equivalent plus exactly this breakout:
+    /// `stored_bytes == stateless.stored_bytes + state_appended_bytes`.
+    pub state_appended_bytes: u64,
+    /// Block-granular append count paired with `state_appended_bytes`
+    /// (same contract: `n_stores == stateless.n_stores + state_appends`).
+    pub state_appends: u64,
 }
 
 impl MemSim {
@@ -65,6 +74,8 @@ impl MemSim {
         self.padded_loaded_bytes += o.padded_loaded_bytes;
         self.padded_stored_bytes += o.padded_stored_bytes;
         self.padded_flops += o.padded_flops;
+        self.state_appended_bytes += o.state_appended_bytes;
+        self.state_appends += o.state_appends;
         self.peak_local_bytes = self.peak_local_bytes.max(o.peak_local_bytes);
     }
 
@@ -83,6 +94,8 @@ impl MemSim {
             padded_loaded_bytes: self.padded_loaded_bytes - base.padded_loaded_bytes,
             padded_stored_bytes: self.padded_stored_bytes - base.padded_stored_bytes,
             padded_flops: self.padded_flops - base.padded_flops,
+            state_appended_bytes: self.state_appended_bytes - base.state_appended_bytes,
+            state_appends: self.state_appends - base.state_appends,
         }
     }
 }

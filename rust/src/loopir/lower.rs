@@ -104,6 +104,7 @@ impl LowerState {
             item,
             is_input: false,
             is_output: false,
+            state_dim: None,
         });
         self.bufs.len() - 1
     }
@@ -155,6 +156,7 @@ pub fn lower(g: &Graph) -> LoopIr {
             item: ty.item,
             is_input: true,
             is_output: false,
+            state_dim: g.state_dim(&g.node(id).label).cloned(),
         });
         let buf = st.bufs.len() - 1;
         in_bindings.insert(
@@ -177,6 +179,7 @@ pub fn lower(g: &Graph) -> LoopIr {
             item: ty.item,
             is_input: false,
             is_output: true,
+            state_dim: None,
         });
         let buf = st.bufs.len() - 1;
         out_bindings.insert(

@@ -49,6 +49,13 @@ pub struct BufDecl {
     pub item: Item,
     pub is_input: bool,
     pub is_output: bool,
+    /// `Some(dim)` if this input is a *stateful buffer*: it persists
+    /// across program invocations and is appended along `dim` each step
+    /// (a KV cache; see `Graph::mark_state` in `crate::ir::graph`).
+    /// Always `None` for temporaries and outputs. Execution semantics
+    /// are unchanged — the tag tells the serving layer which inputs to
+    /// bind from session state rather than from the request.
+    pub state_dim: Option<Dim>,
 }
 
 /// Loop flavor. `ForAll` is embarrassingly parallel; `For` is serial
@@ -216,6 +223,7 @@ mod tests {
                 item: Item::Block,
                 is_input: true,
                 is_output: false,
+                state_dim: None,
             }],
             body: vec![Stmt::Loop {
                 kind: LoopKind::For,
@@ -267,6 +275,7 @@ mod tests {
                 item: Item::Block,
                 is_input: true,
                 is_output: false,
+                state_dim: None,
             }],
             body: vec![Stmt::Loop {
                 kind: LoopKind::ForAll,

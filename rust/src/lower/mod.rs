@@ -18,6 +18,7 @@
 //! * rmsnorm = square, rowsum, (reduce → 1/sqrt(s/DD)), scale — four.
 
 use crate::array::{AOp, ANodeId, ArrayProgram};
+use crate::ir::dim::Dim;
 use crate::ir::expr::Expr;
 use crate::ir::func::{FuncOp, ReduceOp};
 use crate::ir::graph::{map_over, ArgMode, Graph, NodeKind, Port};
@@ -133,6 +134,12 @@ pub fn lower_array(p: &ArrayProgram) -> Graph {
 
     for (name, id) in &p.outputs {
         g.output(name.clone(), val[id]);
+    }
+    // Stateful-input marks ride along: array-level `mark_state` becomes a
+    // graph-level mark on the same input label, so fusion/selection can
+    // propagate it down to the lowered `BufDecl`s.
+    for (name, dim) in &p.state {
+        g.mark_state(name.clone(), Dim::new(dim));
     }
     g
 }

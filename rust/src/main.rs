@@ -9,6 +9,7 @@
 //! blockbuster serve [--requests N] [--mix a,b:2,c] [--max-batch N]
 //!                   [--max-wait-ms MS] [--coalesce]
 //!                   [--ragged] [--buckets exact|pow2|max|E1,E2,..] [--pad]
+//!                   [--decode] [--mix-decode] [--sessions N] [--steps N]
 //!                   [--queue-cap N] [--deadline-ms MS]
 //!                   [--shed-policy reject-new|drop-oldest]
 //!                   [--retune-every N] [--weights a:4,b:1]
@@ -64,7 +65,7 @@ use blockbuster::serve::{
 use blockbuster::tensor::{Mat, Rng};
 use blockbuster::util::bench::{fmt_bytes, percentile, Table};
 use blockbuster::util::cli::Args;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::ErrorKind;
 use std::time::{Duration, Instant};
 
@@ -109,6 +110,15 @@ commands:
       --pad              pad each request up to its bucket edge; pad waste is
                          charged to the explicit padded_* counters, never to
                          a request's own MemSim
+      --decode           decode-only traffic: KV-cache sessions stepping the
+                         stateful decode_attention workload block by block —
+                         same-cache-length steps across sessions coalesce into
+                         stacked launches per cache-length bucket
+      --mix-decode       mixed traffic: the --mix prefill stream plus decode
+                         sessions, sharing the daemon and the bucket ladder
+      --sessions N       concurrent KV-cache sessions (default 4)
+      --steps N          decode steps per session; bounded by the registered
+                         context cap (default 4)
       --queue-cap N      admission control: bound each workload's queue at N
                          pending requests; over-cap submissions are shed with
                          a typed QueueFull rejection (default: unbounded)
@@ -176,6 +186,8 @@ fn main() -> anyhow::Result<()> {
             "shed-policy",
             "retune-every",
             "weights",
+            "sessions",
+            "steps",
             "listen",
             "serve-for-ms",
             "max-inflight",
@@ -395,6 +407,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let pad = args.flag("pad");
     let ragged = args.flag("ragged");
+    let decode_only = args.flag("decode");
+    let mix_decode = args.flag("mix-decode");
+    let want_decode = decode_only || mix_decode;
+    let n_sessions = args.opt_usize("sessions", 4);
+    let n_steps = args.opt_usize("steps", 4);
 
     // --mix name[:weight],... — the traffic composition. Repeated names
     // merge their weights (so "a,a:3" weighs a at 4) instead of
@@ -428,6 +445,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         eprintln!("--mix named no workloads");
         std::process::exit(2);
     }
+    if spec.iter().any(|(n, _)| n == "decode_attention" || n == "decode") {
+        eprintln!("--mix: decode_attention is stateful; use --decode / --mix-decode instead");
+        std::process::exit(2);
+    }
+    if want_decode && args.opt("listen").is_some() {
+        eprintln!("--decode / --mix-decode drive the local synthetic stream, not --listen");
+        std::process::exit(2);
+    }
 
     let mut server = ModelServer::new(ServerConfig {
         backend,
@@ -443,6 +468,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     });
     for (name, _) in &spec {
         server.register(name)?;
+    }
+    if want_decode {
+        server.register("decode_attention")?;
     }
     // --weights name:w,... — deficit-round-robin scheduler weights
     // (distinct from --mix's traffic-composition weights).
@@ -478,6 +506,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         if ragged { "on" } else { "off" },
         if pad { "on" } else { "off" }
     );
+    if want_decode {
+        println!(
+            "decode: {n_sessions} session(s) x {n_steps} step(s) on decode_attention \
+             (stateful KV cache, grown one block per step){}",
+            if decode_only { "" } else { " + the prefill mix" }
+        );
+    }
     println!(
         "admission: queue_cap {}, deadline {}, shed_policy {:?}, retune_every {}",
         queue_cap.map_or("unbounded".to_string(), |c| c.to_string()),
@@ -566,10 +601,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .collect();
     let total_weight: usize = spec.iter().map(|(_, w)| w).sum();
     let mut lcg: u64 = seed | 1;
+    let prefill_requests = if decode_only { 0 } else { requests };
     // (workload, seed, ragged trip), submission order
     let mut meta: Vec<(String, u64, Option<usize>)> = Vec::new();
     let mut stream: Vec<Request> = Vec::new();
-    for i in 0..requests {
+    for i in 0..prefill_requests {
         lcg = lcg
             .wrapping_mul(6364136223846793005)
             .wrapping_add(1442695040888963407);
@@ -606,16 +642,60 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         meta.push((name, req_seed, trip));
     }
 
+    // Decode traffic, also generated up front (the generator needs
+    // &server). Round-major order — step t for EVERY session before any
+    // step t+1 — so same-cache-length steps land in one bucket queue
+    // and coalesce. All sessions share the synthetic per-step KV stream
+    // (bit-identical caches), which is what a stacked launch requires.
+    let session_seed = |s: usize| seed.wrapping_add(0x5e55).wrapping_add(s as u64);
+    let mut decode_rounds: Vec<Vec<HashMap<String, Mat>>> = Vec::new();
+    if want_decode {
+        for t in 1..=n_steps {
+            let mut round = Vec::with_capacity(n_sessions);
+            for s in 0..n_sessions {
+                round.push(server.synthetic_decode_inputs(
+                    "decode_attention",
+                    session_seed(s),
+                    t,
+                )?);
+            }
+            decode_rounds.push(round);
+        }
+    }
+    // Session 0's final step, kept for the decode parity check below.
+    let parity_step = decode_rounds.last().and_then(|r| r.first()).cloned();
+
     // Channel ingest → background flusher → worker pool; shutdown() is a
     // graceful drain that hands the server back for stats + parity.
     let daemon = Daemon::start(server, retune);
     let client = daemon.client();
     let serve_t0 = Instant::now();
+    let mut session_ids: Vec<u64> = Vec::with_capacity(n_sessions);
+    if want_decode {
+        for _ in 0..n_sessions {
+            session_ids.push(client.open_session("decode_attention")?);
+        }
+    }
     let tickets: Vec<Ticket> = stream.into_iter().map(|r| client.submit(r)).collect();
+    // Per-session step order is admission order on the daemon channel:
+    // step t+1's cache length is established when step t is *admitted*
+    // (appends happen at admission), so the whole ladder can be in
+    // flight at once — no wait-per-step lockstep.
+    let mut decode_tickets: Vec<Ticket> = Vec::new();
+    for round in decode_rounds {
+        for (s, inputs) in round.into_iter().enumerate() {
+            decode_tickets.push(client.submit_decode(session_ids[s], inputs));
+        }
+    }
     let responses: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+    let decode_responses: Vec<Response> = decode_tickets.into_iter().map(|t| t.wait()).collect();
     let serve_secs = serve_t0.elapsed().as_secs_f64();
     let server = daemon.shutdown();
-    assert_eq!(responses.len(), requests, "every submission must yield exactly one response");
+    assert_eq!(
+        responses.len(),
+        prefill_requests,
+        "every submission must yield exactly one response"
+    );
 
     // Parity spot-check: for each workload, re-run the first *served*
     // request through an independent one-shot compile + sequential
@@ -670,6 +750,57 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 "served traffic counters of {name} diverged from sequential execution"
             );
             println!("parity OK: {name} (batched == sequential, bit-identical)");
+        }
+
+        // Decode parity: session 0's FINAL step against a stateless
+        // one-shot at the final cache length — the caches the session
+        // grew block-by-block, bound as ordinary full-size inputs, must
+        // reproduce the step's output and traffic bit-for-bit (stores
+        // differ by exactly the step's own KV append, which the
+        // response itemizes).
+        let final_step = n_steps
+            .checked_sub(1)
+            .map(|t| t * n_sessions)
+            .and_then(|i| decode_responses.get(i));
+        if let Some(r) = final_step.filter(|r| r.is_ok()) {
+            let name = "decode_attention";
+            let (p, ccfg, params, _) = workloads::by_name(name, 0).expect("registered name");
+            let compiled = compile(&p, ccfg.clone());
+            let sid = session_ids[0];
+            let t_final = server.session_len(sid).expect("sessions survive the drain");
+            let step = parity_step.expect("decode rounds were generated");
+            let mut inputs: HashMap<String, Mat> = HashMap::new();
+            inputs.insert("Q".to_string(), step["Q"].clone());
+            inputs.insert("MASK".to_string(), step["MASK"].clone());
+            for cache in ["KT", "VT"] {
+                let m = server.session_cache(sid, cache).expect("session cache").clone();
+                inputs.insert(cache.to_string(), m);
+            }
+            let mut sizes = ccfg.sizes.clone();
+            // The demo's growth dim: one N block per cached decode step.
+            sizes.set("N", t_final);
+            let seq = execute_plan_opts(&compiled.plan, &sizes, &params, &inputs, backend, threads);
+            assert_eq!(
+                seq.outputs["O"], r.outputs["O"],
+                "decode step {t_final} diverged from its stateless length-{t_final} reference"
+            );
+            assert_eq!(
+                (seq.mem.loaded_bytes, seq.mem.kernel_launches, seq.mem.flops),
+                (r.mem.loaded_bytes, r.mem.kernel_launches, r.mem.flops),
+                "decode traffic counters diverged from the stateless reference"
+            );
+            assert_eq!(
+                (r.mem.stored_bytes, r.mem.n_stores),
+                (
+                    seq.mem.stored_bytes + r.mem.state_appended_bytes,
+                    seq.mem.n_stores + r.mem.state_appends
+                ),
+                "decode stores must be the stateless reference plus the step's own KV append"
+            );
+            println!(
+                "parity OK: decode_attention (step {t_final} == stateless length-{t_final} \
+                 prefill reference, bit-identical)"
+            );
         }
     }
 
@@ -726,6 +857,26 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                  charged to the bucket edges, never to a request's own counters"
             );
         }
+    }
+    if want_decode {
+        let st = &stats.per_program["decode_attention"];
+        let final_len = session_ids
+            .first()
+            .and_then(|&sid| server.session_len(sid))
+            .unwrap_or(0);
+        println!(
+            "\ndecode coalescing: {} session(s) x {} step(s): {} step(s) served, {} coalesced \
+             across {} stacked launch(es); {} KV append(s) = {} byte(s) of cache growth; \
+             session 0 ended at cache length {} block(s)",
+            st.sessions_opened,
+            n_steps,
+            st.decode_steps,
+            st.coalesced,
+            st.stacked_batches,
+            st.state_appends,
+            st.state_appended_bytes,
+            final_len
+        );
     }
     let compiles: u64 = stats.per_program.values().map(|s| s.compiles).sum();
     let binds: u64 = stats.per_program.values().map(|s| s.binds).sum();

@@ -306,7 +306,7 @@ pub fn select(g: &Graph, ctx: &SelectCtx) -> SelectionPlan {
         let (i, j) = (w[0], w[1]);
         let nodes = ops[i..j].to_vec();
         let (cg, inw, outw) = extract_candidate(g, &nodes);
-        let (cost, snap_ix, fused) = interval[&(i, j)].clone();
+        let (cost, snap_ix, mut fused) = interval[&(i, j)].clone();
         let seg_ix = segments.len();
         let inputs: Vec<(String, ValueRef)> = inw
             .iter()
@@ -331,6 +331,16 @@ pub fn select(g: &Graph, ctx: &SelectCtx) -> SelectionPlan {
             })
             .collect();
         let _ = cg;
+        // Stateful-buffer marks survive fusion: a segment input fed by a
+        // stateful *program* input inherits its growth dim under the
+        // segment-local label, so `loopir::lower` can tag the `BufDecl`.
+        for (label, vr) in &inputs {
+            if let ValueRef::ProgramInput(name) = vr {
+                if let Some(dim) = g.state_dim(name) {
+                    fused.mark_state(label.clone(), dim.clone());
+                }
+            }
+        }
         segments.push(Segment {
             node_ids: nodes,
             graph: fused,

@@ -40,6 +40,7 @@
 //! flowing.
 
 use super::{ModelServer, Request, Response, Verdict};
+use crate::tensor::Mat;
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
@@ -68,6 +69,11 @@ pub struct RetuneConfig {
 
 enum Msg {
     Submit(Request, Sender<Response>),
+    /// Open a KV-cache session on a stateful workload; replies with the
+    /// session id (or the server's admission error).
+    OpenSession(String, Sender<anyhow::Result<u64>>),
+    /// One decode step for an open session (session id + step inputs).
+    SubmitDecode(u64, HashMap<String, Mat>, Sender<Response>),
     Shutdown,
 }
 
@@ -131,6 +137,18 @@ impl Daemon {
         submit_via(&self.tx, req)
     }
 
+    /// Open a KV-cache session (see [`ModelServer::open_session`]) from
+    /// the owning thread. Blocks for the flusher's round-trip.
+    pub fn open_session(&self, workload: &str) -> anyhow::Result<u64> {
+        open_session_via(&self.tx, workload)
+    }
+
+    /// Submit one decode step for an open session from the owning
+    /// thread.
+    pub fn submit_decode(&self, session: u64, inputs: HashMap<String, Mat>) -> Ticket {
+        submit_decode_via(&self.tx, session, inputs)
+    }
+
     /// Graceful drain: stop admitting, flush everything in flight, join
     /// the flusher, and return the server (with its final stats).
     pub fn shutdown(self) -> ModelServer {
@@ -154,6 +172,20 @@ impl DaemonClient {
     pub fn submit(&self, req: Request) -> Ticket {
         submit_via(&self.tx, req)
     }
+
+    /// Open a KV-cache session (see [`ModelServer::open_session`]).
+    /// Blocks for the flusher's round-trip; errors (unknown/stateless
+    /// workload, shutdown) come back typed instead of hanging.
+    pub fn open_session(&self, workload: &str) -> anyhow::Result<u64> {
+        open_session_via(&self.tx, workload)
+    }
+
+    /// Submit one decode step for an open session; the step's inputs
+    /// must match the session's pinned geometry
+    /// ([`ModelServer::submit_decode`]).
+    pub fn submit_decode(&self, session: u64, inputs: HashMap<String, Mat>) -> Ticket {
+        submit_decode_via(&self.tx, session, inputs)
+    }
 }
 
 fn submit_via(tx: &Sender<Msg>, req: Request) -> Ticket {
@@ -165,6 +197,30 @@ fn submit_via(tx: &Sender<Msg>, req: Request) -> Ticket {
             let _ = rtx.send(Response::unserved(
                 INVALID_ID,
                 &req.workload,
+                Verdict::Rejected(super::Rejected::Shutdown),
+                0,
+            ));
+        }
+    }
+    Ticket { rx: rrx }
+}
+
+fn open_session_via(tx: &Sender<Msg>, workload: &str) -> anyhow::Result<u64> {
+    let (rtx, rrx) = channel();
+    if tx.send(Msg::OpenSession(workload.to_string(), rtx)).is_err() {
+        anyhow::bail!("daemon already shut down");
+    }
+    rrx.recv()
+        .unwrap_or_else(|_| Err(anyhow::anyhow!("daemon exited before opening the session")))
+}
+
+fn submit_decode_via(tx: &Sender<Msg>, session: u64, inputs: HashMap<String, Mat>) -> Ticket {
+    let (rtx, rrx) = channel();
+    if let Err(e) = tx.send(Msg::SubmitDecode(session, inputs, rtx)) {
+        if let Msg::SubmitDecode(_, _, rtx) = e.0 {
+            let _ = rtx.send(Response::unserved(
+                INVALID_ID,
+                "decode",
                 Verdict::Rejected(super::Rejected::Shutdown),
                 0,
             ));
@@ -190,23 +246,23 @@ fn flusher_loop(
             .map(|t| t.saturating_duration_since(Instant::now()))
             .unwrap_or(IDLE_TICK);
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Submit(req, rtx)) => {
-                accept(&mut server, req, rtx, &mut waiters);
+            Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                return drain_and_return(server, rx, waiters);
+            }
+            Ok(msg) => {
+                ingest(&mut server, msg, &mut waiters);
                 // Burst drain: admit everything already queued on the
                 // channel before flushing, so a burst forms full batches
                 // instead of max_batch-1 stragglers.
                 loop {
                     match rx.try_recv() {
-                        Ok(Msg::Submit(req, rtx)) => accept(&mut server, req, rtx, &mut waiters),
                         Ok(Msg::Shutdown) | Err(TryRecvError::Disconnected) => {
                             return drain_and_return(server, rx, waiters);
                         }
+                        Ok(msg) => ingest(&mut server, msg, &mut waiters),
                         Err(TryRecvError::Empty) => break,
                     }
                 }
-            }
-            Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
-                return drain_and_return(server, rx, waiters);
             }
             Err(RecvTimeoutError::Timeout) => {}
         }
@@ -216,6 +272,22 @@ fn flusher_loop(
         if let Some(rt) = &retune {
             maybe_retune(&mut server, rt, &mut last_tuned, &mut tune_seed);
         }
+    }
+}
+
+/// Dispatch one non-shutdown ingest message. Session opens reply
+/// inline (they never enter the request ledger); submits park their
+/// reply channel with [`accept`]/[`accept_decode`].
+fn ingest(server: &mut ModelServer, msg: Msg, waiters: &mut HashMap<u64, Sender<Response>>) {
+    match msg {
+        Msg::Submit(req, rtx) => accept(server, req, rtx, waiters),
+        Msg::OpenSession(workload, rtx) => {
+            let _ = rtx.send(server.open_session(&workload));
+        }
+        Msg::SubmitDecode(session, inputs, rtx) => {
+            accept_decode(server, session, inputs, rtx, waiters)
+        }
+        Msg::Shutdown => {}
     }
 }
 
@@ -231,6 +303,36 @@ fn accept(
 ) {
     let workload = req.workload.clone();
     match server.submit(req) {
+        Ok(id) => {
+            waiters.insert(id, rtx);
+        }
+        Err(e) => {
+            let _ = rtx.send(Response::unserved(
+                INVALID_ID,
+                &workload,
+                Verdict::Failed(e.to_string()),
+                0,
+            ));
+        }
+    }
+}
+
+/// Admit one decode step, mirroring [`accept`]: admission errors
+/// (unknown/closed session, shape mismatch, full cache, shutdown)
+/// become immediate typed replies; admitted steps park their reply
+/// channel until the batched response routes.
+fn accept_decode(
+    server: &mut ModelServer,
+    session: u64,
+    inputs: HashMap<String, Mat>,
+    rtx: Sender<Response>,
+    waiters: &mut HashMap<u64, Sender<Response>>,
+) {
+    let workload = server
+        .session_workload(session)
+        .unwrap_or("decode")
+        .to_string();
+    match server.submit_decode(session, inputs) {
         Ok(id) => {
             waiters.insert(id, rtx);
         }
@@ -265,11 +367,10 @@ fn drain_and_return(
         route(resp, &mut waiters);
     }
     // Submissions that raced the shutdown message: run them through the
-    // server so they get counted, typed rejections.
+    // server so they get counted, typed rejections (session opens get
+    // the server's shutdown error the same way).
     while let Ok(msg) = rx.try_recv() {
-        if let Msg::Submit(req, rtx) = msg {
-            accept(&mut server, req, rtx, &mut waiters);
-        }
+        ingest(&mut server, msg, &mut waiters);
     }
     for resp in server.drain() {
         route(resp, &mut waiters);
@@ -433,5 +534,43 @@ mod tests {
         let resp = client.submit(req).wait();
         assert_eq!(resp.verdict, Verdict::Rejected(Rejected::Shutdown));
         assert_eq!(resp.id, INVALID_ID);
+    }
+
+    /// Decode sessions over the daemon RPC surface: open, step the
+    /// cache to length 3, and reconcile the ledger on shutdown. Post-
+    /// shutdown session opens and steps fail typed instead of hanging.
+    #[test]
+    fn daemon_decode_sessions_roundtrip() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("decode_attention").unwrap();
+        let steps: Vec<_> = (1..=3)
+            .map(|t| s.synthetic_decode_inputs("decode_attention", 7, t).unwrap())
+            .collect();
+        let daemon = Daemon::start(s, None);
+        let client = daemon.client();
+        assert!(client.open_session("quickstart").is_err(), "unknown workload");
+        let sid = client.open_session("decode_attention").unwrap();
+        for (i, inputs) in steps.into_iter().enumerate() {
+            let resp = client.submit_decode(sid, inputs).wait();
+            assert!(resp.is_ok(), "decode step {}: {:?}", i + 1, resp.verdict);
+            assert!(resp.outputs.contains_key("O"), "decode steps carry outputs");
+        }
+        let stray = client.submit_decode(sid + 1, HashMap::new()).wait();
+        assert_eq!(stray.id, INVALID_ID);
+        assert!(matches!(stray.verdict, Verdict::Failed(_)), "unknown session fails typed");
+        let server = daemon.shutdown();
+        assert_eq!(server.session_len(sid), Some(3), "cache grew one block per step");
+        let st = &server.stats().per_program["decode_attention"];
+        assert_eq!(st.decode_steps, 3);
+        assert_eq!(st.sessions_opened, 1);
+        assert_eq!(st.accounted(), st.submitted);
+        assert!(client.open_session("decode_attention").is_err(), "daemon gone");
+        let resp = client.submit_decode(sid, HashMap::new()).wait();
+        assert_eq!(resp.verdict, Verdict::Rejected(Rejected::Shutdown));
     }
 }

@@ -118,14 +118,16 @@ pub mod net;
 use crate::array::ArrayProgram;
 use crate::autotune::{autotune_measured_cached, MeasuredPoint};
 use crate::coordinator::{
-    bind_stacked_trip, compile, execute_prepared, execute_prepared_stacked_spec, plan_stack_info,
-    prepare_plan, stacked_input_axes, unstacked_inputs, workloads, CompileConfig, PlanRun,
-    PreparedPlan, StackInfo, StackSpec, StackedPlan,
+    bind_stacked_sized, bind_stacked_trip, compile, execute_prepared,
+    execute_prepared_stacked_extra, execute_prepared_stacked_spec, input_block_grid,
+    input_dim_axes, plan_stack_info, prepare_plan, stacked_input_axes, state_input_axes,
+    unstacked_inputs, workloads, CompileConfig, PlanRun, PreparedPlan, StackInfo, StackSpec,
+    StackedPlan,
 };
 use crate::cost::CostModel;
-use crate::exec::{pool, ExecBackend, TapeCache};
+use crate::exec::{append_state, pool, ExecBackend, TapeCache};
 use crate::fusion::fuse;
-use crate::ir::dim::DimSizes;
+use crate::ir::dim::{Dim, DimSizes};
 use crate::ir::graph::Graph;
 use crate::loopir::interp::MemSim;
 use crate::select::{select, SelectCtx};
@@ -482,6 +484,20 @@ pub struct ProgramStats {
     /// Flops burned on pad blocks — see
     /// [`ProgramStats::padded_loaded_bytes`].
     pub padded_flops: u64,
+    /// Decode sessions opened on this workload
+    /// ([`ModelServer::open_session`]).
+    pub sessions_opened: u64,
+    /// Decode steps served successfully — a subset of
+    /// [`ProgramStats::served`]; stateless and decode traffic share
+    /// every other counter.
+    pub decode_steps: u64,
+    /// Stateful-buffer block appends performed at decode admission
+    /// (each decode step appends one block-slab per stateful input).
+    pub state_appends: u64,
+    /// Bytes those appends stored. Per step this also rides the step's
+    /// own [`Response::mem`] (broken out in
+    /// [`MemSim::state_appended_bytes`]); here it aggregates.
+    pub state_appended_bytes: u64,
     /// Per-request end-to-end latency (queue + batched launch) of the
     /// most recent [`LATENCY_SAMPLE_CAP`] requests (a ring buffer — the
     /// latency summaries describe that window).
@@ -606,6 +622,12 @@ struct Served {
     /// stacks along — how [`ModelServer::submit`] derives a ragged
     /// request's trip from its extents.
     stack_axes: BTreeMap<String, usize>,
+    /// `Some` iff the plan has stateful (KV-cache) inputs — the growth
+    /// geometry the session machinery works from. Recomputed on every
+    /// hot-swap; open sessions keep the snapshot they pinned at open.
+    /// A stateful workload rejects plain [`ModelServer::submit`]:
+    /// decode traffic flows through sessions only.
+    state: Option<StateMeta>,
     /// Stacked re-binds of the prepared plan, keyed by **total trip**
     /// (uniform batches bind at `batch · trip`; ragged batches at the
     /// sum of their trips plus pads — bounded by the bucket ladder's
@@ -633,6 +655,166 @@ struct Pending {
     /// request's extents at admission (== the registered trip for a
     /// full-shape request; 0 when the plan is not stackable).
     trip: usize,
+    /// The decode session this step belongs to (`None` for stateless
+    /// requests). Session steps are batched by
+    /// [`ModelServer::run_decode_batch`], never the stateless paths.
+    session: Option<u64>,
+    /// For a session step: the cache length (in growth blocks,
+    /// *including* this step's own append) it executes at. The step
+    /// binds the cache **prefix** at this length no matter how much
+    /// the session grows while it waits — which is what makes queued
+    /// steps order-independent.
+    state_len: usize,
+    /// For a session step: the admission-time append traffic, folded
+    /// into the step's own [`Response::mem`]
+    /// ([`MemSim::state_appended_bytes`] breaks it back out).
+    append_mem: MemSim,
+}
+
+/// Growth geometry of a stateful plan, derived from its `state_dim`
+/// marks ([`crate::ir::graph::Graph::mark_state`], threaded through
+/// lowering) at registration and on every hot-swap. Sessions snapshot
+/// it at open time alongside the plan handle, so a later swap cannot
+/// change an open session's cache blocking.
+#[derive(Clone)]
+struct StateMeta {
+    /// The one growth dim every stateful input shares (`N` for decode
+    /// attention — the cache/context dim). Sessions support exactly
+    /// one growth dim per plan, distinct from the stack dim.
+    growth: Dim,
+    /// Registered block count of the growth dim — the **context cap**:
+    /// a session holds at most this many cache blocks.
+    cap: usize,
+    /// Stateful input name → how one decode step's append lands.
+    state: BTreeMap<String, StateAppend>,
+    /// Request inputs that carry the growth dim without being stateful
+    /// (the decode mask): name → (matrix axis, element extent of one
+    /// growth block along it). They must arrive scaled to the new
+    /// cache length.
+    scaled: BTreeMap<String, (usize, usize)>,
+}
+
+/// How one decode step's append lands in one stateful input's cache.
+#[derive(Clone)]
+struct StateAppend {
+    /// Matrix axis the cache grows along (0 = rows, 1 = cols).
+    axis: usize,
+    /// Element extent of one appended block-slab along `axis`.
+    unit: usize,
+    /// Block grid of one append — 1 along the growth axis, the full
+    /// registered block count on the other — what
+    /// [`crate::exec::append_state`] charges to [`MemSim`].
+    blocks: (usize, usize),
+}
+
+/// One decode session: the persistent KV blocks plus the plan handle
+/// they were opened against.
+struct Session {
+    workload: String,
+    /// The plan pinned at open: every step of this session executes
+    /// this exact plan, even across [`ModelServer::adopt_sizes`]
+    /// hot-swaps — the session's cache blocking is fixed at open time,
+    /// and its decode-vs-prefill parity holds against the pinned plan,
+    /// not whatever the live plan has been re-tuned to.
+    prepared: Arc<PreparedPlan>,
+    /// Stack info of the pinned plan (sessions require a stackable
+    /// plan — decode singles coalesce along it).
+    info: StackInfo,
+    /// Growth geometry snapshotted from the pinned plan.
+    meta: StateMeta,
+    /// The persistent buffers, one full matrix per stateful input,
+    /// grown by [`crate::exec::append_state`] at each step's
+    /// admission. A prefix is immutable once appended: a queued step
+    /// binds the prefix at its own [`Pending::state_len`], so steps
+    /// execute correctly in any order relative to later appends.
+    caches: BTreeMap<String, Mat>,
+    /// Cache length in growth blocks appended so far.
+    len: usize,
+}
+
+/// Derive a plan's growth geometry from its state marks. `Ok(None)`
+/// when the plan has no stateful inputs; `Err` when it has them but
+/// they cannot back sessions (several growth dims, growth dim == stack
+/// dim, extents not divisible into growth blocks).
+fn state_meta(
+    prepared: &PreparedPlan,
+    stack: Option<&StackInfo>,
+    full_shapes: &HashMap<String, (usize, usize)>,
+) -> anyhow::Result<Option<StateMeta>> {
+    let marks = state_input_axes(prepared);
+    if marks.is_empty() {
+        return Ok(None);
+    }
+    let mut growth: Option<Dim> = None;
+    for (name, (dim, _)) in &marks {
+        match &growth {
+            Some(g) if g != dim => bail!(
+                "stateful inputs disagree on the growth dim ({g:?} vs {dim:?} on {name}); \
+                 sessions support one growth dim per plan"
+            ),
+            Some(_) => {}
+            None => growth = Some(dim.clone()),
+        }
+    }
+    let growth = growth.expect("marks is non-empty");
+    if let Some(info) = stack {
+        if info.dim == growth {
+            bail!(
+                "growth dim {growth:?} is also the stackable grid dim; \
+                 sessions need them distinct"
+            );
+        }
+    }
+    let cap = prepared.sizes.get(&growth);
+    if cap == 0 {
+        bail!("growth dim {growth:?} is registered at 0 blocks");
+    }
+    let mut state = BTreeMap::new();
+    for (name, (_, axis)) in &marks {
+        let &(r, c) = full_shapes
+            .get(name)
+            .ok_or_else(|| anyhow!("stateful input {name} has no registered shape"))?;
+        let full = if *axis == 0 { r } else { c };
+        if full == 0 || full % cap != 0 {
+            bail!(
+                "stateful input {name}: extent {full} does not split into {cap} growth blocks"
+            );
+        }
+        let (rb, cb) = input_block_grid(prepared, name)
+            .ok_or_else(|| anyhow!("stateful input {name} has no block grid"))?;
+        let blocks = if *axis == 0 { (1, cb) } else { (rb, 1) };
+        state.insert(
+            name.clone(),
+            StateAppend {
+                axis: *axis,
+                unit: full / cap,
+                blocks,
+            },
+        );
+    }
+    let mut scaled = BTreeMap::new();
+    for (name, axis) in input_dim_axes(prepared, &growth) {
+        if state.contains_key(&name) {
+            continue;
+        }
+        let &(r, c) = full_shapes
+            .get(&name)
+            .ok_or_else(|| anyhow!("growth-scaled input {name} has no registered shape"))?;
+        let full = if axis == 0 { r } else { c };
+        if full == 0 || full % cap != 0 {
+            bail!(
+                "growth-scaled input {name}: extent {full} does not split into {cap} growth \
+                 blocks"
+            );
+        }
+        scaled.insert(name, (axis, full / cap));
+    }
+    Ok(Some(StateMeta {
+        growth,
+        cap,
+        state,
+        scaled,
+    }))
 }
 
 /// The compile-once model server (see module docs).
@@ -656,6 +838,19 @@ pub struct ModelServer {
     /// [`ModelServer::drain`] so every admitted id yields exactly one
     /// response through the same channel.
     deferred: Vec<Response>,
+    /// Open decode sessions ([`ModelServer::open_session`]), keyed by
+    /// session id — a namespace separate from request ids.
+    sessions: HashMap<u64, Session>,
+    next_session_id: u64,
+    /// Stacked binds for decode groups, keyed by (pinned plan pointer,
+    /// total stack trip, cache length). Decode binds override the
+    /// growth dim to the group's cache length, so they cannot share
+    /// [`Served::stacked`] (keyed by total trip alone), and they must
+    /// survive hot-swaps (sessions pin plans that outlive the live
+    /// one). Each entry keeps its plan's `Arc` alive, so a key's
+    /// pointer can never be reused by a different plan while the entry
+    /// exists.
+    decode_binds: HashMap<(usize, usize, usize), (Arc<PreparedPlan>, Arc<StackedPlan>)>,
 }
 
 impl ModelServer {
@@ -673,6 +868,9 @@ impl ModelServer {
             },
             shutting_down: false,
             deferred: Vec::new(),
+            sessions: HashMap::new(),
+            next_session_id: 0,
+            decode_binds: HashMap::new(),
         }
     }
 
@@ -719,6 +917,7 @@ impl ModelServer {
             .as_ref()
             .map(|info| stacked_input_axes(&prepared, info))
             .unwrap_or_default();
+        let state = state_meta(&prepared, stack.as_ref(), &full_shapes)?;
         let st = self.stats.per_program.entry(name.to_string()).or_default();
         st.compiles += 1;
         st.binds += prepared.binds;
@@ -733,6 +932,7 @@ impl ModelServer {
                 stack,
                 shared_inputs,
                 stack_axes,
+                state,
                 stacked: HashMap::new(),
                 weight: 1,
                 deficit: 0,
@@ -783,6 +983,13 @@ impl ModelServer {
             .programs
             .get_mut(&req.workload)
             .ok_or_else(|| anyhow!("unknown workload {}", req.workload))?;
+        if served.state.is_some() {
+            bail!(
+                "workload {} is stateful; open a session ({}) and submit decode steps",
+                req.workload,
+                "ModelServer::open_session"
+            );
+        }
         let trip = match &served.stack {
             Some(info) => derive_trip(
                 &req.workload,
@@ -890,6 +1097,250 @@ impl ModelServer {
             enqueued: now,
             deadline,
             trip,
+            session: None,
+            state_len: 0,
+            append_mem: MemSim::default(),
+        });
+        Ok(id)
+    }
+
+    /// Open a decode session on a registered **stateful** workload: the
+    /// session owns one persistent buffer per stateful input (initially
+    /// empty) and pins the live plan — every step of this session
+    /// executes that exact plan, even across
+    /// [`ModelServer::retune_and_swap`] hot-swaps, which is what keeps
+    /// its cache blocking (and its decode-vs-prefill parity) stable for
+    /// its whole life. Fails on unknown, stateless, or non-stackable
+    /// workloads, and on a draining server.
+    pub fn open_session(&mut self, workload: &str) -> anyhow::Result<u64> {
+        if self.shutting_down {
+            bail!("server is shutting down");
+        }
+        let served = self
+            .programs
+            .get(workload)
+            .ok_or_else(|| anyhow!("unknown workload {workload}"))?;
+        let meta = served
+            .state
+            .clone()
+            .ok_or_else(|| anyhow!("workload {workload} has no stateful inputs"))?;
+        let info = served.stack.clone().ok_or_else(|| {
+            anyhow!("workload {workload} has no stackable grid dim; sessions need one")
+        })?;
+        let mut caches = BTreeMap::new();
+        for (name, app) in &meta.state {
+            let (r, c) = served.full_shapes[name];
+            let empty = if app.axis == 0 {
+                Mat::zeros(0, c)
+            } else {
+                Mat::zeros(r, 0)
+            };
+            caches.insert(name.clone(), empty);
+        }
+        let id = self.next_session_id;
+        self.next_session_id += 1;
+        self.sessions.insert(
+            id,
+            Session {
+                workload: workload.to_string(),
+                prepared: Arc::clone(&served.prepared),
+                info,
+                meta,
+                caches,
+                len: 0,
+            },
+        );
+        let st = self.stats.per_program.entry(workload.to_string()).or_default();
+        st.sessions_opened += 1;
+        Ok(id)
+    }
+
+    /// Close a decode session, dropping its persistent buffers; returns
+    /// its final cache length in growth blocks. Steps of the session
+    /// still queued fail at launch with a typed [`Verdict::Failed`]
+    /// response (their ids still get exactly one response each).
+    pub fn close_session(&mut self, id: u64) -> anyhow::Result<usize> {
+        self.sessions
+            .remove(&id)
+            .map(|s| s.len)
+            .ok_or_else(|| anyhow!("unknown session {id}"))
+    }
+
+    /// Cache length (growth blocks appended so far) of an open session.
+    pub fn session_len(&self, id: u64) -> Option<usize> {
+        self.sessions.get(&id).map(|s| s.len)
+    }
+
+    /// The workload an open session belongs to.
+    pub fn session_workload(&self, id: u64) -> Option<&str> {
+        self.sessions.get(&id).map(|s| s.workload.as_str())
+    }
+
+    /// Read-only view of one of a session's persistent buffers (a test
+    /// and debugging hook — the differential suite checks the cache
+    /// bytes are exactly the appended stream).
+    pub fn session_cache(&self, id: u64, input: &str) -> Option<&Mat> {
+        self.sessions.get(&id).and_then(|s| s.caches.get(input))
+    }
+
+    /// Enqueue one decode step for an open session; returns its request
+    /// id. The step carries the fresh per-step inputs (the query block,
+    /// the mask scaled to the **new** cache length) plus exactly one
+    /// new block-slab per stateful input — the K/V blocks this step
+    /// appends. Validation errors (`Err`) never consume admission
+    /// accounting: the session must exist, the cache must have room
+    /// (the registered growth extent is the context cap), appends must
+    /// be one block-slab each, and every other input must match its
+    /// shape class. Past validation this mirrors
+    /// [`ModelServer::submit`]'s admission control (shutdown, default
+    /// deadline, queue cap) — and only an actually **enqueued** step
+    /// appends to the caches: a shed step leaves the session untouched.
+    /// Append traffic is charged to the step's own response counters
+    /// ([`MemSim::state_appended_bytes`] breaks it out), and the step
+    /// queues under its cache-length bucket, where same-length steps of
+    /// different sessions coalesce into one stacked launch.
+    pub fn submit_decode(
+        &mut self,
+        session: u64,
+        mut inputs: HashMap<String, Mat>,
+    ) -> anyhow::Result<u64> {
+        let sess = self
+            .sessions
+            .get(&session)
+            .ok_or_else(|| anyhow!("unknown session {session}"))?;
+        let workload = sess.workload.clone();
+        let trip = sess.info.trip;
+        let t_new = sess.len + 1;
+        if t_new > sess.meta.cap {
+            bail!(
+                "session {session}: cache is full ({} of {} growth blocks)",
+                sess.len,
+                sess.meta.cap
+            );
+        }
+        let served = self
+            .programs
+            .get_mut(&workload)
+            .ok_or_else(|| anyhow!("session {session}: workload {workload} is not registered"))?;
+        for (input, &(r, c)) in &served.full_shapes {
+            let m = inputs
+                .get(input)
+                .ok_or_else(|| anyhow!("decode step for {workload} missing input {input}"))?;
+            let want = if let Some(app) = sess.meta.state.get(input) {
+                // the one-block append slab
+                if app.axis == 0 {
+                    (app.unit, c)
+                } else {
+                    (r, app.unit)
+                }
+            } else if let Some(&(axis, unit)) = sess.meta.scaled.get(input) {
+                // scaled to the new cache length
+                if axis == 0 {
+                    (unit * t_new, c)
+                } else {
+                    (r, unit * t_new)
+                }
+            } else {
+                (r, c)
+            };
+            if (m.rows, m.cols) != want {
+                bail!(
+                    "decode step for {workload}: input {input} is {}x{}, expected {}x{} at \
+                     cache length {t_new}",
+                    m.rows,
+                    m.cols,
+                    want.0,
+                    want.1
+                );
+            }
+        }
+        let bucket = self.cfg.buckets.edge_for(t_new, sess.meta.cap);
+        let id = self.next_id;
+        self.next_id += 1;
+        let now = Instant::now();
+        let st = self.stats.per_program.entry(workload.clone()).or_default();
+        st.submitted += 1;
+        if self.shutting_down {
+            st.rejected_shutdown += 1;
+            self.deferred.push(Response::unserved(
+                id,
+                &workload,
+                Verdict::Rejected(Rejected::Shutdown),
+                0,
+            ));
+            return Ok(id);
+        }
+        let deadline = self.cfg.deadline.and_then(|d| now.checked_add(d));
+        if deadline.is_some_and(|d| d <= now) {
+            st.rejected_deadline += 1;
+            self.deferred.push(Response::unserved(
+                id,
+                &workload,
+                Verdict::Rejected(Rejected::DeadlineExpired),
+                0,
+            ));
+            return Ok(id);
+        }
+        if let Some(cap) = self.cfg.queue_cap {
+            if served.queues.values().map(|q| q.len()).sum::<usize>() >= cap {
+                st.rejected_full += 1;
+                match self.cfg.shed_policy {
+                    ShedPolicy::RejectNew => {
+                        self.deferred.push(Response::unserved(
+                            id,
+                            &workload,
+                            Verdict::Rejected(Rejected::QueueFull),
+                            0,
+                        ));
+                        return Ok(id);
+                    }
+                    ShedPolicy::DropOldest => {
+                        let oldest = served
+                            .queues
+                            .iter()
+                            .filter_map(|(k, q)| q.front().map(|p| (p.enqueued, *k)))
+                            .min()
+                            .map(|(_, k)| k);
+                        if let Some(evicted) = oldest
+                            .and_then(|k| served.queues.get_mut(&k))
+                            .and_then(|q| q.pop_front())
+                        {
+                            self.deferred.push(Response::unserved(
+                                evicted.id,
+                                &workload,
+                                Verdict::Rejected(Rejected::QueueFull),
+                                now.duration_since(evicted.enqueued).as_nanos(),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        // Admission proper: append this step's K/V blocks. From here on
+        // the step owns cache position `t_new` — it binds the prefix at
+        // its own length, so later appends cannot disturb it.
+        let mut append_mem = MemSim::default();
+        let sess = self
+            .sessions
+            .get_mut(&session)
+            .ok_or_else(|| anyhow!("unknown session {session}"))?;
+        for (name, app) in &sess.meta.state {
+            let part = inputs.remove(name).expect("validated above");
+            let cache = sess.caches.get_mut(name).expect("one cache per stateful input");
+            append_state(cache, app.axis, &part, app.blocks, &mut append_mem);
+        }
+        sess.len = t_new;
+        st.state_appends += append_mem.state_appends;
+        st.state_appended_bytes += append_mem.state_appended_bytes;
+        served.queues.entry(bucket).or_default().push_back(Pending {
+            id,
+            inputs,
+            enqueued: now,
+            deadline,
+            trip,
+            session: Some(session),
+            state_len: t_new,
+            append_mem,
         });
         Ok(id)
     }
@@ -997,6 +1448,68 @@ impl ModelServer {
     ) -> anyhow::Result<u64> {
         let inputs = self.synthetic_inputs_ragged(workload, seed, trip)?;
         self.submit(Request::new(workload, inputs))
+    }
+
+    /// The deterministic inputs [`Self::submit_synthetic_decode`]
+    /// generates for `(workload, session_seed, step)` — `step` counts
+    /// from 1 and becomes the new cache length. Stateful K/V appends
+    /// come from a **fixed per-step stream** shared by every session
+    /// (the decode analogue of the fixed weight stream): any two
+    /// sessions at the same step hold bit-identical caches, which is
+    /// exactly the condition a coalesced decode launch needs. The query
+    /// comes from `session_seed`, so outputs still differ per session;
+    /// the mask ships zeroed at the new length (each step attends the
+    /// whole cache, its own block included).
+    pub fn synthetic_decode_inputs(
+        &self,
+        workload: &str,
+        session_seed: u64,
+        step: usize,
+    ) -> anyhow::Result<HashMap<String, Mat>> {
+        let served = self
+            .programs
+            .get(workload)
+            .ok_or_else(|| anyhow!("unknown workload {workload}"))?;
+        let meta = served
+            .state
+            .as_ref()
+            .ok_or_else(|| anyhow!("workload {workload} has no stateful inputs"))?;
+        if step < 1 || step > meta.cap {
+            bail!("decode step {step} out of range 1..={} for {workload}", meta.cap);
+        }
+        Ok(synth_decode_step(&served.full_shapes, meta, session_seed, step))
+    }
+
+    /// Enqueue the session's next synthetic decode step (see
+    /// [`ModelServer::synthetic_decode_inputs`]). The step index is the
+    /// session's own cache length + 1 — a shed step does not advance
+    /// it, so a retry regenerates the same step. Geometry comes from
+    /// the session's **pinned** plan, so synthetic steps keep flowing
+    /// bit-exactly across live hot-swaps.
+    pub fn submit_synthetic_decode(
+        &mut self,
+        session: u64,
+        session_seed: u64,
+    ) -> anyhow::Result<u64> {
+        let sess = self
+            .sessions
+            .get(&session)
+            .ok_or_else(|| anyhow!("unknown session {session}"))?;
+        let workload = sess.workload.clone();
+        let step = sess.len + 1;
+        if step > sess.meta.cap {
+            bail!(
+                "session {session}: cache is full ({} of {} growth blocks)",
+                sess.len,
+                sess.meta.cap
+            );
+        }
+        let served = self
+            .programs
+            .get(&workload)
+            .ok_or_else(|| anyhow!("session {session}: workload {workload} is not registered"))?;
+        let inputs = synth_decode_step(&served.full_shapes, &sess.meta, session_seed, step);
+        self.submit_decode(session, inputs)
     }
 
     /// Requests currently queued across all workloads (and buckets).
@@ -1288,6 +1801,11 @@ impl ModelServer {
         if bs == 0 {
             return Vec::new();
         }
+        if batch.iter().any(|p| p.session.is_some()) {
+            // Stateful workloads admit only session steps, so a batch
+            // holding one holds nothing else.
+            return self.run_decode_batch(name, batch);
+        }
         let threads = self.cfg.threads;
         let workers = effective_workers(threads, bs);
         let Some(served) = self.programs.get_mut(name) else {
@@ -1556,6 +2074,203 @@ impl ModelServer {
         out
     }
 
+    /// Execute one batch of decode steps. Steps are grouped by (pinned
+    /// plan, cache length, bit-identical cache prefixes); with
+    /// coalescing on each group becomes **one stacked launch** — decode
+    /// singles stack along the plan's grid dim exactly like prefill
+    /// requests, with the growth dim re-bound to the group's cache
+    /// length — else every step launches alone. Each step's response
+    /// carries the stateless parity counters for its cache length
+    /// *plus* its own admission-time append traffic (broken out in
+    /// [`MemSim::state_appended_bytes`]); panic isolation matches
+    /// [`ModelServer::run_batch`]'s stacked path (one contained panic
+    /// poisons its group only).
+    fn run_decode_batch(&mut self, name: &str, batch: Vec<Pending>) -> Vec<Response> {
+        struct Group {
+            prepared: Arc<PreparedPlan>,
+            info: StackInfo,
+            growth: Dim,
+            t: usize,
+            /// The group's cache view: one prefix matrix per stateful
+            /// input, sliced at `t` — bound as shared extra inputs.
+            extra: HashMap<String, Mat>,
+            members: Vec<Pending>,
+        }
+        let threads = self.cfg.threads;
+        let now = Instant::now();
+        let mut out = Vec::new();
+        let mut groups: Vec<Group> = Vec::new();
+        for p in batch {
+            let sid = match p.session {
+                Some(sid) => sid,
+                None => {
+                    let st = self.stats.per_program.entry(name.to_string()).or_default();
+                    st.failed += 1;
+                    out.push(Response::unserved(
+                        p.id,
+                        name,
+                        Verdict::Failed(format!(
+                            "stateless request batched with decode steps of {name}"
+                        )),
+                        now.duration_since(p.enqueued).as_nanos(),
+                    ));
+                    continue;
+                }
+            };
+            let Some(sess) = self.sessions.get(&sid) else {
+                let st = self.stats.per_program.entry(name.to_string()).or_default();
+                st.failed += 1;
+                out.push(Response::unserved(
+                    p.id,
+                    name,
+                    Verdict::Failed(format!("session {sid} closed with steps still queued")),
+                    now.duration_since(p.enqueued).as_nanos(),
+                ));
+                continue;
+            };
+            let t = p.state_len;
+            let mut extra = HashMap::new();
+            for (iname, app) in &sess.meta.state {
+                let cache = &sess.caches[iname];
+                let m = if app.axis == 0 {
+                    cache.slice(0, 0, app.unit * t, cache.cols)
+                } else {
+                    cache.slice(0, 0, cache.rows, app.unit * t)
+                };
+                extra.insert(iname.clone(), m);
+            }
+            let ptr = Arc::as_ptr(&sess.prepared) as usize;
+            let slot = groups.iter_mut().find(|g| {
+                Arc::as_ptr(&g.prepared) as usize == ptr
+                    && g.t == t
+                    && caches_identical(&g.extra, &extra)
+            });
+            match slot {
+                Some(g) => g.members.push(p),
+                None => groups.push(Group {
+                    prepared: Arc::clone(&sess.prepared),
+                    info: sess.info.clone(),
+                    growth: sess.meta.growth.clone(),
+                    t,
+                    extra,
+                    members: vec![p],
+                }),
+            }
+        }
+        for group in groups {
+            let Group {
+                prepared,
+                info,
+                growth,
+                t,
+                extra,
+                members,
+            } = group;
+            // With coalescing off every step launches alone (the
+            // stacked machinery still runs it — a batch of one — since
+            // only a stacked bind can override the growth dim to `t`).
+            let subgroups: Vec<Vec<Pending>> = if self.cfg.coalesce {
+                vec![members]
+            } else {
+                members.into_iter().map(|p| vec![p]).collect()
+            };
+            for members in subgroups {
+                let bs = members.len();
+                let spec = StackSpec {
+                    trips: vec![info.trip; bs],
+                    pads: vec![0; bs],
+                };
+                let total = spec.total_trip();
+                let key = (Arc::as_ptr(&prepared) as usize, total, t);
+                let mut new_binds = 0u64;
+                let stacked = match self.decode_binds.get(&key) {
+                    Some((_, sp)) => Arc::clone(sp),
+                    None => {
+                        let sp = Arc::new(bind_stacked_sized(
+                            &prepared,
+                            &info,
+                            total,
+                            &[(growth.clone(), t)],
+                        ));
+                        new_binds = sp.binds;
+                        self.decode_binds
+                            .insert(key, (Arc::clone(&prepared), Arc::clone(&sp)));
+                        sp
+                    }
+                };
+                let input_refs: Vec<&HashMap<String, Mat>> =
+                    members.iter().map(|p| &p.inputs).collect();
+                let t0 = Instant::now();
+                let run = catch_unwind(AssertUnwindSafe(|| {
+                    if fault::injected(fault::Site::Compute) {
+                        panic!("injected compute fault (decode batch)");
+                    }
+                    execute_prepared_stacked_extra(
+                        &prepared,
+                        &stacked,
+                        &spec,
+                        &input_refs,
+                        &extra,
+                        threads,
+                    )
+                }));
+                let t1 = Instant::now();
+                let exec_ns = t1.duration_since(t0).as_nanos();
+                let coalesced = self.cfg.coalesce && bs >= 2;
+                let st = self.stats.per_program.entry(name.to_string()).or_default();
+                st.binds += new_binds;
+                st.batches += 1;
+                st.peak_batch = st.peak_batch.max(bs);
+                match run {
+                    Ok(br) => {
+                        st.served += bs as u64;
+                        st.decode_steps += bs as u64;
+                        st.launches += br.agg.kernel_launches;
+                        if coalesced {
+                            st.coalesced += bs as u64;
+                            st.stacked_batches += 1;
+                        }
+                        for (p, run) in members.into_iter().zip(br.runs) {
+                            let mut mem = run.mem;
+                            mem.add_counters(&p.append_mem);
+                            st.record_latency(t1.duration_since(p.enqueued).as_nanos());
+                            out.push(Response {
+                                id: p.id,
+                                workload: name.to_string(),
+                                outputs: run.outputs,
+                                mem,
+                                batch_size: bs,
+                                coalesced,
+                                queue_ns: t0.duration_since(p.enqueued).as_nanos(),
+                                exec_ns,
+                                verdict: Verdict::Ok,
+                            });
+                        }
+                    }
+                    Err(payload) => {
+                        let msg = panic_message(payload);
+                        st.failed += bs as u64;
+                        st.panics += 1;
+                        for p in members {
+                            out.push(Response {
+                                id: p.id,
+                                workload: name.to_string(),
+                                outputs: HashMap::new(),
+                                mem: MemSim::default(),
+                                batch_size: bs,
+                                coalesced: false,
+                                queue_ns: t0.duration_since(p.enqueued).as_nanos(),
+                                exec_ns,
+                                verdict: Verdict::Failed(msg.clone()),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// Measured block-shape autotuning for a registered workload,
     /// sharing the server's skeleton cache (so trials re-bind the same
     /// skeletons serving uses instead of recompiling). Returns the
@@ -1627,10 +2342,12 @@ impl ModelServer {
         let Some(served) = self.programs.get_mut(name) else {
             bail!("workload {name} disappeared during adopt_sizes");
         };
+        let state = state_meta(&prepared, stack.as_ref(), &served.full_shapes)?;
         served.prepared = Arc::new(prepared);
         served.stack = stack;
         served.shared_inputs = shared_inputs;
         served.stack_axes = stack_axes;
+        served.state = state;
         served.stacked.clear();
         // Re-bucket queued requests against the new plan: bucket edges
         // are keyed by the plan's registered trip, so both the edges
@@ -1646,6 +2363,20 @@ impl ModelServer {
         served.queues.clear();
         let mut dropped: Vec<(Pending, String)> = Vec::new();
         for p in queued {
+            if let Some(sid) = p.session {
+                // A session step executes its *pinned* plan — the swap
+                // does not touch it. Re-bucket by cache length against
+                // the pinned capacity; a closed session's straggler
+                // keeps its old bucket and fails typed at launch.
+                let cap = self
+                    .sessions
+                    .get(&sid)
+                    .map(|s| s.meta.cap)
+                    .unwrap_or(p.state_len);
+                let bucket = self.cfg.buckets.edge_for(p.state_len, cap);
+                served.queues.entry(bucket).or_default().push_back(p);
+                continue;
+            }
             match &served.stack {
                 Some(info) => match derive_trip(
                     name,
@@ -1827,6 +2558,66 @@ fn effective_workers(threads: Option<usize>, tasks: usize) -> usize {
 /// (weight-like inputs are shared across all synthetic requests of a
 /// workload; activations vary with the request seed).
 const SYNTHETIC_WEIGHT_SEED: u64 = 0x5eed_b10c;
+
+/// Build one synthetic decode step against an explicit growth geometry
+/// (a session's pinned one, or the live plan's). Pure in
+/// `(full_shapes, meta, session_seed, step)`: K/V appends from a fixed
+/// per-step stream (shared across sessions, drawn in sorted input-name
+/// order), the mask zeroed at the new length, everything else from the
+/// session stream.
+fn synth_decode_step(
+    full_shapes: &HashMap<String, (usize, usize)>,
+    meta: &StateMeta,
+    session_seed: u64,
+    step: usize,
+) -> HashMap<String, Mat> {
+    let mix = (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut rng = Rng::new(session_seed ^ mix);
+    let mut state_rng = Rng::new(SYNTHETIC_WEIGHT_SEED ^ mix);
+    let mut names: Vec<&String> = full_shapes.keys().collect();
+    names.sort();
+    names
+        .into_iter()
+        .map(|n| {
+            let (r, c) = full_shapes[n];
+            let m = if let Some(app) = meta.state.get(n) {
+                if app.axis == 0 {
+                    state_rng.mat(app.unit, c)
+                } else {
+                    state_rng.mat(r, app.unit)
+                }
+            } else if let Some(&(axis, unit)) = meta.scaled.get(n) {
+                if axis == 0 {
+                    Mat::zeros(unit * step, c)
+                } else {
+                    Mat::zeros(r, unit * step)
+                }
+            } else {
+                rng.mat(r, c)
+            };
+            (n.clone(), m)
+        })
+        .collect()
+}
+
+/// Bitwise equality of two decode steps' cache views — the decode
+/// analogue of [`shared_inputs_identical`]: a stacked decode launch
+/// binds one cache prefix for every member, so anything short of
+/// bit-identity would break per-step parity.
+fn caches_identical(a: &HashMap<String, Mat>, b: &HashMap<String, Mat>) -> bool {
+    a.len() == b.len()
+        && a.iter().all(|(k, ma)| {
+            b.get(k).is_some_and(|mb| {
+                ma.rows == mb.rows
+                    && ma.cols == mb.cols
+                    && ma
+                        .data
+                        .iter()
+                        .zip(&mb.data)
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+            })
+        })
+}
 
 /// Derive a request's trip (block count along the stack dim) from its
 /// input extents, validating everything else against the registered
@@ -2676,5 +3467,306 @@ mod tests {
         let trips: Vec<usize> = r.iter().map(|x| x.outputs["C"].rows).collect();
         let unit = trips.iter().min().copied().unwrap();
         assert!(trips.iter().all(|t| t % unit == 0));
+    }
+
+    /// Tiny deterministic generator for the property fuzz below (the
+    /// crate's `Rng` draws f32 matrices; these properties need integer
+    /// draws).
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            self.0 = self
+                .0
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            self.0 >> 33
+        }
+        fn below(&mut self, n: u64) -> u64 {
+            self.next() % n
+        }
+    }
+
+    /// Property fuzz (seeded): for every ladder shape and any
+    /// `1 <= trip <= registered`, the edge is clamped to
+    /// `trip..=registered` and is monotone in the trip — the two facts
+    /// bucket routing relies on.
+    #[test]
+    fn fuzz_bucket_edges_monotone_and_clamped() {
+        let mut g = Lcg(0xb10c_1add_e500_0001);
+        let mut ladders = vec![BucketLadder::Exact, BucketLadder::Pow2, BucketLadder::Max];
+        for _ in 0..32 {
+            let mut edges = Vec::new();
+            let mut e = 0u64;
+            for _ in 0..=g.below(4) {
+                e += 1 + g.below(5);
+                edges.push(e as usize);
+            }
+            ladders.push(BucketLadder::Edges(edges));
+        }
+        for ladder in &ladders {
+            for _ in 0..64 {
+                let registered = 1 + g.below(16) as usize;
+                let mut prev = 0usize;
+                for trip in 1..=registered {
+                    let edge = ladder.edge_for(trip, registered);
+                    assert!(
+                        trip <= edge && edge <= registered,
+                        "{ladder:?}: edge {edge} for trip {trip}/{registered} escapes the clamp"
+                    );
+                    assert!(edge >= prev, "{ladder:?}: edge not monotone at trip {trip}");
+                    prev = edge;
+                }
+            }
+        }
+    }
+
+    /// Property fuzz (seeded): `from_name` accepts exactly the named
+    /// ladders and strictly-ascending positive edge lists; every
+    /// non-ascending, zero-containing, or junk list is rejected.
+    #[test]
+    fn fuzz_from_name_rejects_malformed_edge_lists() {
+        assert_eq!(BucketLadder::from_name("exact"), Some(BucketLadder::Exact));
+        assert_eq!(BucketLadder::from_name("pow2"), Some(BucketLadder::Pow2));
+        assert_eq!(BucketLadder::from_name("max"), Some(BucketLadder::Max));
+        for bad in ["", "0", "1,1", "4,2", "1,2,2", "2,0,3", "a", "1,b", "-1", "1,,2"] {
+            assert_eq!(BucketLadder::from_name(bad), None, "accepted {bad:?}");
+        }
+        let mut g = Lcg(0x5eed_ed6e_5);
+        for _ in 0..256 {
+            let n = 1 + g.below(5) as usize;
+            let mut edges: Vec<usize> = Vec::new();
+            let mut e = 0u64;
+            for _ in 0..n {
+                e += 1 + g.below(6);
+                edges.push(e as usize);
+            }
+            let name = edges
+                .iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            assert_eq!(
+                BucketLadder::from_name(&name),
+                Some(BucketLadder::Edges(edges.clone())),
+                "rejected ascending {name}"
+            );
+            // any mutation that breaks strict ascent must reject
+            if edges.len() >= 2 {
+                let i = 1 + g.below(edges.len() as u64 - 1) as usize;
+                let mut broken = edges.clone();
+                broken[i] = broken[i - 1];
+                let name = broken
+                    .iter()
+                    .map(|x| x.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",");
+                assert_eq!(BucketLadder::from_name(&name), None, "accepted {name}");
+            }
+        }
+    }
+
+    /// Property fuzz (seeded) for `derive_trip`: whole-block extents up
+    /// to the registered trip derive exactly; full shapes clamp to the
+    /// registered trip; unit violations, oversize, cross-input
+    /// disagreement, and missing inputs all reject.
+    #[test]
+    fn fuzz_derive_trip_units_and_clamp() {
+        let mut g = Lcg(0x7819_0001);
+        for _ in 0..128 {
+            let reg = 1 + g.below(6) as usize;
+            let unit_q = 4 * (1 + g.below(3) as usize);
+            let info = StackInfo {
+                dim: Dim::new("M"),
+                trip: reg,
+            };
+            let mut full = HashMap::new();
+            full.insert("Q".to_string(), (reg * unit_q, 16));
+            full.insert("KT".to_string(), (32, reg * 8));
+            full.insert("W".to_string(), (16, 16));
+            let mut axes = BTreeMap::new();
+            axes.insert("Q".to_string(), 0);
+            axes.insert("KT".to_string(), 1);
+            let mk = |kq: usize, kk: usize| {
+                let mut m = HashMap::new();
+                m.insert("Q".to_string(), Mat::zeros(kq, 16));
+                m.insert("KT".to_string(), Mat::zeros(32, kk));
+                m.insert("W".to_string(), Mat::zeros(16, 16));
+                m
+            };
+            let k = 1 + g.below(reg as u64) as usize;
+            let got = derive_trip("w", &info, &axes, &full, &mk(k * unit_q, k * 8)).unwrap();
+            assert_eq!(got, k, "exact whole-block extents derive their trip");
+            let got = derive_trip("w", &info, &axes, &full, &mk(reg * unit_q, reg * 8)).unwrap();
+            assert_eq!(got, reg, "full shapes clamp to the registered trip");
+            if unit_q > 1 {
+                let r = derive_trip("w", &info, &axes, &full, &mk(k * unit_q - 1, k * 8));
+                assert!(r.is_err(), "non-whole-block extent must reject");
+            }
+            let r = derive_trip("w", &info, &axes, &full, &mk((reg + 1) * unit_q, (reg + 1) * 8));
+            assert!(r.is_err(), "oversize must reject");
+            if reg >= 2 {
+                let k2 = if k == reg { k - 1 } else { k + 1 };
+                let r = derive_trip("w", &info, &axes, &full, &mk(k * unit_q, k2 * 8));
+                assert!(r.is_err(), "cross-input trip disagreement must reject");
+            }
+            let mut missing = mk(k * unit_q, k * 8);
+            missing.remove("KT");
+            assert!(derive_trip("w", &info, &axes, &full, &missing).is_err());
+        }
+    }
+
+    /// Property (seeded): bucket assignment — and therefore each
+    /// request's outputs and coalesced batch size — is stable under
+    /// permutation of a burst's arrival order.
+    #[test]
+    fn fuzz_ladder_assignment_stable_under_permutation() {
+        let trips = [1usize, 3, 4, 2, 2, 3, 1, 4, 4, 1];
+        let mut orders: Vec<Vec<usize>> = vec![(0..trips.len()).collect()];
+        let mut g = Lcg(0xbadc_0ffe_e);
+        for _ in 0..3 {
+            // Fisher–Yates off the seeded generator
+            let mut o: Vec<usize> = (0..trips.len()).collect();
+            for i in (1..o.len()).rev() {
+                o.swap(i, g.below(i as u64 + 1) as usize);
+            }
+            orders.push(o);
+        }
+        let runs: Vec<BTreeMap<usize, (usize, Mat)>> = orders
+            .iter()
+            .map(|order| {
+                let mut s = ModelServer::new(ServerConfig {
+                    max_batch: 16,
+                    max_wait: Duration::from_secs(3600),
+                    threads: Some(1),
+                    coalesce: true,
+                    buckets: BucketLadder::Pow2,
+                    ..ServerConfig::default()
+                });
+                s.register("attention").unwrap();
+                let mut by_req: HashMap<u64, usize> = HashMap::new();
+                for &r in order {
+                    let id = s
+                        .submit_synthetic_ragged("attention", r as u64, trips[r])
+                        .unwrap();
+                    by_req.insert(id, r);
+                }
+                let mut out = BTreeMap::new();
+                for resp in s.drain() {
+                    assert!(resp.is_ok());
+                    out.insert(by_req[&resp.id], (resp.batch_size, resp.outputs["O"].clone()));
+                }
+                out
+            })
+            .collect();
+        for run in &runs[1..] {
+            assert_eq!(run.len(), runs[0].len());
+            for (k, (bs, m)) in run {
+                let (bs0, m0) = &runs[0][k];
+                assert_eq!(bs, bs0, "batch size of request {k} depends on arrival order");
+                assert_eq!((m.rows, m.cols), (m0.rows, m0.cols));
+                assert!(
+                    m.data.iter().zip(&m0.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "outputs of request {k} depend on arrival order"
+                );
+            }
+        }
+    }
+
+    /// Decode sessions end to end inside the server: stateful workloads
+    /// reject plain submits, sessions append at admission, same-length
+    /// steps of different sessions coalesce into one stacked launch,
+    /// and every response carries the append breakout.
+    #[test]
+    fn decode_sessions_coalesce_and_account_appends() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            coalesce: true,
+            ..ServerConfig::default()
+        });
+        s.register("decode_attention").unwrap();
+        let err = s
+            .submit_synthetic("decode_attention", 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stateful"), "got: {err}");
+        let a = s.open_session("decode_attention").unwrap();
+        let b = s.open_session("decode_attention").unwrap();
+        assert_ne!(a, b);
+        for step in 0..4 {
+            s.submit_synthetic_decode(a, 11).unwrap();
+            s.submit_synthetic_decode(b, 22).unwrap();
+            let r = s.drain();
+            assert_eq!(r.len(), 2);
+            for resp in &r {
+                assert!(resp.is_ok(), "step {step}: {:?}", resp.verdict);
+                assert!(resp.coalesced, "same-length steps share a stacked launch");
+                assert_eq!(resp.batch_size, 2);
+                assert!(resp.mem.state_appends > 0);
+                assert!(resp.mem.state_appended_bytes > 0);
+                assert!(resp.mem.stored_bytes >= resp.mem.state_appended_bytes);
+            }
+            // the two sessions' queries differ, so outputs must too
+            assert_ne!(r[0].outputs["O"].data, r[1].outputs["O"].data);
+        }
+        assert_eq!(s.session_len(a), Some(4));
+        // context cap: a fifth step overflows the registered extent
+        let err = s.submit_synthetic_decode(a, 11).unwrap_err().to_string();
+        assert!(err.contains("full"), "got: {err}");
+        let st = &s.stats().per_program["decode_attention"];
+        assert_eq!(st.sessions_opened, 2);
+        assert_eq!(st.decode_steps, 8);
+        assert_eq!(st.stacked_batches, 4);
+        assert_eq!(st.state_appends, 8 * 4, "4 blocks per step (2 per cache)");
+        assert_eq!(s.close_session(a).unwrap(), 4);
+        assert!(s.session_len(a).is_none());
+    }
+
+    /// A step queued when its session closes fails typed at launch; the
+    /// submitted/accounted ledger still reconciles.
+    #[test]
+    fn closed_session_straggler_fails_typed() {
+        let mut s = ModelServer::new(ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(3600),
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("decode_attention").unwrap();
+        let sid = s.open_session("decode_attention").unwrap();
+        s.submit_synthetic_decode(sid, 7).unwrap();
+        s.close_session(sid).unwrap();
+        let r = s.drain();
+        assert_eq!(r.len(), 1);
+        match &r[0].verdict {
+            Verdict::Failed(msg) => assert!(msg.contains("closed"), "got: {msg}"),
+            v => panic!("expected Failed, got {v:?}"),
+        }
+        let st = &s.stats().per_program["decode_attention"];
+        assert_eq!(st.submitted, st.accounted());
+    }
+
+    /// Decode admission mirrors stateless admission: validation errors
+    /// consume no accounting, a draining server sheds steps typed and
+    /// refuses new sessions, and a shed step never appends.
+    #[test]
+    fn decode_admission_control_mirrors_submit() {
+        let mut s = ModelServer::new(ServerConfig {
+            threads: Some(1),
+            ..ServerConfig::default()
+        });
+        s.register("decode_attention").unwrap();
+        let sid = s.open_session("decode_attention").unwrap();
+        assert!(s.submit_decode(sid, HashMap::new()).is_err());
+        assert_eq!(s.stats().per_program["decode_attention"].submitted, 0);
+        s.begin_shutdown();
+        assert!(s.open_session("decode_attention").is_err());
+        let id = s.submit_synthetic_decode(sid, 3).unwrap();
+        let r = s.drain();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].id, id);
+        assert_eq!(r[0].verdict, Verdict::Rejected(Rejected::Shutdown));
+        assert_eq!(s.session_len(sid), Some(0), "a shed step never appends");
     }
 }

@@ -38,7 +38,7 @@ use std::fmt;
 pub const MAGIC: u32 = 0x4231_5042;
 /// Bumped on any incompatible frame-layout change; the preamble
 /// handshake rejects mismatches before any frame is parsed.
-pub const VERSION: u16 = 2;
+pub const VERSION: u16 = 3;
 /// Connection preamble length: magic + version + 2 reserved bytes.
 pub const PREAMBLE_LEN: usize = 8;
 /// Frame header length: kind + reserved + payload len + checksum.
@@ -270,6 +270,8 @@ impl Enc {
         self.u64(m.padded_loaded_bytes);
         self.u64(m.padded_stored_bytes);
         self.u64(m.padded_flops);
+        self.u64(m.state_appended_bytes);
+        self.u64(m.state_appends);
     }
 }
 
@@ -366,6 +368,8 @@ impl<'a> Dec<'a> {
             padded_loaded_bytes: self.u64()?,
             padded_stored_bytes: self.u64()?,
             padded_flops: self.u64()?,
+            state_appended_bytes: self.u64()?,
+            state_appends: self.u64()?,
         })
     }
 
@@ -622,6 +626,8 @@ mod tests {
                 padded_loaded_bytes: 8,
                 padded_stored_bytes: 9,
                 padded_flops: 10,
+                state_appended_bytes: 11,
+                state_appends: 12,
             },
             outputs: vec![("Y".into(), m)],
         })));

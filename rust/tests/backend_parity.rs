@@ -218,6 +218,66 @@ fn ew_heavy_programs_bit_identical_across_backends_simd_threads() {
     }
 }
 
+/// The decode workload — one query block against a growing KV cache —
+/// swept over every cache length the demo cap allows × backends × SIMD
+/// on/off × 1/2/8 threads, on the naive program and the fully fused
+/// flash-decode kernel. Everything must agree bitwise with the
+/// interpreter reference (computed once per length, simd on): the
+/// decode-vs-prefill differential in `serve_decode.rs` leans on this
+/// exactness, so it gets its own sweep here.
+#[test]
+fn decode_attention_bit_identical_across_backends_simd_threads() {
+    use blockbuster::tensor::simd;
+
+    let (p, cfg, params, full) = workloads::by_name("decode_attention", 0x5EED).unwrap();
+    let g = lower_array(&p);
+    let naive = lower(&g);
+    let fused = lower(fuse(g).snapshots.last().unwrap());
+    let cap = cfg.sizes.get(&"N".into());
+    assert!(cap >= 2, "demo cap must exercise more than one cache length");
+
+    for t in 1..=cap {
+        // Slice the full-cap demo inputs down to a length-t cache: KT
+        // keeps its first t row blocks, VT its first t col blocks, and
+        // the (zero) mask its first t col blocks.
+        let mut sizes = cfg.sizes.clone();
+        sizes.set("N", t);
+        let mut wl = Workload::new(sizes);
+        wl.params = params.clone();
+        wl.inputs.insert("Q".into(), full["Q"].clone());
+        wl.inputs.insert("KT".into(), full["KT"].slice(0, 0, 8 * t, 16));
+        wl.inputs.insert("VT".into(), full["VT"].slice(0, 0, 16, 8 * t));
+        wl.inputs.insert("MASK".into(), full["MASK"].slice(0, 0, 8, 8 * t));
+
+        for (ir_name, ir) in [("naive", &naive), ("fused", &fused)] {
+            simd::set_enabled(true);
+            let want = run_lowered_with(ir, &wl, ExecBackend::Interp);
+            for simd_on in [true, false] {
+                simd::set_enabled(simd_on);
+                for backend in [ExecBackend::Interp, ExecBackend::Compiled] {
+                    for threads in [1usize, 2, 8] {
+                        let mut w = Workload::new(wl.sizes.clone());
+                        w.params = wl.params.clone();
+                        w.inputs = wl.inputs.clone();
+                        w.threads = Some(threads);
+                        let got = run_lowered_with(ir, &w, backend);
+                        let tag = format!(
+                            "decode t={t} {ir_name} backend={} simd={simd_on} threads={threads}",
+                            backend.name()
+                        );
+                        assert_eq!(want.outputs["O"], got.outputs["O"], "{tag}: output O");
+                        assert_eq!(want.mem.loaded_bytes, got.mem.loaded_bytes, "{tag}");
+                        assert_eq!(want.mem.stored_bytes, got.mem.stored_bytes, "{tag}");
+                        assert_eq!(want.mem.flops, got.mem.flops, "{tag}");
+                        assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches, "{tag}");
+                    }
+                }
+            }
+            simd::set_enabled(true);
+        }
+    }
+}
+
 /// Property: parity holds on random programs, naive and fully fused.
 #[test]
 fn random_programs_bit_identical_across_backends() {

@@ -36,6 +36,7 @@ fn nested_fanout_ir() -> LoopIr {
         item: Item::Block,
         is_input,
         is_output: !is_input,
+        state_dim: None,
     };
     let mut ir = LoopIr {
         bufs: vec![buf("A", true), buf("B", false)],

@@ -536,6 +536,120 @@ fn shutdown_racing_concurrent_submits_reconciles_exactly() {
     assert_eq!(st.accounted(), st.submitted, "shutdown race must reconcile exactly");
 }
 
+/// PR 9 regression: session-owned KV caches survive plan hot-swaps
+/// under live traffic. Two servers run the same two-session decode
+/// ladder with stateless requests riding the same flushes; one server
+/// hot-swaps the decode plan's block sizes every round, *while that
+/// round's steps sit queued* (exercising the session re-bucket branch
+/// of `adopt_sizes`). Every step must serve bit-identically to the
+/// swap-free control — the session executes its pinned plan, swap or
+/// no swap — the final caches must match bitwise, and both ledgers
+/// must reconcile with the workload compiled exactly once.
+#[test]
+fn session_kv_survives_plan_hot_swap_under_live_traffic() {
+    let _l = chaos_lock();
+    let dname = "decode_attention";
+    let stateless = "quickstart";
+    let mk = || {
+        let mut s = ModelServer::new(ServerConfig {
+            backend: ExecBackend::Compiled,
+            threads: Some(1),
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            coalesce: true,
+            ..ServerConfig::default()
+        });
+        s.register(dname).unwrap();
+        s.register(stateless).unwrap();
+        s
+    };
+    let mut control = mk();
+    let mut swapped = mk();
+
+    // The swap alternates the decode plan between its registered sizes
+    // and a half-capacity variant. Open sessions pinned their plan (and
+    // context cap) at open time, so neither swap direction may touch
+    // them — only *new* sessions would see the new geometry.
+    let base_sizes = swapped.live_plan(dname).unwrap().sizes.clone();
+    let mut alt = base_sizes.clone();
+    alt.set("N", 2);
+
+    let seeds: [u64; 2] = [0xA11CE, 0xB0B];
+    let c_sids: Vec<u64> = seeds.iter().map(|_| control.open_session(dname).unwrap()).collect();
+    let s_sids: Vec<u64> = seeds.iter().map(|_| swapped.open_session(dname).unwrap()).collect();
+
+    let mut swaps = 0u64;
+    let mut steps = 0u64;
+    let mut round = 0u64;
+    // Drive both ladders to their PINNED context cap — the probe refusal
+    // proves the cap came from the session, not the currently-live plan.
+    while swapped.submit_synthetic_decode(s_sids[0], seeds[0]).is_ok() {
+        control.submit_synthetic_decode(c_sids[0], seeds[0]).unwrap();
+        swapped.submit_synthetic_decode(s_sids[1], seeds[1]).unwrap();
+        control.submit_synthetic_decode(c_sids[1], seeds[1]).unwrap();
+        steps += 2;
+        let extra = swapped.synthetic_inputs(stateless, 4_000 + round).unwrap();
+        swapped.submit(Request::new(stateless, extra)).unwrap();
+        // Swap WHILE this round's steps are queued: the queued session
+        // steps must re-bucket against their pinned plan and still serve.
+        let next = if round % 2 == 0 { &alt } else { &base_sizes };
+        swapped.adopt_sizes(dname, next).unwrap();
+        swaps += 1;
+
+        let mut a = swapped.drain();
+        let mut b = control.drain();
+        assert_eq!(a.len(), 3, "round {round}: two decode steps + one stateless ride-along");
+        assert_eq!(b.len(), 2);
+        for r in a.iter().chain(b.iter()) {
+            assert!(r.is_ok(), "round {round}: verdict {:?}", r.verdict);
+        }
+        // Submission order fixes id order per server: session 0's step,
+        // session 1's step (then the stateless request, swapped only).
+        a.sort_by_key(|r| r.id);
+        b.sort_by_key(|r| r.id);
+        let a_dec: Vec<&Response> = a.iter().filter(|r| r.workload == dname).collect();
+        assert_eq!(a_dec.len(), 2);
+        for (k, (ra, rb)) in a_dec.iter().zip(b.iter()).enumerate() {
+            assert_eq!(
+                bits(&ra.outputs["O"]),
+                bits(&rb.outputs["O"]),
+                "round {round} session {k}: decode step diverged under hot-swap"
+            );
+            assert_eq!(
+                (ra.mem.loaded_bytes, ra.mem.stored_bytes, ra.mem.flops, ra.mem.kernel_launches),
+                (rb.mem.loaded_bytes, rb.mem.stored_bytes, rb.mem.flops, rb.mem.kernel_launches),
+                "round {round} session {k}: traffic diverged under hot-swap"
+            );
+            assert_eq!(
+                (ra.mem.state_appended_bytes, ra.mem.state_appends),
+                (rb.mem.state_appended_bytes, rb.mem.state_appends),
+                "round {round} session {k}: append breakout diverged under hot-swap"
+            );
+        }
+        round += 1;
+    }
+    assert!(swaps >= 2 && steps >= 4, "ladder too short to exercise both swap directions");
+
+    for (k, (&cs, &ss)) in c_sids.iter().zip(&s_sids).enumerate() {
+        assert_eq!(control.session_len(cs), swapped.session_len(ss), "session {k} length");
+        for input in ["KT", "VT"] {
+            let c = control.session_cache(cs, input).unwrap();
+            let s = swapped.session_cache(ss, input).unwrap();
+            assert_eq!(bits(c), bits(s), "session {k}: cache {input} diverged under hot-swaps");
+        }
+    }
+    let st = &swapped.stats().per_program[dname];
+    assert_eq!(st.plan_swaps, swaps);
+    assert_eq!(st.compiles, 1, "hot-swapping must never recompile the decode workload");
+    assert_eq!(st.served, steps);
+    assert_eq!(st.decode_steps, steps);
+    assert_eq!(st.state_appends, steps * 4, "4 appended blocks per step (2 per cache)");
+    assert_eq!(st.accounted(), st.submitted, "decode ledger must reconcile across swaps");
+    let sq = &swapped.stats().per_program[stateless];
+    assert_eq!(sq.served, round);
+    assert_eq!(sq.accounted(), sq.submitted, "ride-along ledger must reconcile");
+}
+
 /// The daemon's own re-tune path (`--retune-every`): measured re-tuning
 /// runs between batches under live traffic and every response still
 /// serves correctly with the workload compiled exactly once.

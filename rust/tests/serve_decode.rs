@@ -1,0 +1,329 @@
+//! KV-cache decode differential spine.
+//!
+//! The decode workload family's correctness contract, end to end:
+//!
+//! * **Decode == prefill, bitwise.** `T` decode steps through a serving
+//!   session — cache grown one block per step, each step a stacked
+//!   launch of the *pinned* plan re-bound at the current cache length —
+//!   produce outputs bit-identical to ONE length-`T` prefill launch of
+//!   the same plan under a block-causal mask: row block `t-1` of the
+//!   prefill output is exactly step `t`'s output. This works because
+//!   the unsafe (rowmax-free) softmax makes masked `-inf` tail blocks
+//!   exact bitwise no-ops: `exp(-inf) == 0.0` and the tail blocks come
+//!   *after* the live prefix in reduction order, so every partial sum
+//!   sees `s + 0.0 == s` bit-for-bit.
+//! * **Per-step MemSim == stateless reference + append breakout.** Each
+//!   step's counters equal a stateless one-shot at `(M=1, N=t)` on the
+//!   read side, and exceed it on the write side by exactly the step's
+//!   own KV append (itemized as `state_appended_bytes`/`state_appends`)
+//!   — MemSim charges the *incremental* traffic of a stateful buffer,
+//!   never a full-cache rewrite.
+//! * **Both backends agree bitwise**, outputs and counters.
+//! * **The session cache IS the append stream**: the grown `KT`/`VT`
+//!   caches equal the concatenation of the per-step slabs.
+//! * **Fusion**: `decode_attention` fuses to a single flash-decode
+//!   kernel (zero interior buffered edges, one launch) with strictly
+//!   less traffic than the unfused program on every snapshot.
+
+use blockbuster::array::programs;
+use blockbuster::coordinator::{
+    bind_stacked_sized, compile, execute_plan_opts, execute_prepared_stacked_spec,
+    plan_stack_info, workloads, StackSpec,
+};
+use blockbuster::exec::{reference, run, ExecBackend, Workload};
+use blockbuster::fusion::fuse;
+use blockbuster::ir::dim::Dim;
+use blockbuster::ir::validate::assert_valid;
+use blockbuster::loopir::interp::MemSim;
+use blockbuster::lower::lower_array;
+use blockbuster::serve::{ModelServer, ServerConfig};
+use blockbuster::tensor::Mat;
+use std::collections::HashMap;
+use std::time::Duration;
+
+const SEED: u64 = 0xD5EED;
+
+fn assert_bits_eq(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: bit divergence at flat index {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// Stack step matrices top-to-bottom (the `Q` / `KT` growth axis).
+fn vstack(mats: &[Mat]) -> Mat {
+    let cols = mats[0].cols;
+    let mut data = Vec::new();
+    let mut rows = 0usize;
+    for m in mats {
+        assert_eq!(m.cols, cols, "vstack: ragged widths");
+        data.extend_from_slice(&m.data);
+        rows += m.rows;
+    }
+    Mat { rows, cols, data }
+}
+
+/// Stack step matrices left-to-right (the `VT` growth axis).
+fn hstack(mats: &[Mat]) -> Mat {
+    let rows = mats[0].rows;
+    let cols: usize = mats.iter().map(|m| m.cols).sum();
+    let mut data = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        for m in mats {
+            assert_eq!(m.rows, rows, "hstack: ragged heights");
+            data.extend_from_slice(&m.data[r * m.cols..(r + 1) * m.cols]);
+        }
+    }
+    Mat { rows, cols, data }
+}
+
+/// Block-causal prefill mask over `tb` 8-row query blocks and `tb`
+/// 8-col cache blocks: block `(i, j)` is live (0.0) iff `j <= i`, else
+/// `-inf` — row block `t-1` attends exactly the length-`t` cache prefix
+/// a decode step at cache length `t` sees.
+fn block_causal(tb: usize) -> Mat {
+    let n = 8 * tb;
+    Mat::from_fn(n, n, |i, j| if j / 8 <= i / 8 { 0.0 } else { f32::NEG_INFINITY })
+}
+
+struct SessionRun {
+    /// Step `t`'s served output (index `t-1`), an 8-row query block.
+    step_outputs: Vec<Mat>,
+    /// Step `t`'s served counters, append breakout included.
+    step_mems: Vec<MemSim>,
+    /// The length-`T` prefill launch's output (8T rows).
+    prefill_rows: Mat,
+    /// The session's grown caches after the final step.
+    kt_cache: Mat,
+    vt_cache: Mat,
+    /// The per-step append slabs (the fixed synthetic state stream).
+    kt_slabs: Vec<Mat>,
+    vt_slabs: Vec<Mat>,
+}
+
+/// Drive one session to a full cache on `backend`, checking every step
+/// against its stateless `(M=1, N=t)` reference as it serves; then run
+/// the length-`T` prefill launch on the same pinned plan.
+fn run_decode_session(backend: ExecBackend) -> SessionRun {
+    let mut server = ModelServer::new(ServerConfig {
+        backend,
+        threads: Some(1),
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        coalesce: true,
+        ..ServerConfig::default()
+    });
+    server.register("decode_attention").unwrap();
+    let (p, ccfg, params, _) = workloads::by_name("decode_attention", 0).unwrap();
+    let compiled = compile(&p, ccfg.clone());
+    let sid = server.open_session("decode_attention").unwrap();
+
+    let mut step_outputs = Vec::new();
+    let mut step_mems = Vec::new();
+    let mut q_steps = Vec::new();
+    let mut kt_slabs = Vec::new();
+    let mut vt_slabs = Vec::new();
+    let mut t = 0usize;
+    while server.submit_synthetic_decode(sid, SEED).is_ok() {
+        t += 1;
+        let mut resp = server.drain();
+        assert_eq!(resp.len(), 1, "one response per decode step");
+        let r = resp.pop().unwrap();
+        assert!(r.is_ok(), "step {t} must serve: {:?}", r.verdict);
+
+        // Regenerate this step's inputs (the generator is pure) and
+        // snapshot the grown cache — together they form the stateless
+        // reference at the current length.
+        let gen = server.synthetic_decode_inputs("decode_attention", SEED, t).unwrap();
+        let kt = server.session_cache(sid, "KT").unwrap().clone();
+        let vt = server.session_cache(sid, "VT").unwrap().clone();
+        assert_eq!((kt.rows, kt.cols), (8 * t, 16), "KT grows one row block per step");
+        assert_eq!((vt.rows, vt.cols), (16, 8 * t), "VT grows one col block per step");
+        let mut ref_inputs: HashMap<String, Mat> = HashMap::new();
+        ref_inputs.insert("Q".into(), gen["Q"].clone());
+        ref_inputs.insert("MASK".into(), gen["MASK"].clone());
+        ref_inputs.insert("KT".into(), kt);
+        ref_inputs.insert("VT".into(), vt);
+        let mut sizes = ccfg.sizes.clone();
+        sizes.set("N", t);
+        let seq = execute_plan_opts(&compiled.plan, &sizes, &params, &ref_inputs, backend, Some(1));
+
+        assert_bits_eq(
+            &seq.outputs["O"],
+            &r.outputs["O"],
+            &format!("step {t} output vs its stateless length-{t} reference"),
+        );
+        assert_eq!(
+            (seq.mem.loaded_bytes, seq.mem.n_loads, seq.mem.kernel_launches, seq.mem.flops),
+            (r.mem.loaded_bytes, r.mem.n_loads, r.mem.kernel_launches, r.mem.flops),
+            "step {t}: read-side counters vs the stateless reference"
+        );
+        assert!(r.mem.state_appended_bytes > 0, "every decode step appends KV state");
+        assert_eq!(
+            (r.mem.stored_bytes, r.mem.n_stores),
+            (
+                seq.mem.stored_bytes + r.mem.state_appended_bytes,
+                seq.mem.n_stores + r.mem.state_appends
+            ),
+            "step {t}: stores must be the stateless reference plus the step's own append"
+        );
+
+        q_steps.push(gen["Q"].clone());
+        kt_slabs.push(gen["KT"].clone());
+        vt_slabs.push(gen["VT"].clone());
+        step_outputs.push(r.outputs["O"].clone());
+        step_mems.push(r.mem);
+    }
+    assert!(t >= 2, "context cap must allow a multi-step differential (got {t})");
+    assert_eq!(server.session_len(sid), Some(t));
+
+    // One length-T prefill launch on the SAME pinned plan: the stack
+    // dim carries all T query blocks, the growth dim is overridden to
+    // the full cache length, and the caches ride as ordinary inputs.
+    let prepared = server.live_plan("decode_attention").unwrap();
+    let info = plan_stack_info(&prepared).unwrap();
+    assert_eq!(info.trip, 1, "decode registers one query block per step");
+    let stacked = bind_stacked_sized(&prepared, &info, t, &[(Dim::from("N"), t)]);
+    let spec = StackSpec {
+        trips: vec![t],
+        pads: vec![0],
+    };
+    let kt_cache = server.session_cache(sid, "KT").unwrap().clone();
+    let vt_cache = server.session_cache(sid, "VT").unwrap().clone();
+    let mut prefill: HashMap<String, Mat> = HashMap::new();
+    prefill.insert("Q".into(), vstack(&q_steps));
+    prefill.insert("KT".into(), kt_cache.clone());
+    prefill.insert("VT".into(), vt_cache.clone());
+    prefill.insert("MASK".into(), block_causal(t));
+    let batch = execute_prepared_stacked_spec(&prepared, &stacked, &spec, &[&prefill], Some(1));
+    let prefill_rows = batch.runs[0].outputs["O"].clone();
+    assert_eq!(prefill_rows.rows, 8 * t, "prefill emits every query block");
+
+    SessionRun {
+        step_outputs,
+        step_mems,
+        prefill_rows,
+        kt_cache,
+        vt_cache,
+        kt_slabs,
+        vt_slabs,
+    }
+}
+
+/// Row block `t-1` of the prefill output must be bit-identical to
+/// decode step `t`'s output.
+fn check_prefill(run: &SessionRun) {
+    let t = run.step_outputs.len();
+    assert_eq!(run.prefill_rows.rows, 8 * t);
+    for (i, step_o) in run.step_outputs.iter().enumerate() {
+        let rows = run.prefill_rows.slice(8 * i, 0, 8, run.prefill_rows.cols);
+        assert_bits_eq(
+            &rows,
+            step_o,
+            &format!("prefill row block {i} vs decode step {}", i + 1),
+        );
+    }
+}
+
+#[test]
+fn decode_steps_match_prefill_bitwise_interp() {
+    check_prefill(&run_decode_session(ExecBackend::Interp));
+}
+
+#[test]
+fn decode_steps_match_prefill_bitwise_compiled() {
+    check_prefill(&run_decode_session(ExecBackend::Compiled));
+}
+
+/// The interpreter and the compiled tape agree bitwise on every decode
+/// step — outputs AND counters, append breakout included.
+#[test]
+fn decode_outputs_bitwise_equal_across_backends() {
+    let a = run_decode_session(ExecBackend::Interp);
+    let b = run_decode_session(ExecBackend::Compiled);
+    assert_eq!(a.step_outputs.len(), b.step_outputs.len());
+    for (i, (x, y)) in a.step_outputs.iter().zip(&b.step_outputs).enumerate() {
+        assert_bits_eq(x, y, &format!("step {} interp vs compiled", i + 1));
+    }
+    for (i, (x, y)) in a.step_mems.iter().zip(&b.step_mems).enumerate() {
+        assert_eq!(
+            (x.loaded_bytes, x.stored_bytes, x.n_loads, x.n_stores, x.flops),
+            (y.loaded_bytes, y.stored_bytes, y.n_loads, y.n_stores, y.flops),
+            "step {} traffic interp vs compiled",
+            i + 1
+        );
+        assert_eq!(
+            (x.kernel_launches, x.state_appended_bytes, x.state_appends),
+            (y.kernel_launches, y.state_appended_bytes, y.state_appends),
+            "step {} launches/appends interp vs compiled",
+            i + 1
+        );
+    }
+    assert_bits_eq(&a.prefill_rows, &b.prefill_rows, "prefill interp vs compiled");
+}
+
+/// The session's grown caches are exactly the concatenation of the
+/// per-step append slabs — nothing rewritten, nothing reordered.
+#[test]
+fn session_cache_is_the_concatenated_state_stream() {
+    let run = run_decode_session(ExecBackend::Compiled);
+    assert_bits_eq(&run.kt_cache, &vstack(&run.kt_slabs), "KT cache vs appended slabs");
+    assert_bits_eq(&run.vt_cache, &hstack(&run.vt_slabs), "VT cache vs appended slabs");
+}
+
+/// Fusion snapshot: `decode_attention` fully fuses into one
+/// flash-decode kernel, every snapshot stays numerically faithful to
+/// the tensor-level attention reference (the demo mask is zero, so
+/// masked attention == attention), and fused traffic is strictly below
+/// the unfused program's.
+#[test]
+fn decode_attention_fuses_to_one_flash_decode_kernel() {
+    let g0 = lower_array(&programs::decode_attention());
+    let res = fuse(g0.clone());
+    let fused_graph = res.snapshots.last().unwrap();
+    assert_valid(fused_graph);
+    assert_eq!(
+        fused_graph.interior_buffered_count_recursive(),
+        0,
+        "flash-decode must fuse completely"
+    );
+
+    let (_, ccfg, params, inputs) = workloads::by_name("decode_attention", 7).unwrap();
+    let want = reference::attention_ref(&inputs["Q"], &inputs["KT"], &inputs["VT"], 16.0);
+    let wl = || {
+        let mut w = Workload::new(ccfg.sizes.clone());
+        for (k, v) in &inputs {
+            w = w.input(k, v.clone());
+        }
+        for (k, v) in &params {
+            w = w.param(k, *v);
+        }
+        w
+    };
+    let unfused = run(&g0, &wl());
+    let d = unfused.outputs["O"].max_abs_diff(&want);
+    assert!(d < 2e-4, "unfused vs reference: {d}");
+    for (i, snap) in res.snapshots.iter().enumerate() {
+        let r = run(snap, &wl());
+        let d = r.outputs["O"].max_abs_diff(&want);
+        assert!(d < 2e-4, "snapshot {i} vs reference: {d}");
+        assert!(
+            r.mem.total_traffic() < unfused.mem.total_traffic(),
+            "snapshot {i} traffic {} not below unfused {}",
+            r.mem.total_traffic(),
+            unfused.mem.total_traffic()
+        );
+    }
+    let fused = run(res.snapshots.last().unwrap(), &wl());
+    assert_eq!(fused.mem.kernel_launches, 1, "one fused flash-decode launch");
+    eprintln!(
+        "decode traffic: unfused={}B fused={}B ({:.2}x reduction), launches {} -> 1",
+        unfused.mem.total_traffic(),
+        fused.mem.total_traffic(),
+        unfused.mem.total_traffic() as f64 / fused.mem.total_traffic() as f64,
+        unfused.mem.kernel_launches,
+    );
+}
