@@ -1,8 +1,12 @@
 //! Bench: the compiled-execution stack — naive tree-walking interpreter
 //! vs the flat-tape engine (`ExecBackend::Compiled`, SIMD kernels +
-//! work-stealing grid scheduler) on every example program's final fused
-//! kernel, at shapes scaled up from the demo sizes — plus per-kernel
-//! micro-bench rows (scalar vs SIMD) for the `tensor` substrate.
+//! work-stealing grid scheduler) vs the specialization backend
+//! (`ExecBackend::Specialized`, recognized nests replaced by
+//! pre-monomorphized fused kernel bodies) on every example program's
+//! final fused kernel — the five canonical workloads plus
+//! `decode_attention` — at shapes scaled up from the demo sizes, plus
+//! per-kernel micro-bench rows (scalar vs SIMD) for the `tensor`
+//! substrate.
 //!
 //! Both backends are timed on the same pre-blocked `ExecConfig`; the tape
 //! is compiled once outside the timed loop (the amortization autotune
@@ -19,7 +23,7 @@
 use blockbuster::coordinator::workloads;
 use blockbuster::exec::to_blocks;
 use blockbuster::fusion::fuse;
-use blockbuster::loopir::compile::compile;
+use blockbuster::loopir::compile::{compile, compile_skeleton, specialize_skeleton};
 use blockbuster::loopir::interp::{exec, ExecConfig};
 use blockbuster::loopir::lower::lower;
 use blockbuster::lower::lower_array;
@@ -40,14 +44,22 @@ fn main() {
     };
 
     let mut t = Table::new(
-        &format!("Executor wall-clock, interpreter vs compiled tape (grid scale {scale}x)"),
-        &["workload", "interp", "compiled", "speedup"],
+        &format!(
+            "Executor wall-clock, interpreter vs compiled tape vs specialized (grid scale {scale}x)"
+        ),
+        &["workload", "interp", "compiled", "specialized", "speedup", "spec_speedup"],
     );
     let mut rows = Vec::new();
     let mut log_speedups = 0.0f64;
+    let mut spec_log_speedups = 0.0f64;
     let mut n_programs = 0usize;
 
-    for name in workloads::NAMES {
+    // the five canonical workloads plus the decode family's one-shot plan
+    let bench_names = workloads::NAMES
+        .iter()
+        .copied()
+        .chain(std::iter::once("decode_attention"));
+    for name in bench_names {
         let (p, demo_cfg, params, _) = workloads::by_name(name, 42).unwrap();
         let mut sizes = demo_cfg.sizes.clone();
         for v in sizes.0.values_mut() {
@@ -75,29 +87,52 @@ fn main() {
         }
 
         let prog = compile(&ir, &cfg);
+        // specialization happens once per skeleton (bind-time dispatch);
+        // the timed region runs the same engine over the rewritten tape
+        let skel = specialize_skeleton(&compile_skeleton(&ir, &cfg));
+        let (fused_nests, total_nests) = skel
+            .spec
+            .as_ref()
+            .map(|r| (r.fused_nests, r.total_nests))
+            .unwrap_or((0, 0));
+        let sprog = skel.bind(&cfg.sizes);
         let si = bench(min_iters, budget, || exec(&ir, &cfg));
         let sc = bench(min_iters, budget, || {
             blockbuster::exec::engine::exec_compiled(&prog, &cfg)
         });
+        let ss = bench(min_iters, budget, || {
+            blockbuster::exec::engine::exec_compiled(&sprog, &cfg)
+        });
         let speedup = si.median_ns / sc.median_ns;
+        let spec_speedup = sc.median_ns / ss.median_ns;
         log_speedups += speedup.ln();
+        spec_log_speedups += spec_speedup.ln();
         n_programs += 1;
         t.row(vec![
             name.to_string(),
             fmt_stat(&si),
             fmt_stat(&sc),
+            fmt_stat(&ss),
             format!("{speedup:.2}x"),
+            format!("{spec_speedup:.2}x"),
         ]);
         rows.push(Json::obj(vec![
             ("program", Json::Str(name.to_string())),
             ("interp_ms", Json::Num(si.median_ns / 1e6)),
             ("compiled_ms", Json::Num(sc.median_ns / 1e6)),
+            ("specialized_ns", Json::Num(ss.median_ns)),
+            // generic tape -> fused kernel bodies, same engine, same bind
+            ("specialized_speedup", Json::Num(spec_speedup)),
+            ("fused_nests", Json::Num(fused_nests as f64)),
+            ("total_nests", Json::Num(total_nests as f64)),
             ("speedup", Json::Num(speedup)),
         ]));
     }
     let geomean = (log_speedups / n_programs.max(1) as f64).exp();
+    let spec_geomean = (spec_log_speedups / n_programs.max(1) as f64).exp();
     t.print();
     println!("\ncompiled-backend speedup geomean: {geomean:.2}x");
+    println!("specialize speedup geomean (compiled tape -> fused bodies): {spec_geomean:.2}x");
 
     // ---- per-kernel micro-bench: scalar vs SIMD ---------------------------
     let dim = if smoke { 32 } else { 128 };
@@ -227,6 +262,9 @@ fn main() {
         // baseline is a cross-commit diff of those fields
         ("geomean_basis", Json::Str("interp_vs_compiled".into())),
         ("speedup_geomean", Json::Num(geomean)),
+        // compiled-tape → specialized (fused kernel bodies) ratio over
+        // the same per-program rows: the bind-time-dispatch win itself
+        ("specialize_speedup_geomean", Json::Num(spec_geomean)),
         // scalar-tape → batched-VM ratio over the per-expression rows
         // below (both sides SIMD-on, so this isolates the batching win)
         ("ew_speedup_geomean", Json::Num(ew_geomean)),

@@ -125,8 +125,9 @@ pub struct PreparedSegment {
     /// The segment's lowered loop nest (lowering runs once, at prepare
     /// time).
     pub ir: LoopIr,
-    /// `Some` iff the plan was prepared for [`ExecBackend::Compiled`]:
-    /// the tape skeleton bound to the plan's `DimSizes`.
+    /// `Some` iff the plan was prepared for [`ExecBackend::Compiled`]
+    /// or [`ExecBackend::Specialized`]: the tape skeleton bound to the
+    /// plan's `DimSizes` (kernel-specialized for the latter).
     pub tape: Option<CompiledProgram>,
     /// The cached skeleton behind `tape` (same `Some`-ness): kept so
     /// stacked-batch execution ([`bind_stacked`]) can re-bind to an
@@ -148,13 +149,36 @@ pub struct PreparedPlan {
     pub params: BTreeMap<String, f32>,
     pub segments: Vec<PreparedSegment>,
     /// Tape binds performed while preparing (== segment count on the
-    /// compiled backend, 0 on the interpreter) — compile-once telemetry.
+    /// compiled/specialized backends, 0 on the interpreter) —
+    /// compile-once telemetry.
     pub binds: u64,
 }
 
-/// Lower every segment of `plan` and, on [`ExecBackend::Compiled`], pull
-/// its tape skeleton from `cache` (compiling it on first sight) and bind
-/// it to `sizes`. All per-structure work happens here, once; the returned
+impl PreparedPlan {
+    /// Specialization coverage summed over segments:
+    /// `(fused_nests, total_nests)`. `None` unless the plan was
+    /// prepared for [`ExecBackend::Specialized`] — the observable
+    /// answer to "which loop nests run through fused kernel bodies and
+    /// which fell back to the generic interpreter loop".
+    pub fn spec_coverage(&self) -> Option<(usize, usize)> {
+        let mut any = false;
+        let (mut fused, mut total) = (0usize, 0usize);
+        for seg in &self.segments {
+            if let Some(rep) = seg.skeleton.as_ref().and_then(|sk| sk.spec.as_ref()) {
+                any = true;
+                fused += rep.fused_nests;
+                total += rep.total_nests;
+            }
+        }
+        any.then_some((fused, total))
+    }
+}
+
+/// Lower every segment of `plan` and, on the compiled and specialized
+/// backends, pull its tape skeleton from `cache` (compiling — and for
+/// [`ExecBackend::Specialized`], kernel-specializing — it on first
+/// sight) and bind it to `sizes`. All per-structure work happens here,
+/// once; the returned
 /// [`PreparedPlan`] is immutable and shareable across any number of
 /// [`execute_prepared`] calls (it is `Sync` — the serving layer fans
 /// batches of requests over it from worker threads).
@@ -171,9 +195,11 @@ pub fn prepare_plan(
         let ir = lower(&seg.graph);
         let (tape, skeleton) = match backend {
             ExecBackend::Interp => (None, None),
-            ExecBackend::Compiled => {
+            ExecBackend::Compiled | ExecBackend::Specialized => {
                 // The skeleton depends on params and misc registries but
-                // never on `DimSizes`; the bind is the cheap phase.
+                // never on `DimSizes`; the bind is the cheap phase. The
+                // cache hands back the kernel-specialized flavor for
+                // `Specialized` (the backend is part of its key).
                 let mut cfg = ExecConfig::new(sizes.clone());
                 cfg.params = params.clone();
                 let skel = cache.skeleton(&ir, &cfg, backend);
@@ -877,7 +903,8 @@ mod tests {
         assert!(run.mem.kernel_launches < naive.mem.kernel_launches);
     }
 
-    /// Both executor backends must agree bit-for-bit segment by segment.
+    /// All three executor backends must agree bit-for-bit segment by
+    /// segment.
     #[test]
     fn plan_backends_agree_bitwise() {
         let (p, cfg, params, inputs) = workloads::attention_demo(42);
@@ -889,20 +916,26 @@ mod tests {
             &inputs,
             ExecBackend::Interp,
         );
-        let b = execute_plan_with(
-            &compiled.plan,
-            &cfg.sizes,
-            &params,
-            &inputs,
-            ExecBackend::Compiled,
-        );
-        for (name, m) in &a.outputs {
-            assert_eq!(m, &b.outputs[name], "output {name} differs across backends");
+        for backend in [ExecBackend::Compiled, ExecBackend::Specialized] {
+            let b = execute_plan_with(&compiled.plan, &cfg.sizes, &params, &inputs, backend);
+            for (name, m) in &a.outputs {
+                assert_eq!(
+                    m,
+                    &b.outputs[name],
+                    "output {name} differs on {}",
+                    backend.name()
+                );
+            }
+            assert_eq!(a.mem.loaded_bytes, b.mem.loaded_bytes, "{}", backend.name());
+            assert_eq!(a.mem.stored_bytes, b.mem.stored_bytes, "{}", backend.name());
+            assert_eq!(
+                a.mem.kernel_launches,
+                b.mem.kernel_launches,
+                "{}",
+                backend.name()
+            );
+            assert_eq!(a.mem.flops, b.mem.flops, "{}", backend.name());
         }
-        assert_eq!(a.mem.loaded_bytes, b.mem.loaded_bytes);
-        assert_eq!(a.mem.stored_bytes, b.mem.stored_bytes);
-        assert_eq!(a.mem.kernel_launches, b.mem.kernel_launches);
-        assert_eq!(a.mem.flops, b.mem.flops);
     }
 
     /// Compile-once path: `prepare_plan` + `execute_prepared` must be
@@ -913,17 +946,29 @@ mod tests {
     fn prepared_plan_matches_one_shot_and_caches() {
         let (p, cfg, params, inputs) = workloads::attention_demo(42);
         let compiled = compile(&p, cfg.clone());
-        for backend in [ExecBackend::Interp, ExecBackend::Compiled] {
+        for backend in [
+            ExecBackend::Interp,
+            ExecBackend::Compiled,
+            ExecBackend::Specialized,
+        ] {
             let mut cache = TapeCache::new();
             let prepared = prepare_plan(&compiled.plan, &cfg.sizes, &params, backend, &mut cache);
             assert_eq!(
                 prepared.binds,
-                if backend == ExecBackend::Compiled {
+                if backend != ExecBackend::Interp {
                     compiled.plan.segments.len() as u64
                 } else {
                     0
                 }
             );
+            match backend {
+                ExecBackend::Specialized => {
+                    let (fused, total) = prepared.spec_coverage().expect("coverage recorded");
+                    assert!(fused >= 1, "attention must fuse at least one nest");
+                    assert!(fused <= total);
+                }
+                _ => assert_eq!(prepared.spec_coverage(), None),
+            }
             let one_shot =
                 execute_plan_opts(&compiled.plan, &cfg.sizes, &params, &inputs, backend, Some(2));
             let a = execute_prepared(&prepared, &inputs, Some(2));
@@ -963,7 +1008,11 @@ mod tests {
     fn stacked_batch_matches_sequential_per_request() {
         let (p, cfg, params, base_inputs) = workloads::attention_demo(42);
         let compiled = compile(&p, cfg.clone());
-        for backend in [ExecBackend::Interp, ExecBackend::Compiled] {
+        for backend in [
+            ExecBackend::Interp,
+            ExecBackend::Compiled,
+            ExecBackend::Specialized,
+        ] {
             let mut cache = TapeCache::new();
             let prepared = prepare_plan(&compiled.plan, &cfg.sizes, &params, backend, &mut cache);
             let info =
@@ -1040,7 +1089,11 @@ mod tests {
         let compiled = compile(&p, cfg.clone());
         let trips = [1usize, 4, 2, 3];
         let pads = [1usize, 0, 2, 1]; // next power of two minus trip
-        for backend in [ExecBackend::Interp, ExecBackend::Compiled] {
+        for backend in [
+            ExecBackend::Interp,
+            ExecBackend::Compiled,
+            ExecBackend::Specialized,
+        ] {
             let mut cache = TapeCache::new();
             let prepared = prepare_plan(&compiled.plan, &cfg.sizes, &params, backend, &mut cache);
             let info =
@@ -1148,6 +1201,44 @@ mod tests {
             let info = plan_stack_info(&prepared)
                 .unwrap_or_else(|| panic!("{name}: plan is not stackable"));
             assert_eq!(info.dim.name(), "M", "{name}");
+        }
+    }
+
+    /// Specialization coverage floor: every canonical workload matches
+    /// at least one fused nest, and flash attention's inner softmax·V
+    /// nest is matched end to end (a `flash_inner` site driving a
+    /// `dot_acc` child) — the pattern table covers the paper's
+    /// workloads, not just toy programs.
+    #[test]
+    fn canonical_workloads_specialize() {
+        for name in workloads::NAMES {
+            let (p, cfg, params, _) = workloads::by_name(name, 0).unwrap();
+            let compiled = compile(&p, cfg.clone());
+            let mut cache = TapeCache::new();
+            let prepared = prepare_plan(
+                &compiled.plan,
+                &cfg.sizes,
+                &params,
+                ExecBackend::Specialized,
+                &mut cache,
+            );
+            let (fused, total) = prepared
+                .spec_coverage()
+                .unwrap_or_else(|| panic!("{name}: no coverage report"));
+            assert!(fused >= 1, "{name}: 0/{total} nests fused");
+            let kernels: Vec<&str> = prepared
+                .segments
+                .iter()
+                .filter_map(|s| s.skeleton.as_ref())
+                .filter_map(|sk| sk.spec.as_ref())
+                .flat_map(|rep| rep.by_kernel.keys().copied())
+                .collect();
+            if name.contains("attention") {
+                assert!(
+                    kernels.contains(&"flash_inner"),
+                    "{name}: inner softmax·V nest unmatched (saw {kernels:?})"
+                );
+            }
         }
     }
 

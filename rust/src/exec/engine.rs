@@ -72,7 +72,9 @@ pub const NESTED_FANOUT_MIN_WORK: u64 = 1024;
 
 /// Where stores go: directly into the buffers (serial execution) or into
 /// a per-worker deferred list applied after the parallel join.
-enum Sink<'a> {
+/// (`pub(crate)` so the fused kernel bodies of [`super::kernels`] can
+/// replay load/store semantics without re-entering `run_range`.)
+pub(crate) enum Sink<'a> {
     Direct(&'a mut Vec<BufVal>),
     Deferred {
         shared: &'a [BufVal],
@@ -82,7 +84,7 @@ enum Sink<'a> {
 
 impl Sink<'_> {
     #[inline]
-    fn load(&self, buf: BufId, flat: usize) -> Arc<Val> {
+    pub(crate) fn load(&self, buf: BufId, flat: usize) -> Arc<Val> {
         let bv = match self {
             Sink::Direct(b) => &b[buf],
             Sink::Deferred { shared, .. } => &shared[buf],
@@ -93,7 +95,7 @@ impl Sink<'_> {
     }
 
     #[inline]
-    fn store(&mut self, buf: BufId, flat: usize, v: Arc<Val>) {
+    pub(crate) fn store(&mut self, buf: BufId, flat: usize, v: Arc<Val>) {
         match self {
             Sink::Direct(b) => b[buf].data[flat] = Some(v),
             Sink::Deferred { pending, .. } => pending.push((buf, flat, v)),
@@ -118,13 +120,15 @@ struct WorkerOut {
 }
 
 /// Execution state: register file, var file, counters. One per thread.
-struct Machine {
-    regs: Vec<usize>,
-    vars: Vec<Option<Arc<Val>>>,
+/// (`pub(crate)` so the fused kernel bodies of [`super::kernels`] can
+/// drive it directly.)
+pub(crate) struct Machine {
+    pub(crate) regs: Vec<usize>,
+    pub(crate) vars: Vec<Option<Arc<Val>>>,
     /// Elementwise workspace (scalar stack + expression-VM slab file),
     /// reused across every compute site this machine executes.
-    scratch: EwScratch,
-    mem: MemSim,
+    pub(crate) scratch: EwScratch,
+    pub(crate) mem: MemSim,
     live: u64,
     cap: Option<u64>,
 }
@@ -143,7 +147,7 @@ impl Machine {
 
     // set_var/clear_var mirror Interp::set_var/clear_var exactly (the
     // threads=1 peak-parity test pins them); change both together.
-    fn set_var(&mut self, var: usize, v: Arc<Val>) {
+    pub(crate) fn set_var(&mut self, var: usize, v: Arc<Val>) {
         if let Some(old) = &self.vars[var] {
             self.live = self.live.saturating_sub(old.bytes() as u64);
         }
@@ -161,7 +165,7 @@ impl Machine {
         }
     }
 
-    fn clear_var(&mut self, var: usize) {
+    pub(crate) fn clear_var(&mut self, var: usize) {
         if let Some(old) = self.vars[var].take() {
             self.live = self.live.saturating_sub(old.bytes() as u64);
         }
@@ -261,6 +265,13 @@ impl Machine {
                     let (v, fl) = accum_val(self.vars[*var].as_deref(), *op, s);
                     self.mem.flops += fl;
                     self.set_var(*var, v);
+                    ip += 1;
+                }
+                Instr::Fused(fi) => {
+                    // Specialized backend: the whole site runs through
+                    // one pre-monomorphized kernel body — dispatch was
+                    // resolved when the skeleton was specialized.
+                    super::kernels::run_fused(self, prog, *fi, sink);
                     ip += 1;
                 }
                 Instr::Misc(mi) => {

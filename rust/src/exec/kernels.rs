@@ -1,0 +1,236 @@
+//! Pre-monomorphized fused kernel bodies — the `Specialized` backend's
+//! execution layer.
+//!
+//! [`crate::loopir::compile::specialize_skeleton`] rewrites recognized
+//! tape regions into [`Instr::Fused`](crate::loopir::compile::Instr)
+//! sites; this module is the registry that executes them. Each
+//! [`KernelId`] names one concrete Rust `fn` ([`KernelBody`]) that
+//! replays the site's primitive sequence with **no per-instruction
+//! dispatch**: the loop structure, operand tables, and (for the
+//! bespoke bodies) even the compute kinds were resolved when the
+//! skeleton was specialized, so the hot loop is straight-line Rust
+//! over the side tables.
+//!
+//! **SIMD and scalar twins.** Every body bottoms out in the `tensor`
+//! micro-kernels (`dot_bt`, the elementwise expression VM's slice
+//! programs), which carry their own AVX2/scalar twin pairs behind the
+//! [`crate::tensor::simd`] runtime kill-switch — so each kernel body
+//! automatically has a bit-identical scalar twin without duplicating
+//! the loop nests here (`--no-simd` exercises it).
+//!
+//! **The cardinal invariant.** Each body performs byte-for-byte the
+//! same loads, stores, var sets/clears, and counter increments the
+//! generic `run_range` interpreter loop would have performed for the
+//! instructions the site replaced — same [`MemSim`] charges (including
+//! `peak_local_bytes` ordering), same panic messages, same register
+//! end states. The 3-backend parity matrices pin this.
+//!
+//! [`MemSim`]: crate::loopir::interp::MemSim
+
+use super::engine::{Machine, Sink};
+use crate::loopir::compile::{
+    accum_val, CompiledProgram, FusedSite, FusedStep, KernelId,
+};
+use crate::tensor::Val;
+use std::sync::Arc;
+
+/// A fused loop body: drives one [`FusedSite`] against the machine
+/// state. Registered per [`KernelId`]; resolved once per site, not per
+/// element.
+pub(crate) type KernelBody = fn(&mut Machine, &CompiledProgram, &FusedSite, &mut Sink);
+
+/// Registry lookup: the concrete body for a kernel id.
+fn body_for(id: KernelId) -> KernelBody {
+    match id {
+        KernelId::DotAcc => dot_acc,
+        KernelId::FlashInner => flash_inner,
+        KernelId::SerialNest => serial_nest,
+        KernelId::StreamRun => stream_run,
+    }
+}
+
+/// Engine entry point for [`Instr::Fused`](crate::loopir::compile::Instr):
+/// dispatch the site to its kernel body.
+pub(crate) fn run_fused(m: &mut Machine, prog: &CompiledProgram, fi: usize, sink: &mut Sink) {
+    let site = &prog.fused[fi];
+    (body_for(site.kernel))(m, prog, site, sink)
+}
+
+// ---------------------------------------------------------------------------
+// Primitive steps (exact mirrors of the engine's `run_range` arms —
+// change both together; the parity matrices pin them)
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn step_load(
+    m: &mut Machine,
+    prog: &CompiledProgram,
+    var: usize,
+    buf: usize,
+    acc: usize,
+    sink: &mut Sink,
+) {
+    let flat = prog.accesses[acc].flat(&m.regs);
+    let v = sink.load(buf, flat);
+    m.mem.n_loads += 1;
+    m.mem.loaded_bytes += v.bytes() as u64;
+    m.set_var(var, v);
+}
+
+#[inline]
+fn step_store(
+    m: &mut Machine,
+    prog: &CompiledProgram,
+    var: usize,
+    buf: usize,
+    acc: usize,
+    sink: &mut Sink,
+) {
+    let flat = prog.accesses[acc].flat(&m.regs);
+    let v = m.vars[var]
+        .clone()
+        .unwrap_or_else(|| panic!("var t{var} read before assignment"));
+    m.mem.n_stores += 1;
+    m.mem.stored_bytes += v.bytes() as u64;
+    sink.store(buf, flat, v);
+}
+
+#[inline]
+fn step_compute(m: &mut Machine, prog: &CompiledProgram, var: usize, site: usize) {
+    let cs = &prog.computes[site];
+    let vars = &m.vars;
+    let args: Vec<&Val> = cs
+        .args
+        .iter()
+        .map(|a| {
+            vars[*a]
+                .as_deref()
+                .unwrap_or_else(|| panic!("var t{a} read before assignment"))
+        })
+        .collect();
+    let (v, fl) = cs.kind.apply(&args, &mut m.scratch);
+    drop(args);
+    m.mem.flops += fl;
+    m.set_var(var, Arc::new(v));
+}
+
+#[inline]
+fn step_accum(m: &mut Machine, var: usize, op: crate::ir::func::ReduceOp, src: usize) {
+    let s = m.vars[src]
+        .clone()
+        .unwrap_or_else(|| panic!("var t{src} read before assignment"));
+    let (v, fl) = accum_val(m.vars[var].as_deref(), op, s);
+    m.mem.flops += fl;
+    m.set_var(var, v);
+}
+
+#[inline]
+fn exec_step(m: &mut Machine, prog: &CompiledProgram, step: &FusedStep, sink: &mut Sink) {
+    match step {
+        FusedStep::Load { var, buf, acc } => step_load(m, prog, *var, *buf, *acc, sink),
+        FusedStep::Store { var, buf, acc } => step_store(m, prog, *var, *buf, *acc, sink),
+        FusedStep::Compute { var, site } => step_compute(m, prog, *var, *site),
+        FusedStep::Accum { var, op, src } => step_accum(m, *var, *op, *src),
+        FusedStep::Loop(child) => run_fused_site(m, prog, &prog.fused[*child], sink),
+    }
+}
+
+#[inline]
+fn run_fused_site(m: &mut Machine, prog: &CompiledProgram, site: &FusedSite, sink: &mut Sink) {
+    (body_for(site.kernel))(m, prog, site, sink)
+}
+
+// ---------------------------------------------------------------------------
+// Kernel bodies
+// ---------------------------------------------------------------------------
+
+/// Generic collapsed serial loop: the loop control the tape's
+/// `LoopBegin`/`LoopEnd` jumps would perform (register set, clears per
+/// iteration, register left at its final value), with the body walked
+/// over pre-extracted steps. An empty trip range does nothing — exactly
+/// the engine's `start >= trip` skip.
+fn serial_nest(m: &mut Machine, prog: &CompiledProgram, site: &FusedSite, sink: &mut Sink) {
+    let lm = &prog.loops[site.loop_id.expect("serial_nest is a loop site")];
+    for x in lm.start..lm.trip {
+        m.regs[lm.reg] = x;
+        for &c in &lm.clears {
+            m.clear_var(c);
+        }
+        for step in &site.steps {
+            exec_step(m, prog, step, sink);
+        }
+    }
+}
+
+/// A straight-line run inside a non-collapsed loop, executed once per
+/// arrival.
+fn stream_run(m: &mut Machine, prog: &CompiledProgram, site: &FusedSite, sink: &mut Sink) {
+    for step in &site.steps {
+        exec_step(m, prog, step, sink);
+    }
+}
+
+/// The fused contraction loop `for k { a = load; b = load;
+/// t = dot(a, b); acc += t }`. The classifier pinned the step shape and
+/// the compute kind, so the body inlines the `dot_bt` micro-kernel and
+/// its accumulate directly — no `ComputeKind` match per iteration.
+fn dot_acc(m: &mut Machine, prog: &CompiledProgram, site: &FusedSite, sink: &mut Sink) {
+    let lm = &prog.loops[site.loop_id.expect("dot_acc is a loop site")];
+    let [
+        FusedStep::Load { var: va, buf: ba, acc: aa },
+        FusedStep::Load { var: vb, buf: bb, acc: ab },
+        FusedStep::Compute { var: vt, site: _ },
+        FusedStep::Accum { var: vacc, op, src: _ },
+    ] = &site.steps[..]
+    else {
+        unreachable!("dot_acc classification pins the step shape")
+    };
+    for x in lm.start..lm.trip {
+        m.regs[lm.reg] = x;
+        for &c in &lm.clears {
+            m.clear_var(c);
+        }
+        let fa = prog.accesses[*aa].flat(&m.regs);
+        let a = sink.load(*ba, fa);
+        m.mem.n_loads += 1;
+        m.mem.loaded_bytes += a.bytes() as u64;
+        m.set_var(*va, a.clone());
+        let fb = prog.accesses[*ab].flat(&m.regs);
+        let b = sink.load(*bb, fb);
+        m.mem.n_loads += 1;
+        m.mem.loaded_bytes += b.bytes() as u64;
+        m.set_var(*vb, b.clone());
+        // the Dot arm of ComputeKind::apply, monomorphized (dot_bt
+        // carries its own SIMD/scalar twins)
+        let (am, bm) = (a.as_block(), b.as_block());
+        let t = Arc::new(Val::Block(am.dot_bt(bm)));
+        m.mem.flops += 2 * (am.rows * am.cols * bm.rows) as u64;
+        m.set_var(*vt, t.clone());
+        // acc += t (classification pinned src == vt)
+        let (v, fl) = accum_val(m.vars[*vacc].as_deref(), *op, t);
+        m.mem.flops += fl;
+        m.set_var(*vacc, v);
+    }
+}
+
+/// Flash attention's inner softmax·V nest: a serial key-block loop
+/// composing a [`dot_acc`] QKᵀ contraction with its exp/row-sum/·V
+/// epilogue, accumulators streaming across key blocks without
+/// materializing the score matrix. Child sites dispatch straight to
+/// their bodies (the classifier guaranteed at least the dot child), so
+/// the whole nest runs end to end inside fused code.
+fn flash_inner(m: &mut Machine, prog: &CompiledProgram, site: &FusedSite, sink: &mut Sink) {
+    let lm = &prog.loops[site.loop_id.expect("flash_inner is a loop site")];
+    for x in lm.start..lm.trip {
+        m.regs[lm.reg] = x;
+        for &c in &lm.clears {
+            m.clear_var(c);
+        }
+        for step in &site.steps {
+            match step {
+                FusedStep::Loop(child) => run_fused_site(m, prog, &prog.fused[*child], sink),
+                other => exec_step(m, prog, other, sink),
+            }
+        }
+    }
+}

@@ -6,7 +6,7 @@
 //! reassembles block-matrix outputs. Also hosts the tensor-level reference
 //! implementations used to cross-check every example program.
 //!
-//! Two interchangeable backends execute the Loop IR ([`ExecBackend`]):
+//! Three interchangeable backends execute the Loop IR ([`ExecBackend`]):
 //!
 //! * [`ExecBackend::Interp`] — the tree-walking interpreter
 //!   (`loopir::interp`), the semantic ground truth;
@@ -15,6 +15,12 @@
 //!   counters are bit-identical to the interpreter; wall-clock is several
 //!   times faster, which is what makes autotune trials and large benches
 //!   tractable.
+//! * [`ExecBackend::Specialized`] — the same tape, post-processed by
+//!   `loopir::compile::specialize_skeleton`: recognized instruction
+//!   regions collapse into `Instr::Fused` sites executed by the
+//!   pre-monomorphized loop bodies in [`kernels`], removing
+//!   per-instruction dispatch from matched nests. Still bit-identical —
+//!   outputs and counters.
 //!
 //! The compiled path stacks four mechanisms (PR 2–3):
 //!
@@ -39,13 +45,14 @@
 //!   counts, which is exactly the autotuner's measured-trial loop.
 
 pub mod engine;
+pub mod kernels;
 pub mod pool;
 pub mod reference;
 pub mod sched;
 
 use crate::ir::dim::DimSizes;
 use crate::ir::graph::Graph;
-use crate::loopir::compile::{compile_skeleton, TapeSkeleton};
+use crate::loopir::compile::{compile_skeleton, specialize_skeleton, TapeSkeleton};
 use crate::loopir::interp::{exec, BufVal, ExecConfig, ExecResult, MemSim};
 use crate::loopir::lower::lower;
 use crate::loopir::LoopIr;
@@ -54,13 +61,20 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 /// Which executor runs a lowered block program.
-#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
 pub enum ExecBackend {
     /// Tree-walking interpreter — the semantic ground truth.
     #[default]
     Interp,
     /// Flat-tape engine with multi-threaded grid loops.
     Compiled,
+    /// The compiled engine running a kernel-specialized tape: at bind
+    /// time, [`crate::loopir::compile::specialize_skeleton`] replaces
+    /// recognized instruction regions with pre-monomorphized fused loop
+    /// bodies from the [`kernels`] registry, so dispatch is resolved
+    /// once per site instead of per element. Bit-identical to the other
+    /// two backends (outputs *and* counters) — only dispatch moves.
+    Specialized,
 }
 
 impl ExecBackend {
@@ -68,6 +82,7 @@ impl ExecBackend {
         match s {
             "interp" | "interpreter" => Some(ExecBackend::Interp),
             "compiled" | "engine" | "tape" => Some(ExecBackend::Compiled),
+            "specialized" | "spec" | "fused" => Some(ExecBackend::Specialized),
             _ => None,
         }
     }
@@ -76,6 +91,7 @@ impl ExecBackend {
         match self {
             ExecBackend::Interp => "interp",
             ExecBackend::Compiled => "compiled",
+            ExecBackend::Specialized => "specialized",
         }
     }
 }
@@ -94,13 +110,23 @@ pub fn exec_ir(ir: &LoopIr, cfg: &ExecConfig, backend: ExecBackend) -> ExecResul
             let prog = crate::loopir::compile::compile(ir, cfg);
             engine::exec_compiled(&prog, cfg)
         }
+        ExecBackend::Specialized => {
+            let skel = specialize_skeleton(&compile_skeleton(ir, cfg));
+            let prog = skel.bind(&cfg.sizes);
+            engine::exec_compiled(&prog, cfg)
+        }
     }
 }
 
 /// Cross-trial compiled-tape cache, keyed by **program structure** (the
 /// full structural dump of the Loop IR plus scalar params — everything
-/// except `DimSizes`) and backend name. The key stores the dump itself,
-/// not a hash of it, so two distinct programs can never alias an entry.
+/// except `DimSizes`) and the [`ExecBackend`] **enum value** — not its
+/// name string, so no two backend variants (today or added later) can
+/// ever alias one entry even if their display names collide; a
+/// `Specialized` skeleton (carrying `Instr::Fused` rewrites) can never
+/// be served to a `Compiled` caller or vice versa. The structural key
+/// stores the dump itself, not a hash of it, so two distinct programs
+/// can never alias either.
 ///
 /// The autotuner probes one lowered program under many block-count
 /// assignments; without the cache every trial re-ran the whole
@@ -108,11 +134,14 @@ pub fn exec_ir(ir: &LoopIr, cfg: &ExecConfig, backend: ExecBackend) -> ExecResul
 /// parallel-safety analysis, tape layout). With it, the size-independent
 /// [`TapeSkeleton`] is built once per structure and each trial only
 /// re-binds trip counts and stride tables ([`TapeSkeleton::bind`]).
+/// For [`ExecBackend::Specialized`], the kernel-specialization pass
+/// ([`specialize_skeleton`]) runs once here too — per-size binds reuse
+/// the specialized skeleton.
 ///
 /// The misc-op registries are resolved into the skeleton but not part of
 /// the key: use one cache per registry (every current caller does).
 pub struct TapeCache {
-    entries: HashMap<(String, &'static str), Arc<TapeSkeleton>>,
+    entries: HashMap<(String, ExecBackend), Arc<TapeSkeleton>>,
     /// Lookups served from the cache (telemetry for tests/benches).
     pub hits: u64,
     /// Lookups that compiled a fresh skeleton.
@@ -149,15 +178,24 @@ impl TapeCache {
         cfg: &ExecConfig,
         backend: ExecBackend,
     ) -> Arc<TapeSkeleton> {
-        let key = (Self::fingerprint(ir, cfg), backend.name());
+        let key = (Self::fingerprint(ir, cfg), backend);
         if let Some(s) = self.entries.get(&key) {
             self.hits += 1;
             return s.clone();
         }
         self.misses += 1;
-        let s = Arc::new(compile_skeleton(ir, cfg));
+        let mut skel = compile_skeleton(ir, cfg);
+        if backend == ExecBackend::Specialized {
+            skel = specialize_skeleton(&skel);
+        }
+        let s = Arc::new(skel);
         self.entries.insert(key, s.clone());
         s
+    }
+
+    /// Number of distinct (structure, backend) entries held.
+    pub fn entries(&self) -> usize {
+        self.entries.len()
     }
 }
 
@@ -494,7 +532,9 @@ pub fn run_lowered_cached(
     let cfg = build_cfg(ir, w);
     let res = match backend {
         ExecBackend::Interp => exec(ir, &cfg),
-        ExecBackend::Compiled => {
+        // The cache already holds the right skeleton flavor per backend
+        // key — specialization ran on the miss path for `Specialized`.
+        ExecBackend::Compiled | ExecBackend::Specialized => {
             let skel = cache.skeleton(ir, &cfg, backend);
             let prog = skel.bind(&cfg.sizes);
             engine::exec_compiled(&prog, &cfg)
@@ -637,5 +677,83 @@ mod tests {
         }
         assert_eq!(cache.misses, 1, "one skeleton for all three bindings");
         assert_eq!(cache.hits, 2);
+    }
+
+    /// The cardinal invariant at unit scope: the specialized tape is
+    /// bit-identical to the generic one — outputs and every MemSim
+    /// counter — single-threaded and under the pool.
+    #[test]
+    fn specialized_backend_bitwise_matches_compiled() {
+        use crate::ir::expr::Expr;
+        use crate::ir::graph::{map_over, ArgMode};
+        let mut g = Graph::new();
+        let a = g.input("A", crate::ir::types::Ty::blocks(&["M", "N"]));
+        let o = map_over(&mut g, "M", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let inner = map_over(&mut mb.g, "N", &[(ins[0], ArgMode::Mapped)], |mb2, ins2| {
+                let r = mb2.g.ew1(Expr::var(0).exp(), ins2[0]);
+                mb2.collect(r);
+            });
+            mb.collect(inner[0]);
+        });
+        g.output("B", o[0]);
+        let ir = lower(&g);
+
+        let mut rng = Rng::new(29);
+        let input = rng.mat(16, 16);
+        for threads in [1usize, 4] {
+            let w = Workload::new(DimSizes::of(&[("M", 4), ("N", 4)]))
+                .input("A", input.clone())
+                .threads(threads);
+            let c = run_lowered_with(&ir, &w, ExecBackend::Compiled);
+            let s = run_lowered_with(&ir, &w, ExecBackend::Specialized);
+            assert_eq!(c.outputs["B"], s.outputs["B"], "threads {threads}");
+            assert_eq!(c.mem, s.mem, "threads {threads}");
+        }
+    }
+
+    /// Satellite audit: the cache key pins the backend **enum**, so one
+    /// program bound under all three backends yields three distinct
+    /// entries — a `Specialized` skeleton (with its `Instr::Fused`
+    /// rewrites) can never be served to a `Compiled` caller. Hit counts
+    /// stay stable on re-request.
+    #[test]
+    fn tape_cache_keys_pin_backend_variant() {
+        use crate::ir::expr::Expr;
+        use crate::ir::graph::{map_over, ArgMode};
+        let mut g = Graph::new();
+        let a = g.input("A", crate::ir::types::Ty::blocks(&["M", "N"]));
+        let o = map_over(&mut g, "M", &[(a, ArgMode::Mapped)], |mb, ins| {
+            let inner = map_over(&mut mb.g, "N", &[(ins[0], ArgMode::Mapped)], |mb2, ins2| {
+                let r = mb2.g.ew1(Expr::var(0).exp(), ins2[0]);
+                mb2.collect(r);
+            });
+            mb.collect(inner[0]);
+        });
+        g.output("B", o[0]);
+        let ir = lower(&g);
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 2), ("N", 4)]));
+
+        let backends = [
+            ExecBackend::Interp,
+            ExecBackend::Compiled,
+            ExecBackend::Specialized,
+        ];
+        let mut cache = TapeCache::new();
+        let skels: Vec<_> = backends
+            .iter()
+            .map(|b| cache.skeleton(&ir, &cfg, *b))
+            .collect();
+        assert_eq!(cache.entries(), 3, "one entry per backend variant");
+        assert_eq!(cache.misses, 3);
+        assert_eq!(cache.hits, 0);
+        for b in backends {
+            cache.skeleton(&ir, &cfg, b);
+        }
+        assert_eq!(cache.hits, 3, "re-requests hit, never recompile");
+        assert_eq!(cache.misses, 3);
+        // specialization state rides the entry, not just the key
+        assert!(skels[2].spec.is_some(), "specialized entry carries its report");
+        assert!(skels[1].spec.is_none(), "compiled entry stays generic");
+        assert!(skels[0].spec.is_none());
     }
 }

@@ -308,6 +308,12 @@ impl ComputeKind {
 
 /// One flat-tape instruction. Control flow is two ip-jumps per loop
 /// iteration; everything else indexes side tables by small integers.
+///
+/// `Fused(site)` is produced only by [`specialize_skeleton`]: the
+/// payload indexes [`TapeSkeleton::fused`] / [`CompiledProgram::fused`],
+/// and the engine hands the whole site to one pre-monomorphized kernel
+/// body ([`crate::exec::kernels`]) instead of interpreting it
+/// instruction by instruction.
 #[derive(Clone, Debug)]
 pub enum Instr {
     LoopBegin(usize),
@@ -317,6 +323,7 @@ pub enum Instr {
     Compute { var: VarId, site: usize },
     Accum { var: VarId, op: ReduceOp, src: VarId },
     Misc(usize),
+    Fused(usize),
 }
 
 /// A buffer with dims resolved to concrete extents and row-major strides.
@@ -338,6 +345,88 @@ pub struct TopRange {
     pub kernel: bool,
 }
 
+// ---------------------------------------------------------------------------
+// Kernel specialization (the `Specialized` backend's bind-time pass)
+// ---------------------------------------------------------------------------
+
+/// Which pre-monomorphized fused loop body executes a [`FusedSite`].
+/// Classified once by [`specialize_skeleton`]; the engine resolves the
+/// id to a concrete `fn` in the [`crate::exec::kernels`] registry — no
+/// per-instruction dispatch remains inside the site.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum KernelId {
+    /// A serial contraction loop whose body is exactly
+    /// `load a; load b; t = dot(a, b); acc += t` — the `dot_bt`
+    /// micro-kernel with its accumulate folded in.
+    DotAcc,
+    /// Flash attention's inner softmax·V nest: a serial loop containing
+    /// a [`KernelId::DotAcc`] child (the QKᵀ contraction) plus the
+    /// exp/row-sum/·V epilogue, accumulated across key blocks without
+    /// materializing the score matrix.
+    FlashInner,
+    /// Any other all-straight-line serial loop nest, driven by the
+    /// generic pre-compiled step walker.
+    SerialNest,
+    /// A straight-line load→compute→store run inside a non-collapsible
+    /// (parallel or misc-bearing) loop body, executed as one unit.
+    StreamRun,
+}
+
+impl KernelId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelId::DotAcc => "dot_acc",
+            KernelId::FlashInner => "flash_inner",
+            KernelId::SerialNest => "serial_nest",
+            KernelId::StreamRun => "stream_run",
+        }
+    }
+}
+
+/// One step of a fused site — the same payloads as the matching
+/// [`Instr`] arms, pre-extracted so kernel bodies index side tables
+/// without re-matching the instruction encoding.
+#[derive(Clone, Debug)]
+pub enum FusedStep {
+    Load { var: VarId, buf: BufId, acc: usize },
+    Store { var: VarId, buf: BufId, acc: usize },
+    Compute { var: VarId, site: usize },
+    Accum { var: VarId, op: ReduceOp, src: VarId },
+    /// A nested fused loop, by index into the `fused` table.
+    Loop(usize),
+}
+
+/// A region of the tape committed to one kernel body at specialization
+/// time. Two flavors: a *loop site* (`loop_id: Some`) replaces an
+/// entire serial `LoopBegin..LoopEnd` nest — the kernel drives the
+/// loop itself (register, clears, iterations); a *run site*
+/// (`loop_id: None`) wraps a straight-line instruction run inside a
+/// loop that could not be collapsed, executed once each time reached.
+#[derive(Clone, Debug)]
+pub struct FusedSite {
+    /// `Some(loop_id)` for a collapsed loop, `None` for a run site.
+    pub loop_id: Option<usize>,
+    pub steps: Vec<FusedStep>,
+    pub kernel: KernelId,
+}
+
+/// Per-skeleton record of what [`specialize_skeleton`] matched — the
+/// observable coverage the CLI surfaces (`specialization: X/Y nests
+/// fused`), so unmatched patterns are visible instead of silently
+/// interpreted.
+#[derive(Clone, Debug, Default)]
+pub struct SpecReport {
+    /// Loop nests in the skeleton.
+    pub total_nests: usize,
+    /// Nests executing entirely through fused kernel bodies: collapsed
+    /// outright, or with every body instruction fused (counted
+    /// bottom-up, so a parallel grid whose whole body is one run site
+    /// counts).
+    pub fused_nests: usize,
+    /// Matched sites per kernel body.
+    pub by_kernel: std::collections::BTreeMap<&'static str, usize>,
+}
+
 /// A fully lowered, ready-to-execute program.
 #[derive(Clone, Debug)]
 pub struct CompiledProgram {
@@ -348,6 +437,8 @@ pub struct CompiledProgram {
     pub miscs: Vec<MiscSite>,
     pub bufs: Vec<BufMeta>,
     pub tops: Vec<TopRange>,
+    /// Fused-site table (empty unless the skeleton was specialized).
+    pub fused: Vec<FusedSite>,
     pub n_vars: usize,
     pub n_regs: usize,
 }
@@ -434,6 +525,10 @@ pub struct TapeSkeleton {
     pub miscs: Vec<SymMisc>,
     pub bufs: Vec<SymBuf>,
     pub tops: Vec<TopRange>,
+    /// Fused-site table; empty until [`specialize_skeleton`] runs.
+    pub fused: Vec<FusedSite>,
+    /// Coverage record; `Some` iff the skeleton was specialized.
+    pub spec: Option<SpecReport>,
     pub n_vars: usize,
     pub n_regs: usize,
 }
@@ -500,17 +595,61 @@ impl TapeSkeleton {
         // Executed-instruction weights, inner loops first (a nested loop
         // always has a higher index than its parent, so reverse order
         // has every inner weight ready when its parent sums the body).
+        //
+        // A `Fused` site must charge exactly what the instructions it
+        // replaced would have charged — `LoopMeta::weight` gates the
+        // engine's nested fan-out decision, so any drift here would
+        // change scheduling (and `peak_local_bytes`) between the
+        // compiled and specialized backends. `fused_weight` mirrors the
+        // original recursion: a loop site is `iters · max(1, Σ steps)`,
+        // a run site is just `Σ steps`.
+        fn fused_weight(site: &FusedSite, fused: &[FusedSite], loops: &[LoopMeta]) -> u64 {
+            let mut cost = 0u64;
+            for st in &site.steps {
+                cost += match st {
+                    FusedStep::Loop(child) => fused_weight(&fused[*child], fused, loops),
+                    _ => 1,
+                };
+            }
+            match site.loop_id {
+                Some(li) => {
+                    let iters = loops[li].trip.saturating_sub(loops[li].start) as u64;
+                    iters * cost.max(1)
+                }
+                None => cost,
+            }
+        }
+        // Loops collapsed into a fused site no longer appear in the
+        // instruction tape (their body_ip/end_ip are poisoned); their
+        // weight comes from the site instead.
+        let mut site_of_loop = vec![usize::MAX; loops.len()];
+        for (fi, site) in self.fused.iter().enumerate() {
+            if let Some(li) = site.loop_id {
+                site_of_loop[li] = fi;
+            }
+        }
         let mut weights = vec![0u64; loops.len()];
         for li in (0..loops.len()).rev() {
+            if site_of_loop[li] != usize::MAX {
+                weights[li] = fused_weight(&self.fused[site_of_loop[li]], &self.fused, &loops);
+                continue;
+            }
             let mut cost = 0u64;
             let mut ip = loops[li].body_ip;
             while ip < loops[li].end_ip {
-                if let Instr::LoopBegin(lj) = &self.instrs[ip] {
-                    cost += weights[*lj];
-                    ip = loops[*lj].end_ip + 1;
-                } else {
-                    cost += 1;
-                    ip += 1;
+                match &self.instrs[ip] {
+                    Instr::LoopBegin(lj) => {
+                        cost += weights[*lj];
+                        ip = loops[*lj].end_ip + 1;
+                    }
+                    Instr::Fused(fi) => {
+                        cost += fused_weight(&self.fused[*fi], &self.fused, &loops);
+                        ip += 1;
+                    }
+                    _ => {
+                        cost += 1;
+                        ip += 1;
+                    }
                 }
             }
             let iters = loops[li].trip.saturating_sub(loops[li].start) as u64;
@@ -541,6 +680,7 @@ impl TapeSkeleton {
             miscs,
             bufs,
             tops: self.tops.clone(),
+            fused: self.fused.clone(),
             n_vars: self.n_vars,
             n_regs: self.n_regs,
         }
@@ -599,6 +739,8 @@ pub fn compile_skeleton(ir: &LoopIr, cfg: &ExecConfig) -> TapeSkeleton {
         miscs: c.miscs,
         bufs: c.bufs,
         tops,
+        fused: Vec::new(),
+        spec: None,
         n_vars: ir.n_vars,
         n_regs,
     }
@@ -742,6 +884,339 @@ impl<'a> Compiler<'a> {
                 self.instrs.push(Instr::Misc(self.miscs.len() - 1));
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-specialization pass
+// ---------------------------------------------------------------------------
+
+/// Rewrite a skeleton so that recognized instruction regions execute
+/// through pre-monomorphized kernel bodies ([`crate::exec::kernels`])
+/// instead of the generic per-instruction interpreter loop. Dispatch is
+/// thereby resolved **once, here** — not per element at run time.
+///
+/// Two patterns are committed:
+///
+/// * **Loop sites** — a serial (non-`parallel`) nested loop whose body
+///   is pure straight-line tape (loads, stores, computes, accums) plus
+///   wholly-fusible child loops collapses into a single
+///   [`Instr::Fused`]; the kernel body drives the loop itself.
+///   Parallel loops are never collapsed (the engine's fan-out,
+///   work-stealing, and slice attribution hang off their
+///   `LoopBegin`), and neither are top-level loops (the stacked-launch
+///   slice path requires a literal top `LoopBegin`).
+/// * **Run sites** — inside any loop that could not collapse, each
+///   maximal straight-line run of two or more fusible instructions
+///   (runs break at `Misc`) is wrapped into one [`Instr::Fused`]
+///   executed per arrival.
+///
+/// The pass preserves the cardinal invariant by construction: kernel
+/// bodies replay the exact primitive sequence (same [`ComputeKind`]
+/// numerics, same `MemSim` charges, same set/clear order), loop-table
+/// indices are never renumbered (registers and accesses keep meaning),
+/// and [`TapeSkeleton::bind`] charges fused regions the same
+/// `LoopMeta::weight` the original instructions carried, so nested
+/// fan-out decisions are unchanged. Collapsed loops keep their
+/// [`SymLoop`] entry but have `body_ip`/`end_ip` poisoned to
+/// `usize::MAX` — any stale use panics instead of misreading the tape.
+///
+/// The match outcome is recorded in [`TapeSkeleton::spec`] so coverage
+/// is observable. Specializing an already-specialized skeleton is an
+/// identity.
+pub fn specialize_skeleton(skel: &TapeSkeleton) -> TapeSkeleton {
+    if skel.spec.is_some() {
+        return skel.clone();
+    }
+    let mut out = skel.clone();
+    let mut instrs: Vec<Instr> = Vec::with_capacity(skel.instrs.len());
+    let mut fused: Vec<FusedSite> = Vec::new();
+    let mut tops: Vec<TopRange> = Vec::with_capacity(skel.tops.len());
+    for top in &skel.tops {
+        let start = instrs.len();
+        let mut ip = top.ips.0;
+        while ip < top.ips.1 {
+            match &skel.instrs[ip] {
+                Instr::LoopBegin(li) => {
+                    // Top-level loops always keep their LoopBegin; only
+                    // their bodies specialize.
+                    instrs.push(Instr::LoopBegin(*li));
+                    spec_body(
+                        skel,
+                        skel.loops[*li].body_ip,
+                        skel.loops[*li].end_ip,
+                        &mut instrs,
+                        &mut fused,
+                    );
+                    instrs.push(Instr::LoopEnd(*li));
+                    ip = skel.loops[*li].end_ip + 1;
+                }
+                other => {
+                    instrs.push(other.clone());
+                    ip += 1;
+                }
+            }
+        }
+        tops.push(TopRange {
+            ips: (start, instrs.len()),
+            kernel: top.kernel,
+        });
+    }
+    // Re-point every surviving loop at its new instruction range;
+    // poison the collapsed ones.
+    for l in &mut out.loops {
+        l.body_ip = usize::MAX;
+        l.end_ip = usize::MAX;
+    }
+    for (ip, ins) in instrs.iter().enumerate() {
+        match ins {
+            Instr::LoopBegin(li) => out.loops[*li].body_ip = ip + 1,
+            Instr::LoopEnd(li) => out.loops[*li].end_ip = ip,
+            _ => {}
+        }
+    }
+    out.spec = Some(spec_report(&out.loops, &instrs, &fused));
+    out.instrs = instrs;
+    out.tops = tops;
+    out.fused = fused;
+    out
+}
+
+/// Specialize one loop body `[lo, hi)`: collapse fusible child loops,
+/// wrap straight-line runs, pass everything else through.
+fn spec_body(
+    skel: &TapeSkeleton,
+    lo: usize,
+    hi: usize,
+    instrs: &mut Vec<Instr>,
+    fused: &mut Vec<FusedSite>,
+) {
+    // The pending straight-line run: the step plus the instruction to
+    // re-emit verbatim if the run ends up shorter than two.
+    let mut run: Vec<(FusedStep, Instr)> = Vec::new();
+    fn flush(
+        run: &mut Vec<(FusedStep, Instr)>,
+        instrs: &mut Vec<Instr>,
+        fused: &mut Vec<FusedSite>,
+    ) {
+        if run.len() >= 2 {
+            let steps: Vec<FusedStep> = run.drain(..).map(|(s, _)| s).collect();
+            fused.push(FusedSite {
+                loop_id: None,
+                kernel: KernelId::StreamRun,
+                steps,
+            });
+            instrs.push(Instr::Fused(fused.len() - 1));
+        } else {
+            for (_, ins) in run.drain(..) {
+                instrs.push(ins);
+            }
+        }
+    }
+    let mut ip = lo;
+    while ip < hi {
+        match &skel.instrs[ip] {
+            Instr::LoopBegin(li) => {
+                if loop_fusible(skel, *li) {
+                    let site = build_site(skel, *li, fused);
+                    run.push((FusedStep::Loop(site), Instr::Fused(site)));
+                } else {
+                    flush(&mut run, instrs, fused);
+                    instrs.push(Instr::LoopBegin(*li));
+                    spec_body(skel, skel.loops[*li].body_ip, skel.loops[*li].end_ip, instrs, fused);
+                    instrs.push(Instr::LoopEnd(*li));
+                }
+                ip = skel.loops[*li].end_ip + 1;
+            }
+            Instr::Load { var, buf, acc } => {
+                run.push((
+                    FusedStep::Load { var: *var, buf: *buf, acc: *acc },
+                    skel.instrs[ip].clone(),
+                ));
+                ip += 1;
+            }
+            Instr::Store { var, buf, acc } => {
+                run.push((
+                    FusedStep::Store { var: *var, buf: *buf, acc: *acc },
+                    skel.instrs[ip].clone(),
+                ));
+                ip += 1;
+            }
+            Instr::Compute { var, site } => {
+                run.push((
+                    FusedStep::Compute { var: *var, site: *site },
+                    skel.instrs[ip].clone(),
+                ));
+                ip += 1;
+            }
+            Instr::Accum { var, op, src } => {
+                run.push((
+                    FusedStep::Accum { var: *var, op: *op, src: *src },
+                    skel.instrs[ip].clone(),
+                ));
+                ip += 1;
+            }
+            other => {
+                // Misc (or a pre-existing Fused): breaks the run.
+                flush(&mut run, instrs, fused);
+                instrs.push(other.clone());
+                ip += 1;
+            }
+        }
+    }
+    flush(&mut run, instrs, fused);
+}
+
+/// Can loop `li` collapse into a single fused site? Serial only, and
+/// its body must be straight-line tape plus recursively-fusible child
+/// loops — nothing the kernel bodies cannot replay.
+fn loop_fusible(skel: &TapeSkeleton, li: usize) -> bool {
+    if skel.loops[li].parallel {
+        return false;
+    }
+    let mut ip = skel.loops[li].body_ip;
+    while ip < skel.loops[li].end_ip {
+        match &skel.instrs[ip] {
+            Instr::LoopBegin(lj) => {
+                if !loop_fusible(skel, *lj) {
+                    return false;
+                }
+                ip = skel.loops[*lj].end_ip + 1;
+            }
+            Instr::Load { .. }
+            | Instr::Store { .. }
+            | Instr::Compute { .. }
+            | Instr::Accum { .. } => {
+                ip += 1;
+            }
+            _ => return false,
+        }
+    }
+    true
+}
+
+/// Build the fused site for a loop [`loop_fusible`] accepted —
+/// infallible by that precondition, so no partially-built sites are
+/// ever left behind. Children are built depth-first, so a child site
+/// always has a lower index than its parent.
+fn build_site(skel: &TapeSkeleton, li: usize, fused: &mut Vec<FusedSite>) -> usize {
+    let mut steps = Vec::new();
+    let mut ip = skel.loops[li].body_ip;
+    while ip < skel.loops[li].end_ip {
+        match &skel.instrs[ip] {
+            Instr::LoopBegin(lj) => {
+                let child = build_site(skel, *lj, fused);
+                steps.push(FusedStep::Loop(child));
+                ip = skel.loops[*lj].end_ip + 1;
+            }
+            Instr::Load { var, buf, acc } => {
+                steps.push(FusedStep::Load { var: *var, buf: *buf, acc: *acc });
+                ip += 1;
+            }
+            Instr::Store { var, buf, acc } => {
+                steps.push(FusedStep::Store { var: *var, buf: *buf, acc: *acc });
+                ip += 1;
+            }
+            Instr::Compute { var, site } => {
+                steps.push(FusedStep::Compute { var: *var, site: *site });
+                ip += 1;
+            }
+            Instr::Accum { var, op, src } => {
+                steps.push(FusedStep::Accum { var: *var, op: *op, src: *src });
+                ip += 1;
+            }
+            other => unreachable!("loop_fusible admitted {other:?}"),
+        }
+    }
+    let kernel = classify_loop_site(skel, &steps, fused);
+    fused.push(FusedSite {
+        loop_id: Some(li),
+        steps,
+        kernel,
+    });
+    fused.len() - 1
+}
+
+/// Pattern table for collapsed loops. Anything unmatched falls back to
+/// the generic [`KernelId::SerialNest`] walker — still one fused site,
+/// just without a bespoke body.
+fn classify_loop_site(skel: &TapeSkeleton, steps: &[FusedStep], fused: &[FusedSite]) -> KernelId {
+    // dot_acc: load a; load b; t = dot(a, b); acc += t
+    if let [
+        FusedStep::Load { var: a, .. },
+        FusedStep::Load { var: b, .. },
+        FusedStep::Compute { var: t, site },
+        FusedStep::Accum { op: ReduceOp::Add, src, .. },
+    ] = steps
+    {
+        if matches!(skel.computes[*site].kind, ComputeKind::Dot)
+            && skel.computes[*site].args == [*a, *b]
+            && a != b
+            && src == t
+        {
+            return KernelId::DotAcc;
+        }
+    }
+    // flash_inner: a serial loop hosting a dot_acc child (the QKᵀ
+    // contraction) and at least two accumulators (the softmax row-sum
+    // and the ·V product) — the paper's streaming softmax·V nest.
+    let has_dot_child = steps.iter().any(|s| {
+        matches!(s, FusedStep::Loop(c) if fused[*c].kernel == KernelId::DotAcc)
+    });
+    let n_accum = steps
+        .iter()
+        .filter(|s| matches!(s, FusedStep::Accum { .. }))
+        .count();
+    if has_dot_child && n_accum >= 2 {
+        return KernelId::FlashInner;
+    }
+    KernelId::SerialNest
+}
+
+/// Coverage: a nest counts as fused when it executes entirely through
+/// kernel bodies — collapsed outright, or (bottom-up) every body
+/// instruction is `Fused` or a child loop that itself counts.
+fn spec_report(loops: &[SymLoop], instrs: &[Instr], fused: &[FusedSite]) -> SpecReport {
+    let mut counts = vec![false; loops.len()];
+    for site in fused {
+        if let Some(li) = site.loop_id {
+            counts[li] = true;
+        }
+    }
+    // Inner loops have higher indices than their parents, so reverse
+    // order has every child verdict ready.
+    for li in (0..loops.len()).rev() {
+        if counts[li] || loops[li].end_ip == usize::MAX {
+            continue;
+        }
+        let mut all_fused = true;
+        let mut ip = loops[li].body_ip;
+        while ip < loops[li].end_ip {
+            match &instrs[ip] {
+                Instr::Fused(_) => ip += 1,
+                Instr::LoopBegin(lj) => {
+                    if !counts[*lj] {
+                        all_fused = false;
+                        break;
+                    }
+                    ip = loops[*lj].end_ip + 1;
+                }
+                _ => {
+                    all_fused = false;
+                    break;
+                }
+            }
+        }
+        counts[li] = all_fused;
+    }
+    let mut by_kernel = std::collections::BTreeMap::new();
+    for site in fused {
+        *by_kernel.entry(site.kernel.name()).or_insert(0) += 1;
+    }
+    SpecReport {
+        total_nests: loops.len(),
+        fused_nests: counts.iter().filter(|c| **c).count(),
+        by_kernel,
     }
 }
 
@@ -1383,5 +1858,170 @@ mod tests {
         let direct = compile(&ir, &ExecConfig::new(DimSizes::of(&[("M", 6)])));
         assert_eq!(direct.loops[0].trip, p6.loops[0].trip);
         assert_eq!(direct.accesses[0].terms, p6.accesses[0].terms);
+    }
+
+    /// `forall m { for k { a = A[m,k]; b = B[k]; t = dot(a,b); acc += t };
+    ///             store acc -> C[m] }` — the canonical contraction.
+    fn contraction_ir() -> LoopIr {
+        let (m, k) = (Dim::new("M"), Dim::new("K"));
+        let mut ir = LoopIr {
+            bufs: vec![
+                BufDecl {
+                    name: "A".into(),
+                    dims: vec![m.clone(), k.clone()],
+                    item: Item::Block,
+                    is_input: true,
+                    is_output: false,
+                    state_dim: None,
+                },
+                BufDecl {
+                    name: "B".into(),
+                    dims: vec![k.clone()],
+                    item: Item::Block,
+                    is_input: true,
+                    is_output: false,
+                    state_dim: None,
+                },
+                BufDecl {
+                    name: "C".into(),
+                    dims: vec![m.clone()],
+                    item: Item::Block,
+                    is_input: false,
+                    is_output: true,
+                    state_dim: None,
+                },
+            ],
+            body: vec![Stmt::Loop {
+                kind: LoopKind::ForAll,
+                dim: m.clone(),
+                skip_first: false,
+                clears: vec![],
+                body: vec![
+                    Stmt::Loop {
+                        kind: LoopKind::For,
+                        dim: k.clone(),
+                        skip_first: false,
+                        clears: vec![],
+                        body: vec![
+                            Stmt::Load {
+                                var: 0,
+                                buf: 0,
+                                idx: vec![Index::Iter(m.clone()), Index::Iter(k.clone())],
+                            },
+                            Stmt::Load {
+                                var: 1,
+                                buf: 1,
+                                idx: vec![Index::Iter(k)],
+                            },
+                            Stmt::Compute {
+                                var: 2,
+                                op: COp::Func(FuncOp::Dot),
+                                args: vec![0, 1],
+                            },
+                            Stmt::Accum {
+                                var: 3,
+                                op: ReduceOp::Add,
+                                src: 2,
+                            },
+                        ],
+                    },
+                    Stmt::Store {
+                        var: 3,
+                        buf: 2,
+                        idx: vec![Index::Iter(m)],
+                    },
+                ],
+            }],
+            n_vars: 4,
+            params: vec![],
+        };
+        super::super::analyze_clears(&mut ir);
+        ir
+    }
+
+    /// The specialization pass collapses the serial contraction loop
+    /// into a `dot_acc` site, wraps the remaining straight-line body
+    /// into a run site, and reports full coverage — while bind-time
+    /// loop weights stay identical to the unspecialized tape, so
+    /// nested fan-out decisions cannot diverge.
+    #[test]
+    fn specialize_collapses_dot_contraction() {
+        let ir = contraction_ir();
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 3), ("K", 4)]));
+        let skel = compile_skeleton(&ir, &cfg);
+        let spec = specialize_skeleton(&skel);
+
+        // the k loop (index 1, inner) collapsed to a DotAcc loop site;
+        // the m body (Fused + Store) wrapped into one StreamRun
+        let rep = spec.spec.as_ref().expect("specialized skeleton has a report");
+        assert_eq!(rep.total_nests, 2);
+        assert_eq!(rep.fused_nests, 2, "both nests run through kernel bodies");
+        assert_eq!(rep.by_kernel.get("dot_acc"), Some(&1));
+        assert_eq!(rep.by_kernel.get("stream_run"), Some(&1));
+        let dot = spec
+            .fused
+            .iter()
+            .find(|s| s.kernel == KernelId::DotAcc)
+            .expect("dot site");
+        assert_eq!(dot.loop_id, Some(1));
+        assert_eq!(dot.steps.len(), 4);
+        // top-level m loop keeps its literal LoopBegin/LoopEnd
+        assert!(matches!(spec.instrs[0], Instr::LoopBegin(0)));
+        assert!(matches!(spec.instrs[1], Instr::Fused(_)));
+        assert!(matches!(spec.instrs[2], Instr::LoopEnd(0)));
+        assert_eq!(spec.instrs.len(), 3);
+        // collapsed k loop is poisoned; surviving m loop re-pointed
+        assert_eq!(spec.loops[1].body_ip, usize::MAX);
+        assert_eq!(spec.loops[0].body_ip, 1);
+        assert_eq!(spec.loops[0].end_ip, 2);
+
+        // weight parity: fused regions charge exactly what the original
+        // instructions would have
+        let plain = skel.bind(&cfg.sizes);
+        let fused = spec.bind(&cfg.sizes);
+        assert_eq!(plain.loops[1].weight, 16, "K=4 × 4 body instrs");
+        assert_eq!(plain.loops[0].weight, 51, "M=3 × (16 + store)");
+        assert_eq!(fused.loops[0].weight, plain.loops[0].weight);
+        assert_eq!(fused.loops[1].weight, plain.loops[1].weight);
+        assert_eq!(fused.loops[0].parallel, plain.loops[0].parallel);
+    }
+
+    /// Parallel grid loops are never collapsed (fan-out and slice
+    /// attribution hang off their `LoopBegin`), but their straight-line
+    /// bodies become one run site — so even map-only programs report
+    /// coverage.
+    #[test]
+    fn specialize_wraps_runs_inside_parallel_grid() {
+        let ir = grid_ir(LoopKind::ForAll);
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 3)]));
+        let spec = specialize_skeleton(&compile_skeleton(&ir, &cfg));
+        assert!(matches!(spec.instrs[0], Instr::LoopBegin(0)));
+        assert!(matches!(spec.instrs[1], Instr::Fused(0)));
+        assert!(matches!(spec.instrs[2], Instr::LoopEnd(0)));
+        assert!(spec.loops[0].parallel, "grid loop survives untouched");
+        assert_eq!(spec.fused[0].kernel, KernelId::StreamRun);
+        assert_eq!(spec.fused[0].loop_id, None);
+        assert_eq!(spec.fused[0].steps.len(), 3);
+        let rep = spec.spec.as_ref().unwrap();
+        assert_eq!((rep.fused_nests, rep.total_nests), (1, 1));
+        // run-site weight = its step count, same as the plain body
+        let plain = compile_skeleton(&ir, &cfg).bind(&cfg.sizes);
+        assert_eq!(spec.bind(&cfg.sizes).loops[0].weight, plain.loops[0].weight);
+    }
+
+    /// Specializing twice is an identity — prepared-plan paths may hand
+    /// an already-specialized skeleton back through the pass.
+    #[test]
+    fn specialize_is_idempotent() {
+        let ir = contraction_ir();
+        let cfg = ExecConfig::new(DimSizes::of(&[("M", 2), ("K", 2)]));
+        let once = specialize_skeleton(&compile_skeleton(&ir, &cfg));
+        let twice = specialize_skeleton(&once);
+        assert_eq!(format!("{:?}", once.instrs), format!("{:?}", twice.instrs));
+        assert_eq!(format!("{:?}", once.fused), format!("{:?}", twice.fused));
+        assert_eq!(
+            once.spec.as_ref().unwrap().fused_nests,
+            twice.spec.as_ref().unwrap().fused_nests
+        );
     }
 }

@@ -3,7 +3,7 @@
 //! ```text
 //! blockbuster trace <program> [--seed N] [--listing] [--dot] [--dump]
 //! blockbuster compile <program> [--seed N]
-//! blockbuster run <program> [--seed N] [--backend interp|compiled]
+//! blockbuster run <program> [--seed N] [--backend interp|compiled|specialized]
 //!                 [--threads N] [--no-simd]
 //! blockbuster tune <program> [--seed N] [--capacity BYTES]
 //! blockbuster serve [--requests N] [--mix a,b:2,c] [--max-batch N]
@@ -14,7 +14,7 @@
 //!                   [--shed-policy reject-new|drop-oldest]
 //!                   [--retune-every N] [--weights a:4,b:1]
 //!                   [--listen ADDR] [--serve-for-ms MS] [--max-inflight N]
-//!                   [--backend interp|compiled]
+//!                   [--backend interp|compiled|specialized]
 //!                   [--threads N] [--seed N] [--no-simd]
 //! blockbuster client [--addr HOST:PORT] [--requests N] [--mix a,b]
 //!                   [--pipeline N] [--seed N] [--backoff-attempts N]
@@ -47,9 +47,12 @@
 //! scalar fallbacks — a debugging/benching aid, not a correctness knob).
 
 use blockbuster::autotune::autotune;
-use blockbuster::coordinator::{compile, execute_plan_opts, plan_report, plan_stack_info, workloads};
+use blockbuster::coordinator::{
+    compile, execute_plan_opts, execute_prepared, plan_report, plan_stack_info, prepare_plan,
+    workloads,
+};
 use blockbuster::cost::CostModel;
-use blockbuster::exec::{run_with, ExecBackend, Workload};
+use blockbuster::exec::{run_with, ExecBackend, TapeCache, Workload};
 use blockbuster::fusion::fuse;
 use blockbuster::ir::display::{dump, to_dot};
 use blockbuster::loopir::lower::lower;
@@ -83,7 +86,10 @@ commands:
       --seed N           input seed (default 42)
   run <program>      execute the selected plan vs the naive baseline
       --seed N           input seed (default 42)
-      --backend B        executor backend: interp | compiled (default interp)
+      --backend B        executor backend: interp | compiled | specialized
+                         (default interp; specialized = compiled tape with
+                         recognized nests fused into pre-monomorphized
+                         kernel bodies, dispatch resolved at bind time)
       --threads N        worker cap for parallel grid loops (default: cores)
       --no-simd          force the bit-identical scalar kernels
   tune <program>     rank block-count assignments by the static cost model
@@ -141,7 +147,8 @@ commands:
                          (default 5000)
       --max-inflight N   global cap on in-flight network requests; overflow
                          gets typed QueueFull rejects at the edge (default 256)
-      --backend B        executor backend: interp | compiled (default compiled)
+      --backend B        executor backend: interp | compiled | specialized
+                         (default compiled)
       --threads N        worker cap: batch fan-out + grid loops (default: cores)
       --seed N           request-stream seed (default 42)
       --no-simd          force the bit-identical scalar kernels
@@ -224,7 +231,7 @@ fn backend_or_die(args: &Args, default: ExecBackend) -> ExecBackend {
     match args.opt("backend") {
         None => default,
         Some(s) => ExecBackend::from_name(s).unwrap_or_else(|| {
-            eprintln!("unknown backend {s}; have: interp, compiled");
+            eprintln!("unknown backend {s}; have: interp, compiled, specialized");
             std::process::exit(2);
         }),
     }
@@ -317,7 +324,13 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         },
         backend,
     );
-    let plan = execute_plan_opts(&compiled.plan, &cfg.sizes, &params, &inputs, backend, threads);
+    let mut cache = TapeCache::new();
+    let prepared = prepare_plan(&compiled.plan, &cfg.sizes, &params, backend, &mut cache);
+    match prepared.spec_coverage() {
+        Some((fused, total)) => println!("specialization: {fused}/{total} nests fused"),
+        None => println!("specialization: off"),
+    }
+    let plan = execute_prepared(&prepared, &inputs, threads);
     println!(
         "\nnaive : traffic {}  launches {}  flops {}",
         fmt_bytes(naive.mem.total_traffic()),
@@ -836,6 +849,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    if backend == ExecBackend::Specialized {
+        println!("\nspecialization coverage (fused nests / total nests):");
+        let mut names: Vec<&String> = stats.per_program.keys().collect();
+        names.sort();
+        for name in names {
+            if let Some((fused, total)) =
+                server.live_plan(name).and_then(|plan| plan.spec_coverage())
+            {
+                println!("  {name}: {fused}/{total}");
+            }
+        }
+    }
     if coalesce {
         let coalesced: u64 = stats.per_program.values().map(|s| s.coalesced).sum();
         let stacked: u64 = stats.per_program.values().map(|s| s.stacked_batches).sum();

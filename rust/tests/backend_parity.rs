@@ -17,35 +17,38 @@ use blockbuster::prop::{forall, random_workload};
 
 fn assert_parity(ir: &LoopIr, wl: &Workload, what: &str) {
     let a = run_lowered_with(ir, wl, ExecBackend::Interp);
-    let b = run_lowered_with(ir, wl, ExecBackend::Compiled);
-    assert_eq!(
-        a.outputs.len(),
-        b.outputs.len(),
-        "{what}: output sets differ"
-    );
-    let mut names: Vec<&String> = a.outputs.keys().collect();
-    names.sort();
-    for n in names {
+    for backend in [ExecBackend::Compiled, ExecBackend::Specialized] {
+        let b = run_lowered_with(ir, wl, backend);
+        let what = &format!("{what} [{}]", backend.name());
         assert_eq!(
-            a.outputs[n], b.outputs[n],
-            "{what}: output {n} not bit-identical across backends"
+            a.outputs.len(),
+            b.outputs.len(),
+            "{what}: output sets differ"
         );
+        let mut names: Vec<&String> = a.outputs.keys().collect();
+        names.sort();
+        for n in names {
+            assert_eq!(
+                a.outputs[n], b.outputs[n],
+                "{what}: output {n} not bit-identical across backends"
+            );
+        }
+        assert_eq!(
+            a.mem.loaded_bytes, b.mem.loaded_bytes,
+            "{what}: loaded_bytes"
+        );
+        assert_eq!(
+            a.mem.stored_bytes, b.mem.stored_bytes,
+            "{what}: stored_bytes"
+        );
+        assert_eq!(a.mem.n_loads, b.mem.n_loads, "{what}: n_loads");
+        assert_eq!(a.mem.n_stores, b.mem.n_stores, "{what}: n_stores");
+        assert_eq!(
+            a.mem.kernel_launches, b.mem.kernel_launches,
+            "{what}: kernel_launches"
+        );
+        assert_eq!(a.mem.flops, b.mem.flops, "{what}: flops");
     }
-    assert_eq!(
-        a.mem.loaded_bytes, b.mem.loaded_bytes,
-        "{what}: loaded_bytes"
-    );
-    assert_eq!(
-        a.mem.stored_bytes, b.mem.stored_bytes,
-        "{what}: stored_bytes"
-    );
-    assert_eq!(a.mem.n_loads, b.mem.n_loads, "{what}: n_loads");
-    assert_eq!(a.mem.n_stores, b.mem.n_stores, "{what}: n_stores");
-    assert_eq!(
-        a.mem.kernel_launches, b.mem.kernel_launches,
-        "{what}: kernel_launches"
-    );
-    assert_eq!(a.mem.flops, b.mem.flops, "{what}: flops");
 }
 
 /// All five example programs (`quickstart`, `attention`,
@@ -101,33 +104,46 @@ fn parity_insensitive_to_thread_count_and_simd() {
     let want = exec(&ir, &base);
     for simd_on in [true, false] {
         simd::set_enabled(simd_on);
-        for threads in [1usize, 2, 8] {
-            let mut cfg2 = base.clone();
-            cfg2.threads = Some(threads);
-            let prog = blockbuster::loopir::compile::compile(&ir, &cfg2);
-            let got = blockbuster::exec::engine::exec_compiled(&prog, &cfg2);
-            for (n, bv) in &want.outputs {
-                let gbv = &got.outputs[n];
-                assert_eq!(bv.dims, gbv.dims);
-                for (i, slot) in bv.data.iter().enumerate() {
-                    let a = slot.as_deref();
-                    let b = gbv.data[i].as_deref();
-                    assert_eq!(a, b, "simd={simd_on}, threads={threads}, output {n}, slot {i}");
+        for specialize in [false, true] {
+            for threads in [1usize, 2, 8] {
+                let mut cfg2 = base.clone();
+                cfg2.threads = Some(threads);
+                let prog = if specialize {
+                    blockbuster::loopir::compile::specialize_skeleton(
+                        &blockbuster::loopir::compile::compile_skeleton(&ir, &cfg2),
+                    )
+                    .bind(&cfg2.sizes)
+                } else {
+                    blockbuster::loopir::compile::compile(&ir, &cfg2)
+                };
+                let got = blockbuster::exec::engine::exec_compiled(&prog, &cfg2);
+                for (n, bv) in &want.outputs {
+                    let gbv = &got.outputs[n];
+                    assert_eq!(bv.dims, gbv.dims);
+                    for (i, slot) in bv.data.iter().enumerate() {
+                        let a = slot.as_deref();
+                        let b = gbv.data[i].as_deref();
+                        assert_eq!(
+                            a, b,
+                            "simd={simd_on}, specialize={specialize}, threads={threads}, \
+                             output {n}, slot {i}"
+                        );
+                    }
                 }
-            }
-            assert_eq!(want.mem.loaded_bytes, got.mem.loaded_bytes);
-            assert_eq!(want.mem.stored_bytes, got.mem.stored_bytes);
-            assert_eq!(want.mem.flops, got.mem.flops);
-            assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches);
-            if threads == 1 {
-                // sequential engine runs the exact var set/clear sequence
-                // of the interpreter, so even the peak-local approximation
-                // must match — this pins the engine's duplicated
-                // local-memory accounting (and its serial single-worker
-                // path) to the interpreter's
-                assert_eq!(want.mem.peak_local_bytes, got.mem.peak_local_bytes);
-                assert_eq!(want.mem.n_loads, got.mem.n_loads);
-                assert_eq!(want.mem.n_stores, got.mem.n_stores);
+                assert_eq!(want.mem.loaded_bytes, got.mem.loaded_bytes);
+                assert_eq!(want.mem.stored_bytes, got.mem.stored_bytes);
+                assert_eq!(want.mem.flops, got.mem.flops);
+                assert_eq!(want.mem.kernel_launches, got.mem.kernel_launches);
+                if threads == 1 {
+                    // sequential engine runs the exact var set/clear sequence
+                    // of the interpreter, so even the peak-local approximation
+                    // must match — this pins the engine's duplicated
+                    // local-memory accounting (and its serial single-worker
+                    // path) to the interpreter's
+                    assert_eq!(want.mem.peak_local_bytes, got.mem.peak_local_bytes);
+                    assert_eq!(want.mem.n_loads, got.mem.n_loads);
+                    assert_eq!(want.mem.n_stores, got.mem.n_stores);
+                }
             }
         }
     }
@@ -196,7 +212,11 @@ fn ew_heavy_programs_bit_identical_across_backends_simd_threads() {
         let want = run_lowered_with(&ir, &base, ExecBackend::Interp);
         for simd_on in [true, false] {
             simd::set_enabled(simd_on);
-            for backend in [ExecBackend::Interp, ExecBackend::Compiled] {
+            for backend in [
+                ExecBackend::Interp,
+                ExecBackend::Compiled,
+                ExecBackend::Specialized,
+            ] {
                 for threads in [1usize, 2, 8] {
                     let mut w = Workload::new(base.sizes.clone());
                     w.inputs = base.inputs.clone();
@@ -254,7 +274,11 @@ fn decode_attention_bit_identical_across_backends_simd_threads() {
             let want = run_lowered_with(ir, &wl, ExecBackend::Interp);
             for simd_on in [true, false] {
                 simd::set_enabled(simd_on);
-                for backend in [ExecBackend::Interp, ExecBackend::Compiled] {
+                for backend in [
+                    ExecBackend::Interp,
+                    ExecBackend::Compiled,
+                    ExecBackend::Specialized,
+                ] {
                     for threads in [1usize, 2, 8] {
                         let mut w = Workload::new(wl.sizes.clone());
                         w.params = wl.params.clone();
@@ -293,23 +317,30 @@ fn random_programs_bit_identical_across_backends() {
         };
         for ir in [lower(&g), lower(fuse(g.clone()).snapshots.last().unwrap())] {
             let a = run_lowered_with(&ir, &wl, ExecBackend::Interp);
-            let b = run_lowered_with(&ir, &wl, ExecBackend::Compiled);
-            for (n, m) in &a.outputs {
-                if b.outputs.get(n) != Some(m) {
-                    return Err(format!("output {n} differs across backends"));
+            for backend in [ExecBackend::Compiled, ExecBackend::Specialized] {
+                let b = run_lowered_with(&ir, &wl, backend);
+                for (n, m) in &a.outputs {
+                    if b.outputs.get(n) != Some(m) {
+                        return Err(format!(
+                            "output {n} differs across backends [{}]",
+                            backend.name()
+                        ));
+                    }
                 }
-            }
-            if a.mem.loaded_bytes != b.mem.loaded_bytes
-                || a.mem.stored_bytes != b.mem.stored_bytes
-                || a.mem.n_loads != b.mem.n_loads
-                || a.mem.n_stores != b.mem.n_stores
-                || a.mem.flops != b.mem.flops
-                || a.mem.kernel_launches != b.mem.kernel_launches
-            {
-                return Err(format!(
-                    "counters differ: interp {:?} vs compiled {:?}",
-                    a.mem, b.mem
-                ));
+                if a.mem.loaded_bytes != b.mem.loaded_bytes
+                    || a.mem.stored_bytes != b.mem.stored_bytes
+                    || a.mem.n_loads != b.mem.n_loads
+                    || a.mem.n_stores != b.mem.n_stores
+                    || a.mem.flops != b.mem.flops
+                    || a.mem.kernel_launches != b.mem.kernel_launches
+                {
+                    return Err(format!(
+                        "counters differ: interp {:?} vs {} {:?}",
+                        a.mem,
+                        backend.name(),
+                        b.mem
+                    ));
+                }
             }
         }
         Ok(())

@@ -18,7 +18,9 @@
 //!   own KV append (itemized as `state_appended_bytes`/`state_appends`)
 //!   — MemSim charges the *incremental* traffic of a stateful buffer,
 //!   never a full-cache rewrite.
-//! * **Both backends agree bitwise**, outputs and counters.
+//! * **All three backends agree bitwise** (interp / compiled /
+//!   specialized), outputs and counters, across SIMD on/off and worker
+//!   caps 1/2/8.
 //! * **The session cache IS the append stream**: the grown `KT`/`VT`
 //!   caches equal the concatenation of the per-step slabs.
 //! * **Fusion**: `decode_attention` fuses to a single flash-decode
@@ -37,11 +39,21 @@ use blockbuster::ir::validate::assert_valid;
 use blockbuster::loopir::interp::MemSim;
 use blockbuster::lower::lower_array;
 use blockbuster::serve::{ModelServer, ServerConfig};
-use blockbuster::tensor::Mat;
+use blockbuster::tensor::{simd, Mat};
 use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
 use std::time::Duration;
 
 const SEED: u64 = 0xD5EED;
+
+/// Serialize tests that flip the global SIMD switch (same idiom as
+/// `tests/serve_parity.rs`).
+fn toggle_lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
 
 fn assert_bits_eq(a: &Mat, b: &Mat, what: &str) {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
@@ -108,9 +120,13 @@ struct SessionRun {
 /// against its stateless `(M=1, N=t)` reference as it serves; then run
 /// the length-`T` prefill launch on the same pinned plan.
 fn run_decode_session(backend: ExecBackend) -> SessionRun {
+    run_decode_session_with(backend, 1)
+}
+
+fn run_decode_session_with(backend: ExecBackend, threads: usize) -> SessionRun {
     let mut server = ModelServer::new(ServerConfig {
         backend,
-        threads: Some(1),
+        threads: Some(threads),
         max_batch: 4,
         max_wait: Duration::from_millis(1),
         coalesce: true,
@@ -149,7 +165,14 @@ fn run_decode_session(backend: ExecBackend) -> SessionRun {
         ref_inputs.insert("VT".into(), vt);
         let mut sizes = ccfg.sizes.clone();
         sizes.set("N", t);
-        let seq = execute_plan_opts(&compiled.plan, &sizes, &params, &ref_inputs, backend, Some(1));
+        let seq = execute_plan_opts(
+            &compiled.plan,
+            &sizes,
+            &params,
+            &ref_inputs,
+            backend,
+            Some(threads),
+        );
 
         assert_bits_eq(
             &seq.outputs["O"],
@@ -198,7 +221,8 @@ fn run_decode_session(backend: ExecBackend) -> SessionRun {
     prefill.insert("KT".into(), kt_cache.clone());
     prefill.insert("VT".into(), vt_cache.clone());
     prefill.insert("MASK".into(), block_causal(t));
-    let batch = execute_prepared_stacked_spec(&prepared, &stacked, &spec, &[&prefill], Some(1));
+    let batch =
+        execute_prepared_stacked_spec(&prepared, &stacked, &spec, &[&prefill], Some(threads));
     let prefill_rows = batch.runs[0].outputs["O"].clone();
     assert_eq!(prefill_rows.rows, 8 * t, "prefill emits every query block");
 
@@ -228,47 +252,106 @@ fn check_prefill(run: &SessionRun) {
     }
 }
 
+/// Two session runs (different backend / SIMD mode / worker cap) must
+/// agree bitwise on every step output and counter, and on the prefill.
+/// `exact_transfers` additionally pins `n_loads`/`n_stores` — a
+/// threads==1 contract (see `backend_parity`), so matrix cells at
+/// other worker caps compare the thread-invariant counters only.
+fn assert_sessions_match(a: &SessionRun, b: &SessionRun, exact_transfers: bool, tag: &str) {
+    assert_eq!(a.step_outputs.len(), b.step_outputs.len(), "{tag}: step count");
+    for (i, (x, y)) in a.step_outputs.iter().zip(&b.step_outputs).enumerate() {
+        assert_bits_eq(x, y, &format!("{tag}: step {}", i + 1));
+    }
+    for (i, (x, y)) in a.step_mems.iter().zip(&b.step_mems).enumerate() {
+        assert_eq!(
+            (x.loaded_bytes, x.stored_bytes, x.flops),
+            (y.loaded_bytes, y.stored_bytes, y.flops),
+            "{tag}: step {} traffic",
+            i + 1
+        );
+        if exact_transfers {
+            assert_eq!(
+                (x.n_loads, x.n_stores),
+                (y.n_loads, y.n_stores),
+                "{tag}: step {} transfer counts",
+                i + 1
+            );
+        }
+        assert_eq!(
+            (x.kernel_launches, x.state_appended_bytes, x.state_appends),
+            (y.kernel_launches, y.state_appended_bytes, y.state_appends),
+            "{tag}: step {} launches/appends",
+            i + 1
+        );
+    }
+    assert_bits_eq(&a.prefill_rows, &b.prefill_rows, &format!("{tag}: prefill"));
+}
+
 #[test]
 fn decode_steps_match_prefill_bitwise_interp() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
     check_prefill(&run_decode_session(ExecBackend::Interp));
 }
 
 #[test]
 fn decode_steps_match_prefill_bitwise_compiled() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
     check_prefill(&run_decode_session(ExecBackend::Compiled));
 }
 
-/// The interpreter and the compiled tape agree bitwise on every decode
-/// step — outputs AND counters, append breakout included.
+#[test]
+fn decode_steps_match_prefill_bitwise_specialized() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    check_prefill(&run_decode_session(ExecBackend::Specialized));
+}
+
+/// All three backends agree bitwise on every decode step — outputs AND
+/// counters, append breakout included.
 #[test]
 fn decode_outputs_bitwise_equal_across_backends() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
     let a = run_decode_session(ExecBackend::Interp);
-    let b = run_decode_session(ExecBackend::Compiled);
-    assert_eq!(a.step_outputs.len(), b.step_outputs.len());
-    for (i, (x, y)) in a.step_outputs.iter().zip(&b.step_outputs).enumerate() {
-        assert_bits_eq(x, y, &format!("step {} interp vs compiled", i + 1));
+    for backend in [ExecBackend::Compiled, ExecBackend::Specialized] {
+        let b = run_decode_session(backend);
+        assert_sessions_match(&a, &b, true, &format!("interp vs {}", backend.name()));
     }
-    for (i, (x, y)) in a.step_mems.iter().zip(&b.step_mems).enumerate() {
-        assert_eq!(
-            (x.loaded_bytes, x.stored_bytes, x.n_loads, x.n_stores, x.flops),
-            (y.loaded_bytes, y.stored_bytes, y.n_loads, y.n_stores, y.flops),
-            "step {} traffic interp vs compiled",
-            i + 1
-        );
-        assert_eq!(
-            (x.kernel_launches, x.state_appended_bytes, x.state_appends),
-            (y.kernel_launches, y.state_appended_bytes, y.state_appends),
-            "step {} launches/appends interp vs compiled",
-            i + 1
-        );
+}
+
+/// The full decode sweep: 3 backends × SIMD on/off × worker caps 1/2/8,
+/// every cell bit-identical (outputs and counters) to the SIMD-on
+/// single-worker interpreter session.
+#[test]
+fn decode_sweep_backend_matrix_simd_threads() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
+    let want = run_decode_session_with(ExecBackend::Interp, 1);
+    for simd_on in [true, false] {
+        simd::set_enabled(simd_on);
+        for backend in [
+            ExecBackend::Interp,
+            ExecBackend::Compiled,
+            ExecBackend::Specialized,
+        ] {
+            for threads in [1usize, 2, 8] {
+                let got = run_decode_session_with(backend, threads);
+                let tag = format!("backend={} simd={simd_on} threads={threads}", backend.name());
+                assert_sessions_match(&want, &got, threads == 1, &tag);
+            }
+        }
     }
-    assert_bits_eq(&a.prefill_rows, &b.prefill_rows, "prefill interp vs compiled");
+    simd::set_enabled(true);
 }
 
 /// The session's grown caches are exactly the concatenation of the
 /// per-step append slabs — nothing rewritten, nothing reordered.
 #[test]
 fn session_cache_is_the_concatenated_state_stream() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
     let run = run_decode_session(ExecBackend::Compiled);
     assert_bits_eq(&run.kt_cache, &vstack(&run.kt_slabs), "KT cache vs appended slabs");
     assert_bits_eq(&run.vt_cache, &hstack(&run.vt_slabs), "VT cache vs appended slabs");
@@ -281,6 +364,8 @@ fn session_cache_is_the_concatenated_state_stream() {
 /// the unfused program's.
 #[test]
 fn decode_attention_fuses_to_one_flash_decode_kernel() {
+    let _g = toggle_lock();
+    simd::set_enabled(true);
     let g0 = lower_array(&programs::decode_attention());
     let res = fuse(g0.clone());
     let fused_graph = res.snapshots.last().unwrap();

@@ -2,9 +2,10 @@
 //! `serve::ModelServer` must be **bit-identical** — outputs compared via
 //! `to_bits`, traffic counters compared exactly — to sequential
 //! `coordinator::execute_plan_opts` runs on the same inputs, across
-//! worker caps 1/2/8, SIMD on/off, both backends, and cross-request
-//! kernel coalescing on/off, and it must never compile more than once
-//! per registered workload no matter how much traffic flows.
+//! worker caps 1/2/8, SIMD on/off, all three backends (interp /
+//! compiled / specialized), and cross-request kernel coalescing on/off,
+//! and it must never compile more than once per registered workload no
+//! matter how much traffic flows.
 //!
 //! With coalescing on, the suite additionally pins the launch ledger:
 //! every multi-request batch of the (stackable) canonical workloads must
@@ -197,6 +198,36 @@ fn coalesced_serving_matches_sequential_threads_2() {
 #[test]
 fn coalesced_serving_matches_sequential_threads_8() {
     sweep(ExecBackend::Compiled, 8, true);
+}
+
+#[test]
+fn specialized_batched_serving_matches_sequential_threads_1() {
+    sweep(ExecBackend::Specialized, 1, false);
+}
+
+#[test]
+fn specialized_batched_serving_matches_sequential_threads_2() {
+    sweep(ExecBackend::Specialized, 2, false);
+}
+
+#[test]
+fn specialized_batched_serving_matches_sequential_threads_8() {
+    sweep(ExecBackend::Specialized, 8, false);
+}
+
+#[test]
+fn specialized_coalesced_serving_matches_sequential_threads_1() {
+    sweep(ExecBackend::Specialized, 1, true);
+}
+
+#[test]
+fn specialized_coalesced_serving_matches_sequential_threads_2() {
+    sweep(ExecBackend::Specialized, 2, true);
+}
+
+#[test]
+fn specialized_coalesced_serving_matches_sequential_threads_8() {
+    sweep(ExecBackend::Specialized, 8, true);
 }
 
 /// The interpreter backend serves too (no tapes, still compile-once).
